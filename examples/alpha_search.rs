@@ -1,0 +1,54 @@
+//! Visualize the paper's global alpha grid search (§3.4.2): the loss
+//! curve over alpha for two grid steps (0.05 vs 0.01), and the cost
+//! comparison against AWQ's per-layer search.
+//!
+//! ```sh
+//! cargo run --release --example alpha_search -- --model tiny
+//! ```
+
+use sqplus::config::{ModelConfig, QuantConfig};
+use sqplus::data::{corpus, tasks};
+use sqplus::model::init::{init_weights, InitSpec};
+use sqplus::quant::{awq, calib, search};
+use sqplus::tokenizer::Tokenizer;
+use sqplus::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let mut args = Args::from_env();
+    let size = args.opt("model", "tiny", "model size");
+    let cfg = ModelConfig::by_name(&size).expect("model size");
+    let w = init_weights(&cfg, &InitSpec::with_outliers(0, 8, 12.0));
+    let tok = Tokenizer::train(&corpus::tokenizer_training_text(0, 4000),
+                               cfg.vocab);
+    let all = tasks::task_set(corpus::Domain::CodePython, 0);
+    let prompts = tasks::tokenized_prompts(&all[..32], &tok, cfg.vocab, 24);
+    let cal = calib::collect(&cfg, &w, &prompts, 192, 0);
+
+    for step in [0.05, 0.01] {
+        let qcfg = QuantConfig { alpha_step: step, ..Default::default() };
+        let r = search::search_alpha(&cfg, &w, &cal, &qcfg);
+        println!("\n# step {step}: best alpha={:.2} loss={:.6} \
+                  ({} evals, {:.2}s)",
+                 r.alpha, r.loss, r.evals, r.elapsed_s);
+        if step == 0.05 {
+            println!("alpha\tloss");
+            for (a, l) in &r.grid {
+                let bar = "#".repeat(
+                    (60.0 * l / r.grid.iter().map(|g| g.1)
+                        .fold(0.0, f64::max)) as usize);
+                println!("{a:.2}\t{l:.6}\t{bar}");
+            }
+        }
+    }
+
+    // AWQ comparison: per-layer local search with clip grid
+    let mut sm = w.clone();
+    let res = awq::awq_search_and_smooth(&mut sm, &cfg, &cal,
+                                         &QuantConfig::default());
+    println!(
+        "\n# AWQ per-layer search: {} evals in {:.2}s \
+         (vs SmoothQuant+ global grid of 21)",
+        res.evals, res.elapsed_s
+    );
+    Ok(())
+}

@@ -1,0 +1,92 @@
+//! Reproduce the paper's Figures 1-3 data: weight vs activation magnitude
+//! distributions per linear layer (Fig 1), per-channel activation
+//! magnitudes of one decoder layer (Fig 2), and per-decoder-layer
+//! quantization loss with/without smoothing (Fig 3). Prints TSV-ish rows
+//! suitable for plotting.
+//!
+//! ```sh
+//! cargo run --release --example outlier_analysis -- --model small
+//! ```
+
+use sqplus::config::{ModelConfig, QuantConfig};
+use sqplus::data::{corpus, tasks};
+use sqplus::model::init::{init_weights, injected_channels, InitSpec};
+use sqplus::model::LAYER_LINEARS;
+use sqplus::quant::loss::site_of;
+use sqplus::quant::{calib, pipeline};
+use sqplus::config::QuantMethod;
+use sqplus::tokenizer::Tokenizer;
+use sqplus::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let mut args = Args::from_env();
+    let size = args.opt("model", "small", "model size");
+    let fig2_layer = args.opt_usize("layer", 0, "decoder layer for fig 2");
+    let cfg = ModelConfig::by_name(&size).expect("model size");
+    let spec = InitSpec::with_outliers(0, 8, 12.0);
+    let w = init_weights(&cfg, &spec);
+    let tok = Tokenizer::train(&corpus::tokenizer_training_text(0, 4000),
+                               cfg.vocab);
+    let all = tasks::task_set(corpus::Domain::CodePython, 0);
+    let prompts = tasks::tokenized_prompts(&all[..32], &tok, cfg.vocab, 24);
+    let cal = calib::collect(&cfg, &w, &prompts, 128, 0);
+
+    // ---- Fig 1: per-linear weight + activation magnitude summary
+    println!("# fig1: linear_idx\tname\tw_mean\tw_max\tact_mean\tact_max");
+    let mut idx = 0;
+    for layer in 0..cfg.layers {
+        for lin in LAYER_LINEARS {
+            let name = format!("layers.{layer}.{lin}");
+            let wt = w.f32(&name);
+            let wabs: Vec<f32> =
+                wt.data.iter().map(|x| x.abs()).collect();
+            let w_mean =
+                wabs.iter().sum::<f32>() / wabs.len() as f32;
+            let w_max = wabs.iter().cloned().fold(0.0f32, f32::max);
+            let st = cal.stats(layer, site_of(lin));
+            let a_mean = st.absmean.iter().sum::<f32>()
+                / st.absmean.len() as f32;
+            let a_max =
+                st.absmax.iter().cloned().fold(0.0f32, f32::max);
+            println!("{idx}\t{name}\t{w_mean:.4}\t{w_max:.4}\t\
+                      {a_mean:.4}\t{a_max:.2}");
+            idx += 1;
+        }
+    }
+
+    // ---- Fig 2: per-channel activation absmax of one decoder layer
+    println!("\n# fig2: layer {fig2_layer} per-channel activation absmax \
+              (injected outlier channels: {:?})",
+             injected_channels(&cfg, &spec));
+    for lin in LAYER_LINEARS {
+        let st = cal.stats(fig2_layer, site_of(lin));
+        let mut top: Vec<(usize, f32)> =
+            st.absmax.iter().cloned().enumerate().collect();
+        top.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        let mut sorted = st.absmax.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let med = sorted[sorted.len() / 2];
+        println!(
+            "{lin:>7}: median={med:.3} top8={:?}",
+            top.iter().take(8)
+                .map(|(c, v)| format!("ch{c}:{v:.1}"))
+                .collect::<Vec<_>>()
+        );
+    }
+
+    // ---- Fig 3: per-decoder-layer quant loss, RTN vs smoothed (SQ+)
+    let qcfg = QuantConfig::default();
+    let rtn = pipeline::quantize_model(&cfg, &w, &cal, QuantMethod::Rtn,
+                                       &qcfg);
+    let sqp = pipeline::quantize_model(&cfg, &w, &cal,
+                                       QuantMethod::SmoothQuantPlus,
+                                       &qcfg);
+    println!("\n# fig3: layer\trtn_loss\tsmoothquant+_loss (alpha={:?})",
+             sqp.alpha);
+    for layer in 0..cfg.layers {
+        println!("{layer}\t{:.5}\t{:.5}",
+                 rtn.loss.per_layer[layer], sqp.loss.per_layer[layer]);
+    }
+    println!("\ntotal\t{:.5}\t{:.5}", rtn.loss.total, sqp.loss.total);
+    Ok(())
+}

@@ -1,0 +1,64 @@
+//! Compare quantization methods (FP16 / RTN / AWQ / SmoothQuant+) on one
+//! model: quantization loss, accuracy proxies, search cost — the
+//! interactive companion to `cargo bench --bench table1_accuracy`.
+//!
+//! ```sh
+//! cargo run --release --example quantize_compare -- --model small
+//! ```
+
+use sqplus::config::{ModelConfig, QuantConfig, QuantMethod};
+use sqplus::data::{corpus, tasks};
+use sqplus::eval::evaluate;
+use sqplus::model::init::{init_weights, InitSpec};
+use sqplus::quant::{calib, pipeline};
+use sqplus::tokenizer::Tokenizer;
+use sqplus::util::bench::Table;
+use sqplus::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let mut args = Args::from_env();
+    let size = args.opt("model", "small", "model size");
+    let n_eval = args.opt_usize("tasks", 24, "eval prompts");
+    let outliers = args.opt_usize("outliers", 8, "outlier channels");
+    let oscale =
+        args.opt_f64("outlier-scale", 12.0, "outlier gain scale") as f32;
+    let cfg = ModelConfig::by_name(&size).expect("model size");
+    let w = init_weights(&cfg,
+                         &InitSpec::with_outliers(0, outliers, oscale));
+    let tok = Tokenizer::train(&corpus::tokenizer_training_text(0, 4000),
+                               cfg.vocab);
+    let all = tasks::task_set(corpus::Domain::CodePython, 0);
+    let cal_prompts =
+        tasks::tokenized_prompts(&all[..32], &tok, cfg.vocab, 24);
+    let cal = calib::collect(&cfg, &w, &cal_prompts, 256, 0);
+    let ev = tasks::tokenized_prompts(&all[32..32 + n_eval], &tok,
+                                      cfg.vocab, 24);
+
+    let mut t = Table::new(
+        &format!("quantization methods on {size} (outliers={outliers} \
+                  x{oscale})"),
+        &["method", "exact-match", "agreement", "nll", "quant loss",
+          "quantize s"],
+    );
+    for method in QuantMethod::all() {
+        let out = pipeline::quantize_model(&cfg, &w, &cal, method,
+                                           &QuantConfig::default());
+        let r = evaluate(&cfg, &w, &out.effective, &ev, 8);
+        t.row(&[
+            method.as_str().to_string(),
+            format!("{:.1}%", r.exact_match * 100.0),
+            format!("{:.1}%", r.token_agreement * 100.0),
+            format!("{:.3}", r.nll),
+            format!("{:.5}", out.loss.total),
+            format!("{:.2}", out.quantize_s),
+        ]);
+        if let Some(s) = &out.search {
+            eprintln!(
+                "  [{:>13}] alpha={:.2} grid={} evals in {:.2}s",
+                method.as_str(), out.alpha.unwrap(), s.evals, s.elapsed_s
+            );
+        }
+    }
+    t.print();
+    Ok(())
+}

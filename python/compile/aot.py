@@ -1,0 +1,161 @@
+"""AOT compile path: lower every (size, precision, phase, bucket) to HLO text.
+
+Run once by ``make artifacts``; Python never runs at serving time. Emits:
+
+  artifacts/<name>.hlo.txt   XLA HLO *text* (NOT a serialized proto: jax
+                             >= 0.5 emits 64-bit instruction ids that
+                             xla_extension 0.5.1 rejects; the text parser
+                             reassigns ids and round-trips cleanly)
+  artifacts/manifest.json    the Rust loader contract: per-artifact input/
+                             output names, shapes, dtypes, in positional
+                             order, plus the model config table.
+
+Usage: ``python -m compile.aot --out-dir ../artifacts [--sizes tiny,small]
+[--precisions fp16,w4a16]``.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import configs, model
+
+DTYPES = {"f32": jnp.float32, "i32": jnp.int32, "u8": jnp.uint8}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, DTYPES[dtype])
+
+
+def weight_specs_flat(cfg, precision):
+    out = []
+    for name, (shape, dtype) in configs.weight_specs(cfg, precision).items():
+        out.append((name, shape, dtype))
+    return out
+
+
+def input_descs(cfg, precision, phase, batch, seq):
+    """Positional input descriptors for one artifact."""
+    descs = []
+    if phase == "prefill":
+        descs.append(("tokens", (batch, seq), "i32"))
+        descs.append(("lens", (batch,), "i32"))
+    else:
+        descs.append(("tokens", (batch,), "i32"))
+        descs.append(("lens", (batch,), "i32"))
+        descs.append(("kv", configs.kv_cache_shape(cfg, batch), "f32"))
+    descs += weight_specs_flat(cfg, precision)
+    return descs
+
+
+def output_descs(cfg, phase, batch, seq):
+    if phase == "prefill":
+        return [
+            ("logits", (batch, seq, cfg.vocab), "f32"),
+            ("kv_new", (cfg.layers, 2, batch, seq, cfg.dim), "f32"),
+        ]
+    return [
+        ("logits", (batch, cfg.vocab), "f32"),
+        ("kv_new", (cfg.layers, 2, batch, 1, cfg.dim), "f32"),
+    ]
+
+
+def lower_one(cfg, precision, phase, batch, seq):
+    descs = input_descs(cfg, precision, phase, batch, seq)
+    args = [spec(s, d) for (_, s, d) in descs]
+    if phase == "prefill":
+        fn = model.make_prefill(cfg, precision)
+    else:
+        fn = model.make_decode(cfg, precision)
+    return jax.jit(fn).lower(*args)
+
+
+def artifact_name(size, precision, phase, batch, seq):
+    if phase == "prefill":
+        return f"{size}_{precision}_prefill_b{batch}_s{seq}"
+    return f"{size}_{precision}_decode_b{batch}"
+
+
+def build(out_dir, sizes, precisions, force=False):
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"version": 1, "models": {}}
+    for size in sizes:
+        cfg = configs.SIZES[size]
+        arts = []
+        jobs = [("prefill", b, s) for (b, s) in configs.PREFILL_BUCKETS]
+        jobs += [("decode", b, 0) for b in configs.DECODE_BATCHES]
+        for precision in precisions:
+            for phase, batch, seq in jobs:
+                name = artifact_name(size, precision, phase, batch, seq)
+                path = os.path.join(out_dir, name + ".hlo.txt")
+                t0 = time.time()
+                if force or not os.path.exists(path):
+                    lowered = lower_one(cfg, precision, phase, batch, seq)
+                    text = to_hlo_text(lowered)
+                    with open(path, "w") as f:
+                        f.write(text)
+                    print(f"  {name}: {len(text) / 1e6:.1f} MB "
+                          f"({time.time() - t0:.1f}s)")
+                else:
+                    print(f"  {name}: cached")
+                arts.append({
+                    "name": name,
+                    "file": name + ".hlo.txt",
+                    "precision": precision,
+                    "phase": phase,
+                    "batch": batch,
+                    "seq": seq,
+                    "inputs": [
+                        {"name": n, "shape": list(s), "dtype": d}
+                        for (n, s, d) in
+                        input_descs(cfg, precision, phase, batch, seq)
+                    ],
+                    "outputs": [
+                        {"name": n, "shape": list(s), "dtype": d}
+                        for (n, s, d) in output_descs(cfg, phase, batch, seq)
+                    ],
+                })
+        manifest["models"][size] = {
+            "config": {
+                "name": cfg.name, "vocab": cfg.vocab, "dim": cfg.dim,
+                "layers": cfg.layers, "heads": cfg.heads, "ffn": cfg.ffn,
+                "max_len": cfg.max_len, "group_size": cfg.group_size,
+                "rope_theta": cfg.rope_theta, "norm_eps": cfg.norm_eps,
+            },
+            "artifacts": arts,
+        }
+    mpath = os.path.join(out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    digest = hashlib.sha256(open(mpath, "rb").read()).hexdigest()[:12]
+    print(f"manifest: {mpath} ({digest})")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--sizes", default="tiny,small,base")
+    ap.add_argument("--precisions", default="fp16,w4a16")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    build(args.out_dir, args.sizes.split(","), args.precisions.split(","),
+          force=args.force)
+
+
+if __name__ == "__main__":
+    main()

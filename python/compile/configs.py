@@ -1,0 +1,119 @@
+"""Model-size table and the canonical flat weight ordering.
+
+This file is the *contract* between the Python compile path and the Rust
+runtime: `rust/src/model/config.rs` mirrors SIZES, and
+`artifacts/manifest.json` (written by aot.py) records the exact parameter
+order produced by :func:`weight_names` so the Rust loader can feed buffers
+positionally.
+
+The sizes stand in for the paper's Code Llama 7B/13B/34B (see DESIGN.md §5):
+the quantization mechanics are distributional, so laptop-scale models with
+injected outlier channels reproduce the same causal chain.
+"""
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab: int
+    dim: int
+    layers: int
+    heads: int
+    ffn: int  # SwiGLU hidden size
+    max_len: int  # static KV-cache length per executable
+    group_size: int  # quant group (along input channels)
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+
+    @property
+    def head_dim(self):
+        return self.dim // self.heads
+
+    def param_count(self):
+        d, f, v, l = self.dim, self.ffn, self.vocab, self.layers
+        per_layer = 4 * d * d + 3 * d * f + 2 * d
+        return v * d + l * per_layer + d + d * v
+
+    def linear_shapes(self):
+        """The 7 quantizable linears of one decoder layer: name -> (K, N)."""
+        d, f = self.dim, self.ffn
+        return {
+            "wq": (d, d),
+            "wk": (d, d),
+            "wv": (d, d),
+            "wo": (d, d),
+            "w_gate": (d, f),
+            "w_up": (d, f),
+            "w_down": (f, d),
+        }
+
+
+# Stand-ins for Code Llama 7B / 13B / 34B. All K dims divisible by 128.
+SIZES = {
+    "tiny": ModelConfig("tiny", vocab=512, dim=128, layers=2, heads=4,
+                        ffn=384, max_len=128, group_size=128),
+    "small": ModelConfig("small", vocab=1024, dim=256, layers=4, heads=8,
+                         ffn=768, max_len=256, group_size=128),
+    "base": ModelConfig("base", vocab=8192, dim=768, layers=12, heads=12,
+                        ffn=2048, max_len=256, group_size=128),
+}
+
+# Executable buckets compiled by aot.py: (phase, batch, seq).
+PREFILL_BUCKETS = [(1, 32), (1, 128), (4, 32), (4, 128)]
+DECODE_BATCHES = [1, 2, 4, 8]
+
+LAYER_LINEARS = ["wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down"]
+
+
+def weight_names(cfg: ModelConfig, precision: str):
+    """Canonical flat weight order.
+
+    fp16:   embed, [attn_norm, wq, wk, wv, wo, mlp_norm, w_gate, w_up,
+            w_down] x layers, final_norm, lm_head
+    w4a16:  each linear W is replaced *in place* by the triple
+            (W.packed, W.scales, W.zeros); norms/embed/lm_head stay fp16.
+    """
+    names = ["embed"]
+    for i in range(cfg.layers):
+        p = f"layers.{i}."
+        for w in ["attn_norm", "wq", "wk", "wv", "wo",
+                  "mlp_norm", "w_gate", "w_up", "w_down"]:
+            full = p + w
+            if precision == "w4a16" and w in LAYER_LINEARS:
+                names += [full + ".packed", full + ".scales", full + ".zeros"]
+            else:
+                names.append(full)
+    names += ["final_norm", "lm_head"]
+    return names
+
+
+def weight_specs(cfg: ModelConfig, precision: str):
+    """name -> (shape tuple, dtype str) in canonical order."""
+    d, f, v, g = cfg.dim, cfg.ffn, cfg.vocab, cfg.group_size
+    lin = cfg.linear_shapes()
+    specs = {}
+    for name in weight_names(cfg, precision):
+        base = name.split(".")[-1]
+        if name == "embed":
+            specs[name] = ((v, d), "f32")
+        elif name == "lm_head":
+            specs[name] = ((d, v), "f32")
+        elif base in ("attn_norm", "mlp_norm", "final_norm"):
+            specs[name] = ((d,), "f32")
+        elif base in ("packed", "scales", "zeros"):
+            wname = name.split(".")[-2]
+            k, n = lin[wname]
+            if base == "packed":
+                specs[name] = ((k // 2, n), "u8")
+            else:
+                specs[name] = ((k // g, n), "f32")
+        else:
+            specs[name] = (lin[base], "f32")
+    return specs
+
+
+def kv_cache_shape(cfg: ModelConfig, batch: int):
+    """KV cache layout: [layers, 2 (k/v), batch, max_len, dim]."""
+    return (cfg.layers, 2, batch, cfg.max_len, cfg.dim)

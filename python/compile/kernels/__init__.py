@@ -1,0 +1,3 @@
+"""Layer-1 kernels: Pallas W4A16 group-wise dequant-matmul + pure-jnp oracle."""
+
+from . import ref, w4a16  # noqa: F401

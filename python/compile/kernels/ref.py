@@ -1,0 +1,98 @@
+"""Pure-jnp oracle for the W4A16 kernel and group-wise INT4 quantization.
+
+This module is the single source of truth for the quantization numerics and
+the packing convention. The Pallas kernel (`w4a16.py`) and the Rust
+`quant::` module both mirror these definitions and are tested against them.
+
+Conventions (shared with rust/src/quant/):
+  * Weights are stored as ``W[K, N]`` (input channels x output channels).
+  * Quantization is asymmetric uniform 4-bit over groups of ``group_size``
+    *consecutive input channels* (along K), per output channel:
+        delta = (max - min) / 15
+        z     = round(-min / delta)        # stored in f32, NOT clamped:
+        q     = clamp(round(w / delta) + z, 0, 15)
+        deq   = (q - z) * delta
+    The paper's Eq. (1) clamps Z because it packs Z into INT4; we keep the
+    zero point in the f32 ``zeros`` tensor (as the W4A16 LMDeploy-style
+    kernels do), which makes the scheme correct for groups that do not
+    straddle zero and bounds the error by 1.5 * delta everywhere.
+  * Packing: two consecutive K rows per byte, low nibble first:
+        packed[k2, n] = q[2*k2, n] | (q[2*k2 + 1, n] << 4)
+    giving ``packed: uint8[K // 2, N]``.
+  * ``scales: f32[K // group_size, N]`` holds delta, ``zeros`` holds z
+    (integer-valued, stored in f32).
+"""
+
+import jax.numpy as jnp
+
+NIBBLE_MAX = 15  # 2**4 - 1
+
+
+def quantize_groupwise(w, group_size):
+    """Group-wise asymmetric INT4 RTN quantization of ``w: f32[K, N]``.
+
+    Returns ``(q, scales, zeros)`` with ``q: int32[K, N]`` in [0, 15],
+    ``scales/zeros: f32[K // group_size, N]``. K must divide by group_size.
+    """
+    k, n = w.shape
+    assert k % group_size == 0, f"K={k} not divisible by group={group_size}"
+    g = k // group_size
+    wg = w.reshape(g, group_size, n)
+    wmax = wg.max(axis=1)
+    wmin = wg.min(axis=1)
+    delta = (wmax - wmin) / NIBBLE_MAX
+    # Constant groups (delta == 0): pick delta = |c| / 15 so the constant
+    # lands exactly on a grid point ((15 - z) * delta = c); zero stays 0.
+    delta = jnp.where(delta == 0.0,
+                      jnp.maximum(jnp.abs(wmax), 1e-12) / NIBBLE_MAX, delta)
+    zeros = jnp.round(-wmin / delta)  # f32, unclamped (see module docstring)
+    q = jnp.round(wg / delta[:, None, :]) + zeros[:, None, :]
+    q = jnp.clip(q, 0, NIBBLE_MAX).astype(jnp.int32).reshape(k, n)
+    return q, delta, zeros
+
+
+def dequantize_groupwise(q, scales, zeros, group_size):
+    """Inverse of :func:`quantize_groupwise` (up to rounding error)."""
+    k, n = q.shape
+    g = k // group_size
+    qg = q.reshape(g, group_size, n).astype(jnp.float32)
+    deq = (qg - zeros[:, None, :]) * scales[:, None, :]
+    return deq.reshape(k, n)
+
+
+def pack_nibbles(q):
+    """Pack ``q: int{8,32}[K, N]`` (values in [0,15]) to ``uint8[K//2, N]``."""
+    k, n = q.shape
+    assert k % 2 == 0, f"K={k} must be even to pack nibbles"
+    qq = q.astype(jnp.uint8).reshape(k // 2, 2, n)
+    return qq[:, 0, :] | (qq[:, 1, :] << 4)
+
+
+def unpack_nibbles(packed):
+    """Inverse of :func:`pack_nibbles`: ``uint8[K//2, N] -> int32[K, N]``."""
+    k2, n = packed.shape
+    lo = (packed & 0xF).astype(jnp.int32)
+    hi = (packed >> 4).astype(jnp.int32)
+    return jnp.stack([lo, hi], axis=1).reshape(k2 * 2, n)
+
+
+def quantize_pack(w, group_size):
+    """Quantize + pack: ``w: f32[K,N] -> (packed u8[K//2,N], scales, zeros)``."""
+    q, scales, zeros = quantize_groupwise(w, group_size)
+    return pack_nibbles(q), scales, zeros
+
+
+def w4a16_matmul_ref(x, packed, scales, zeros, group_size):
+    """Oracle for the Pallas kernel: ``x @ dequant(packed)``.
+
+    ``x: f32[M, K]``, returns ``f32[M, N]``.
+    """
+    q = unpack_nibbles(packed)
+    w = dequantize_groupwise(q, scales, zeros, group_size)
+    return x.astype(jnp.float32) @ w
+
+
+def fake_quant(w, group_size):
+    """Quantize-dequantize round trip, the "what the model will see" weight."""
+    q, scales, zeros = quantize_groupwise(w, group_size)
+    return dequantize_groupwise(q, scales, zeros, group_size)

@@ -1,0 +1,146 @@
+"""Pallas W4A16 kernel: group-wise INT4 dequantize + matmul.
+
+The paper ships a CUDA W4A16 kernel (optimized from LMDeploy) where packed
+INT4 weight tiles are staged in shared memory, dequantized to FP16 in
+registers, and fed to tensor-core WMMA. This is the TPU-style Pallas
+re-think (see DESIGN.md "Hardware adaptation"):
+
+  * the (M, N, K) threadblock tiling becomes a Pallas ``grid = (M/bm,
+    N/bn, K/bk)`` with ``BlockSpec`` index maps expressing the HBM->VMEM
+    schedule;
+  * the packed ``uint8`` block (bk/2 x bn) lands in VMEM, the VPU unpacks
+    and dequantizes it, and the dequantized tile feeds ``jnp.dot`` (MXU);
+  * ``bk`` equals one quant group (default 128, the MXU-native K tile), so
+    each weight block needs exactly one (scale, zero) row — the same
+    coalescing argument the paper uses for group-size 128;
+  * the fp32 accumulator tile lives in the output VMEM block across the K
+    grid dimension (Pallas "revisiting" pattern), mirroring the CUDA
+    register accumulator.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel lowers to plain HLO and runs (and AOT-exports)
+on any backend. TPU perf is estimated analytically in EXPERIMENTS.md.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_BLOCK_M = 128
+DEFAULT_BLOCK_N = 128
+
+
+def _kernel(x_ref, packed_ref, scales_ref, zeros_ref, o_ref, *, nsteps_k):
+    """One (bm x bn) output tile; K advances along the last grid axis."""
+    k_step = pl.program_id(2)
+
+    # --- VPU: unpack two nibbles per byte into the K order [lo0, hi0, ...].
+    p = packed_ref[...]  # u8[bk//2, bn]
+    lo = (p & 0xF).astype(jnp.float32)
+    hi = (p >> 4).astype(jnp.float32)
+    bk2, bn = p.shape
+    w_q = jnp.stack([lo, hi], axis=1).reshape(bk2 * 2, bn)
+
+    # --- VPU: dequantize with this K-block's (scale, zero) rows. bk is a
+    # multiple of the group size, so each row of scales_ref covers a
+    # contiguous `group` span of the unpacked block.
+    scales = scales_ref[...]  # f32[groups_per_bk, bn]
+    zeros = zeros_ref[...]
+    gpb = scales.shape[0]
+    group = (bk2 * 2) // gpb
+    w_g = w_q.reshape(gpb, group, bn)
+    w = ((w_g - zeros[:, None, :]) * scales[:, None, :]).reshape(bk2 * 2, bn)
+
+    # --- MXU: fp32 accumulate into the revisited output block.
+    @pl.when(k_step == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w, preferred_element_type=jnp.float32
+    )
+    del nsteps_k  # only the k_step == 0 predicate is needed
+
+
+@functools.partial(
+    jax.jit, static_argnames=("group_size", "block_m", "block_n", "block_k")
+)
+def w4a16_matmul(
+    x,
+    packed,
+    scales,
+    zeros,
+    *,
+    group_size=128,
+    block_m=None,
+    block_n=None,
+    block_k=None,
+):
+    """``x: f32[M, K] @ dequant(packed: u8[K//2, N]) -> f32[M, N]``.
+
+    ``scales``/``zeros``: ``f32[K // group_size, N]`` per-group parameters
+    (see kernels/ref.py for the packing + quantization convention).
+
+    Block sizes default to min(dim, 128) and are clamped so that
+    ``block_k`` is a multiple of ``group_size`` (or the full K).
+    """
+    m, k = x.shape
+    k2, n = packed.shape
+    assert k == 2 * k2, f"x K={k} vs packed K/2={k2}"
+    assert k % group_size == 0
+    g = k // group_size
+    assert scales.shape == (g, n), (scales.shape, (g, n))
+    assert zeros.shape == (g, n)
+
+    bm = block_m or min(m, DEFAULT_BLOCK_M)
+    bn = block_n or min(n, DEFAULT_BLOCK_N)
+    bk = block_k or min(k, group_size)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k, bm, bn, bk)
+    assert bk % group_size == 0 or bk == k, (bk, group_size)
+    gpb = max(1, bk // group_size)
+    nsteps_k = k // bk
+
+    grid = (m // bm, n // bn, nsteps_k)
+    return pl.pallas_call(
+        functools.partial(_kernel, nsteps_k=nsteps_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, s: (i, s)),
+            pl.BlockSpec((bk // 2, bn), lambda i, j, s: (s, j)),
+            pl.BlockSpec((gpb, bn), lambda i, j, s: (s, j)),
+            pl.BlockSpec((gpb, bn), lambda i, j, s: (s, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x.astype(jnp.float32), packed, scales, zeros)
+
+
+def vmem_footprint_bytes(block_m, block_n, block_k, group_size=128):
+    """Estimated VMEM bytes for one grid step (for the §Perf table).
+
+    x tile (f32) + packed tile (u8) + dequantized tile (f32) + scale/zero
+    rows (f32) + fp32 accumulator tile. Double-buffered inputs (x2).
+    """
+    gpb = max(1, block_k // group_size)
+    x_t = 4 * block_m * block_k
+    p_t = block_k // 2 * block_n
+    w_t = 4 * block_k * block_n
+    sz_t = 2 * 4 * gpb * block_n
+    acc = 4 * block_m * block_n
+    return 2 * (x_t + p_t + sz_t) + w_t + acc
+
+
+def mxu_utilization_estimate(m, n, k, block_m, block_n, block_k, vpu_ratio=8.0):
+    """Crude MXU busy-fraction estimate: dot FLOPs vs dequant VPU ops.
+
+    ``vpu_ratio`` = MXU-to-VPU throughput ratio; dequant costs ~4 VPU ops
+    per weight element (unpack, sub, mul, pack-into-tile), amortized over
+    ``block_m`` rows of the x tile that reuse the dequantized weights.
+    """
+    dot_flops = 2.0 * m * n * k
+    dequant_ops = 4.0 * n * k * vpu_ratio
+    return dot_flops / (dot_flops + dequant_ops * 1.0)

@@ -1,0 +1,240 @@
+"""Layer-2: Llama-family forward pass in JAX, FP16 and W4A16 variants.
+
+Two entry points per model config, both AOT-lowered by aot.py:
+
+  * ``prefill(tokens[B,S], lens[B], *weights) -> (logits[B,S,V],
+    kv_new[L,2,B,S,D])``
+  * ``decode(tokens[B], lens[B], kv[L,2,B,MAX,D], *weights) ->
+    (logits[B,V], kv_new[L,2,B,1,D])``
+
+The *full* KV cache ``f32[L, 2, B, MAX, D]`` is an input of decode; the
+outputs carry only the *newly produced* K/V rows. Rationale: the PJRT shim
+returns results as one tuple buffer (no untuple/donation), so outputs
+round-trip through the host every step — returning just the new rows keeps
+that transfer O(B*D) while the Rust coordinator owns the authoritative
+host-side cache (which also makes continuous batching a plain memcpy).
+``lens[b]`` is the number of tokens already in the cache for sequence b;
+decode writes its K/V row at position ``lens[b]`` (done host-side by the
+coordinator) and attends over cache positions ``0..lens[b]-1`` plus the
+current token.
+
+The W4A16 variant routes every decoder linear through the Pallas kernel
+(kernels/w4a16.py); norms, embedding and lm_head stay in floating point,
+matching the paper's Figure 6 precision map. "FP16" computes in f32 on the
+CPU PJRT backend (DESIGN.md §5).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import configs
+from .kernels import w4a16 as w4a16_kernel
+
+
+# ---------------------------------------------------------------- helpers
+
+def rmsnorm(x, gain, eps):
+    """RMSNorm over the last axis: ``x * gain / rms(x)``."""
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * gain
+
+
+def rope_tables(positions, head_dim, theta):
+    """cos/sin tables ``f32[..., head_dim // 2]`` for given positions."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(half, dtype=jnp.float32) * 2.0 / head_dim)
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """Half-split rotary embedding; ``x: [..., head_dim]``."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+
+
+def linear(x2d, weights, name, cfg, precision):
+    """Dispatch one linear: plain matmul (fp16) or the Pallas W4A16 kernel."""
+    if precision == "fp16":
+        return x2d @ weights[name]
+    return w4a16_kernel.w4a16_matmul(
+        x2d,
+        weights[name + ".packed"],
+        weights[name + ".scales"],
+        weights[name + ".zeros"],
+        group_size=cfg.group_size,
+    )
+
+
+def _weights_dict(cfg, precision, flat):
+    names = configs.weight_names(cfg, precision)
+    assert len(flat) == len(names), (len(flat), len(names))
+    return dict(zip(names, flat))
+
+
+# ---------------------------------------------------------------- blocks
+
+def attention_prefill(h, kv_lanes, lens, wd, lp, cfg, precision):
+    """Causal self-attention over a padded [B, S, D] prefill block."""
+    b, s, d = h.shape
+    hd, nh = cfg.head_dim, cfg.heads
+    x2 = h.reshape(b * s, d)
+    q = linear(x2, wd, lp + "wq", cfg, precision).reshape(b, s, nh, hd)
+    k = linear(x2, wd, lp + "wk", cfg, precision).reshape(b, s, nh, hd)
+    v = linear(x2, wd, lp + "wv", cfg, precision).reshape(b, s, nh, hd)
+
+    pos = jnp.arange(s, dtype=jnp.int32)
+    cos, sin = rope_tables(pos, hd, cfg.rope_theta)  # [S, hd/2]
+    cos, sin = cos[None, :, None, :], sin[None, :, None, :]
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / jnp.sqrt(float(hd))
+    causal = pos[None, :] <= pos[:, None]  # [q, k]
+    valid = pos[None, :] < lens[:, None]  # [B, k] padding mask
+    mask = causal[None, None, :, :] & valid[:, None, None, :]
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v).reshape(b * s, d)
+    out = linear(out, wd, lp + "wo", cfg, precision).reshape(b, s, d)
+
+    # Emit this layer's K/V rows for the coordinator's host-side cache.
+    kv_lanes.append(jnp.stack([k.reshape(b, s, d), v.reshape(b, s, d)],
+                              axis=0))  # [2, B, S, D]
+    return out
+
+
+def attention_decode(h, kv_l, lens, wd, lp, cfg, precision):
+    """Single-token attention against the cache.
+
+    ``kv_l: [2, B, MAX, D]`` holds rows ``0..lens[b]-1``; the current
+    token's K/V is used directly and returned as ``[2, B, 1, D]`` for the
+    coordinator to append host-side.
+    """
+    b, d = h.shape
+    hd, nh = cfg.head_dim, cfg.heads
+    q = linear(h, wd, lp + "wq", cfg, precision).reshape(b, nh, hd)
+    k = linear(h, wd, lp + "wk", cfg, precision).reshape(b, nh, hd)
+    v = linear(h, wd, lp + "wv", cfg, precision).reshape(b, nh, hd)
+
+    cos, sin = rope_tables(lens, hd, cfg.rope_theta)  # [B, hd/2]
+    cos, sin = cos[:, None, :], sin[:, None, :]
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+
+    kc = kv_l[0].reshape(b, cfg.max_len, nh, hd)
+    vc = kv_l[1].reshape(b, cfg.max_len, nh, hd)
+    scores = jnp.einsum("bhd,bthd->bht", q, kc) / jnp.sqrt(float(hd))
+    t = jnp.arange(cfg.max_len, dtype=jnp.int32)
+    mask = t[None, :] < lens[:, None]  # cache rows 0..lens-1
+    scores = jnp.where(mask[:, None, :], scores, -1e30)
+    self_score = (jnp.einsum("bhd,bhd->bh", q, k)
+                  / jnp.sqrt(float(hd)))[:, :, None]
+    all_scores = jnp.concatenate([scores, self_score], axis=-1)
+    probs = jax.nn.softmax(all_scores, axis=-1)
+    out = jnp.einsum("bht,bthd->bhd", probs[:, :, :-1], vc)
+    out = out + probs[:, :, -1:] * v
+    out = linear(out.reshape(b, d), wd, lp + "wo", cfg, precision)
+    kv_new = jnp.stack([k.reshape(b, 1, d), v.reshape(b, 1, d)], axis=0)
+    return out, kv_new
+
+
+def mlp(x, wd, lp, cfg, precision):
+    """SwiGLU MLP on ``x: [T, D]``."""
+    gate = linear(x, wd, lp + "w_gate", cfg, precision)
+    up = linear(x, wd, lp + "w_up", cfg, precision)
+    return linear(jax.nn.silu(gate) * up, wd, lp + "w_down", cfg, precision)
+
+
+# ------------------------------------------------------------ entry points
+
+def prefill(cfg, precision, tokens, lens, *flat_weights):
+    """Padded batch prefill. Returns (logits[B,S,V], kv_new[L,2,B,S,D])."""
+    wd = _weights_dict(cfg, precision, flat_weights)
+    b, s = tokens.shape
+    h = wd["embed"][tokens]  # [B, S, D]
+    kv_lanes = []
+    for i in range(cfg.layers):
+        lp = f"layers.{i}."
+        a = attention_prefill(
+            rmsnorm(h, wd[lp + "attn_norm"], cfg.norm_eps),
+            kv_lanes, lens, wd, lp, cfg, precision)
+        h = h + a
+        m = mlp(
+            rmsnorm(h, wd[lp + "mlp_norm"], cfg.norm_eps).reshape(b * s, -1),
+            wd, lp, cfg, precision).reshape(b, s, -1)
+        h = h + m
+    h = rmsnorm(h, wd["final_norm"], cfg.norm_eps)
+    logits = h.reshape(b * s, -1) @ wd["lm_head"]
+    return logits.reshape(b, s, cfg.vocab), jnp.stack(kv_lanes, axis=0)
+
+
+def decode(cfg, precision, tokens, lens, kv, *flat_weights):
+    """One decode step. Returns (logits[B,V], kv_new[L,2,B,1,D])."""
+    wd = _weights_dict(cfg, precision, flat_weights)
+    h = wd["embed"][tokens]  # [B, D]
+    new_lanes = []
+    for i in range(cfg.layers):
+        lp = f"layers.{i}."
+        a, kv_l = attention_decode(
+            rmsnorm(h, wd[lp + "attn_norm"], cfg.norm_eps),
+            kv[i], lens, wd, lp, cfg, precision)
+        new_lanes.append(kv_l)
+        h = h + a
+        h = h + mlp(rmsnorm(h, wd[lp + "mlp_norm"], cfg.norm_eps),
+                    wd, lp, cfg, precision)
+    h = rmsnorm(h, wd["final_norm"], cfg.norm_eps)
+    return h @ wd["lm_head"], jnp.stack(new_lanes, axis=0)
+
+
+def make_prefill(cfg, precision):
+    return functools.partial(prefill, cfg, precision)
+
+
+def make_decode(cfg, precision):
+    return functools.partial(decode, cfg, precision)
+
+
+# ------------------------------------------------------------ test helpers
+
+def random_weights(cfg, precision, seed=0, outlier_channels=0,
+                   outlier_scale=30.0):
+    """Seeded random weights in canonical flat order (numpy RNG).
+
+    ``outlier_channels > 0`` scales that many RMSNorm gain channels by
+    ``outlier_scale`` to induce the paper's fixed-channel activation
+    outliers (DESIGN.md §5). For w4a16, fp16 weights are quantized with
+    kernels/ref.py so tests share numerics with the AOT path.
+    """
+    import numpy as np
+    from .kernels import ref as kref
+
+    rng = np.random.default_rng(seed)
+    fp16 = {}
+    for name, (shape, _) in configs.weight_specs(cfg, "fp16").items():
+        base = name.split(".")[-1]
+        if base in ("attn_norm", "mlp_norm", "final_norm"):
+            w = np.ones(shape, np.float32)
+            if outlier_channels and base != "final_norm":
+                idx = rng.choice(shape[0], outlier_channels, replace=False)
+                w[idx] *= outlier_scale
+        else:
+            w = (rng.standard_normal(shape) / np.sqrt(shape[0])).astype(
+                np.float32)
+        fp16[name] = jnp.asarray(w)
+    if precision == "fp16":
+        return [fp16[n] for n in configs.weight_names(cfg, "fp16")]
+    flat = []
+    for name in configs.weight_names(cfg, "w4a16"):
+        if name.endswith(".packed"):
+            w = fp16[name[: -len(".packed")]]
+            p, s, z = kref.quantize_pack(w, cfg.group_size)
+            flat += [p, s, z]
+        elif name.endswith((".scales", ".zeros")):
+            continue  # appended with .packed
+        else:
+            flat.append(fp16[name])
+    return flat

@@ -1,0 +1,100 @@
+"""AOT path: manifest contract + HLO text properties."""
+
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, configs, model
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_weight_names_fp16_structure():
+    cfg = configs.SIZES["tiny"]
+    names = configs.weight_names(cfg, "fp16")
+    assert names[0] == "embed" and names[-1] == "lm_head"
+    assert names[-2] == "final_norm"
+    assert len(names) == 2 + 1 + 9 * cfg.layers
+
+
+def test_weight_names_w4a16_triples():
+    cfg = configs.SIZES["tiny"]
+    names = configs.weight_names(cfg, "w4a16")
+    for lin in configs.LAYER_LINEARS:
+        base = f"layers.0.{lin}"
+        i = names.index(base + ".packed")
+        assert names[i + 1] == base + ".scales"
+        assert names[i + 2] == base + ".zeros"
+    assert len(names) == 2 + 1 + (2 + 7 * 3) * cfg.layers
+
+
+def test_weight_specs_shapes():
+    cfg = configs.SIZES["small"]
+    specs = configs.weight_specs(cfg, "w4a16")
+    assert specs["embed"] == ((cfg.vocab, cfg.dim), "f32")
+    assert specs["layers.0.wq.packed"] == ((cfg.dim // 2, cfg.dim), "u8")
+    g = cfg.dim // cfg.group_size
+    assert specs["layers.0.wq.scales"] == ((g, cfg.dim), "f32")
+    gf = cfg.ffn // cfg.group_size
+    assert specs["layers.1.w_down.packed"] == ((cfg.ffn // 2, cfg.dim), "u8")
+    assert specs["layers.1.w_down.zeros"] == ((gf, cfg.dim), "f32")
+
+
+def test_random_weights_match_specs():
+    cfg = configs.SIZES["tiny"]
+    for prec in ("fp16", "w4a16"):
+        flat = model.random_weights(cfg, prec, seed=0)
+        specs = configs.weight_specs(cfg, prec)
+        for arr, (name, (shape, dtype)) in zip(flat, specs.items()):
+            assert tuple(arr.shape) == tuple(shape), name
+            want = {"f32": jnp.float32, "u8": jnp.uint8}[dtype]
+            assert arr.dtype == want, name
+
+
+def test_lower_one_hlo_text():
+    cfg = configs.SIZES["tiny"]
+    lowered = aot.lower_one(cfg, "fp16", "decode", 1, 0)
+    text = aot.to_hlo_text(lowered)
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+    # Count parameters of the ENTRY computation only (fusion
+    # subcomputations repeat `parameter(` in the text).
+    entry = text[text.index("ENTRY"):]
+    entry = entry[:entry.index("\n}")]
+    n_params = entry.count("parameter(")
+    assert n_params == len(aot.input_descs(cfg, "fp16", "decode", 1, 0))
+
+
+def test_w4a16_hlo_contains_int4_path():
+    cfg = configs.SIZES["tiny"]
+    lowered = aot.lower_one(cfg, "w4a16", "decode", 1, 0)
+    text = aot.to_hlo_text(lowered)
+    assert "u8[" in text  # packed weights enter as uint8 parameters
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "manifest.json")),
+                    reason="artifacts not built (run `make artifacts`)")
+def test_manifest_consistent_with_configs():
+    man = json.load(open(os.path.join(ART, "manifest.json")))
+    for size, entry in man["models"].items():
+        cfg = configs.SIZES[size]
+        assert entry["config"]["dim"] == cfg.dim
+        for art in entry["artifacts"]:
+            descs = aot.input_descs(cfg, art["precision"], art["phase"],
+                                    art["batch"], art["seq"])
+            assert [i["name"] for i in art["inputs"]] == [n for n, _, _ in
+                                                          descs]
+            assert os.path.exists(os.path.join(ART, art["file"]))
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "manifest.json")),
+                    reason="artifacts not built (run `make artifacts`)")
+def test_artifact_files_are_hlo_text():
+    man = json.load(open(os.path.join(ART, "manifest.json")))
+    arts = man["models"]["tiny"]["artifacts"]
+    for art in arts[:2]:
+        head = open(os.path.join(ART, art["file"])).read(64)
+        assert head.startswith("HloModule"), art["file"]

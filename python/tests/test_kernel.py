@@ -1,0 +1,163 @@
+"""L1 correctness: Pallas W4A16 kernel vs the pure-jnp oracle.
+
+This is the core kernel correctness signal: every numeric claim the Rust
+runtime makes about W4A16 matmuls bottoms out here.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, w4a16
+
+RNG = np.random.default_rng(1234)
+
+
+def rand_w(k, n, scale=1.0):
+    return (RNG.standard_normal((k, n)) * scale).astype(np.float32)
+
+
+def rand_x(m, k, scale=1.0):
+    return (RNG.standard_normal((m, k)) * scale).astype(np.float32)
+
+
+# ----------------------------------------------------------- fixed shapes
+
+@pytest.mark.parametrize(
+    "m,k,n,g",
+    [
+        (1, 128, 128, 128),   # decode-shaped, one group
+        (8, 256, 384, 128),   # decode batch 8
+        (128, 768, 2048, 128),  # base model prefill gate/up shape
+        (32, 384, 768, 128),  # non-square, K=ffn of tiny
+        (4, 64, 32, 32),      # small groups
+        (2, 256, 96, 64),
+    ],
+)
+def test_kernel_matches_ref(m, k, n, g):
+    w = jnp.asarray(rand_w(k, n))
+    x = jnp.asarray(rand_x(m, k))
+    packed, s, z = ref.quantize_pack(w, g)
+    want = ref.w4a16_matmul_ref(x, packed, s, z, g)
+    got = w4a16.w4a16_matmul(x, packed, s, z, group_size=g)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_kernel_custom_blocks():
+    m, k, n, g = 64, 256, 256, 128
+    w, x = jnp.asarray(rand_w(k, n)), jnp.asarray(rand_x(m, k))
+    packed, s, z = ref.quantize_pack(w, g)
+    want = ref.w4a16_matmul_ref(x, packed, s, z, g)
+    for bm, bn, bk in [(32, 64, 128), (64, 128, 256), (16, 256, 128)]:
+        got = w4a16.w4a16_matmul(x, packed, s, z, group_size=g,
+                                 block_m=bm, block_n=bn, block_k=bk)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------------- invariants
+
+def test_pack_unpack_roundtrip_all_nibbles():
+    # every nibble pattern in both lanes
+    q = jnp.asarray(np.arange(256, dtype=np.int32).reshape(16, 16) % 16)
+    assert np.array_equal(np.asarray(ref.unpack_nibbles(ref.pack_nibbles(q))),
+                          np.asarray(q))
+
+
+def test_quant_error_bounded():
+    # error <= delta/2 away from the clamp boundary; the zero-point
+    # rounding can push boundary values one extra step -> 1.5 * delta.
+    w = jnp.asarray(rand_w(256, 64, scale=3.0))
+    q, s, z = ref.quantize_groupwise(w, 128)
+    deq = ref.dequantize_groupwise(q, s, z, 128)
+    err = np.asarray(jnp.abs(deq - w))
+    bound = np.repeat(np.asarray(s), 128, axis=0) * 1.5 + 1e-6
+    assert (err <= bound).all(), float((err - bound).max())
+
+
+def test_quant_idempotent_on_grid():
+    # weights already on a quantization grid survive the round trip exactly
+    w0 = jnp.asarray(RNG.integers(0, 16, size=(128, 32)).astype(np.float32))
+    scale = 0.25
+    w = (w0 - 5.0) * scale
+    q, s, z = ref.quantize_groupwise(w, 128)
+    deq = ref.dequantize_groupwise(q, s, z, 128)
+    np.testing.assert_allclose(np.asarray(deq), np.asarray(w), atol=1e-6)
+
+
+def test_constant_group_is_exact():
+    w = jnp.full((128, 8), 0.731, jnp.float32)
+    q, s, z = ref.quantize_groupwise(w, 128)
+    deq = ref.dequantize_groupwise(q, s, z, 128)
+    np.testing.assert_allclose(np.asarray(deq), np.asarray(w), atol=1e-6)
+
+
+def test_q_range_and_zero_grid():
+    w = jnp.asarray(rand_w(512, 16, scale=10.0))
+    q, s, z = ref.quantize_groupwise(w, 128)
+    assert (np.asarray(q) >= 0).all() and (np.asarray(q) <= 15).all()
+    # zero point is integer-valued even though stored in f32
+    zz = np.asarray(z)
+    assert np.array_equal(zz, np.round(zz))
+    # zero-mean groups keep z within the nibble range (the common case)
+    assert (zz >= -1).all() and (zz <= 16).all()
+
+
+def test_positive_only_group_roundtrips():
+    # groups that do not straddle zero (the case the paper's clamped-Z
+    # formula mishandles) must still round-trip within 1.5 * delta
+    w = jnp.asarray((RNG.standard_normal((64, 8)) * 0.001 + 5.0)
+                    .astype(np.float32))
+    q, s, z = ref.quantize_groupwise(w, 32)
+    deq = ref.dequantize_groupwise(q, s, z, 32)
+    err = np.abs(np.asarray(deq - w))
+    bound = np.repeat(np.asarray(s), 32, axis=0) * 1.5 + 1e-6
+    assert (err <= bound).all()
+
+
+# ------------------------------------------------------ hypothesis sweeps
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 4).map(lambda e: 2 ** e),        # 2..16
+    kg=st.integers(1, 3),                              # groups along K
+    n=st.sampled_from([32, 64, 96, 128]),
+    g=st.sampled_from([32, 64, 128]),
+    scale=st.floats(0.01, 8.0),
+)
+def test_kernel_matches_ref_swept(m, kg, n, g, scale):
+    k = kg * g
+    w = jnp.asarray(rand_w(k, n, scale))
+    x = jnp.asarray(rand_x(m, k))
+    packed, s, z = ref.quantize_pack(w, g)
+    want = ref.w4a16_matmul_ref(x, packed, s, z, g)
+    got = w4a16.w4a16_matmul(x, packed, s, z, group_size=g)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-3, atol=1e-3 * scale)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    k=st.sampled_from([64, 128, 256]),
+    n=st.sampled_from([8, 16, 64]),
+    g=st.sampled_from([32, 64]),
+    loc=st.floats(-5.0, 5.0),
+    scale=st.floats(1e-3, 20.0),
+)
+def test_quant_bound_swept(k, n, g, loc, scale):
+    w = jnp.asarray((RNG.standard_normal((k, n)) * scale + loc)
+                    .astype(np.float32))
+    q, s, z = ref.quantize_groupwise(w, g)
+    deq = ref.dequantize_groupwise(q, s, z, g)
+    err = np.asarray(jnp.abs(deq - w))
+    # delta/2 interior + up to one extra step at the clamp boundary.
+    bound = np.repeat(np.asarray(s), g, axis=0) * 1.5
+    assert (err <= bound + 1e-5 + 1e-5 * np.abs(np.asarray(w))).all()
+
+
+def test_vmem_footprint_under_budget():
+    # default block choice must fit the ~16 MiB VMEM budget (DESIGN.md)
+    assert w4a16.vmem_footprint_bytes(128, 128, 128) < 16 * 2 ** 20
+    assert w4a16.vmem_footprint_bytes(256, 256, 256) < 16 * 2 ** 20

@@ -1,0 +1,167 @@
+"""L2 correctness: the JAX llama forward (fp16 + w4a16 variants)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import configs, model
+
+CFG = configs.SIZES["tiny"]
+
+
+def toks(rng, b, s, cfg=CFG):
+    return jnp.asarray(rng.integers(0, cfg.vocab, size=(b, s)), jnp.int32)
+
+
+def to_cache(kv_new, start=0):
+    """Scatter ``kv_new[L,2,B,S,D]`` into a zeroed full cache at ``start``."""
+    l, _, b, s, d = kv_new.shape
+    out = np.zeros((l, 2, b, CFG.max_len, d), np.float32)
+    out[:, :, :, start:start + s, :] = np.asarray(kv_new)
+    return jnp.asarray(out)
+
+
+@pytest.fixture(scope="module")
+def weights():
+    return {p: model.random_weights(CFG, p, seed=7) for p in
+            ("fp16", "w4a16")}
+
+
+def test_prefill_shapes(weights):
+    rng = np.random.default_rng(0)
+    for prec in ("fp16", "w4a16"):
+        logits, kv = model.prefill(CFG, prec, toks(rng, 2, 16),
+                                   jnp.asarray([16, 9], jnp.int32),
+                                   *weights[prec])
+        assert logits.shape == (2, 16, CFG.vocab)
+        assert kv.shape == (CFG.layers, 2, 2, 16, CFG.dim)
+        assert bool(jnp.isfinite(logits).all())
+
+
+def test_decode_shapes(weights):
+    rng = np.random.default_rng(1)
+    logits, kv_new = model.prefill(CFG, "fp16", toks(rng, 2, 8),
+                                   jnp.asarray([8, 8], jnp.int32),
+                                   *weights["fp16"])
+    cache = to_cache(kv_new)
+    lg, kv2 = model.decode(CFG, "fp16", jnp.asarray([1, 2], jnp.int32),
+                           jnp.asarray([8, 8], jnp.int32), cache,
+                           *weights["fp16"])
+    assert lg.shape == (2, CFG.vocab)
+    assert kv2.shape == (CFG.layers, 2, 2, 1, CFG.dim)
+    assert bool(jnp.isfinite(kv2).all())
+
+
+def test_prefill_decode_consistency(weights):
+    """decode(t_n | prefill(t_0..n-1)) == prefill(t_0..n)[n]."""
+    rng = np.random.default_rng(2)
+    seq = toks(rng, 1, 12)
+    full, _ = model.prefill(CFG, "fp16", seq,
+                            jnp.asarray([12], jnp.int32), *weights["fp16"])
+    part, kv = model.prefill(CFG, "fp16", seq[:, :11],
+                             jnp.asarray([11], jnp.int32), *weights["fp16"])
+    dec, _ = model.decode(CFG, "fp16", seq[:, 11],
+                          jnp.asarray([11], jnp.int32), to_cache(kv),
+                          *weights["fp16"])
+    np.testing.assert_allclose(np.asarray(dec[0]), np.asarray(full[0, 11]),
+                               rtol=1e-3, atol=1e-4)
+
+
+def test_multi_step_decode_matches_prefill(weights):
+    rng = np.random.default_rng(3)
+    seq = toks(rng, 1, 10)
+    full, _ = model.prefill(CFG, "fp16", seq, jnp.asarray([10], jnp.int32),
+                            *weights["fp16"])
+    _, kv = model.prefill(CFG, "fp16", seq[:, :6],
+                          jnp.asarray([6], jnp.int32), *weights["fp16"])
+    cache = np.asarray(to_cache(kv)).copy()
+    for i in range(6, 10):
+        lg, kv_new = model.decode(CFG, "fp16", seq[:, i],
+                                  jnp.asarray([i], jnp.int32),
+                                  jnp.asarray(cache), *weights["fp16"])
+        cache[:, :, :, i, :] = np.asarray(kv_new)[:, :, :, 0, :]
+        np.testing.assert_allclose(np.asarray(lg[0]), np.asarray(full[0, i]),
+                                   rtol=1e-3, atol=1e-4)
+
+
+def test_padding_invariance(weights):
+    """logits for real positions must not depend on padded tail tokens."""
+    rng = np.random.default_rng(4)
+    seq = toks(rng, 1, 16)
+    a = np.asarray(seq).copy()
+    b = a.copy()
+    b[0, 8:] = (b[0, 8:] + 1) % CFG.vocab  # perturb only the padding
+    lens = jnp.asarray([8], jnp.int32)
+    la, _ = model.prefill(CFG, "fp16", jnp.asarray(a), lens,
+                          *weights["fp16"])
+    lb, _ = model.prefill(CFG, "fp16", jnp.asarray(b), lens,
+                          *weights["fp16"])
+    np.testing.assert_allclose(np.asarray(la[0, :8]), np.asarray(lb[0, :8]),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_batch_invariance(weights):
+    """a sequence's logits must not depend on its batch neighbours."""
+    rng = np.random.default_rng(5)
+    s1 = toks(rng, 1, 8)
+    s2 = toks(rng, 1, 8)
+    both = jnp.concatenate([s1, s2], axis=0)
+    lens1 = jnp.asarray([8], jnp.int32)
+    lens2 = jnp.asarray([8, 8], jnp.int32)
+    solo, _ = model.prefill(CFG, "fp16", s1, lens1, *weights["fp16"])
+    pair, _ = model.prefill(CFG, "fp16", both, lens2, *weights["fp16"])
+    np.testing.assert_allclose(np.asarray(solo[0]), np.asarray(pair[0]),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_w4a16_close_to_fp16(weights):
+    """quantized logits track fp16 logits (tiny model, benign init)."""
+    rng = np.random.default_rng(6)
+    seq = toks(rng, 1, 8)
+    lens = jnp.asarray([8], jnp.int32)
+    lf, _ = model.prefill(CFG, "fp16", seq, lens, *weights["fp16"])
+    lq, _ = model.prefill(CFG, "w4a16", seq, lens, *weights["w4a16"])
+    # Random (untrained) tiny-model logits are near-noise, so argmax
+    # agreement is not meaningful here; directional closeness is. The
+    # trained-scale "losslessness" evals live in the Rust eval harness.
+    f, q = np.asarray(lf[0]), np.asarray(lq[0])
+    cos = (f * q).sum(-1) / (np.linalg.norm(f, axis=-1)
+                             * np.linalg.norm(q, axis=-1))
+    assert (cos > 0.85).all(), cos
+
+
+def test_rmsnorm_scale_invariance():
+    x = jnp.asarray(np.random.default_rng(7)
+                    .standard_normal((4, 32)).astype(np.float32))
+    g = jnp.ones((32,), jnp.float32)
+    a = model.rmsnorm(x, g, 1e-5)
+    b = model.rmsnorm(x * 100.0, g, 1e-5)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-3, atol=1e-4)
+
+
+def test_rope_preserves_norm_and_zero_is_identity():
+    rng = np.random.default_rng(8)
+    x = jnp.asarray(rng.standard_normal((2, 5, 4, 16)).astype(np.float32))
+    pos = jnp.arange(5, dtype=jnp.int32)
+    cos, sin = model.rope_tables(pos, 16, 10000.0)
+    y = model.apply_rope(x, cos[None, :, None, :], sin[None, :, None, :])
+    np.testing.assert_allclose(
+        np.asarray(jnp.linalg.norm(y, axis=-1)),
+        np.asarray(jnp.linalg.norm(x, axis=-1)), rtol=1e-4)
+    cos0, sin0 = model.rope_tables(jnp.asarray([0]), 16, 10000.0)
+    y0 = model.apply_rope(x[:, :1], cos0[None, :, None, :],
+                          sin0[None, :, None, :])
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(x[:, :1]),
+                               atol=1e-6)
+
+
+def test_outlier_injection_creates_outliers():
+    w = model.random_weights(CFG, "fp16", seed=9, outlier_channels=4,
+                             outlier_scale=50.0)
+    names = configs.weight_names(CFG, "fp16")
+    gains = np.asarray(w[names.index("layers.0.attn_norm")])
+    top = np.sort(gains)[-4:]
+    assert (top >= 49.0).all()
+    assert np.median(gains) == pytest.approx(1.0)

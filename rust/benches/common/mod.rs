@@ -1,0 +1,100 @@
+//! Shared setup for the table/figure regeneration benches.
+//!
+//! Each bench target uses a subset of these helpers.
+#![allow(dead_code)]
+//!
+//! Environment knobs:
+//! * `SQPLUS_BENCH_SIZES`  — comma list of model sizes (default
+//!   `tiny,small`; add `base` for the full-scale run used in
+//!   EXPERIMENTS.md).
+//! * `SQPLUS_BENCH_TASKS`  — eval prompts per cell (default 24).
+
+use sqplus::config::{ModelConfig, QuantConfig, QuantMethod};
+use sqplus::data::corpus::Domain;
+use sqplus::data::{corpus, tasks};
+use sqplus::model::init::{init_weights, InitSpec};
+use sqplus::model::store::WeightStore;
+use sqplus::quant::calib::{self, CalibData};
+use sqplus::quant::pipeline::{self, QuantOutcome};
+use sqplus::tokenizer::Tokenizer;
+
+pub const OUTLIER_CHANNELS: usize = 8;
+pub const OUTLIER_SCALE: f32 = 12.0;
+
+pub fn bench_sizes() -> Vec<String> {
+    std::env::var("SQPLUS_BENCH_SIZES")
+        .unwrap_or_else(|_| "tiny,small".into())
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect()
+}
+
+pub fn bench_tasks() -> usize {
+    std::env::var("SQPLUS_BENCH_TASKS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(24)
+}
+
+pub struct Setup {
+    pub cfg: ModelConfig,
+    pub weights: WeightStore,
+    pub tok: Tokenizer,
+    pub calib: CalibData,
+    pub eval_prompts: Vec<Vec<u32>>,
+}
+
+/// Standard setup: outlier-injected weights, tokenizer, calibration on
+/// the HumanEval-like task set, eval prompts held out from it.
+pub fn setup(size: &str) -> Setup {
+    setup_with_calib(size, Domain::CodePython)
+}
+
+/// Setup with a specific calibration domain (Table 3).
+pub fn setup_with_calib(size: &str, calib_domain: Domain) -> Setup {
+    let cfg = ModelConfig::by_name(size).expect("model size");
+    let weights = init_weights(
+        &cfg,
+        &InitSpec::with_outliers(0, OUTLIER_CHANNELS, OUTLIER_SCALE),
+    );
+    let tok = Tokenizer::train(&corpus::tokenizer_training_text(0, 4000),
+                               cfg.vocab);
+    let n = bench_tasks();
+    let cal_prompts: Vec<Vec<u32>> = match calib_domain {
+        // the paper's preferred calibration set: the task descriptions
+        Domain::CodePython => {
+            let all = tasks::task_set(Domain::CodePython, 0);
+            tasks::tokenized_prompts(&all[..32], &tok, cfg.vocab, 24)
+        }
+        d => corpus::corpus(d, 0, 32, 160)
+            .iter()
+            .map(|doc| {
+                let mut ids = tok.encode_for_model(doc, cfg.vocab);
+                ids.truncate(24);
+                if ids.is_empty() { ids.push(1) }
+                ids
+            })
+            .collect(),
+    };
+    let calib = calib::collect(&cfg, &weights, &cal_prompts, 256, 0);
+    let all = tasks::task_set(Domain::CodePython, 0);
+    let eval_prompts =
+        tasks::tokenized_prompts(&all[32..32 + n], &tok, cfg.vocab, 24);
+    Setup { cfg, weights, tok, calib, eval_prompts }
+}
+
+pub fn quantize(s: &Setup, method: QuantMethod) -> QuantOutcome {
+    pipeline::quantize_model(&s.cfg, &s.weights, &s.calib, method,
+                             &QuantConfig::default())
+}
+
+/// Manifest, or None with a notice (benches print SKIP rather than fail).
+pub fn manifest() -> Option<sqplus::runtime::manifest::Manifest> {
+    let dir = sqplus::runtime::manifest::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(sqplus::runtime::manifest::Manifest::load(&dir).unwrap())
+}

@@ -1,0 +1,63 @@
+//! Regenerates **Figure 2**: per-channel activation magnitudes of the 7
+//! linear layers of one decoder layer — outliers sit in a small set of
+//! *fixed* channels across tokens, ~100x the median.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use sqplus::model::init::{injected_channels, InitSpec};
+use sqplus::model::LAYER_LINEARS;
+use sqplus::quant::loss::site_of;
+use sqplus::util::bench::Table;
+
+fn main() {
+    let size = common::bench_sizes().last().cloned()
+        .unwrap_or_else(|| "small".into());
+    let layer: usize = std::env::var("SQPLUS_FIG2_LAYER")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0);
+    let s = common::setup(&size);
+    let spec = InitSpec::with_outliers(0, common::OUTLIER_CHANNELS,
+                                       common::OUTLIER_SCALE);
+    let injected = injected_channels(&s.cfg, &spec);
+    println!("injected outlier channels: {injected:?}");
+
+    let mut t = Table::new(
+        &format!("Figure 2 (data): per-channel |X| of decoder layer \
+                  {layer} ({size})"),
+        &["linear", "median", "p99", "max", "top-4 channels",
+          "overlap w/ injected"],
+    );
+    for lin in LAYER_LINEARS {
+        let st = s.calib.stats(layer, site_of(lin));
+        let mut sorted = st.absmax.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = sorted.len();
+        let median = sorted[n / 2];
+        let p99 = sorted[(n * 99) / 100];
+        let max = sorted[n - 1];
+        let mut top: Vec<(usize, f32)> =
+            st.absmax.iter().cloned().enumerate().collect();
+        top.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        let top4: Vec<usize> = top.iter().take(4).map(|x| x.0).collect();
+        let overlap = top4.iter().filter(|c| injected.contains(c)).count();
+        t.row(&[
+            lin.to_string(),
+            format!("{median:.3}"),
+            format!("{p99:.2}"),
+            format!("{max:.1} ({:.0}x median)", max / median.max(1e-9)),
+            format!("{top4:?}"),
+            // DownIn/OIn sites have their own channel space (ffn/dim)
+            format!("{overlap}/4"),
+        ]);
+    }
+    t.print();
+    println!(
+        "\npaper Fig 2: outliers confined to a few fixed channels, \
+         ~100x other amplitudes, consistent across the 7 linears fed by \
+         the hidden stream. Here: the attn/mlp-norm sites (wq/wk/wv, \
+         gate/up) share the injected channel set; wo/w_down sites live \
+         in other channel spaces."
+    );
+}

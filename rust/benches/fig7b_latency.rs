@@ -1,0 +1,110 @@
+//! Regenerates **Figure 7(b)**: per-token latency under replayed
+//! "online" traffic for the three deployments, plus the analytic A100
+//! latency (paper: SQ+ per-token latency ≈ 68% of FP16-on-2-GPUs).
+
+#[path = "common/mod.rs"]
+mod common;
+
+use sqplus::config::{EngineConfig, GpuProfile, Precision, QuantMethod};
+use sqplus::coordinator::engine::Engine;
+use sqplus::coordinator::sequence::SamplingParams;
+use sqplus::data::trace;
+use sqplus::quant::pipeline;
+use sqplus::runtime::executor::ModelRuntime;
+use sqplus::runtime::perfmodel::{self, Deploy, PaperModel};
+use sqplus::runtime::simtp::{CommMode, Deployment};
+use sqplus::util::bench::Table;
+
+fn replay(
+    man: &sqplus::runtime::manifest::Manifest, s: &common::Setup,
+    precision: Precision, store: &sqplus::model::store::WeightStore,
+    workers: usize,
+) -> (f64, f64) {
+    let rt = ModelRuntime::load(man, &s.cfg.name, precision, store)
+        .unwrap();
+    rt.warmup().unwrap(); // exclude XLA compile from the timed region
+    let dep = if workers > 1 {
+        Deployment::tensor_parallel(rt, GpuProfile::a100_40g(), workers,
+                                    CommMode::Sleep)
+    } else {
+        Deployment::single(rt, GpuProfile::a100_40g())
+    };
+    let mut eng = Engine::new(dep, EngineConfig::default());
+    let reqs = trace::online_replay(3, 16, 8.0, 32, 12);
+    let mut rng = sqplus::util::rng::Rng::new(11);
+    let start = std::time::Instant::now();
+    let mut next = 0;
+    while next < reqs.len() || eng.has_work() {
+        let now = start.elapsed().as_secs_f64();
+        while next < reqs.len() && reqs[next].at_s <= now {
+            let p = trace::prompt_tokens(&mut rng,
+                                         reqs[next].prompt_tokens,
+                                         s.cfg.vocab);
+            eng.submit(p, SamplingParams {
+                max_new_tokens: reqs[next].output_tokens,
+                ..Default::default()
+            });
+            next += 1;
+        }
+        if eng.has_work() {
+            eng.step().unwrap();
+        } else if next < reqs.len() {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+    }
+    let rep = eng.metrics.report();
+    (rep.inter_token.p50 * 1e3, rep.inter_token.p99 * 1e3)
+}
+
+fn main() {
+    let Some(man) = common::manifest() else { return };
+    let size = common::bench_sizes().first().cloned()
+        .unwrap_or_else(|| "tiny".into());
+    let s = common::setup(&size);
+    let sqp = common::quantize(&s, QuantMethod::SmoothQuantPlus);
+    let fp16 = pipeline::fp16_deploy(&s.cfg, &s.weights);
+
+    let mut t = Table::new(
+        &format!("Figure 7b measured ({size}, CPU PJRT, online replay \
+                  trace): per-token latency"),
+        &["deployment", "p50 (ms)", "p99 (ms)"],
+    );
+    let (fp1_50, fp1_99) = replay(&man, &s, Precision::Fp16, &fp16, 1);
+    let (fp2_50, fp2_99) = replay(&man, &s, Precision::Fp16, &fp16, 2);
+    let (q4_50, q4_99) = replay(&man, &s, Precision::W4a16,
+                                sqp.deploy.as_ref().unwrap(), 1);
+    t.row(&["FP16 x1 (measured)".into(), format!("{fp1_50:.1}"),
+            format!("{fp1_99:.1}")]);
+    t.row(&["FP16 x2 (meas + sim comm)".into(), format!("{fp2_50:.1}"),
+            format!("{fp2_99:.1}")]);
+    t.row(&["SQ+ W4A16 x1 (measured)".into(), format!("{q4_50:.1}"),
+            format!("{q4_99:.1}")]);
+    t.print();
+    println!("SQ+/FP16x2 per-token p50 ratio: {:.2} (paper: 0.68)",
+             q4_50 / fp2_50);
+
+    // analytic A100 at paper scale
+    let gpu = GpuProfile::a100_40g();
+    let m34 = PaperModel::code_llama_34b();
+    let mut t2 = Table::new(
+        "Figure 7b analytic (A100, Code Llama-34B, batch 8, ctx 1024): \
+         per-token latency",
+        &["deployment", "ms/token", "vs FP16 x2"],
+    );
+    let fp = perfmodel::latency_per_token_s(&gpu, &m34,
+                                            Deploy::Fp16TwoGpu, 1024, 8);
+    let awq = perfmodel::latency_per_token_s(&gpu, &m34,
+                                             Deploy::AwqOneGpu, 1024, 8);
+    let q4 = perfmodel::latency_per_token_s(&gpu, &m34,
+                                            Deploy::W4a16OneGpu, 1024, 8);
+    t2.row(&["FP16 x2".into(), format!("{:.2}", fp * 1e3), "1.00".into()]);
+    t2.row(&["AWQ x1".into(), format!("{:.2}", awq * 1e3),
+             format!("{:.2}", awq / fp)]);
+    t2.row(&["SQ+ W4A16 x1".into(), format!("{:.2}", q4 * 1e3),
+             format!("{:.2}", q4 / fp)]);
+    t2.print();
+    println!(
+        "\npaper Fig 7b: SQ+ per-token latency is 68% of FP16-2GPU; AWQ \
+         is slower than FP16-2GPU."
+    );
+}

@@ -1,0 +1,90 @@
+//! Micro-bench: the PJRT-executed decode/prefill step, FP16 GEMM vs the
+//! Pallas-lowered W4A16 dequant-GEMM, across batch buckets (the paper's
+//! kernel-level claim: the W4A16 path must not lose to FP16 despite the
+//! dequant work, because weight traffic shrinks 4x).
+
+#[path = "common/mod.rs"]
+mod common;
+
+use sqplus::config::{Precision, QuantMethod};
+use sqplus::quant::pipeline;
+use sqplus::runtime::executor::ModelRuntime;
+use sqplus::runtime::kv::{self, SeqKv};
+use sqplus::util::bench::{Bench, Table};
+
+fn main() {
+    let Some(man) = common::manifest() else { return };
+    let size = common::bench_sizes().first().cloned()
+        .unwrap_or_else(|| "tiny".into());
+    let s = common::setup(&size);
+    let sqp = common::quantize(&s, QuantMethod::SmoothQuantPlus);
+    let fp16 = pipeline::fp16_deploy(&s.cfg, &s.weights);
+
+    let rt_fp = ModelRuntime::load(&man, &size, Precision::Fp16, &fp16)
+        .unwrap();
+    let rt_q4 = ModelRuntime::load(&man, &size, Precision::W4a16,
+                                   sqp.deploy.as_ref().unwrap())
+        .unwrap();
+
+    let mut t = Table::new(
+        &format!("micro: decode step latency ({size}, CPU PJRT)"),
+        &["batch", "FP16 (ms)", "W4A16 (ms)", "W4A16/FP16"],
+    );
+    for batch in rt_fp.decode_batches() {
+        // prefill `batch` short sequences to seed KV
+        let prompts: Vec<Vec<u32>> = (0..batch)
+            .map(|i| (0..8u32).map(|t| (i as u32 * 31 + t * 7)
+                % s.cfg.vocab as u32).collect())
+            .collect();
+        let step = |rt: &'_ ModelRuntime| -> (Vec<u32>, Vec<usize>, Vec<f32>) {
+            // prefill in chunks of the largest prefill batch bucket
+            let max_pb = rt
+                .prefill_buckets()
+                .into_iter()
+                .map(|(b, _)| b)
+                .max()
+                .unwrap();
+            let mut kvs: Vec<SeqKv> =
+                (0..batch).map(|_| SeqKv::new(&s.cfg)).collect();
+            for chunk in (0..batch).collect::<Vec<_>>().chunks(max_pb) {
+                let views: Vec<&[u32]> =
+                    chunk.iter().map(|&i| &prompts[i][..]).collect();
+                let pre = rt.prefill(&views).unwrap();
+                // chunk indices are contiguous: borrow that sub-slice
+                let lo = chunk[0];
+                let hi = *chunk.last().unwrap();
+                let mut refs: Vec<&mut SeqKv> =
+                    kvs[lo..=hi].iter_mut().collect();
+                kv::fill_prefill_rows(&mut refs, &s.cfg, pre.batch,
+                                      pre.seq, &pre.kv_new,
+                                      &vec![8; chunk.len()]);
+            }
+            let toks: Vec<u32> = vec![1; batch];
+            let lens: Vec<usize> = vec![8; batch];
+            let kvrefs: Vec<&SeqKv> = kvs.iter().collect();
+            let kvb = kv::assemble_batch(&kvrefs, &s.cfg, batch);
+            (toks, lens, kvb)
+        };
+        let (toks, lens, kvb) = step(&rt_fp);
+        let r_fp = Bench::new(&format!("fp16 decode b{batch}"))
+            .warmup(2)
+            .iters(8)
+            .run(|| {
+                let _ = rt_fp.decode(&toks, &lens, &kvb).unwrap();
+            });
+        let (toks, lens, kvb) = step(&rt_q4);
+        let r_q4 = Bench::new(&format!("w4a16 decode b{batch}"))
+            .warmup(2)
+            .iters(8)
+            .run(|| {
+                let _ = rt_q4.decode(&toks, &lens, &kvb).unwrap();
+            });
+        t.row(&[
+            batch.to_string(),
+            format!("{:.2}", r_fp.p50_s * 1e3),
+            format!("{:.2}", r_q4.p50_s * 1e3),
+            format!("{:.2}x", r_q4.p50_s / r_fp.p50_s),
+        ]);
+    }
+    t.print();
+}

@@ -1,0 +1,102 @@
+//! Micro-bench: scheduler + block-manager throughput without the model
+//! (plans/second at varying pool pressure), and KV batch-assembly
+//! bandwidth — the L3 hot-path pieces outside PJRT.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use std::collections::HashMap;
+
+use sqplus::config::{EngineConfig, ModelConfig};
+use sqplus::coordinator::block_manager::BlockManager;
+use sqplus::coordinator::scheduler::{Scheduler, StepPlan};
+use sqplus::coordinator::sequence::{SamplingParams, Sequence};
+use sqplus::runtime::kv::{self, SeqKv};
+use sqplus::util::bench::{Bench, Table};
+
+fn churn(total_blocks: usize, n_seqs: usize) -> usize {
+    let mut seqs: HashMap<u64, Sequence> = HashMap::new();
+    let mut sch = Scheduler::new(
+        EngineConfig::default(),
+        BlockManager::new(16, total_blocks),
+    );
+    for id in 0..n_seqs as u64 {
+        seqs.insert(id, Sequence::new(id, vec![1; 16],
+                                      SamplingParams::default()));
+        sch.add(id);
+    }
+    let mut plans = 0;
+    let mut done = 0u64;
+    while sch.has_work() {
+        match sch.plan(&seqs) {
+            StepPlan::Decode { ids } => {
+                for id in ids {
+                    let q = seqs.get_mut(&id).unwrap();
+                    q.record_token(1);
+                    if q.output.len() >= 24 {
+                        sch.on_finished(id);
+                        done += 1;
+                    }
+                }
+            }
+            StepPlan::Prefill { ids } => {
+                for id in ids {
+                    seqs.get_mut(&id).unwrap().state =
+                        sqplus::coordinator::sequence::SeqState::Running;
+                }
+            }
+            StepPlan::Idle => {
+                if done == n_seqs as u64 {
+                    break;
+                }
+            }
+        }
+        plans += 1;
+        if plans > 1_000_000 {
+            break;
+        }
+    }
+    plans
+}
+
+fn main() {
+    let mut t = Table::new(
+        "micro: scheduler plans/s under pool pressure (200 seqs, 24 \
+         tokens each)",
+        &["pool blocks", "plans", "plans/s"],
+    );
+    for blocks in [64usize, 128, 512, 4096] {
+        let mut plans = 0;
+        let r = Bench::new(&format!("sched pool={blocks}"))
+            .warmup(1)
+            .iters(5)
+            .run(|| {
+                plans = churn(blocks, 200);
+            });
+        t.row(&[
+            blocks.to_string(),
+            plans.to_string(),
+            format!("{:.0}", plans as f64 / r.p50_s),
+        ]);
+    }
+    t.print();
+
+    // KV assembly bandwidth (the per-step memcpy the engine pays)
+    let cfg = ModelConfig::base();
+    let seqs: Vec<SeqKv> = (0..8).map(|_| SeqKv::new(&cfg)).collect();
+    let refs: Vec<&SeqKv> = seqs.iter().collect();
+    let bytes = cfg.layers * 2 * 8 * cfg.max_len * cfg.dim * 4;
+    let r = Bench::new("kv assemble_batch base b8")
+        .warmup(2)
+        .iters(10)
+        .run(|| {
+            let out = kv::assemble_batch(&refs, &cfg, 8);
+            std::hint::black_box(out.len());
+        });
+    println!(
+        "kv assembly: {:.1} MB in {:.2} ms = {:.1} GB/s",
+        bytes as f64 / 1e6,
+        r.p50_s * 1e3,
+        bytes as f64 / r.p50_s / 1e9
+    );
+}

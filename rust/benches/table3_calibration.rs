@@ -1,0 +1,76 @@
+//! Regenerates **Table 3**: calibration-set sensitivity — SmoothQuant+
+//! calibrated on pile-like / c4-like / task-set (HumanEval-like) corpora,
+//! evaluated on the task set.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use sqplus::config::QuantMethod;
+use sqplus::data::corpus::Domain;
+use sqplus::eval::evaluate;
+use sqplus::util::bench::Table;
+
+fn main() {
+    let sizes = common::bench_sizes();
+    let cal_sets: [(&str, Domain); 3] = [
+        ("Pile", Domain::PileProse),
+        ("C4", Domain::C4Web),
+        ("HumanEval", Domain::CodePython), // the task-set calibration
+    ];
+    let mut rows: Vec<Vec<String>> = cal_sets
+        .iter()
+        .map(|(n, _)| vec![n.to_string()])
+        .collect();
+    let mut loss_rows = rows.clone();
+
+    for size in &sizes {
+        eprintln!("== size {size} ==");
+        // task-set activations are the common yardstick: every candidate
+        // (whatever it calibrated on) is judged by its quantization loss
+        // on the *eval* distribution, the paper's Table-3 question.
+        let yardstick = common::setup(size);
+        for (i, (name, domain)) in cal_sets.iter().enumerate() {
+            let s = common::setup_with_calib(size, *domain);
+            let out = common::quantize(&s, QuantMethod::SmoothQuantPlus);
+            let r = evaluate(&s.cfg, &s.weights, &out.effective,
+                             &s.eval_prompts, 8);
+            // original-frame loss: s from this calib set, X rows from the
+            // task-set yardstick
+            let eval_loss = sqplus::quant::search::loss_at_alpha_cross(
+                &s.cfg, &s.weights, &s.calib, &yardstick.calib,
+                s.cfg.group_size, out.alpha.unwrap());
+            eprintln!("  calib {name}: exact={:.1}% agree={:.1}% \
+                       eval-loss={:.4} alpha={:?}",
+                      r.exact_match * 100.0, r.token_agreement * 100.0,
+                      eval_loss, out.alpha);
+            rows[i].push(format!("{:.1}% / {:.1}%",
+                                 r.exact_match * 100.0,
+                                 r.token_agreement * 100.0));
+            loss_rows[i].push(format!("{:.4}", eval_loss));
+        }
+    }
+    let mut headers = vec!["calib set".to_string()];
+    headers.extend(sizes.iter().cloned());
+    let href: Vec<&str> = headers.iter().map(|x| x.as_str()).collect();
+    let mut t = Table::new(
+        "Table 3 (proxy): calibration-set sensitivity of SmoothQuant+ \
+         (pass@1-proxy)",
+        &href,
+    );
+    for r in &rows {
+        t.row(r);
+    }
+    t.print();
+    let mut t2 = Table::new("Table 3 companion: quant loss per calib set",
+                            &href);
+    for r in &loss_rows {
+        t2.row(r);
+    }
+    t2.print();
+    println!(
+        "\npaper (Table 3): HumanEval calibration wins at every size \
+         (35.98/37.80/53.05 vs Pile 28.05/32.32/50.0, C4 \
+         31.71/32.32/45.12). Expected shape: task-set calibration >= \
+         prose/web calibration on the task-set eval."
+    );
+}

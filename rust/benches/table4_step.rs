@@ -1,0 +1,65 @@
+//! Regenerates **Table 4**: alpha-search step sensitivity (0.05 vs 0.01)
+//! with the whole-model quantization loss readout.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use sqplus::config::{QuantConfig, QuantMethod};
+use sqplus::eval::evaluate;
+use sqplus::quant::pipeline;
+use sqplus::util::bench::Table;
+
+fn main() {
+    let sizes = common::bench_sizes();
+    let mut rows: Vec<Vec<String>> = vec![
+        vec!["FP16".into()],
+        vec!["RTN".into()],
+        vec!["SQ+(step=0.05)".into()],
+        vec!["SQ+(step=0.01)".into()],
+    ];
+    for size in &sizes {
+        eprintln!("== size {size} ==");
+        let s = common::setup(size);
+        // FP16 + RTN baselines
+        for (i, method) in
+            [QuantMethod::Fp16, QuantMethod::Rtn].into_iter().enumerate()
+        {
+            let out = common::quantize(&s, method);
+            let r = evaluate(&s.cfg, &s.weights, &out.effective,
+                             &s.eval_prompts, 8);
+            rows[i].push(format!("{:.1}%", r.exact_match * 100.0));
+        }
+        for (i, step) in [0.05f64, 0.01].into_iter().enumerate() {
+            let qcfg = QuantConfig { alpha_step: step,
+                                     ..Default::default() };
+            let out = pipeline::quantize_model(
+                &s.cfg, &s.weights, &s.calib,
+                QuantMethod::SmoothQuantPlus, &qcfg);
+            let r = evaluate(&s.cfg, &s.weights, &out.effective,
+                             &s.eval_prompts, 8);
+            eprintln!("  step {step}: alpha={:?} loss={:.5} exact={:.1}%",
+                      out.alpha, out.loss.total, r.exact_match * 100.0);
+            rows[2 + i].push(format!(
+                "{:.1}% ({:.5})",
+                r.exact_match * 100.0,
+                out.loss.total
+            ));
+        }
+    }
+    let mut headers = vec!["method".to_string()];
+    headers.extend(sizes.iter().cloned());
+    let href: Vec<&str> = headers.iter().map(|x| x.as_str()).collect();
+    let mut t = Table::new(
+        "Table 4 (proxy): search-step sensitivity — pass@1-proxy (loss)",
+        &href,
+    );
+    for r in &rows {
+        t.row(r);
+    }
+    t.print();
+    println!(
+        "\npaper (Table 4): step=0.05 matches or beats step=0.01 despite \
+         the coarser grid (loss differs only in the 4th-5th decimal); \
+         both beat RTN. Same expected shape here."
+    );
+}

@@ -1,0 +1,306 @@
+//! Configuration: model sizes (mirroring `python/compile/configs.py` — the
+//! manifest is the authoritative copy at runtime), quantization settings,
+//! engine/scheduler settings, and simulated-GPU deployment profiles.
+
+use crate::util::json::Value;
+
+/// Llama-family model architecture. Mirrors python configs.SIZES; when
+/// artifacts are present, prefer [`ModelConfig::from_manifest`] so Rust and
+/// the lowered HLO can never drift.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab: usize,
+    pub dim: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub ffn: usize,
+    pub max_len: usize,
+    pub group_size: usize,
+    pub rope_theta: f32,
+    pub norm_eps: f32,
+}
+
+impl ModelConfig {
+    pub fn tiny() -> Self {
+        ModelConfig {
+            name: "tiny".into(), vocab: 512, dim: 128, layers: 2, heads: 4,
+            ffn: 384, max_len: 128, group_size: 128,
+            rope_theta: 10000.0, norm_eps: 1e-5,
+        }
+    }
+    pub fn small() -> Self {
+        ModelConfig {
+            name: "small".into(), vocab: 1024, dim: 256, layers: 4, heads: 8,
+            ffn: 768, max_len: 256, group_size: 128,
+            rope_theta: 10000.0, norm_eps: 1e-5,
+        }
+    }
+    pub fn base() -> Self {
+        ModelConfig {
+            name: "base".into(), vocab: 8192, dim: 768, layers: 12,
+            heads: 12, ffn: 2048, max_len: 256, group_size: 128,
+            rope_theta: 10000.0, norm_eps: 1e-5,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "tiny" => Some(Self::tiny()),
+            "small" => Some(Self::small()),
+            "base" => Some(Self::base()),
+            _ => None,
+        }
+    }
+
+    /// Parse the `config` object of a manifest model entry.
+    pub fn from_manifest(v: &Value) -> ModelConfig {
+        ModelConfig {
+            name: v.get("name").as_str().unwrap_or("?").to_string(),
+            vocab: v.get("vocab").as_usize().unwrap(),
+            dim: v.get("dim").as_usize().unwrap(),
+            layers: v.get("layers").as_usize().unwrap(),
+            heads: v.get("heads").as_usize().unwrap(),
+            ffn: v.get("ffn").as_usize().unwrap(),
+            max_len: v.get("max_len").as_usize().unwrap(),
+            group_size: v.get("group_size").as_usize().unwrap(),
+            rope_theta: v.get("rope_theta").as_f64().unwrap() as f32,
+            norm_eps: v.get("norm_eps").as_f64().unwrap() as f32,
+        }
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.dim / self.heads
+    }
+
+    /// The 7 quantizable linears of one decoder layer: (name, K, N).
+    pub fn linear_shapes(&self) -> Vec<(&'static str, usize, usize)> {
+        let (d, f) = (self.dim, self.ffn);
+        vec![
+            ("wq", d, d), ("wk", d, d), ("wv", d, d), ("wo", d, d),
+            ("w_gate", d, f), ("w_up", d, f), ("w_down", f, d),
+        ]
+    }
+
+    pub fn param_count(&self) -> usize {
+        let (d, f, v, l) = (self.dim, self.ffn, self.vocab, self.layers);
+        v * d + l * (4 * d * d + 3 * d * f + 2 * d) + d + d * v
+    }
+
+    /// Model weight bytes under a precision, with FP16 byte-accounting
+    /// (DESIGN.md §5): fp16 = 2 B/param; w4a16 = 0.5 B + group scale/zero
+    /// overhead on the decoder linears, fp16 elsewhere.
+    pub fn weight_bytes(&self, precision: Precision) -> usize {
+        let (d, f, v, l) = (self.dim, self.ffn, self.vocab, self.layers);
+        let lin_params = l * (4 * d * d + 3 * d * f);
+        let other = v * d + l * 2 * d + d + d * v;
+        match precision {
+            Precision::Fp16 => 2 * (lin_params + other),
+            Precision::W4a16 => {
+                let groups: usize = self
+                    .linear_shapes()
+                    .iter()
+                    .map(|&(_, k, n)| (k / self.group_size) * n)
+                    .sum::<usize>()
+                    * l;
+                lin_params / 2 + groups * 4 + 2 * other
+            }
+        }
+    }
+
+    /// KV-cache bytes per token (fp16 accounting).
+    pub fn kv_bytes_per_token(&self) -> usize {
+        2 * self.layers * 2 * self.dim
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Precision {
+    Fp16,
+    W4a16,
+}
+
+impl Precision {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Precision::Fp16 => "fp16",
+            Precision::W4a16 => "w4a16",
+        }
+    }
+    pub fn parse(s: &str) -> Option<Precision> {
+        match s {
+            "fp16" => Some(Precision::Fp16),
+            "w4a16" => Some(Precision::W4a16),
+            _ => None,
+        }
+    }
+}
+
+/// Quantization method under test (the paper's baselines + SQ+).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum QuantMethod {
+    /// No quantization (FP16 reference).
+    Fp16,
+    /// Round-to-nearest group-wise INT4 without smoothing.
+    Rtn,
+    /// AWQ-style per-layer activation-aware scaling (mean-based, greedy).
+    Awq,
+    /// SmoothQuant+: global-alpha smoothing + group-wise INT4.
+    SmoothQuantPlus,
+}
+
+impl QuantMethod {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            QuantMethod::Fp16 => "FP16",
+            QuantMethod::Rtn => "RTN",
+            QuantMethod::Awq => "AWQ",
+            QuantMethod::SmoothQuantPlus => "SmoothQuant+",
+        }
+    }
+    pub fn all() -> [QuantMethod; 4] {
+        [QuantMethod::Fp16, QuantMethod::Rtn, QuantMethod::Awq,
+         QuantMethod::SmoothQuantPlus]
+    }
+}
+
+/// Quantization configuration.
+#[derive(Debug, Clone)]
+pub struct QuantConfig {
+    pub group_size: usize,
+    /// Grid-search step for the smoothing strength alpha (paper: 0.05).
+    pub alpha_step: f64,
+    /// Number of calibration rows (token vectors) to retain per linear.
+    pub calib_rows: usize,
+}
+
+impl Default for QuantConfig {
+    fn default() -> Self {
+        QuantConfig { group_size: 128, alpha_step: 0.05, calib_rows: 512 }
+    }
+}
+
+/// Engine / scheduler configuration (the vLLM-shaped knobs).
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    /// Decode batch buckets available as compiled executables.
+    pub decode_batches: Vec<usize>,
+    /// Prefill buckets (batch, seq).
+    pub prefill_buckets: Vec<(usize, usize)>,
+    /// Max sequences resident in the running set.
+    pub max_running: usize,
+    /// Token budget per scheduler step (prefill admission control).
+    pub max_batch_tokens: usize,
+    /// KV block size in tokens (paged accounting granularity).
+    pub block_size: usize,
+    /// Total KV blocks in the simulated device pool.
+    pub total_blocks: usize,
+    /// Re-form the device batch at most every `reform_interval` steps
+    /// (batch reformation ablation; 1 = vLLM-style every step).
+    pub reform_interval: usize,
+    /// Default max new tokens per request.
+    pub max_new_tokens: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            decode_batches: vec![1, 2, 4, 8],
+            prefill_buckets: vec![(1, 32), (1, 128), (4, 32), (4, 128)],
+            max_running: 8,
+            max_batch_tokens: 512,
+            block_size: 16,
+            total_blocks: 256,
+            reform_interval: 1,
+            max_new_tokens: 32,
+        }
+    }
+}
+
+/// Simulated accelerator profile for the analytic performance model
+/// (paper-scale Fig 7 curves) and the memory-budget admission control.
+#[derive(Debug, Clone)]
+pub struct GpuProfile {
+    pub name: String,
+    pub mem_bytes: usize,
+    pub hbm_gbps: f64,
+    pub fp16_tflops: f64,
+    /// PCIe/NVLink interconnect for tensor-parallel all-reduce.
+    pub link_gbps: f64,
+    pub link_latency_us: f64,
+}
+
+impl GpuProfile {
+    /// NVIDIA A100 40GB PCIe (the paper's testbed).
+    pub fn a100_40g() -> Self {
+        GpuProfile {
+            name: "A100-40G-PCIe".into(),
+            mem_bytes: 40 * (1 << 30),
+            hbm_gbps: 1555.0,
+            fp16_tflops: 312.0,
+            link_gbps: 64.0, // PCIe gen4 x16
+            link_latency_us: 10.0,
+        }
+    }
+    /// Scaled-down profile for exercising admission control with the
+    /// laptop-scale models (a "toy GPU" with a few hundred MB).
+    pub fn sim_small(mem_mb: usize) -> Self {
+        GpuProfile {
+            name: format!("sim-{mem_mb}MB"),
+            mem_bytes: mem_mb << 20,
+            hbm_gbps: 100.0,
+            fp16_tflops: 5.0,
+            link_gbps: 16.0,
+            link_latency_us: 10.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sizes_match_python_table() {
+        let b = ModelConfig::base();
+        assert_eq!(b.dim, 768);
+        assert_eq!(b.layers, 12);
+        assert_eq!(b.head_dim(), 64);
+        // ~100M params for the end-to-end driver
+        let p = b.param_count();
+        assert!(p > 90_000_000 && p < 120_000_000, "params {p}");
+    }
+
+    #[test]
+    fn w4a16_is_about_4x_smaller_on_linears() {
+        let c = ModelConfig::base();
+        let fp = c.weight_bytes(Precision::Fp16);
+        let q4 = c.weight_bytes(Precision::W4a16);
+        // embeddings/lm_head stay fp16 so overall ratio is < 4x but the
+        // reduction must be substantial
+        assert!(fp as f64 / q4 as f64 > 2.3, "{fp} vs {q4}");
+        let c = ModelConfig::tiny();
+        assert!(c.weight_bytes(Precision::Fp16)
+            > c.weight_bytes(Precision::W4a16));
+    }
+
+    #[test]
+    fn precision_roundtrip() {
+        for p in [Precision::Fp16, Precision::W4a16] {
+            assert_eq!(Precision::parse(p.as_str()), Some(p));
+        }
+        assert_eq!(Precision::parse("int8"), None);
+    }
+
+    #[test]
+    fn by_name() {
+        assert!(ModelConfig::by_name("tiny").is_some());
+        assert!(ModelConfig::by_name("huge").is_none());
+    }
+
+    #[test]
+    fn kv_bytes() {
+        let c = ModelConfig::tiny();
+        assert_eq!(c.kv_bytes_per_token(), 2 * 2 * 2 * 128);
+    }
+}

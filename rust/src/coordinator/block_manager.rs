@@ -1,0 +1,217 @@
+//! Paged KV-cache accounting (the vLLM block manager, simplified to what
+//! this engine needs).
+//!
+//! Physical KV rows live host-side per sequence ([`crate::runtime::kv`]),
+//! but *admission and preemption* are governed here: the simulated device
+//! pool is divided into fixed-size blocks of `block_size` token slots;
+//! a sequence owns ceil(context/block_size) blocks; allocation fails when
+//! the pool (minus a watermark) is exhausted, which triggers scheduler
+//! preemption — the same control loop vLLM runs, driven by the same
+//! arithmetic the paper's memory argument uses (W4A16 frees ~3/4 of the
+//! weight memory, so the pool is larger and batches grow).
+
+use std::collections::HashMap;
+
+/// Outcome of an allocation request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Alloc {
+    Ok,
+    /// Not enough free blocks now (caller may preempt and retry).
+    NoSpace,
+}
+
+#[derive(Debug, Clone)]
+pub struct BlockManager {
+    pub block_size: usize,
+    pub total_blocks: usize,
+    free_blocks: usize,
+    /// seq id -> blocks held.
+    held: HashMap<u64, usize>,
+    /// blocks kept free as a scheduling watermark (headroom for decode
+    /// growth of already-running sequences).
+    pub watermark_blocks: usize,
+}
+
+impl BlockManager {
+    pub fn new(block_size: usize, total_blocks: usize) -> BlockManager {
+        BlockManager {
+            block_size,
+            total_blocks,
+            free_blocks: total_blocks,
+            held: HashMap::new(),
+            watermark_blocks: (total_blocks / 100).max(1),
+        }
+    }
+
+    /// Pool sized from a device memory budget: `(mem - weights) /
+    /// (block_size * kv_bytes_per_token)`.
+    pub fn from_memory(block_size: usize, mem_bytes: usize,
+                       weight_bytes: usize, kv_bytes_per_token: usize)
+        -> BlockManager {
+        let free = mem_bytes.saturating_sub(weight_bytes);
+        let per_block = block_size * kv_bytes_per_token;
+        BlockManager::new(block_size, (free / per_block.max(1)).max(1))
+    }
+
+    pub fn blocks_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.block_size)
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free_blocks
+    }
+    pub fn used_blocks(&self) -> usize {
+        self.total_blocks - self.free_blocks
+    }
+    pub fn holds(&self, id: u64) -> usize {
+        self.held.get(&id).copied().unwrap_or(0)
+    }
+    pub fn occupancy(&self) -> f64 {
+        self.used_blocks() as f64 / self.total_blocks as f64
+    }
+
+    /// Can a *new* sequence of `tokens` be admitted (leaving watermark)?
+    pub fn can_admit(&self, tokens: usize) -> bool {
+        self.blocks_for(tokens) + self.watermark_blocks <= self.free_blocks
+    }
+
+    /// Allocate blocks for a newly admitted sequence.
+    pub fn allocate(&mut self, id: u64, tokens: usize) -> Alloc {
+        assert!(!self.held.contains_key(&id), "seq {id} already allocated");
+        let need = self.blocks_for(tokens);
+        if need + self.watermark_blocks > self.free_blocks {
+            return Alloc::NoSpace;
+        }
+        self.free_blocks -= need;
+        self.held.insert(id, need);
+        Alloc::Ok
+    }
+
+    /// Grow a running sequence by one token; may need one more block.
+    pub fn append_token(&mut self, id: u64, new_context: usize) -> Alloc {
+        let held = *self.held.get(&id).expect("seq not allocated");
+        let need = self.blocks_for(new_context);
+        if need <= held {
+            return Alloc::Ok;
+        }
+        let extra = need - held;
+        if extra > self.free_blocks {
+            return Alloc::NoSpace;
+        }
+        self.free_blocks -= extra;
+        self.held.insert(id, need);
+        Alloc::Ok
+    }
+
+    /// Release everything a sequence holds (finish or preemption).
+    pub fn release(&mut self, id: u64) {
+        if let Some(n) = self.held.remove(&id) {
+            self.free_blocks += n;
+        }
+        debug_assert!(self.free_blocks <= self.total_blocks);
+    }
+
+    /// Invariant check: free + Σheld == total.
+    pub fn check_conservation(&self) -> bool {
+        self.free_blocks + self.held.values().sum::<usize>()
+            == self.total_blocks
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn allocate_release_roundtrip() {
+        let mut bm = BlockManager::new(16, 10);
+        bm.watermark_blocks = 1;
+        assert_eq!(bm.allocate(1, 40), Alloc::Ok); // 3 blocks
+        assert_eq!(bm.holds(1), 3);
+        assert_eq!(bm.free_blocks(), 7);
+        bm.release(1);
+        assert_eq!(bm.free_blocks(), 10);
+        assert!(bm.check_conservation());
+    }
+
+    #[test]
+    fn watermark_blocks_admission() {
+        let mut bm = BlockManager::new(16, 4);
+        bm.watermark_blocks = 1;
+        assert!(bm.can_admit(48)); // 3 + 1 watermark = 4 <= 4
+        assert!(!bm.can_admit(64)); // 4 + 1 > 4
+        assert_eq!(bm.allocate(1, 64), Alloc::NoSpace);
+        assert_eq!(bm.allocate(1, 48), Alloc::Ok);
+    }
+
+    #[test]
+    fn append_grows_at_block_boundary() {
+        let mut bm = BlockManager::new(4, 10);
+        bm.watermark_blocks = 0;
+        bm.allocate(1, 4); // exactly 1 block
+        assert_eq!(bm.holds(1), 1);
+        assert_eq!(bm.append_token(1, 5), Alloc::Ok); // needs 2nd block
+        assert_eq!(bm.holds(1), 2);
+        assert_eq!(bm.append_token(1, 6), Alloc::Ok); // still 2 blocks
+        assert_eq!(bm.holds(1), 2);
+    }
+
+    #[test]
+    fn append_fails_when_exhausted() {
+        let mut bm = BlockManager::new(4, 2);
+        bm.watermark_blocks = 0;
+        bm.allocate(1, 8); // both blocks
+        assert_eq!(bm.append_token(1, 9), Alloc::NoSpace);
+        assert!(bm.check_conservation());
+    }
+
+    #[test]
+    fn from_memory_budget() {
+        // 100 MB pool, 60 MB weights, 1 KB/token, block 16 -> 2560 blocks
+        let bm = BlockManager::from_memory(16, 100 << 20, 60 << 20, 1024);
+        assert_eq!(bm.total_blocks, (40 << 20) / (16 * 1024));
+    }
+
+    #[test]
+    fn conservation_under_random_workload() {
+        prop::check("block conservation", 30, |rng| {
+            let mut bm = BlockManager::new(1 + rng.below(8),
+                                           8 + rng.below(64));
+            bm.watermark_blocks = rng.below(3);
+            let mut live: Vec<(u64, usize)> = vec![];
+            let mut next_id = 0u64;
+            for _ in 0..200 {
+                match rng.below(3) {
+                    0 => {
+                        let toks = 1 + rng.below(40);
+                        if bm.allocate(next_id, toks) == Alloc::Ok {
+                            live.push((next_id, toks));
+                        } else {
+                            bm.release(next_id); // no-op: not held
+                        }
+                        next_id += 1;
+                    }
+                    1 => {
+                        if !live.is_empty() {
+                            let i = rng.below(live.len());
+                            let (id, ref mut t) = live[i];
+                            *t += 1;
+                            let t = *t;
+                            let _ = bm.append_token(id, t);
+                        }
+                    }
+                    _ => {
+                        if !live.is_empty() {
+                            let i = rng.below(live.len());
+                            let (id, _) = live.swap_remove(i);
+                            bm.release(id);
+                        }
+                    }
+                }
+                assert!(bm.check_conservation(), "conservation violated");
+                assert!(bm.free_blocks() <= bm.total_blocks);
+            }
+        });
+    }
+}

@@ -1,0 +1,297 @@
+//! The engine step loop: scheduler → PJRT runtime → sampler → state.
+//!
+//! One [`Engine::step`] executes one scheduler plan: either a prefill
+//! batch (admitting waiting sequences, building their KV, sampling their
+//! first token) or one decode step over the running batch. Preempted
+//! sequences drop their KV and recompute on re-admission (prompt +
+//! generated-so-far re-prefilled), vLLM's recompute policy.
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use crate::config::EngineConfig;
+use crate::runtime::kv::{self, SeqKv};
+use crate::runtime::simtp::Deployment;
+use crate::util::rng::Rng;
+
+use super::block_manager::BlockManager;
+use super::metrics::Metrics;
+use super::sampler;
+use super::scheduler::{Scheduler, StepPlan};
+use super::sequence::{FinishReason, SamplingParams, SeqState, Sequence};
+
+/// What a step did (for tests/telemetry).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum StepOutcome {
+    Prefilled(usize),
+    Decoded(usize),
+    Idle,
+}
+
+pub struct Engine {
+    pub dep: Deployment,
+    pub ecfg: EngineConfig,
+    sched: Scheduler,
+    seqs: HashMap<u64, Sequence>,
+    kvs: HashMap<u64, SeqKv>,
+    finished: Vec<Sequence>,
+    pub metrics: Metrics,
+    next_id: u64,
+    /// Engine-level seed mixed into per-token sampling streams.
+    pub seed: u64,
+}
+
+impl Engine {
+    /// Engine with an explicit block pool (tests, ablations).
+    pub fn new(dep: Deployment, mut ecfg: EngineConfig) -> Engine {
+        let max_decode =
+            dep.runtime.decode_batches().into_iter().max().unwrap_or(1);
+        ecfg.max_running = ecfg.max_running.min(max_decode);
+        let bm = BlockManager::new(ecfg.block_size, ecfg.total_blocks);
+        Engine {
+            sched: Scheduler::new(ecfg.clone(), bm),
+            dep,
+            ecfg,
+            seqs: HashMap::new(),
+            kvs: HashMap::new(),
+            finished: vec![],
+            metrics: Metrics::new(),
+            next_id: 0,
+            seed: 0,
+        }
+    }
+
+    /// Engine whose KV pool is sized from the deployment's simulated GPU
+    /// memory minus the model's weight bytes (the paper's Fig. 7 setup:
+    /// W4A16 frees weight memory, so the pool and batches grow).
+    pub fn with_memory_budget(dep: Deployment, mut ecfg: EngineConfig)
+        -> Engine {
+        let cfg = &dep.runtime.cfg;
+        let precision = dep.runtime.precision;
+        let weight_bytes = cfg.weight_bytes(precision);
+        let mem = dep.gpu.mem_bytes * dep.workers;
+        let bm = BlockManager::from_memory(
+            ecfg.block_size, mem * 92 / 100, weight_bytes,
+            cfg.kv_bytes_per_token(),
+        );
+        let max_decode =
+            dep.runtime.decode_batches().into_iter().max().unwrap_or(1);
+        ecfg.max_running = ecfg.max_running.min(max_decode);
+        Engine {
+            sched: Scheduler::new(ecfg.clone(), bm),
+            dep,
+            ecfg,
+            seqs: HashMap::new(),
+            kvs: HashMap::new(),
+            finished: vec![],
+            metrics: Metrics::new(),
+            next_id: 0,
+            seed: 0,
+        }
+    }
+
+    /// Largest prompt the compiled prefill buckets accept.
+    pub fn max_prompt_len(&self) -> usize {
+        self.dep
+            .runtime
+            .prefill_buckets()
+            .into_iter()
+            .map(|(_, s)| s)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Submit a request; returns its id. Prompts longer than the prefill
+    /// bucket are rejected (finished with `PromptTooLong`); generation is
+    /// clamped so prompt + output fits the KV capacity.
+    pub fn submit(&mut self, prompt: Vec<u32>, mut params: SamplingParams)
+        -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.metrics.on_submit(prompt.len());
+        let max_len = self.dep.runtime.cfg.max_len;
+        let too_long =
+            prompt.is_empty() || prompt.len() > self.max_prompt_len()
+                || prompt.len() + 1 > max_len;
+        params.max_new_tokens = params
+            .max_new_tokens
+            .min(max_len.saturating_sub(prompt.len()));
+        let mut seq = Sequence::new(id, prompt, params);
+        if too_long {
+            seq.finish(FinishReason::PromptTooLong);
+            self.metrics.on_finished(&seq);
+            self.finished.push(seq);
+            return id;
+        }
+        self.seqs.insert(id, seq);
+        self.sched.add(id);
+        id
+    }
+
+    pub fn has_work(&self) -> bool {
+        self.sched.has_work()
+    }
+    pub fn kv_occupancy(&self) -> f64 {
+        self.sched.bm.occupancy()
+    }
+    pub fn take_finished(&mut self) -> Vec<Sequence> {
+        std::mem::take(&mut self.finished)
+    }
+
+    /// Execute one scheduler step.
+    pub fn step(&mut self) -> Result<StepOutcome> {
+        let plan = self.sched.plan(&self.seqs);
+        // drop KV of anything the scheduler preempted
+        for id in self.sched.preempted.clone() {
+            self.kvs.remove(&id);
+            if let Some(s) = self.seqs.get_mut(&id) {
+                if s.state == SeqState::Running {
+                    s.preempt();
+                }
+            }
+        }
+        match plan {
+            StepPlan::Idle => Ok(StepOutcome::Idle),
+            StepPlan::Prefill { ids } => self.do_prefill(ids),
+            StepPlan::Decode { ids } => self.do_decode(ids),
+        }
+    }
+
+    fn do_prefill(&mut self, ids: Vec<u64>) -> Result<StepOutcome> {
+        // recompute semantics: preempted sequences re-prefill prompt +
+        // generated output
+        let prompts: Vec<Vec<u32>> = ids
+            .iter()
+            .map(|id| {
+                let s = &self.seqs[id];
+                let mut p = s.prompt.clone();
+                p.extend(&s.output);
+                p
+            })
+            .collect();
+        let views: Vec<&[u32]> = prompts.iter().map(|p| &p[..]).collect();
+        let res = self.dep.prefill(&views)?;
+        let cfg = self.dep.runtime.cfg.clone();
+        let vocab = cfg.vocab;
+        // build KV for each admitted sequence
+        let lens: Vec<usize> = prompts.iter().map(|p| p.len()).collect();
+        let mut new_kvs: Vec<SeqKv> =
+            ids.iter().map(|_| SeqKv::new(&cfg)).collect();
+        {
+            let mut refs: Vec<&mut SeqKv> = new_kvs.iter_mut().collect();
+            kv::fill_prefill_rows(&mut refs, &cfg, res.batch, res.seq,
+                                  &res.kv_new, &lens);
+        }
+        for ((b, id), kvseq) in ids.iter().enumerate().zip(new_kvs) {
+            self.kvs.insert(*id, kvseq);
+            let last = lens[b] - 1;
+            let row =
+                &res.logits[(b * res.seq + last) * vocab..][..vocab];
+            let seq = self.seqs.get_mut(id).unwrap();
+            seq.state = SeqState::Running;
+            let mut rng = Rng::new(
+                self.seed
+                    ^ seq.params.seed.wrapping_mul(0x9e3779b97f4a7c15)
+                    ^ (seq.id << 32)
+                    ^ seq.output.len() as u64,
+            );
+            let tok = sampler::sample(row, &seq.params, &mut rng);
+            seq.record_token(tok);
+            self.finish_if_done(*id);
+        }
+        self.metrics.prefill_steps += 1;
+        self.metrics.batch_sizes.push(ids.len() as f64);
+        self.metrics.kv_occupancy.push(self.sched.bm.occupancy());
+        Ok(StepOutcome::Prefilled(ids.len()))
+    }
+
+    fn do_decode(&mut self, ids: Vec<u64>) -> Result<StepOutcome> {
+        let cfg = self.dep.runtime.cfg.clone();
+        let vocab = cfg.vocab;
+        // KV-capacity guard: finish sequences whose cache is full
+        let mut live = vec![];
+        for id in ids {
+            let len = self.kvs[&id].len;
+            if len + 1 >= cfg.max_len {
+                self.finish(id, FinishReason::MaxTokens);
+            } else {
+                live.push(id);
+            }
+        }
+        if live.is_empty() {
+            return Ok(StepOutcome::Idle);
+        }
+        let tokens: Vec<u32> =
+            live.iter().map(|id| self.seqs[id].last_token()).collect();
+        let lens: Vec<usize> = live.iter().map(|id| self.kvs[id].len)
+            .collect();
+        let kv_refs: Vec<&SeqKv> = live.iter().map(|id| &self.kvs[id])
+            .collect();
+        let bucket = self
+            .dep
+            .runtime
+            .decode_batches()
+            .into_iter()
+            .find(|&b| b >= live.len())
+            .unwrap_or(live.len());
+        let kv_batch = kv::assemble_batch(&kv_refs, &cfg, bucket);
+        let res = self.dep.decode(&tokens, &lens, &kv_batch)?;
+        // append new KV rows
+        {
+            let mut refs: Vec<&mut SeqKv> = Vec::with_capacity(live.len());
+            // split_mut over hashmap: collect ids then fetch disjoint
+            let ptrs: Vec<*mut SeqKv> = live
+                .iter()
+                .map(|id| self.kvs.get_mut(id).unwrap() as *mut SeqKv)
+                .collect();
+            // SAFETY: ids are distinct keys, so the pointers are disjoint.
+            for p in ptrs {
+                refs.push(unsafe { &mut *p });
+            }
+            kv::append_decode_rows(&mut refs, &cfg, res.batch, &res.kv_new);
+        }
+        for (b, id) in live.iter().enumerate() {
+            let row = &res.logits[b * vocab..(b + 1) * vocab];
+            let seq = self.seqs.get_mut(id).unwrap();
+            let mut rng = Rng::new(
+                self.seed
+                    ^ seq.params.seed.wrapping_mul(0x9e3779b97f4a7c15)
+                    ^ (seq.id << 32)
+                    ^ seq.output.len() as u64,
+            );
+            let tok = sampler::sample(row, &seq.params, &mut rng);
+            seq.record_token(tok);
+            self.finish_if_done(*id);
+        }
+        self.metrics.decode_steps += 1;
+        self.metrics.batch_sizes.push(live.len() as f64);
+        self.metrics.kv_occupancy.push(self.sched.bm.occupancy());
+        Ok(StepOutcome::Decoded(live.len()))
+    }
+
+    fn finish_if_done(&mut self, id: u64) {
+        if let Some(reason) = self.seqs[&id].should_finish() {
+            self.finish(id, reason);
+        }
+    }
+
+    fn finish(&mut self, id: u64, reason: FinishReason) {
+        let mut seq = self.seqs.remove(&id).unwrap();
+        seq.finish(reason);
+        self.sched.on_finished(id);
+        self.kvs.remove(&id);
+        self.metrics.on_finished(&seq);
+        self.finished.push(seq);
+    }
+
+    /// Drive until every submitted request finishes (or `max_steps`).
+    pub fn run_to_completion(&mut self, max_steps: usize) -> Result<usize> {
+        let mut steps = 0;
+        while self.has_work() && steps < max_steps {
+            self.step()?;
+            steps += 1;
+        }
+        Ok(steps)
+    }
+}

@@ -1,0 +1,143 @@
+//! Engine metrics: throughput, time-to-first-token, inter-token latency,
+//! KV occupancy, preemption counts.
+
+use std::time::Instant;
+
+use crate::util::stats::{Accum, Summary};
+
+use super::sequence::Sequence;
+
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub started_at: Option<Instant>,
+    pub requests_in: usize,
+    pub requests_done: usize,
+    pub prompt_tokens: usize,
+    pub output_tokens: usize,
+    pub prefill_steps: usize,
+    pub decode_steps: usize,
+    pub preemptions: usize,
+    pub ttft_s: Accum,
+    pub inter_token_s: Accum,
+    pub e2e_s: Accum,
+    pub batch_sizes: Accum,
+    pub kv_occupancy: Accum,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn on_submit(&mut self, prompt_len: usize) {
+        self.started_at.get_or_insert_with(Instant::now);
+        self.requests_in += 1;
+        self.prompt_tokens += prompt_len;
+    }
+
+    pub fn on_finished(&mut self, seq: &Sequence) {
+        self.requests_done += 1;
+        self.output_tokens += seq.output.len();
+        if let (Some(f), Some(done)) = (seq.first_token_at, seq.finished_at) {
+            self.ttft_s
+                .push(f.duration_since(seq.arrived).as_secs_f64());
+            self.e2e_s
+                .push(done.duration_since(seq.arrived).as_secs_f64());
+        }
+        for w in seq.token_times.windows(2) {
+            self.inter_token_s
+                .push(w[1].duration_since(w[0]).as_secs_f64());
+        }
+        self.preemptions += seq.preemptions;
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.started_at
+            .map(|t| t.elapsed().as_secs_f64())
+            .unwrap_or(0.0)
+    }
+
+    /// Generated tokens per second of wall clock.
+    pub fn output_tok_per_s(&self) -> f64 {
+        let e = self.elapsed_s();
+        if e > 0.0 {
+            self.output_tokens as f64 / e
+        } else {
+            0.0
+        }
+    }
+
+    pub fn report(&self) -> MetricsReport {
+        MetricsReport {
+            requests_done: self.requests_done,
+            output_tokens: self.output_tokens,
+            elapsed_s: self.elapsed_s(),
+            output_tok_per_s: self.output_tok_per_s(),
+            ttft: self.ttft_s.summary(),
+            inter_token: self.inter_token_s.summary(),
+            e2e: self.e2e_s.summary(),
+            mean_batch: self.batch_sizes.mean(),
+            mean_kv_occupancy: self.kv_occupancy.mean(),
+            preemptions: self.preemptions,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct MetricsReport {
+    pub requests_done: usize,
+    pub output_tokens: usize,
+    pub elapsed_s: f64,
+    pub output_tok_per_s: f64,
+    pub ttft: Summary,
+    pub inter_token: Summary,
+    pub e2e: Summary,
+    pub mean_batch: f64,
+    pub mean_kv_occupancy: f64,
+    pub preemptions: usize,
+}
+
+impl MetricsReport {
+    pub fn print(&self, label: &str) {
+        println!(
+            "[{label}] done={} out_tokens={} elapsed={:.2}s \
+             throughput={:.1} tok/s mean_batch={:.2} kv_occ={:.0}% \
+             preempt={}",
+            self.requests_done, self.output_tokens, self.elapsed_s,
+            self.output_tok_per_s, self.mean_batch,
+            self.mean_kv_occupancy * 100.0, self.preemptions
+        );
+        println!(
+            "[{label}] ttft p50={:.1}ms p99={:.1}ms | inter-token \
+             p50={:.1}ms p99={:.1}ms | e2e p50={:.1}ms",
+            self.ttft.p50 * 1e3, self.ttft.p99 * 1e3,
+            self.inter_token.p50 * 1e3, self.inter_token.p99 * 1e3,
+            self.e2e.p50 * 1e3
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::sequence::{FinishReason, SamplingParams};
+
+    #[test]
+    fn accounting() {
+        let mut m = Metrics::new();
+        m.on_submit(10);
+        m.on_submit(5);
+        assert_eq!(m.requests_in, 2);
+        assert_eq!(m.prompt_tokens, 15);
+        let mut s = Sequence::new(1, vec![1, 2], SamplingParams::default());
+        s.record_token(3);
+        s.record_token(4);
+        s.finish(FinishReason::MaxTokens);
+        m.on_finished(&s);
+        assert_eq!(m.requests_done, 1);
+        assert_eq!(m.output_tokens, 2);
+        let r = m.report();
+        assert_eq!(r.requests_done, 1);
+        assert!(r.ttft.n == 1 && r.inter_token.n == 1);
+    }
+}

@@ -1,0 +1,19 @@
+//! The vLLM-shaped serving coordinator (Layer 3).
+//!
+//! * [`sequence`] — request/sequence state machine.
+//! * [`block_manager`] — paged KV-cache accounting: ref-counted blocks
+//!   over a fixed device pool, watermark admission, preemption support.
+//! * [`scheduler`] — continuous batching: FCFS waiting queue, prefill
+//!   admission under a token budget, decode batch formation, preemption
+//!   under KV pressure (recompute policy).
+//! * [`sampler`] — greedy / temperature / top-k sampling, seeded.
+//! * [`engine`] — the step loop tying scheduler → runtime → sampler →
+//!   sequence updates together.
+//! * [`metrics`] — TTFT / per-token latency / throughput accounting.
+
+pub mod block_manager;
+pub mod engine;
+pub mod metrics;
+pub mod sampler;
+pub mod scheduler;
+pub mod sequence;

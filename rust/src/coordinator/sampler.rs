@@ -1,0 +1,105 @@
+//! Token sampling: greedy, temperature, top-k — seeded and reproducible.
+
+use crate::util::rng::Rng;
+
+use super::sequence::SamplingParams;
+
+/// Sample the next token from a logits row.
+pub fn sample(logits: &[f32], params: &SamplingParams, rng: &mut Rng) -> u32 {
+    if params.temperature <= 0.0 {
+        return argmax(logits);
+    }
+    let k = if params.top_k == 0 {
+        logits.len()
+    } else {
+        params.top_k.min(logits.len())
+    };
+    // top-k indices by logit
+    let mut idx: Vec<u32> = (0..logits.len() as u32).collect();
+    idx.sort_unstable_by(|&a, &b| {
+        logits[b as usize].partial_cmp(&logits[a as usize]).unwrap()
+    });
+    idx.truncate(k);
+    // softmax over the kept set at the given temperature
+    let inv_t = 1.0 / params.temperature;
+    let m = logits[idx[0] as usize];
+    let weights: Vec<f64> = idx
+        .iter()
+        .map(|&i| (((logits[i as usize] - m) * inv_t) as f64).exp())
+        .collect();
+    idx[rng.weighted(&weights)]
+}
+
+pub fn argmax(logits: &[f32]) -> u32 {
+    let mut best = 0usize;
+    for (i, &v) in logits.iter().enumerate() {
+        if v > logits[best] {
+            best = i;
+        }
+    }
+    best as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params(t: f32, k: usize) -> SamplingParams {
+        SamplingParams { temperature: t, top_k: k, ..Default::default() }
+    }
+
+    #[test]
+    fn greedy_picks_max() {
+        let logits = vec![0.1, 2.0, -1.0, 1.9];
+        let mut rng = Rng::new(0);
+        assert_eq!(sample(&logits, &params(0.0, 0), &mut rng), 1);
+    }
+
+    #[test]
+    fn top_k_restricts_support() {
+        let logits = vec![5.0, 4.9, -100.0, -100.0];
+        let mut rng = Rng::new(1);
+        for _ in 0..100 {
+            let t = sample(&logits, &params(1.0, 2), &mut rng);
+            assert!(t == 0 || t == 1, "sampled {t}");
+        }
+    }
+
+    #[test]
+    fn low_temperature_concentrates() {
+        let logits = vec![1.0, 0.0];
+        let mut rng = Rng::new(2);
+        let n = 1000;
+        let zeros = (0..n)
+            .filter(|_| sample(&logits, &params(0.05, 0), &mut rng) == 0)
+            .count();
+        assert!(zeros > 990, "{zeros}");
+    }
+
+    #[test]
+    fn high_temperature_spreads() {
+        let logits = vec![1.0, 0.0];
+        let mut rng = Rng::new(3);
+        let n = 2000;
+        let ones = (0..n)
+            .filter(|_| sample(&logits, &params(50.0, 0), &mut rng) == 1)
+            .count();
+        assert!(ones > 700 && ones < 1300, "{ones}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let logits: Vec<f32> = (0..64).map(|i| ((i * 37) % 11) as f32).collect();
+        let a: Vec<u32> = {
+            let mut rng = Rng::new(7);
+            (0..20).map(|_| sample(&logits, &params(1.0, 8), &mut rng))
+                .collect()
+        };
+        let b: Vec<u32> = {
+            let mut rng = Rng::new(7);
+            (0..20).map(|_| sample(&logits, &params(1.0, 8), &mut rng))
+                .collect()
+        };
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,331 @@
+//! Continuous-batching scheduler (the vLLM policy shape):
+//!
+//! * FCFS waiting queue; prefill takes priority when new sequences can be
+//!   admitted (block-manager watermark + token budget + a free running
+//!   slot), otherwise the running set decodes one step as a batch.
+//! * KV growth for every scheduled decode is reserved up front; on
+//!   pressure the *most recently admitted* running sequence is preempted
+//!   (LIFO, vLLM's recompute policy), releasing its blocks and requeueing
+//!   it at the waiting front.
+//!
+//! The scheduler owns sequence *ids* only; token/KV state lives in the
+//! engine maps.
+
+use std::collections::{HashMap, VecDeque};
+
+use crate::config::EngineConfig;
+
+use super::block_manager::{Alloc, BlockManager};
+use super::sequence::Sequence;
+#[cfg(test)]
+use super::sequence::SeqState;
+
+/// What the engine should execute this step.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum StepPlan {
+    Prefill { ids: Vec<u64> },
+    Decode { ids: Vec<u64> },
+    Idle,
+}
+
+#[derive(Debug)]
+pub struct Scheduler {
+    pub cfg: EngineConfig,
+    pub bm: BlockManager,
+    waiting: VecDeque<u64>,
+    running: Vec<u64>, // admission order; preemption pops from the back
+    /// ids preempted this step (engine must drop their KV).
+    pub preempted: Vec<u64>,
+}
+
+impl Scheduler {
+    pub fn new(cfg: EngineConfig, bm: BlockManager) -> Scheduler {
+        Scheduler { cfg, bm, waiting: VecDeque::new(), running: vec![],
+                    preempted: vec![] }
+    }
+
+    pub fn add(&mut self, id: u64) {
+        self.waiting.push_back(id);
+    }
+
+    pub fn waiting_len(&self) -> usize {
+        self.waiting.len()
+    }
+    pub fn running_len(&self) -> usize {
+        self.running.len()
+    }
+    pub fn running_ids(&self) -> &[u64] {
+        &self.running
+    }
+    pub fn has_work(&self) -> bool {
+        !self.waiting.is_empty() || !self.running.is_empty()
+    }
+
+    /// Remove a finished sequence and release its blocks.
+    pub fn on_finished(&mut self, id: u64) {
+        self.running.retain(|&r| r != id);
+        self.waiting.retain(|&r| r != id);
+        self.bm.release(id);
+    }
+
+    /// Decide the next step. `seqs` provides prompt/context lengths.
+    pub fn plan(&mut self, seqs: &HashMap<u64, Sequence>) -> StepPlan {
+        self.preempted.clear();
+        // ---- try prefill admission (vLLM prefers draining the queue)
+        let max_prefill_batch = self
+            .cfg
+            .prefill_buckets
+            .iter()
+            .map(|&(b, _)| b)
+            .max()
+            .unwrap_or(1);
+        let slots = self.cfg.max_running.saturating_sub(self.running.len());
+        if !self.waiting.is_empty() && slots > 0 {
+            let mut ids = vec![];
+            let mut tokens = 0usize;
+            while let Some(&id) = self.waiting.front() {
+                if ids.len() >= max_prefill_batch.min(slots) {
+                    break;
+                }
+                let seq = &seqs[&id];
+                let need = seq.context_len();
+                if !ids.is_empty()
+                    && tokens + need > self.cfg.max_batch_tokens
+                {
+                    break;
+                }
+                if !self.bm.can_admit(need) {
+                    break; // FCFS head-of-line: don't skip ahead
+                }
+                assert_eq!(self.bm.allocate(id, need), Alloc::Ok);
+                tokens += need;
+                ids.push(id);
+                self.waiting.pop_front();
+            }
+            if !ids.is_empty() {
+                self.running.extend(&ids);
+                return StepPlan::Prefill { ids };
+            }
+        }
+        // ---- decode the running set (reserve growth; preempt on pressure)
+        if self.running.is_empty() {
+            return StepPlan::Idle;
+        }
+        let max_decode = self
+            .cfg
+            .decode_batches
+            .iter()
+            .copied()
+            .max()
+            .unwrap_or(1);
+        // reserve +1 token for each scheduled sequence, preempting from
+        // the back until everything scheduled fits
+        loop {
+            let batch: Vec<u64> =
+                self.running.iter().copied().take(max_decode).collect();
+            let mut ok = true;
+            for &id in &batch {
+                let ctx = seqs[&id].context_len();
+                if self.bm.append_token(id, ctx + 1) == Alloc::NoSpace {
+                    ok = false;
+                    break;
+                }
+            }
+            if ok {
+                if batch.is_empty() {
+                    return StepPlan::Idle;
+                }
+                return StepPlan::Decode { ids: batch };
+            }
+            // preempt the most recent admission (never the oldest alone)
+            let victim = *self.running.last().unwrap();
+            if self.running.len() == 1 {
+                // cannot make progress: the single sequence exceeds the
+                // pool; the engine will finish it with an error
+                self.preempted.push(victim);
+                self.running.clear();
+                self.bm.release(victim);
+                return StepPlan::Idle;
+            }
+            self.running.pop();
+            self.bm.release(victim);
+            self.waiting.push_front(victim);
+            self.preempted.push(victim);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::sequence::SamplingParams;
+    use crate::util::prop;
+
+    fn mk_seqs(lens: &[usize]) -> HashMap<u64, Sequence> {
+        lens.iter()
+            .enumerate()
+            .map(|(i, &l)| {
+                (i as u64,
+                 Sequence::new(i as u64, vec![1; l],
+                               SamplingParams::default()))
+            })
+            .collect()
+    }
+
+    fn cfg() -> EngineConfig {
+        EngineConfig {
+            max_running: 4,
+            max_batch_tokens: 64,
+            decode_batches: vec![1, 2, 4],
+            prefill_buckets: vec![(1, 32), (4, 32)],
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn prefill_first_then_decode() {
+        let seqs = mk_seqs(&[8, 8, 8]);
+        let mut s = Scheduler::new(cfg(), BlockManager::new(16, 64));
+        for id in 0..3 {
+            s.add(id);
+        }
+        match s.plan(&seqs) {
+            StepPlan::Prefill { ids } => assert_eq!(ids, vec![0, 1, 2]),
+            p => panic!("want prefill, got {p:?}"),
+        }
+        match s.plan(&seqs) {
+            StepPlan::Decode { ids } => assert_eq!(ids, vec![0, 1, 2]),
+            p => panic!("want decode, got {p:?}"),
+        }
+    }
+
+    #[test]
+    fn token_budget_limits_prefill_batch() {
+        let seqs = mk_seqs(&[30, 30, 30]);
+        let mut s = Scheduler::new(cfg(), BlockManager::new(16, 64));
+        for id in 0..3 {
+            s.add(id);
+        }
+        match s.plan(&seqs) {
+            // 30 + 30 <= 64 but +30 more would exceed
+            StepPlan::Prefill { ids } => assert_eq!(ids.len(), 2),
+            p => panic!("{p:?}"),
+        }
+    }
+
+    #[test]
+    fn fcfs_no_starvation_head_of_line() {
+        // a huge head request blocks admission rather than being skipped
+        let seqs = mk_seqs(&[1000, 2]);
+        let mut s = Scheduler::new(cfg(), BlockManager::new(16, 8));
+        s.add(0);
+        s.add(1);
+        assert_eq!(s.plan(&seqs), StepPlan::Idle);
+        assert_eq!(s.waiting_len(), 2);
+    }
+
+    #[test]
+    fn preemption_lifo_under_pressure() {
+        let mut seqs = mk_seqs(&[16, 16]);
+        let mut s = Scheduler::new(cfg(), BlockManager::new(4, 9));
+        s.bm.watermark_blocks = 0;
+        s.add(0);
+        s.add(1);
+        // both admitted: 4 + 4 = 8 of 9 blocks
+        match s.plan(&seqs) {
+            StepPlan::Prefill { ids } => assert_eq!(ids.len(), 2),
+            p => panic!("{p:?}"),
+        }
+        // grow both: each wants a new block at ctx 17 -> only 1 free
+        for q in seqs.values_mut() {
+            q.state = SeqState::Running;
+        }
+        match s.plan(&seqs) {
+            StepPlan::Decode { ids } => {
+                assert_eq!(ids, vec![0]); // seq 1 preempted (LIFO)
+            }
+            p => panic!("{p:?}"),
+        }
+        assert_eq!(s.preempted, vec![1]);
+        assert_eq!(s.waiting_len(), 1);
+        assert!(s.bm.check_conservation());
+    }
+
+    #[test]
+    fn finished_releases_blocks() {
+        let seqs = mk_seqs(&[8]);
+        let mut s = Scheduler::new(cfg(), BlockManager::new(16, 8));
+        s.add(0);
+        s.plan(&seqs);
+        assert!(s.bm.holds(0) > 0);
+        s.on_finished(0);
+        assert_eq!(s.bm.holds(0), 0);
+        assert!(!s.has_work());
+    }
+
+    #[test]
+    fn random_workload_invariants() {
+        prop::check("scheduler invariants", 15, |rng| {
+            let mut seqs = HashMap::new();
+            let mut s = Scheduler::new(
+                EngineConfig {
+                    max_running: 1 + rng.below(6),
+                    max_batch_tokens: 32 + rng.below(96),
+                    decode_batches: vec![1, 2, 4, 8],
+                    prefill_buckets: vec![(4, 32)],
+                    ..Default::default()
+                },
+                BlockManager::new(1 + rng.below(8), 16 + rng.below(64)),
+            );
+            let mut next = 0u64;
+            for _ in 0..120 {
+                if rng.below(3) == 0 {
+                    let l = 1 + rng.below(24);
+                    seqs.insert(
+                        next,
+                        Sequence::new(next, vec![1; l],
+                                      SamplingParams::default()),
+                    );
+                    s.add(next);
+                    next += 1;
+                }
+                match s.plan(&seqs) {
+                    StepPlan::Prefill { ids } => {
+                        assert!(!ids.is_empty());
+                        for id in ids {
+                            seqs.get_mut(&id).unwrap().state =
+                                SeqState::Running;
+                        }
+                    }
+                    StepPlan::Decode { ids } => {
+                        assert!(!ids.is_empty());
+                        // running set ⊆ allocated set
+                        for &id in &ids {
+                            assert!(s.bm.holds(id) > 0);
+                            let q = seqs.get_mut(&id).unwrap();
+                            q.record_token(7);
+                            // randomly finish
+                            if rng.below(8) == 0 {
+                                q.finish(
+                                    super::super::sequence::FinishReason
+                                        ::MaxTokens,
+                                );
+                                s.on_finished(id);
+                            }
+                        }
+                    }
+                    StepPlan::Idle => {}
+                }
+                for &id in &s.preempted {
+                    if let Some(q) = seqs.get_mut(&id) {
+                        if q.state == SeqState::Running {
+                            q.preempt();
+                        }
+                    }
+                }
+                assert!(s.bm.check_conservation());
+                assert!(s.running_len() <= s.cfg.max_running);
+            }
+        });
+    }
+}

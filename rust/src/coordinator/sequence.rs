@@ -1,0 +1,186 @@
+//! Request / sequence state machine.
+
+use std::time::Instant;
+
+/// Lifecycle of a request inside the engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SeqState {
+    /// In the waiting queue (not yet prefillled, or preempted).
+    Waiting,
+    /// In the running set (KV resident, decoding).
+    Running,
+    /// Finished (EOS / max tokens); output available.
+    Finished,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishReason {
+    MaxTokens,
+    Eos,
+    /// Prompt was longer than the model's max_len budget.
+    PromptTooLong,
+}
+
+/// Sampling parameters for one request.
+#[derive(Debug, Clone)]
+pub struct SamplingParams {
+    pub max_new_tokens: usize,
+    pub temperature: f32,
+    pub top_k: usize,
+    /// Token id treated as end-of-sequence (vocab-dependent); None = none.
+    pub eos: Option<u32>,
+    pub seed: u64,
+}
+
+impl Default for SamplingParams {
+    fn default() -> Self {
+        SamplingParams {
+            max_new_tokens: 32,
+            temperature: 0.0, // greedy
+            top_k: 0,
+            eos: None,
+            seed: 0,
+        }
+    }
+}
+
+/// One request tracked end-to-end.
+#[derive(Debug, Clone)]
+pub struct Sequence {
+    pub id: u64,
+    pub prompt: Vec<u32>,
+    pub output: Vec<u32>,
+    pub params: SamplingParams,
+    pub state: SeqState,
+    pub finish: Option<FinishReason>,
+    /// Times a preemption evicted this sequence (recompute policy).
+    pub preemptions: usize,
+    pub arrived: Instant,
+    pub first_token_at: Option<Instant>,
+    pub finished_at: Option<Instant>,
+    /// Per-output-token completion times (for latency percentiles).
+    pub token_times: Vec<Instant>,
+}
+
+impl Sequence {
+    pub fn new(id: u64, prompt: Vec<u32>, params: SamplingParams)
+        -> Sequence {
+        Sequence {
+            id,
+            prompt,
+            output: Vec::new(),
+            params,
+            state: SeqState::Waiting,
+            finish: None,
+            preemptions: 0,
+            arrived: Instant::now(),
+            first_token_at: None,
+            finished_at: None,
+            token_times: Vec::new(),
+        }
+    }
+
+    /// Total tokens with KV resident once running (prompt + generated).
+    pub fn context_len(&self) -> usize {
+        self.prompt.len() + self.output.len()
+    }
+
+    /// The token to feed the next decode step (last generated, or last
+    /// prompt token right after prefill).
+    pub fn last_token(&self) -> u32 {
+        *self
+            .output
+            .last()
+            .or_else(|| self.prompt.last())
+            .expect("empty sequence")
+    }
+
+    pub fn record_token(&mut self, tok: u32) {
+        let now = Instant::now();
+        if self.output.is_empty() {
+            self.first_token_at = Some(now);
+        }
+        self.output.push(tok);
+        self.token_times.push(now);
+    }
+
+    pub fn should_finish(&self) -> Option<FinishReason> {
+        if let (Some(eos), Some(&last)) =
+            (self.params.eos, self.output.last())
+        {
+            if last == eos {
+                return Some(FinishReason::Eos);
+            }
+        }
+        if self.output.len() >= self.params.max_new_tokens {
+            return Some(FinishReason::MaxTokens);
+        }
+        None
+    }
+
+    pub fn finish(&mut self, reason: FinishReason) {
+        self.state = SeqState::Finished;
+        self.finish = Some(reason);
+        self.finished_at = Some(Instant::now());
+    }
+
+    /// Drop generated state for recompute-preemption: the prompt is
+    /// re-extended with the tokens generated so far so no output is lost.
+    pub fn preempt(&mut self) {
+        assert_eq!(self.state, SeqState::Running);
+        self.state = SeqState::Waiting;
+        self.preemptions += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seq(prompt: &[u32], max_new: usize) -> Sequence {
+        Sequence::new(
+            1,
+            prompt.to_vec(),
+            SamplingParams { max_new_tokens: max_new, ..Default::default() },
+        )
+    }
+
+    #[test]
+    fn lifecycle() {
+        let mut s = seq(&[1, 2, 3], 2);
+        assert_eq!(s.state, SeqState::Waiting);
+        assert_eq!(s.last_token(), 3);
+        s.state = SeqState::Running;
+        s.record_token(7);
+        assert_eq!(s.last_token(), 7);
+        assert!(s.first_token_at.is_some());
+        assert!(s.should_finish().is_none());
+        s.record_token(8);
+        assert_eq!(s.should_finish(), Some(FinishReason::MaxTokens));
+        s.finish(FinishReason::MaxTokens);
+        assert_eq!(s.state, SeqState::Finished);
+        assert_eq!(s.context_len(), 5);
+    }
+
+    #[test]
+    fn eos_detection() {
+        let mut s = seq(&[1], 10);
+        s.params.eos = Some(42);
+        s.state = SeqState::Running;
+        s.record_token(5);
+        assert!(s.should_finish().is_none());
+        s.record_token(42);
+        assert_eq!(s.should_finish(), Some(FinishReason::Eos));
+    }
+
+    #[test]
+    fn preemption_counts() {
+        let mut s = seq(&[1, 2], 5);
+        s.state = SeqState::Running;
+        s.record_token(9);
+        s.preempt();
+        assert_eq!(s.state, SeqState::Waiting);
+        assert_eq!(s.preemptions, 1);
+        assert_eq!(s.output, vec![9]); // output preserved for recompute
+    }
+}

@@ -1,0 +1,198 @@
+//! Synthetic text corpora with per-domain statistics.
+//!
+//! Each generator is seeded and deterministic. The domains deliberately
+//! differ in identifier pools, punctuation density and line structure so
+//! their *token and activation statistics* differ — which is all the
+//! calibration-sensitivity experiment (paper Table 3) depends on.
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Domain {
+    CodePython,
+    CodeJava,
+    CodeGo,
+    CodeCpp,
+    PileProse,
+    C4Web,
+}
+
+impl Domain {
+    pub fn all() -> [Domain; 6] {
+        [Domain::CodePython, Domain::CodeJava, Domain::CodeGo,
+         Domain::CodeCpp, Domain::PileProse, Domain::C4Web]
+    }
+    pub fn code_domains() -> [Domain; 4] {
+        [Domain::CodePython, Domain::CodeJava, Domain::CodeGo,
+         Domain::CodeCpp]
+    }
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Domain::CodePython => "python",
+            Domain::CodeJava => "java",
+            Domain::CodeGo => "go",
+            Domain::CodeCpp => "cpp",
+            Domain::PileProse => "pile",
+            Domain::C4Web => "c4",
+        }
+    }
+}
+
+const IDENTS: [&str; 16] = [
+    "total", "count", "value", "items", "result", "index", "buffer",
+    "score", "node", "queue", "depth", "width", "cache", "state", "left",
+    "right",
+];
+const VERBS: [&str; 10] = [
+    "compute", "merge", "filter", "update", "scan", "reduce", "split",
+    "encode", "decode", "sort",
+];
+const NOUNS: [&str; 12] = [
+    "model", "array", "string", "number", "window", "matrix", "graph",
+    "stream", "record", "table", "vector", "batch",
+];
+const PROSE_WORDS: [&str; 20] = [
+    "the", "of", "and", "research", "system", "language", "data", "over",
+    "many", "results", "shows", "large", "field", "method", "first",
+    "between", "known", "century", "theory", "work",
+];
+
+/// Generate one document of roughly `target_chars` characters.
+pub fn document(domain: Domain, rng: &mut Rng, target_chars: usize)
+    -> String {
+    let mut s = String::new();
+    while s.len() < target_chars {
+        match domain {
+            Domain::CodePython => {
+                let f = VERBS[rng.below(VERBS.len())];
+                let a = IDENTS[rng.below(IDENTS.len())];
+                let b = IDENTS[rng.below(IDENTS.len())];
+                s.push_str(&format!(
+                    "def {f}_{a}({a}, {b}):\n    {b} = {a} + \
+                     {n}\n    return {b} * {a}\n\n",
+                    n = rng.below(100)
+                ));
+            }
+            Domain::CodeJava => {
+                let f = VERBS[rng.below(VERBS.len())];
+                let a = IDENTS[rng.below(IDENTS.len())];
+                s.push_str(&format!(
+                    "public static int {f}{A}(int {a}) {{\n    int x = \
+                     {a} * {n};\n    return x + {a};\n}}\n\n",
+                    A = capitalize(a),
+                    n = rng.below(100)
+                ));
+            }
+            Domain::CodeGo => {
+                let f = VERBS[rng.below(VERBS.len())];
+                let a = IDENTS[rng.below(IDENTS.len())];
+                s.push_str(&format!(
+                    "func {f}{A}({a} int) int {{\n\tif {a} > {n} {{\n\t\t\
+                     return {a}\n\t}}\n\treturn {a} * 2\n}}\n\n",
+                    A = capitalize(a),
+                    n = rng.below(100)
+                ));
+            }
+            Domain::CodeCpp => {
+                let f = VERBS[rng.below(VERBS.len())];
+                let a = IDENTS[rng.below(IDENTS.len())];
+                s.push_str(&format!(
+                    "int {f}_{a}(std::vector<int>& {a}) {{\n    int acc = \
+                     {n};\n    for (auto v : {a}) acc += v;\n    return \
+                     acc;\n}}\n\n",
+                    n = rng.below(100)
+                ));
+            }
+            Domain::PileProse => {
+                for _ in 0..12 {
+                    s.push_str(PROSE_WORDS[rng.below(PROSE_WORDS.len())]);
+                    s.push(' ');
+                }
+                s.pop();
+                s.push_str(". ");
+            }
+            Domain::C4Web => {
+                let n = NOUNS[rng.below(NOUNS.len())];
+                let v = VERBS[rng.below(VERBS.len())];
+                s.push_str(&format!(
+                    "Click here to {v} your {n}! Best {n} deals — \
+                     {m}% off. <a href=\"/{n}/{v}\">{n}</a> | ",
+                    m = 5 + rng.below(90)
+                ));
+            }
+        }
+    }
+    s.truncate(target_chars);
+    s
+}
+
+/// A corpus: `docs` documents of `chars` characters each.
+pub fn corpus(domain: Domain, seed: u64, docs: usize, chars: usize)
+    -> Vec<String> {
+    let mut rng = Rng::new(seed ^ domain_tag(domain));
+    (0..docs).map(|_| document(domain, &mut rng, chars)).collect()
+}
+
+/// Combined training text for the tokenizer (all domains, balanced).
+pub fn tokenizer_training_text(seed: u64, chars_per_domain: usize)
+    -> String {
+    let mut out = String::new();
+    for d in Domain::all() {
+        let mut rng = Rng::new(seed ^ domain_tag(d));
+        out.push_str(&document(d, &mut rng, chars_per_domain));
+        out.push('\n');
+    }
+    out
+}
+
+fn domain_tag(d: Domain) -> u64 {
+    match d {
+        Domain::CodePython => 0x1001,
+        Domain::CodeJava => 0x1002,
+        Domain::CodeGo => 0x1003,
+        Domain::CodeCpp => 0x1004,
+        Domain::PileProse => 0x2001,
+        Domain::C4Web => 0x3001,
+    }
+}
+
+fn capitalize(s: &str) -> String {
+    let mut c = s.chars();
+    match c.next() {
+        Some(f) => f.to_uppercase().collect::<String>() + c.as_str(),
+        None => String::new(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        assert_eq!(corpus(Domain::CodePython, 1, 3, 200),
+                   corpus(Domain::CodePython, 1, 3, 200));
+        assert_ne!(corpus(Domain::CodePython, 1, 1, 200),
+                   corpus(Domain::CodePython, 2, 1, 200));
+    }
+
+    #[test]
+    fn domains_differ() {
+        let py = document(Domain::CodePython, &mut Rng::new(0), 300);
+        let go = document(Domain::CodeGo, &mut Rng::new(0), 300);
+        let pr = document(Domain::PileProse, &mut Rng::new(0), 300);
+        assert!(py.contains("def "));
+        assert!(go.contains("func "));
+        assert!(!pr.contains("return"));
+        assert_ne!(py, go);
+    }
+
+    #[test]
+    fn sizes_respected() {
+        for d in Domain::all() {
+            let c = corpus(d, 0, 4, 150);
+            assert_eq!(c.len(), 4);
+            assert!(c.iter().all(|s| s.len() == 150));
+        }
+    }
+}

@@ -1,0 +1,15 @@
+//! Synthetic datasets and workload traces (DESIGN.md §5 substitutions for
+//! HumanEval / Pile / C4 / the paper's online traffic).
+//!
+//! * [`corpus`] — six generated text domains with distinct token/channel
+//!   statistics: four code languages (Python/Java/Go/C++ for the Table 2
+//!   multilingual setting), pile-like prose and c4-like web text (the
+//!   Table 3 calibration-set study).
+//! * [`tasks`] — a fixed 164-prompt task set mirroring HumanEval's size
+//!   and code-description style (calibration + pass@1-proxy evaluation).
+//! * [`trace`] — Poisson-arrival synthetic traffic and a deterministic
+//!   replayed "online" trace (Fig. 7a/7b workloads).
+
+pub mod corpus;
+pub mod tasks;
+pub mod trace;

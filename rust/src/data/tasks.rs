@@ -1,0 +1,89 @@
+//! The evaluation task set: 164 fixed code-description prompts (mirroring
+//! HumanEval's 164 problem descriptions), per code domain. Used both as
+//! the paper's preferred calibration set and as the pass@1-proxy eval set.
+
+use crate::util::rng::Rng;
+
+use super::corpus::Domain;
+
+pub const NUM_TASKS: usize = 164;
+
+/// One evaluation task: a prompt the model completes greedily.
+#[derive(Debug, Clone)]
+pub struct Task {
+    pub id: usize,
+    pub domain: Domain,
+    pub prompt: String,
+}
+
+const TOPICS: [&str; 12] = [
+    "reverse a string", "sum a list of integers", "find the maximum",
+    "check for palindromes", "merge two sorted arrays",
+    "count vowels in a word", "compute a factorial",
+    "filter even numbers", "flatten a nested list",
+    "deduplicate elements", "binary search a value",
+    "rotate an array left",
+];
+
+/// The fixed task set for a domain (deterministic; ids 0..164).
+pub fn task_set(domain: Domain, seed: u64) -> Vec<Task> {
+    let mut rng = Rng::new(seed ^ 0x7a5c);
+    (0..NUM_TASKS)
+        .map(|id| {
+            let topic = TOPICS[(id + rng.below(3)) % TOPICS.len()];
+            let lang = domain.as_str();
+            let prompt = format!(
+                "// task {id:03}\n// Write a {lang} function to {topic}.\n\
+                 // It should handle empty input and large values.\n"
+            );
+            Task { id, domain, prompt }
+        })
+        .collect()
+}
+
+/// Tokenized prompts for a task set, capped to `max_tokens` each.
+pub fn tokenized_prompts(tasks: &[Task], tok: &crate::tokenizer::Tokenizer,
+                         vocab: usize, max_tokens: usize) -> Vec<Vec<u32>> {
+    tasks
+        .iter()
+        .map(|t| {
+            let mut ids = tok.encode_for_model(&t.prompt, vocab);
+            ids.truncate(max_tokens);
+            if ids.is_empty() {
+                ids.push(1);
+            }
+            ids
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn has_164_tasks_like_humaneval() {
+        let t = task_set(Domain::CodePython, 0);
+        assert_eq!(t.len(), NUM_TASKS);
+        assert_eq!(t[0].id, 0);
+        assert!(t[10].prompt.contains("python"));
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = task_set(Domain::CodeGo, 5);
+        let b = task_set(Domain::CodeGo, 5);
+        assert_eq!(a[33].prompt, b[33].prompt);
+    }
+
+    #[test]
+    fn tokenization_capped() {
+        let tok = crate::tokenizer::Tokenizer::train(
+            "def f(): return 1\n", 280);
+        let tasks = task_set(Domain::CodePython, 0);
+        let prompts = tokenized_prompts(&tasks[..8], &tok, 256, 16);
+        assert_eq!(prompts.len(), 8);
+        assert!(prompts.iter().all(|p| p.len() <= 16 && !p.is_empty()));
+        assert!(prompts.iter().flatten().all(|&t| t < 256));
+    }
+}

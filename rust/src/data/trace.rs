@@ -1,0 +1,95 @@
+//! Workload traces: Poisson-arrival synthetic traffic (paper §3.3 "use
+//! Poisson process to synthesize the request arrival times") and a
+//! deterministic heavy-tailed "online replay" trace standing in for the
+//! paper's recorded production traffic (Fig. 7b).
+
+use crate::util::rng::Rng;
+
+/// One request in a trace.
+#[derive(Debug, Clone)]
+pub struct TraceRequest {
+    /// Arrival offset from trace start, seconds.
+    pub at_s: f64,
+    pub prompt_tokens: usize,
+    pub output_tokens: usize,
+}
+
+/// Poisson arrivals at `rate_per_s`, fixed prompt/output lengths
+/// (the Fig. 7a grid sweeps these lengths).
+pub fn poisson(seed: u64, n: usize, rate_per_s: f64, prompt_tokens: usize,
+               output_tokens: usize) -> Vec<TraceRequest> {
+    let mut rng = Rng::new(seed);
+    let mut t = 0.0;
+    (0..n)
+        .map(|_| {
+            t += rng.exponential(rate_per_s);
+            TraceRequest { at_s: t, prompt_tokens, output_tokens }
+        })
+        .collect()
+}
+
+/// "Online replay": bursty arrivals (exponential bursts with pauses),
+/// log-normal-ish prompt lengths, geometric output lengths — the shape of
+/// interactive coding traffic.
+pub fn online_replay(seed: u64, n: usize, mean_rate_per_s: f64,
+                     max_prompt: usize, max_output: usize)
+    -> Vec<TraceRequest> {
+    let mut rng = Rng::new(seed ^ 0x0417_11e5);
+    let mut t = 0.0;
+    let mut out = Vec::with_capacity(n);
+    while out.len() < n {
+        // burst of 1-4 requests then a pause
+        let burst = 1 + rng.below(4);
+        for _ in 0..burst.min(n - out.len()) {
+            t += rng.exponential(mean_rate_per_s * 4.0);
+            let prompt = (2.0f64.powf(2.0 + 3.0 * rng.f64())) as usize;
+            let output = 1 + (-(rng.f64().max(1e-9)).ln() * 8.0) as usize;
+            out.push(TraceRequest {
+                at_s: t,
+                prompt_tokens: prompt.clamp(2, max_prompt),
+                output_tokens: output.clamp(1, max_output),
+            });
+        }
+        t += rng.exponential(mean_rate_per_s / 2.0);
+    }
+    out
+}
+
+/// Materialize token ids for a trace request from a token corpus stream.
+pub fn prompt_tokens(rng: &mut Rng, len: usize, vocab: usize) -> Vec<u32> {
+    (0..len).map(|_| rng.below(vocab.saturating_sub(1)).max(1) as u32)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_rate_approximately_right() {
+        let tr = poisson(0, 4000, 10.0, 8, 8);
+        let span = tr.last().unwrap().at_s;
+        let rate = tr.len() as f64 / span;
+        assert!((rate - 10.0).abs() < 1.0, "rate {rate}");
+        // arrivals are sorted
+        assert!(tr.windows(2).all(|w| w[0].at_s <= w[1].at_s));
+    }
+
+    #[test]
+    fn replay_bounded_and_deterministic() {
+        let a = online_replay(7, 100, 5.0, 64, 32);
+        let b = online_replay(7, 100, 5.0, 64, 32);
+        assert_eq!(a.len(), 100);
+        assert!(a.iter().all(|r| r.prompt_tokens <= 64
+            && r.output_tokens <= 32 && r.output_tokens >= 1));
+        assert_eq!(a[50].prompt_tokens, b[50].prompt_tokens);
+    }
+
+    #[test]
+    fn replay_lengths_vary() {
+        let tr = online_replay(1, 200, 5.0, 128, 32);
+        let lens: std::collections::HashSet<usize> =
+            tr.iter().map(|r| r.prompt_tokens).collect();
+        assert!(lens.len() > 5, "prompt lengths too uniform");
+    }
+}

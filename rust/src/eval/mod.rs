@@ -1,0 +1,163 @@
+//! Accuracy evaluation: the pass@1 proxy and token-level agreement
+//! (DESIGN.md §5 — the stand-in for HumanEval pass@1 on untrained-weight
+//! models; "lossless" ⇔ the quantized model reproduces the FP16 model).
+//!
+//! Two complementary metrics against the FP16 reference:
+//! * **exact match** — greedy generations identical over the task set
+//!   (the pass@1-shaped, all-or-nothing signal);
+//! * **token agreement** — teacher-forced next-token argmax agreement
+//!   over eval prompts (smooth, per-position signal).
+//!
+//! Both run on the pure-Rust reference forward so they do not require
+//! artifacts; engine-level generation equality is covered by the
+//! integration tests.
+
+use crate::config::ModelConfig;
+use crate::coordinator::sampler::argmax;
+use crate::model::store::WeightStore;
+use crate::reffwd::{NoHook, RefModel};
+use crate::util::threadpool::parallel_map;
+
+#[derive(Debug, Clone, Default)]
+pub struct EvalReport {
+    /// Fraction of prompts whose greedy generation matches FP16 exactly.
+    pub exact_match: f64,
+    /// Teacher-forced next-token argmax agreement.
+    pub token_agreement: f64,
+    /// Mean negative log-likelihood the candidate assigns to the
+    /// reference model's greedy tokens (cross-model perplexity proxy).
+    pub nll: f64,
+    pub n_prompts: usize,
+}
+
+/// Greedy-generate `max_new` tokens from `prompt`.
+pub fn greedy_generate(cfg: &ModelConfig, w: &WeightStore, prompt: &[u32],
+                       max_new: usize) -> Vec<u32> {
+    let m = RefModel::new(cfg, w);
+    let capped = &prompt[..prompt.len().min(cfg.max_len - max_new - 1)];
+    let (logits, mut cache) = m.prefill(capped, &mut NoHook);
+    let mut out = vec![argmax(logits.row(capped.len() - 1))];
+    for _ in 1..max_new {
+        let lg = m.decode(*out.last().unwrap(), &mut cache, &mut NoHook);
+        out.push(argmax(&lg));
+    }
+    out
+}
+
+/// Compare `candidate` against `reference` over `prompts`.
+pub fn evaluate(cfg: &ModelConfig, reference: &WeightStore,
+                candidate: &WeightStore, prompts: &[Vec<u32>],
+                max_new: usize) -> EvalReport {
+    let n = prompts.len();
+    let results = parallel_map(n, |i| {
+        let p = &prompts[i];
+        // --- greedy exact match
+        let want = greedy_generate(cfg, reference, p, max_new);
+        let got = greedy_generate(cfg, candidate, p, max_new);
+        let exact = (want == got) as u32;
+        // --- teacher-forced agreement + NLL along the reference path
+        let mut forced = p.clone();
+        forced.truncate(cfg.max_len - 1);
+        forced.extend(&want);
+        forced.truncate(cfg.max_len - 1);
+        let mr = RefModel::new(cfg, reference);
+        let mc = RefModel::new(cfg, candidate);
+        let (lr, _) = mr.prefill(&forced, &mut NoHook);
+        let (lc, _) = mc.prefill(&forced, &mut NoHook);
+        let mut agree = 0usize;
+        let mut total = 0usize;
+        let mut nll = 0.0f64;
+        for pos in 0..forced.len() - 1 {
+            let a = argmax(lr.row(pos));
+            let b = argmax(lc.row(pos));
+            agree += (a == b) as usize;
+            total += 1;
+            // candidate's NLL of the reference's argmax token
+            let row = lc.row(pos);
+            let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let z: f64 = row.iter().map(|&x| ((x - m) as f64).exp()).sum();
+            nll -= (((row[a as usize] - m) as f64).exp() / z).ln();
+        }
+        (exact, agree, total, nll)
+    });
+    let mut exact = 0u32;
+    let mut agree = 0usize;
+    let mut total = 0usize;
+    let mut nll = 0.0f64;
+    for (e, a, t, l) in results {
+        exact += e;
+        agree += a;
+        total += t;
+        nll += l;
+    }
+    EvalReport {
+        exact_match: exact as f64 / n.max(1) as f64,
+        token_agreement: agree as f64 / total.max(1) as f64,
+        nll: nll / total.max(1) as f64,
+        n_prompts: n,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{QuantConfig, QuantMethod};
+    use crate::model::init::{init_weights, InitSpec};
+    use crate::quant::{calib, pipeline};
+
+    fn prompts(n: usize, len: usize, vocab: usize) -> Vec<Vec<u32>> {
+        (0..n)
+            .map(|i| {
+                (0..len).map(|t| ((i * 131 + t * 29) % vocab) as u32)
+                    .collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn reference_vs_itself_is_perfect() {
+        let cfg = ModelConfig::tiny();
+        let w = init_weights(&cfg, &InitSpec::default());
+        let r = evaluate(&cfg, &w, &w, &prompts(4, 8, cfg.vocab), 4);
+        assert_eq!(r.exact_match, 1.0);
+        assert_eq!(r.token_agreement, 1.0);
+        assert_eq!(r.n_prompts, 4);
+    }
+
+    #[test]
+    fn method_ordering_sqplus_beats_rtn() {
+        // the Table-1 shape at tiny scale. Argmax agreement over a few
+        // short prompts is too noisy for a single-seed unit test, so the
+        // asserted signal is the smooth one: the quantized model's NLL of
+        // the reference trajectory. (The full argmax-agreement tables are
+        // regenerated by `cargo bench --bench table1_accuracy` at small/
+        // base scale with 164 prompts.)
+        let cfg = ModelConfig::tiny();
+        let w = init_weights(&cfg, &InitSpec::with_outliers(0, 6, 60.0));
+        let cal_prompts = prompts(4, 10, cfg.vocab);
+        let cal = calib::collect(&cfg, &w, &cal_prompts, 24, 0);
+        let qcfg = QuantConfig::default();
+        let ev_prompts = prompts(12, 10, cfg.vocab);
+        let rtn = pipeline::quantize_model(&cfg, &w, &cal,
+                                           QuantMethod::Rtn, &qcfg);
+        let sqp = pipeline::quantize_model(
+            &cfg, &w, &cal, QuantMethod::SmoothQuantPlus, &qcfg);
+        let r_rtn = evaluate(&cfg, &w, &rtn.effective, &ev_prompts, 4);
+        let r_sqp = evaluate(&cfg, &w, &sqp.effective, &ev_prompts, 4);
+        assert!(
+            r_sqp.nll <= r_rtn.nll,
+            "SQ+ nll {} !<= RTN nll {}",
+            r_sqp.nll,
+            r_rtn.nll
+        );
+    }
+
+    #[test]
+    fn greedy_generate_len() {
+        let cfg = ModelConfig::tiny();
+        let w = init_weights(&cfg, &InitSpec::benign(0));
+        let out = greedy_generate(&cfg, &w, &[1, 2, 3], 5);
+        assert_eq!(out.len(), 5);
+        assert!(out.iter().all(|&t| (t as usize) < cfg.vocab));
+    }
+}

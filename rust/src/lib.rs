@@ -1,0 +1,30 @@
+//! # SmoothQuant+ — 4-bit post-training weight quantization for LLM serving
+//!
+//! Reproduction of *SmoothQuant+: Accurate and Efficient 4-bit Post-Training
+//! Weight Quantization for LLM* (ZTE, 2023) as a three-layer Rust + JAX +
+//! Pallas stack:
+//!
+//! * **L3 (this crate)** — a vLLM-shaped serving engine (continuous
+//!   batching, paged KV accounting, preemption) plus the full quantization
+//!   library: group-wise INT4 RTN, SmoothQuant+ smoothing with global
+//!   alpha search, and an AWQ baseline.
+//! * **L2/L1 (`python/compile`)** — the Llama-family forward pass in JAX
+//!   with a Pallas W4A16 dequant-matmul kernel, AOT-lowered once to HLO
+//!   text and executed here through the PJRT C API (`xla` crate). Python
+//!   never runs on the request path.
+//!
+//! See DESIGN.md for the experiment index and EXPERIMENTS.md for measured
+//! results.
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod model;
+pub mod quant;
+pub mod reffwd;
+pub mod runtime;
+pub mod server;
+pub mod tensor;
+pub mod tokenizer;
+pub mod util;

@@ -1,0 +1,240 @@
+//! `sqplus` — the SmoothQuant+ serving CLI (leader entrypoint).
+//!
+//! ```text
+//! sqplus quantize  --model base --method smoothquant+ --out model.sqw
+//! sqplus generate  --model tiny --method rtn --prompt "def add(" -n 16
+//! sqplus serve     --model small --method smoothquant+ --port 7181
+//! sqplus eval      --model small --methods fp16,rtn,awq,smoothquant+
+//! sqplus inspect   --model tiny        # activation/weight statistics
+//! ```
+//!
+//! Everything runs on the PJRT CPU backend from AOT artifacts (`make
+//! artifacts`); Python is never invoked here.
+
+use anyhow::{bail, Context, Result};
+
+use sqplus::config::{
+    EngineConfig, GpuProfile, ModelConfig, Precision, QuantConfig,
+    QuantMethod,
+};
+use sqplus::coordinator::engine::Engine;
+use sqplus::coordinator::sequence::SamplingParams;
+use sqplus::data::{corpus, tasks};
+use sqplus::model::init::{init_weights, InitSpec};
+use sqplus::model::store::WeightStore;
+use sqplus::quant::{calib, pipeline};
+use sqplus::runtime::executor::ModelRuntime;
+use sqplus::runtime::manifest;
+use sqplus::runtime::simtp::Deployment;
+use sqplus::server::Server;
+use sqplus::tokenizer::Tokenizer;
+use sqplus::util::cli::Args;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let mut args = Args::from_env();
+    let cmd = args.positional.first().cloned().unwrap_or_default();
+    match cmd.as_str() {
+        "quantize" => cmd_quantize(&mut args),
+        "generate" => cmd_generate(&mut args),
+        "serve" => cmd_serve(&mut args),
+        "eval" => cmd_eval(&mut args),
+        "inspect" => cmd_inspect(&mut args),
+        _ => {
+            println!(
+                "sqplus — SmoothQuant+ 4-bit weight quantization + serving\n\
+                 \n\
+                 usage: sqplus <quantize|generate|serve|eval|inspect> \
+                 [options]\n\
+                 \n\
+                 common options:\n\
+                 \x20 --model <tiny|small|base>     model size [tiny]\n\
+                 \x20 --method <fp16|rtn|awq|smoothquant+>  [smoothquant+]\n\
+                 \x20 --seed <n>                    weight seed [0]\n\
+                 \x20 --outliers <n>                injected outlier \
+                 channels [8]\n\
+                 run a subcommand with --help for its options"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn parse_method(s: &str) -> Result<QuantMethod> {
+    Ok(match s.to_ascii_lowercase().as_str() {
+        "fp16" => QuantMethod::Fp16,
+        "rtn" => QuantMethod::Rtn,
+        "awq" => QuantMethod::Awq,
+        "smoothquant+" | "sq+" | "sqplus" => QuantMethod::SmoothQuantPlus,
+        other => bail!("unknown method {other}"),
+    })
+}
+
+/// Shared setup: model weights + calibration + quantization outcome.
+fn build_model(args: &mut Args)
+    -> Result<(ModelConfig, WeightStore, pipeline::QuantOutcome, Tokenizer)> {
+    let size = args.opt("model", "tiny", "model size");
+    let method = parse_method(&args.opt("method", "smoothquant+",
+                                        "quantization method"))?;
+    let seed = args.opt_u64("seed", 0, "weight seed");
+    let outliers = args.opt_usize("outliers", 8, "outlier channels");
+    let oscale = args.opt_f64("outlier-scale", 12.0, "outlier gain scale") as f32;
+    let cfg = ModelConfig::by_name(&size)
+        .with_context(|| format!("unknown model {size}"))?;
+    eprintln!("[setup] init {size} ({} params), outliers={outliers}",
+              cfg.param_count());
+    let w = init_weights(&cfg, &InitSpec::with_outliers(seed, outliers, oscale));
+    let tok = Tokenizer::train(
+        &corpus::tokenizer_training_text(seed, 4000), cfg.vocab);
+    let calib_tasks = tasks::task_set(corpus::Domain::CodePython, seed);
+    let prompts =
+        tasks::tokenized_prompts(&calib_tasks[..32], &tok, cfg.vocab, 24);
+    eprintln!("[setup] calibrating on {} prompts", prompts.len());
+    let cal = calib::collect(&cfg, &w, &prompts, 256, seed);
+    eprintln!("[setup] quantizing with {}", method.as_str());
+    let out = pipeline::quantize_model(&cfg, &w, &cal, method,
+                                       &QuantConfig::default());
+    if let Some(a) = out.alpha {
+        eprintln!("[setup] searched alpha = {a:.2} (loss {:.5})",
+                  out.loss.total);
+    }
+    Ok((cfg, w, out, tok))
+}
+
+fn make_engine(args: &mut Args, out: &pipeline::QuantOutcome,
+               cfg: &ModelConfig) -> Result<Engine> {
+    let size = args.opt("model", "tiny", "model size");
+    let man = manifest::require_artifacts()?;
+    let (precision, deploy) = match &out.deploy {
+        Some(d) => (Precision::W4a16, d.clone()),
+        None => (Precision::Fp16,
+                 pipeline::fp16_deploy(cfg, &out.effective)),
+    };
+    let rt = ModelRuntime::load(&man, &size, precision, &deploy)?;
+    eprintln!("[setup] runtime loaded ({} buckets)",
+              rt.decode_batches().len() + rt.prefill_buckets().len());
+    Ok(Engine::new(
+        Deployment::single(rt, GpuProfile::sim_small(512)),
+        EngineConfig::default(),
+    ))
+}
+
+fn cmd_quantize(args: &mut Args) -> Result<()> {
+    let out_path = args.opt("out", "model.sqw", "output path");
+    let (_, _, out, _) = build_model(args)?;
+    let store = match &out.deploy {
+        Some(d) => d,
+        None => &out.effective,
+    };
+    store.save(std::path::Path::new(&out_path))?;
+    println!(
+        "wrote {out_path}: {} tensors, {:.1} MB, method {}, loss {:.5}",
+        store.len(),
+        store.data_bytes() as f64 / 1e6,
+        out.method.as_str(),
+        out.loss.total
+    );
+    Ok(())
+}
+
+fn cmd_generate(args: &mut Args) -> Result<()> {
+    let prompt_text = args.opt("prompt", "def add(a, b):", "prompt text");
+    let n = args.opt_usize("n", 16, "tokens to generate");
+    let (cfg, _, out, tok) = build_model(args)?;
+    let mut eng = make_engine(args, &out, &cfg)?;
+    let ids = tok.encode_for_model(&prompt_text, cfg.vocab);
+    let id = eng.submit(
+        ids,
+        SamplingParams { max_new_tokens: n, ..Default::default() },
+    );
+    eng.run_to_completion(10_000)?;
+    let fin = eng.take_finished();
+    let seq = fin.iter().find(|s| s.id == id).context("lost sequence")?;
+    println!("prompt: {prompt_text:?}");
+    println!("tokens: {:?}", seq.output);
+    println!("text:   {:?}", tok.decode(&seq.output));
+    eng.metrics.report().print("generate");
+    Ok(())
+}
+
+fn cmd_serve(args: &mut Args) -> Result<()> {
+    let port = args.opt_usize("port", 7181, "TCP port") as u16;
+    let (cfg, _, out, _) = build_model(args)?;
+    let eng = make_engine(args, &out, &cfg)?;
+    let server = Server::spawn(eng, port)?;
+    println!("sqplus serving on {} (JSON lines: \
+              {{\"prompt\":[ids],\"max_new_tokens\":n}})", server.addr());
+    println!("press ctrl-c to stop");
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_eval(args: &mut Args) -> Result<()> {
+    let methods = args.opt("methods", "fp16,rtn,awq,smoothquant+",
+                           "comma-separated methods");
+    let n_tasks = args.opt_usize("tasks", 32, "eval prompts");
+    let max_new = args.opt_usize("n", 8, "tokens per prompt");
+    let size = args.opt("model", "tiny", "model size");
+    let seed = args.opt_u64("seed", 0, "weight seed");
+    let outliers = args.opt_usize("outliers", 8, "outlier channels");
+    let oscale = args.opt_f64("outlier-scale", 12.0, "outlier gain scale") as f32;
+    let cfg = ModelConfig::by_name(&size).context("unknown model")?;
+    let w = init_weights(&cfg, &InitSpec::with_outliers(seed, outliers, oscale));
+    let tok = Tokenizer::train(
+        &corpus::tokenizer_training_text(seed, 4000), cfg.vocab);
+    let all = tasks::task_set(corpus::Domain::CodePython, seed);
+    let cal_prompts =
+        tasks::tokenized_prompts(&all[..32], &tok, cfg.vocab, 24);
+    let cal = calib::collect(&cfg, &w, &cal_prompts, 256, seed);
+    let ev = tasks::tokenized_prompts(&all[32..32 + n_tasks], &tok,
+                                      cfg.vocab, 24);
+    println!("{:<14} {:>12} {:>12} {:>10} {:>10}",
+             "method", "exact-match", "agreement", "nll", "loss");
+    for ms in methods.split(',') {
+        let method = parse_method(ms)?;
+        let out = pipeline::quantize_model(&cfg, &w, &cal, method,
+                                           &QuantConfig::default());
+        let r = sqplus::eval::evaluate(&cfg, &w, &out.effective, &ev,
+                                       max_new);
+        println!("{:<14} {:>11.1}% {:>11.1}% {:>10.4} {:>10.5}",
+                 method.as_str(), r.exact_match * 100.0,
+                 r.token_agreement * 100.0, r.nll, out.loss.total);
+    }
+    Ok(())
+}
+
+fn cmd_inspect(args: &mut Args) -> Result<()> {
+    use sqplus::reffwd::Site;
+    let size = args.opt("model", "tiny", "model size");
+    let seed = args.opt_u64("seed", 0, "weight seed");
+    let outliers = args.opt_usize("outliers", 8, "outlier channels");
+    let oscale = args.opt_f64("outlier-scale", 12.0, "outlier gain scale") as f32;
+    let cfg = ModelConfig::by_name(&size).context("unknown model")?;
+    let w = init_weights(&cfg, &InitSpec::with_outliers(seed, outliers, oscale));
+    let tok = Tokenizer::train(
+        &corpus::tokenizer_training_text(seed, 4000), cfg.vocab);
+    let all = tasks::task_set(corpus::Domain::CodePython, seed);
+    let prompts = tasks::tokenized_prompts(&all[..16], &tok, cfg.vocab, 24);
+    let cal = calib::collect(&cfg, &w, &prompts, 64, seed);
+    println!("{:<8} {:<9} {:>12} {:>12} {:>10}",
+             "layer", "site", "act absmax", "act median", "ratio");
+    for layer in 0..cfg.layers {
+        for site in Site::all() {
+            let s = cal.stats(layer, site);
+            let mut m = s.absmax.clone();
+            m.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let max = m[m.len() - 1];
+            let med = m[m.len() / 2];
+            println!("{:<8} {:<9} {:>12.3} {:>12.4} {:>9.0}x",
+                     layer, site.as_str(), max, med, max / med.max(1e-9));
+        }
+    }
+    Ok(())
+}

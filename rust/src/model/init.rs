@@ -1,0 +1,201 @@
+//! Seeded model initialization with **outlier-channel injection**.
+//!
+//! The paper's mechanism requires activation outliers that are (i) ~100x
+//! the median magnitude and (ii) pinned to a small set of fixed channels
+//! across tokens (its Figures 1-2). Untrained random weights do not produce
+//! this, so we inject it the way trained LLMs express it: a few RMSNorm
+//! gain channels are scaled far above 1, which multiplies those channels of
+//! every token entering the attached linears — exactly the fixed-channel,
+//! token-independent pattern LLM.int8() documented. Per-channel heavy
+//! tails are added to the hidden stream via the embedding columns.
+
+use crate::config::ModelConfig;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+use super::store::WeightStore;
+use super::{weight_names, weight_shape};
+
+/// Outlier-injection settings (DESIGN.md §5 substitution table).
+#[derive(Debug, Clone)]
+pub struct InitSpec {
+    pub seed: u64,
+    /// Number of outlier channels per norm (0 disables injection).
+    pub outlier_channels: usize,
+    /// Gain multiplier applied to those channels (paper reports ~100x
+    /// activation amplitudes; 30-100 reproduces that range downstream).
+    pub outlier_scale: f32,
+}
+
+impl Default for InitSpec {
+    fn default() -> Self {
+        InitSpec { seed: 0, outlier_channels: 8, outlier_scale: 60.0 }
+    }
+}
+
+impl InitSpec {
+    pub fn benign(seed: u64) -> Self {
+        InitSpec { seed, outlier_channels: 0, outlier_scale: 1.0 }
+    }
+    pub fn with_outliers(seed: u64, channels: usize, scale: f32) -> Self {
+        InitSpec { seed, outlier_channels: channels, outlier_scale: scale }
+    }
+}
+
+/// Build a canonical fp16 [`WeightStore`] for `cfg`.
+pub fn init_weights(cfg: &ModelConfig, spec: &InitSpec) -> WeightStore {
+    let mut rng = Rng::new(spec.seed);
+    let mut store = WeightStore::new();
+    // Fixed outlier channel set, shared across layers: the paper observes
+    // the *same* channels misbehaving throughout the network.
+    let outliers = if spec.outlier_channels > 0 {
+        rng.fork(0xA11).choose_k(cfg.dim, spec.outlier_channels)
+    } else {
+        vec![]
+    };
+
+    let mut embed_copy: Option<Tensor> = None;
+    for name in weight_names(cfg) {
+        let shape = weight_shape(cfg, &name);
+        let base = name.rsplit('.').next().unwrap();
+        let t = match base {
+            // lm_head is tied to the embedding (transposed, plus noise):
+            // the residual stream correlates with token embeddings, so a
+            // tied head yields *confident* next-token distributions — the
+            // property that makes trained LLMs quantization-lossless when
+            // the error is small, and measurably broken when outliers
+            // amplify it. Without this, untrained logits are pure noise
+            // and argmax agreement cannot distinguish methods.
+            "lm_head" => {
+                let e = embed_copy.as_ref().expect("embed precedes lm_head");
+                let (v, d) = (cfg.vocab, cfg.dim);
+                let mut t = Tensor::zeros(&[d, v]);
+                let mut r = rng.fork(hash_name(&name));
+                let noise = 0.15 / (d as f32).sqrt();
+                for i in 0..d {
+                    for j in 0..v {
+                        t.data[i * v + j] =
+                            e.data[j * d + i] * 3.0 + noise * r.normal();
+                    }
+                }
+                t
+            }
+            "attn_norm" | "mlp_norm" => {
+                let mut t = Tensor::ones(&shape);
+                // mild gain noise, then the injected outlier channels
+                let mut r = rng.fork(hash_name(&name));
+                for v in &mut t.data {
+                    *v += 0.05 * r.normal();
+                }
+                for &c in &outliers {
+                    // vary strength a little per layer/channel: 0.5-1x
+                    t.data[c] = spec.outlier_scale * (0.5 + 0.5 * r.f32());
+                }
+                t
+            }
+            "final_norm" => Tensor::ones(&shape),
+            _ => {
+                // fan-in scaled gaussian, with heavy-tailed per-input-
+                // channel scales on the embedding so hidden activations
+                // spread like trained models' do.
+                let fan_in = shape[0] as f32;
+                // GPT-2-style residual scaling on the projections that
+                // write into the residual stream: keeps per-layer updates
+                // small relative to the stream (as in trained LLMs), so
+                // the tied-head confidence survives depth.
+                let resid = if base == "wo" || base == "w_down" {
+                    1.0 / (2.0 * cfg.layers as f32).sqrt()
+                } else {
+                    1.0
+                };
+                let mut r = rng.fork(hash_name(&name));
+                let mut t = Tensor::zeros(&shape);
+                for v in &mut t.data {
+                    *v = r.normal() / fan_in.sqrt() * resid;
+                }
+                if base == "embed" {
+                    embed_copy = Some(t.clone());
+                }
+                t
+            }
+        };
+        store.push_f32(&name, t);
+    }
+    store
+}
+
+/// The channels injected by `init_weights` for a given seed (test hook and
+/// Fig 2 annotation).
+pub fn injected_channels(cfg: &ModelConfig, spec: &InitSpec) -> Vec<usize> {
+    if spec.outlier_channels == 0 {
+        return vec![];
+    }
+    let mut rng = Rng::new(spec.seed);
+    rng.fork(0xA11).choose_k(cfg.dim, spec.outlier_channels)
+}
+
+fn hash_name(name: &str) -> u64 {
+    // FNV-1a
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in name.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn canonical_and_deterministic() {
+        let cfg = ModelConfig::tiny();
+        let a = init_weights(&cfg, &InitSpec::default());
+        a.check_canonical_fp16(&cfg).unwrap();
+        let b = init_weights(&cfg, &InitSpec::default());
+        assert_eq!(a.f32("layers.0.wq").data, b.f32("layers.0.wq").data);
+        let c = init_weights(&cfg, &InitSpec { seed: 1, ..Default::default() });
+        assert_ne!(a.f32("layers.0.wq").data, c.f32("layers.0.wq").data);
+    }
+
+    #[test]
+    fn outliers_injected_in_norm_gains() {
+        let cfg = ModelConfig::tiny();
+        let spec = InitSpec::with_outliers(3, 4, 50.0);
+        let w = init_weights(&cfg, &spec);
+        let ch = injected_channels(&cfg, &spec);
+        assert_eq!(ch.len(), 4);
+        let g = w.f32("layers.0.attn_norm");
+        for &c in &ch {
+            assert!(g.data[c] >= 25.0, "channel {c} gain {}", g.data[c]);
+        }
+        // non-outlier channels stay near 1
+        let normal: Vec<f32> = g
+            .data
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| !ch.contains(i))
+            .map(|(_, &v)| v)
+            .collect();
+        assert!(normal.iter().all(|v| v.abs() < 2.0));
+    }
+
+    #[test]
+    fn benign_init_has_no_outliers() {
+        let cfg = ModelConfig::tiny();
+        let w = init_weights(&cfg, &InitSpec::benign(0));
+        let g = w.f32("layers.1.mlp_norm");
+        assert!(g.data.iter().all(|v| v.abs() < 2.0));
+    }
+
+    #[test]
+    fn weight_scale_is_fan_in() {
+        let cfg = ModelConfig::tiny();
+        let w = init_weights(&cfg, &InitSpec::default());
+        let wq = w.f32("layers.0.wq");
+        let rms = (wq.frob_sq() / wq.numel() as f64).sqrt();
+        let want = 1.0 / (cfg.dim as f64).sqrt();
+        assert!((rms / want - 1.0).abs() < 0.1, "rms {rms} want {want}");
+    }
+}

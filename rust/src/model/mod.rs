@@ -1,0 +1,94 @@
+//! Model substrate: canonical weight naming/ordering (the contract shared
+//! with `python/compile/configs.py` and the artifact manifest), the weight
+//! store with its on-disk `.sqw` format, and seeded initialization with
+//! outlier-channel injection.
+
+pub mod init;
+pub mod store;
+
+use crate::config::ModelConfig;
+
+pub const LAYER_LINEARS: [&str; 7] =
+    ["wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down"];
+
+/// Canonical FP16 weight order (must match python `configs.weight_names`).
+pub fn weight_names(cfg: &ModelConfig) -> Vec<String> {
+    let mut names = vec!["embed".to_string()];
+    for i in 0..cfg.layers {
+        for w in ["attn_norm", "wq", "wk", "wv", "wo",
+                  "mlp_norm", "w_gate", "w_up", "w_down"] {
+            names.push(format!("layers.{i}.{w}"));
+        }
+    }
+    names.push("final_norm".into());
+    names.push("lm_head".into());
+    names
+}
+
+/// Canonical W4A16 parameter order: each decoder linear expands in place to
+/// (packed, scales, zeros); everything else stays a single f32 tensor.
+pub fn weight_names_w4a16(cfg: &ModelConfig) -> Vec<String> {
+    let mut names = vec![];
+    for n in weight_names(cfg) {
+        let base = n.rsplit('.').next().unwrap();
+        if n.starts_with("layers.") && LAYER_LINEARS.contains(&base) {
+            names.push(format!("{n}.packed"));
+            names.push(format!("{n}.scales"));
+            names.push(format!("{n}.zeros"));
+        } else {
+            names.push(n);
+        }
+    }
+    names
+}
+
+/// Shape of a canonical fp16 weight.
+pub fn weight_shape(cfg: &ModelConfig, name: &str) -> Vec<usize> {
+    let base = name.rsplit('.').next().unwrap();
+    match base {
+        "embed" => vec![cfg.vocab, cfg.dim],
+        "lm_head" => vec![cfg.dim, cfg.vocab],
+        "attn_norm" | "mlp_norm" | "final_norm" => vec![cfg.dim],
+        _ => {
+            let (_, k, n) = cfg
+                .linear_shapes()
+                .into_iter()
+                .find(|&(w, _, _)| w == base)
+                .unwrap_or_else(|| panic!("unknown weight {name}"));
+            vec![k, n]
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn name_counts_match_python() {
+        let cfg = ModelConfig::tiny();
+        assert_eq!(weight_names(&cfg).len(), 2 + 1 + 9 * cfg.layers);
+        assert_eq!(
+            weight_names_w4a16(&cfg).len(),
+            2 + 1 + (2 + 7 * 3) * cfg.layers
+        );
+    }
+
+    #[test]
+    fn w4a16_triple_adjacency() {
+        let cfg = ModelConfig::tiny();
+        let names = weight_names_w4a16(&cfg);
+        let i = names.iter().position(|n| n == "layers.0.wq.packed").unwrap();
+        assert_eq!(names[i + 1], "layers.0.wq.scales");
+        assert_eq!(names[i + 2], "layers.0.wq.zeros");
+    }
+
+    #[test]
+    fn shapes() {
+        let cfg = ModelConfig::small();
+        assert_eq!(weight_shape(&cfg, "embed"), vec![cfg.vocab, cfg.dim]);
+        assert_eq!(weight_shape(&cfg, "layers.3.w_down"),
+                   vec![cfg.ffn, cfg.dim]);
+        assert_eq!(weight_shape(&cfg, "layers.0.attn_norm"), vec![cfg.dim]);
+    }
+}

@@ -1,0 +1,288 @@
+//! Weight store: named tensors in canonical order + the `.sqw` on-disk
+//! format (our stand-in for safetensors; magic `SQW1`, little-endian).
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::ModelConfig;
+use crate::tensor::{Tensor, U8Tensor};
+
+/// A named tensor: fp32 host data or packed nibbles.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Entry {
+    F32(Tensor),
+    U8(U8Tensor),
+}
+
+impl Entry {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Entry::F32(t) => &t.shape,
+            Entry::U8(t) => &t.shape,
+        }
+    }
+    pub fn as_f32(&self) -> &Tensor {
+        match self {
+            Entry::F32(t) => t,
+            Entry::U8(_) => panic!("expected f32 tensor"),
+        }
+    }
+    pub fn as_u8(&self) -> &U8Tensor {
+        match self {
+            Entry::U8(t) => t,
+            Entry::F32(_) => panic!("expected u8 tensor"),
+        }
+    }
+}
+
+/// Ordered collection of named tensors. Order is the canonical parameter
+/// order fed positionally to the PJRT executables.
+#[derive(Debug, Clone, Default)]
+pub struct WeightStore {
+    names: Vec<String>,
+    index: HashMap<String, usize>,
+    entries: Vec<Entry>,
+}
+
+impl WeightStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, name: &str, e: Entry) {
+        assert!(
+            !self.index.contains_key(name),
+            "duplicate weight name {name}"
+        );
+        self.index.insert(name.to_string(), self.entries.len());
+        self.names.push(name.to_string());
+        self.entries.push(e);
+    }
+    pub fn push_f32(&mut self, name: &str, t: Tensor) {
+        self.push(name, Entry::F32(t));
+    }
+    pub fn push_u8(&mut self, name: &str, t: U8Tensor) {
+        self.push(name, Entry::U8(t));
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+    pub fn names(&self) -> &[String] {
+        &self.names
+    }
+    pub fn contains(&self, name: &str) -> bool {
+        self.index.contains_key(name)
+    }
+
+    pub fn get(&self, name: &str) -> &Entry {
+        let i = *self
+            .index
+            .get(name)
+            .unwrap_or_else(|| panic!("missing weight {name}"));
+        &self.entries[i]
+    }
+    pub fn f32(&self, name: &str) -> &Tensor {
+        self.get(name).as_f32()
+    }
+    pub fn u8(&self, name: &str) -> &U8Tensor {
+        self.get(name).as_u8()
+    }
+    pub fn f32_mut(&mut self, name: &str) -> &mut Tensor {
+        let i = *self
+            .index
+            .get(name)
+            .unwrap_or_else(|| panic!("missing weight {name}"));
+        match &mut self.entries[i] {
+            Entry::F32(t) => t,
+            Entry::U8(_) => panic!("expected f32 tensor {name}"),
+        }
+    }
+    pub fn set_f32(&mut self, name: &str, t: Tensor) {
+        let i = *self.index.get(name).expect("missing weight");
+        self.entries[i] = Entry::F32(t);
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&String, &Entry)> {
+        self.names.iter().zip(self.entries.iter())
+    }
+
+    /// Total bytes of tensor data (f32 = 4 B/elem, u8 = 1 B/elem).
+    pub fn data_bytes(&self) -> usize {
+        self.entries
+            .iter()
+            .map(|e| match e {
+                Entry::F32(t) => 4 * t.numel(),
+                Entry::U8(t) => t.numel(),
+            })
+            .sum()
+    }
+
+    /// Verify names/order against the canonical fp16 layout.
+    pub fn check_canonical_fp16(&self, cfg: &ModelConfig) -> Result<()> {
+        let want = super::weight_names(cfg);
+        if self.names != want {
+            bail!(
+                "store has {} names, canonical fp16 wants {}",
+                self.names.len(),
+                want.len()
+            );
+        }
+        for name in &want {
+            let got = self.get(name).shape().to_vec();
+            let exp = super::weight_shape(cfg, name);
+            if got != exp {
+                bail!("{name}: shape {got:?}, want {exp:?}");
+            }
+        }
+        Ok(())
+    }
+
+    // ------------------------------------------------------ .sqw format
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut f = std::io::BufWriter::new(
+            std::fs::File::create(path)
+                .with_context(|| format!("create {path:?}"))?,
+        );
+        f.write_all(b"SQW1")?;
+        f.write_all(&(self.entries.len() as u32).to_le_bytes())?;
+        for (name, e) in self.iter() {
+            let nb = name.as_bytes();
+            f.write_all(&(nb.len() as u32).to_le_bytes())?;
+            f.write_all(nb)?;
+            let (dtype, shape): (u8, &[usize]) = match e {
+                Entry::F32(t) => (0, &t.shape),
+                Entry::U8(t) => (1, &t.shape),
+            };
+            f.write_all(&[dtype])?;
+            f.write_all(&(shape.len() as u32).to_le_bytes())?;
+            for &d in shape {
+                f.write_all(&(d as u64).to_le_bytes())?;
+            }
+            match e {
+                Entry::F32(t) => {
+                    for v in &t.data {
+                        f.write_all(&v.to_le_bytes())?;
+                    }
+                }
+                Entry::U8(t) => f.write_all(&t.data)?,
+            }
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<WeightStore> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path)
+                .with_context(|| format!("open {path:?}"))?,
+        );
+        let mut magic = [0u8; 4];
+        f.read_exact(&mut magic)?;
+        if &magic != b"SQW1" {
+            bail!("bad magic {magic:?}");
+        }
+        let count = read_u32(&mut f)? as usize;
+        let mut store = WeightStore::new();
+        for _ in 0..count {
+            let nlen = read_u32(&mut f)? as usize;
+            let mut nb = vec![0u8; nlen];
+            f.read_exact(&mut nb)?;
+            let name = String::from_utf8(nb)?;
+            let mut dt = [0u8; 1];
+            f.read_exact(&mut dt)?;
+            let rank = read_u32(&mut f)? as usize;
+            let mut shape = Vec::with_capacity(rank);
+            for _ in 0..rank {
+                let mut b = [0u8; 8];
+                f.read_exact(&mut b)?;
+                shape.push(u64::from_le_bytes(b) as usize);
+            }
+            let numel: usize = shape.iter().product();
+            match dt[0] {
+                0 => {
+                    let mut bytes = vec![0u8; numel * 4];
+                    f.read_exact(&mut bytes)?;
+                    let data = bytes
+                        .chunks_exact(4)
+                        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                        .collect();
+                    store.push_f32(&name, Tensor::from_vec(&shape, data));
+                }
+                1 => {
+                    let mut data = vec![0u8; numel];
+                    f.read_exact(&mut data)?;
+                    store.push_u8(&name, U8Tensor::from_vec(&shape, data));
+                }
+                d => bail!("bad dtype {d}"),
+            }
+        }
+        Ok(store)
+    }
+}
+
+fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> WeightStore {
+        let mut s = WeightStore::new();
+        s.push_f32("a", Tensor::from_vec(&[2, 2], vec![1., 2., 3., 4.]));
+        s.push_u8("b.packed", U8Tensor::from_vec(&[2, 1], vec![0xab, 0x3]));
+        s.push_f32("c", Tensor::from_vec(&[3], vec![-1.0, 0.0, 1.5]));
+        s
+    }
+
+    #[test]
+    fn ordered_access() {
+        let s = sample();
+        assert_eq!(s.names(), &["a", "b.packed", "c"]);
+        assert_eq!(s.f32("a").data, vec![1., 2., 3., 4.]);
+        assert_eq!(s.u8("b.packed").data, vec![0xab, 0x3]);
+        assert_eq!(s.data_bytes(), 16 + 2 + 12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn duplicate_name_panics() {
+        let mut s = sample();
+        s.push_f32("a", Tensor::zeros(&[1]));
+    }
+
+    #[test]
+    fn sqw_roundtrip() {
+        let s = sample();
+        let dir = std::env::temp_dir().join("sqplus_test_store");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("w.sqw");
+        s.save(&p).unwrap();
+        let l = WeightStore::load(&p).unwrap();
+        assert_eq!(l.names(), s.names());
+        assert_eq!(l.f32("a"), s.f32("a"));
+        assert_eq!(l.u8("b.packed"), s.u8("b.packed"));
+        assert_eq!(l.f32("c"), s.f32("c"));
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn load_rejects_garbage() {
+        let dir = std::env::temp_dir().join("sqplus_test_store");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.sqw");
+        std::fs::write(&p, b"NOPE....").unwrap();
+        assert!(WeightStore::load(&p).is_err());
+        std::fs::remove_file(p).ok();
+    }
+}

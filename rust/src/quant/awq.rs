@@ -1,0 +1,192 @@
+//! AWQ baseline (Lin et al. 2023), as the paper characterises it (§4):
+//!
+//! * importance factors from the **mean** |X_j| per channel (not max);
+//! * scaling `s_j = mean|X_j|^alpha`, with `alpha` searched **per layer**
+//!   (per smoothing unit here) against a *local* objective — the unit's
+//!   own output error — using the original calibration activations, so the
+//!   effect of earlier layers' quantization error on later layers is never
+//!   accounted for (the error-accumulation criticism);
+//! * an additional weight-clipping grid search per unit (AutoAWQ's
+//!   `clip` pass), which is what makes AWQ's search markedly more
+//!   expensive than SmoothQuant+'s single global grid.
+
+use std::time::Instant;
+
+use crate::config::{ModelConfig, QuantConfig};
+use crate::model::store::WeightStore;
+use crate::reffwd::Site;
+use crate::tensor::Tensor;
+use crate::util::threadpool::parallel_map;
+
+use super::calib::CalibData;
+use super::loss::linear_loss;
+use super::rtn;
+use super::smooth::apply_unit;
+
+/// AWQ's per-unit alpha grid (20 points, matching AutoAWQ's n_grid).
+pub const AWQ_ALPHA_GRID: usize = 20;
+/// AWQ's clip-ratio candidates per unit.
+pub const AWQ_CLIP_GRID: [f32; 4] = [1.0, 0.95, 0.9, 0.85];
+
+#[derive(Debug, Clone)]
+pub struct AwqResult {
+    /// (layer, site, alpha, clip) chosen per unit.
+    pub choices: Vec<(usize, Site, f32, f32)>,
+    pub evals: usize,
+    pub elapsed_s: f64,
+}
+
+/// Search + apply AWQ scaling in place (smoothed model out). The caller
+/// then quantizes with the chosen clip ratios via [`AwqResult::clip_for`].
+pub fn awq_search_and_smooth(store: &mut WeightStore, cfg: &ModelConfig,
+                             calib: &CalibData, qcfg: &QuantConfig)
+    -> AwqResult {
+    let t0 = Instant::now();
+    let mut choices = Vec::new();
+    let mut evals = 0;
+    // layer-by-layer, unit-by-unit: greedy local objective
+    for layer in 0..cfg.layers {
+        for site in Site::all() {
+            let stats = calib.stats(layer, site);
+            // candidate grid, evaluated in parallel
+            let grid: Vec<(f32, f32)> = (0..AWQ_ALPHA_GRID)
+                .flat_map(|i| {
+                    let alpha = i as f32 / AWQ_ALPHA_GRID as f32;
+                    AWQ_CLIP_GRID.iter().map(move |&c| (alpha, c))
+                })
+                .collect();
+            evals += grid.len();
+            let losses = parallel_map(grid.len(), |gi| {
+                let (alpha, clip) = grid[gi];
+                let s = awq_factors(&stats.absmean, alpha);
+                let inv: Vec<f32> = s.iter().map(|&v| 1.0 / v).collect();
+                let mut total = 0.0;
+                for lin in site.consumers() {
+                    let name = format!("layers.{layer}.{lin}");
+                    let orig = store.f32(&name);
+                    let mut scaled = orig.clone();
+                    scaled.scale_rows(&s);
+                    let mut eff = rtn::quantize_clipped(
+                        &scaled, qcfg.group_size, clip)
+                        .dequantize();
+                    eff.scale_rows(&inv);
+                    let rows = stats.rows.shape[0].max(1) as f64;
+                    total += linear_loss(&stats.rows, orig, &eff) / rows;
+                }
+                total
+            });
+            let best = losses
+                .iter()
+                .enumerate()
+                .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i)
+                .unwrap();
+            let (alpha, clip) = grid[best];
+            let s = awq_factors(&stats.absmean, alpha);
+            apply_unit(store, layer, site, &s);
+            choices.push((layer, site, alpha, clip));
+        }
+    }
+    AwqResult { choices, evals, elapsed_s: t0.elapsed().as_secs_f64() }
+}
+
+impl AwqResult {
+    /// Clip ratio chosen for a unit (1.0 if absent).
+    pub fn clip_for(&self, layer: usize, site: Site) -> f32 {
+        self.choices
+            .iter()
+            .find(|c| c.0 == layer && c.1 == site)
+            .map(|c| c.3)
+            .unwrap_or(1.0)
+    }
+}
+
+/// AWQ importance scaling: `s_j = mean|X_j|^alpha`, floored for stability.
+pub fn awq_factors(act_absmean: &[f32], alpha: f32) -> Vec<f32> {
+    act_absmean
+        .iter()
+        .map(|&a| a.max(1e-5).powf(alpha).clamp(1e-4, 1e4))
+        .collect()
+}
+
+#[allow(dead_code)]
+fn unused(_: &Tensor) {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::init::{init_weights, InitSpec};
+    use crate::quant::{calib, loss};
+    use crate::reffwd::{NoHook, RefModel};
+    use crate::util::prop;
+
+    fn setup() -> (ModelConfig, WeightStore, CalibData) {
+        let cfg = ModelConfig::tiny();
+        let w = init_weights(&cfg, &InitSpec::with_outliers(0, 4, 60.0));
+        let prompts: Vec<Vec<u32>> = (0..3)
+            .map(|i| (0..10).map(|t| (i * 71 + t * 29) % 512).collect())
+            .collect();
+        let calib = calib::collect(&cfg, &w, &prompts, 24, 0);
+        (cfg, w, calib)
+    }
+
+    #[test]
+    fn factors_alpha_zero_is_identity() {
+        let s = awq_factors(&[0.5, 3.0, 100.0], 0.0);
+        prop::assert_allclose(&s, &[1.0, 1.0, 1.0], 1e-6, 1e-6, "id");
+    }
+
+    #[test]
+    fn search_is_equivalence_preserving() {
+        let (cfg, w, calib) = setup();
+        let mut sm = w.clone();
+        awq_search_and_smooth(&mut sm, &cfg, &calib,
+                              &QuantConfig::default());
+        let tokens = [3u32, 77, 205, 11];
+        let (a, _) = RefModel::new(&cfg, &w).prefill(&tokens, &mut NoHook);
+        let (b, _) = RefModel::new(&cfg, &sm).prefill(&tokens, &mut NoHook);
+        prop::assert_allclose(&a.data, &b.data, 2e-3, 2e-3, "awq equiv");
+    }
+
+    #[test]
+    fn search_reduces_local_loss_vs_rtn() {
+        let (cfg, w, calib) = setup();
+        let qcfg = QuantConfig::default();
+        let mut sm = w.clone();
+        let res = awq_search_and_smooth(&mut sm, &cfg, &calib, &qcfg);
+        assert_eq!(res.choices.len(), cfg.layers * 4);
+        assert_eq!(res.evals,
+                   cfg.layers * 4 * AWQ_ALPHA_GRID * AWQ_CLIP_GRID.len());
+        // quantize the AWQ-smoothed model and compare total loss vs RTN
+        let mut eff_awq = sm.clone();
+        let mut eff_rtn = w.clone();
+        for layer in 0..cfg.layers {
+            for lin in crate::model::LAYER_LINEARS {
+                let name = format!("layers.{layer}.{lin}");
+                let clip = res.clip_for(layer, loss::site_of(lin));
+                let q = rtn::quantize_clipped(sm.f32(&name),
+                                              qcfg.group_size, clip);
+                eff_awq.set_f32(&name, q.dequantize());
+                eff_rtn.set_f32(
+                    &name,
+                    rtn::fake_quant(w.f32(&name), qcfg.group_size),
+                );
+            }
+        }
+        // compare in each model's own frame via end-logit error
+        let tokens = [3u32, 77, 205, 11, 460, 9];
+        let m0 = RefModel::new(&cfg, &w);
+        let (want, _) = m0.prefill(&tokens, &mut NoHook);
+        let err = |eff: &WeightStore| {
+            let (got, _) =
+                RefModel::new(&cfg, eff).prefill(&tokens, &mut NoHook);
+            got.sub(&want).frob_sq()
+        };
+        let e_awq = err(&eff_awq);
+        let e_rtn = err(&eff_rtn);
+        assert!(
+            e_awq < e_rtn,
+            "AWQ logit err {e_awq} !< RTN {e_rtn} (outlier model)"
+        );
+    }
+}

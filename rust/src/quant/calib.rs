@@ -1,0 +1,193 @@
+//! Calibration statistics: per-channel activation absmax/absmean and a
+//! reservoir of retained activation rows per smoothing site, collected by
+//! running the reference forward pass over a calibration corpus.
+//!
+//! The paper calibrates on the 164 HumanEval problem descriptions; the
+//! corresponding synthetic calibration sets live in `crate::data`.
+
+use std::collections::HashMap;
+
+use crate::config::ModelConfig;
+use crate::model::store::WeightStore;
+use crate::reffwd::{ActHook, RefModel, Site};
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// Per-(layer, site) channel statistics + retained rows.
+#[derive(Debug, Clone)]
+pub struct SiteStats {
+    pub channels: usize,
+    /// max_t |X[t, j]| over all calibration tokens.
+    pub absmax: Vec<f32>,
+    /// mean_t |X[t, j]|.
+    pub absmean: Vec<f32>,
+    /// Reservoir-sampled activation rows `[R, C]` for loss evaluation.
+    pub rows: Tensor,
+    pub tokens_seen: usize,
+}
+
+/// Calibration data for a whole model.
+#[derive(Debug, Clone)]
+pub struct CalibData {
+    pub sites: HashMap<(usize, Site), SiteStats>,
+    pub tokens: usize,
+}
+
+impl CalibData {
+    pub fn stats(&self, layer: usize, site: Site) -> &SiteStats {
+        self.sites
+            .get(&(layer, site))
+            .unwrap_or_else(|| panic!("no calib for layer {layer} {site:?}"))
+    }
+}
+
+struct Collector {
+    max_rows: usize,
+    rng: Rng,
+    acc: HashMap<(usize, Site), Acc>,
+}
+
+struct Acc {
+    absmax: Vec<f32>,
+    abssum: Vec<f64>,
+    rows: Vec<Vec<f32>>,
+    seen: usize,
+}
+
+impl ActHook for Collector {
+    fn record(&mut self, layer: usize, site: Site, rows: &Tensor) {
+        let (t, c) = rows.dims2();
+        let acc = self.acc.entry((layer, site)).or_insert_with(|| Acc {
+            absmax: vec![0.0; c],
+            abssum: vec![0.0; c],
+            rows: Vec::new(),
+            seen: 0,
+        });
+        for i in 0..t {
+            let row = rows.row(i);
+            for j in 0..c {
+                let a = row[j].abs();
+                acc.absmax[j] = acc.absmax[j].max(a);
+                acc.abssum[j] += a as f64;
+            }
+            // reservoir sampling: uniform over all rows seen
+            acc.seen += 1;
+            if acc.rows.len() < self.max_rows {
+                acc.rows.push(row.to_vec());
+            } else {
+                let r = self.rng.below(acc.seen);
+                if r < self.max_rows {
+                    acc.rows[r] = row.to_vec();
+                }
+            }
+        }
+    }
+}
+
+/// Run the model over `prompts` and collect calibration data, retaining at
+/// most `max_rows` activation rows per site.
+pub fn collect(cfg: &ModelConfig, w: &WeightStore, prompts: &[Vec<u32>],
+               max_rows: usize, seed: u64) -> CalibData {
+    let model = RefModel::new(cfg, w);
+    let mut col = Collector {
+        max_rows,
+        rng: Rng::new(seed),
+        acc: HashMap::new(),
+    };
+    let mut tokens = 0;
+    for p in prompts {
+        if p.is_empty() {
+            continue;
+        }
+        let capped = &p[..p.len().min(cfg.max_len)];
+        tokens += capped.len();
+        model.prefill(capped, &mut col);
+    }
+    let sites = col
+        .acc
+        .into_iter()
+        .map(|(k, a)| {
+            let c = a.absmax.len();
+            let n = a.seen.max(1) as f64;
+            let r = a.rows.len();
+            let mut flat = Vec::with_capacity(r * c);
+            for row in &a.rows {
+                flat.extend_from_slice(row);
+            }
+            (
+                k,
+                SiteStats {
+                    channels: c,
+                    absmax: a.absmax,
+                    absmean: a.abssum.iter().map(|&s| (s / n) as f32)
+                        .collect(),
+                    rows: Tensor::from_vec(&[r, c], flat),
+                    tokens_seen: a.seen,
+                },
+            )
+        })
+        .collect();
+    CalibData { sites, tokens }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::init::{init_weights, InitSpec};
+
+    fn setup() -> (ModelConfig, WeightStore) {
+        let cfg = ModelConfig::tiny();
+        let w = init_weights(&cfg, &InitSpec::default());
+        (cfg, w)
+    }
+
+    #[test]
+    fn collects_every_site() {
+        let (cfg, w) = setup();
+        let prompts = vec![vec![1, 2, 3, 4], vec![9, 8, 7]];
+        let calib = collect(&cfg, &w, &prompts, 16, 0);
+        assert_eq!(calib.tokens, 7);
+        for layer in 0..cfg.layers {
+            for site in Site::all() {
+                let s = calib.stats(layer, site);
+                assert_eq!(s.tokens_seen, 7);
+                assert_eq!(s.rows.shape, vec![7, s.channels]);
+                // absmean <= absmax per channel
+                for j in 0..s.channels {
+                    assert!(s.absmean[j] <= s.absmax[j] + 1e-6);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn reservoir_caps_rows() {
+        let (cfg, w) = setup();
+        let prompts = vec![(0u32..60).map(|i| i % cfg.vocab as u32).collect()];
+        let calib = collect(&cfg, &w, &prompts, 8, 1);
+        let s = calib.stats(0, Site::AttnIn);
+        assert_eq!(s.rows.shape[0], 8);
+        assert_eq!(s.tokens_seen, 60);
+    }
+
+    #[test]
+    fn channel_dims_match_sites() {
+        let (cfg, w) = setup();
+        let calib = collect(&cfg, &w, &[vec![1, 2, 3]], 8, 0);
+        assert_eq!(calib.stats(0, Site::AttnIn).channels, cfg.dim);
+        assert_eq!(calib.stats(0, Site::DownIn).channels, cfg.ffn);
+    }
+
+    #[test]
+    fn outlier_channels_show_in_absmax() {
+        let cfg = ModelConfig::tiny();
+        let spec = InitSpec::with_outliers(0, 4, 60.0);
+        let w = init_weights(&cfg, &spec);
+        let calib = collect(&cfg, &w, &[vec![5, 10, 15, 20, 25]], 8, 0);
+        let s = calib.stats(0, Site::AttnIn);
+        let mut sorted = s.absmax.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = sorted[s.channels / 2];
+        assert!(sorted[s.channels - 1] > 10.0 * median);
+    }
+}

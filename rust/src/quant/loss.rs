@@ -1,0 +1,111 @@
+//! Quantization loss (paper Eq. 4): `E = ||X W - X Ŵ||²_F`, evaluated on
+//! retained calibration rows. Both W and Ŵ are expressed in the *original*
+//! activation frame, so smoothed candidates are compared fairly:
+//! `Ŵ_eff = diag(s)^-1 · dequant(quant(diag(s) · W))`.
+
+use crate::config::ModelConfig;
+use crate::model::store::WeightStore;
+use crate::model::LAYER_LINEARS;
+use crate::reffwd::Site;
+use crate::tensor::Tensor;
+
+use super::calib::CalibData;
+
+/// `||X (W - W_eff)||²_F` for one linear.
+pub fn linear_loss(x_rows: &Tensor, w: &Tensor, w_eff: &Tensor) -> f64 {
+    let e = w.sub(w_eff);
+    x_rows.matmul(&e).frob_sq()
+}
+
+/// The site whose activation feeds a given linear.
+pub fn site_of(linear: &str) -> Site {
+    match linear {
+        "wq" | "wk" | "wv" => Site::AttnIn,
+        "wo" => Site::OIn,
+        "w_gate" | "w_up" => Site::MlpIn,
+        "w_down" => Site::DownIn,
+        _ => panic!("unknown linear {linear}"),
+    }
+}
+
+/// Per-decoder-layer and total quantization loss of an effective model
+/// (original-frame weights) against the original model. Normalized per
+/// calibration row so sizes are comparable (the paper's Fig. 3 / Tab. 4
+/// readout).
+#[derive(Debug, Clone)]
+pub struct ModelLoss {
+    pub per_layer: Vec<f64>,
+    pub total: f64,
+}
+
+pub fn model_quant_loss(cfg: &ModelConfig, orig: &WeightStore,
+                        effective: &WeightStore, calib: &CalibData)
+    -> ModelLoss {
+    let mut per_layer = Vec::with_capacity(cfg.layers);
+    for layer in 0..cfg.layers {
+        let mut l = 0.0;
+        for lin in LAYER_LINEARS {
+            let name = format!("layers.{layer}.{lin}");
+            let stats = calib.stats(layer, site_of(lin));
+            let rows = stats.rows.shape[0].max(1) as f64;
+            l += linear_loss(&stats.rows, orig.f32(&name),
+                             effective.f32(&name)) / rows;
+        }
+        per_layer.push(l);
+    }
+    let total = per_layer.iter().sum();
+    ModelLoss { per_layer, total }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::init::{init_weights, InitSpec};
+    use crate::quant::{calib, rtn};
+
+    #[test]
+    fn zero_for_identical_weights() {
+        let x = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let w = Tensor::from_vec(&[3, 2], vec![1., 0., 0., 1., 1., 1.]);
+        assert_eq!(linear_loss(&x, &w, &w), 0.0);
+    }
+
+    #[test]
+    fn positive_for_perturbed_weights() {
+        let x = Tensor::from_vec(&[2, 2], vec![1., 2., 3., 4.]);
+        let w = Tensor::from_vec(&[2, 2], vec![1., 0., 0., 1.]);
+        let mut w2 = w.clone();
+        w2.data[0] += 0.1;
+        assert!(linear_loss(&x, &w, &w2) > 0.0);
+    }
+
+    #[test]
+    fn model_loss_runs_and_is_positive_under_rtn() {
+        let cfg = ModelConfig::tiny();
+        let w = init_weights(&cfg, &InitSpec::default());
+        let calib = calib::collect(&cfg, &w, &[vec![1, 2, 3, 4, 5]], 8, 0);
+        let mut eff = w.clone();
+        for layer in 0..cfg.layers {
+            for lin in LAYER_LINEARS {
+                let name = format!("layers.{layer}.{lin}");
+                let fq = rtn::fake_quant(w.f32(&name), cfg.group_size);
+                eff.set_f32(&name, fq);
+            }
+        }
+        let ml = model_quant_loss(&cfg, &w, &eff, &calib);
+        assert_eq!(ml.per_layer.len(), cfg.layers);
+        assert!(ml.total > 0.0);
+        assert!(ml.per_layer.iter().all(|&l| l >= 0.0));
+        // identical model has zero loss
+        let z = model_quant_loss(&cfg, &w, &w, &calib);
+        assert_eq!(z.total, 0.0);
+    }
+
+    #[test]
+    fn site_mapping_complete() {
+        for lin in LAYER_LINEARS {
+            let s = site_of(lin);
+            assert!(s.consumers().contains(&lin));
+        }
+    }
+}

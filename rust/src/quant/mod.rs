@@ -1,0 +1,28 @@
+//! The paper's quantization library.
+//!
+//! * [`rtn`] — group-wise asymmetric INT4 round-to-nearest quantization
+//!   (the paper's Eq. 1, with the zero point kept in f32 — see
+//!   `python/compile/kernels/ref.py` for the shared convention).
+//! * [`pack`] — two-nibbles-per-byte packing used by the W4A16 kernel.
+//! * [`smooth`] — SmoothQuant+ per-channel smoothing (Eq. 5/6) with
+//!   mathematically-equivalent fusion into the producing layer.
+//! * [`calib`] — calibration statistics (per-channel activation absmax /
+//!   absmean + retained activation rows) collected from the reference
+//!   forward pass.
+//! * [`loss`] — the quantization loss `E = ||XW - X Ŵ||²` (Eq. 4).
+//! * [`search`] — the paper's *global* grid search for the smoothing
+//!   strength alpha (step 0.05).
+//! * [`awq`] — the AWQ baseline: per-layer activation-aware scaling with
+//!   mean-based importance and clip search (local objective; exhibits the
+//!   error-accumulation the paper criticises).
+//! * [`pipeline`] — end-to-end "method" entry points mapping
+//!   [`crate::config::QuantMethod`] to a quantized model.
+
+pub mod awq;
+pub mod calib;
+pub mod loss;
+pub mod pack;
+pub mod pipeline;
+pub mod rtn;
+pub mod search;
+pub mod smooth;

@@ -1,0 +1,76 @@
+//! INT4 nibble packing (two consecutive input-channel rows per byte, low
+//! nibble first) — the layout the Pallas kernel unpacks in VMEM.
+
+use crate::tensor::U8Tensor;
+
+/// Pack `q: [K, N]` nibble values (each in 0..=15) into `u8[K/2, N]`.
+pub fn pack_nibbles(q: &[u8], k: usize, n: usize) -> U8Tensor {
+    assert_eq!(q.len(), k * n);
+    assert_eq!(k % 2, 0, "K must be even to pack");
+    let mut out = vec![0u8; k / 2 * n];
+    for k2 in 0..k / 2 {
+        for j in 0..n {
+            let lo = q[(2 * k2) * n + j];
+            let hi = q[(2 * k2 + 1) * n + j];
+            debug_assert!(lo <= 15 && hi <= 15, "nibble out of range");
+            out[k2 * n + j] = lo | (hi << 4);
+        }
+    }
+    U8Tensor::from_vec(&[k / 2, n], out)
+}
+
+/// Inverse of [`pack_nibbles`]: `u8[K/2, N] -> [K, N]` nibble values.
+pub fn unpack_nibbles(packed: &U8Tensor) -> Vec<u8> {
+    let (k2, n) = (packed.shape[0], packed.shape[1]);
+    let mut out = vec![0u8; k2 * 2 * n];
+    for i in 0..k2 {
+        for j in 0..n {
+            let b = packed.data[i * n + j];
+            out[(2 * i) * n + j] = b & 0xF;
+            out[(2 * i + 1) * n + j] = b >> 4;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn roundtrip_all_nibble_pairs() {
+        // every (lo, hi) combination
+        let mut q = Vec::new();
+        for lo in 0..16u8 {
+            for hi in 0..16u8 {
+                q.push(lo);
+                q.push(hi);
+            }
+        }
+        // layout as [K=512, N=1]
+        let t = pack_nibbles(&q, 512, 1);
+        assert_eq!(unpack_nibbles(&t), q);
+    }
+
+    #[test]
+    fn known_bytes() {
+        // column layout: q[k=0..2, n=0..2]
+        let q = vec![0x1, 0x2, /* k=0 */ 0xF, 0x0 /* k=1 */];
+        let t = pack_nibbles(&q, 2, 2);
+        assert_eq!(t.data, vec![0x1 | (0xF << 4), 0x2]);
+    }
+
+    #[test]
+    fn roundtrip_random() {
+        prop::check("pack/unpack roundtrip", 20, |rng| {
+            let k = 2 * (1 + rng.below(64));
+            let n = 1 + rng.below(16);
+            let q: Vec<u8> =
+                (0..k * n).map(|_| rng.below(16) as u8).collect();
+            let packed = pack_nibbles(&q, k, n);
+            assert_eq!(packed.shape, vec![k / 2, n]);
+            assert_eq!(unpack_nibbles(&packed), q);
+        });
+    }
+}

@@ -1,0 +1,293 @@
+//! End-to-end quantization pipeline: map a [`QuantMethod`] over an fp16
+//! model, producing
+//!
+//! * an **effective** store (fp16 layout, fake-quantized linears) for the
+//!   reference-forward eval path, and
+//! * a **deploy** store (w4a16 layout: packed/scales/zeros triples) whose
+//!   tensors are uploaded to the device in canonical order — the Rust
+//!   equivalent of the paper's "quantize during CPU→GPU migration" loader.
+
+use std::time::Instant;
+
+use crate::config::{ModelConfig, QuantConfig, QuantMethod};
+use crate::model::store::WeightStore;
+use crate::model::{weight_names, weight_names_w4a16, LAYER_LINEARS};
+
+use super::awq::awq_search_and_smooth;
+use super::calib::CalibData;
+use super::loss::{model_quant_loss, site_of, ModelLoss};
+use super::rtn;
+use super::search::{search_alpha, SearchResult};
+use super::smooth::smooth_model;
+
+/// Everything produced by quantizing a model with one method.
+#[derive(Debug, Clone)]
+pub struct QuantOutcome {
+    pub method: QuantMethod,
+    /// fp16-layout store for `reffwd` evaluation. For smoothed methods this
+    /// is the *smoothed* model with fake-quant linears (mathematically the
+    /// same function as dequantizing on the fly).
+    pub effective: WeightStore,
+    /// w4a16-layout store (packed/scales/zeros) for the PJRT runtime; None
+    /// for `Fp16`.
+    pub deploy: Option<WeightStore>,
+    /// Whole-model quantization loss in the original activation frame.
+    pub loss: ModelLoss,
+    pub alpha: Option<f32>,
+    pub search: Option<SearchResult>,
+    pub quantize_s: f64,
+}
+
+/// Quantize `model` with `method`. `calib` is required for every method
+/// except `Fp16` (RTN uses it only to report the loss).
+pub fn quantize_model(cfg: &ModelConfig, model: &WeightStore,
+                      calib: &CalibData, method: QuantMethod,
+                      qcfg: &QuantConfig) -> QuantOutcome {
+    let t0 = Instant::now();
+    match method {
+        QuantMethod::Fp16 => QuantOutcome {
+            method,
+            effective: model.clone(),
+            deploy: None,
+            loss: ModelLoss { per_layer: vec![0.0; cfg.layers], total: 0.0 },
+            alpha: None,
+            search: None,
+            quantize_s: t0.elapsed().as_secs_f64(),
+        },
+        QuantMethod::Rtn => {
+            let (effective, deploy) =
+                quantize_store(cfg, model, qcfg, |_, _| 1.0);
+            let loss = model_quant_loss(cfg, model, &effective, calib);
+            QuantOutcome {
+                method, effective, deploy: Some(deploy), loss,
+                alpha: None, search: None,
+                quantize_s: t0.elapsed().as_secs_f64(),
+            }
+        }
+        QuantMethod::SmoothQuantPlus => {
+            let search = search_alpha(cfg, model, calib, qcfg);
+            let mut smoothed = model.clone();
+            smooth_model(&mut smoothed, cfg, calib, search.alpha);
+            let (effective, deploy) =
+                quantize_store(cfg, &smoothed, qcfg, |_, _| 1.0);
+            // loss in the original frame: reuse the searched value
+            let loss = ModelLoss {
+                per_layer: per_layer_loss_at(cfg, model, calib, qcfg,
+                                             search.alpha),
+                total: search.loss,
+            };
+            QuantOutcome {
+                method, effective, deploy: Some(deploy),
+                loss, alpha: Some(search.alpha), search: Some(search),
+                quantize_s: t0.elapsed().as_secs_f64(),
+            }
+        }
+        QuantMethod::Awq => {
+            let mut smoothed = model.clone();
+            let res =
+                awq_search_and_smooth(&mut smoothed, cfg, calib, qcfg);
+            let (effective, deploy) =
+                quantize_store(cfg, &smoothed, qcfg, |layer, lin| {
+                    res.clip_for(layer, site_of(lin))
+                });
+            let loss = awq_frame_loss(cfg, model, &smoothed, &effective,
+                                      calib);
+            QuantOutcome {
+                method, effective, deploy: Some(deploy),
+                loss, alpha: None, search: None,
+                quantize_s: t0.elapsed().as_secs_f64(),
+            }
+        }
+    }
+}
+
+/// Quantize every decoder linear of `src` (already smoothed if needed),
+/// producing the fake-quant effective store and the packed deploy store.
+/// `clip(layer, lin)` supplies AWQ clip ratios (1.0 = none).
+fn quantize_store<F: Fn(usize, &str) -> f32>(
+    cfg: &ModelConfig, src: &WeightStore, qcfg: &QuantConfig, clip: F)
+    -> (WeightStore, WeightStore) {
+    let mut effective = src.clone();
+    let mut deploy = WeightStore::new();
+    for name in weight_names_w4a16(cfg) {
+        if let Some(base) = name.strip_suffix(".packed") {
+            let lin = base.rsplit('.').next().unwrap();
+            let layer: usize =
+                base.split('.').nth(1).unwrap().parse().unwrap();
+            let q = rtn::quantize_clipped(src.f32(base), qcfg.group_size,
+                                          clip(layer, lin));
+            effective.set_f32(base, q.dequantize());
+            deploy.push_u8(&name, q.packed.clone());
+            deploy.push_f32(&format!("{base}.scales"), q.scales.clone());
+            deploy.push_f32(&format!("{base}.zeros"), q.zeros.clone());
+        } else if !name.ends_with(".scales") && !name.ends_with(".zeros") {
+            deploy.push_f32(&name, src.f32(&name).clone());
+        }
+    }
+    (effective, deploy)
+}
+
+/// Per-layer losses of the SQ+ candidate at a given alpha (original frame).
+fn per_layer_loss_at(cfg: &ModelConfig, model: &WeightStore,
+                     calib: &CalibData, qcfg: &QuantConfig, alpha: f32)
+    -> Vec<f64> {
+    use super::loss::linear_loss;
+    use super::smooth::{smoothing_factors, unit_weight_absmax};
+    (0..cfg.layers)
+        .map(|layer| {
+            let mut l = 0.0;
+            for lin in LAYER_LINEARS {
+                let site = site_of(lin);
+                let stats = calib.stats(layer, site);
+                let wmax = unit_weight_absmax(model, layer, site);
+                let s = smoothing_factors(&stats.absmax, &wmax, alpha);
+                let name = format!("layers.{layer}.{lin}");
+                let mut scaled = model.f32(&name).clone();
+                scaled.scale_rows(&s);
+                let mut eff = rtn::fake_quant(&scaled, qcfg.group_size);
+                let inv: Vec<f32> = s.iter().map(|&v| 1.0 / v).collect();
+                eff.scale_rows(&inv);
+                let rows = stats.rows.shape[0].max(1) as f64;
+                l += linear_loss(&stats.rows, model.f32(&name), &eff) / rows;
+            }
+            l
+        })
+        .collect()
+}
+
+/// AWQ loss in the original frame: undo the AWQ row scaling analytically
+/// (eff_orig = diag(s)^-1 · eff_smoothed, where s = smoothed / orig rows).
+fn awq_frame_loss(cfg: &ModelConfig, orig: &WeightStore,
+                  smoothed: &WeightStore, effective: &WeightStore,
+                  calib: &CalibData) -> ModelLoss {
+    use super::loss::linear_loss;
+    let mut per_layer = Vec::with_capacity(cfg.layers);
+    for layer in 0..cfg.layers {
+        let mut l = 0.0;
+        for lin in LAYER_LINEARS {
+            let name = format!("layers.{layer}.{lin}");
+            let w0 = orig.f32(&name);
+            let ws = smoothed.f32(&name);
+            let we = effective.f32(&name);
+            // per-row scale applied by AWQ: s_k = ws[k,:] / w0[k,:]
+            let (k, n) = w0.dims2();
+            let mut eff0 = we.clone();
+            for kk in 0..k {
+                // recover s from the first column with a non-tiny weight
+                let mut s = 1.0f32;
+                for j in 0..n {
+                    let a = w0.data[kk * n + j];
+                    if a.abs() > 1e-8 {
+                        s = ws.data[kk * n + j] / a;
+                        break;
+                    }
+                }
+                let inv = 1.0 / s;
+                for j in 0..n {
+                    eff0.data[kk * n + j] *= inv;
+                }
+            }
+            let stats = calib.stats(layer, site_of(lin));
+            let rows = stats.rows.shape[0].max(1) as f64;
+            l += linear_loss(&stats.rows, w0, &eff0) / rows;
+        }
+        per_layer.push(l);
+    }
+    let total = per_layer.iter().sum();
+    ModelLoss { per_layer, total }
+}
+
+/// Build the fp16-layout deploy store (for serving the FP16 baseline).
+pub fn fp16_deploy(cfg: &ModelConfig, model: &WeightStore) -> WeightStore {
+    let mut deploy = WeightStore::new();
+    for name in weight_names(cfg) {
+        deploy.push_f32(&name, model.f32(&name).clone());
+    }
+    deploy
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::init::{init_weights, InitSpec};
+    use crate::quant::calib;
+    use crate::reffwd::{NoHook, RefModel};
+
+    fn setup() -> (ModelConfig, WeightStore, CalibData) {
+        let cfg = ModelConfig::tiny();
+        let w = init_weights(&cfg, &InitSpec::with_outliers(0, 4, 60.0));
+        let prompts: Vec<Vec<u32>> = (0..3)
+            .map(|i| (0..10).map(|t| (i * 71 + t * 29) % 512).collect())
+            .collect();
+        let calib = calib::collect(&cfg, &w, &prompts, 24, 0);
+        (cfg, w, calib)
+    }
+
+    #[test]
+    fn deploy_store_layout() {
+        let (cfg, w, calib) = setup();
+        let qcfg = QuantConfig::default();
+        let out = quantize_model(&cfg, &w, &calib, QuantMethod::Rtn, &qcfg);
+        let deploy = out.deploy.unwrap();
+        let names: Vec<String> = deploy.names().to_vec();
+        assert_eq!(names, weight_names_w4a16(&cfg));
+        let p = deploy.u8("layers.0.wq.packed");
+        assert_eq!(p.shape, vec![cfg.dim / 2, cfg.dim]);
+    }
+
+    #[test]
+    fn method_ordering_on_outlier_model() {
+        // loss(SQ+) < loss(RTN); FP16 == 0 — the paper's core ordering
+        let (cfg, w, calib) = setup();
+        let qcfg = QuantConfig::default();
+        let fp = quantize_model(&cfg, &w, &calib, QuantMethod::Fp16, &qcfg);
+        let rtn = quantize_model(&cfg, &w, &calib, QuantMethod::Rtn, &qcfg);
+        let sqp = quantize_model(&cfg, &w, &calib,
+                                 QuantMethod::SmoothQuantPlus, &qcfg);
+        assert_eq!(fp.loss.total, 0.0);
+        assert!(sqp.loss.total < rtn.loss.total,
+                "SQ+ {} !< RTN {}", sqp.loss.total, rtn.loss.total);
+        assert!(sqp.alpha.is_some());
+    }
+
+    #[test]
+    fn effective_model_close_to_fp16_for_sqplus() {
+        let (cfg, w, calib) = setup();
+        let qcfg = QuantConfig::default();
+        let sqp = quantize_model(&cfg, &w, &calib,
+                                 QuantMethod::SmoothQuantPlus, &qcfg);
+        let rtn = quantize_model(&cfg, &w, &calib, QuantMethod::Rtn, &qcfg);
+        let tokens = [3u32, 77, 205, 11, 460, 9];
+        let (want, _) =
+            RefModel::new(&cfg, &w).prefill(&tokens, &mut NoHook);
+        let err = |s: &WeightStore| {
+            let (got, _) =
+                RefModel::new(&cfg, s).prefill(&tokens, &mut NoHook);
+            got.sub(&want).frob_sq()
+        };
+        let e_sqp = err(&sqp.effective);
+        let e_rtn = err(&rtn.effective);
+        assert!(e_sqp < e_rtn, "SQ+ logit err {e_sqp} !< RTN {e_rtn}");
+    }
+
+    #[test]
+    fn sqplus_search_cheaper_than_awq() {
+        // the paper's "1/5 of the time taken by AWQ" claim, in evals
+        let (cfg, w, calib) = setup();
+        let qcfg = QuantConfig::default();
+        let sqp = quantize_model(&cfg, &w, &calib,
+                                 QuantMethod::SmoothQuantPlus, &qcfg);
+        let evals_sqp = sqp.search.as_ref().unwrap().evals;
+        let evals_awq = cfg.layers * 4 * super::super::awq::AWQ_ALPHA_GRID
+            * super::super::awq::AWQ_CLIP_GRID.len();
+        assert!(evals_sqp * 3 < evals_awq,
+                "SQ+ evals {evals_sqp} vs AWQ {evals_awq}");
+    }
+
+    #[test]
+    fn fp16_deploy_layout() {
+        let (cfg, w, _) = setup();
+        let d = fp16_deploy(&cfg, &w);
+        assert_eq!(d.names(), &weight_names(&cfg)[..]);
+    }
+}

@@ -1,0 +1,212 @@
+//! Group-wise asymmetric INT4 round-to-nearest quantization (paper Eq. 1).
+//!
+//! Numerics mirror `python/compile/kernels/ref.py` exactly (the pytest
+//! suite is the oracle; `rust/tests/cross_numerics.rs` checks agreement
+//! through the PJRT-executed kernel):
+//!
+//! ```text
+//! delta = (max - min) / 15          (constant group: |c| / 15)
+//! z     = round(-min / delta)       (f32, unclamped)
+//! q     = clamp(round(w / delta) + z, 0, 15)
+//! deq   = (q - z) * delta
+//! ```
+
+use crate::tensor::{Tensor, U8Tensor};
+
+use super::pack;
+
+pub const NIBBLE_MAX: f32 = 15.0;
+
+/// Quantized form of one `[K, N]` weight.
+#[derive(Debug, Clone)]
+pub struct QuantizedLinear {
+    /// Packed nibbles `u8[K/2, N]`.
+    pub packed: U8Tensor,
+    /// Per-group step `f32[K/g, N]`.
+    pub scales: Tensor,
+    /// Per-group zero point (integer-valued f32) `f32[K/g, N]`.
+    pub zeros: Tensor,
+    pub group_size: usize,
+}
+
+impl QuantizedLinear {
+    pub fn k(&self) -> usize {
+        self.packed.shape[0] * 2
+    }
+    pub fn n(&self) -> usize {
+        self.packed.shape[1]
+    }
+    /// Dequantize back to a dense `[K, N]` tensor.
+    pub fn dequantize(&self) -> Tensor {
+        let (k, n) = (self.k(), self.n());
+        let q = pack::unpack_nibbles(&self.packed);
+        let g = self.group_size;
+        let mut out = vec![0.0f32; k * n];
+        for kk in 0..k {
+            let grow = kk / g;
+            for j in 0..n {
+                let s = self.scales.data[grow * n + j];
+                let z = self.zeros.data[grow * n + j];
+                out[kk * n + j] = (q[kk * n + j] as f32 - z) * s;
+            }
+        }
+        Tensor::from_vec(&[k, n], out)
+    }
+}
+
+/// Quantize `w: [K, N]` with groups of `group_size` consecutive input
+/// channels. `clip_ratio < 1.0` shrinks each group's (min, max) range
+/// toward zero before building the grid (AWQ-style clip search).
+pub fn quantize_clipped(w: &Tensor, group_size: usize, clip_ratio: f32)
+    -> QuantizedLinear {
+    let (k, n) = w.dims2();
+    assert_eq!(k % group_size, 0, "K={k} % group={group_size}");
+    let groups = k / group_size;
+    let mut scales = vec![0.0f32; groups * n];
+    let mut zeros = vec![0.0f32; groups * n];
+    let mut q = vec![0u8; k * n];
+    for grow in 0..groups {
+        for j in 0..n {
+            let mut wmin = f32::INFINITY;
+            let mut wmax = f32::NEG_INFINITY;
+            for kk in grow * group_size..(grow + 1) * group_size {
+                let v = w.data[kk * n + j];
+                wmin = wmin.min(v);
+                wmax = wmax.max(v);
+            }
+            wmin *= clip_ratio;
+            wmax *= clip_ratio;
+            let mut delta = (wmax - wmin) / NIBBLE_MAX;
+            if delta == 0.0 {
+                delta = wmax.abs().max(1e-12) / NIBBLE_MAX;
+            }
+            let z = (-wmin / delta).round();
+            scales[grow * n + j] = delta;
+            zeros[grow * n + j] = z;
+            for kk in grow * group_size..(grow + 1) * group_size {
+                let v = w.data[kk * n + j];
+                let qq = ((v / delta).round() + z).clamp(0.0, NIBBLE_MAX);
+                q[kk * n + j] = qq as u8;
+            }
+        }
+    }
+    QuantizedLinear {
+        packed: pack::pack_nibbles(&q, k, n),
+        scales: Tensor::from_vec(&[groups, n], scales),
+        zeros: Tensor::from_vec(&[groups, n], zeros),
+        group_size,
+    }
+}
+
+/// Plain RTN (no clipping).
+pub fn quantize(w: &Tensor, group_size: usize) -> QuantizedLinear {
+    quantize_clipped(w, group_size, 1.0)
+}
+
+/// Quantize-dequantize round trip ("the weight the model will see").
+pub fn fake_quant(w: &Tensor, group_size: usize) -> Tensor {
+    quantize(w, group_size).dequantize()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, rng::Rng};
+
+    fn rand_w(rng: &mut Rng, k: usize, n: usize, scale: f32) -> Tensor {
+        Tensor::from_vec(
+            &[k, n],
+            (0..k * n).map(|_| rng.normal() * scale).collect(),
+        )
+    }
+
+    #[test]
+    fn error_bounded_by_1p5_delta() {
+        prop::check("rtn error bound", 20, |rng| {
+            let k = 128 * (1 + rng.below(2));
+            let n = 1 + rng.below(16);
+            let loc = (rng.f32() - 0.5) * 10.0;
+            let scale = 0.01 + rng.f32() * 5.0;
+            let w = {
+                let mut t = rand_w(rng, k, n, scale);
+                for v in &mut t.data {
+                    *v += loc;
+                }
+                t
+            };
+            let ql = quantize(&w, 128);
+            let deq = ql.dequantize();
+            for kk in 0..k {
+                for j in 0..n {
+                    let s = ql.scales.data[(kk / 128) * n + j];
+                    let err = (deq.data[kk * n + j] - w.data[kk * n + j])
+                        .abs();
+                    assert!(
+                        err <= 1.5 * s + 1e-5,
+                        "err {err} > 1.5*{s}"
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn grid_points_roundtrip_exactly() {
+        // values already on a quant grid survive exactly
+        let mut rng = Rng::new(5);
+        let scale = 0.125f32;
+        let data: Vec<f32> = (0..128 * 4)
+            .map(|_| (rng.below(16) as f32 - 5.0) * scale)
+            .collect();
+        let w = Tensor::from_vec(&[128, 4], data.clone());
+        let deq = fake_quant(&w, 128);
+        prop::assert_allclose(&deq.data, &data, 1e-6, 1e-6, "grid");
+    }
+
+    #[test]
+    fn constant_group_exact() {
+        for c in [0.731f32, -2.5, 0.0] {
+            let w = Tensor::from_vec(&[128, 2], vec![c; 256]);
+            let deq = fake_quant(&w, 128);
+            prop::assert_allclose(&deq.data, &w.data, 1e-6, 1e-6, "const");
+        }
+    }
+
+    #[test]
+    fn positive_only_group_ok() {
+        // the case a clamped zero point would destroy
+        let mut rng = Rng::new(9);
+        let w = Tensor::from_vec(
+            &[64, 4],
+            (0..256).map(|_| 5.0 + 0.001 * rng.normal()).collect(),
+        );
+        let ql = quantize(&w, 32);
+        let deq = ql.dequantize();
+        let maxerr = prop::max_abs_diff(&deq.data, &w.data);
+        assert!(maxerr < 0.001, "maxerr {maxerr}");
+    }
+
+    #[test]
+    fn clipping_shrinks_scale() {
+        let mut rng = Rng::new(3);
+        let w = rand_w(&mut rng, 128, 8, 1.0);
+        let a = quantize_clipped(&w, 128, 1.0);
+        let b = quantize_clipped(&w, 128, 0.8);
+        for (sa, sb) in a.scales.data.iter().zip(&b.scales.data) {
+            assert!(sb < sa);
+        }
+    }
+
+    #[test]
+    fn shapes() {
+        let mut rng = Rng::new(1);
+        let w = rand_w(&mut rng, 256, 12, 1.0);
+        let ql = quantize(&w, 64);
+        assert_eq!(ql.packed.shape, vec![128, 12]);
+        assert_eq!(ql.scales.shape, vec![4, 12]);
+        assert_eq!(ql.zeros.shape, vec![4, 12]);
+        assert_eq!((ql.k(), ql.n()), (256, 12));
+        // zero points integer-valued
+        assert!(ql.zeros.data.iter().all(|z| *z == z.round()));
+    }
+}

@@ -1,0 +1,186 @@
+//! The paper's **global** alpha grid search (§2.2, §3.4.2).
+//!
+//! A single smoothing strength `alpha` is chosen for the whole model by
+//! minimizing the *entire model's* quantization loss over a grid on [0, 1]
+//! (default step 0.05). This is the key methodological difference from
+//! AWQ's per-layer search: the objective sums every linear's loss in the
+//! original activation frame, so no layer-by-layer error accumulates, and
+//! cached calibration activations make each grid point cheap (no forward
+//! passes during the search).
+
+use std::time::Instant;
+
+use crate::config::{ModelConfig, QuantConfig};
+use crate::model::store::WeightStore;
+use crate::model::LAYER_LINEARS;
+use crate::reffwd::Site;
+use crate::util::threadpool::parallel_map;
+
+use super::calib::CalibData;
+use super::loss::{linear_loss, site_of};
+use super::rtn;
+use super::smooth::{smoothing_factors, unit_weight_absmax};
+
+#[derive(Debug, Clone)]
+pub struct SearchResult {
+    pub alpha: f32,
+    pub loss: f64,
+    /// (alpha, whole-model loss) for every grid point.
+    pub grid: Vec<(f32, f64)>,
+    pub evals: usize,
+    pub elapsed_s: f64,
+}
+
+/// Whole-model quantization loss if smoothed with `alpha` then group-wise
+/// RTN-quantized. Loss is evaluated in the original activation frame.
+pub fn loss_at_alpha(cfg: &ModelConfig, w: &WeightStore, calib: &CalibData,
+                     group_size: usize, alpha: f32) -> f64 {
+    // parallel over (layer, linear)
+    let jobs: Vec<(usize, &'static str)> = (0..cfg.layers)
+        .flat_map(|l| LAYER_LINEARS.iter().map(move |&lin| (l, lin)))
+        .collect();
+    let losses = parallel_map(jobs.len(), |i| {
+        let (layer, lin) = jobs[i];
+        let site: Site = site_of(lin);
+        let stats = calib.stats(layer, site);
+        let wmax = unit_weight_absmax(w, layer, site);
+        let s = smoothing_factors(&stats.absmax, &wmax, alpha);
+        let name = format!("layers.{layer}.{lin}");
+        let orig = w.f32(&name);
+        // scaled = diag(s) W ; eff = diag(s)^-1 dequant(quant(scaled))
+        let mut scaled = orig.clone();
+        scaled.scale_rows(&s);
+        let mut eff = rtn::fake_quant(&scaled, group_size);
+        let inv: Vec<f32> = s.iter().map(|&v| 1.0 / v).collect();
+        eff.scale_rows(&inv);
+        let rows = stats.rows.shape[0].max(1) as f64;
+        linear_loss(&stats.rows, orig, &eff) / rows
+    });
+    losses.iter().sum()
+}
+
+/// Like [`loss_at_alpha`], but with the smoothing factors driven by one
+/// calibration set (`calib_s`) and the loss evaluated on another
+/// (`calib_eval`) — the Table-3 calibration-sensitivity readout: how much
+/// does quantizing against the wrong activation distribution cost on the
+/// distribution that matters?
+pub fn loss_at_alpha_cross(cfg: &ModelConfig, w: &WeightStore,
+                           calib_s: &CalibData, calib_eval: &CalibData,
+                           group_size: usize, alpha: f32) -> f64 {
+    let jobs: Vec<(usize, &'static str)> = (0..cfg.layers)
+        .flat_map(|l| LAYER_LINEARS.iter().map(move |&lin| (l, lin)))
+        .collect();
+    let losses = parallel_map(jobs.len(), |i| {
+        let (layer, lin) = jobs[i];
+        let site: Site = site_of(lin);
+        let stats_s = calib_s.stats(layer, site);
+        let stats_e = calib_eval.stats(layer, site);
+        let wmax = unit_weight_absmax(w, layer, site);
+        let s = smoothing_factors(&stats_s.absmax, &wmax, alpha);
+        let name = format!("layers.{layer}.{lin}");
+        let orig = w.f32(&name);
+        let mut scaled = orig.clone();
+        scaled.scale_rows(&s);
+        let mut eff = rtn::fake_quant(&scaled, group_size);
+        let inv: Vec<f32> = s.iter().map(|&v| 1.0 / v).collect();
+        eff.scale_rows(&inv);
+        let rows = stats_e.rows.shape[0].max(1) as f64;
+        linear_loss(&stats_e.rows, orig, &eff) / rows
+    });
+    losses.iter().sum()
+}
+
+/// Grid search over alpha in [0, 1] with `qcfg.alpha_step`.
+pub fn search_alpha(cfg: &ModelConfig, w: &WeightStore, calib: &CalibData,
+                    qcfg: &QuantConfig) -> SearchResult {
+    let t0 = Instant::now();
+    let mut grid = Vec::new();
+    let steps = (1.0 / qcfg.alpha_step).round() as usize;
+    for i in 0..=steps {
+        let alpha = (i as f64 * qcfg.alpha_step).min(1.0) as f32;
+        let loss = loss_at_alpha(cfg, w, calib, qcfg.group_size, alpha);
+        grid.push((alpha, loss));
+    }
+    let (alpha, loss) = grid
+        .iter()
+        .cloned()
+        .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .unwrap();
+    SearchResult {
+        alpha,
+        loss,
+        evals: grid.len(),
+        grid,
+        elapsed_s: t0.elapsed().as_secs_f64(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::init::{init_weights, InitSpec};
+    use crate::quant::calib;
+
+    fn setup() -> (ModelConfig, WeightStore, CalibData) {
+        let cfg = ModelConfig::tiny();
+        let w = init_weights(&cfg, &InitSpec::with_outliers(0, 4, 60.0));
+        let prompts: Vec<Vec<u32>> = (0..3)
+            .map(|i| (0..10).map(|t| (i * 101 + t * 17) % 512).collect())
+            .collect();
+        let calib = calib::collect(&cfg, &w, &prompts, 24, 0);
+        (cfg, w, calib)
+    }
+
+    #[test]
+    fn search_covers_grid_and_picks_min() {
+        let (cfg, w, calib) = setup();
+        let qcfg = QuantConfig { alpha_step: 0.25, ..Default::default() };
+        let r = search_alpha(&cfg, &w, &calib, &qcfg);
+        assert_eq!(r.grid.len(), 5); // 0, .25, .5, .75, 1
+        let min = r.grid.iter().map(|g| g.1).fold(f64::INFINITY, f64::min);
+        assert_eq!(r.loss, min);
+        assert!(r.grid.iter().any(|g| g.0 == r.alpha));
+    }
+
+    #[test]
+    fn smoothing_beats_no_smoothing_with_outliers() {
+        // the paper's central claim: with activation outliers present, a
+        // smoothed quantization has lower loss than plain RTN. RTN is not
+        // a grid point of Eq. 6 (s == 1 needs alpha such that a^x = w^(1-x)
+        // per channel), so compare against the direct un-smoothed loss.
+        let (cfg, w, calib) = setup();
+        let rtn_loss: f64 = {
+            use crate::model::LAYER_LINEARS;
+            use crate::quant::loss::{linear_loss, site_of};
+            let mut total = 0.0;
+            for layer in 0..cfg.layers {
+                for lin in LAYER_LINEARS {
+                    let name = format!("layers.{layer}.{lin}");
+                    let stats = calib.stats(layer, site_of(lin));
+                    let eff =
+                        crate::quant::rtn::fake_quant(w.f32(&name), 128);
+                    let rows = stats.rows.shape[0].max(1) as f64;
+                    total +=
+                        linear_loss(&stats.rows, w.f32(&name), &eff) / rows;
+                }
+            }
+            total
+        };
+        let qcfg = QuantConfig { alpha_step: 0.05, ..Default::default() };
+        let r = search_alpha(&cfg, &w, &calib, &qcfg);
+        assert!(
+            r.loss < rtn_loss,
+            "searched smoothing loss {} !< RTN loss {rtn_loss}",
+            r.loss
+        );
+    }
+
+    #[test]
+    fn loss_curve_is_finite_everywhere() {
+        let (cfg, w, calib) = setup();
+        for alpha in [0.0f32, 0.5, 1.0] {
+            let l = loss_at_alpha(&cfg, &w, &calib, 128, alpha);
+            assert!(l.is_finite() && l >= 0.0, "alpha {alpha}: {l}");
+        }
+    }
+}

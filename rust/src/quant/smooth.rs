@@ -1,0 +1,220 @@
+//! SmoothQuant+ per-channel smoothing (paper Eq. 5/6).
+//!
+//! `s_j = max|X_j|^alpha / max|W_j|^(1-alpha)` per input channel j of each
+//! smoothing unit; activations are divided by `s` by folding `diag(s)^-1`
+//! into the *producer* (so the model stays mathematically equivalent), and
+//! consumer weights are multiplied row-wise by `s`:
+//!
+//! | unit (site)   | producer fold (÷ s)           | consumers (rows × s) |
+//! |---------------|-------------------------------|----------------------|
+//! | `AttnIn`      | `attn_norm` gain              | wq, wk, wv           |
+//! | `OIn`         | `wv` output columns           | wo                   |
+//! | `MlpIn`       | `mlp_norm` gain               | w_gate, w_up         |
+//! | `DownIn`      | `w_up` output columns         | w_down               |
+//!
+//! (`OIn` works because attention mixes tokens, not channels: scaling v's
+//! channels by 1/s scales the attention output's channels by 1/s. `DownIn`
+//! works because SwiGLU is elementwise.) This covers all 7 linears of the
+//! decoder layer — the residual-stream fusion of the paper's Figure 5.
+
+use crate::config::ModelConfig;
+use crate::model::store::WeightStore;
+use crate::reffwd::Site;
+use crate::tensor::Tensor;
+
+use super::calib::CalibData;
+
+const S_MIN: f32 = 1e-5;
+const S_MAX: f32 = 1e5;
+
+/// Eq. 6: per-channel smoothing factors from activation and weight absmax.
+pub fn smoothing_factors(act_absmax: &[f32], w_absmax: &[f32], alpha: f32)
+    -> Vec<f32> {
+    assert_eq!(act_absmax.len(), w_absmax.len());
+    act_absmax
+        .iter()
+        .zip(w_absmax)
+        .map(|(&a, &w)| {
+            let a = a.max(S_MIN);
+            let w = w.max(S_MIN);
+            (a.powf(alpha) / w.powf(1.0 - alpha)).clamp(S_MIN, S_MAX)
+        })
+        .collect()
+}
+
+/// Combined per-input-channel |W| max over a unit's consumer linears.
+pub fn unit_weight_absmax(store: &WeightStore, layer: usize, site: Site)
+    -> Vec<f32> {
+    let mut out: Option<Vec<f32>> = None;
+    for lin in site.consumers() {
+        let w = store.f32(&format!("layers.{layer}.{lin}"));
+        let rm = w.row_absmax();
+        out = Some(match out {
+            None => rm,
+            Some(mut acc) => {
+                for (a, b) in acc.iter_mut().zip(&rm) {
+                    *a = a.max(*b);
+                }
+                acc
+            }
+        });
+    }
+    out.expect("site has consumers")
+}
+
+/// The smoothing factors chosen for each (layer, site).
+#[derive(Debug, Clone, Default)]
+pub struct SmoothingReport {
+    pub factors: Vec<((usize, Site), Vec<f32>)>,
+    pub alpha: f32,
+}
+
+/// Smooth the model in place with strength `alpha`, folding the inverse
+/// factors into producers per the table above. Returns the factors used.
+pub fn smooth_model(store: &mut WeightStore, cfg: &ModelConfig,
+                    calib: &CalibData, alpha: f32) -> SmoothingReport {
+    let mut report = SmoothingReport { factors: vec![], alpha };
+    for layer in 0..cfg.layers {
+        for site in Site::all() {
+            let stats = calib.stats(layer, site);
+            let wmax = unit_weight_absmax(store, layer, site);
+            let s = smoothing_factors(&stats.absmax, &wmax, alpha);
+            apply_unit(store, layer, site, &s);
+            report.factors.push(((layer, site), s));
+        }
+    }
+    report
+}
+
+/// Apply one unit's factors: producer ÷ s, consumer rows × s.
+pub fn apply_unit(store: &mut WeightStore, layer: usize, site: Site,
+                  s: &[f32]) {
+    let inv: Vec<f32> = s.iter().map(|&v| 1.0 / v).collect();
+    let lp = |n: &str| format!("layers.{layer}.{n}");
+    match site {
+        Site::AttnIn => {
+            scale_vec(store.f32_mut(&lp("attn_norm")), &inv);
+            for lin in ["wq", "wk", "wv"] {
+                store.f32_mut(&lp(lin)).scale_rows(s);
+            }
+        }
+        Site::OIn => {
+            store.f32_mut(&lp("wv")).scale_cols(&inv);
+            store.f32_mut(&lp("wo")).scale_rows(s);
+        }
+        Site::MlpIn => {
+            scale_vec(store.f32_mut(&lp("mlp_norm")), &inv);
+            for lin in ["w_gate", "w_up"] {
+                store.f32_mut(&lp(lin)).scale_rows(s);
+            }
+        }
+        Site::DownIn => {
+            store.f32_mut(&lp("w_up")).scale_cols(&inv);
+            store.f32_mut(&lp("w_down")).scale_rows(s);
+        }
+    }
+}
+
+fn scale_vec(t: &mut Tensor, s: &[f32]) {
+    assert_eq!(t.data.len(), s.len());
+    for (x, &f) in t.data.iter_mut().zip(s) {
+        *x *= f;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::init::{init_weights, InitSpec};
+    use crate::quant::calib;
+    use crate::reffwd::{NoHook, RefModel};
+    use crate::util::prop;
+
+    fn setup() -> (ModelConfig, WeightStore, CalibData) {
+        let cfg = ModelConfig::tiny();
+        let w = init_weights(&cfg, &InitSpec::with_outliers(0, 4, 60.0));
+        let prompts: Vec<Vec<u32>> =
+            (0..4).map(|i| (0..12).map(|t| (i * 37 + t * 13) % 512).collect())
+                  .collect();
+        let calib = calib::collect(&cfg, &w, &prompts, 32, 0);
+        (cfg, w, calib)
+    }
+
+    #[test]
+    fn factors_formula() {
+        let s = smoothing_factors(&[4.0, 16.0], &[1.0, 4.0], 0.5);
+        prop::assert_allclose(&s, &[2.0, 2.0], 1e-5, 1e-6, "eq6");
+        // alpha = 1: pure activation max
+        let s = smoothing_factors(&[4.0, 9.0], &[7.0, 7.0], 1.0);
+        prop::assert_allclose(&s, &[4.0, 9.0], 1e-5, 1e-6, "alpha=1");
+        // alpha = 0: pure inverse weight max
+        let s = smoothing_factors(&[4.0, 9.0], &[2.0, 8.0], 0.0);
+        prop::assert_allclose(&s, &[0.5, 0.125], 1e-5, 1e-6, "alpha=0");
+    }
+
+    #[test]
+    fn smoothing_is_mathematically_equivalent() {
+        // The paper's core equivalence claim (Eq. 5): smoothed model ==
+        // original model, for any alpha.
+        let (cfg, w, calib) = setup();
+        let tokens = [3u32, 77, 205, 11, 460, 9];
+        let (want, _) = RefModel::new(&cfg, &w).prefill(&tokens, &mut NoHook);
+        for alpha in [0.0, 0.35, 0.5, 0.85, 1.0] {
+            let mut sm = w.clone();
+            smooth_model(&mut sm, &cfg, &calib, alpha);
+            let (got, _) =
+                RefModel::new(&cfg, &sm).prefill(&tokens, &mut NoHook);
+            prop::assert_allclose(&got.data, &want.data, 2e-3, 2e-3,
+                                  &format!("alpha {alpha}"));
+        }
+    }
+
+    #[test]
+    fn decode_also_equivalent() {
+        let (cfg, w, calib) = setup();
+        let mut sm = w.clone();
+        smooth_model(&mut sm, &cfg, &calib, 0.5);
+        let orig = RefModel::new(&cfg, &w);
+        let smod = RefModel::new(&cfg, &sm);
+        let (_, mut c1) = orig.prefill(&[1, 2, 3], &mut NoHook);
+        let (_, mut c2) = smod.prefill(&[1, 2, 3], &mut NoHook);
+        let a = orig.decode(42, &mut c1, &mut NoHook);
+        let b = smod.decode(42, &mut c2, &mut NoHook);
+        prop::assert_allclose(&a, &b, 2e-3, 2e-3, "decode equiv");
+    }
+
+    #[test]
+    fn smoothing_flattens_activation_outliers() {
+        // after smoothing with alpha=0.5, the smoothed model's activation
+        // absmax spread (max / median) must shrink dramatically
+        let (cfg, w, calib) = setup();
+        let mut sm = w.clone();
+        smooth_model(&mut sm, &cfg, &calib, 0.5);
+        let prompts: Vec<Vec<u32>> = vec![(0..12).map(|t| t * 13 % 512)
+            .collect()];
+        let after = calib::collect(&cfg, &sm, &prompts, 8, 0);
+        let spread = |c: &CalibData| {
+            let s = c.stats(0, crate::reffwd::Site::AttnIn);
+            let mut m = s.absmax.clone();
+            m.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            m[s.channels - 1] / m[s.channels / 2].max(1e-9)
+        };
+        let before_spread = spread(&calib);
+        let after_spread = spread(&after);
+        assert!(
+            after_spread < before_spread / 4.0,
+            "spread before {before_spread} after {after_spread}"
+        );
+    }
+
+    #[test]
+    fn unit_weight_absmax_combines_consumers() {
+        let (cfg, w, _) = setup();
+        let m = unit_weight_absmax(&w, 0, Site::AttnIn);
+        assert_eq!(m.len(), cfg.dim);
+        let wq = w.f32("layers.0.wq").row_absmax();
+        for j in 0..cfg.dim {
+            assert!(m[j] >= wq[j]);
+        }
+    }
+}

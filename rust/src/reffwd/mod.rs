@@ -1,0 +1,436 @@
+//! Pure-Rust reference forward pass of the Llama-family model.
+//!
+//! Mirrors `python/compile/model.py` operation-for-operation (RMSNorm,
+//! half-split RoPE, causal attention, SwiGLU) so it can cross-validate the
+//! PJRT-executed HLO (`rust/tests/runtime_vs_reffwd.rs`). It is also the
+//! workhorse for everything that needs activations on the host:
+//! calibration statistics, quantization-loss evaluation, Fig 1/2/3, and
+//! CPU-only accuracy evals.
+//!
+//! Quantized variants are evaluated by passing a store whose linear
+//! weights have been fake-quantized (quantize→dequantize), which is
+//! numerically identical to the W4A16 kernel's dequant-matmul in f32.
+
+use crate::config::ModelConfig;
+use crate::model::store::WeightStore;
+use crate::tensor::Tensor;
+
+/// Activation observation sites (the smoothing units of one decoder layer).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Site {
+    /// Output of `attn_norm` = input of wq/wk/wv.
+    AttnIn,
+    /// Attention output = input of wo.
+    OIn,
+    /// Output of `mlp_norm` = input of w_gate/w_up.
+    MlpIn,
+    /// `silu(gate) * up` = input of w_down.
+    DownIn,
+}
+
+impl Site {
+    pub fn all() -> [Site; 4] {
+        [Site::AttnIn, Site::OIn, Site::MlpIn, Site::DownIn]
+    }
+    /// The linears consuming this site's activation.
+    pub fn consumers(&self) -> &'static [&'static str] {
+        match self {
+            Site::AttnIn => &["wq", "wk", "wv"],
+            Site::OIn => &["wo"],
+            Site::MlpIn => &["w_gate", "w_up"],
+            Site::DownIn => &["w_down"],
+        }
+    }
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Site::AttnIn => "attn_in",
+            Site::OIn => "o_in",
+            Site::MlpIn => "mlp_in",
+            Site::DownIn => "down_in",
+        }
+    }
+}
+
+/// Observer for layer activations during a forward pass.
+pub trait ActHook {
+    /// `rows`: `[T, C]` activation rows entering `site` of `layer`.
+    fn record(&mut self, layer: usize, site: Site, rows: &Tensor);
+}
+
+/// No-op hook.
+pub struct NoHook;
+impl ActHook for NoHook {
+    fn record(&mut self, _: usize, _: Site, _: &Tensor) {}
+}
+
+/// Growable per-layer KV cache: `k[layer]`, `v[layer]` are `[len, D]`.
+#[derive(Debug, Clone)]
+pub struct KvCache {
+    pub k: Vec<Vec<f32>>,
+    pub v: Vec<Vec<f32>>,
+    pub len: usize,
+    dim: usize,
+}
+
+impl KvCache {
+    pub fn new(cfg: &ModelConfig) -> Self {
+        KvCache {
+            k: vec![vec![]; cfg.layers],
+            v: vec![vec![]; cfg.layers],
+            len: 0,
+            dim: cfg.dim,
+        }
+    }
+    fn push(&mut self, layer: usize, krow: &[f32], vrow: &[f32]) {
+        self.k[layer].extend_from_slice(krow);
+        self.v[layer].extend_from_slice(vrow);
+    }
+    pub fn k_rows(&self, layer: usize) -> &[f32] {
+        &self.k[layer]
+    }
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+}
+
+/// Reference model: a config plus a canonical fp16-layout weight store.
+pub struct RefModel<'a> {
+    pub cfg: &'a ModelConfig,
+    pub w: &'a WeightStore,
+}
+
+impl<'a> RefModel<'a> {
+    pub fn new(cfg: &'a ModelConfig, w: &'a WeightStore) -> Self {
+        RefModel { cfg, w }
+    }
+
+    /// Full-prompt forward. Returns per-position logits `[S, V]` and the
+    /// populated KV cache.
+    pub fn prefill<H: ActHook>(&self, tokens: &[u32], hook: &mut H)
+        -> (Tensor, KvCache) {
+        let cfg = self.cfg;
+        let s = tokens.len();
+        let d = cfg.dim;
+        let mut cache = KvCache::new(cfg);
+        let embed = self.w.f32("embed");
+        let mut h = Tensor::zeros(&[s, d]);
+        for (i, &t) in tokens.iter().enumerate() {
+            h.row_mut(i).copy_from_slice(embed.row(t as usize));
+        }
+        for layer in 0..cfg.layers {
+            let lp = format!("layers.{layer}.");
+            // ---- attention
+            let xn = self.rmsnorm(&h, &format!("{lp}attn_norm"));
+            hook.record(layer, Site::AttnIn, &xn);
+            let q = xn.matmul(self.w.f32(&format!("{lp}wq")));
+            let k = xn.matmul(self.w.f32(&format!("{lp}wk")));
+            let v = xn.matmul(self.w.f32(&format!("{lp}wv")));
+            let (q, k) = (self.rope_rows(q, 0), self.rope_rows(k, 0));
+            for i in 0..s {
+                cache.push(layer, k.row(i), v.row(i));
+            }
+            let attn = self.attention_causal(&q, &k, &v);
+            hook.record(layer, Site::OIn, &attn);
+            let o = attn.matmul(self.w.f32(&format!("{lp}wo")));
+            add_inplace(&mut h, &o);
+            // ---- mlp
+            let xm = self.rmsnorm(&h, &format!("{lp}mlp_norm"));
+            hook.record(layer, Site::MlpIn, &xm);
+            let gate = xm.matmul(self.w.f32(&format!("{lp}w_gate")));
+            let up = xm.matmul(self.w.f32(&format!("{lp}w_up")));
+            let a = swiglu(&gate, &up);
+            hook.record(layer, Site::DownIn, &a);
+            let down = a.matmul(self.w.f32(&format!("{lp}w_down")));
+            add_inplace(&mut h, &down);
+        }
+        cache.len = s;
+        let hn = self.rmsnorm(&h, "final_norm");
+        let logits = hn.matmul(self.w.f32("lm_head"));
+        (logits, cache)
+    }
+
+    /// One decode step: append `token`, return next-token logits `[V]`.
+    pub fn decode<H: ActHook>(&self, token: u32, cache: &mut KvCache,
+                              hook: &mut H) -> Vec<f32> {
+        let cfg = self.cfg;
+        let d = cfg.dim;
+        let pos = cache.len;
+        let embed = self.w.f32("embed");
+        let mut h = Tensor::from_vec(&[1, d],
+                                     embed.row(token as usize).to_vec());
+        for layer in 0..cfg.layers {
+            let lp = format!("layers.{layer}.");
+            let xn = self.rmsnorm(&h, &format!("{lp}attn_norm"));
+            hook.record(layer, Site::AttnIn, &xn);
+            let q = self.rope_rows(
+                xn.matmul(self.w.f32(&format!("{lp}wq"))), pos);
+            let k = self.rope_rows(
+                xn.matmul(self.w.f32(&format!("{lp}wk"))), pos);
+            let v = xn.matmul(self.w.f32(&format!("{lp}wv")));
+            cache.push(layer, k.row(0), v.row(0));
+            let attn = self.attention_one(&q, cache, layer, pos + 1);
+            hook.record(layer, Site::OIn, &attn);
+            let o = attn.matmul(self.w.f32(&format!("{lp}wo")));
+            add_inplace(&mut h, &o);
+            let xm = self.rmsnorm(&h, &format!("{lp}mlp_norm"));
+            hook.record(layer, Site::MlpIn, &xm);
+            let gate = xm.matmul(self.w.f32(&format!("{lp}w_gate")));
+            let up = xm.matmul(self.w.f32(&format!("{lp}w_up")));
+            let a = swiglu(&gate, &up);
+            hook.record(layer, Site::DownIn, &a);
+            let down = a.matmul(self.w.f32(&format!("{lp}w_down")));
+            add_inplace(&mut h, &down);
+        }
+        cache.len = pos + 1;
+        let hn = self.rmsnorm(&h, "final_norm");
+        hn.matmul(self.w.f32("lm_head")).data
+    }
+
+    // ------------------------------------------------------------ pieces
+
+    fn rmsnorm(&self, x: &Tensor, gain_name: &str) -> Tensor {
+        let gain = &self.w.f32(gain_name).data;
+        let (m, n) = x.dims2();
+        let mut out = Tensor::zeros(&[m, n]);
+        for i in 0..m {
+            let row = x.row(i);
+            let ms: f64 = row.iter().map(|&v| (v as f64) * (v as f64)).sum();
+            let r = 1.0 / ((ms / n as f64) + self.cfg.norm_eps as f64).sqrt();
+            let orow = out.row_mut(i);
+            for j in 0..n {
+                orow[j] = (row[j] as f64 * r) as f32 * gain[j];
+            }
+        }
+        out
+    }
+
+    /// Apply half-split RoPE to `[T, D]` rows; row i is at position
+    /// `base_pos + i` (prefill passes base 0, decode passes its position).
+    fn rope_rows(&self, mut x: Tensor, base_pos: usize) -> Tensor {
+        let cfg = self.cfg;
+        let (t, _) = x.dims2();
+        let hd = cfg.head_dim();
+        let half = hd / 2;
+        for i in 0..t {
+            let pos = (base_pos + i) as f32;
+            let row = x.row_mut(i);
+            for h in 0..cfg.heads {
+                let off = h * hd;
+                for f in 0..half {
+                    let freq = cfg
+                        .rope_theta
+                        .powf(-2.0 * f as f32 / hd as f32);
+                    let (sinv, cosv) = (pos * freq).sin_cos();
+                    let a = row[off + f];
+                    let b = row[off + half + f];
+                    row[off + f] = a * cosv - b * sinv;
+                    row[off + half + f] = a * sinv + b * cosv;
+                }
+            }
+        }
+        x
+    }
+
+    /// Causal multi-head attention over an `[S, D]` block (prefill).
+    fn attention_causal(&self, q: &Tensor, k: &Tensor, v: &Tensor)
+        -> Tensor {
+        let cfg = self.cfg;
+        let (s, d) = q.dims2();
+        let hd = cfg.head_dim();
+        let scale = 1.0 / (hd as f32).sqrt();
+        let mut out = Tensor::zeros(&[s, d]);
+        for h in 0..cfg.heads {
+            let off = h * hd;
+            for i in 0..s {
+                // scores over keys 0..=i
+                let mut scores = Vec::with_capacity(i + 1);
+                for j in 0..=i {
+                    let mut dot = 0.0f32;
+                    for f in 0..hd {
+                        dot += q.data[i * d + off + f]
+                            * k.data[j * d + off + f];
+                    }
+                    scores.push(dot * scale);
+                }
+                softmax_inplace(&mut scores);
+                let orow = &mut out.data[i * d + off..i * d + off + hd];
+                for (j, &p) in scores.iter().enumerate() {
+                    for f in 0..hd {
+                        orow[f] += p * v.data[j * d + off + f];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Single-query attention against the cache (decode).
+    fn attention_one(&self, q: &Tensor, cache: &KvCache, layer: usize,
+                     klen: usize) -> Tensor {
+        let cfg = self.cfg;
+        let d = cfg.dim;
+        let hd = cfg.head_dim();
+        let scale = 1.0 / (hd as f32).sqrt();
+        let kd = &cache.k[layer];
+        let vd = &cache.v[layer];
+        let mut out = Tensor::zeros(&[1, d]);
+        for h in 0..cfg.heads {
+            let off = h * hd;
+            let mut scores = Vec::with_capacity(klen);
+            for j in 0..klen {
+                let mut dot = 0.0f32;
+                for f in 0..hd {
+                    dot += q.data[off + f] * kd[j * d + off + f];
+                }
+                scores.push(dot * scale);
+            }
+            softmax_inplace(&mut scores);
+            let orow = &mut out.data[off..off + hd];
+            for (j, &p) in scores.iter().enumerate() {
+                for f in 0..hd {
+                    orow[f] += p * vd[j * d + off + f];
+                }
+            }
+        }
+        out
+    }
+}
+
+fn add_inplace(a: &mut Tensor, b: &Tensor) {
+    debug_assert_eq!(a.shape, b.shape);
+    for (x, y) in a.data.iter_mut().zip(&b.data) {
+        *x += y;
+    }
+}
+
+fn swiglu(gate: &Tensor, up: &Tensor) -> Tensor {
+    debug_assert_eq!(gate.shape, up.shape);
+    Tensor::from_vec(
+        &gate.shape,
+        gate.data
+            .iter()
+            .zip(&up.data)
+            .map(|(&g, &u)| g / (1.0 + (-g).exp()) * u)
+            .collect(),
+    )
+}
+
+fn softmax_inplace(xs: &mut [f32]) {
+    let m = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0f32;
+    for x in xs.iter_mut() {
+        *x = (*x - m).exp();
+        sum += *x;
+    }
+    for x in xs.iter_mut() {
+        *x /= sum;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::init::{init_weights, InitSpec};
+    use crate::util::prop;
+
+    fn tiny() -> (ModelConfig, WeightStore) {
+        let cfg = ModelConfig::tiny();
+        let w = init_weights(&cfg, &InitSpec::benign(0));
+        (cfg, w)
+    }
+
+    #[test]
+    fn prefill_shapes_and_finite() {
+        let (cfg, w) = tiny();
+        let m = RefModel::new(&cfg, &w);
+        let (logits, cache) = m.prefill(&[1, 2, 3, 4, 5], &mut NoHook);
+        assert_eq!(logits.shape, vec![5, cfg.vocab]);
+        assert_eq!(cache.len, 5);
+        assert!(logits.data.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn decode_matches_prefill() {
+        // decode(t_n | prefill(t_0..n-1)) == prefill(t_0..n)[n]
+        let (cfg, w) = tiny();
+        let m = RefModel::new(&cfg, &w);
+        let seq = [5u32, 9, 2, 7, 1, 4, 6, 8];
+        let (full, _) = m.prefill(&seq, &mut NoHook);
+        let (_, mut cache) = m.prefill(&seq[..7], &mut NoHook);
+        let dec = m.decode(seq[7], &mut cache, &mut NoHook);
+        prop::assert_allclose(&dec, full.row(7), 1e-4, 1e-5,
+                              "decode vs prefill");
+        assert_eq!(cache.len, 8);
+    }
+
+    #[test]
+    fn multi_step_decode_consistent() {
+        let (cfg, w) = tiny();
+        let m = RefModel::new(&cfg, &w);
+        let seq = [3u32, 1, 4, 1, 5, 9, 2, 6];
+        let (full, _) = m.prefill(&seq, &mut NoHook);
+        let (_, mut cache) = m.prefill(&seq[..4], &mut NoHook);
+        for i in 4..8 {
+            let dec = m.decode(seq[i], &mut cache, &mut NoHook);
+            prop::assert_allclose(&dec, full.row(i), 1e-4, 1e-5, "step");
+        }
+    }
+
+    #[test]
+    fn causality() {
+        // changing a later token must not change earlier logits
+        let (cfg, w) = tiny();
+        let m = RefModel::new(&cfg, &w);
+        let (a, _) = m.prefill(&[1, 2, 3, 4], &mut NoHook);
+        let (b, _) = m.prefill(&[1, 2, 3, 400], &mut NoHook);
+        prop::assert_allclose(a.row(0), b.row(0), 1e-6, 1e-7, "pos 0");
+        prop::assert_allclose(a.row(2), b.row(2), 1e-6, 1e-7, "pos 2");
+    }
+
+    #[test]
+    fn hooks_fire_per_layer_and_site() {
+        struct Count(std::collections::HashMap<(usize, Site), usize>);
+        impl ActHook for Count {
+            fn record(&mut self, l: usize, s: Site, rows: &Tensor) {
+                *self.0.entry((l, s)).or_default() += rows.shape[0];
+            }
+        }
+        let (cfg, w) = tiny();
+        let m = RefModel::new(&cfg, &w);
+        let mut h = Count(Default::default());
+        m.prefill(&[1, 2, 3], &mut h);
+        for l in 0..cfg.layers {
+            for s in Site::all() {
+                assert_eq!(h.0[&(l, s)], 3, "layer {l} site {s:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn outlier_init_produces_outlier_activations() {
+        let cfg = ModelConfig::tiny();
+        let spec = InitSpec::with_outliers(0, 4, 60.0);
+        let w = init_weights(&cfg, &spec);
+        let m = RefModel::new(&cfg, &w);
+        struct MaxIn(Vec<f32>);
+        impl ActHook for MaxIn {
+            fn record(&mut self, _: usize, s: Site, rows: &Tensor) {
+                if s == Site::AttnIn {
+                    for (j, v) in rows.col_absmax().iter().enumerate() {
+                        self.0[j] = self.0[j].max(*v);
+                    }
+                }
+            }
+        }
+        let mut h = MaxIn(vec![0.0; cfg.dim]);
+        m.prefill(&[7, 42, 99, 3, 250, 17], &mut h);
+        let mut mags = h.0.clone();
+        mags.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = mags[cfg.dim / 2];
+        let top = mags[cfg.dim - 1];
+        assert!(
+            top > 10.0 * median,
+            "outlier {top} vs median {median} — injection too weak"
+        );
+    }
+}

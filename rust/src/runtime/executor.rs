@@ -1,0 +1,278 @@
+//! The model runtime: weights uploaded to the device once (the paper's
+//! "quantize during CPU→GPU migration" loader lives in
+//! `quant::pipeline`), executables compiled lazily per bucket, and
+//! prefill/decode steps executed through PJRT with no Python anywhere.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{ModelConfig, Precision};
+use crate::model::store::{Entry, WeightStore};
+use crate::model::{weight_names, weight_names_w4a16};
+
+use super::manifest::{ArtifactMeta, Manifest};
+
+/// Runtime counters (compiles, executions, host<->device traffic).
+#[derive(Debug, Clone, Default)]
+pub struct RuntimeStats {
+    pub compiles: usize,
+    pub compile_s: f64,
+    pub prefills: usize,
+    pub decodes: usize,
+    pub exec_s: f64,
+    pub h2d_bytes: u64,
+    pub d2h_bytes: u64,
+}
+
+/// One loaded model: PJRT client + device-resident weights + executable
+/// cache. Not `Sync`: the engine drives it from a single thread.
+pub struct ModelRuntime {
+    client: xla::PjRtClient,
+    pub cfg: ModelConfig,
+    pub precision: Precision,
+    arts: Vec<ArtifactMeta>,
+    hlo_dir: std::path::PathBuf,
+    exes: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    weights: Vec<xla::PjRtBuffer>,
+    pub stats: RefCell<RuntimeStats>,
+}
+
+pub struct PrefillResult {
+    pub batch: usize,
+    pub seq: usize,
+    /// `[B, S, V]` row-major.
+    pub logits: Vec<f32>,
+    /// `[L, 2, B, S, D]` row-major.
+    pub kv_new: Vec<f32>,
+}
+
+pub struct DecodeResult {
+    pub batch: usize,
+    /// `[B, V]` row-major.
+    pub logits: Vec<f32>,
+    /// `[L, 2, B, 1, D]` row-major.
+    pub kv_new: Vec<f32>,
+}
+
+impl ModelRuntime {
+    /// Load a model: verify the deploy store layout, upload every tensor
+    /// to the device in canonical order.
+    pub fn load(manifest: &Manifest, size: &str, precision: Precision,
+                deploy: &WeightStore) -> Result<ModelRuntime> {
+        let entry = manifest.model(size)?;
+        let cfg = entry.config.clone();
+        let want = match precision {
+            Precision::Fp16 => weight_names(&cfg),
+            Precision::W4a16 => weight_names_w4a16(&cfg),
+        };
+        if deploy.names() != want {
+            bail!(
+                "deploy store layout mismatch for {size}/{}: {} names vs {}",
+                precision.as_str(), deploy.names().len(), want.len()
+            );
+        }
+        let client = xla::PjRtClient::cpu()?;
+        let mut weights = Vec::with_capacity(deploy.len());
+        let mut h2d = 0u64;
+        for (name, e) in deploy.iter() {
+            let buf = match e {
+                Entry::F32(t) => {
+                    h2d += 4 * t.numel() as u64;
+                    client
+                        .buffer_from_host_buffer::<f32>(&t.data, &t.shape,
+                                                        None)
+                        .with_context(|| format!("upload {name}"))?
+                }
+                Entry::U8(t) => {
+                    h2d += t.numel() as u64;
+                    client
+                        .buffer_from_host_buffer::<u8>(&t.data, &t.shape,
+                                                       None)
+                        .with_context(|| format!("upload {name}"))?
+                }
+            };
+            weights.push(buf);
+        }
+        let arts = manifest
+            .artifacts(size, precision)?
+            .into_iter()
+            .cloned()
+            .collect();
+        Ok(ModelRuntime {
+            client,
+            cfg,
+            precision,
+            arts,
+            hlo_dir: manifest.dir.clone(),
+            exes: RefCell::new(HashMap::new()),
+            weights,
+            stats: RefCell::new(RuntimeStats {
+                h2d_bytes: h2d,
+                ..Default::default()
+            }),
+        })
+    }
+
+    /// Available decode batch buckets (ascending).
+    pub fn decode_batches(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .arts
+            .iter()
+            .filter(|a| a.phase == "decode")
+            .map(|a| a.batch)
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Available prefill buckets (batch, seq), sorted by capacity.
+    pub fn prefill_buckets(&self) -> Vec<(usize, usize)> {
+        let mut v: Vec<(usize, usize)> = self
+            .arts
+            .iter()
+            .filter(|a| a.phase == "prefill")
+            .map(|a| (a.batch, a.seq))
+            .collect();
+        v.sort_by_key(|&(b, s)| (b * s, s));
+        v
+    }
+
+    fn pick_prefill(&self, batch: usize, seq: usize) -> Result<&ArtifactMeta> {
+        self.arts
+            .iter()
+            .filter(|a| {
+                a.phase == "prefill" && a.batch >= batch && a.seq >= seq
+            })
+            .min_by_key(|a| (a.batch * a.seq, a.seq))
+            .with_context(|| {
+                format!("no prefill bucket for batch {batch} seq {seq}")
+            })
+    }
+
+    fn pick_decode(&self, batch: usize) -> Result<&ArtifactMeta> {
+        self.arts
+            .iter()
+            .filter(|a| a.phase == "decode" && a.batch >= batch)
+            .min_by_key(|a| a.batch)
+            .with_context(|| format!("no decode bucket for batch {batch}"))
+    }
+
+    fn get_exe(&self, art: &ArtifactMeta)
+        -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.exes.borrow().get(&art.name) {
+            return Ok(e.clone());
+        }
+        let t0 = Instant::now();
+        let path = self.hlo_dir.join(&art.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow::anyhow!("load {path:?}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(self.client.compile(&comp)?);
+        let mut st = self.stats.borrow_mut();
+        st.compiles += 1;
+        st.compile_s += t0.elapsed().as_secs_f64();
+        self.exes.borrow_mut().insert(art.name.clone(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Force-compile every bucket up front (serving warm-start).
+    pub fn warmup(&self) -> Result<()> {
+        let arts: Vec<ArtifactMeta> = self.arts.clone();
+        for a in &arts {
+            self.get_exe(a)?;
+        }
+        Ok(())
+    }
+
+    /// Prefill up to `bucket.batch` prompts (padded). Returns full logits
+    /// and the new K/V rows.
+    pub fn prefill(&self, prompts: &[&[u32]]) -> Result<PrefillResult> {
+        let batch = prompts.len();
+        let max_seq = prompts.iter().map(|p| p.len()).max().unwrap_or(1);
+        let art = self.pick_prefill(batch, max_seq)?;
+        let (ab, aseq) = (art.batch, art.seq);
+        let exe = self.get_exe(art)?;
+
+        let mut tokens = vec![0i32; ab * aseq];
+        let mut lens = vec![0i32; ab];
+        for (b, p) in prompts.iter().enumerate() {
+            for (i, &t) in p.iter().enumerate() {
+                tokens[b * aseq + i] = t as i32;
+            }
+            lens[b] = p.len() as i32;
+        }
+        let t0 = Instant::now();
+        let tok_buf = self
+            .client
+            .buffer_from_host_buffer::<i32>(&tokens, &[ab, aseq], None)?;
+        let len_buf = self
+            .client
+            .buffer_from_host_buffer::<i32>(&lens, &[ab], None)?;
+        let mut args: Vec<&xla::PjRtBuffer> = vec![&tok_buf, &len_buf];
+        args.extend(self.weights.iter());
+        let result = exe.execute_b(&args)?[0][0].to_literal_sync()?;
+        let (lg, kv) = result.to_tuple2()?;
+        let logits = lg.to_vec::<f32>()?;
+        let kv_new = kv.to_vec::<f32>()?;
+        let mut st = self.stats.borrow_mut();
+        st.prefills += 1;
+        st.exec_s += t0.elapsed().as_secs_f64();
+        st.h2d_bytes += (tokens.len() * 4 + lens.len() * 4) as u64;
+        st.d2h_bytes += (logits.len() * 4 + kv_new.len() * 4) as u64;
+        Ok(PrefillResult { batch: ab, seq: aseq, logits, kv_new })
+    }
+
+    /// One decode step over an assembled KV batch (`[L,2,B,MAX,D]` from
+    /// [`super::kv::assemble_batch`] with `B = bucket`). `tokens`/`lens`
+    /// carry the live sequences; padding slots use token 0 / len 0.
+    pub fn decode(&self, tokens: &[u32], lens: &[usize], kv_batch: &[f32])
+        -> Result<DecodeResult> {
+        let live = tokens.len();
+        let art = self.pick_decode(live)?;
+        let ab = art.batch;
+        let exe = self.get_exe(art)?;
+        let expected =
+            self.cfg.layers * 2 * ab * self.cfg.max_len * self.cfg.dim;
+        if kv_batch.len() != expected {
+            bail!("kv batch len {} != expected {expected} (bucket {ab})",
+                  kv_batch.len());
+        }
+        let mut toks = vec![0i32; ab];
+        let mut ls = vec![0i32; ab];
+        for i in 0..live {
+            toks[i] = tokens[i] as i32;
+            ls[i] = lens[i] as i32;
+        }
+        let t0 = Instant::now();
+        let tok_buf =
+            self.client.buffer_from_host_buffer::<i32>(&toks, &[ab], None)?;
+        let len_buf =
+            self.client.buffer_from_host_buffer::<i32>(&ls, &[ab], None)?;
+        let kv_shape =
+            [self.cfg.layers, 2, ab, self.cfg.max_len, self.cfg.dim];
+        let kv_buf = self
+            .client
+            .buffer_from_host_buffer::<f32>(kv_batch, &kv_shape, None)?;
+        let mut args: Vec<&xla::PjRtBuffer> =
+            vec![&tok_buf, &len_buf, &kv_buf];
+        args.extend(self.weights.iter());
+        let result = exe.execute_b(&args)?[0][0].to_literal_sync()?;
+        let (lg, kvn) = result.to_tuple2()?;
+        let logits = lg.to_vec::<f32>()?;
+        let kv_new = kvn.to_vec::<f32>()?;
+        let mut st = self.stats.borrow_mut();
+        st.decodes += 1;
+        st.exec_s += t0.elapsed().as_secs_f64();
+        st.h2d_bytes += (kv_batch.len() * 4 + toks.len() * 8) as u64;
+        st.d2h_bytes += (logits.len() * 4 + kv_new.len() * 4) as u64;
+        Ok(DecodeResult { batch: ab, logits, kv_new })
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.cfg.vocab
+    }
+}

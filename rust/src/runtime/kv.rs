@@ -1,0 +1,220 @@
+//! Host-side KV caches.
+//!
+//! Each sequence owns a fixed-capacity cache laid out `[L, 2, MAX, D]`
+//! (layer-major, K lane then V lane). Batch assembly packs B sequence
+//! caches into the `[L, 2, B, MAX, D]` input the decode executables
+//! expect; appends scatter the `kv_new` output rows back. All of it is
+//! `memcpy`-shaped, which is what makes per-step batch recomposition (the
+//! continuous-batching hot path) cheap.
+
+use crate::config::ModelConfig;
+
+/// Per-sequence KV cache with capacity `max_len` tokens.
+#[derive(Debug, Clone)]
+pub struct SeqKv {
+    pub layers: usize,
+    pub max_len: usize,
+    pub dim: usize,
+    /// Tokens currently stored.
+    pub len: usize,
+    /// `[L, 2, MAX, D]` row-major.
+    data: Vec<f32>,
+}
+
+impl SeqKv {
+    pub fn new(cfg: &ModelConfig) -> SeqKv {
+        SeqKv {
+            layers: cfg.layers,
+            max_len: cfg.max_len,
+            dim: cfg.dim,
+            len: 0,
+            data: vec![0.0; cfg.layers * 2 * cfg.max_len * cfg.dim],
+        }
+    }
+
+    #[inline]
+    fn lane_off(&self, layer: usize, lane: usize) -> usize {
+        ((layer * 2) + lane) * self.max_len * self.dim
+    }
+
+    pub fn row(&self, layer: usize, lane: usize, pos: usize) -> &[f32] {
+        let o = self.lane_off(layer, lane) + pos * self.dim;
+        &self.data[o..o + self.dim]
+    }
+
+    pub fn row_mut(&mut self, layer: usize, lane: usize, pos: usize)
+        -> &mut [f32] {
+        let o = self.lane_off(layer, lane) + pos * self.dim;
+        &mut self.data[o..o + self.dim]
+    }
+
+    /// Contiguous `[MAX, D]` lane slice.
+    pub fn lane(&self, layer: usize, lane: usize) -> &[f32] {
+        let o = self.lane_off(layer, lane);
+        &self.data[o..o + self.max_len * self.dim]
+    }
+
+    /// Drop all cached rows (preemption / recompute path).
+    pub fn clear(&mut self) {
+        self.len = 0;
+        self.data.fill(0.0);
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.data.len() * 4
+    }
+}
+
+/// Pack B sequence caches into one `[L, 2, B, MAX, D]` buffer.
+pub fn assemble_batch(seqs: &[&SeqKv], cfg: &ModelConfig, batch: usize)
+    -> Vec<f32> {
+    assert!(seqs.len() <= batch);
+    let (l, max, d) = (cfg.layers, cfg.max_len, cfg.dim);
+    let lane_sz = max * d;
+    let mut out = vec![0.0f32; l * 2 * batch * lane_sz];
+    for layer in 0..l {
+        for lane in 0..2 {
+            for (b, s) in seqs.iter().enumerate() {
+                debug_assert_eq!(s.max_len, max);
+                let dst = (((layer * 2) + lane) * batch + b) * lane_sz;
+                out[dst..dst + lane_sz]
+                    .copy_from_slice(s.lane(layer, lane));
+            }
+        }
+    }
+    out
+}
+
+/// Scatter decode output `kv_new: [L, 2, B, 1, D]` into each sequence at
+/// its current length, then advance lengths.
+pub fn append_decode_rows(seqs: &mut [&mut SeqKv], cfg: &ModelConfig,
+                          batch: usize, kv_new: &[f32]) {
+    let (l, d) = (cfg.layers, cfg.dim);
+    assert_eq!(kv_new.len(), l * 2 * batch * d);
+    for layer in 0..l {
+        for lane in 0..2 {
+            for (b, s) in seqs.iter_mut().enumerate() {
+                let src = (((layer * 2) + lane) * batch + b) * d;
+                let pos = s.len;
+                assert!(pos < s.max_len, "KV overflow at pos {pos}");
+                s.row_mut(layer, lane, pos)
+                    .copy_from_slice(&kv_new[src..src + d]);
+            }
+        }
+    }
+    for s in seqs.iter_mut() {
+        s.len += 1;
+    }
+}
+
+/// Scatter prefill output `kv_new: [L, 2, B, S, D]` rows `0..prompt_len`
+/// into each sequence (which must be empty), then set lengths.
+pub fn fill_prefill_rows(seqs: &mut [&mut SeqKv], cfg: &ModelConfig,
+                         batch: usize, seq: usize, kv_new: &[f32],
+                         prompt_lens: &[usize]) {
+    let (l, d) = (cfg.layers, cfg.dim);
+    assert_eq!(kv_new.len(), l * 2 * batch * seq * d);
+    assert_eq!(seqs.len(), prompt_lens.len());
+    for layer in 0..l {
+        for lane in 0..2 {
+            for (b, s) in seqs.iter_mut().enumerate() {
+                debug_assert_eq!(s.len, 0);
+                let n = prompt_lens[b].min(seq);
+                let src = ((((layer * 2) + lane) * batch + b) * seq) * d;
+                for pos in 0..n {
+                    s.row_mut(layer, lane, pos).copy_from_slice(
+                        &kv_new[src + pos * d..src + (pos + 1) * d],
+                    );
+                }
+            }
+        }
+    }
+    for (s, &n) in seqs.iter_mut().zip(prompt_lens) {
+        s.len = n.min(seq);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig::tiny()
+    }
+
+    #[test]
+    fn roundtrip_single_rows() {
+        let c = cfg();
+        let mut s = SeqKv::new(&c);
+        s.row_mut(1, 0, 5)[0] = 42.0;
+        s.row_mut(1, 1, 5)[127] = -1.0;
+        assert_eq!(s.row(1, 0, 5)[0], 42.0);
+        assert_eq!(s.row(1, 1, 5)[127], -1.0);
+        assert_eq!(s.row(0, 0, 5)[0], 0.0);
+        s.clear();
+        assert_eq!(s.row(1, 0, 5)[0], 0.0);
+    }
+
+    #[test]
+    fn assemble_layout() {
+        let c = cfg();
+        let mut a = SeqKv::new(&c);
+        let mut b = SeqKv::new(&c);
+        a.row_mut(0, 0, 0)[0] = 1.0;
+        b.row_mut(0, 0, 0)[0] = 2.0;
+        a.row_mut(1, 1, 3)[7] = 9.0;
+        let batch = 4; // padded batch
+        let out = assemble_batch(&[&a, &b], &c, batch);
+        let lane = c.max_len * c.dim;
+        // element (l=0, lane=0, b=0, pos=0, d=0)
+        assert_eq!(out[0], 1.0);
+        // (l=0, lane=0, b=1, pos=0, d=0)
+        assert_eq!(out[lane], 2.0);
+        // (l=1, lane=1, b=0, pos=3, d=7)
+        let idx = (((1 * 2) + 1) * batch + 0) * lane + 3 * c.dim + 7;
+        assert_eq!(out[idx], 9.0);
+        // padding slots zero
+        assert_eq!(out[2 * lane], 0.0);
+    }
+
+    #[test]
+    fn append_and_fill() {
+        let c = cfg();
+        let batch = 2;
+        let mut s0 = SeqKv::new(&c);
+        let mut s1 = SeqKv::new(&c);
+        // prefill 3 tokens for s0, 2 for s1 out of a seq-4 bucket
+        let seq = 4;
+        let mut kv_new = vec![0.0f32; c.layers * 2 * batch * seq * c.dim];
+        // mark (l=0, lane=0, b=0, pos=2, d=0) = 5
+        kv_new[2 * c.dim] = 5.0;
+        {
+            let mut refs = [&mut s0, &mut s1];
+            fill_prefill_rows(&mut refs, &c, batch, seq, &kv_new, &[3, 2]);
+        }
+        assert_eq!(s0.len, 3);
+        assert_eq!(s1.len, 2);
+        assert_eq!(s0.row(0, 0, 2)[0], 5.0);
+        // decode append
+        let mut dec = vec![0.0f32; c.layers * 2 * batch * c.dim];
+        dec[c.dim] = 7.0; // (l=0, lane=0, b=1, d=0)
+        {
+            let mut refs = [&mut s0, &mut s1];
+            append_decode_rows(&mut refs, &c, batch, &dec);
+        }
+        assert_eq!(s0.len, 4);
+        assert_eq!(s1.len, 3);
+        assert_eq!(s1.row(0, 0, 2)[0], 7.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn overflow_panics() {
+        let c = cfg();
+        let mut s = SeqKv::new(&c);
+        s.len = c.max_len;
+        let dec = vec![0.0f32; c.layers * 2 * c.dim];
+        let mut refs = [&mut s];
+        append_decode_rows(&mut refs, &c, 1, &dec);
+    }
+}

@@ -1,0 +1,220 @@
+//! `artifacts/manifest.json` parsing — the contract between the Python
+//! compile path and this runtime. Every artifact entry lists its inputs
+//! (name/shape/dtype) in the exact positional order the lowered HLO
+//! expects; the weight loader and executor follow this order blindly.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{ModelConfig, Precision};
+use crate::util::json::{self, Value};
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorDesc {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String, // "f32" | "i32" | "u8"
+}
+
+impl TensorDesc {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+    fn parse(v: &Value) -> Result<TensorDesc> {
+        Ok(TensorDesc {
+            name: v.get("name").as_str().context("desc name")?.to_string(),
+            shape: v
+                .get("shape")
+                .as_arr()
+                .context("desc shape")?
+                .iter()
+                .map(|d| d.as_usize().unwrap())
+                .collect(),
+            dtype: v.get("dtype").as_str().context("desc dtype")?.to_string(),
+        })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    pub precision: Precision,
+    /// "prefill" | "decode"
+    pub phase: String,
+    pub batch: usize,
+    pub seq: usize,
+    pub inputs: Vec<TensorDesc>,
+    pub outputs: Vec<TensorDesc>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelEntry {
+    pub config: ModelConfig,
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: Vec<(String, ModelEntry)>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {path:?} (run `make artifacts`)"))?;
+        let v = json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("parse {path:?}: {e}"))?;
+        let mut models = Vec::new();
+        for (size, entry) in v.get("models").as_obj().context("models")? {
+            let config = ModelConfig::from_manifest(entry.get("config"));
+            let mut artifacts = Vec::new();
+            for a in entry.get("artifacts").as_arr().context("artifacts")? {
+                let precision = Precision::parse(
+                    a.get("precision").as_str().context("precision")?,
+                )
+                .context("bad precision")?;
+                artifacts.push(ArtifactMeta {
+                    name: a.get("name").as_str().unwrap().to_string(),
+                    file: a.get("file").as_str().unwrap().to_string(),
+                    precision,
+                    phase: a.get("phase").as_str().unwrap().to_string(),
+                    batch: a.get("batch").as_usize().unwrap(),
+                    seq: a.get("seq").as_usize().unwrap(),
+                    inputs: a
+                        .get("inputs")
+                        .as_arr()
+                        .unwrap()
+                        .iter()
+                        .map(TensorDesc::parse)
+                        .collect::<Result<_>>()?,
+                    outputs: a
+                        .get("outputs")
+                        .as_arr()
+                        .unwrap()
+                        .iter()
+                        .map(TensorDesc::parse)
+                        .collect::<Result<_>>()?,
+                });
+            }
+            models.push((size.clone(), ModelEntry { config, artifacts }));
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), models })
+    }
+
+    pub fn model(&self, size: &str) -> Result<&ModelEntry> {
+        self.models
+            .iter()
+            .find(|(s, _)| s == size)
+            .map(|(_, e)| e)
+            .with_context(|| format!("model size {size} not in manifest"))
+    }
+
+    /// Artifacts of one (size, precision).
+    pub fn artifacts(&self, size: &str, precision: Precision)
+        -> Result<Vec<&ArtifactMeta>> {
+        Ok(self
+            .model(size)?
+            .artifacts
+            .iter()
+            .filter(|a| a.precision == precision)
+            .collect())
+    }
+
+    pub fn hlo_path(&self, art: &ArtifactMeta) -> PathBuf {
+        self.dir.join(&art.file)
+    }
+}
+
+/// Default artifacts directory: `$SQPLUS_ARTIFACTS` or `./artifacts`.
+pub fn default_dir() -> PathBuf {
+    std::env::var("SQPLUS_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+/// Bail early with a clear message if artifacts are missing.
+pub fn require_artifacts() -> Result<Manifest> {
+    let dir = default_dir();
+    if !dir.join("manifest.json").exists() {
+        bail!(
+            "artifacts not found in {dir:?}; run `make artifacts` first \
+             (or set SQPLUS_ARTIFACTS)"
+        );
+    }
+    Manifest::load(&dir)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest() -> Option<Manifest> {
+        let dir = default_dir();
+        if dir.join("manifest.json").exists() {
+            Some(Manifest::load(&dir).unwrap())
+        } else {
+            eprintln!("skipping: artifacts not built");
+            None
+        }
+    }
+
+    #[test]
+    fn loads_and_matches_configs() {
+        let Some(m) = manifest() else { return };
+        let e = m.model("tiny").unwrap();
+        assert_eq!(e.config, ModelConfig::tiny());
+        assert!(!e.artifacts.is_empty());
+    }
+
+    #[test]
+    fn input_order_matches_canonical_weights() {
+        let Some(m) = manifest() else { return };
+        for (precision, namer) in [
+            (Precision::Fp16,
+             crate::model::weight_names as fn(&ModelConfig) -> Vec<String>),
+            (Precision::W4a16, crate::model::weight_names_w4a16),
+        ] {
+            let arts = m.artifacts("tiny", precision).unwrap();
+            let cfg = &m.model("tiny").unwrap().config;
+            for a in arts {
+                let skip = if a.phase == "prefill" { 2 } else { 3 };
+                let got: Vec<&str> =
+                    a.inputs[skip..].iter().map(|d| d.name.as_str()).collect();
+                let want = namer(cfg);
+                assert_eq!(got, want.iter().map(|s| s.as_str())
+                    .collect::<Vec<_>>(), "{}", a.name);
+            }
+        }
+    }
+
+    #[test]
+    fn decode_artifacts_have_kv_input() {
+        let Some(m) = manifest() else { return };
+        for a in m.artifacts("tiny", Precision::Fp16).unwrap() {
+            if a.phase == "decode" {
+                assert_eq!(a.inputs[2].name, "kv");
+                let cfg = &m.model("tiny").unwrap().config;
+                assert_eq!(a.inputs[2].shape,
+                           vec![cfg.layers, 2, a.batch, cfg.max_len,
+                                cfg.dim]);
+                assert_eq!(a.outputs[1].name, "kv_new");
+                assert_eq!(a.outputs[1].shape,
+                           vec![cfg.layers, 2, a.batch, 1, cfg.dim]);
+            }
+        }
+    }
+
+    #[test]
+    fn hlo_files_exist() {
+        let Some(m) = manifest() else { return };
+        for (_, e) in &m.models {
+            for a in &e.artifacts {
+                assert!(m.hlo_path(a).exists(), "{}", a.file);
+            }
+        }
+    }
+}

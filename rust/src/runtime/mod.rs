@@ -1,0 +1,24 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts and run them on the
+//! request path without Python.
+//!
+//! * [`manifest`] — parse `artifacts/manifest.json` (the Python↔Rust
+//!   contract: parameter order, shapes, dtypes per artifact).
+//! * [`kv`] — host-side per-sequence KV caches and batch assembly. The
+//!   PJRT shim returns execute results as one tuple literal (no
+//!   untuple/donation), so the authoritative KV lives on the host and the
+//!   executables return only the *new* K/V rows (see
+//!   `python/compile/model.py`); batch composition changes are plain
+//!   memcpys, which is what makes continuous batching cheap here.
+//! * [`executor`] — the model runtime: weight upload (the paper's
+//!   "quantize while migrating to the device" loader), lazy executable
+//!   compilation per (phase, batch, seq) bucket, prefill/decode execution.
+//! * [`simtp`] — deployment wrapper: single worker or simulated
+//!   tensor-parallel worker group with an interconnect cost model.
+//! * [`perfmodel`] — analytic A100 roofline model that generates the
+//!   paper-scale Fig. 7 curves (DESIGN.md §5 substitution).
+
+pub mod executor;
+pub mod kv;
+pub mod manifest;
+pub mod perfmodel;
+pub mod simtp;

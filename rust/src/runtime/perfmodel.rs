@@ -1,0 +1,223 @@
+//! Analytic A100 roofline model for the paper-scale Fig. 7 curves.
+//!
+//! The paper's efficiency claims are driven by two terms our CPU testbed
+//! cannot exhibit at scale: (i) decode is HBM-bandwidth-bound, so weight
+//! bytes dominate the per-step time; (ii) KV memory headroom bounds the
+//! achievable batch. This model computes both for the paper's three
+//! deployments (FP16 on 2 GPUs with tensor-parallel all-reduce, AWQ/W4A16
+//! on 1 GPU) using the Code Llama-34B shapes, reproducing who-wins/by-
+//! roughly-what-factor. Constants below; measured CPU counterparts come
+//! from the engine benches.
+
+use crate::config::GpuProfile;
+
+/// Paper-scale model description (Code Llama-34B-like).
+#[derive(Debug, Clone)]
+pub struct PaperModel {
+    pub params: f64,
+    pub layers: usize,
+    pub dim: usize,
+    /// KV bytes per token (fp16, both lanes, all layers; GQA folded in).
+    pub kv_bytes_per_token: f64,
+}
+
+impl PaperModel {
+    pub fn code_llama_34b() -> Self {
+        // 34B params, 48 layers, d_model 8192, GQA 8 kv-heads / 64 heads.
+        let layers = 48usize;
+        let dim = 8192usize;
+        let kv_dim = dim / 8; // grouped-query KV heads
+        PaperModel {
+            params: 34e9,
+            layers,
+            dim,
+            kv_bytes_per_token: (2 * layers * 2 * kv_dim) as f64,
+        }
+    }
+}
+
+/// Deployment under the model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Deploy {
+    Fp16TwoGpu,
+    W4a16OneGpu,
+    /// AWQ kernel on one GPU: same memory as W4A16, slower kernel
+    /// (dequant inefficiency factor measured by the paper's Fig. 7, where
+    /// AWQ under-performs even 2xFP16 per token).
+    AwqOneGpu,
+}
+
+#[derive(Debug, Clone)]
+pub struct StepEstimate {
+    /// Seconds per decode step at the given batch.
+    pub step_s: f64,
+    /// Max batch size under the KV memory budget at this context length.
+    pub max_batch: usize,
+    /// Decode throughput tokens/s at max batch.
+    pub tokens_per_s: f64,
+}
+
+/// Per-GPU weight bytes for a deployment.
+pub fn weight_bytes(m: &PaperModel, d: Deploy) -> f64 {
+    match d {
+        Deploy::Fp16TwoGpu => m.params * 2.0 / 2.0, // fp16 split over 2
+        // int4 + ~3% group overhead (g=128: scale+zero f16 per group)
+        Deploy::W4a16OneGpu | Deploy::AwqOneGpu => m.params * 0.5 * 1.06,
+    }
+}
+
+/// Kernel inefficiency multiplier on the weight-streaming term.
+fn kernel_factor(d: Deploy) -> f64 {
+    match d {
+        Deploy::Fp16TwoGpu => 1.0,
+        // LMDeploy-derived kernel: near-roofline dequant fused matmul
+        Deploy::W4a16OneGpu => 1.15,
+        // AWQ's GEMM (paper Fig. 7: slower than FP16 per token; AutoAWQ
+        // dequant-in-loop kernels run ~3x+ off the fp16 roofline at
+        // serving batch sizes)
+        Deploy::AwqOneGpu => 3.4,
+    }
+}
+
+/// All-reduce time for one decode step of tensor parallelism (2 reduces
+/// per layer of B*dim*2 bytes, ring over n workers).
+pub fn allreduce_s(gpu: &GpuProfile, m: &PaperModel, batch: usize,
+                   workers: usize) -> f64 {
+    if workers <= 1 {
+        return 0.0;
+    }
+    let bytes = (batch * m.dim * 2) as f64;
+    let reduces = 2 * m.layers;
+    let per = 2.0 * (workers as f64 - 1.0) / workers as f64 * bytes
+        / (gpu.link_gbps * 1e9)
+        + 2.0 * gpu.link_latency_us * 1e-6;
+    reduces as f64 * per
+}
+
+/// Decode-step estimate at context length `ctx` for deployment `d`.
+pub fn estimate(gpu: &GpuProfile, m: &PaperModel, d: Deploy, ctx: usize)
+    -> StepEstimate {
+    let workers = if d == Deploy::Fp16TwoGpu { 2 } else { 1 };
+    let wb = weight_bytes(m, d);
+    let hbm = gpu.hbm_gbps * 1e9;
+    let mem = gpu.mem_bytes as f64 * 0.92; // runtime reserve
+
+    // KV headroom bounds the batch: (mem - weights) across all workers.
+    let free = ((mem - wb) * workers as f64).max(0.0);
+    let kv_per_seq = m.kv_bytes_per_token * ctx as f64;
+    let max_batch = (free / kv_per_seq).floor().max(0.0) as usize;
+    if max_batch == 0 {
+        return StepEstimate { step_s: f64::INFINITY, max_batch: 0,
+                              tokens_per_s: 0.0 };
+    }
+    let batch = max_batch;
+
+    // Per-step time: stream weights once (batched), stream live KV, plus
+    // tensor-parallel all-reduce; decode GEMMs are bandwidth-bound at
+    // these batch sizes. The AWQ kernel's dequant sits inside the GEMM
+    // inner loop and scales with the whole step (the paper's Fig. 7 shows
+    // AWQ losing to FP16x2 at every batch); the LMDeploy-style fused
+    // W4A16 kernel only pays a small factor on the weight stream.
+    let kv_stream = (batch as f64 * m.kv_bytes_per_token * ctx as f64 / 2.0)
+        / (hbm * workers as f64);
+    let w_stream = wb / hbm;
+    let comm = allreduce_s(gpu, m, batch, workers);
+    let step_s = match d {
+        Deploy::AwqOneGpu => (w_stream + kv_stream) * kernel_factor(d),
+        _ => w_stream * kernel_factor(d) + kv_stream,
+    } + comm;
+    StepEstimate {
+        step_s,
+        max_batch,
+        tokens_per_s: batch as f64 / step_s,
+    }
+}
+
+/// Per-token latency at a fixed (small) batch, the paper's Fig. 7(b)
+/// online-traffic regime.
+pub fn latency_per_token_s(gpu: &GpuProfile, m: &PaperModel, d: Deploy,
+                           ctx: usize, batch: usize) -> f64 {
+    let workers = if d == Deploy::Fp16TwoGpu { 2 } else { 1 };
+    let hbm = gpu.hbm_gbps * 1e9;
+    let w_stream = weight_bytes(m, d) / hbm;
+    let kv_stream = (batch as f64 * m.kv_bytes_per_token * ctx as f64 / 2.0)
+        / (hbm * workers as f64);
+    let core = match d {
+        Deploy::AwqOneGpu => (w_stream + kv_stream) * kernel_factor(d),
+        _ => w_stream * kernel_factor(d) + kv_stream,
+    };
+    core + allreduce_s(gpu, m, batch, workers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup() -> (GpuProfile, PaperModel) {
+        (GpuProfile::a100_40g(), PaperModel::code_llama_34b())
+    }
+
+    #[test]
+    fn w4a16_throughput_beats_fp16_2gpu_by_paper_factor() {
+        let (gpu, m) = setup();
+        for ctx in [512usize, 1024, 2048, 4096] {
+            let fp = estimate(&gpu, &m, Deploy::Fp16TwoGpu, ctx);
+            let q4 = estimate(&gpu, &m, Deploy::W4a16OneGpu, ctx);
+            let ratio = q4.tokens_per_s / fp.tokens_per_s;
+            assert!(
+                (1.5..=6.0).contains(&ratio),
+                "ctx {ctx}: ratio {ratio} outside paper band"
+            );
+        }
+    }
+
+    #[test]
+    fn awq_one_gpu_loses_to_fp16_two_gpu_throughput() {
+        // paper Fig 7a: AWQ x1 sits below FP16 x2 at every context
+        let (gpu, m) = setup();
+        for ctx in [512usize, 1024, 2048, 4096] {
+            let fp = estimate(&gpu, &m, Deploy::Fp16TwoGpu, ctx);
+            let awq = estimate(&gpu, &m, Deploy::AwqOneGpu, ctx);
+            assert!(awq.tokens_per_s < fp.tokens_per_s,
+                    "ctx {ctx}: awq {} !< fp16x2 {}",
+                    awq.tokens_per_s, fp.tokens_per_s);
+        }
+    }
+
+    #[test]
+    fn awq_worse_than_fp16_2gpu_latency() {
+        // the paper's observation: AWQ on 1 GPU loses to FP16 on 2 GPUs
+        let (gpu, m) = setup();
+        let awq = latency_per_token_s(&gpu, &m, Deploy::AwqOneGpu, 1024, 8);
+        let fp = latency_per_token_s(&gpu, &m, Deploy::Fp16TwoGpu, 1024, 8);
+        assert!(awq > fp, "awq {awq} !> fp16x2 {fp}");
+    }
+
+    #[test]
+    fn sqplus_latency_about_two_thirds_of_fp16() {
+        // paper: per-token latency ~68% of FP16-2GPU
+        let (gpu, m) = setup();
+        let q4 = latency_per_token_s(&gpu, &m, Deploy::W4a16OneGpu, 1024, 8);
+        let fp = latency_per_token_s(&gpu, &m, Deploy::Fp16TwoGpu, 1024, 8);
+        let ratio = q4 / fp;
+        assert!(
+            (0.45..=0.95).contains(&ratio),
+            "latency ratio {ratio} outside band"
+        );
+    }
+
+    #[test]
+    fn kv_headroom_shrinks_with_context() {
+        let (gpu, m) = setup();
+        let a = estimate(&gpu, &m, Deploy::W4a16OneGpu, 512).max_batch;
+        let b = estimate(&gpu, &m, Deploy::W4a16OneGpu, 4096).max_batch;
+        assert!(a > b && b > 0);
+    }
+
+    #[test]
+    fn fp16_one_gpu_cannot_hold_34b() {
+        let (gpu, m) = setup();
+        // 68 GB of fp16 weights cannot fit one 40 GB card
+        assert!(m.params * 2.0 > gpu.mem_bytes as f64);
+    }
+}

@@ -1,0 +1,121 @@
+//! Deployment wrapper: a [`ModelRuntime`] plus a simulated device
+//! topology.
+//!
+//! The paper compares *FP16 sharded over two A100s* (tensor parallel, two
+//! all-reduces per layer) against *W4A16 on one A100*. Our testbed is one
+//! CPU, so the 2-GPU baseline is simulated: compute runs unchanged on the
+//! single PJRT device while the interconnect cost of every decode/prefill
+//! step is modeled from a [`GpuProfile`] and — in `Sleep` mode — actually
+//! slept, so measured wall-clock includes it. `Account` mode only tallies
+//! the time (fast tests). Per-GPU *compute* speedup from sharding is NOT
+//! simulated (conservative for the baseline); the analytic
+//! [`super::perfmodel`] covers the paper-scale regime. See DESIGN.md §5.
+
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::config::GpuProfile;
+
+use super::executor::{DecodeResult, ModelRuntime, PrefillResult};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CommMode {
+    /// Sleep the modeled communication time (wall-clock-faithful).
+    Sleep,
+    /// Only account it in `comm_s` (fast tests).
+    Account,
+}
+
+/// A deployment: 1 worker, or N simulated tensor-parallel workers.
+pub struct Deployment {
+    pub runtime: ModelRuntime,
+    pub workers: usize,
+    pub gpu: GpuProfile,
+    pub mode: CommMode,
+    /// Total modeled communication time.
+    pub comm_s: std::cell::Cell<f64>,
+}
+
+impl Deployment {
+    pub fn single(runtime: ModelRuntime, gpu: GpuProfile) -> Deployment {
+        Deployment {
+            runtime, workers: 1, gpu,
+            mode: CommMode::Account,
+            comm_s: std::cell::Cell::new(0.0),
+        }
+    }
+
+    pub fn tensor_parallel(runtime: ModelRuntime, gpu: GpuProfile,
+                           workers: usize, mode: CommMode) -> Deployment {
+        assert!(workers >= 2);
+        Deployment {
+            runtime, workers, gpu, mode,
+            comm_s: std::cell::Cell::new(0.0),
+        }
+    }
+
+    /// Ring all-reduce time for `bytes` over `self.workers`.
+    pub fn allreduce_s(&self, bytes: usize) -> f64 {
+        if self.workers <= 1 {
+            return 0.0;
+        }
+        let n = self.workers as f64;
+        2.0 * (n - 1.0) / n * bytes as f64 / (self.gpu.link_gbps * 1e9)
+            + 2.0 * self.gpu.link_latency_us * 1e-6
+    }
+
+    /// Modeled comm for one step over `tokens` activation rows: two
+    /// all-reduces per layer of `tokens * dim * 2` bytes (fp16 accounting).
+    pub fn step_comm_s(&self, tokens: usize) -> f64 {
+        if self.workers <= 1 {
+            return 0.0;
+        }
+        let bytes = tokens * self.runtime.cfg.dim * 2;
+        2.0 * self.runtime.cfg.layers as f64 * self.allreduce_s(bytes)
+    }
+
+    fn pay_comm(&self, secs: f64) {
+        self.comm_s.set(self.comm_s.get() + secs);
+        if self.mode == CommMode::Sleep && secs > 0.0 {
+            std::thread::sleep(Duration::from_secs_f64(secs));
+        }
+    }
+
+    pub fn prefill(&self, prompts: &[&[u32]]) -> Result<PrefillResult> {
+        let r = self.runtime.prefill(prompts)?;
+        let tokens: usize = prompts.iter().map(|p| p.len()).sum();
+        self.pay_comm(self.step_comm_s(tokens));
+        Ok(r)
+    }
+
+    pub fn decode(&self, tokens: &[u32], lens: &[usize], kv: &[f32])
+        -> Result<DecodeResult> {
+        let r = self.runtime.decode(tokens, lens, kv)?;
+        self.pay_comm(self.step_comm_s(tokens.len()));
+        Ok(r)
+    }
+
+    /// Weight + per-sequence KV memory check against the simulated GPU
+    /// pool (fp16 byte accounting; used by admission control tests).
+    pub fn fits_memory(&self, weight_bytes: usize, kv_bytes: usize) -> bool {
+        weight_bytes + kv_bytes
+            <= self.gpu.mem_bytes * self.workers * 92 / 100
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allreduce_scaling() {
+        // pure math; no runtime needed — construct via the formulas
+        let gpu = GpuProfile::a100_40g();
+        let n = 2.0f64;
+        let bytes = 1 << 20;
+        let t = 2.0 * (n - 1.0) / n * bytes as f64 / (gpu.link_gbps * 1e9)
+            + 2.0 * gpu.link_latency_us * 1e-6;
+        assert!(t > 0.0 && t < 1e-3);
+    }
+}

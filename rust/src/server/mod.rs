@@ -1,0 +1,327 @@
+//! JSON-lines TCP serving front end (std::net + threads; tokio is not
+//! available in the offline build).
+//!
+//! Wire protocol — one JSON object per line:
+//!
+//! ```text
+//! -> {"prompt": [1,2,3], "max_new_tokens": 8, "temperature": 0.0}
+//! <- {"id": 0, "tokens": [4,5,...], "finish": "max_tokens",
+//!     "ttft_ms": 12.3, "e2e_ms": 80.1}
+//! ```
+//!
+//! Architecture: connection threads parse requests into an inbox; the
+//! engine thread (the only owner of the PJRT runtime, which is not Sync)
+//! drains the inbox, steps the engine, and routes finished sequences back
+//! through per-request response channels.
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::engine::Engine;
+use crate::coordinator::sequence::{SamplingParams, Sequence};
+use crate::util::json::{self, Value};
+
+/// A parsed client request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub prompt: Vec<u32>,
+    pub params: SamplingParams,
+}
+
+pub fn parse_request(line: &str) -> Result<Request> {
+    let v = json::parse(line).map_err(|e| anyhow::anyhow!("json: {e}"))?;
+    let prompt: Vec<u32> = v
+        .get("prompt")
+        .as_arr()
+        .context("prompt must be an array of token ids")?
+        .iter()
+        .map(|t| t.as_usize().unwrap_or(0) as u32)
+        .collect();
+    let mut params = SamplingParams::default();
+    if let Some(m) = v.get("max_new_tokens").as_usize() {
+        params.max_new_tokens = m;
+    }
+    if let Some(t) = v.get("temperature").as_f64() {
+        params.temperature = t as f32;
+    }
+    if let Some(k) = v.get("top_k").as_usize() {
+        params.top_k = k;
+    }
+    if let Some(s) = v.get("seed").as_f64() {
+        params.seed = s as u64;
+    }
+    Ok(Request { prompt, params })
+}
+
+pub fn response_json(id: u64, seq: &Sequence) -> String {
+    let finish = match seq.finish {
+        Some(crate::coordinator::sequence::FinishReason::Eos) => "eos",
+        Some(crate::coordinator::sequence::FinishReason::MaxTokens) => {
+            "max_tokens"
+        }
+        Some(crate::coordinator::sequence::FinishReason::PromptTooLong) => {
+            "prompt_too_long"
+        }
+        None => "unknown",
+    };
+    let ttft_ms = seq
+        .first_token_at
+        .map(|t| t.duration_since(seq.arrived).as_secs_f64() * 1e3)
+        .unwrap_or(0.0);
+    let e2e_ms = seq
+        .finished_at
+        .map(|t| t.duration_since(seq.arrived).as_secs_f64() * 1e3)
+        .unwrap_or(0.0);
+    Value::obj(vec![
+        ("id", Value::num(id as f64)),
+        ("tokens",
+         Value::Arr(seq.output.iter().map(|&t| Value::num(t as f64))
+             .collect())),
+        ("finish", Value::str(finish)),
+        ("ttft_ms", Value::num(ttft_ms)),
+        ("e2e_ms", Value::num(e2e_ms)),
+    ])
+    .to_string()
+}
+
+enum Inbox {
+    Submit(Request, mpsc::Sender<String>),
+    Shutdown,
+}
+
+/// Move-only wrapper that transfers the engine to its serving thread.
+///
+/// SAFETY: `Engine` is not `Send` because the xla crate's PJRT handles use
+/// `Rc` internally. Every `Rc` clone of the client lives inside this same
+/// `Engine` (runtime buffers + executable cache), so moving the whole
+/// engine to exactly one thread — which is all this wrapper permits —
+/// never shares an `Rc` across threads. The engine thread is the sole
+/// owner for the rest of its life.
+struct SendEngine(Engine);
+unsafe impl Send for SendEngine {}
+
+/// A running server; `addr()` gives the bound address, `shutdown()` stops
+/// the engine loop after draining.
+pub struct Server {
+    addr: std::net::SocketAddr,
+    inbox: mpsc::Sender<Inbox>,
+    engine_thread: Option<std::thread::JoinHandle<()>>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Spawn the server on `127.0.0.1:port` (0 = ephemeral). Takes
+    /// ownership of the engine (PJRT runtime is not Sync; it lives on the
+    /// engine thread).
+    pub fn spawn(engine: Engine, port: u16) -> Result<Server> {
+        let listener = TcpListener::bind(("127.0.0.1", port))?;
+        let addr = listener.local_addr()?;
+        let (tx, rx) = mpsc::channel::<Inbox>();
+
+        // engine loop thread (sole owner of the PJRT runtime).
+        // NB: bind the whole wrapper inside the closure — edition-2021
+        // disjoint capture would otherwise capture the non-Send field.
+        let boxed = SendEngine(engine);
+        let engine_thread = std::thread::spawn(move || {
+            let whole = boxed; // force whole-struct capture (RFC 2229)
+            engine_loop(whole.0, rx);
+        });
+
+        // accept loop thread
+        let tx_accept = tx.clone();
+        let accept_thread = std::thread::spawn(move || {
+            listener.set_nonblocking(false).ok();
+            for stream in listener.incoming() {
+                let Ok(stream) = stream else { break };
+                let tx = tx_accept.clone();
+                std::thread::spawn(move || {
+                    let _ = handle_conn(stream, tx);
+                });
+            }
+        });
+
+        Ok(Server {
+            addr,
+            inbox: tx,
+            engine_thread: Some(engine_thread),
+            accept_thread: Some(accept_thread),
+        })
+    }
+
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    pub fn shutdown(mut self) {
+        let _ = self.inbox.send(Inbox::Shutdown);
+        if let Some(t) = self.engine_thread.take() {
+            let _ = t.join();
+        }
+        // unblock the accept loop with a dummy connection
+        let _ = TcpStream::connect(self.addr);
+        if let Some(t) = self.accept_thread.take() {
+            // the accept thread may be blocked on `incoming`; detach is
+            // fine here since the process owns it
+            drop(t);
+        }
+    }
+}
+
+fn handle_conn(stream: TcpStream, tx: mpsc::Sender<Inbox>) -> Result<()> {
+    let peer_read = stream.try_clone()?;
+    let mut reader = BufReader::new(peer_read);
+    let writer = Arc::new(Mutex::new(stream));
+    loop {
+        let mut line = String::new();
+        if reader.read_line(&mut line)? == 0 {
+            return Ok(()); // client closed
+        }
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        match parse_request(line) {
+            Ok(req) => {
+                let (rtx, rrx) = mpsc::channel::<String>();
+                if tx.send(Inbox::Submit(req, rtx)).is_err() {
+                    return Ok(());
+                }
+                // wait for the engine's response, then write it back
+                if let Ok(resp) = rrx.recv() {
+                    let mut w = writer.lock().unwrap();
+                    writeln!(w, "{resp}")?;
+                }
+            }
+            Err(e) => {
+                let mut w = writer.lock().unwrap();
+                writeln!(w, "{}", Value::obj(vec![
+                    ("error", Value::str(format!("{e}"))),
+                ]))?;
+            }
+        }
+    }
+}
+
+fn engine_loop(mut engine: Engine, rx: mpsc::Receiver<Inbox>) {
+    let mut pending: HashMap<u64, mpsc::Sender<String>> = HashMap::new();
+    let mut shutdown = false;
+    loop {
+        // drain inbox (non-blocking while there is engine work)
+        loop {
+            let msg = if engine.has_work() || shutdown {
+                match rx.try_recv() {
+                    Ok(m) => Some(m),
+                    Err(mpsc::TryRecvError::Empty) => None,
+                    Err(mpsc::TryRecvError::Disconnected) => {
+                        shutdown = true;
+                        None
+                    }
+                }
+            } else {
+                // idle: block until the next request
+                match rx.recv() {
+                    Ok(m) => Some(m),
+                    Err(_) => {
+                        shutdown = true;
+                        None
+                    }
+                }
+            };
+            match msg {
+                Some(Inbox::Submit(req, resp)) => {
+                    let id = engine.submit(req.prompt, req.params);
+                    pending.insert(id, resp);
+                }
+                Some(Inbox::Shutdown) => shutdown = true,
+                None => break,
+            }
+            if shutdown && !engine.has_work() {
+                break;
+            }
+        }
+        if engine.has_work() {
+            if engine.step().is_err() {
+                break;
+            }
+        }
+        for seq in engine.take_finished() {
+            if let Some(resp) = pending.remove(&seq.id) {
+                let _ = resp.send(response_json(seq.id, &seq));
+            }
+        }
+        if shutdown && !engine.has_work() && pending.is_empty() {
+            break;
+        }
+    }
+}
+
+/// Minimal blocking client for tests/examples.
+pub struct Client {
+    stream: BufReader<TcpStream>,
+}
+
+impl Client {
+    pub fn connect(addr: std::net::SocketAddr) -> Result<Client> {
+        Ok(Client { stream: BufReader::new(TcpStream::connect(addr)?) })
+    }
+
+    /// Send one request and wait for its response line.
+    pub fn request(&mut self, prompt: &[u32], max_new: usize)
+        -> Result<Value> {
+        let req = Value::obj(vec![
+            ("prompt",
+             Value::Arr(prompt.iter().map(|&t| Value::num(t as f64))
+                 .collect())),
+            ("max_new_tokens", Value::num(max_new as f64)),
+        ]);
+        let s = self.stream.get_mut();
+        writeln!(s, "{req}")?;
+        let mut line = String::new();
+        self.stream.read_line(&mut line)?;
+        json::parse(line.trim()).map_err(|e| anyhow::anyhow!("resp: {e}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_request_fields() {
+        let r = parse_request(
+            r#"{"prompt":[1,2,3],"max_new_tokens":4,"temperature":0.5,
+                "top_k":5,"seed":9}"#,
+        )
+        .unwrap();
+        assert_eq!(r.prompt, vec![1, 2, 3]);
+        assert_eq!(r.params.max_new_tokens, 4);
+        assert_eq!(r.params.temperature, 0.5);
+        assert_eq!(r.params.top_k, 5);
+        assert_eq!(r.params.seed, 9);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(parse_request("not json").is_err());
+        assert!(parse_request(r#"{"promptX":[1]}"#).is_err());
+    }
+
+    #[test]
+    fn response_shape() {
+        use crate::coordinator::sequence::{FinishReason, Sequence};
+        let mut s =
+            Sequence::new(3, vec![1], SamplingParams::default());
+        s.record_token(7);
+        s.finish(FinishReason::MaxTokens);
+        let j = response_json(3, &s);
+        let v = json::parse(&j).unwrap();
+        assert_eq!(v.get("id").as_usize(), Some(3));
+        assert_eq!(v.get("finish").as_str(), Some("max_tokens"));
+        assert_eq!(v.get("tokens").as_arr().unwrap().len(), 1);
+    }
+}

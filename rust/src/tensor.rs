@@ -1,0 +1,274 @@
+//! Host-side tensors: a dense row-major `f32` tensor plus a packed `u8`
+//! tensor for INT4 nibbles. Implements exactly the ops the library needs
+//! (threaded matmul, per-channel scaling, norms) rather than a general
+//! ndarray.
+
+use crate::util::threadpool::parallel_for;
+
+/// Dense row-major f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+    pub fn ones(shape: &[usize]) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: vec![1.0; shape.iter().product()] }
+    }
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor { shape: shape.to_vec(), data }
+    }
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+    /// Rows/cols of a rank-2 tensor.
+    pub fn dims2(&self) -> (usize, usize) {
+        assert_eq!(self.shape.len(), 2, "expected rank-2, got {:?}", self.shape);
+        (self.shape[0], self.shape[1])
+    }
+    pub fn row(&self, i: usize) -> &[f32] {
+        let (_, n) = self.dims2();
+        &self.data[i * n..(i + 1) * n]
+    }
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        let n = self.shape[self.shape.len() - 1];
+        &mut self.data[i * n..(i + 1) * n]
+    }
+
+    /// `self[M,K] @ other[K,N]` -> `[M,N]`, threaded over row blocks with a
+    /// K-blocked inner loop (cache-friendly, auto-vectorizable).
+    pub fn matmul(&self, other: &Tensor) -> Tensor {
+        let (m, k) = self.dims2();
+        let (k2, n) = other.dims2();
+        assert_eq!(k, k2, "matmul inner dims {k} vs {k2}");
+        let mut out = Tensor::zeros(&[m, n]);
+        // SAFETY: each row block of `out` is written by exactly one task.
+        let out_ptr = SendPtr(out.data.as_mut_ptr());
+        let a = &self.data;
+        let b = &other.data;
+        const KB: usize = 64;
+        parallel_for(m, |i| {
+            let orow = unsafe {
+                std::slice::from_raw_parts_mut(out_ptr.get().add(i * n), n)
+            };
+            for k0 in (0..k).step_by(KB) {
+                let k1 = (k0 + KB).min(k);
+                for kk in k0..k1 {
+                    let aik = a[i * k + kk];
+                    if aik == 0.0 {
+                        continue;
+                    }
+                    let brow = &b[kk * n..kk * n + n];
+                    for (o, &bv) in orow.iter_mut().zip(brow) {
+                        *o += aik * bv;
+                    }
+                }
+            }
+        });
+        out
+    }
+
+    /// Transpose a rank-2 tensor.
+    pub fn t(&self) -> Tensor {
+        let (m, n) = self.dims2();
+        let mut out = Tensor::zeros(&[n, m]);
+        for i in 0..m {
+            for j in 0..n {
+                out.data[j * m + i] = self.data[i * n + j];
+            }
+        }
+        out
+    }
+
+    /// Gram matrix `selfᵀ self` ([K,K] from [T,K]), threaded.
+    pub fn gram(&self) -> Tensor {
+        self.t().matmul(self)
+    }
+
+    /// Scale column j (last-dim index) by s[j], in place.
+    pub fn scale_cols(&mut self, s: &[f32]) {
+        let n = *self.shape.last().unwrap();
+        assert_eq!(s.len(), n);
+        for row in self.data.chunks_mut(n) {
+            for (x, &f) in row.iter_mut().zip(s) {
+                *x *= f;
+            }
+        }
+    }
+
+    /// Scale row i (first-dim index) by s[i], in place (rank-2).
+    pub fn scale_rows(&mut self, s: &[f32]) {
+        let (m, n) = self.dims2();
+        assert_eq!(s.len(), m);
+        for i in 0..m {
+            for x in &mut self.data[i * n..(i + 1) * n] {
+                *x *= s[i];
+            }
+        }
+    }
+
+    pub fn frob_sq(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum()
+    }
+
+    pub fn sub(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.shape, other.shape);
+        Tensor::from_vec(
+            &self.shape,
+            self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect(),
+        )
+    }
+
+    /// Per-column max |x| of a rank-2 tensor -> len N.
+    pub fn col_absmax(&self) -> Vec<f32> {
+        let (m, n) = self.dims2();
+        let mut out = vec![0.0f32; n];
+        for i in 0..m {
+            for j in 0..n {
+                out[j] = out[j].max(self.data[i * n + j].abs());
+            }
+        }
+        out
+    }
+
+    /// Per-column mean |x| of a rank-2 tensor -> len N.
+    pub fn col_absmean(&self) -> Vec<f32> {
+        let (m, n) = self.dims2();
+        let mut out = vec![0.0f64; n];
+        for i in 0..m {
+            for j in 0..n {
+                out[j] += self.data[i * n + j].abs() as f64;
+            }
+        }
+        out.iter().map(|&x| (x / m.max(1) as f64) as f32).collect()
+    }
+
+    /// Per-row max |x| of a rank-2 tensor -> len M (input-channel absmax of
+    /// a [K,N] weight).
+    pub fn row_absmax(&self) -> Vec<f32> {
+        let (m, n) = self.dims2();
+        (0..m)
+            .map(|i| {
+                self.data[i * n..(i + 1) * n]
+                    .iter()
+                    .fold(0.0f32, |a, &x| a.max(x.abs()))
+            })
+            .collect()
+    }
+}
+
+struct SendPtr(*mut f32);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+impl SendPtr {
+    fn get(&self) -> *mut f32 {
+        self.0
+    }
+}
+
+/// Packed-nibble tensor (two INT4 values per byte along the first axis).
+#[derive(Debug, Clone, PartialEq)]
+pub struct U8Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<u8>,
+}
+
+impl U8Tensor {
+    pub fn zeros(shape: &[usize]) -> U8Tensor {
+        U8Tensor { shape: shape.to_vec(), data: vec![0; shape.iter().product()] }
+    }
+    pub fn from_vec(shape: &[usize], data: Vec<u8>) -> U8Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        U8Tensor { shape: shape.to_vec(), data }
+    }
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn matmul_small() {
+        let a = Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Tensor::from_vec(&[2, 2], vec![1.0, 1.0, 1.0, 1.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        prop::check("matmul == naive", 10, |rng| {
+            let (m, k, n) =
+                (1 + rng.below(17), 1 + rng.below(33), 1 + rng.below(17));
+            let a = Tensor::from_vec(
+                &[m, k],
+                (0..m * k).map(|_| rng.normal()).collect(),
+            );
+            let b = Tensor::from_vec(
+                &[k, n],
+                (0..k * n).map(|_| rng.normal()).collect(),
+            );
+            let c = a.matmul(&b);
+            for i in 0..m {
+                for j in 0..n {
+                    let want: f32 = (0..k)
+                        .map(|kk| a.data[i * k + kk] * b.data[kk * n + j])
+                        .sum();
+                    prop::assert_close(
+                        c.data[i * n + j] as f64,
+                        want as f64,
+                        1e-4,
+                        "entry",
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let a = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(a.t().t(), a);
+        assert_eq!(a.t().shape, vec![3, 2]);
+        assert_eq!(a.t().data, vec![1., 4., 2., 5., 3., 6.]);
+    }
+
+    #[test]
+    fn scale_cols_rows() {
+        let mut a = Tensor::ones(&[2, 3]);
+        a.scale_cols(&[1.0, 2.0, 3.0]);
+        assert_eq!(a.data, vec![1., 2., 3., 1., 2., 3.]);
+        a.scale_rows(&[10.0, 0.5]);
+        assert_eq!(a.data, vec![10., 20., 30., 0.5, 1., 1.5]);
+    }
+
+    #[test]
+    fn reductions() {
+        let a = Tensor::from_vec(&[2, 2], vec![-3.0, 1.0, 2.0, -4.0]);
+        assert_eq!(a.col_absmax(), vec![3.0, 4.0]);
+        assert_eq!(a.row_absmax(), vec![3.0, 4.0]);
+        assert_eq!(a.col_absmean(), vec![2.5, 2.5]);
+        assert_eq!(a.frob_sq(), 9.0 + 1.0 + 4.0 + 16.0);
+    }
+
+    #[test]
+    fn gram_is_symmetric_psd_diag() {
+        let a = Tensor::from_vec(&[3, 2], vec![1., 2., 3., 4., 5., 6.]);
+        let g = a.gram();
+        assert_eq!(g.shape, vec![2, 2]);
+        assert_eq!(g.data[1], g.data[2]); // symmetric
+        assert!(g.data[0] > 0.0 && g.data[3] > 0.0);
+    }
+}

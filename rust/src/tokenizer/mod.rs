@@ -1,0 +1,172 @@
+//! Byte-level BPE tokenizer: trainer + encoder/decoder.
+//!
+//! The 256 byte values are the base vocabulary; training greedily merges
+//! the most frequent adjacent pair until the target vocab size is reached
+//! (the GPT-2 recipe, minus the regex pre-splitting — fine at our corpus
+//! scale). Encoding applies merges in rank order.
+
+use std::collections::HashMap;
+
+/// A trained tokenizer: merge ranks + decoded piece table.
+#[derive(Debug, Clone)]
+pub struct Tokenizer {
+    /// (left, right) -> merged token id, rank-ordered by creation.
+    merges: HashMap<(u32, u32), u32>,
+    /// token id -> byte string.
+    pieces: Vec<Vec<u8>>,
+}
+
+impl Tokenizer {
+    /// Train on `text` to `vocab_size` tokens (>= 256).
+    pub fn train(text: &str, vocab_size: usize) -> Tokenizer {
+        assert!(vocab_size >= 256, "vocab must cover raw bytes");
+        let mut pieces: Vec<Vec<u8>> =
+            (0..=255u8).map(|b| vec![b]).collect();
+        let mut merges = HashMap::new();
+        let mut ids: Vec<u32> = text.bytes().map(|b| b as u32).collect();
+        while pieces.len() < vocab_size {
+            // count adjacent pairs
+            let mut counts: HashMap<(u32, u32), usize> = HashMap::new();
+            for w in ids.windows(2) {
+                *counts.entry((w[0], w[1])).or_default() += 1;
+            }
+            // deterministic argmax: highest count, then lowest pair ids
+            let Some((&pair, &n)) = counts
+                .iter()
+                .max_by_key(|(&(a, b), &c)| (c, std::cmp::Reverse((a, b))))
+            else {
+                break;
+            };
+            if n < 2 {
+                break; // nothing worth merging
+            }
+            let new_id = pieces.len() as u32;
+            let mut piece = pieces[pair.0 as usize].clone();
+            piece.extend_from_slice(&pieces[pair.1 as usize]);
+            pieces.push(piece);
+            merges.insert(pair, new_id);
+            ids = merge_ids(&ids, pair, new_id);
+        }
+        Tokenizer { merges, pieces }
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.pieces.len()
+    }
+
+    /// Encode text to token ids (merges applied in rank order).
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        let mut ids: Vec<u32> = text.bytes().map(|b| b as u32).collect();
+        loop {
+            // find the lowest-rank applicable merge
+            let mut best: Option<(u32, (u32, u32))> = None;
+            for w in ids.windows(2) {
+                if let Some(&m) = self.merges.get(&(w[0], w[1])) {
+                    if best.map(|(b, _)| m < b).unwrap_or(true) {
+                        best = Some((m, (w[0], w[1])));
+                    }
+                }
+            }
+            let Some((new_id, pair)) = best else { break };
+            ids = merge_ids(&ids, pair, new_id);
+        }
+        ids
+    }
+
+    /// Decode ids back to (lossy-utf8) text.
+    pub fn decode(&self, ids: &[u32]) -> String {
+        let mut bytes = Vec::new();
+        for &id in ids {
+            if let Some(p) = self.pieces.get(id as usize) {
+                bytes.extend_from_slice(p);
+            }
+        }
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    /// Encode, capping token ids to `max_vocab` (model embedding bound —
+    /// ids beyond it map into the byte range via modulo; only relevant if
+    /// the tokenizer was trained larger than the model vocab).
+    pub fn encode_for_model(&self, text: &str, max_vocab: usize)
+        -> Vec<u32> {
+        self.encode(text)
+            .into_iter()
+            .map(|t| if (t as usize) < max_vocab { t } else { t % 256 })
+            .collect()
+    }
+}
+
+fn merge_ids(ids: &[u32], pair: (u32, u32), new_id: u32) -> Vec<u32> {
+    let mut out = Vec::with_capacity(ids.len());
+    let mut i = 0;
+    while i < ids.len() {
+        if i + 1 < ids.len() && ids[i] == pair.0 && ids[i + 1] == pair.1 {
+            out.push(new_id);
+            i += 2;
+        } else {
+            out.push(ids[i]);
+            i += 1;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const CORPUS: &str = "def add(a, b):\n    return a + b\n\
+                          def mul(a, b):\n    return a * b\n";
+
+    #[test]
+    fn roundtrip_exact() {
+        let tok = Tokenizer::train(CORPUS, 300);
+        for s in [CORPUS, "return a", "def f(x): pass", "héllo ⚙"] {
+            assert_eq!(tok.decode(&tok.encode(s)), s);
+        }
+    }
+
+    #[test]
+    fn training_compresses() {
+        let tok = Tokenizer::train(CORPUS, 320);
+        let ids = tok.encode(CORPUS);
+        assert!(
+            ids.len() < CORPUS.len(),
+            "{} !< {}",
+            ids.len(),
+            CORPUS.len()
+        );
+    }
+
+    #[test]
+    fn vocab_size_respected() {
+        let tok = Tokenizer::train(CORPUS, 280);
+        assert!(tok.vocab_size() <= 280);
+        assert!(tok.vocab_size() > 256); // some merges happened
+        let ids = tok.encode(CORPUS);
+        assert!(ids.iter().all(|&t| (t as usize) < tok.vocab_size()));
+    }
+
+    #[test]
+    fn deterministic_training() {
+        let a = Tokenizer::train(CORPUS, 300);
+        let b = Tokenizer::train(CORPUS, 300);
+        assert_eq!(a.encode(CORPUS), b.encode(CORPUS));
+    }
+
+    #[test]
+    fn model_vocab_cap() {
+        let tok = Tokenizer::train(CORPUS, 400);
+        let ids = tok.encode_for_model(CORPUS, 300);
+        assert!(ids.iter().all(|&t| (t as usize) < 300));
+    }
+
+    #[test]
+    fn empty_and_unknown() {
+        let tok = Tokenizer::train(CORPUS, 260);
+        assert!(tok.encode("").is_empty());
+        assert_eq!(tok.decode(&[]), "");
+        // raw bytes always encodable
+        assert_eq!(tok.decode(&tok.encode("\u{0}\u{1}")), "\u{0}\u{1}");
+    }
+}

@@ -1,0 +1,153 @@
+//! Criterion-style bench harness (criterion is unavailable offline).
+//!
+//! Each `rust/benches/*.rs` target is a `harness = false` binary that uses
+//! [`Bench`] for timed measurement and [`Table`] to print the paper-shaped
+//! rows it regenerates. Results can be dumped as JSON for EXPERIMENTS.md.
+
+use std::time::Instant;
+
+use super::stats::Accum;
+
+/// Measure a closure: warmup iterations, then timed iterations, reporting a
+/// summary in seconds.
+pub struct Bench {
+    pub name: String,
+    pub warmup: usize,
+    pub iters: usize,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct BenchResult {
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+    pub iters: usize,
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Self {
+        Bench { name: name.to_string(), warmup: 2, iters: 10 }
+    }
+    pub fn warmup(mut self, n: usize) -> Self {
+        self.warmup = n;
+        self
+    }
+    pub fn iters(mut self, n: usize) -> Self {
+        self.iters = n;
+        self
+    }
+
+    pub fn run<F: FnMut()>(&self, mut f: F) -> BenchResult {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut acc = Accum::new();
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            f();
+            acc.push(t0.elapsed().as_secs_f64());
+        }
+        let s = acc.summary();
+        let r = BenchResult {
+            mean_s: s.mean,
+            p50_s: s.p50,
+            min_s: s.min,
+            max_s: s.max,
+            iters: self.iters,
+        };
+        eprintln!(
+            "bench {:<40} mean {:>10.3}ms  p50 {:>10.3}ms  min {:>10.3}ms  \
+             ({} iters)",
+            self.name,
+            r.mean_s * 1e3,
+            r.p50_s * 1e3,
+            r.min_s * 1e3,
+            r.iters
+        );
+        r
+    }
+}
+
+/// Fixed-width table printer for regenerated paper tables/figures.
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: vec![],
+        }
+    }
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "table arity");
+        self.rows.push(cells.to_vec());
+    }
+    pub fn print(&self) {
+        let mut widths: Vec<usize> =
+            self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        println!("\n== {} ==", self.title);
+        let line = |cells: &[String]| {
+            let mut s = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!("{:<w$}  ", c, w = widths[i]));
+            }
+            println!("{}", s.trim_end());
+        };
+        line(&self.headers);
+        println!("{}", "-".repeat(widths.iter().sum::<usize>()
+            + 2 * widths.len()));
+        for row in &self.rows {
+            line(row);
+        }
+    }
+}
+
+/// Convenience: format a fraction as "12.34%".
+pub fn pct(x: f64) -> String {
+    format!("{:.2}%", x * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let r = Bench::new("noop").warmup(1).iters(5).run(|| {
+            std::hint::black_box(1 + 1);
+        });
+        assert_eq!(r.iters, 5);
+        assert!(r.min_s >= 0.0 && r.mean_s >= r.min_s);
+    }
+
+    #[test]
+    fn table_rows() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(&["1".into(), "2".into()]);
+        t.print(); // should not panic
+        assert_eq!(t.rows.len(), 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_arity_checked() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn pct_format() {
+        assert_eq!(pct(0.5122), "51.22%");
+    }
+}

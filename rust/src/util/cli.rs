@@ -1,0 +1,134 @@
+//! Tiny CLI argument parser: `--key value`, `--key=value`, `--flag`, and
+//! positional arguments. Subcommand-style dispatch is handled by the
+//! binaries themselves.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    /// (name, help) pairs registered via the typed getters, for --help.
+    known: Vec<(String, String)>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (no argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut a = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    a.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    a.options.insert(body.to_string(), v);
+                } else {
+                    a.flags.push(body.to_string());
+                }
+            } else {
+                a.positional.push(tok);
+            }
+        }
+        a
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&mut self, name: &str, help: &str) -> bool {
+        self.known.push((format!("--{name}"), help.to_string()));
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&mut self, name: &str, default: &str, help: &str) -> String {
+        self.known
+            .push((format!("--{name} <v> [{default}]"), help.to_string()));
+        self.options.get(name).cloned().unwrap_or_else(|| default.into())
+    }
+
+    pub fn opt_usize(&mut self, name: &str, default: usize, help: &str)
+        -> usize {
+        self.opt(name, &default.to_string(), help)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} expects an integer"))
+    }
+
+    pub fn opt_f64(&mut self, name: &str, default: f64, help: &str) -> f64 {
+        self.opt(name, &default.to_string(), help)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} expects a number"))
+    }
+
+    pub fn opt_u64(&mut self, name: &str, default: u64, help: &str) -> u64 {
+        self.opt(name, &default.to_string(), help)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} expects an integer"))
+    }
+
+    /// Print collected help for every option touched so far.
+    pub fn help(&self, header: &str) -> String {
+        let mut s = format!("{header}\n\noptions:\n");
+        for (name, help) in &self.known {
+            s.push_str(&format!("  {name:<28} {help}\n"));
+        }
+        s
+    }
+
+    pub fn wants_help(&self) -> bool {
+        self.flags.iter().any(|f| f == "help" || f == "h")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn options_and_flags() {
+        // NB: a bare `--flag` followed by a non-`--` token would consume it
+        // as a value; flags therefore go after positionals or other flags.
+        let mut a = parse("serve pos1 --model base --steps=100 --verbose");
+        assert_eq!(a.positional, vec!["serve", "pos1"]);
+        assert_eq!(a.opt("model", "tiny", ""), "base");
+        assert_eq!(a.opt_usize("steps", 1, ""), 100);
+        assert!(a.flag("verbose", ""));
+        assert!(!a.flag("quiet", ""));
+    }
+
+    #[test]
+    fn defaults() {
+        let mut a = parse("");
+        assert_eq!(a.opt("alpha", "0.5", ""), "0.5");
+        assert_eq!(a.opt_f64("rate", 2.5, ""), 2.5);
+    }
+
+    #[test]
+    fn flag_before_positional() {
+        // `--flag value` treats value as the option's value; `--flag --x`
+        // treats flag as boolean.
+        let mut a = parse("--dry-run --out file.txt");
+        assert!(a.flag("dry-run", ""));
+        assert_eq!(a.opt("out", "", ""), "file.txt");
+    }
+
+    #[test]
+    fn help_rendering() {
+        let mut a = parse("");
+        a.opt("model", "tiny", "model size");
+        let h = a.help("sqplus");
+        assert!(h.contains("--model"));
+        assert!(h.contains("model size"));
+    }
+}

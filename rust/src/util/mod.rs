@@ -1,0 +1,16 @@
+//! In-tree substrates.
+//!
+//! The offline build environment only provides the `xla` (PJRT bridge) and
+//! `anyhow` crates, so the usual ecosystem pieces are implemented here:
+//! JSON ([`json`]), seeded RNG ([`rng`]), a scoped thread pool
+//! ([`threadpool`]), summary statistics ([`stats`]), a CLI argument parser
+//! ([`cli`]), a miniature property-testing harness ([`prop`]) and a
+//! criterion-style bench harness ([`bench`]).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

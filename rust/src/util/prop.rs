@@ -1,0 +1,100 @@
+//! Miniature property-testing harness (proptest is unavailable offline).
+//!
+//! `check(name, cases, |rng| ...)` runs a closure against `cases` seeded
+//! random inputs; on failure it retries with the same seed to print the
+//! failing case number and seed so the run is reproducible:
+//!
+//! ```no_run
+//! use sqplus::util::prop;
+//! prop::check("addition commutes", 100, |rng| {
+//!     let (a, b) = (rng.f64(), rng.f64());
+//!     prop::assert_close(a + b, b + a, 1e-12, "a+b == b+a");
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Base seed; override with SQPLUS_PROP_SEED to reproduce a CI failure.
+fn base_seed() -> u64 {
+    std::env::var("SQPLUS_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x5eed_cafe)
+}
+
+/// Run `body` for `cases` independent seeded RNGs. Panics (with the case
+/// seed) on the first failing case.
+pub fn check<F: Fn(&mut Rng)>(name: &str, cases: u32, body: F) {
+    let base = base_seed();
+    for case in 0..cases {
+        let seed = base ^ (case as u64).wrapping_mul(0x9e3779b97f4a7c15);
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| body(&mut rng)),
+        );
+        if let Err(e) = result {
+            eprintln!(
+                "property '{name}' failed at case {case}/{cases} \
+                 (SQPLUS_PROP_SEED={base}, case seed {seed})"
+            );
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+pub fn assert_close(a: f64, b: f64, tol: f64, what: &str) {
+    let denom = 1.0_f64.max(a.abs()).max(b.abs());
+    assert!(
+        (a - b).abs() / denom <= tol,
+        "{what}: {a} vs {b} (tol {tol})"
+    );
+}
+
+/// All-close over slices with combined absolute+relative tolerance.
+pub fn assert_allclose(a: &[f32], b: &[f32], rtol: f32, atol: f32, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length {} vs {}", a.len(), b.len());
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        let tol = atol + rtol * y.abs().max(x.abs());
+        assert!(
+            (x - y).abs() <= tol,
+            "{what}: index {i}: {x} vs {y} (tol {tol})"
+        );
+    }
+}
+
+/// Max |a-b| over slices (diagnostic helper for tolerances).
+pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check("abs is non-negative", 50, |rng| {
+            let x = rng.normal();
+            assert!(x.abs() >= 0.0);
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn failing_property_panics() {
+        check("impossible", 10, |rng| {
+            assert!(rng.f64() < 0.0, "uniform can't be negative");
+        });
+    }
+
+    #[test]
+    fn allclose() {
+        assert_allclose(&[1.0, 2.0], &[1.0 + 1e-7, 2.0], 1e-5, 1e-6, "ok");
+    }
+
+    #[test]
+    #[should_panic]
+    fn allclose_rejects() {
+        assert_allclose(&[1.0], &[1.1], 1e-5, 1e-6, "should fail");
+    }
+}

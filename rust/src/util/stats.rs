@@ -1,0 +1,190 @@
+//! Summary statistics: mean, percentiles, histograms, and a streaming
+//! accumulator. Used by the metrics pipeline and the bench harness.
+
+/// Streaming accumulator for scalar samples.
+#[derive(Debug, Clone, Default)]
+pub struct Accum {
+    samples: Vec<f64>,
+}
+
+impl Accum {
+    pub fn new() -> Self {
+        Self::default()
+    }
+    pub fn push(&mut self, x: f64) {
+        self.samples.push(x);
+    }
+    pub fn extend(&mut self, xs: &[f64]) {
+        self.samples.extend_from_slice(xs);
+    }
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+    pub fn sum(&self) -> f64 {
+        self.samples.iter().sum()
+    }
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.sum() / self.samples.len() as f64
+    }
+    pub fn min(&self) -> f64 {
+        self.samples.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+    pub fn max(&self) -> f64 {
+        self.samples.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+    }
+    pub fn stddev(&self) -> f64 {
+        let m = self.mean();
+        if self.samples.len() < 2 {
+            return 0.0;
+        }
+        (self.samples.iter().map(|x| (x - m) * (x - m)).sum::<f64>()
+            / (self.samples.len() - 1) as f64)
+            .sqrt()
+    }
+    /// Percentile via linear interpolation between order statistics
+    /// (matches numpy's default). `p` in [0, 100].
+    pub fn percentile(&self, p: f64) -> f64 {
+        percentile(&mut self.samples.clone(), p)
+    }
+    pub fn summary(&self) -> Summary {
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Summary {
+            n: s.len(),
+            mean: self.mean(),
+            min: *s.first().unwrap_or(&0.0),
+            p50: percentile_sorted(&s, 50.0),
+            p90: percentile_sorted(&s, 90.0),
+            p99: percentile_sorted(&s, 99.0),
+            max: *s.last().unwrap_or(&0.0),
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+pub fn percentile(xs: &mut [f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(xs, p)
+}
+
+fn percentile_sorted(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let rank = p / 100.0 * (xs.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        xs[lo]
+    } else {
+        let w = rank - lo as f64;
+        xs[lo] * (1.0 - w) + xs[hi] * w
+    }
+}
+
+/// Fixed-bin histogram over [lo, hi); out-of-range values clamp to the
+/// first/last bin. Used by the Fig 1/2 magnitude plots.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub bins: Vec<u64>,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, nbins: usize) -> Self {
+        assert!(hi > lo && nbins > 0);
+        Histogram { lo, hi, bins: vec![0; nbins] }
+    }
+    pub fn add(&mut self, x: f64) {
+        let n = self.bins.len();
+        let t = ((x - self.lo) / (self.hi - self.lo) * n as f64) as isize;
+        let i = t.clamp(0, n as isize - 1) as usize;
+        self.bins[i] += 1;
+    }
+    pub fn total(&self) -> u64 {
+        self.bins.iter().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_percentiles() {
+        let mut a = Accum::new();
+        a.extend(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(a.mean(), 3.0);
+        assert_eq!(a.percentile(0.0), 1.0);
+        assert_eq!(a.percentile(100.0), 5.0);
+        assert_eq!(a.percentile(50.0), 3.0);
+        assert_eq!(a.percentile(25.0), 2.0);
+    }
+
+    #[test]
+    fn interpolated_percentile() {
+        let mut xs = vec![0.0, 10.0];
+        assert_eq!(percentile(&mut xs, 50.0), 5.0);
+        assert_eq!(percentile(&mut xs, 90.0), 9.0);
+    }
+
+    #[test]
+    fn summary_fields() {
+        let mut a = Accum::new();
+        for i in 1..=100 {
+            a.push(i as f64);
+        }
+        let s = a.summary();
+        assert_eq!(s.n, 100);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 100.0);
+        assert!((s.p50 - 50.5).abs() < 1e-9);
+        assert!(s.p90 > 90.0 && s.p90 < 91.0);
+    }
+
+    #[test]
+    fn stddev_sane() {
+        let mut a = Accum::new();
+        a.extend(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]);
+        assert!((a.stddev() - 2.138).abs() < 0.01);
+    }
+
+    #[test]
+    fn histogram_bins_and_clamping() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        h.add(0.5);
+        h.add(9.99);
+        h.add(-5.0); // clamps to bin 0
+        h.add(50.0); // clamps to last bin
+        assert_eq!(h.bins[0], 2);
+        assert_eq!(h.bins[9], 2);
+        assert_eq!(h.total(), 4);
+    }
+
+    #[test]
+    fn empty_accum() {
+        let a = Accum::new();
+        assert_eq!(a.mean(), 0.0);
+        assert_eq!(a.summary().n, 0);
+    }
+}

@@ -1,0 +1,103 @@
+//! Scoped data-parallel helpers over `std::thread` (no external deps).
+//!
+//! The hot paths that need parallelism (reference-forward matmuls,
+//! quantization sweeps, the alpha grid search) are all embarrassingly
+//! parallel loops, so a fork-join `parallel_for` over index chunks is
+//! sufficient; there is no work-stealing queue to maintain.
+
+/// Number of worker threads to use (capped, leaves a core for the OS).
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get().saturating_sub(1).clamp(1, 16))
+        .unwrap_or(4)
+}
+
+/// Run `f(i)` for every `i in 0..n`, split across threads in contiguous
+/// chunks. `f` must be `Sync` (it is shared by reference across workers).
+pub fn parallel_for<F>(n: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    parallel_for_threads(n, default_threads(), f)
+}
+
+pub fn parallel_for_threads<F>(n: usize, threads: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    let threads = threads.clamp(1, n.max(1));
+    if threads <= 1 || n <= 1 {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let chunk = n.div_ceil(threads);
+    std::thread::scope(|s| {
+        for t in 0..threads {
+            let f = &f;
+            let lo = t * chunk;
+            let hi = ((t + 1) * chunk).min(n);
+            if lo >= hi {
+                break;
+            }
+            s.spawn(move || {
+                for i in lo..hi {
+                    f(i);
+                }
+            });
+        }
+    });
+}
+
+/// Map `f` over `0..n` in parallel, collecting results in index order.
+pub fn parallel_map<T, F>(n: usize, f: F) -> Vec<T>
+where
+    T: Send + Default + Clone,
+    F: Fn(usize) -> T + Sync,
+{
+    let mut out = vec![T::default(); n];
+    {
+        let slots: Vec<std::sync::Mutex<&mut T>> =
+            out.iter_mut().map(std::sync::Mutex::new).collect();
+        parallel_for(n, |i| {
+            let mut slot = slots[i].lock().unwrap();
+            **slot = f(i);
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn covers_every_index_once() {
+        let n = 1000;
+        let hits: Vec<AtomicUsize> =
+            (0..n).map(|_| AtomicUsize::new(0)).collect();
+        parallel_for(n, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        let out = parallel_map(100, |i| i * i);
+        assert_eq!(out[7], 49);
+        assert_eq!(out[99], 9801);
+    }
+
+    #[test]
+    fn single_thread_and_empty() {
+        parallel_for_threads(0, 4, |_| panic!("no work"));
+        let count = AtomicUsize::new(0);
+        parallel_for_threads(3, 1, |_| {
+            count.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 3);
+    }
+}

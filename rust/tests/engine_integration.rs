@@ -1,0 +1,193 @@
+//! End-to-end engine integration: requests through scheduler → block
+//! manager → PJRT runtime → sampler, for FP16 and SmoothQuant+ W4A16.
+//! Requires `make artifacts` (tests skip otherwise).
+
+use sqplus::config::{
+    EngineConfig, GpuProfile, ModelConfig, Precision, QuantConfig,
+    QuantMethod,
+};
+use sqplus::coordinator::engine::Engine;
+use sqplus::coordinator::sequence::{FinishReason, SamplingParams};
+use sqplus::model::init::{init_weights, InitSpec};
+use sqplus::quant::{calib, pipeline};
+use sqplus::runtime::executor::ModelRuntime;
+use sqplus::runtime::manifest::{default_dir, Manifest};
+use sqplus::runtime::simtp::Deployment;
+
+fn manifest() -> Option<Manifest> {
+    let dir = default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts not built (make artifacts)");
+        return None;
+    }
+    Some(Manifest::load(&dir).unwrap())
+}
+
+fn fp16_engine(m: &Manifest, ecfg: EngineConfig) -> Engine {
+    let cfg = ModelConfig::tiny();
+    let w = init_weights(&cfg, &InitSpec::default());
+    let deploy = pipeline::fp16_deploy(&cfg, &w);
+    let rt = ModelRuntime::load(m, "tiny", Precision::Fp16, &deploy)
+        .unwrap();
+    Engine::new(Deployment::single(rt, GpuProfile::sim_small(64)), ecfg)
+}
+
+#[test]
+fn serves_batch_of_requests_to_completion() {
+    let Some(m) = manifest() else { return };
+    let mut eng = fp16_engine(&m, EngineConfig::default());
+    let mut ids = vec![];
+    for i in 0..6u32 {
+        let prompt: Vec<u32> =
+            (0..5 + i % 3).map(|t| (i * 53 + t * 17) % 512).collect();
+        ids.push(eng.submit(
+            prompt,
+            SamplingParams { max_new_tokens: 6, ..Default::default() },
+        ));
+    }
+    let steps = eng.run_to_completion(500).unwrap();
+    assert!(steps < 500, "did not converge");
+    let fin = eng.take_finished();
+    assert_eq!(fin.len(), 6);
+    for f in &fin {
+        assert_eq!(f.finish, Some(FinishReason::MaxTokens));
+        assert_eq!(f.output.len(), 6);
+    }
+    let rep = eng.metrics.report();
+    assert_eq!(rep.requests_done, 6);
+    assert_eq!(rep.output_tokens, 36);
+}
+
+#[test]
+fn greedy_engine_matches_reference_generation() {
+    // engine-generated tokens == greedy generation on the reference model
+    let Some(m) = manifest() else { return };
+    use sqplus::coordinator::sampler::argmax;
+    use sqplus::reffwd::{NoHook, RefModel};
+
+    let cfg = ModelConfig::tiny();
+    let w = init_weights(&cfg, &InitSpec::default());
+    let deploy = pipeline::fp16_deploy(&cfg, &w);
+    let rt = ModelRuntime::load(&m, "tiny", Precision::Fp16, &deploy)
+        .unwrap();
+    let mut eng = Engine::new(
+        Deployment::single(rt, GpuProfile::sim_small(64)),
+        EngineConfig::default(),
+    );
+    let prompt: Vec<u32> = vec![17, 301, 5, 99];
+    let id = eng.submit(
+        prompt.clone(),
+        SamplingParams { max_new_tokens: 5, ..Default::default() },
+    );
+    eng.run_to_completion(100).unwrap();
+    let fin = eng.take_finished();
+    let got = &fin.iter().find(|s| s.id == id).unwrap().output;
+
+    // reference greedy loop
+    let rm = RefModel::new(&cfg, &w);
+    let (logits, mut cache) = rm.prefill(&prompt, &mut NoHook);
+    let mut want = vec![argmax(logits.row(prompt.len() - 1))];
+    for _ in 0..4 {
+        let lg = rm.decode(*want.last().unwrap(), &mut cache, &mut NoHook);
+        want.push(argmax(&lg));
+    }
+    assert_eq!(got, &want);
+}
+
+#[test]
+fn w4a16_quantized_engine_serves() {
+    let Some(m) = manifest() else { return };
+    let cfg = ModelConfig::tiny();
+    let w = init_weights(&cfg, &InitSpec::with_outliers(0, 4, 40.0));
+    let prompts: Vec<Vec<u32>> = (0..3)
+        .map(|i| (0..10u32).map(|t| (i * 97 + t * 31) % 512).collect())
+        .collect();
+    let cal = calib::collect(&cfg, &w, &prompts, 16, 0);
+    let out = pipeline::quantize_model(&cfg, &w, &cal,
+                                       QuantMethod::SmoothQuantPlus,
+                                       &QuantConfig::default());
+    let rt = ModelRuntime::load(&m, "tiny", Precision::W4a16,
+                                out.deploy.as_ref().unwrap())
+        .unwrap();
+    let mut eng = Engine::new(
+        Deployment::single(rt, GpuProfile::sim_small(64)),
+        EngineConfig::default(),
+    );
+    for i in 0..4u32 {
+        eng.submit(
+            (0..6).map(|t| (i * 7 + t) % 512).collect(),
+            SamplingParams { max_new_tokens: 4, ..Default::default() },
+        );
+    }
+    eng.run_to_completion(200).unwrap();
+    assert_eq!(eng.take_finished().len(), 4);
+}
+
+#[test]
+fn preemption_under_tiny_pool_still_completes_everything() {
+    let Some(m) = manifest() else { return };
+    // KV pool so small that concurrent sequences must preempt
+    let ecfg = EngineConfig {
+        block_size: 4,
+        total_blocks: 14,
+        max_running: 4,
+        ..Default::default()
+    };
+    let mut eng = fp16_engine(&m, ecfg);
+    for i in 0..5u32 {
+        eng.submit(
+            (0..8).map(|t| (i * 13 + t) % 512).collect(),
+            SamplingParams { max_new_tokens: 8, ..Default::default() },
+        );
+    }
+    eng.run_to_completion(1000).unwrap();
+    let fin = eng.take_finished();
+    assert_eq!(fin.len(), 5);
+    for f in &fin {
+        assert_eq!(f.output.len(), 8, "seq {} output {:?}", f.id, f.output);
+    }
+    // under this pool pressure at least one preemption should occur
+    let rep = eng.metrics.report();
+    assert!(rep.preemptions > 0, "expected preemption pressure");
+}
+
+#[test]
+fn preempted_sequences_continue_deterministically() {
+    // with greedy sampling, preemption + recompute must not change output
+    let Some(m) = manifest() else { return };
+    let prompts: Vec<Vec<u32>> = (0..5)
+        .map(|i| (0..8u32).map(|t| (i * 13 + t) % 512).collect())
+        .collect();
+    let gen = |ecfg: EngineConfig| {
+        let mut eng = fp16_engine(&m, ecfg);
+        for p in &prompts {
+            eng.submit(
+                p.clone(),
+                SamplingParams { max_new_tokens: 8, ..Default::default() },
+            );
+        }
+        eng.run_to_completion(1000).unwrap();
+        let mut fin = eng.take_finished();
+        fin.sort_by_key(|s| s.id);
+        fin.iter().map(|s| s.output.clone()).collect::<Vec<_>>()
+    };
+    let relaxed = gen(EngineConfig::default());
+    let pressured = gen(EngineConfig {
+        block_size: 4,
+        total_blocks: 14,
+        max_running: 4,
+        ..Default::default()
+    });
+    assert_eq!(relaxed, pressured);
+}
+
+#[test]
+fn rejects_overlong_prompt() {
+    let Some(m) = manifest() else { return };
+    let mut eng = fp16_engine(&m, EngineConfig::default());
+    let long: Vec<u32> = vec![1; 4096];
+    eng.submit(long, SamplingParams::default());
+    let fin = eng.take_finished();
+    assert_eq!(fin.len(), 1);
+    assert_eq!(fin[0].finish, Some(FinishReason::PromptTooLong));
+}

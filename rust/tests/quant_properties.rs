@@ -1,0 +1,171 @@
+//! Property-style integration tests over the quantization library — the
+//! invariants DESIGN.md §6 commits to, checked across random models,
+//! alphas and shapes (in-tree `prop` harness; proptest is unavailable in
+//! the offline build).
+
+use sqplus::config::{ModelConfig, QuantConfig, QuantMethod};
+use sqplus::model::init::{init_weights, InitSpec};
+use sqplus::quant::{calib, pipeline, rtn, smooth};
+use sqplus::reffwd::{NoHook, RefModel, Site};
+use sqplus::tensor::Tensor;
+use sqplus::util::prop;
+use sqplus::util::rng::Rng;
+
+fn rand_model(seed: u64, outliers: usize)
+    -> (ModelConfig, sqplus::model::store::WeightStore) {
+    let cfg = ModelConfig::tiny();
+    let w = init_weights(&cfg,
+                         &InitSpec::with_outliers(seed, outliers, 15.0));
+    (cfg, w)
+}
+
+#[test]
+fn prop_smoothing_equivalence_random_alpha() {
+    prop::check("smooth equivalence", 6, |rng| {
+        let (cfg, w) = rand_model(rng.next_u64(), 1 + rng.below(6));
+        let prompts: Vec<Vec<u32>> =
+            vec![(0..8).map(|t| (t * 29 + 7) % 512).collect()];
+        let cal = calib::collect(&cfg, &w, &prompts, 16, 0);
+        let alpha = rng.f32();
+        let mut sm = w.clone();
+        smooth::smooth_model(&mut sm, &cfg, &cal, alpha);
+        let tokens = [5u32, 200, 87, 3];
+        let (a, _) = RefModel::new(&cfg, &w).prefill(&tokens, &mut NoHook);
+        let (b, _) = RefModel::new(&cfg, &sm).prefill(&tokens, &mut NoHook);
+        prop::assert_allclose(&a.data, &b.data, 5e-3, 5e-3,
+                              &format!("alpha {alpha}"));
+    });
+}
+
+#[test]
+fn prop_quant_dequant_error_bound() {
+    prop::check("rtn 1.5-delta bound", 12, |rng| {
+        let k = 128 * (1 + rng.below(3));
+        let n = 1 + rng.below(24);
+        let loc = (rng.f32() - 0.5) * 8.0;
+        let scale = 0.001 + rng.f32() * 4.0;
+        let w = Tensor::from_vec(
+            &[k, n],
+            (0..k * n).map(|_| rng.normal() * scale + loc).collect(),
+        );
+        let ql = rtn::quantize(&w, 128);
+        let deq = ql.dequantize();
+        for kk in 0..k {
+            for j in 0..n {
+                let s = ql.scales.data[(kk / 128) * n + j];
+                let e = (deq.data[kk * n + j] - w.data[kk * n + j]).abs();
+                assert!(e <= 1.5 * s + 1e-5, "err {e} > 1.5*{s}");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_pack_unpack_roundtrip() {
+    prop::check("pack roundtrip", 20, |rng| {
+        let k = 2 * (1 + rng.below(128));
+        let n = 1 + rng.below(32);
+        let q: Vec<u8> = (0..k * n).map(|_| rng.below(16) as u8).collect();
+        let packed = sqplus::quant::pack::pack_nibbles(&q, k, n);
+        assert_eq!(sqplus::quant::pack::unpack_nibbles(&packed), q);
+    });
+}
+
+#[test]
+fn prop_deploy_store_dequantizes_to_effective() {
+    // deploy (packed) and effective (fake-quant) stores must describe the
+    // same weights: unpack+dequant(deploy) == effective, exactly.
+    let (cfg, w) = rand_model(3, 4);
+    let prompts: Vec<Vec<u32>> = vec![(0..8).map(|t| (t * 13) % 512)
+        .collect()];
+    let cal = calib::collect(&cfg, &w, &prompts, 16, 0);
+    let out = pipeline::quantize_model(&cfg, &w, &cal, QuantMethod::Rtn,
+                                       &QuantConfig::default());
+    let deploy = out.deploy.unwrap();
+    for layer in 0..cfg.layers {
+        for lin in sqplus::model::LAYER_LINEARS {
+            let base = format!("layers.{layer}.{lin}");
+            let ql = rtn::QuantizedLinear {
+                packed: deploy.u8(&format!("{base}.packed")).clone(),
+                scales: deploy.f32(&format!("{base}.scales")).clone(),
+                zeros: deploy.f32(&format!("{base}.zeros")).clone(),
+                group_size: cfg.group_size,
+            };
+            let deq = ql.dequantize();
+            prop::assert_allclose(&deq.data,
+                                  &out.effective.f32(&base).data,
+                                  1e-6, 1e-6, &base);
+        }
+    }
+}
+
+#[test]
+fn prop_smoothed_quant_loss_never_worse_than_best_extreme() {
+    // the searched alpha's loss is <= both endpoint losses (alpha=0, 1)
+    prop::check("search optimality on grid", 3, |rng| {
+        let (cfg, w) = rand_model(rng.next_u64(), 4);
+        let prompts: Vec<Vec<u32>> =
+            vec![(0..10).map(|t| (t * 31 + 11) % 512).collect()];
+        let cal = calib::collect(&cfg, &w, &prompts, 24, 0);
+        let qcfg = QuantConfig::default();
+        let r = sqplus::quant::search::search_alpha(&cfg, &w, &cal, &qcfg);
+        let l0 = r.grid.first().unwrap().1;
+        let l1 = r.grid.last().unwrap().1;
+        assert!(r.loss <= l0 + 1e-9 && r.loss <= l1 + 1e-9,
+                "searched {} vs endpoints {l0}, {l1}", r.loss);
+    });
+}
+
+#[test]
+fn prop_calib_stats_are_upper_bounds() {
+    // absmax from calibration really bounds the activations of the same
+    // prompts (self-consistency of the collector)
+    let (cfg, w) = rand_model(9, 4);
+    let prompts: Vec<Vec<u32>> = (0..3)
+        .map(|i| (0..9).map(|t| (i * 67 + t * 23) % 512).collect())
+        .collect();
+    let cal = calib::collect(&cfg, &w, &prompts, 1024, 0);
+    // recollect and compare: deterministic forward => identical stats
+    let cal2 = calib::collect(&cfg, &w, &prompts, 1024, 0);
+    for layer in 0..cfg.layers {
+        for site in Site::all() {
+            let a = cal.stats(layer, site);
+            let b = cal2.stats(layer, site);
+            prop::assert_allclose(&a.absmax, &b.absmax, 1e-6, 1e-7,
+                                  "absmax deterministic");
+            // retained rows obey the bound
+            let (r, c) = (a.rows.shape[0], a.rows.shape[1]);
+            for i in 0..r {
+                for j in 0..c {
+                    assert!(a.rows.data[i * c + j].abs()
+                        <= a.absmax[j] + 1e-5);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_awq_and_sqplus_preserve_model_function() {
+    let mut rng = Rng::new(77);
+    for _ in 0..2 {
+        let (cfg, w) = rand_model(rng.next_u64(), 3);
+        let prompts: Vec<Vec<u32>> =
+            vec![(0..8).map(|t| (t * 41 + 3) % 512).collect()];
+        let cal = calib::collect(&cfg, &w, &prompts, 16, 0);
+        let tokens = [9u32, 100, 55];
+        let (want, _) =
+            RefModel::new(&cfg, &w).prefill(&tokens, &mut NoHook);
+        for method in [QuantMethod::Awq, QuantMethod::SmoothQuantPlus] {
+            let out = pipeline::quantize_model(&cfg, &w, &cal, method,
+                                               &QuantConfig::default());
+            let (got, _) = RefModel::new(&cfg, &out.effective)
+                .prefill(&tokens, &mut NoHook);
+            // quantized model stays in the same ballpark (sanity; the
+            // tight accuracy statements live in the eval benches)
+            let rel = got.sub(&want).frob_sq().sqrt()
+                / want.frob_sq().sqrt();
+            assert!(rel < 0.5, "{method:?} rel err {rel}");
+        }
+    }
+}

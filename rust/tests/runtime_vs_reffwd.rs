@@ -1,0 +1,165 @@
+//! Integration: the PJRT-executed HLO (lowered from JAX, with and without
+//! the Pallas W4A16 kernel) must match the pure-Rust reference forward on
+//! the same weights — the cross-language, cross-layer numerics check.
+//!
+//! Requires `make artifacts`. Tests skip (with a note) if absent.
+
+use sqplus::config::{ModelConfig, Precision, QuantConfig, QuantMethod};
+use sqplus::model::init::{init_weights, InitSpec};
+use sqplus::quant::{calib, pipeline};
+use sqplus::reffwd::{NoHook, RefModel};
+use sqplus::runtime::executor::ModelRuntime;
+use sqplus::runtime::kv::{self, SeqKv};
+use sqplus::runtime::manifest::{default_dir, Manifest};
+use sqplus::util::prop;
+
+fn manifest() -> Option<Manifest> {
+    let dir = default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts not built (make artifacts)");
+        return None;
+    }
+    Some(Manifest::load(&dir).unwrap())
+}
+
+fn max_rel_err(a: &[f32], b: &[f32]) -> f32 {
+    let scale = b.iter().fold(0.0f32, |m, x| m.max(x.abs())).max(1e-6);
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max)
+        / scale
+}
+
+#[test]
+fn fp16_prefill_matches_reference() {
+    let Some(m) = manifest() else { return };
+    let cfg = ModelConfig::tiny();
+    let w = init_weights(&cfg, &InitSpec::default());
+    let deploy = pipeline::fp16_deploy(&cfg, &w);
+    let rt = ModelRuntime::load(&m, "tiny", Precision::Fp16, &deploy)
+        .unwrap();
+
+    let prompt: Vec<u32> = vec![5, 9, 2, 7, 1, 4, 6, 8];
+    let res = rt.prefill(&[&prompt]).unwrap();
+    let (want, _) = RefModel::new(&cfg, &w).prefill(&prompt, &mut NoHook);
+
+    // compare logits at every real position
+    for pos in 0..prompt.len() {
+        let got =
+            &res.logits[pos * cfg.vocab..(pos + 1) * cfg.vocab];
+        let e = max_rel_err(got, want.row(pos));
+        assert!(e < 1e-3, "pos {pos}: rel err {e}");
+    }
+}
+
+#[test]
+fn fp16_decode_matches_reference() {
+    let Some(m) = manifest() else { return };
+    let cfg = ModelConfig::tiny();
+    let w = init_weights(&cfg, &InitSpec::default());
+    let deploy = pipeline::fp16_deploy(&cfg, &w);
+    let rt = ModelRuntime::load(&m, "tiny", Precision::Fp16, &deploy)
+        .unwrap();
+
+    let prompt: Vec<u32> = vec![3, 1, 4, 1, 5];
+    // runtime path: prefill then 3 decode steps
+    let pre = rt.prefill(&[&prompt]).unwrap();
+    let mut seq = SeqKv::new(&cfg);
+    {
+        let mut refs = [&mut seq];
+        kv::fill_prefill_rows(&mut refs, &cfg, pre.batch, pre.seq,
+                              &pre.kv_new, &[prompt.len()]);
+    }
+    // reference path
+    let rm = RefModel::new(&cfg, &w);
+    let (_, mut rcache) = rm.prefill(&prompt, &mut NoHook);
+
+    let next = [9u32, 2, 6];
+    for &t in &next {
+        let kvb = kv::assemble_batch(&[&seq], &cfg, 1);
+        let got = rt.decode(&[t], &[seq.len], &kvb).unwrap();
+        {
+            let mut refs = [&mut seq];
+            kv::append_decode_rows(&mut refs, &cfg, got.batch, &got.kv_new);
+        }
+        let want = rm.decode(t, &mut rcache, &mut NoHook);
+        let e = max_rel_err(&got.logits[..cfg.vocab], &want);
+        assert!(e < 1e-3, "token {t}: rel err {e}");
+    }
+}
+
+#[test]
+fn w4a16_runtime_matches_fake_quant_reference() {
+    // The Pallas kernel path (packed weights through PJRT) must equal the
+    // Rust fake-quant reference — this closes the loop on the shared
+    // quantization numerics.
+    let Some(m) = manifest() else { return };
+    let cfg = ModelConfig::tiny();
+    let w = init_weights(&cfg, &InitSpec::with_outliers(1, 4, 40.0));
+    let prompts: Vec<Vec<u32>> = (0..3)
+        .map(|i| (0..10u32).map(|t| (i * 97 + t * 31) % 512).collect())
+        .collect();
+    let cal = calib::collect(&cfg, &w, &prompts, 24, 0);
+    let out = pipeline::quantize_model(&cfg, &w, &cal,
+                                       QuantMethod::SmoothQuantPlus,
+                                       &QuantConfig::default());
+    let rt = ModelRuntime::load(&m, "tiny", Precision::W4a16,
+                                out.deploy.as_ref().unwrap())
+        .unwrap();
+
+    let prompt: Vec<u32> = vec![11, 22, 33, 44, 55, 66];
+    let res = rt.prefill(&[&prompt]).unwrap();
+    let (want, _) =
+        RefModel::new(&cfg, &out.effective).prefill(&prompt, &mut NoHook);
+    for pos in [0usize, 3, 5] {
+        let got = &res.logits[pos * cfg.vocab..(pos + 1) * cfg.vocab];
+        let e = max_rel_err(got, want.row(pos));
+        assert!(e < 2e-3, "pos {pos}: rel err {e}");
+    }
+}
+
+#[test]
+fn batched_prefill_slots_are_independent() {
+    let Some(m) = manifest() else { return };
+    let cfg = ModelConfig::tiny();
+    let w = init_weights(&cfg, &InitSpec::default());
+    let deploy = pipeline::fp16_deploy(&cfg, &w);
+    let rt = ModelRuntime::load(&m, "tiny", Precision::Fp16, &deploy)
+        .unwrap();
+    let p1: Vec<u32> = vec![10, 20, 30];
+    let p2: Vec<u32> = vec![400, 52, 77, 8, 123];
+    let solo = rt.prefill(&[&p1]).unwrap();
+    let both = rt.prefill(&[&p1, &p2]).unwrap();
+    // p1 logits identical whether batched with p2 or not
+    for pos in 0..p1.len() {
+        let a = &solo.logits[pos * cfg.vocab..(pos + 1) * cfg.vocab];
+        let b = &both.logits[(0 * both.seq + pos) * cfg.vocab..][..cfg.vocab];
+        prop::assert_allclose(a, b, 1e-4, 1e-5, "batch independence");
+    }
+}
+
+#[test]
+fn decode_bucket_padding_is_inert() {
+    let Some(m) = manifest() else { return };
+    let cfg = ModelConfig::tiny();
+    let w = init_weights(&cfg, &InitSpec::default());
+    let deploy = pipeline::fp16_deploy(&cfg, &w);
+    let rt = ModelRuntime::load(&m, "tiny", Precision::Fp16, &deploy)
+        .unwrap();
+    let prompt: Vec<u32> = vec![3, 1, 4, 1, 5];
+    let pre = rt.prefill(&[&prompt]).unwrap();
+    let mut seq = SeqKv::new(&cfg);
+    {
+        let mut refs = [&mut seq];
+        kv::fill_prefill_rows(&mut refs, &cfg, pre.batch, pre.seq,
+                              &pre.kv_new, &[prompt.len()]);
+    }
+    // run the same decode through bucket 1 and bucket 2 (padded)
+    let kv1 = kv::assemble_batch(&[&seq], &cfg, 1);
+    let a = rt.decode(&[7], &[seq.len], &kv1).unwrap();
+    let kv2 = kv::assemble_batch(&[&seq], &cfg, 2);
+    let b = rt.decode(&[7, 0], &[seq.len, 0], &kv2).unwrap();
+    prop::assert_allclose(&a.logits[..cfg.vocab], &b.logits[..cfg.vocab],
+                          1e-4, 1e-5, "padding inert");
+}
