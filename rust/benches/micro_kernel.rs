@@ -1,18 +1,88 @@
-//! Micro-bench: the PJRT-executed decode/prefill step, FP16 GEMM vs the
-//! Pallas-lowered W4A16 dequant-GEMM, across batch buckets (the paper's
-//! kernel-level claim: the W4A16 path must not lose to FP16 despite the
-//! dequant work, because weight traffic shrinks 4x).
+//! Micro-bench: the host-side fused W4A16 kernel (dequant folded into the
+//! GEMM, straight from packed nibbles) against dequantize-then-matmul and
+//! the dense f32 GEMM, then — when artifacts are built — the
+//! PJRT-executed decode/prefill step, FP16 GEMM vs the Pallas-lowered
+//! W4A16 dequant-GEMM, across batch buckets (the paper's kernel-level
+//! claim: the W4A16 path must not lose to FP16 despite the dequant work,
+//! because weight traffic shrinks 4x). Writes `BENCH_micro.json`
+//! (section `micro_kernel`) every run.
 
 #[path = "common/mod.rs"]
 mod common;
 
 use sqplus::config::{Precision, QuantMethod};
-use sqplus::quant::pipeline;
+use sqplus::quant::{kernel, pipeline, rtn};
 use sqplus::runtime::executor::ModelRuntime;
 use sqplus::runtime::kv::{self, SeqKv};
-use sqplus::util::bench::{Bench, Table};
+use sqplus::tensor::Tensor;
+use sqplus::util::bench::{Bench, JsonReport, Table};
+use sqplus::util::rng::Rng;
+
+/// Host fused-kernel section: no PJRT artifacts required.
+fn host_kernel_bench(report: &mut JsonReport) {
+    let mut rng = Rng::new(1);
+    let (k, n) = (2048usize, 2048usize);
+    let w = Tensor::from_vec(&[k, n],
+                             (0..k * n).map(|_| rng.normal()).collect());
+    let q = rtn::quantize(&w, 128);
+    let dense = q.dequantize(); // resident-f32 baseline ("fp16" proxy)
+    let mut t = Table::new(
+        "micro: host W4A16 matmul (2048x2048, g=128)",
+        &["rows", "fused (ms)", "deq+matmul (ms)", "dense f32 (ms)",
+          "fused/dense"],
+    );
+    for m in [1usize, 16, 128] {
+        let x = Tensor::from_vec(
+            &[m, k],
+            (0..m * k).map(|_| rng.normal()).collect(),
+        );
+        let r_fused = Bench::new(&format!("w4a16 fused m={m}"))
+            .warmup(2)
+            .iters(8)
+            .run(|| {
+                std::hint::black_box(
+                    kernel::matmul_w4a16(&x, &q).data.len(),
+                );
+            });
+        let r_deq = Bench::new(&format!("w4a16 deq+matmul m={m}"))
+            .warmup(1)
+            .iters(4)
+            .run(|| {
+                let d = q.dequantize();
+                std::hint::black_box(x.matmul(&d).data.len());
+            });
+        let r_dense = Bench::new(&format!("dense f32 m={m}"))
+            .warmup(2)
+            .iters(8)
+            .run(|| {
+                std::hint::black_box(x.matmul(&dense).data.len());
+            });
+        t.row(&[
+            m.to_string(),
+            format!("{:.2}", r_fused.p50_s * 1e3),
+            format!("{:.2}", r_deq.p50_s * 1e3),
+            format!("{:.2}", r_dense.p50_s * 1e3),
+            format!("{:.2}x", r_fused.p50_s / r_dense.p50_s.max(1e-12)),
+        ]);
+        report.add(&format!("host_w4a16_fused_m{m}"), &r_fused);
+        report.add(&format!("host_w4a16_deq_matmul_m{m}"), &r_deq);
+        report.add(&format!("host_dense_f32_m{m}"), &r_dense);
+        report.metric(
+            &format!("host_w4a16_fused_vs_deq_speedup_m{m}"),
+            r_deq.p50_s / r_fused.p50_s.max(1e-12),
+        );
+    }
+    t.print();
+}
 
 fn main() {
+    let mut report = JsonReport::micro("micro_kernel");
+    host_kernel_bench(&mut report);
+    match report.write() {
+        Ok(()) => eprintln!("wrote BENCH_micro.json (micro_kernel)"),
+        Err(e) => eprintln!("BENCH_micro.json write failed: {e}"),
+    }
+
     let Some(man) = common::manifest() else { return };
     let size = common::bench_sizes().first().cloned()
         .unwrap_or_else(|| "tiny".into());

@@ -1,17 +1,55 @@
 //! Micro-bench: quantization pipeline costs — RTN quantize+pack
-//! bandwidth, the SmoothQuant+ global alpha search vs the AWQ per-layer
-//! search (the paper's "1/5 of the time taken by AWQ" claim).
+//! bandwidth, the fused grid-point loss vs the pre-fusion
+//! clone-and-fake-quant path, and the SmoothQuant+ global alpha search vs
+//! the AWQ per-layer search (the paper's "1/5 of the time taken by AWQ"
+//! claim). Writes machine-readable results to `BENCH_micro.json`
+//! (section `micro_quant`) every run.
 
 #[path = "common/mod.rs"]
 mod common;
 
-use sqplus::config::{QuantConfig, QuantMethod};
+use sqplus::config::{ModelConfig, QuantConfig, QuantMethod};
+use sqplus::model::store::WeightStore;
+use sqplus::model::LAYER_LINEARS;
+use sqplus::quant::calib::CalibData;
+use sqplus::quant::loss::{linear_loss, site_of};
+use sqplus::quant::smooth::{smoothing_factors, unit_weight_absmax};
 use sqplus::quant::{awq, rtn, search};
 use sqplus::tensor::Tensor;
-use sqplus::util::bench::{Bench, Table};
+use sqplus::util::bench::{Bench, JsonReport, Table};
 use sqplus::util::rng::Rng;
 
+/// The pre-fusion grid-point evaluation, reconstructed for an
+/// apples-to-apples baseline: per linear it clones the weight, scales,
+/// runs the quantize→dequantize round trip, unscales, materializes the
+/// difference and multiplies it against the calibration rows.
+fn loss_at_alpha_unfused(cfg: &ModelConfig, w: &WeightStore,
+                         calib: &CalibData, group_size: usize, alpha: f32)
+    -> f64 {
+    let mut total = 0.0;
+    for layer in 0..cfg.layers {
+        for lin in LAYER_LINEARS {
+            let site = site_of(lin);
+            let stats = calib.stats(layer, site);
+            let wmax = unit_weight_absmax(w, layer, site);
+            let s = smoothing_factors(&stats.absmax, &wmax, alpha);
+            let name = format!("layers.{layer}.{lin}");
+            let orig = w.f32(&name);
+            let mut scaled = orig.clone();
+            scaled.scale_rows(&s);
+            let mut eff = rtn::fake_quant(&scaled, group_size);
+            let inv: Vec<f32> = s.iter().map(|&v| 1.0 / v).collect();
+            eff.scale_rows(&inv);
+            let rows = stats.rows.shape[0].max(1) as f64;
+            total += linear_loss(&stats.rows, orig, &eff) / rows;
+        }
+    }
+    total
+}
+
 fn main() {
+    let mut report = JsonReport::micro("micro_quant");
+
     // ---- RTN quantize + pack bandwidth
     let mut rng = Rng::new(0);
     let (k, n) = (2048usize, 2048usize);
@@ -30,6 +68,75 @@ fn main() {
         r.p50_s * 1e3,
         (k * n * 4) as f64 / r.p50_s / 1e9
     );
+    report.add("rtn_quantize_pack_2048x2048", &r);
+    report.metric("rtn_quantize_pack_gbps",
+                  (k * n * 4) as f64 / r.p50_s / 1e9);
+
+    // ---- fused grid-point loss vs the pre-fusion clone+fake-quant path
+    let mut t_loss = Table::new(
+        "micro: alpha grid-point loss, fused vs pre-fusion path",
+        &["size", "unfused (ms)", "fused (ms)", "speedup"],
+    );
+    for size in common::bench_sizes() {
+        let s = common::setup(&size);
+        let qcfg = QuantConfig::default();
+        let r_old = Bench::new(&format!("{size} loss_at_alpha unfused"))
+            .warmup(1)
+            .iters(3)
+            .run(|| {
+                std::hint::black_box(loss_at_alpha_unfused(
+                    &s.cfg, &s.weights, &s.calib, qcfg.group_size, 0.5,
+                ));
+            });
+        let r_new = Bench::new(&format!("{size} loss_at_alpha fused"))
+            .warmup(1)
+            .iters(3)
+            .run(|| {
+                std::hint::black_box(search::loss_at_alpha(
+                    &s.cfg, &s.weights, &s.calib, qcfg.group_size, 0.5,
+                ));
+            });
+        t_loss.row(&[
+            size.clone(),
+            format!("{:.2}", r_old.p50_s * 1e3),
+            format!("{:.2}", r_new.p50_s * 1e3),
+            format!("{:.1}x", r_old.p50_s / r_new.p50_s.max(1e-12)),
+        ]);
+        report.add(&format!("{size}_loss_at_alpha_unfused"), &r_old);
+        report.add(&format!("{size}_loss_at_alpha_fused"), &r_new);
+        report.metric(&format!("{size}_loss_at_alpha_speedup"),
+                      r_old.p50_s / r_new.p50_s.max(1e-12));
+
+        // ---- end-to-end SQ+ quantize (search + smooth + quantize_store)
+        // vs the pre-fusion search cost alone (a conservative lower bound
+        // on the old end-to-end time: 21 unfused grid points)
+        let steps = (1.0 / qcfg.alpha_step).round() as usize + 1;
+        let t0 = std::time::Instant::now();
+        for i in 0..steps {
+            let alpha =
+                (i as f64 * qcfg.alpha_step).min(1.0) as f32;
+            std::hint::black_box(loss_at_alpha_unfused(
+                &s.cfg, &s.weights, &s.calib, qcfg.group_size, alpha,
+            ));
+        }
+        let old_search_s = t0.elapsed().as_secs_f64();
+        let out = common::quantize(&s, QuantMethod::SmoothQuantPlus);
+        eprintln!(
+            "  {size} SQ+ end-to-end quantize {:.2}s (pre-fusion search \
+             alone {:.2}s) => {:.1}x",
+            out.quantize_s,
+            old_search_s,
+            old_search_s / out.quantize_s.max(1e-12)
+        );
+        report.metric(&format!("{size}_sqplus_quantize_s"),
+                      out.quantize_s);
+        report.metric(&format!("{size}_prefusion_search_s"), old_search_s);
+        report.metric(
+            &format!("{size}_sqplus_end_to_end_speedup"),
+            old_search_s / out.quantize_s.max(1e-12),
+        );
+    }
+    t_loss.print();
 
     // ---- search cost: SQ+ global grid vs AWQ per-layer
     let mut t = Table::new(
@@ -52,12 +159,16 @@ fn main() {
             format!("{:.2}", ar.elapsed_s),
             format!("{:.1}x", ar.elapsed_s / sr.elapsed_s.max(1e-9)),
         ]);
+        report.metric(&format!("{size}_sqplus_search_s"), sr.elapsed_s);
+        report.metric(&format!("{size}_awq_search_s"), ar.elapsed_s);
         // full quantize timings
         for m in [QuantMethod::Rtn, QuantMethod::SmoothQuantPlus,
                   QuantMethod::Awq] {
             let out = common::quantize(&s, m);
             eprintln!("  {size} {:<13} quantize {:.2}s", m.as_str(),
                       out.quantize_s);
+            report.metric(&format!("{size}_{}_quantize_s", m.as_str()),
+                          out.quantize_s);
         }
     }
     t.print();
@@ -66,4 +177,8 @@ fn main() {
          direction expected: the global grid (21 evals) is far cheaper \
          than AWQ's per-unit alpha x clip grid."
     );
+    match report.write() {
+        Ok(()) => eprintln!("wrote BENCH_micro.json (micro_quant)"),
+        Err(e) => eprintln!("BENCH_micro.json write failed: {e}"),
+    }
 }

@@ -16,6 +16,7 @@ fn main() {
         vec!["RTN".into()],
         vec!["SQ+(step=0.05)".into()],
         vec!["SQ+(step=0.01)".into()],
+        vec!["SQ+(w4a16 host)".into()],
     ];
     for size in &sizes {
         eprintln!("== size {size} ==");
@@ -44,6 +45,18 @@ fn main() {
                 r.exact_match * 100.0,
                 out.loss.total
             ));
+            if i == 0 {
+                // serve the packed deploy store through the fused host
+                // W4A16 kernel — the eval the paper's serving claim is
+                // actually about (not the fake-quant stand-in)
+                let deploy = out.deploy.as_ref().unwrap();
+                let rp = evaluate(&s.cfg, &s.weights, deploy,
+                                  &s.eval_prompts, 8);
+                eprintln!("  w4a16 host: exact={:.1}% agree={:.1}%",
+                          rp.exact_match * 100.0,
+                          rp.token_agreement * 100.0);
+                rows[4].push(format!("{:.1}%", rp.exact_match * 100.0));
+            }
         }
     }
     let mut headers = vec!["method".to_string()];

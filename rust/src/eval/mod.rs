@@ -11,6 +11,11 @@
 //! Both run on the pure-Rust reference forward so they do not require
 //! artifacts; engine-level generation equality is covered by the
 //! integration tests.
+//!
+//! Either side may be a w4a16-layout *deploy* store: `RefModel` detects
+//! packed linears by name and routes them through the fused host W4A16
+//! kernel, so quantized serving accuracy can be evaluated on the packed
+//! path itself rather than a fake-quant stand-in.
 
 use crate::config::ModelConfig;
 use crate::coordinator::sampler::argmax;
@@ -150,6 +155,34 @@ mod tests {
             r_sqp.nll,
             r_rtn.nll
         );
+    }
+
+    #[test]
+    fn packed_candidate_evaluates_like_effective() {
+        // exercising packed mode end-to-end: the deploy store (fused
+        // W4A16 kernel path) must score essentially the same as its
+        // fake-quant effective twin
+        let cfg = ModelConfig::tiny();
+        let w = init_weights(&cfg, &InitSpec::with_outliers(0, 4, 60.0));
+        let cal_prompts = prompts(3, 10, cfg.vocab);
+        let cal = calib::collect(&cfg, &w, &cal_prompts, 16, 0);
+        let out = pipeline::quantize_model(&cfg, &w, &cal,
+                                           QuantMethod::Rtn,
+                                           &QuantConfig::default());
+        let deploy = out.deploy.unwrap();
+        let ev = prompts(6, 8, cfg.vocab);
+        let r_eff = evaluate(&cfg, &w, &out.effective, &ev, 4);
+        let r_pkd = evaluate(&cfg, &w, &deploy, &ev, 4);
+        assert_eq!(r_pkd.n_prompts, 6);
+        assert!(r_pkd.nll.is_finite());
+        // the two candidates are the same function up to kernel f32
+        // reassociation; scores must be near-identical
+        assert!((r_pkd.nll - r_eff.nll).abs() < 1e-2,
+                "nll packed {} vs effective {}", r_pkd.nll, r_eff.nll);
+        assert!((r_pkd.token_agreement - r_eff.token_agreement).abs()
+                    <= 0.05,
+                "agreement packed {} vs effective {}",
+                r_pkd.token_agreement, r_eff.token_agreement);
     }
 
     #[test]

@@ -19,8 +19,7 @@ use crate::tensor::Tensor;
 use crate::util::threadpool::parallel_map;
 
 use super::calib::CalibData;
-use super::loss::linear_loss;
-use super::rtn;
+use super::loss::quant_loss;
 use super::smooth::apply_unit;
 
 /// AWQ's per-unit alpha grid (20 points, matching AutoAWQ's n_grid).
@@ -56,22 +55,18 @@ pub fn awq_search_and_smooth(store: &mut WeightStore, cfg: &ModelConfig,
                 })
                 .collect();
             evals += grid.len();
+            // fused grid eval: no weight clone or fake-quant round trip
+            // per (alpha, clip) candidate
             let losses = parallel_map(grid.len(), |gi| {
                 let (alpha, clip) = grid[gi];
                 let s = awq_factors(&stats.absmean, alpha);
-                let inv: Vec<f32> = s.iter().map(|&v| 1.0 / v).collect();
+                let rows = stats.rows.shape[0].max(1) as f64;
                 let mut total = 0.0;
                 for lin in site.consumers() {
                     let name = format!("layers.{layer}.{lin}");
-                    let orig = store.f32(&name);
-                    let mut scaled = orig.clone();
-                    scaled.scale_rows(&s);
-                    let mut eff = rtn::quantize_clipped(
-                        &scaled, qcfg.group_size, clip)
-                        .dequantize();
-                    eff.scale_rows(&inv);
-                    let rows = stats.rows.shape[0].max(1) as f64;
-                    total += linear_loss(&stats.rows, orig, &eff) / rows;
+                    total += quant_loss(&stats.rows, store.f32(&name),
+                                        Some(&s), qcfg.group_size, clip)
+                        / rows;
                 }
                 total
             });
@@ -116,7 +111,7 @@ fn unused(_: &Tensor) {}
 mod tests {
     use super::*;
     use crate::model::init::{init_weights, InitSpec};
-    use crate::quant::{calib, loss};
+    use crate::quant::{calib, loss, rtn};
     use crate::reffwd::{NoHook, RefModel};
     use crate::util::prop;
 
@@ -180,7 +175,7 @@ mod tests {
         let err = |eff: &WeightStore| {
             let (got, _) =
                 RefModel::new(&cfg, eff).prefill(&tokens, &mut NoHook);
-            got.sub(&want).frob_sq()
+            got.sq_diff(&want)
         };
         let e_awq = err(&eff_awq);
         let e_rtn = err(&eff_rtn);

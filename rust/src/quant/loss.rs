@@ -2,6 +2,14 @@
 //! retained calibration rows. Both W and Ŵ are expressed in the *original*
 //! activation frame, so smoothed candidates are compared fairly:
 //! `Ŵ_eff = diag(s)^-1 · dequant(quant(diag(s) · W))`.
+//!
+//! [`quant_loss`] is the fused form used on the search hot path: it
+//! streams over quantization groups, building each group's grid and the
+//! per-element error `w - deq/s` on the fly, and accumulates `X·(W−Ŵ)`
+//! directly — no weight clone, no fake-quant round trip, no difference
+//! tensor. It is bit-for-bit equal to the unfused
+//! `clone → scale_rows → fake_quant → scale_rows(1/s) → linear_loss`
+//! pipeline it replaced (the property suite asserts exact equality).
 
 use crate::config::ModelConfig;
 use crate::model::store::WeightStore;
@@ -10,11 +18,114 @@ use crate::reffwd::Site;
 use crate::tensor::Tensor;
 
 use super::calib::CalibData;
+use super::rtn::{int4_grid, NIBBLE_MAX};
 
 /// `||X (W - W_eff)||²_F` for one linear.
 pub fn linear_loss(x_rows: &Tensor, w: &Tensor, w_eff: &Tensor) -> f64 {
     let e = w.sub(w_eff);
     x_rows.matmul(&e).frob_sq()
+}
+
+/// Fused quantization loss of `w: [K, N]` against activation rows
+/// `x_rows: [R, K]`, optionally smoothed by per-input-channel factors `s`
+/// and range-clipped by `clip_ratio` (1.0 = none):
+///
+/// `||X (W − diag(s)^-1 · dequant(quant_clipped(diag(s) · W)))||²_F`
+///
+/// Single-threaded by design — the callers (alpha grid, AWQ grid) already
+/// parallelize across units/grid points, so the inner loop stays a clean
+/// streaming pass: per column block, per group, (1) scaled min/max,
+/// (2) grid, (3) error row + `X` accumulation. The only allocation is the
+/// `[R, N]` product accumulator the unfused path also produced as its
+/// matmul output.
+pub fn quant_loss(x_rows: &Tensor, w: &Tensor, s: Option<&[f32]>,
+                  group_size: usize, clip_ratio: f32) -> f64 {
+    let (r, kx) = x_rows.dims2();
+    let (k, n) = w.dims2();
+    assert_eq!(kx, k, "activation dim {kx} vs weight K {k}");
+    assert_eq!(k % group_size, 0, "K={k} % group={group_size}");
+    if let Some(s) = s {
+        assert_eq!(s.len(), k, "smoothing factors len");
+    }
+    let groups = k / group_size;
+    const JB: usize = 64;
+    let nbj = n.div_ceil(JB);
+    let xd = &x_rows.data;
+    let wd = &w.data;
+    // e = X · (W - W_eff), filled block-by-block
+    let mut e = vec![0.0f32; r * n];
+    let mut wmin = [0.0f32; JB];
+    let mut wmax = [0.0f32; JB];
+    let mut delta = [0.0f32; JB];
+    let mut zpt = [0.0f32; JB];
+    let mut dj = [0.0f32; JB];
+    for bj in 0..nbj {
+        let j0 = bj * JB;
+        let jw = JB.min(n - j0);
+        for g in 0..groups {
+            let k0 = g * group_size;
+            // pass 1: per-column (min, max) of the scaled group
+            wmin[..jw].fill(f32::INFINITY);
+            wmax[..jw].fill(f32::NEG_INFINITY);
+            for kk in k0..k0 + group_size {
+                let sk = match s {
+                    Some(sv) => sv[kk],
+                    None => 1.0,
+                };
+                let row = &wd[kk * n + j0..kk * n + j0 + jw];
+                for j in 0..jw {
+                    let v = row[j] * sk;
+                    if v < wmin[j] {
+                        wmin[j] = v;
+                    }
+                    if v > wmax[j] {
+                        wmax[j] = v;
+                    }
+                }
+            }
+            // pass 2: the group's quant grid (Eq. 1)
+            for j in 0..jw {
+                let (d, z) = int4_grid(wmin[j] * clip_ratio,
+                                       wmax[j] * clip_ratio);
+                delta[j] = d;
+                zpt[j] = z;
+            }
+            // pass 3: per input channel, the original-frame error row
+            // w - dequant(quant(s·w))/s, accumulated against X
+            for kk in k0..k0 + group_size {
+                let sk = match s {
+                    Some(sv) => sv[kk],
+                    None => 1.0,
+                };
+                let inv_sk = 1.0 / sk;
+                let row = &wd[kk * n + j0..kk * n + j0 + jw];
+                for j in 0..jw {
+                    let sv = row[j] * sk;
+                    let q = ((sv / delta[j]).round() + zpt[j])
+                        .clamp(0.0, NIBBLE_MAX);
+                    let deq = (q - zpt[j]) * delta[j];
+                    dj[j] = row[j] - deq * inv_sk;
+                }
+                for rr in 0..r {
+                    let xv = xd[rr * k + kk];
+                    if xv == 0.0 {
+                        continue;
+                    }
+                    let erow = &mut e[rr * n + j0..rr * n + j0 + jw];
+                    for j in 0..jw {
+                        erow[j] += xv * dj[j];
+                    }
+                }
+            }
+        }
+    }
+    // same row-major f64 accumulation as `frob_sq`
+    let mut total = 0.0f64;
+    for &v in &e {
+        let v = v as f64;
+        total += v * v;
+    }
+    total
 }
 
 /// The site whose activation feeds a given linear.
@@ -62,6 +173,7 @@ mod tests {
     use super::*;
     use crate::model::init::{init_weights, InitSpec};
     use crate::quant::{calib, rtn};
+    use crate::util::rng::Rng;
 
     #[test]
     fn zero_for_identical_weights() {
@@ -77,6 +189,51 @@ mod tests {
         let mut w2 = w.clone();
         w2.data[0] += 0.1;
         assert!(linear_loss(&x, &w, &w2) > 0.0);
+    }
+
+    #[test]
+    fn fused_quant_loss_matches_unfused_exactly() {
+        // the hot-path contract: quant_loss == the pre-fusion pipeline
+        // (clone, scale, fake-quant, unscale, linear_loss), bit-for-bit
+        let mut rng = Rng::new(41);
+        for (k, n, g) in [(128usize, 24usize, 128usize), (256, 17, 64)] {
+            let w = Tensor::from_vec(
+                &[k, n],
+                (0..k * n).map(|_| rng.normal()).collect(),
+            );
+            let x = Tensor::from_vec(
+                &[9, k],
+                (0..9 * k).map(|_| rng.normal()).collect(),
+            );
+            let s: Vec<f32> =
+                (0..k).map(|_| 0.25 + rng.f32() * 4.0).collect();
+            for clip in [1.0f32, 0.9] {
+                // unfused reference
+                let mut scaled = w.clone();
+                scaled.scale_rows(&s);
+                let mut eff =
+                    rtn::quantize_clipped(&scaled, g, clip).dequantize();
+                let inv: Vec<f32> = s.iter().map(|&v| 1.0 / v).collect();
+                eff.scale_rows(&inv);
+                let want = linear_loss(&x, &w, &eff);
+                let got = quant_loss(&x, &w, Some(&s), g, clip);
+                assert_eq!(got, want, "k={k} n={n} g={g} clip={clip}");
+            }
+            // unsmoothed path
+            let want =
+                linear_loss(&x, &w, &rtn::quantize_clipped(&w, g, 1.0)
+                    .dequantize());
+            let got = quant_loss(&x, &w, None, g, 1.0);
+            assert_eq!(got, want, "unsmoothed k={k}");
+        }
+    }
+
+    #[test]
+    fn quant_loss_zero_rows_is_zero() {
+        let w = Tensor::from_vec(&[4, 2], vec![1., 2., 3., 4., 5., 6., 7.,
+                                               8.]);
+        let x = Tensor::zeros(&[0, 4]);
+        assert_eq!(quant_loss(&x, &w, None, 2, 1.0), 0.0);
     }
 
     #[test]

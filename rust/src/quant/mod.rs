@@ -2,16 +2,29 @@
 //!
 //! * [`rtn`] — group-wise asymmetric INT4 round-to-nearest quantization
 //!   (the paper's Eq. 1, with the zero point kept in f32 — see
-//!   `python/compile/kernels/ref.py` for the shared convention).
-//! * [`pack`] — two-nibbles-per-byte packing used by the W4A16 kernel.
+//!   `python/compile/kernels/ref.py` for the shared convention). The
+//!   quantize pass is row-blocked, threaded over groups, and packs
+//!   nibbles in the same pass (no K·N intermediate).
+//! * [`pack`] — two-nibbles-per-byte packing used by the W4A16 kernel:
+//!   byte `(k2, j)` holds input-channel rows `2*k2` (low nibble) and
+//!   `2*k2 + 1` (high nibble) of output column `j`.
+//! * [`kernel`] — the fused host-side W4A16 dequant-matmul:
+//!   `x @ dequant(Wq)` computed straight from packed nibbles with the
+//!   group scale/zero folded in per tile, never materializing the f32
+//!   weight. Mirrors the Pallas kernel the PJRT runtime executes; the
+//!   host serving path (`reffwd` in packed mode) runs through it.
 //! * [`smooth`] — SmoothQuant+ per-channel smoothing (Eq. 5/6) with
 //!   mathematically-equivalent fusion into the producing layer.
 //! * [`calib`] — calibration statistics (per-channel activation absmax /
 //!   absmean + retained activation rows) collected from the reference
 //!   forward pass.
-//! * [`loss`] — the quantization loss `E = ||XW - X Ŵ||²` (Eq. 4).
+//! * [`loss`] — the quantization loss `E = ||XW - X Ŵ||²` (Eq. 4),
+//!   including the fused `quant_loss` that evaluates a smoothed+clipped
+//!   candidate with zero weight clones (the search/AWQ grid hot path).
 //! * [`search`] — the paper's *global* grid search for the smoothing
-//!   strength alpha (step 0.05).
+//!   strength alpha (step 0.05). `AlphaSearchCtx` hoists the
+//!   per-(layer, site) weight absmax and calibration lookups out of the
+//!   grid loop so all ~21 grid points share one precompute.
 //! * [`awq`] — the AWQ baseline: per-layer activation-aware scaling with
 //!   mean-based importance and clip search (local objective; exhibits the
 //!   error-accumulation the paper criticises).
@@ -20,6 +33,7 @@
 
 pub mod awq;
 pub mod calib;
+pub mod kernel;
 pub mod loss;
 pub mod pack;
 pub mod pipeline;

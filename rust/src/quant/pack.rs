@@ -1,5 +1,12 @@
 //! INT4 nibble packing (two consecutive input-channel rows per byte, low
 //! nibble first) — the layout the Pallas kernel unpacks in VMEM.
+//!
+//! These are the *reference* pack/unpack routines (and the only path for
+//! odd group sizes). The hot paths bypass them: `rtn::quantize_clipped`
+//! packs nibbles in its fused quantize pass, and both
+//! `QuantizedLinear::dequantize` and the host W4A16 kernel
+//! (`super::kernel`) read packed bytes in place without an intermediate
+//! nibble buffer.
 
 use crate::tensor::U8Tensor;
 

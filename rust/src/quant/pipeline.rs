@@ -17,7 +17,7 @@ use super::awq::awq_search_and_smooth;
 use super::calib::CalibData;
 use super::loss::{model_quant_loss, site_of, ModelLoss};
 use super::rtn;
-use super::search::{search_alpha, SearchResult};
+use super::search::{search_alpha_with, AlphaSearchCtx, SearchResult};
 use super::smooth::smooth_model;
 
 /// Everything produced by quantizing a model with one method.
@@ -65,17 +65,20 @@ pub fn quantize_model(cfg: &ModelConfig, model: &WeightStore,
             }
         }
         QuantMethod::SmoothQuantPlus => {
-            let search = search_alpha(cfg, model, calib, qcfg);
+            // one context serves every grid point AND the per-layer
+            // breakdown: absmax/stats precomputed once, fused loss, no
+            // weight clones in the search loop
+            let ctx = AlphaSearchCtx::new(cfg, model, calib,
+                                          qcfg.group_size);
+            let search = search_alpha_with(&ctx, qcfg);
+            let per_layer = ctx.per_layer_losses_at(cfg.layers,
+                                                    search.alpha);
             let mut smoothed = model.clone();
             smooth_model(&mut smoothed, cfg, calib, search.alpha);
             let (effective, deploy) =
                 quantize_store(cfg, &smoothed, qcfg, |_, _| 1.0);
             // loss in the original frame: reuse the searched value
-            let loss = ModelLoss {
-                per_layer: per_layer_loss_at(cfg, model, calib, qcfg,
-                                             search.alpha),
-                total: search.loss,
-            };
+            let loss = ModelLoss { per_layer, total: search.loss };
             QuantOutcome {
                 method, effective, deploy: Some(deploy),
                 loss, alpha: Some(search.alpha), search: Some(search),
@@ -104,55 +107,35 @@ pub fn quantize_model(cfg: &ModelConfig, model: &WeightStore,
 /// Quantize every decoder linear of `src` (already smoothed if needed),
 /// producing the fake-quant effective store and the packed deploy store.
 /// `clip(layer, lin)` supplies AWQ clip ratios (1.0 = none).
+///
+/// Both stores are built in one pass over the canonical order; the
+/// packed/scales/zeros tensors are *moved* into the deploy store (the
+/// pre-fusion implementation cloned the whole source store and then
+/// re-cloned every quantized triple on push).
 fn quantize_store<F: Fn(usize, &str) -> f32>(
     cfg: &ModelConfig, src: &WeightStore, qcfg: &QuantConfig, clip: F)
     -> (WeightStore, WeightStore) {
-    let mut effective = src.clone();
+    let mut effective = WeightStore::new();
     let mut deploy = WeightStore::new();
-    for name in weight_names_w4a16(cfg) {
-        if let Some(base) = name.strip_suffix(".packed") {
-            let lin = base.rsplit('.').next().unwrap();
+    for name in weight_names(cfg) {
+        let base = name.rsplit('.').next().unwrap();
+        if name.starts_with("layers.") && LAYER_LINEARS.contains(&base) {
             let layer: usize =
-                base.split('.').nth(1).unwrap().parse().unwrap();
-            let q = rtn::quantize_clipped(src.f32(base), qcfg.group_size,
-                                          clip(layer, lin));
-            effective.set_f32(base, q.dequantize());
-            deploy.push_u8(&name, q.packed.clone());
-            deploy.push_f32(&format!("{base}.scales"), q.scales.clone());
-            deploy.push_f32(&format!("{base}.zeros"), q.zeros.clone());
-        } else if !name.ends_with(".scales") && !name.ends_with(".zeros") {
+                name.split('.').nth(1).unwrap().parse().unwrap();
+            let q = rtn::quantize_clipped(src.f32(&name), qcfg.group_size,
+                                          clip(layer, base));
+            effective.push_f32(&name, q.dequantize());
+            let rtn::QuantizedLinear { packed, scales, zeros, .. } = q;
+            deploy.push_u8(&format!("{name}.packed"), packed);
+            deploy.push_f32(&format!("{name}.scales"), scales);
+            deploy.push_f32(&format!("{name}.zeros"), zeros);
+        } else {
+            effective.push_f32(&name, src.f32(&name).clone());
             deploy.push_f32(&name, src.f32(&name).clone());
         }
     }
+    debug_assert_eq!(deploy.names(), &weight_names_w4a16(cfg)[..]);
     (effective, deploy)
-}
-
-/// Per-layer losses of the SQ+ candidate at a given alpha (original frame).
-fn per_layer_loss_at(cfg: &ModelConfig, model: &WeightStore,
-                     calib: &CalibData, qcfg: &QuantConfig, alpha: f32)
-    -> Vec<f64> {
-    use super::loss::linear_loss;
-    use super::smooth::{smoothing_factors, unit_weight_absmax};
-    (0..cfg.layers)
-        .map(|layer| {
-            let mut l = 0.0;
-            for lin in LAYER_LINEARS {
-                let site = site_of(lin);
-                let stats = calib.stats(layer, site);
-                let wmax = unit_weight_absmax(model, layer, site);
-                let s = smoothing_factors(&stats.absmax, &wmax, alpha);
-                let name = format!("layers.{layer}.{lin}");
-                let mut scaled = model.f32(&name).clone();
-                scaled.scale_rows(&s);
-                let mut eff = rtn::fake_quant(&scaled, qcfg.group_size);
-                let inv: Vec<f32> = s.iter().map(|&v| 1.0 / v).collect();
-                eff.scale_rows(&inv);
-                let rows = stats.rows.shape[0].max(1) as f64;
-                l += linear_loss(&stats.rows, model.f32(&name), &eff) / rows;
-            }
-            l
-        })
-        .collect()
 }
 
 /// AWQ loss in the original frame: undo the AWQ row scaling analytically
@@ -263,7 +246,7 @@ mod tests {
         let err = |s: &WeightStore| {
             let (got, _) =
                 RefModel::new(&cfg, s).prefill(&tokens, &mut NoHook);
-            got.sub(&want).frob_sq()
+            got.sq_diff(&want)
         };
         let e_sqp = err(&sqp.effective);
         let e_rtn = err(&rtn.effective);

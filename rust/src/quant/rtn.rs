@@ -10,17 +10,39 @@
 //! q     = clamp(round(w / delta) + z, 0, 15)
 //! deq   = (q - z) * delta
 //! ```
+//!
+//! The quantize hot loop is a row-blocked single pass, threaded over
+//! quantization groups: each group task computes its per-column (min, max)
+//! and grid, then quantizes two input-channel rows at a time straight into
+//! packed bytes — no intermediate `q: Vec<u8>` of size K·N is ever
+//! materialized (the pre-fusion implementation walked the weight
+//! column-major, single-threaded, and allocated that buffer).
 
 use crate::tensor::{Tensor, U8Tensor};
+use crate::util::threadpool::{parallel_for, SendPtr};
 
 use super::pack;
 
 pub const NIBBLE_MAX: f32 = 15.0;
 
+/// The INT4 grid for one (already clipped) group range: `(delta, zero)`.
+/// Single source of truth shared by the quantizer (both paths) and the
+/// fused `loss::quant_loss` — their bit-for-bit agreement depends on this
+/// being the only implementation of Eq. 1's grid.
+#[inline]
+pub fn int4_grid(lo: f32, hi: f32) -> (f32, f32) {
+    let mut delta = (hi - lo) / NIBBLE_MAX;
+    if delta == 0.0 {
+        delta = hi.abs().max(1e-12) / NIBBLE_MAX;
+    }
+    (delta, (-lo / delta).round())
+}
+
 /// Quantized form of one `[K, N]` weight.
 #[derive(Debug, Clone)]
 pub struct QuantizedLinear {
-    /// Packed nibbles `u8[K/2, N]`.
+    /// Packed nibbles `u8[K/2, N]` (two consecutive input-channel rows per
+    /// byte, low nibble first — see `crate::tensor` module docs).
     pub packed: U8Tensor,
     /// Per-group step `f32[K/g, N]`.
     pub scales: Tensor,
@@ -36,21 +58,39 @@ impl QuantizedLinear {
     pub fn n(&self) -> usize {
         self.packed.shape[1]
     }
-    /// Dequantize back to a dense `[K, N]` tensor.
+    /// Dequantize back to a dense `[K, N]` tensor (fused unpack + affine,
+    /// threaded over byte rows; no intermediate nibble buffer).
     pub fn dequantize(&self) -> Tensor {
         let (k, n) = (self.k(), self.n());
-        let q = pack::unpack_nibbles(&self.packed);
         let g = self.group_size;
-        let mut out = vec![0.0f32; k * n];
-        for kk in 0..k {
-            let grow = kk / g;
+        let mut out = Tensor::zeros(&[k, n]);
+        // SAFETY: byte row i writes output rows 2i and 2i+1 only.
+        let op = SendPtr::new(out.data.as_mut_ptr());
+        let pd = &self.packed.data;
+        let sd = &self.scales.data;
+        let zd = &self.zeros.data;
+        parallel_for(k / 2, |i| {
+            let lo_row = unsafe {
+                std::slice::from_raw_parts_mut(op.get().add(2 * i * n), n)
+            };
+            let hi_row = unsafe {
+                std::slice::from_raw_parts_mut(
+                    op.get().add((2 * i + 1) * n),
+                    n,
+                )
+            };
+            let brow = &pd[i * n..(i + 1) * n];
+            let glo = (2 * i) / g;
+            let ghi = (2 * i + 1) / g;
             for j in 0..n {
-                let s = self.scales.data[grow * n + j];
-                let z = self.zeros.data[grow * n + j];
-                out[kk * n + j] = (q[kk * n + j] as f32 - z) * s;
+                let b = brow[j];
+                lo_row[j] = ((b & 0xF) as f32 - zd[glo * n + j])
+                    * sd[glo * n + j];
+                hi_row[j] = ((b >> 4) as f32 - zd[ghi * n + j])
+                    * sd[ghi * n + j];
             }
-        }
-        Tensor::from_vec(&[k, n], out)
+        });
+        out
     }
 }
 
@@ -61,6 +101,98 @@ pub fn quantize_clipped(w: &Tensor, group_size: usize, clip_ratio: f32)
     -> QuantizedLinear {
     let (k, n) = w.dims2();
     assert_eq!(k % group_size, 0, "K={k} % group={group_size}");
+    assert_eq!(k % 2, 0, "K={k} must be even to pack");
+    if group_size % 2 != 0 {
+        // Odd group sizes share packed bytes across group boundaries, so
+        // the group-parallel packed writes below would race; keep the
+        // simple scalar path for this cold case.
+        return quantize_clipped_scalar(w, group_size, clip_ratio);
+    }
+
+    let groups = k / group_size;
+    let mut scales = vec![0.0f32; groups * n];
+    let mut zeros = vec![0.0f32; groups * n];
+    let mut packed = vec![0u8; k / 2 * n];
+    // SAFETY: group `grow` writes scales/zeros row `grow` and packed byte
+    // rows [grow*g/2, (grow+1)*g/2) — disjoint across tasks (g is even).
+    let sp = SendPtr::new(scales.as_mut_ptr());
+    let zp = SendPtr::new(zeros.as_mut_ptr());
+    let pp = SendPtr::new(packed.as_mut_ptr());
+    parallel_for(groups, |grow| {
+        let srow = unsafe {
+            std::slice::from_raw_parts_mut(sp.get().add(grow * n), n)
+        };
+        let zrow = unsafe {
+            std::slice::from_raw_parts_mut(zp.get().add(grow * n), n)
+        };
+        let prows = unsafe {
+            std::slice::from_raw_parts_mut(
+                pp.get().add(grow * group_size / 2 * n),
+                group_size / 2 * n,
+            )
+        };
+        quantize_group(w, grow, group_size, clip_ratio, srow, zrow, prows);
+    });
+    QuantizedLinear {
+        packed: U8Tensor::from_vec(&[k / 2, n], packed),
+        scales: Tensor::from_vec(&[groups, n], scales),
+        zeros: Tensor::from_vec(&[groups, n], zeros),
+        group_size,
+    }
+}
+
+/// One group's fused pass: per-column (min, max) over the group's rows,
+/// grid construction, then quantize two rows at a time into packed bytes.
+fn quantize_group(w: &Tensor, grow: usize, group_size: usize,
+                  clip_ratio: f32, srow: &mut [f32], zrow: &mut [f32],
+                  prows: &mut [u8]) {
+    let n = w.shape[1];
+    let k0 = grow * group_size;
+    // pass 1: per-column range, walking the group row-major
+    let mut wmin = vec![f32::INFINITY; n];
+    let mut wmax = vec![f32::NEG_INFINITY; n];
+    for kk in k0..k0 + group_size {
+        let row = &w.data[kk * n..(kk + 1) * n];
+        for j in 0..n {
+            let v = row[j];
+            if v < wmin[j] {
+                wmin[j] = v;
+            }
+            if v > wmax[j] {
+                wmax[j] = v;
+            }
+        }
+    }
+    // pass 2: per-column grid
+    for j in 0..n {
+        let (delta, z) =
+            int4_grid(wmin[j] * clip_ratio, wmax[j] * clip_ratio);
+        srow[j] = delta;
+        zrow[j] = z;
+    }
+    // pass 3: quantize + pack, two input-channel rows per output byte
+    for pair in 0..group_size / 2 {
+        let ka = k0 + 2 * pair;
+        let ra = &w.data[ka * n..ka * n + n];
+        let rb = &w.data[(ka + 1) * n..(ka + 1) * n + n];
+        let out = &mut prows[pair * n..pair * n + n];
+        for j in 0..n {
+            let delta = srow[j];
+            let z = zrow[j];
+            let qa = ((ra[j] / delta).round() + z).clamp(0.0, NIBBLE_MAX)
+                as u8;
+            let qb = ((rb[j] / delta).round() + z).clamp(0.0, NIBBLE_MAX)
+                as u8;
+            out[j] = qa | (qb << 4);
+        }
+    }
+}
+
+/// Scalar fallback (odd group sizes only): the original column-major walk
+/// with an explicit nibble buffer.
+fn quantize_clipped_scalar(w: &Tensor, group_size: usize, clip_ratio: f32)
+    -> QuantizedLinear {
+    let (k, n) = w.dims2();
     let groups = k / group_size;
     let mut scales = vec![0.0f32; groups * n];
     let mut zeros = vec![0.0f32; groups * n];
@@ -76,11 +208,7 @@ pub fn quantize_clipped(w: &Tensor, group_size: usize, clip_ratio: f32)
             }
             wmin *= clip_ratio;
             wmax *= clip_ratio;
-            let mut delta = (wmax - wmin) / NIBBLE_MAX;
-            if delta == 0.0 {
-                delta = wmax.abs().max(1e-12) / NIBBLE_MAX;
-            }
-            let z = (-wmin / delta).round();
+            let (delta, z) = int4_grid(wmin, wmax);
             scales[grow * n + j] = delta;
             zeros[grow * n + j] = z;
             for kk in grow * group_size..(grow + 1) * group_size {
@@ -147,6 +275,24 @@ mod tests {
                     );
                 }
             }
+        });
+    }
+
+    #[test]
+    fn fused_matches_scalar_path() {
+        // the threaded row-blocked pass and the scalar column-major walk
+        // must agree bit-for-bit (same grid, same nibbles, same packing)
+        prop::check("fused == scalar rtn", 10, |rng| {
+            let g = 2 * (1 + rng.below(4)); // even group
+            let k = g * (1 + rng.below(5));
+            let n = 1 + rng.below(20);
+            let clip = if rng.below(2) == 0 { 1.0 } else { 0.9 };
+            let w = rand_w(rng, k, n, 0.5 + rng.f32());
+            let a = quantize_clipped(&w, g, clip);
+            let b = quantize_clipped_scalar(&w, g, clip);
+            assert_eq!(a.packed.data, b.packed.data);
+            assert_eq!(a.scales.data, b.scales.data);
+            assert_eq!(a.zeros.data, b.zeros.data);
         });
     }
 

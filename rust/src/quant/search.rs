@@ -7,18 +7,24 @@
 //! original activation frame, so no layer-by-layer error accumulates, and
 //! cached calibration activations make each grid point cheap (no forward
 //! passes during the search).
+//!
+//! The grid loop is allocation-free on weights: [`AlphaSearchCtx`]
+//! precomputes each smoothing unit's weight absmax and calibration lookups
+//! **once**, and every grid point evaluates the fused
+//! [`quant_loss`](super::loss::quant_loss) — no weight-store or weight
+//! clone per evaluation (the pre-fusion implementation cloned and
+//! fake-quantized every decoder weight at all ~21 grid points).
 
 use std::time::Instant;
 
 use crate::config::{ModelConfig, QuantConfig};
 use crate::model::store::WeightStore;
-use crate::model::LAYER_LINEARS;
 use crate::reffwd::Site;
+use crate::tensor::Tensor;
 use crate::util::threadpool::parallel_map;
 
 use super::calib::CalibData;
-use super::loss::{linear_loss, site_of};
-use super::rtn;
+use super::loss::quant_loss;
 use super::smooth::{smoothing_factors, unit_weight_absmax};
 
 #[derive(Debug, Clone)]
@@ -31,32 +37,103 @@ pub struct SearchResult {
     pub elapsed_s: f64,
 }
 
+/// Per-smoothing-unit state shared by every alpha grid point: the unit's
+/// activation absmax (driving Eq. 6), the combined consumer weight absmax,
+/// and borrowed views of the consumer weights + eval activation rows.
+struct UnitCtx<'a> {
+    layer: usize,
+    act_absmax: &'a [f32],
+    wmax: Vec<f32>,
+    /// (weight, eval rows, eval row count) per consumer linear.
+    consumers: Vec<(&'a Tensor, &'a Tensor, f64)>,
+}
+
+/// Precomputed whole-model search context. Building it performs the
+/// per-(layer, site) stats lookups and `unit_weight_absmax` reductions
+/// exactly once; [`AlphaSearchCtx::loss_at`] then evaluates a grid point
+/// with zero full-weight-tensor clones.
+pub struct AlphaSearchCtx<'a> {
+    group_size: usize,
+    units: Vec<UnitCtx<'a>>,
+}
+
+impl<'a> AlphaSearchCtx<'a> {
+    pub fn new(cfg: &ModelConfig, w: &'a WeightStore,
+               calib: &'a CalibData, group_size: usize) -> Self {
+        Self::cross(cfg, w, calib, calib, group_size)
+    }
+
+    /// Smoothing factors driven by `calib_s`, loss evaluated on
+    /// `calib_eval` (the Table-3 calibration-sensitivity split).
+    pub fn cross(cfg: &ModelConfig, w: &'a WeightStore,
+                 calib_s: &'a CalibData, calib_eval: &'a CalibData,
+                 group_size: usize) -> Self {
+        let mut units = Vec::with_capacity(cfg.layers * 4);
+        for layer in 0..cfg.layers {
+            for site in Site::all() {
+                let stats_s = calib_s.stats(layer, site);
+                let stats_e = calib_eval.stats(layer, site);
+                let wmax = unit_weight_absmax(w, layer, site);
+                let consumers = site
+                    .consumers()
+                    .iter()
+                    .map(|lin| {
+                        let orig = w.f32(&format!("layers.{layer}.{lin}"));
+                        let rows = stats_e.rows.shape[0].max(1) as f64;
+                        (orig, &stats_e.rows, rows)
+                    })
+                    .collect();
+                units.push(UnitCtx {
+                    layer,
+                    act_absmax: &stats_s.absmax,
+                    wmax,
+                    consumers,
+                });
+            }
+        }
+        AlphaSearchCtx { group_size, units }
+    }
+
+    /// Per-unit losses at one alpha, parallel across units. Each unit
+    /// computes its Eq.-6 factors once and streams the fused loss over its
+    /// consumer linears — no tensor is cloned or materialized.
+    fn unit_losses_at(&self, alpha: f32) -> Vec<f64> {
+        parallel_map(self.units.len(), |u| {
+            let unit = &self.units[u];
+            let s = smoothing_factors(unit.act_absmax, &unit.wmax, alpha);
+            let mut total = 0.0;
+            for &(orig, rows, nrows) in &unit.consumers {
+                total +=
+                    quant_loss(rows, orig, Some(&s), self.group_size, 1.0)
+                        / nrows;
+            }
+            total
+        })
+    }
+
+    /// Whole-model quantization loss at one alpha (original frame).
+    pub fn loss_at(&self, alpha: f32) -> f64 {
+        self.unit_losses_at(alpha).iter().sum()
+    }
+
+    /// Loss at one alpha, broken down per decoder layer.
+    pub fn per_layer_losses_at(&self, layers: usize, alpha: f32)
+        -> Vec<f64> {
+        let per_unit = self.unit_losses_at(alpha);
+        let mut out = vec![0.0; layers];
+        for (unit, l) in self.units.iter().zip(&per_unit) {
+            out[unit.layer] += l;
+        }
+        out
+    }
+}
+
 /// Whole-model quantization loss if smoothed with `alpha` then group-wise
 /// RTN-quantized. Loss is evaluated in the original activation frame.
+/// (One-shot wrapper; grid loops should build an [`AlphaSearchCtx`] once.)
 pub fn loss_at_alpha(cfg: &ModelConfig, w: &WeightStore, calib: &CalibData,
                      group_size: usize, alpha: f32) -> f64 {
-    // parallel over (layer, linear)
-    let jobs: Vec<(usize, &'static str)> = (0..cfg.layers)
-        .flat_map(|l| LAYER_LINEARS.iter().map(move |&lin| (l, lin)))
-        .collect();
-    let losses = parallel_map(jobs.len(), |i| {
-        let (layer, lin) = jobs[i];
-        let site: Site = site_of(lin);
-        let stats = calib.stats(layer, site);
-        let wmax = unit_weight_absmax(w, layer, site);
-        let s = smoothing_factors(&stats.absmax, &wmax, alpha);
-        let name = format!("layers.{layer}.{lin}");
-        let orig = w.f32(&name);
-        // scaled = diag(s) W ; eff = diag(s)^-1 dequant(quant(scaled))
-        let mut scaled = orig.clone();
-        scaled.scale_rows(&s);
-        let mut eff = rtn::fake_quant(&scaled, group_size);
-        let inv: Vec<f32> = s.iter().map(|&v| 1.0 / v).collect();
-        eff.scale_rows(&inv);
-        let rows = stats.rows.shape[0].max(1) as f64;
-        linear_loss(&stats.rows, orig, &eff) / rows
-    });
-    losses.iter().sum()
+    AlphaSearchCtx::new(cfg, w, calib, group_size).loss_at(alpha)
 }
 
 /// Like [`loss_at_alpha`], but with the smoothing factors driven by one
@@ -67,39 +144,20 @@ pub fn loss_at_alpha(cfg: &ModelConfig, w: &WeightStore, calib: &CalibData,
 pub fn loss_at_alpha_cross(cfg: &ModelConfig, w: &WeightStore,
                            calib_s: &CalibData, calib_eval: &CalibData,
                            group_size: usize, alpha: f32) -> f64 {
-    let jobs: Vec<(usize, &'static str)> = (0..cfg.layers)
-        .flat_map(|l| LAYER_LINEARS.iter().map(move |&lin| (l, lin)))
-        .collect();
-    let losses = parallel_map(jobs.len(), |i| {
-        let (layer, lin) = jobs[i];
-        let site: Site = site_of(lin);
-        let stats_s = calib_s.stats(layer, site);
-        let stats_e = calib_eval.stats(layer, site);
-        let wmax = unit_weight_absmax(w, layer, site);
-        let s = smoothing_factors(&stats_s.absmax, &wmax, alpha);
-        let name = format!("layers.{layer}.{lin}");
-        let orig = w.f32(&name);
-        let mut scaled = orig.clone();
-        scaled.scale_rows(&s);
-        let mut eff = rtn::fake_quant(&scaled, group_size);
-        let inv: Vec<f32> = s.iter().map(|&v| 1.0 / v).collect();
-        eff.scale_rows(&inv);
-        let rows = stats_e.rows.shape[0].max(1) as f64;
-        linear_loss(&stats_e.rows, orig, &eff) / rows
-    });
-    losses.iter().sum()
+    AlphaSearchCtx::cross(cfg, w, calib_s, calib_eval, group_size)
+        .loss_at(alpha)
 }
 
-/// Grid search over alpha in [0, 1] with `qcfg.alpha_step`.
-pub fn search_alpha(cfg: &ModelConfig, w: &WeightStore, calib: &CalibData,
-                    qcfg: &QuantConfig) -> SearchResult {
+/// Grid search over alpha in [0, 1] with `qcfg.alpha_step`, reusing a
+/// prebuilt context across all grid points.
+pub fn search_alpha_with(ctx: &AlphaSearchCtx, qcfg: &QuantConfig)
+    -> SearchResult {
     let t0 = Instant::now();
     let mut grid = Vec::new();
     let steps = (1.0 / qcfg.alpha_step).round() as usize;
     for i in 0..=steps {
         let alpha = (i as f64 * qcfg.alpha_step).min(1.0) as f32;
-        let loss = loss_at_alpha(cfg, w, calib, qcfg.group_size, alpha);
-        grid.push((alpha, loss));
+        grid.push((alpha, ctx.loss_at(alpha)));
     }
     let (alpha, loss) = grid
         .iter()
@@ -113,6 +171,13 @@ pub fn search_alpha(cfg: &ModelConfig, w: &WeightStore, calib: &CalibData,
         grid,
         elapsed_s: t0.elapsed().as_secs_f64(),
     }
+}
+
+/// Grid search over alpha in [0, 1] with `qcfg.alpha_step`.
+pub fn search_alpha(cfg: &ModelConfig, w: &WeightStore, calib: &CalibData,
+                    qcfg: &QuantConfig) -> SearchResult {
+    let ctx = AlphaSearchCtx::new(cfg, w, calib, qcfg.group_size);
+    search_alpha_with(&ctx, qcfg)
 }
 
 #[cfg(test)]
@@ -181,6 +246,58 @@ mod tests {
         for alpha in [0.0f32, 0.5, 1.0] {
             let l = loss_at_alpha(&cfg, &w, &calib, 128, alpha);
             assert!(l.is_finite() && l >= 0.0, "alpha {alpha}: {l}");
+        }
+    }
+
+    #[test]
+    fn ctx_matches_independent_unfused_reference() {
+        // validate the hoisted-precompute + fused-loss path against an
+        // independently-coded reference: the pre-fusion per-linear
+        // pipeline (clone, scale, fake-quant, unscale, linear_loss)
+        use crate::model::LAYER_LINEARS;
+        use crate::quant::loss::{linear_loss, site_of};
+        use crate::quant::rtn;
+        let (cfg, w, calib) = setup();
+        let ctx = AlphaSearchCtx::new(&cfg, &w, &calib, 128);
+        for alpha in [0.0f32, 0.4, 1.0] {
+            let mut unfused = 0.0f64;
+            for layer in 0..cfg.layers {
+                for lin in LAYER_LINEARS {
+                    let site = site_of(lin);
+                    let stats = calib.stats(layer, site);
+                    let wmax = unit_weight_absmax(&w, layer, site);
+                    let s =
+                        smoothing_factors(&stats.absmax, &wmax, alpha);
+                    let name = format!("layers.{layer}.{lin}");
+                    let mut scaled = w.f32(&name).clone();
+                    scaled.scale_rows(&s);
+                    let mut eff = rtn::fake_quant(&scaled, 128);
+                    let inv: Vec<f32> =
+                        s.iter().map(|&v| 1.0 / v).collect();
+                    eff.scale_rows(&inv);
+                    let rows = stats.rows.shape[0].max(1) as f64;
+                    unfused +=
+                        linear_loss(&stats.rows, w.f32(&name), &eff)
+                            / rows;
+                }
+            }
+            // per-linear terms are bit-identical; only the f64 summation
+            // grouping differs (per-unit partials), hence assert_close
+            crate::util::prop::assert_close(
+                ctx.loss_at(alpha),
+                unfused,
+                1e-12,
+                "fused ctx vs unfused reference",
+            );
+            let per_layer = ctx.per_layer_losses_at(cfg.layers, alpha);
+            assert_eq!(per_layer.len(), cfg.layers);
+            let sum: f64 = per_layer.iter().sum();
+            crate::util::prop::assert_close(
+                sum,
+                unfused,
+                1e-12,
+                "per-layer sum == total",
+            );
         }
     }
 }

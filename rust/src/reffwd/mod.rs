@@ -7,12 +7,21 @@
 //! calibration statistics, quantization-loss evaluation, Fig 1/2/3, and
 //! CPU-only accuracy evals.
 //!
-//! Quantized variants are evaluated by passing a store whose linear
-//! weights have been fake-quantized (quantize→dequantize), which is
-//! numerically identical to the W4A16 kernel's dequant-matmul in f32.
+//! Quantized variants are evaluated two ways:
+//!
+//! * **fake-quant mode** — a canonical fp16-layout store whose linear
+//!   weights have been fake-quantized (quantize→dequantize); dense f32
+//!   matmuls throughout.
+//! * **packed mode** — a w4a16-layout *deploy* store (each decoder linear
+//!   present as `{name}.packed` / `.scales` / `.zeros`). Detected
+//!   per-linear by name, and routed through the fused host W4A16 kernel
+//!   ([`crate::quant::kernel::matmul_w4a16_parts`]) so the serving claim
+//!   is exercised end-to-end on the host path without ever materializing
+//!   the dequantized weights.
 
 use crate::config::ModelConfig;
 use crate::model::store::WeightStore;
+use crate::quant::kernel;
 use crate::tensor::Tensor;
 
 /// Activation observation sites (the smoothing units of one decoder layer).
@@ -93,15 +102,35 @@ impl KvCache {
     }
 }
 
-/// Reference model: a config plus a canonical fp16-layout weight store.
+/// Reference model: a config plus a canonical fp16-layout weight store,
+/// or a w4a16 deploy-layout store (packed mode — see module docs).
 pub struct RefModel<'a> {
     pub cfg: &'a ModelConfig,
     pub w: &'a WeightStore,
+    /// Whether `w` is a deploy-layout store (decoder linears present as
+    /// packed/scales/zeros triples). Detected once here so the dense
+    /// fp16 path pays no per-matmul name probe.
+    packed: bool,
 }
 
 impl<'a> RefModel<'a> {
     pub fn new(cfg: &'a ModelConfig, w: &'a WeightStore) -> Self {
-        RefModel { cfg, w }
+        let packed = w.contains("layers.0.wq.packed");
+        RefModel { cfg, w, packed }
+    }
+
+    /// One decoder linear `x @ W_name`: the dense f32 matmul, or — in
+    /// packed mode — the fused W4A16 kernel on the packed triple.
+    fn linear(&self, x: &Tensor, name: &str) -> Tensor {
+        if self.packed {
+            let packed = self.w.u8(&format!("{name}.packed"));
+            let scales = self.w.f32(&format!("{name}.scales"));
+            let zeros = self.w.f32(&format!("{name}.zeros"));
+            let group = packed.shape[0] * 2 / scales.shape[0];
+            kernel::matmul_w4a16_parts(x, packed, scales, zeros, group)
+        } else {
+            x.matmul(self.w.f32(name))
+        }
     }
 
     /// Full-prompt forward. Returns per-position logits `[S, V]` and the
@@ -122,25 +151,25 @@ impl<'a> RefModel<'a> {
             // ---- attention
             let xn = self.rmsnorm(&h, &format!("{lp}attn_norm"));
             hook.record(layer, Site::AttnIn, &xn);
-            let q = xn.matmul(self.w.f32(&format!("{lp}wq")));
-            let k = xn.matmul(self.w.f32(&format!("{lp}wk")));
-            let v = xn.matmul(self.w.f32(&format!("{lp}wv")));
+            let q = self.linear(&xn, &format!("{lp}wq"));
+            let k = self.linear(&xn, &format!("{lp}wk"));
+            let v = self.linear(&xn, &format!("{lp}wv"));
             let (q, k) = (self.rope_rows(q, 0), self.rope_rows(k, 0));
             for i in 0..s {
                 cache.push(layer, k.row(i), v.row(i));
             }
             let attn = self.attention_causal(&q, &k, &v);
             hook.record(layer, Site::OIn, &attn);
-            let o = attn.matmul(self.w.f32(&format!("{lp}wo")));
+            let o = self.linear(&attn, &format!("{lp}wo"));
             add_inplace(&mut h, &o);
             // ---- mlp
             let xm = self.rmsnorm(&h, &format!("{lp}mlp_norm"));
             hook.record(layer, Site::MlpIn, &xm);
-            let gate = xm.matmul(self.w.f32(&format!("{lp}w_gate")));
-            let up = xm.matmul(self.w.f32(&format!("{lp}w_up")));
+            let gate = self.linear(&xm, &format!("{lp}w_gate"));
+            let up = self.linear(&xm, &format!("{lp}w_up"));
             let a = swiglu(&gate, &up);
             hook.record(layer, Site::DownIn, &a);
-            let down = a.matmul(self.w.f32(&format!("{lp}w_down")));
+            let down = self.linear(&a, &format!("{lp}w_down"));
             add_inplace(&mut h, &down);
         }
         cache.len = s;
@@ -163,22 +192,22 @@ impl<'a> RefModel<'a> {
             let xn = self.rmsnorm(&h, &format!("{lp}attn_norm"));
             hook.record(layer, Site::AttnIn, &xn);
             let q = self.rope_rows(
-                xn.matmul(self.w.f32(&format!("{lp}wq"))), pos);
+                self.linear(&xn, &format!("{lp}wq")), pos);
             let k = self.rope_rows(
-                xn.matmul(self.w.f32(&format!("{lp}wk"))), pos);
-            let v = xn.matmul(self.w.f32(&format!("{lp}wv")));
+                self.linear(&xn, &format!("{lp}wk")), pos);
+            let v = self.linear(&xn, &format!("{lp}wv"));
             cache.push(layer, k.row(0), v.row(0));
             let attn = self.attention_one(&q, cache, layer, pos + 1);
             hook.record(layer, Site::OIn, &attn);
-            let o = attn.matmul(self.w.f32(&format!("{lp}wo")));
+            let o = self.linear(&attn, &format!("{lp}wo"));
             add_inplace(&mut h, &o);
             let xm = self.rmsnorm(&h, &format!("{lp}mlp_norm"));
             hook.record(layer, Site::MlpIn, &xm);
-            let gate = xm.matmul(self.w.f32(&format!("{lp}w_gate")));
-            let up = xm.matmul(self.w.f32(&format!("{lp}w_up")));
+            let gate = self.linear(&xm, &format!("{lp}w_gate"));
+            let up = self.linear(&xm, &format!("{lp}w_up"));
             let a = swiglu(&gate, &up);
             hook.record(layer, Site::DownIn, &a);
-            let down = a.matmul(self.w.f32(&format!("{lp}w_down")));
+            let down = self.linear(&a, &format!("{lp}w_down"));
             add_inplace(&mut h, &down);
         }
         cache.len = pos + 1;
@@ -404,6 +433,38 @@ mod tests {
                 assert_eq!(h.0[&(l, s)], 3, "layer {l} site {s:?}");
             }
         }
+    }
+
+    #[test]
+    fn packed_deploy_store_matches_effective() {
+        // packed mode (deploy store through the fused W4A16 kernel) must
+        // agree with fake-quant mode (effective store, dense matmuls) —
+        // the same function up to f32 reassociation in the kernel
+        use crate::config::{QuantConfig, QuantMethod};
+        use crate::quant::{calib, pipeline};
+        let cfg = ModelConfig::tiny();
+        let w = init_weights(&cfg, &InitSpec::with_outliers(0, 4, 60.0));
+        let prompts: Vec<Vec<u32>> =
+            vec![(0..10).map(|t| (t * 37 + 5) % 512).collect()];
+        let cal = calib::collect(&cfg, &w, &prompts, 16, 0);
+        let out = pipeline::quantize_model(&cfg, &w, &cal,
+                                           QuantMethod::Rtn,
+                                           &QuantConfig::default());
+        let deploy = out.deploy.unwrap();
+        let tokens = [7u32, 301, 42, 9, 255];
+        let meff = RefModel::new(&cfg, &out.effective);
+        let mpkd = RefModel::new(&cfg, &deploy);
+        let (le, _) = meff.prefill(&tokens, &mut NoHook);
+        let (lp, _) = mpkd.prefill(&tokens, &mut NoHook);
+        prop::assert_allclose(&lp.data, &le.data, 2e-3, 2e-3,
+                              "packed prefill vs effective");
+        // decode path too
+        let (_, mut ce) = meff.prefill(&tokens[..4], &mut NoHook);
+        let (_, mut cp) = mpkd.prefill(&tokens[..4], &mut NoHook);
+        let de = meff.decode(tokens[4], &mut ce, &mut NoHook);
+        let dp = mpkd.decode(tokens[4], &mut cp, &mut NoHook);
+        prop::assert_allclose(&dp, &de, 2e-3, 2e-3,
+                              "packed decode vs effective");
     }
 
     #[test]

@@ -2,8 +2,18 @@
 //! tensor for INT4 nibbles. Implements exactly the ops the library needs
 //! (threaded matmul, per-channel scaling, norms) rather than a general
 //! ndarray.
+//!
+//! # Packed-nibble layout
+//!
+//! [`U8Tensor`] stores a `[K, N]` INT4 weight as `u8[K/2, N]`: byte
+//! `(k2, j)` holds input-channel rows `2*k2` (low nibble) and `2*k2 + 1`
+//! (high nibble) of column `j` — two consecutive input-channel rows per
+//! byte, low nibble first. This is the layout the Pallas kernel unpacks in
+//! VMEM and the one the host-side fused kernel
+//! (`crate::quant::kernel::matmul_w4a16`) streams through without ever
+//! materializing the dequantized f32 weight.
 
-use crate::util::threadpool::parallel_for;
+use crate::util::threadpool::{parallel_for, SendPtr};
 
 /// Dense row-major f32 tensor.
 #[derive(Debug, Clone, PartialEq)]
@@ -51,7 +61,7 @@ impl Tensor {
         assert_eq!(k, k2, "matmul inner dims {k} vs {k2}");
         let mut out = Tensor::zeros(&[m, n]);
         // SAFETY: each row block of `out` is written by exactly one task.
-        let out_ptr = SendPtr(out.data.as_mut_ptr());
+        let out_ptr = SendPtr::new(out.data.as_mut_ptr());
         let a = &self.data;
         let b = &other.data;
         const KB: usize = 64;
@@ -127,6 +137,21 @@ impl Tensor {
         )
     }
 
+    /// Fused `||self - other||²_F`: the same value as
+    /// `self.sub(other).frob_sq()` (identical f32 subtraction and f64
+    /// accumulation order) without allocating the difference tensor.
+    pub fn sq_diff(&self, other: &Tensor) -> f64 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| {
+                let d = (a - b) as f64;
+                d * d
+            })
+            .sum()
+    }
+
     /// Per-column max |x| of a rank-2 tensor -> len N.
     pub fn col_absmax(&self) -> Vec<f32> {
         let (m, n) = self.dims2();
@@ -162,15 +187,6 @@ impl Tensor {
                     .fold(0.0f32, |a, &x| a.max(x.abs()))
             })
             .collect()
-    }
-}
-
-struct SendPtr(*mut f32);
-unsafe impl Send for SendPtr {}
-unsafe impl Sync for SendPtr {}
-impl SendPtr {
-    fn get(&self) -> *mut f32 {
-        self.0
     }
 }
 
@@ -261,6 +277,24 @@ mod tests {
         assert_eq!(a.row_absmax(), vec![3.0, 4.0]);
         assert_eq!(a.col_absmean(), vec![2.5, 2.5]);
         assert_eq!(a.frob_sq(), 9.0 + 1.0 + 4.0 + 16.0);
+    }
+
+    #[test]
+    fn sq_diff_matches_sub_frob() {
+        prop::check("sq_diff == sub+frob_sq", 10, |rng| {
+            let (m, n) = (1 + rng.below(9), 1 + rng.below(17));
+            let a = Tensor::from_vec(
+                &[m, n],
+                (0..m * n).map(|_| rng.normal()).collect(),
+            );
+            let b = Tensor::from_vec(
+                &[m, n],
+                (0..m * n).map(|_| rng.normal()).collect(),
+            );
+            // bit-for-bit: same f32 diffs, same f64 accumulation order
+            assert_eq!(a.sq_diff(&b), a.sub(&b).frob_sq());
+            assert_eq!(a.sq_diff(&a), 0.0);
+        });
     }
 
     #[test]

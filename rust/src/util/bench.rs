@@ -2,10 +2,15 @@
 //!
 //! Each `rust/benches/*.rs` target is a `harness = false` binary that uses
 //! [`Bench`] for timed measurement and [`Table`] to print the paper-shaped
-//! rows it regenerates. Results can be dumped as JSON for EXPERIMENTS.md.
+//! rows it regenerates. Results can be dumped as JSON for EXPERIMENTS.md,
+//! and the micro benches persist machine-readable results per run through
+//! [`JsonReport`] so successive PRs have a perf trajectory to compare.
 
+use std::collections::BTreeMap;
+use std::path::PathBuf;
 use std::time::Instant;
 
+use super::json::{self, Value};
 use super::stats::Accum;
 
 /// Measure a closure: warmup iterations, then timed iterations, reporting a
@@ -118,6 +123,78 @@ pub fn pct(x: f64) -> String {
     format!("{:.2}%", x * 100.0)
 }
 
+/// Machine-readable bench results, merged into one JSON file keyed by
+/// section (one section per bench binary). `micro_quant`/`micro_kernel`
+/// write `BENCH_micro.json` at the crate root every run, giving future
+/// PRs a perf trajectory to diff against.
+pub struct JsonReport {
+    path: PathBuf,
+    section: String,
+    entries: BTreeMap<String, Value>,
+}
+
+impl JsonReport {
+    /// Report into the shared `BENCH_micro.json` under `section`.
+    pub fn micro(section: &str) -> JsonReport {
+        JsonReport::at("BENCH_micro.json", section)
+    }
+
+    pub fn at(path: impl Into<PathBuf>, section: &str) -> JsonReport {
+        JsonReport {
+            path: path.into(),
+            section: section.to_string(),
+            entries: BTreeMap::new(),
+        }
+    }
+
+    /// Record a timed measurement.
+    pub fn add(&mut self, name: &str, r: &BenchResult) {
+        self.entries.insert(
+            name.to_string(),
+            Value::obj(vec![
+                ("mean_s", Value::num(r.mean_s)),
+                ("p50_s", Value::num(r.p50_s)),
+                ("min_s", Value::num(r.min_s)),
+                ("max_s", Value::num(r.max_s)),
+                ("iters", Value::num(r.iters as f64)),
+            ]),
+        );
+    }
+
+    /// Record a scalar metric (a ratio, a GB/s figure, an eval count).
+    pub fn metric(&mut self, name: &str, v: f64) {
+        self.entries.insert(name.to_string(), Value::num(v));
+    }
+
+    /// Merge this section into the file, preserving other sections. An
+    /// existing file that no longer parses (e.g. a run killed mid-write)
+    /// is set aside as `<file>.corrupt` with a warning rather than
+    /// silently dropping the other sections' history.
+    pub fn write(&self) -> std::io::Result<()> {
+        let mut root = BTreeMap::new();
+        if let Ok(text) = std::fs::read_to_string(&self.path) {
+            match json::parse(&text) {
+                Ok(Value::Obj(o)) => root = o,
+                _ => {
+                    let bak = PathBuf::from(
+                        format!("{}.corrupt", self.path.display()),
+                    );
+                    eprintln!(
+                        "warning: {} is not a JSON object; moving it \
+                         to {} and starting fresh",
+                        self.path.display(),
+                        bak.display()
+                    );
+                    std::fs::rename(&self.path, &bak).ok();
+                }
+            }
+        }
+        root.insert(self.section.clone(),
+                    Value::Obj(self.entries.clone()));
+        std::fs::write(&self.path, format!("{}\n", Value::Obj(root)))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -149,5 +226,68 @@ mod tests {
     #[test]
     fn pct_format() {
         assert_eq!(pct(0.5122), "51.22%");
+    }
+
+    #[test]
+    fn json_report_merges_sections() {
+        let dir = std::env::temp_dir().join("sqplus_test_bench");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_test.json");
+        std::fs::remove_file(&path).ok();
+
+        let mut a = JsonReport::at(&path, "alpha");
+        a.add(
+            "warm",
+            &BenchResult {
+                mean_s: 0.5,
+                p50_s: 0.4,
+                min_s: 0.3,
+                max_s: 0.9,
+                iters: 5,
+            },
+        );
+        a.metric("speedup", 2.5);
+        a.write().unwrap();
+
+        let mut b = JsonReport::at(&path, "beta");
+        b.metric("gbps", 11.0);
+        b.write().unwrap();
+
+        let root =
+            json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(root.get("alpha").get("speedup").as_f64(), Some(2.5));
+        assert_eq!(
+            root.get("alpha").get("warm").get("p50_s").as_f64(),
+            Some(0.4)
+        );
+        assert_eq!(
+            root.get("alpha").get("warm").get("iters").as_usize(),
+            Some(5)
+        );
+        // section written by a different report survives
+        assert_eq!(root.get("beta").get("gbps").as_f64(), Some(11.0));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn json_report_sets_aside_corrupt_file() {
+        let dir = std::env::temp_dir().join("sqplus_test_bench");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_corrupt.json");
+        let bak = dir.join("BENCH_corrupt.json.corrupt");
+        std::fs::remove_file(&bak).ok();
+        std::fs::write(&path, "{\"truncated\": ").unwrap();
+
+        let mut r = JsonReport::at(&path, "gamma");
+        r.metric("x", 1.0);
+        r.write().unwrap();
+
+        // fresh valid file written, corrupt original preserved
+        let root =
+            json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(root.get("gamma").get("x").as_f64(), Some(1.0));
+        assert!(bak.exists());
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(&bak).ok();
     }
 }

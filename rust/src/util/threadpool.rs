@@ -1,9 +1,9 @@
 //! Scoped data-parallel helpers over `std::thread` (no external deps).
 //!
-//! The hot paths that need parallelism (reference-forward matmuls,
-//! quantization sweeps, the alpha grid search) are all embarrassingly
-//! parallel loops, so a fork-join `parallel_for` over index chunks is
-//! sufficient; there is no work-stealing queue to maintain.
+//! The hot paths that need parallelism (reference-forward matmuls, the
+//! fused W4A16 kernel, quantization sweeps, the alpha grid search) are all
+//! embarrassingly parallel loops, so a fork-join `parallel_for` over index
+//! chunks is sufficient; there is no work-stealing queue to maintain.
 
 /// Number of worker threads to use (capped, leaves a core for the OS).
 pub fn default_threads() -> usize {
@@ -51,21 +51,58 @@ where
 }
 
 /// Map `f` over `0..n` in parallel, collecting results in index order.
+///
+/// Each worker collects its contiguous chunk into a local `Vec` which the
+/// caller thread splices back in order, so `T` needs no `Default + Clone`
+/// bound (loss closures can return arbitrary result structs) and no
+/// per-element synchronization is paid.
 pub fn parallel_map<T, F>(n: usize, f: F) -> Vec<T>
 where
-    T: Send + Default + Clone,
+    T: Send,
     F: Fn(usize) -> T + Sync,
 {
-    let mut out = vec![T::default(); n];
-    {
-        let slots: Vec<std::sync::Mutex<&mut T>> =
-            out.iter_mut().map(std::sync::Mutex::new).collect();
-        parallel_for(n, |i| {
-            let mut slot = slots[i].lock().unwrap();
-            **slot = f(i);
-        });
+    let threads = default_threads().clamp(1, n.max(1));
+    if threads <= 1 || n <= 1 {
+        return (0..n).map(f).collect();
     }
+    let chunk = n.div_ceil(threads);
+    let mut out = Vec::with_capacity(n);
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for t in 0..threads {
+            let f = &f;
+            let lo = t * chunk;
+            let hi = ((t + 1) * chunk).min(n);
+            if lo >= hi {
+                break;
+            }
+            handles.push(s.spawn(move || (lo..hi).map(f).collect::<Vec<T>>()));
+        }
+        for h in handles {
+            out.extend(h.join().expect("parallel_map worker panicked"));
+        }
+    });
     out
+}
+
+/// Raw mutable pointer that may cross thread boundaries, for fork-join
+/// loops whose tasks write disjoint regions of one output buffer (threaded
+/// matmuls, group-parallel quantization).
+///
+/// SAFETY contract (the caller's): no two tasks may write overlapping
+/// regions, and the buffer must outlive the fork-join scope.
+pub struct SendPtr<T>(*mut T);
+
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+impl<T> SendPtr<T> {
+    pub fn new(p: *mut T) -> SendPtr<T> {
+        SendPtr(p)
+    }
+    pub fn get(&self) -> *mut T {
+        self.0
+    }
 }
 
 #[cfg(test)]
@@ -89,6 +126,25 @@ mod tests {
         let out = parallel_map(100, |i| i * i);
         assert_eq!(out[7], 49);
         assert_eq!(out[99], 9801);
+        assert_eq!(out.len(), 100);
+    }
+
+    #[test]
+    fn map_supports_non_default_types() {
+        // NonZeroUsize has no Default impl; the old Mutex-slot collector
+        // could not return it.
+        use std::num::NonZeroUsize;
+        let out = parallel_map(64, |i| NonZeroUsize::new(i + 1).unwrap());
+        assert_eq!(out[0].get(), 1);
+        assert_eq!(out[63].get(), 64);
+    }
+
+    #[test]
+    fn map_empty_and_single() {
+        let out: Vec<String> = parallel_map(0, |_| unreachable!());
+        assert!(out.is_empty());
+        let one = parallel_map(1, |i| format!("v{i}"));
+        assert_eq!(one, vec!["v0".to_string()]);
     }
 
     #[test]
@@ -99,5 +155,15 @@ mod tests {
             count.fetch_add(1, Ordering::Relaxed);
         });
         assert_eq!(count.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn send_ptr_disjoint_writes() {
+        let mut buf = vec![0usize; 256];
+        let p = SendPtr::new(buf.as_mut_ptr());
+        parallel_for(256, |i| unsafe {
+            *p.get().add(i) = i * 3;
+        });
+        assert!(buf.iter().enumerate().all(|(i, &v)| v == i * 3));
     }
 }

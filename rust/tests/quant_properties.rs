@@ -5,7 +5,7 @@
 
 use sqplus::config::{ModelConfig, QuantConfig, QuantMethod};
 use sqplus::model::init::{init_weights, InitSpec};
-use sqplus::quant::{calib, pipeline, rtn, smooth};
+use sqplus::quant::{calib, kernel, loss, pipeline, rtn, smooth};
 use sqplus::reffwd::{NoHook, RefModel, Site};
 use sqplus::tensor::Tensor;
 use sqplus::util::prop;
@@ -146,6 +146,95 @@ fn prop_calib_stats_are_upper_bounds() {
 }
 
 #[test]
+fn prop_w4a16_kernel_matches_dequant_matmul() {
+    // the fused kernel computes x @ dequant(Wq) straight from packed
+    // nibbles; it must agree with the explicit dequantize-then-matmul
+    // reference within 1e-4 across random shapes and group sizes
+    prop::check("w4a16 kernel == dequant matmul", 12, |rng| {
+        let g = 1 + rng.below(16);
+        let mut k = g * (1 + rng.below(6));
+        if k % 2 == 1 {
+            k *= 2;
+        }
+        let n = 1 + rng.below(40);
+        let m = 1 + rng.below(9);
+        let scale = 0.05 + rng.f32() * 3.0;
+        let w = Tensor::from_vec(
+            &[k, n],
+            (0..k * n).map(|_| rng.normal() * scale).collect(),
+        );
+        let x = Tensor::from_vec(
+            &[m, k],
+            (0..m * k).map(|_| rng.normal()).collect(),
+        );
+        let q = rtn::quantize(&w, g);
+        let got = kernel::matmul_w4a16(&x, &q);
+        let want = x.matmul(&q.dequantize());
+        assert_eq!(got.shape, want.shape);
+        // per-element: tolerance anchored on the output's RMS magnitude
+        let rms = ((want.frob_sq() / want.numel().max(1) as f64).sqrt()
+            as f32)
+            .max(1e-6);
+        prop::assert_allclose(&got.data, &want.data, 3e-4, 3e-4 * rms,
+                              "kernel elementwise");
+        // global: within 1e-4 relative in Frobenius norm
+        let rel =
+            got.sq_diff(&want).sqrt() / want.frob_sq().sqrt().max(1e-12);
+        assert!(rel < 1e-4, "rel frobenius err {rel}");
+    });
+}
+
+#[test]
+fn prop_fused_quant_loss_bit_for_bit_on_tiny_model() {
+    // the fused quant_loss must reproduce the pre-fusion
+    // clone → scale → fake-quant → unscale → linear_loss pipeline
+    // exactly on the seed ModelConfig::tiny() setup, for every
+    // (layer, site, consumer) and across alphas and clip ratios
+    let cfg = ModelConfig::tiny();
+    let w = init_weights(&cfg, &InitSpec::with_outliers(1, 4, 60.0));
+    let prompts: Vec<Vec<u32>> = (0..3)
+        .map(|i| (0..10).map(|t| (i * 101 + t * 17) % 512).collect())
+        .collect();
+    let cal = calib::collect(&cfg, &w, &prompts, 24, 0);
+    for alpha in [0.0f32, 0.35, 0.5, 1.0] {
+        for layer in 0..cfg.layers {
+            for site in Site::all() {
+                let stats = cal.stats(layer, site);
+                let wmax = smooth::unit_weight_absmax(&w, layer, site);
+                let s =
+                    smooth::smoothing_factors(&stats.absmax, &wmax, alpha);
+                for lin in site.consumers() {
+                    let name = format!("layers.{layer}.{lin}");
+                    let orig = w.f32(&name);
+                    for clip in [1.0f32, 0.9] {
+                        let mut scaled = orig.clone();
+                        scaled.scale_rows(&s);
+                        let mut eff = rtn::quantize_clipped(
+                            &scaled, cfg.group_size, clip)
+                            .dequantize();
+                        let inv: Vec<f32> =
+                            s.iter().map(|&v| 1.0 / v).collect();
+                        eff.scale_rows(&inv);
+                        let want =
+                            loss::linear_loss(&stats.rows, orig, &eff);
+                        let got = loss::quant_loss(
+                            &stats.rows, orig, Some(&s), cfg.group_size,
+                            clip,
+                        );
+                        assert_eq!(
+                            got.to_bits(),
+                            want.to_bits(),
+                            "{name} alpha={alpha} clip={clip}: \
+                             {got} vs {want}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
 fn prop_awq_and_sqplus_preserve_model_function() {
     let mut rng = Rng::new(77);
     for _ in 0..2 {
@@ -163,8 +252,7 @@ fn prop_awq_and_sqplus_preserve_model_function() {
                 .prefill(&tokens, &mut NoHook);
             // quantized model stays in the same ballpark (sanity; the
             // tight accuracy statements live in the eval benches)
-            let rel = got.sub(&want).frob_sq().sqrt()
-                / want.frob_sq().sqrt();
+            let rel = got.sq_diff(&want).sqrt() / want.frob_sq().sqrt();
             assert!(rel < 0.5, "{method:?} rel err {rel}");
         }
     }
