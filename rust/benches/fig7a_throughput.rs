@@ -18,11 +18,12 @@ use sqplus::config::{
 };
 use sqplus::coordinator::engine::Engine;
 use sqplus::coordinator::sequence::SamplingParams;
+use sqplus::data::trace;
 use sqplus::quant::pipeline;
 use sqplus::runtime::executor::ModelRuntime;
 use sqplus::runtime::perfmodel::{self, Deploy, PaperModel};
 use sqplus::runtime::simtp::{CommMode, Deployment};
-use sqplus::util::bench::Table;
+use sqplus::util::bench::{JsonReport, Table};
 
 fn run_measured(
     m: &sqplus::runtime::manifest::Manifest, s: &common::Setup,
@@ -50,6 +51,43 @@ fn run_measured(
     eng.run_to_completion(100_000).unwrap();
     let out_tokens = eng.metrics.output_tokens;
     out_tokens as f64 / t0.elapsed().as_secs_f64()
+}
+
+/// Shared-prefix workload (system-prompt traffic): `n_req` requests of
+/// `prefix + unique suffix`, submitted in waves so later waves can hit
+/// the blocks earlier waves registered. Returns (tokens/s, prefill
+/// tokens executed, cached prefix tokens).
+fn run_shared_prefix(
+    m: &sqplus::runtime::manifest::Manifest, s: &common::Setup,
+    deploy_store: &sqplus::model::store::WeightStore, enable: bool,
+    n_req: usize, prefix: usize, suffix: usize, output: usize,
+) -> (f64, usize, usize) {
+    let rt = ModelRuntime::load(m, &s.cfg.name, Precision::W4a16,
+                                deploy_store)
+        .unwrap();
+    rt.warmup().unwrap();
+    let dep = Deployment::single(rt, GpuProfile::a100_40g());
+    let ecfg = EngineConfig {
+        enable_prefix_caching: enable,
+        ..Default::default()
+    };
+    let mut eng = Engine::new(dep, ecfg);
+    let prompts = trace::shared_prefix_prompts(11, n_req, prefix, suffix,
+                                               s.cfg.vocab);
+    let t0 = std::time::Instant::now();
+    for wave in prompts.chunks(4) {
+        for p in wave {
+            eng.submit(p.clone(), SamplingParams {
+                max_new_tokens: output,
+                ..Default::default()
+            });
+        }
+        eng.run_to_completion(100_000).unwrap();
+    }
+    let tput = eng.metrics.output_tokens as f64
+        / t0.elapsed().as_secs_f64();
+    (tput, eng.metrics.prefill_tokens_executed,
+     eng.metrics.cached_prefix_tokens)
 }
 
 fn main() {
@@ -88,6 +126,49 @@ fn main() {
         ]);
     }
     t.print();
+
+    // shared-prefix serving mode: the multi-user traffic shape (system
+    // prompts / few-shot templates) where prefix caching pays off
+    let (n_req2, prefix, suffix, output) = (16usize, 24usize, 8, 16);
+    let (tput_cold, exec_cold, hit_cold) = run_shared_prefix(
+        &man, &s, sqp.deploy.as_ref().unwrap(), false, n_req2, prefix,
+        suffix, output,
+    );
+    let (tput_warm, exec_warm, hit_warm) = run_shared_prefix(
+        &man, &s, sqp.deploy.as_ref().unwrap(), true, n_req2, prefix,
+        suffix, output,
+    );
+    let mut t3 = Table::new(
+        &format!(
+            "Figure 7a shared-prefix serving ({size}, SQ+ W4A16, \
+             {n_req2} reqs, prompt {prefix}+{suffix})"
+        ),
+        &["prefix cache", "prefill tokens executed", "cached tokens",
+          "output tok/s"],
+    );
+    t3.row(&["off".into(), exec_cold.to_string(), hit_cold.to_string(),
+             format!("{tput_cold:.1}")]);
+    t3.row(&["on".into(), exec_warm.to_string(), hit_warm.to_string(),
+             format!("{tput_warm:.1}")]);
+    t3.print();
+    assert!(hit_cold == 0 && exec_warm < exec_cold,
+            "prefix cache saved no prefill work");
+    let mut rep = JsonReport::at("BENCH_serve.json",
+                                 "fig7a_shared_prefix");
+    rep.metric("n_requests", n_req2 as f64);
+    rep.metric("prompt_prefix_tokens", prefix as f64);
+    rep.metric("prompt_suffix_tokens", suffix as f64);
+    rep.metric("prefill_tokens_executed_cold", exec_cold as f64);
+    rep.metric("prefill_tokens_executed_cached", exec_warm as f64);
+    rep.metric("cached_prefix_tokens", hit_warm as f64);
+    rep.metric("prefill_tokens_saved_frac",
+               1.0 - exec_warm as f64 / exec_cold.max(1) as f64);
+    rep.metric("output_tok_per_s_cold", tput_cold);
+    rep.metric("output_tok_per_s_cached", tput_warm);
+    rep.metric("tput_speedup", tput_warm / tput_cold.max(1e-9));
+    if let Err(e) = rep.write() {
+        eprintln!("warning: BENCH_serve.json not written: {e}");
+    }
 
     // analytic A100 curves at paper scale
     let gpu = GpuProfile::a100_40g();

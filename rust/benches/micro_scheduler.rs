@@ -14,14 +14,22 @@ use sqplus::coordinator::sequence::{SamplingParams, Sequence};
 use sqplus::runtime::kv::{self, SeqKv};
 use sqplus::util::bench::{Bench, Table};
 
-fn churn(total_blocks: usize, n_seqs: usize) -> usize {
+fn churn(total_blocks: usize, n_seqs: usize, prefix_cache: bool)
+    -> usize {
     let mut seqs: HashMap<u64, Sequence> = HashMap::new();
     let mut sch = Scheduler::new(
-        EngineConfig::default(),
+        // identical 24-token prompts (one full block + a partial): with
+        // the cache on, every prefill past the first shares the head
+        // block (hash + refcount path); with it off, this is the
+        // pre-cache pool-pressure workload
+        EngineConfig {
+            enable_prefix_caching: prefix_cache,
+            ..Default::default()
+        },
         BlockManager::new(16, total_blocks),
     );
     for id in 0..n_seqs as u64 {
-        seqs.insert(id, Sequence::new(id, vec![1; 16],
+        seqs.insert(id, Sequence::new(id, vec![1; 24],
                                       SamplingParams::default()));
         sch.add(id);
     }
@@ -39,8 +47,10 @@ fn churn(total_blocks: usize, n_seqs: usize) -> usize {
                     }
                 }
             }
-            StepPlan::Prefill { ids } => {
+            StepPlan::Prefill { ids, .. } => {
                 for id in ids {
+                    let toks = seqs[&id].full_tokens();
+                    sch.bm.register_prefix(id, &toks);
                     seqs.get_mut(&id).unwrap().state =
                         sqplus::coordinator::sequence::SeqState::Running;
                 }
@@ -63,21 +73,25 @@ fn main() {
     let mut t = Table::new(
         "micro: scheduler plans/s under pool pressure (200 seqs, 24 \
          tokens each)",
-        &["pool blocks", "plans", "plans/s"],
+        &["pool blocks", "prefix cache", "plans", "plans/s"],
     );
     for blocks in [64usize, 128, 512, 4096] {
-        let mut plans = 0;
-        let r = Bench::new(&format!("sched pool={blocks}"))
-            .warmup(1)
-            .iters(5)
-            .run(|| {
-                plans = churn(blocks, 200);
-            });
-        t.row(&[
-            blocks.to_string(),
-            plans.to_string(),
-            format!("{:.0}", plans as f64 / r.p50_s),
-        ]);
+        for cache in [false, true] {
+            let mut plans = 0;
+            let r = Bench::new(
+                &format!("sched pool={blocks} cache={cache}"))
+                .warmup(1)
+                .iters(5)
+                .run(|| {
+                    plans = churn(blocks, 200, cache);
+                });
+            t.row(&[
+                blocks.to_string(),
+                if cache { "on" } else { "off" }.to_string(),
+                plans.to_string(),
+                format!("{:.0}", plans as f64 / r.p50_s),
+            ]);
+        }
     }
     t.print();
 

@@ -200,6 +200,9 @@ pub struct EngineConfig {
     pub reform_interval: usize,
     /// Default max new tokens per request.
     pub max_new_tokens: usize,
+    /// Content-hash prefix caching: share full KV blocks across
+    /// sequences with equal prompt prefixes and skip their prefill.
+    pub enable_prefix_caching: bool,
 }
 
 impl Default for EngineConfig {
@@ -213,6 +216,7 @@ impl Default for EngineConfig {
             total_blocks: 256,
             reform_interval: 1,
             max_new_tokens: 32,
+            enable_prefix_caching: true,
         }
     }
 }

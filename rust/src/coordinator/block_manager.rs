@@ -1,16 +1,37 @@
-//! Paged KV-cache accounting (the vLLM block manager, simplified to what
-//! this engine needs).
+//! Paged KV-cache accounting with content-hash prefix caching (the vLLM
+//! block-manager lineage, sized to what this engine needs).
 //!
-//! Physical KV rows live host-side per sequence ([`crate::runtime::kv`]),
-//! but *admission and preemption* are governed here: the simulated device
-//! pool is divided into fixed-size blocks of `block_size` token slots;
-//! a sequence owns ceil(context/block_size) blocks; allocation fails when
-//! the pool (minus a watermark) is exhausted, which triggers scheduler
-//! preemption — the same control loop vLLM runs, driven by the same
-//! arithmetic the paper's memory argument uses (W4A16 frees ~3/4 of the
-//! weight memory, so the pool is larger and batches grow).
+//! Physical KV rows live host-side per sequence ([`crate::runtime::kv`]);
+//! *admission, sharing and preemption* are governed here. The simulated
+//! device pool is divided into fixed-size blocks of `block_size` token
+//! slots; each sequence owns a table of physical block ids; allocation
+//! fails when the pool (minus a watermark) is exhausted, which triggers
+//! scheduler preemption — the same control loop vLLM runs, driven by the
+//! same arithmetic the paper's memory argument uses (W4A16 frees ~3/4 of
+//! the weight memory, so the pool is larger and batches grow).
+//!
+//! Prefix-cache design (vLLM-style hash-based automatic prefix caching):
+//!
+//! * **Hash scheme** — a full block is keyed by the *chained* hash of its
+//!   token content: `h_i = hash(h_{i-1}, tokens[i*bs..(i+1)*bs])` from a
+//!   fixed seed, so equal keys mean equal position-aligned prefixes, and
+//!   a repeated system prompt maps to the same chain of block ids.
+//! * **Full blocks only / CoW rule** — only completely filled blocks are
+//!   cached or shared; the tail partial block is always private to its
+//!   sequence. A lookup also never covers the *entire* token list — at
+//!   least one token is left to compute so sampling has fresh logits.
+//!   This is the copy-on-write boundary: a sequence whose whole prompt is
+//!   cached takes a private copy of the final block (recomputing it)
+//!   instead of sharing it.
+//! * **Sharing** — a cache hit bumps the block's refcount instead of
+//!   allocating; `release` decrements it, so preempting or finishing one
+//!   sharer never frees blocks another sequence still references.
+//! * **Eviction** — cached blocks with refcount 0 are *evictable* free
+//!   capacity, reclaimed LRU (least recently released first) when the
+//!   free list runs dry. [`BlockManager::take_evicted`] reports reclaimed
+//!   ids so the engine can drop the host KV rows it stashed for them.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 
 /// Outcome of an allocation request.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -20,16 +41,83 @@ pub enum Alloc {
     NoSpace,
 }
 
+/// Seed of the block-content hash chain (arbitrary odd constant).
+const HASH_SEED: u64 = 0x9e37_79b9_7f4a_7c15;
+
+#[inline]
+fn mix(mut h: u64) -> u64 {
+    // splitmix64 finalizer
+    h ^= h >> 30;
+    h = h.wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    h ^= h >> 27;
+    h = h.wrapping_mul(0x94d0_49bb_1331_11eb);
+    h ^ (h >> 31)
+}
+
+/// Chained content hash of one full block given the previous block's
+/// hash (or [`HASH_SEED`] for the first block).
+pub fn block_hash(prev: u64, tokens: &[u32]) -> u64 {
+    let mut h = mix(prev ^ 0x51_7e_ca_c4e);
+    for &t in tokens {
+        h = mix(h ^ t as u64);
+    }
+    h
+}
+
+/// One physical block's bookkeeping.
+#[derive(Debug, Clone, Default)]
+struct Block {
+    /// Number of sequence tables referencing this block.
+    ref_count: usize,
+    /// Content hash while this block holds cached (reusable) rows.
+    hash: Option<u64>,
+    /// Key into the evictable LRU while `ref_count == 0` and cached.
+    lru_tick: u64,
+}
+
+/// Prefix-cache counters (block granularity unless noted).
+#[derive(Debug, Clone, Default)]
+pub struct CacheStats {
+    /// Cache hits: full prompt blocks reused instead of recomputed.
+    pub hits: usize,
+    /// Full prompt blocks that were looked up but not cached.
+    pub misses: usize,
+    /// Prompt tokens covered by hits across all admissions.
+    pub hit_tokens: usize,
+    /// Hits on blocks another live sequence still referenced — device
+    /// blocks actually shared, i.e. pool memory saved.
+    pub shared_blocks: usize,
+    /// Cached blocks whose content was dropped to reclaim space.
+    pub evictions: usize,
+    /// Blocks registered into the cache after prefill.
+    pub registered: usize,
+}
+
 #[derive(Debug, Clone)]
 pub struct BlockManager {
     pub block_size: usize,
     pub total_blocks: usize,
-    free_blocks: usize,
-    /// seq id -> blocks held.
-    held: HashMap<u64, usize>,
-    /// blocks kept free as a scheduling watermark (headroom for decode
+    /// Per-block refcount/hash state, indexed by block id.
+    blocks: Vec<Block>,
+    /// Blocks holding no content (never used or fully freed); LIFO.
+    free: Vec<usize>,
+    /// Content hash -> block id, full blocks only (refcount may be 0).
+    cache: HashMap<u64, usize>,
+    /// Cached blocks with refcount 0, reclaimable LRU: tick -> block id.
+    evictable: BTreeMap<u64, usize>,
+    /// Sequence id -> physical block table.
+    tables: HashMap<u64, Vec<usize>>,
+    /// Monotonic counter ordering LRU entries.
+    tick: u64,
+    /// Cached blocks reclaimed since the last `take_evicted` (the engine
+    /// drops its stashed host KV rows for these).
+    evicted: Vec<usize>,
+    /// Blocks kept free as a scheduling watermark (headroom for decode
     /// growth of already-running sequences).
     pub watermark_blocks: usize,
+    /// Content-hash prefix caching on/off (off = the pre-cache manager).
+    pub enable_prefix_caching: bool,
+    pub stats: CacheStats,
 }
 
 impl BlockManager {
@@ -37,9 +125,17 @@ impl BlockManager {
         BlockManager {
             block_size,
             total_blocks,
-            free_blocks: total_blocks,
-            held: HashMap::new(),
+            blocks: vec![Block::default(); total_blocks],
+            // pop from the back: hand out low ids first
+            free: (0..total_blocks).rev().collect(),
+            cache: HashMap::new(),
+            evictable: BTreeMap::new(),
+            tables: HashMap::new(),
+            tick: 0,
+            evicted: vec![],
             watermark_blocks: (total_blocks / 100).max(1),
+            enable_prefix_caching: true,
+            stats: CacheStats::default(),
         }
     }
 
@@ -57,64 +153,273 @@ impl BlockManager {
         tokens.div_ceil(self.block_size)
     }
 
+    /// Free capacity: untouched blocks plus evictable cached blocks.
     pub fn free_blocks(&self) -> usize {
-        self.free_blocks
+        self.free.len() + self.evictable.len()
     }
     pub fn used_blocks(&self) -> usize {
-        self.total_blocks - self.free_blocks
+        self.total_blocks - self.free_blocks()
     }
     pub fn holds(&self, id: u64) -> usize {
-        self.held.get(&id).copied().unwrap_or(0)
+        self.tables.get(&id).map_or(0, |t| t.len())
+    }
+    /// The sequence's physical block table (admitted sequences only).
+    pub fn table(&self, id: u64) -> Option<&[usize]> {
+        self.tables.get(&id).map(|t| &t[..])
     }
     pub fn occupancy(&self) -> f64 {
         self.used_blocks() as f64 / self.total_blocks as f64
     }
 
-    /// Can a *new* sequence of `tokens` be admitted (leaving watermark)?
-    pub fn can_admit(&self, tokens: usize) -> bool {
-        self.blocks_for(tokens) + self.watermark_blocks <= self.free_blocks
+    /// Chained hashes of every *full* block of `tokens`.
+    fn hash_chain(&self, tokens: &[u32]) -> Vec<u64> {
+        let bs = self.block_size;
+        let mut h = HASH_SEED;
+        (0..tokens.len() / bs)
+            .map(|i| {
+                h = block_hash(h, &tokens[i * bs..(i + 1) * bs]);
+                h
+            })
+            .collect()
     }
 
-    /// Allocate blocks for a newly admitted sequence.
-    pub fn allocate(&mut self, id: u64, tokens: usize) -> Alloc {
-        assert!(!self.held.contains_key(&id), "seq {id} already allocated");
-        let need = self.blocks_for(tokens);
-        if need + self.watermark_blocks > self.free_blocks {
+    /// Block ids of the longest cached prefix of `tokens`, capped so at
+    /// least one token is always left to compute.
+    fn prefix_hits(&self, tokens: &[u32]) -> Vec<usize> {
+        if !self.enable_prefix_caching || tokens.len() <= 1 {
+            return vec![];
+        }
+        let bs = self.block_size;
+        let max_blocks = (tokens.len() - 1) / bs;
+        let mut h = HASH_SEED;
+        let mut out = vec![];
+        for i in 0..max_blocks {
+            h = block_hash(h, &tokens[i * bs..(i + 1) * bs]);
+            match self.cache.get(&h) {
+                Some(&b) => out.push(b),
+                None => break,
+            }
+        }
+        out
+    }
+
+    /// Prompt tokens a cached prefix would cover for this content.
+    pub fn cached_prefix_tokens(&self, tokens: &[u32]) -> usize {
+        self.prefix_hits(tokens).len() * self.block_size
+    }
+
+    /// Free-pool consumption of admitting `tokens`: fresh blocks plus
+    /// hits that must be rescued from the evictable pool.
+    fn admission_cost(&self, tokens: &[u32]) -> usize {
+        let hits = self.prefix_hits(tokens);
+        let evictable_hits = hits
+            .iter()
+            .filter(|&&b| self.blocks[b].ref_count == 0)
+            .count();
+        self.blocks_for(tokens.len()) - hits.len() + evictable_hits
+    }
+
+    /// Can a *new* sequence of this content be admitted (leaving the
+    /// watermark)?
+    pub fn can_admit(&self, tokens: &[u32]) -> bool {
+        self.admission_cost(tokens) + self.watermark_blocks
+            <= self.free_blocks()
+    }
+
+    /// Pop a content-free block, evicting the LRU cached block if the
+    /// free list is dry. `None` only when the whole pool is referenced.
+    fn grab_free_block(&mut self) -> Option<usize> {
+        if let Some(b) = self.free.pop() {
+            return Some(b);
+        }
+        let (&tick, &b) = self.evictable.iter().next()?;
+        self.evictable.remove(&tick);
+        if let Some(h) = self.blocks[b].hash.take() {
+            self.cache.remove(&h);
+        }
+        self.stats.evictions += 1;
+        self.evicted.push(b);
+        Some(b)
+    }
+
+    /// Allocate blocks for a newly admitted sequence, reusing cached
+    /// prefix blocks. Returns `Ok` with the table recorded; query the
+    /// covered prefix with [`cached_prefix_tokens`] (the scheduler passes
+    /// it to the engine so prefill starts at the first uncached token).
+    ///
+    /// [`cached_prefix_tokens`]: BlockManager::cached_prefix_tokens
+    pub fn allocate(&mut self, id: u64, tokens: &[u32]) -> Alloc {
+        assert!(!self.tables.contains_key(&id),
+                "seq {id} already allocated");
+        // one hash-chain walk serves both the capacity check and the
+        // allocation (plan() calls this on the admission hot path)
+        let need = self.blocks_for(tokens.len());
+        let hits = self.prefix_hits(tokens);
+        let evictable_hits = hits
+            .iter()
+            .filter(|&&b| self.blocks[b].ref_count == 0)
+            .count();
+        if need - hits.len() + evictable_hits + self.watermark_blocks
+            > self.free_blocks()
+        {
             return Alloc::NoSpace;
         }
-        self.free_blocks -= need;
-        self.held.insert(id, need);
+        if self.enable_prefix_caching {
+            self.stats.hits += hits.len();
+            self.stats.hit_tokens += hits.len() * self.block_size;
+            self.stats.misses += tokens.len() / self.block_size
+                - hits.len();
+        }
+        let mut table = Vec::with_capacity(need);
+        for &b in &hits {
+            if self.blocks[b].ref_count == 0 {
+                self.evictable.remove(&self.blocks[b].lru_tick);
+            } else {
+                self.stats.shared_blocks += 1;
+            }
+            self.blocks[b].ref_count += 1;
+            table.push(b);
+        }
+        for _ in hits.len()..need {
+            let b = self.grab_free_block().expect("free-block accounting");
+            self.blocks[b].ref_count = 1;
+            debug_assert!(self.blocks[b].hash.is_none());
+            table.push(b);
+        }
+        self.tables.insert(id, table);
         Alloc::Ok
     }
 
-    /// Grow a running sequence by one token; may need one more block.
+    /// Grow a running sequence by one token; may need one more (always
+    /// private) block.
     pub fn append_token(&mut self, id: u64, new_context: usize) -> Alloc {
-        let held = *self.held.get(&id).expect("seq not allocated");
+        let held = self.tables.get(&id).expect("seq not allocated").len();
         let need = self.blocks_for(new_context);
         if need <= held {
             return Alloc::Ok;
         }
         let extra = need - held;
-        if extra > self.free_blocks {
+        if extra > self.free_blocks() {
             return Alloc::NoSpace;
         }
-        self.free_blocks -= extra;
-        self.held.insert(id, need);
+        let mut grabbed = Vec::with_capacity(extra);
+        for _ in 0..extra {
+            let b = self.grab_free_block().expect("free-block accounting");
+            self.blocks[b].ref_count = 1;
+            grabbed.push(b);
+        }
+        self.tables.get_mut(&id).unwrap().extend(grabbed);
         Alloc::Ok
     }
 
     /// Release everything a sequence holds (finish or preemption).
+    /// Shared blocks stay allocated while another sequence references
+    /// them; cached blocks dropping to refcount 0 become evictable but
+    /// keep their content for future hits.
     pub fn release(&mut self, id: u64) {
-        if let Some(n) = self.held.remove(&id) {
-            self.free_blocks += n;
+        let Some(table) = self.tables.remove(&id) else { return };
+        for b in table {
+            let blk = &mut self.blocks[b];
+            assert!(blk.ref_count > 0, "double free of block {b}");
+            blk.ref_count -= 1;
+            if blk.ref_count > 0 {
+                continue;
+            }
+            if blk.hash.is_some() {
+                self.tick += 1;
+                blk.lru_tick = self.tick;
+                self.evictable.insert(self.tick, b);
+            } else {
+                self.free.push(b);
+            }
         }
-        debug_assert!(self.free_blocks <= self.total_blocks);
+        debug_assert!(self.free_blocks() <= self.total_blocks);
     }
 
-    /// Invariant check: free + Σheld == total.
+    /// Register the full blocks of an admitted sequence's content into
+    /// the cache (the engine calls this right after their KV rows are
+    /// built). Returns `(block_index, block_id)` for *newly* cached
+    /// blocks so the caller can stash their KV rows.
+    pub fn register_prefix(&mut self, id: u64, tokens: &[u32])
+        -> Vec<(usize, usize)> {
+        if !self.enable_prefix_caching {
+            return vec![];
+        }
+        let Some(table) = self.tables.get(&id) else { return vec![] };
+        let hashes = self.hash_chain(tokens);
+        debug_assert!(hashes.len() <= table.len());
+        let mut newly = vec![];
+        for (i, &h) in hashes.iter().enumerate() {
+            let b = table[i];
+            if self.blocks[b].hash.is_some() {
+                continue; // already cached (a hit or earlier register)
+            }
+            if self.cache.contains_key(&h) {
+                continue; // another block owns this content
+            }
+            newly.push((i, b));
+        }
+        for &(i, b) in &newly {
+            self.blocks[b].hash = Some(hashes[i]);
+            self.cache.insert(hashes[i], b);
+            self.stats.registered += 1;
+        }
+        newly
+    }
+
+    /// Cached blocks reclaimed since the last call (engine drops the
+    /// host KV rows it stashed for them).
+    pub fn take_evicted(&mut self) -> Vec<usize> {
+        std::mem::take(&mut self.evicted)
+    }
+
+    /// Invariant check: every block is in exactly one of {free,
+    /// evictable, referenced}; stored refcounts match the tables; the
+    /// cache map and per-block hashes agree.
     pub fn check_conservation(&self) -> bool {
-        self.free_blocks + self.held.values().sum::<usize>()
-            == self.total_blocks
+        let mut rc = vec![0usize; self.total_blocks];
+        for t in self.tables.values() {
+            for &b in t {
+                rc[b] += 1;
+            }
+        }
+        if (0..self.total_blocks)
+            .any(|b| rc[b] != self.blocks[b].ref_count)
+        {
+            return false;
+        }
+        let mut seen = vec![false; self.total_blocks];
+        for &b in &self.free {
+            if seen[b] || self.blocks[b].hash.is_some() {
+                return false;
+            }
+            seen[b] = true;
+        }
+        for (&t, &b) in &self.evictable {
+            if seen[b]
+                || self.blocks[b].hash.is_none()
+                || self.blocks[b].lru_tick != t
+            {
+                return false;
+            }
+            seen[b] = true;
+        }
+        for b in 0..self.total_blocks {
+            if rc[b] > 0 {
+                if seen[b] {
+                    return false;
+                }
+                seen[b] = true;
+            }
+        }
+        if !seen.iter().all(|&s| s) {
+            return false;
+        }
+        self.cache.iter().all(|(&h, &b)| self.blocks[b].hash == Some(h))
+            && self.blocks.iter().enumerate().all(|(b, blk)| {
+                blk.hash
+                    .map_or(true, |h| self.cache.get(&h) == Some(&b))
+            })
     }
 }
 
@@ -123,11 +428,15 @@ mod tests {
     use super::*;
     use crate::util::prop;
 
+    fn toks(seed: u32, n: usize) -> Vec<u32> {
+        (0..n as u32).map(|t| seed.wrapping_mul(97) + t).collect()
+    }
+
     #[test]
     fn allocate_release_roundtrip() {
         let mut bm = BlockManager::new(16, 10);
         bm.watermark_blocks = 1;
-        assert_eq!(bm.allocate(1, 40), Alloc::Ok); // 3 blocks
+        assert_eq!(bm.allocate(1, &toks(1, 40)), Alloc::Ok); // 3 blocks
         assert_eq!(bm.holds(1), 3);
         assert_eq!(bm.free_blocks(), 7);
         bm.release(1);
@@ -139,17 +448,17 @@ mod tests {
     fn watermark_blocks_admission() {
         let mut bm = BlockManager::new(16, 4);
         bm.watermark_blocks = 1;
-        assert!(bm.can_admit(48)); // 3 + 1 watermark = 4 <= 4
-        assert!(!bm.can_admit(64)); // 4 + 1 > 4
-        assert_eq!(bm.allocate(1, 64), Alloc::NoSpace);
-        assert_eq!(bm.allocate(1, 48), Alloc::Ok);
+        assert!(bm.can_admit(&toks(1, 48))); // 3 + 1 watermark = 4 <= 4
+        assert!(!bm.can_admit(&toks(1, 64))); // 4 + 1 > 4
+        assert_eq!(bm.allocate(1, &toks(1, 64)), Alloc::NoSpace);
+        assert_eq!(bm.allocate(1, &toks(1, 48)), Alloc::Ok);
     }
 
     #[test]
     fn append_grows_at_block_boundary() {
         let mut bm = BlockManager::new(4, 10);
         bm.watermark_blocks = 0;
-        bm.allocate(1, 4); // exactly 1 block
+        bm.allocate(1, &toks(1, 4)); // exactly 1 block
         assert_eq!(bm.holds(1), 1);
         assert_eq!(bm.append_token(1, 5), Alloc::Ok); // needs 2nd block
         assert_eq!(bm.holds(1), 2);
@@ -161,7 +470,7 @@ mod tests {
     fn append_fails_when_exhausted() {
         let mut bm = BlockManager::new(4, 2);
         bm.watermark_blocks = 0;
-        bm.allocate(1, 8); // both blocks
+        bm.allocate(1, &toks(1, 8)); // both blocks
         assert_eq!(bm.append_token(1, 9), Alloc::NoSpace);
         assert!(bm.check_conservation());
     }
@@ -174,44 +483,197 @@ mod tests {
     }
 
     #[test]
+    fn prefix_hit_shares_blocks_and_counts() {
+        let mut bm = BlockManager::new(4, 16);
+        bm.watermark_blocks = 0;
+        let p = toks(7, 10); // 2 full blocks + partial
+        assert_eq!(bm.allocate(1, &p), Alloc::Ok);
+        assert_eq!(bm.cached_prefix_tokens(&p), 0); // nothing registered
+        let newly = bm.register_prefix(1, &p);
+        assert_eq!(newly.len(), 2); // both full blocks cached
+        // identical content while seq 1 is still live: shared blocks
+        assert_eq!(bm.cached_prefix_tokens(&p), 8);
+        let before = bm.free_blocks();
+        assert_eq!(bm.allocate(2, &p), Alloc::Ok);
+        // only the private tail block was newly consumed
+        assert_eq!(bm.free_blocks(), before - 1);
+        assert_eq!(bm.stats.hits, 2);
+        assert_eq!(bm.stats.shared_blocks, 2);
+        assert_eq!(bm.table(1).unwrap()[..2], bm.table(2).unwrap()[..2]);
+        assert_ne!(bm.table(1).unwrap()[2], bm.table(2).unwrap()[2]);
+        assert!(bm.check_conservation());
+        // releasing one sharer keeps the other's blocks allocated
+        bm.release(1);
+        assert!(bm.check_conservation());
+        assert_eq!(bm.holds(2), 3);
+        bm.release(2);
+        assert!(bm.check_conservation());
+        assert_eq!(bm.free_blocks(), 16); // evictable counts as free
+    }
+
+    #[test]
+    fn full_prompt_hit_leaves_one_block_to_compute() {
+        let mut bm = BlockManager::new(4, 16);
+        bm.watermark_blocks = 0;
+        let p = toks(3, 8); // exactly 2 full blocks
+        bm.allocate(1, &p);
+        bm.register_prefix(1, &p);
+        // the whole prompt is cached, but the lookup is capped so the
+        // final block is recomputed privately (CoW boundary)
+        assert_eq!(bm.cached_prefix_tokens(&p), 4);
+        bm.allocate(2, &p);
+        assert_ne!(bm.table(1).unwrap()[1], bm.table(2).unwrap()[1]);
+        assert!(bm.check_conservation());
+    }
+
+    #[test]
+    fn lru_eviction_reclaims_oldest_and_reports() {
+        let mut bm = BlockManager::new(4, 3);
+        bm.watermark_blocks = 0;
+        let a = toks(1, 4);
+        let b = toks(2, 4);
+        bm.allocate(1, &a);
+        bm.register_prefix(1, &a);
+        bm.release(1); // a's block cached + evictable (LRU oldest)
+        bm.allocate(2, &b);
+        bm.register_prefix(2, &b);
+        bm.release(2); // b's block cached + evictable
+        assert_eq!(bm.free_blocks(), 3);
+        // a three-block allocation must reclaim both cached blocks
+        assert_eq!(bm.allocate(3, &toks(9, 12)), Alloc::Ok);
+        let ev = bm.take_evicted();
+        assert_eq!(ev.len(), 2);
+        assert_eq!(bm.stats.evictions, 2);
+        // probe with extended content: a lookup never covers the whole
+        // query, so the probe must be longer than the cached block
+        let probe = |p: &[u32]| {
+            let mut q = p.to_vec();
+            q.push(999);
+            q
+        };
+        assert_eq!(bm.cached_prefix_tokens(&probe(&a)), 0); // dropped
+        assert_eq!(bm.cached_prefix_tokens(&probe(&b)), 0);
+        assert!(bm.take_evicted().is_empty());
+        assert!(bm.check_conservation());
+    }
+
+    #[test]
+    fn lru_prefers_least_recently_released() {
+        let mut bm = BlockManager::new(4, 2);
+        bm.watermark_blocks = 0;
+        let a = toks(1, 4);
+        let b = toks(2, 4);
+        bm.allocate(1, &a);
+        bm.register_prefix(1, &a);
+        bm.allocate(2, &b);
+        bm.register_prefix(2, &b);
+        bm.release(2); // b released first -> LRU oldest
+        bm.release(1);
+        // one fresh block: must evict b's, keep a's (probes extended —
+        // a lookup never covers its whole query)
+        bm.allocate(3, &toks(9, 3));
+        let (mut pa, mut pb) = (a.clone(), b.clone());
+        pa.push(999);
+        pb.push(999);
+        assert_eq!(bm.cached_prefix_tokens(&pa), 4);
+        assert_eq!(bm.cached_prefix_tokens(&pb), 0);
+        assert!(bm.check_conservation());
+    }
+
+    #[test]
+    fn disabled_caching_never_hits() {
+        let mut bm = BlockManager::new(4, 8);
+        bm.enable_prefix_caching = false;
+        bm.watermark_blocks = 0;
+        let p = toks(5, 8);
+        bm.allocate(1, &p);
+        assert!(bm.register_prefix(1, &p).is_empty());
+        bm.release(1);
+        assert_eq!(bm.cached_prefix_tokens(&p), 0);
+        let before = bm.free_blocks();
+        bm.allocate(2, &p);
+        assert_eq!(bm.free_blocks(), before - 2);
+        assert_eq!(bm.stats.hits, 0);
+        assert!(bm.check_conservation());
+    }
+
+    #[test]
+    fn hash_chain_is_positional() {
+        // identical block content at different chain positions must not
+        // collide (the chain mixes the prefix in)
+        let h0 = block_hash(HASH_SEED, &[7, 7, 7, 7]);
+        let h1 = block_hash(h0, &[7, 7, 7, 7]);
+        assert_ne!(h0, h1);
+        // and the chain is deterministic
+        assert_eq!(h0, block_hash(HASH_SEED, &[7, 7, 7, 7]));
+    }
+
+    #[test]
     fn conservation_under_random_workload() {
-        prop::check("block conservation", 30, |rng| {
-            let mut bm = BlockManager::new(1 + rng.below(8),
-                                           8 + rng.below(64));
-            bm.watermark_blocks = rng.below(3);
-            let mut live: Vec<(u64, usize)> = vec![];
-            let mut next_id = 0u64;
-            for _ in 0..200 {
-                match rng.below(3) {
-                    0 => {
-                        let toks = 1 + rng.below(40);
-                        if bm.allocate(next_id, toks) == Alloc::Ok {
-                            live.push((next_id, toks));
-                        } else {
-                            bm.release(next_id); // no-op: not held
+        for enable in [false, true] {
+            prop::check("block conservation", 25, |rng| {
+                let bs = 1 + rng.below(8);
+                let mut bm =
+                    BlockManager::new(bs, 8 + rng.below(64));
+                bm.enable_prefix_caching = enable;
+                bm.watermark_blocks = rng.below(3);
+                // a small pool of shared prefixes to force hits
+                let prefixes: Vec<Vec<u32>> = (0..3)
+                    .map(|i| toks(i, bs * (1 + rng.below(3))))
+                    .collect();
+                let mut live: Vec<(u64, Vec<u32>)> = vec![];
+                let mut next_id = 0u64;
+                for _ in 0..200 {
+                    match rng.below(4) {
+                        0 => {
+                            let mut p =
+                                prefixes[rng.below(3)].clone();
+                            p.extend(toks(
+                                90 + next_id as u32,
+                                1 + rng.below(2 * bs),
+                            ));
+                            if bm.allocate(next_id, &p) == Alloc::Ok {
+                                live.push((next_id, p));
+                            } else {
+                                bm.release(next_id); // no-op: not held
+                            }
+                            next_id += 1;
                         }
-                        next_id += 1;
-                    }
-                    1 => {
-                        if !live.is_empty() {
-                            let i = rng.below(live.len());
-                            let (id, ref mut t) = live[i];
-                            *t += 1;
-                            let t = *t;
-                            let _ = bm.append_token(id, t);
+                        1 => {
+                            if !live.is_empty() {
+                                let i = rng.below(live.len());
+                                live[i].1.push(7);
+                                let n = live[i].1.len();
+                                let id = live[i].0;
+                                let _ = bm.append_token(id, n);
+                            }
+                        }
+                        2 => {
+                            if !live.is_empty() {
+                                let i = rng.below(live.len());
+                                let (id, p) = &live[i];
+                                bm.register_prefix(*id, p);
+                            }
+                        }
+                        _ => {
+                            if !live.is_empty() {
+                                let i = rng.below(live.len());
+                                let (id, _) = live.swap_remove(i);
+                                bm.release(id);
+                            }
                         }
                     }
-                    _ => {
-                        if !live.is_empty() {
-                            let i = rng.below(live.len());
-                            let (id, _) = live.swap_remove(i);
-                            bm.release(id);
-                        }
-                    }
+                    assert!(bm.check_conservation(),
+                            "conservation violated");
+                    assert!(bm.free_blocks() <= bm.total_blocks);
                 }
-                assert!(bm.check_conservation(), "conservation violated");
-                assert!(bm.free_blocks() <= bm.total_blocks);
-            }
-        });
+                // drain: refcounts return to zero, whole pool free
+                for (id, _) in live {
+                    bm.release(id);
+                }
+                assert!(bm.check_conservation());
+                assert_eq!(bm.free_blocks(), bm.total_blocks);
+            });
+        }
     }
 }

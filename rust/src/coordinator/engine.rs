@@ -5,6 +5,16 @@
 //! first token) or one decode step over the running batch. Preempted
 //! sequences drop their KV and recompute on re-admission (prompt +
 //! generated-so-far re-prefilled), vLLM's recompute policy.
+//!
+//! Prefix caching: sequences the scheduler admitted with a cached prefix
+//! skip recomputing it — the engine copies the stashed host KV rows of
+//! the shared blocks into the sequence's cache and *partially prefills*
+//! from the first uncached token (driving the decode executable over the
+//! suffix, which is mathematically the same causal forward). After any
+//! prefill completes, the engine registers the sequence's newly filled
+//! full blocks back into the cache and stashes their KV rows, keyed by
+//! physical block id, so later admissions can reuse them. Evicted block
+//! ids reported by the block manager drop their stashed rows.
 
 use std::collections::HashMap;
 
@@ -15,7 +25,7 @@ use crate::runtime::kv::{self, SeqKv};
 use crate::runtime::simtp::Deployment;
 use crate::util::rng::Rng;
 
-use super::block_manager::BlockManager;
+use super::block_manager::{BlockManager, CacheStats};
 use super::metrics::Metrics;
 use super::sampler;
 use super::scheduler::{Scheduler, StepPlan};
@@ -29,12 +39,50 @@ pub enum StepOutcome {
     Idle,
 }
 
+/// Copy one full block's rows out of a sequence cache into the stash
+/// layout `[L, 2, block_size, D]` (the `cached_kv` entry format).
+fn stash_block(kvseq: &SeqKv, blk: usize, bs: usize, layers: usize,
+               dim: usize) -> Vec<f32> {
+    let mut rows = vec![0.0f32; layers * 2 * bs * dim];
+    for layer in 0..layers {
+        for lane in 0..2 {
+            for p in 0..bs {
+                let dst = (((layer * 2) + lane) * bs + p) * dim;
+                rows[dst..dst + dim]
+                    .copy_from_slice(kvseq.row(layer, lane, blk * bs + p));
+            }
+        }
+    }
+    rows
+}
+
+/// Inverse of [`stash_block`]: load stashed rows into block `blk` of a
+/// sequence cache (the same layout arithmetic, so the two can't drift).
+fn unstash_block(kvseq: &mut SeqKv, blk: usize, bs: usize, layers: usize,
+                 dim: usize, rows: &[f32]) {
+    debug_assert_eq!(rows.len(), layers * 2 * bs * dim);
+    for layer in 0..layers {
+        for lane in 0..2 {
+            for p in 0..bs {
+                let src = (((layer * 2) + lane) * bs + p) * dim;
+                kvseq
+                    .row_mut(layer, lane, blk * bs + p)
+                    .copy_from_slice(&rows[src..src + dim]);
+            }
+        }
+    }
+}
+
 pub struct Engine {
     pub dep: Deployment,
     pub ecfg: EngineConfig,
     sched: Scheduler,
     seqs: HashMap<u64, Sequence>,
     kvs: HashMap<u64, SeqKv>,
+    /// Host KV rows of cached blocks, keyed by physical block id; layout
+    /// `[L, 2, block_size, D]`. Entries live as long as the block stays
+    /// cached (dropped on eviction).
+    cached_kv: HashMap<usize, Vec<f32>>,
     finished: Vec<Sequence>,
     pub metrics: Metrics,
     next_id: u64,
@@ -55,6 +103,7 @@ impl Engine {
             ecfg,
             seqs: HashMap::new(),
             kvs: HashMap::new(),
+            cached_kv: HashMap::new(),
             finished: vec![],
             metrics: Metrics::new(),
             next_id: 0,
@@ -84,6 +133,7 @@ impl Engine {
             ecfg,
             seqs: HashMap::new(),
             kvs: HashMap::new(),
+            cached_kv: HashMap::new(),
             finished: vec![],
             metrics: Metrics::new(),
             next_id: 0,
@@ -135,6 +185,10 @@ impl Engine {
     pub fn kv_occupancy(&self) -> f64 {
         self.sched.bm.occupancy()
     }
+    /// Block-level prefix-cache counters (hits, shared blocks, evictions).
+    pub fn cache_stats(&self) -> CacheStats {
+        self.sched.bm.stats.clone()
+    }
     pub fn take_finished(&mut self) -> Vec<Sequence> {
         std::mem::take(&mut self.finished)
     }
@@ -142,6 +196,10 @@ impl Engine {
     /// Execute one scheduler step.
     pub fn step(&mut self) -> Result<StepOutcome> {
         let plan = self.sched.plan(&self.seqs);
+        // blocks whose cached content was reclaimed lose their rows
+        for b in self.sched.bm.take_evicted() {
+            self.cached_kv.remove(&b);
+        }
         // drop KV of anything the scheduler preempted
         for id in self.sched.preempted.clone() {
             self.kvs.remove(&id);
@@ -153,57 +211,169 @@ impl Engine {
         }
         match plan {
             StepPlan::Idle => Ok(StepOutcome::Idle),
-            StepPlan::Prefill { ids } => self.do_prefill(ids),
+            StepPlan::Prefill { ids, cached } => {
+                self.do_prefill(ids, cached)
+            }
             StepPlan::Decode { ids } => self.do_decode(ids),
         }
     }
 
-    fn do_prefill(&mut self, ids: Vec<u64>) -> Result<StepOutcome> {
-        // recompute semantics: preempted sequences re-prefill prompt +
-        // generated output
-        let prompts: Vec<Vec<u32>> = ids
-            .iter()
-            .map(|id| {
-                let s = &self.seqs[id];
-                let mut p = s.prompt.clone();
-                p.extend(&s.output);
-                p
-            })
-            .collect();
-        let views: Vec<&[u32]> = prompts.iter().map(|p| &p[..]).collect();
-        let res = self.dep.prefill(&views)?;
+    fn do_prefill(&mut self, ids: Vec<u64>, cached: Vec<usize>)
+        -> Result<StepOutcome> {
         let cfg = self.dep.runtime.cfg.clone();
         let vocab = cfg.vocab;
-        // build KV for each admitted sequence
-        let lens: Vec<usize> = prompts.iter().map(|p| p.len()).collect();
-        let mut new_kvs: Vec<SeqKv> =
-            ids.iter().map(|_| SeqKv::new(&cfg)).collect();
-        {
-            let mut refs: Vec<&mut SeqKv> = new_kvs.iter_mut().collect();
-            kv::fill_prefill_rows(&mut refs, &cfg, res.batch, res.seq,
-                                  &res.kv_new, &lens);
+        // recompute semantics: preempted sequences re-prefill prompt +
+        // generated output
+        let full: Vec<Vec<u32>> =
+            ids.iter().map(|id| self.seqs[id].full_tokens()).collect();
+        let cold: Vec<usize> =
+            (0..ids.len()).filter(|&i| cached[i] == 0).collect();
+        let warm: Vec<usize> =
+            (0..ids.len()).filter(|&i| cached[i] > 0).collect();
+
+        // ---- cold sequences: one batched prefill over full prompts
+        if !cold.is_empty() {
+            let views: Vec<&[u32]> =
+                cold.iter().map(|&i| &full[i][..]).collect();
+            let res = self.dep.prefill(&views)?;
+            let lens: Vec<usize> =
+                cold.iter().map(|&i| full[i].len()).collect();
+            let mut new_kvs: Vec<SeqKv> =
+                cold.iter().map(|_| SeqKv::new(&cfg)).collect();
+            {
+                let mut refs: Vec<&mut SeqKv> =
+                    new_kvs.iter_mut().collect();
+                kv::fill_prefill_rows(&mut refs, &cfg, res.batch, res.seq,
+                                      &res.kv_new, &lens);
+            }
+            for ((b, &i), kvseq) in
+                cold.iter().enumerate().zip(new_kvs)
+            {
+                let id = ids[i];
+                self.kvs.insert(id, kvseq);
+                self.register_filled_blocks(id, &full[i]);
+                let last = lens[b] - 1;
+                let row =
+                    &res.logits[(b * res.seq + last) * vocab..][..vocab];
+                self.sample_first_token(id, 0, row);
+            }
+            self.metrics.prefill_tokens_executed +=
+                lens.iter().sum::<usize>();
         }
-        for ((b, id), kvseq) in ids.iter().enumerate().zip(new_kvs) {
-            self.kvs.insert(*id, kvseq);
-            let last = lens[b] - 1;
-            let row =
-                &res.logits[(b * res.seq + last) * vocab..][..vocab];
-            let seq = self.seqs.get_mut(id).unwrap();
-            seq.state = SeqState::Running;
-            let mut rng = Rng::new(
-                self.seed
-                    ^ seq.params.seed.wrapping_mul(0x9e3779b97f4a7c15)
-                    ^ (seq.id << 32)
-                    ^ seq.output.len() as u64,
-            );
-            let tok = sampler::sample(row, &seq.params, &mut rng);
-            seq.record_token(tok);
-            self.finish_if_done(*id);
+
+        // ---- warm sequences: copy the cached prefix rows, then prefill
+        // only the suffix by driving the decode executable token by token
+        // (the same causal forward, starting at the first uncached
+        // position)
+        let bucket = self
+            .dep
+            .runtime
+            .decode_batches()
+            .into_iter()
+            .find(|&b| b >= 1)
+            .unwrap_or(1);
+        for &i in &warm {
+            let id = ids[i];
+            let toks = &full[i];
+            let c = cached[i];
+            let mut kvseq = self.kv_from_cached_prefix(id, c);
+            let mut last_logits: Vec<f32> = vec![];
+            // assemble the padded device batch once; per-token we only
+            // scatter the one new row into slot b=0 (mirrors the
+            // assemble_batch layout) instead of re-copying MAX rows
+            let lane_sz = cfg.max_len * cfg.dim;
+            let mut kv_batch = kv::assemble_batch(&[&kvseq], &cfg, bucket);
+            for pos in c..toks.len() {
+                let res = self.dep.decode(&[toks[pos]], &[kvseq.len],
+                                          &kv_batch)?;
+                let row_pos = kvseq.len;
+                {
+                    let mut refs = [&mut kvseq];
+                    kv::append_decode_rows(&mut refs, &cfg, res.batch,
+                                           &res.kv_new);
+                }
+                for layer in 0..cfg.layers {
+                    for lane in 0..2 {
+                        // kv_new is [L, 2, B, 1, D], our row is b = 0
+                        let src =
+                            ((layer * 2) + lane) * res.batch * cfg.dim;
+                        let dst = (((layer * 2) + lane) * bucket)
+                            * lane_sz
+                            + row_pos * cfg.dim;
+                        kv_batch[dst..dst + cfg.dim].copy_from_slice(
+                            &res.kv_new[src..src + cfg.dim],
+                        );
+                    }
+                }
+                if pos + 1 == toks.len() {
+                    last_logits = res.logits[..vocab].to_vec();
+                }
+            }
+            self.kvs.insert(id, kvseq);
+            self.register_filled_blocks(id, toks);
+            self.sample_first_token(id, c, &last_logits);
+            self.metrics.prefill_tokens_executed += toks.len() - c;
+            self.metrics.cached_prefix_tokens += c;
         }
+
         self.metrics.prefill_steps += 1;
         self.metrics.batch_sizes.push(ids.len() as f64);
         self.metrics.kv_occupancy.push(self.sched.bm.occupancy());
         Ok(StepOutcome::Prefilled(ids.len()))
+    }
+
+    /// A fresh SeqKv pre-loaded with the stashed rows of the sequence's
+    /// `cached_tokens`-long shared prefix (whole blocks by construction).
+    fn kv_from_cached_prefix(&self, id: u64, cached_tokens: usize)
+        -> SeqKv {
+        let cfg = &self.dep.runtime.cfg;
+        let bs = self.sched.bm.block_size;
+        debug_assert_eq!(cached_tokens % bs, 0);
+        let table =
+            self.sched.bm.table(id).expect("admitted seq has a table");
+        let mut kvseq = SeqKv::new(cfg);
+        for blk in 0..cached_tokens / bs {
+            let rows = &self.cached_kv[&table[blk]];
+            unstash_block(&mut kvseq, blk, bs, cfg.layers, cfg.dim, rows);
+        }
+        kvseq.len = cached_tokens;
+        kvseq
+    }
+
+    /// Register this sequence's full blocks into the prefix cache and
+    /// stash their freshly built KV rows (called right after prefill, so
+    /// the rows exist and the sequence still owns its table).
+    fn register_filled_blocks(&mut self, id: u64, tokens: &[u32]) {
+        let newly = self.sched.bm.register_prefix(id, tokens);
+        if newly.is_empty() {
+            return;
+        }
+        let bs = self.sched.bm.block_size;
+        let (layers, dim) =
+            (self.dep.runtime.cfg.layers, self.dep.runtime.cfg.dim);
+        let kvseq = &self.kvs[&id];
+        for (blk, block_id) in newly {
+            let rows = stash_block(kvseq, blk, bs, layers, dim);
+            self.cached_kv.insert(block_id, rows);
+        }
+    }
+
+    /// Post-prefill bookkeeping shared by the cold and warm paths: mark
+    /// running, record the cache coverage, sample the first token.
+    fn sample_first_token(&mut self, id: u64, cached_len: usize,
+                          row: &[f32]) {
+        let seq = self.seqs.get_mut(&id).unwrap();
+        seq.state = SeqState::Running;
+        seq.cached_prefix_len = cached_len;
+        let mut rng = Rng::new(
+            self.seed
+                ^ seq.params.seed.wrapping_mul(0x9e3779b97f4a7c15)
+                ^ (seq.id << 32)
+                ^ seq.output.len() as u64,
+        );
+        let tok = sampler::sample(row, &seq.params, &mut rng);
+        seq.record_token(tok);
+        self.finish_if_done(id);
     }
 
     fn do_decode(&mut self, ids: Vec<u64>) -> Result<StepOutcome> {

@@ -1,5 +1,6 @@
 //! Engine metrics: throughput, time-to-first-token, inter-token latency,
-//! KV occupancy, preemption counts.
+//! KV occupancy, preemption counts, and prefix-cache savings (prefill
+//! tokens actually executed vs. served from cached blocks).
 
 use std::time::Instant;
 
@@ -17,6 +18,12 @@ pub struct Metrics {
     pub prefill_steps: usize,
     pub decode_steps: usize,
     pub preemptions: usize,
+    /// Prefill tokens actually run through the model (cache hits skip
+    /// theirs; recompute-preemption re-runs its share).
+    pub prefill_tokens_executed: usize,
+    /// Prompt tokens served from shared cache blocks instead of
+    /// recomputed.
+    pub cached_prefix_tokens: usize,
     pub ttft_s: Accum,
     pub inter_token_s: Accum,
     pub e2e_s: Accum,
@@ -79,6 +86,8 @@ impl Metrics {
             mean_batch: self.batch_sizes.mean(),
             mean_kv_occupancy: self.kv_occupancy.mean(),
             preemptions: self.preemptions,
+            prefill_tokens_executed: self.prefill_tokens_executed,
+            cached_prefix_tokens: self.cached_prefix_tokens,
         }
     }
 }
@@ -95,6 +104,8 @@ pub struct MetricsReport {
     pub mean_batch: f64,
     pub mean_kv_occupancy: f64,
     pub preemptions: usize,
+    pub prefill_tokens_executed: usize,
+    pub cached_prefix_tokens: usize,
 }
 
 impl MetricsReport {
@@ -113,6 +124,10 @@ impl MetricsReport {
             self.ttft.p50 * 1e3, self.ttft.p99 * 1e3,
             self.inter_token.p50 * 1e3, self.inter_token.p99 * 1e3,
             self.e2e.p50 * 1e3
+        );
+        println!(
+            "[{label}] prefill tokens executed={} cached={}",
+            self.prefill_tokens_executed, self.cached_prefix_tokens
         );
     }
 }

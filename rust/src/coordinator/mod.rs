@@ -2,14 +2,31 @@
 //!
 //! * [`sequence`] — request/sequence state machine.
 //! * [`block_manager`] — paged KV-cache accounting: ref-counted blocks
-//!   over a fixed device pool, watermark admission, preemption support.
+//!   over a fixed device pool, watermark admission, preemption support,
+//!   and content-hash prefix caching (shared full blocks, LRU eviction).
 //! * [`scheduler`] — continuous batching: FCFS waiting queue, prefill
-//!   admission under a token budget, decode batch formation, preemption
-//!   under KV pressure (recompute policy).
+//!   admission under a token budget (cache hits only budget the tokens
+//!   past the hit), decode batch formation, preemption under KV
+//!   pressure (recompute policy).
 //! * [`sampler`] — greedy / temperature / top-k sampling, seeded.
 //! * [`engine`] — the step loop tying scheduler → runtime → sampler →
-//!   sequence updates together.
-//! * [`metrics`] — TTFT / per-token latency / throughput accounting.
+//!   sequence updates together; partially prefills from the first
+//!   uncached token and registers filled blocks back into the cache.
+//! * [`metrics`] — TTFT / per-token latency / throughput / cache-savings
+//!   accounting.
+//!
+//! # Prefix-cache design (across the three modules)
+//!
+//! A full block's identity is the chained hash of its token content
+//! (`block_manager::block_hash`), so equal keys mean equal
+//! position-aligned prefixes. Only full blocks are ever cached or
+//! shared; the tail partial block is always private, and a hit never
+//! covers the entire prompt (at least one token is recomputed for fresh
+//! sampling logits) — the copy-on-write boundary. Cached blocks with no
+//! live references are *evictable* free capacity reclaimed LRU. The
+//! engine stashes each cached block's host KV rows by physical block id
+//! and copies them into a new sequence's cache on a hit, so reuse skips
+//! real prefill compute, not just accounting.
 
 pub mod block_manager;
 pub mod engine;

@@ -3,10 +3,16 @@
 //! * FCFS waiting queue; prefill takes priority when new sequences can be
 //!   admitted (block-manager watermark + token budget + a free running
 //!   slot), otherwise the running set decodes one step as a batch.
+//! * Admission consults the prefix cache: a sequence whose leading full
+//!   blocks are cached shares them (refcounted) instead of allocating,
+//!   and only the tokens past the hit count against the prefill token
+//!   budget — so warm traffic admits in larger batches. The per-sequence
+//!   hit length rides along in [`StepPlan::Prefill`] for the engine's
+//!   partial prefill.
 //! * KV growth for every scheduled decode is reserved up front; on
 //!   pressure the *most recently admitted* running sequence is preempted
-//!   (LIFO, vLLM's recompute policy), releasing its blocks and requeueing
-//!   it at the waiting front.
+//!   (LIFO, vLLM's recompute policy), releasing its blocks (shared ones
+//!   just drop a reference) and requeueing it at the waiting front.
 //!
 //! The scheduler owns sequence *ids* only; token/KV state lives in the
 //! engine maps.
@@ -23,7 +29,9 @@ use super::sequence::SeqState;
 /// What the engine should execute this step.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum StepPlan {
-    Prefill { ids: Vec<u64> },
+    /// `cached[i]` is the prompt-prefix length of `ids[i]` already
+    /// covered by shared cache blocks (prefill starts past it).
+    Prefill { ids: Vec<u64>, cached: Vec<usize> },
     Decode { ids: Vec<u64> },
     Idle,
 }
@@ -39,7 +47,8 @@ pub struct Scheduler {
 }
 
 impl Scheduler {
-    pub fn new(cfg: EngineConfig, bm: BlockManager) -> Scheduler {
+    pub fn new(cfg: EngineConfig, mut bm: BlockManager) -> Scheduler {
+        bm.enable_prefix_caching = cfg.enable_prefix_caching;
         Scheduler { cfg, bm, waiting: VecDeque::new(), running: vec![],
                     preempted: vec![] }
     }
@@ -82,29 +91,35 @@ impl Scheduler {
         let slots = self.cfg.max_running.saturating_sub(self.running.len());
         if !self.waiting.is_empty() && slots > 0 {
             let mut ids = vec![];
+            let mut cached = vec![];
             let mut tokens = 0usize;
             while let Some(&id) = self.waiting.front() {
                 if ids.len() >= max_prefill_batch.min(slots) {
                     break;
                 }
-                let seq = &seqs[&id];
-                let need = seq.context_len();
+                let toks = seqs[&id].full_tokens();
+                // only tokens past the cached prefix cost prefill compute
+                let hit = self.bm.cached_prefix_tokens(&toks);
                 if !ids.is_empty()
-                    && tokens + need > self.cfg.max_batch_tokens
+                    && tokens + (toks.len() - hit)
+                        > self.cfg.max_batch_tokens
                 {
                     break;
                 }
-                if !self.bm.can_admit(need) {
-                    break; // FCFS head-of-line: don't skip ahead
+                // allocate doubles as the admission check (one hash
+                // walk); on NoSpace keep FCFS head-of-line order —
+                // don't skip ahead
+                if self.bm.allocate(id, &toks) == Alloc::NoSpace {
+                    break;
                 }
-                assert_eq!(self.bm.allocate(id, need), Alloc::Ok);
-                tokens += need;
+                tokens += toks.len() - hit;
                 ids.push(id);
+                cached.push(hit);
                 self.waiting.pop_front();
             }
             if !ids.is_empty() {
                 self.running.extend(&ids);
-                return StepPlan::Prefill { ids };
+                return StepPlan::Prefill { ids, cached };
             }
         }
         // ---- decode the running set (reserve growth; preempt on pressure)
@@ -190,7 +205,10 @@ mod tests {
             s.add(id);
         }
         match s.plan(&seqs) {
-            StepPlan::Prefill { ids } => assert_eq!(ids, vec![0, 1, 2]),
+            StepPlan::Prefill { ids, cached } => {
+                assert_eq!(ids, vec![0, 1, 2]);
+                assert_eq!(cached, vec![0, 0, 0]); // cold cache
+            }
             p => panic!("want prefill, got {p:?}"),
         }
         match s.plan(&seqs) {
@@ -208,9 +226,59 @@ mod tests {
         }
         match s.plan(&seqs) {
             // 30 + 30 <= 64 but +30 more would exceed
-            StepPlan::Prefill { ids } => assert_eq!(ids.len(), 2),
+            StepPlan::Prefill { ids, .. } => assert_eq!(ids.len(), 2),
             p => panic!("{p:?}"),
         }
+    }
+
+    #[test]
+    fn cached_prefix_relaxes_token_budget() {
+        // register a 32-token prompt's blocks via a first sequence, then
+        // two identical prompts admit together under a budget their full
+        // lengths would blow (only post-hit tokens are budgeted).
+        let shared: Vec<u32> = (0..32).collect();
+        let mut seqs: HashMap<u64, Sequence> = (0..3u64)
+            .map(|id| {
+                (id,
+                 Sequence::new(id, shared.clone(),
+                               SamplingParams::default()))
+            })
+            .collect();
+        let mut s = Scheduler::new(
+            EngineConfig {
+                max_running: 4,
+                max_batch_tokens: 40,
+                decode_batches: vec![1, 2, 4],
+                prefill_buckets: vec![(4, 32)],
+                ..Default::default()
+            },
+            BlockManager::new(16, 64),
+        );
+        s.add(0);
+        match s.plan(&seqs) {
+            StepPlan::Prefill { ids, cached } => {
+                assert_eq!(ids, vec![0]);
+                assert_eq!(cached, vec![0]);
+            }
+            p => panic!("{p:?}"),
+        }
+        // engine side: register the filled blocks, then finish
+        let toks = seqs[&0].full_tokens();
+        assert_eq!(s.bm.register_prefix(0, &toks).len(), 2);
+        seqs.get_mut(&0).unwrap().state = SeqState::Running;
+        s.on_finished(0);
+        s.add(1);
+        s.add(2);
+        match s.plan(&seqs) {
+            StepPlan::Prefill { ids, cached } => {
+                // 16 + 16 post-hit tokens <= 40; full 32 + 32 would not fit
+                assert_eq!(ids, vec![1, 2]);
+                assert_eq!(cached, vec![16, 16]);
+            }
+            p => panic!("{p:?}"),
+        }
+        assert!(s.bm.check_conservation());
+        assert_eq!(s.bm.table(1).unwrap()[0], s.bm.table(2).unwrap()[0]);
     }
 
     #[test]
@@ -233,7 +301,7 @@ mod tests {
         s.add(1);
         // both admitted: 4 + 4 = 8 of 9 blocks
         match s.plan(&seqs) {
-            StepPlan::Prefill { ids } => assert_eq!(ids.len(), 2),
+            StepPlan::Prefill { ids, .. } => assert_eq!(ids.len(), 2),
             p => panic!("{p:?}"),
         }
         // grow both: each wants a new block at ctx 17 -> only 1 free
@@ -290,7 +358,7 @@ mod tests {
                     next += 1;
                 }
                 match s.plan(&seqs) {
-                    StepPlan::Prefill { ids } => {
+                    StepPlan::Prefill { ids, .. } => {
                         assert!(!ids.is_empty());
                         for id in ids {
                             seqs.get_mut(&id).unwrap().state =

@@ -55,6 +55,9 @@ pub struct Sequence {
     pub finish: Option<FinishReason>,
     /// Times a preemption evicted this sequence (recompute policy).
     pub preemptions: usize,
+    /// Prompt tokens served from the prefix cache at the most recent
+    /// admission (0 when the prefill was fully computed).
+    pub cached_prefix_len: usize,
     pub arrived: Instant,
     pub first_token_at: Option<Instant>,
     pub finished_at: Option<Instant>,
@@ -73,6 +76,7 @@ impl Sequence {
             state: SeqState::Waiting,
             finish: None,
             preemptions: 0,
+            cached_prefix_len: 0,
             arrived: Instant::now(),
             first_token_at: None,
             finished_at: None,
@@ -83,6 +87,14 @@ impl Sequence {
     /// Total tokens with KV resident once running (prompt + generated).
     pub fn context_len(&self) -> usize {
         self.prompt.len() + self.output.len()
+    }
+
+    /// Prompt plus generated tokens — the content (re)prefilled on
+    /// admission (recompute policy) and hashed by the prefix cache.
+    pub fn full_tokens(&self) -> Vec<u32> {
+        let mut t = self.prompt.clone();
+        t.extend(&self.output);
+        t
     }
 
     /// The token to feed the next decode step (last generated, or last

@@ -61,6 +61,24 @@ pub fn prompt_tokens(rng: &mut Rng, len: usize, vocab: usize) -> Vec<u32> {
         .collect()
 }
 
+/// Shared-prefix workload: `n` prompts that all start with the same
+/// `prefix_len` tokens (a system prompt / few-shot template) followed by
+/// a per-request random suffix — the traffic shape prefix caching is
+/// built for. Deterministic in `seed`.
+pub fn shared_prefix_prompts(seed: u64, n: usize, prefix_len: usize,
+                             suffix_len: usize, vocab: usize)
+    -> Vec<Vec<u32>> {
+    let mut rng = Rng::new(seed ^ 0x5aed_c0de);
+    let prefix = prompt_tokens(&mut rng, prefix_len, vocab);
+    (0..n)
+        .map(|_| {
+            let mut p = prefix.clone();
+            p.extend(prompt_tokens(&mut rng, suffix_len, vocab));
+            p
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -83,6 +101,24 @@ mod tests {
         assert!(a.iter().all(|r| r.prompt_tokens <= 64
             && r.output_tokens <= 32 && r.output_tokens >= 1));
         assert_eq!(a[50].prompt_tokens, b[50].prompt_tokens);
+    }
+
+    #[test]
+    fn shared_prefix_shape() {
+        let a = shared_prefix_prompts(3, 8, 24, 6, 512);
+        let b = shared_prefix_prompts(3, 8, 24, 6, 512);
+        assert_eq!(a, b); // deterministic
+        assert_eq!(a.len(), 8);
+        for p in &a {
+            assert_eq!(p.len(), 30);
+            assert_eq!(p[..24], a[0][..24]); // common prefix
+            assert!(p.iter().all(|&t| t >= 1 && (t as usize) < 512));
+        }
+        // suffixes differ across requests
+        assert_ne!(a[0][24..], a[1][24..]);
+        // different seed, different prefix
+        let c = shared_prefix_prompts(4, 2, 24, 6, 512);
+        assert_ne!(c[0][..24], a[0][..24]);
     }
 
     #[test]

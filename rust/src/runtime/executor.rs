@@ -10,6 +10,12 @@ use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
+// Without the `xla` feature the PJRT bindings are replaced by a stub
+// that errors at runtime (see `super::pjrt_stub`); PJRT-dependent tests
+// and benches already self-skip when artifacts are missing.
+#[cfg(not(feature = "xla"))]
+use super::pjrt_stub as xla;
+
 use crate::config::{ModelConfig, Precision};
 use crate::model::store::{Entry, WeightStore};
 use crate::model::{weight_names, weight_names_w4a16};

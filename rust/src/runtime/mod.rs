@@ -21,4 +21,6 @@ pub mod executor;
 pub mod kv;
 pub mod manifest;
 pub mod perfmodel;
+#[cfg(not(feature = "xla"))]
+pub mod pjrt_stub;
 pub mod simtp;

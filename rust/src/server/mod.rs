@@ -6,8 +6,15 @@
 //! ```text
 //! -> {"prompt": [1,2,3], "max_new_tokens": 8, "temperature": 0.0}
 //! <- {"id": 0, "tokens": [4,5,...], "finish": "max_tokens",
-//!     "ttft_ms": 12.3, "e2e_ms": 80.1}
+//!     "ttft_ms": 12.3, "e2e_ms": 80.1, "cached_tokens": 0}
 //! ```
+//!
+//! `prompt` entries must be non-negative integer token ids; malformed
+//! entries reject the whole request with an `{"error": ...}` line (they
+//! are never silently coerced). `cached_tokens` reports how many prompt
+//! tokens were served from the engine's shared prefix cache (see
+//! [`crate::coordinator`] for the design: chained content hashes over
+//! full KV blocks, refcounted sharing, CoW tail block, LRU eviction).
 //!
 //! Architecture: connection threads parse requests into an inbox; the
 //! engine thread (the only owner of the PJRT runtime, which is not Sync)
@@ -35,13 +42,25 @@ pub struct Request {
 
 pub fn parse_request(line: &str) -> Result<Request> {
     let v = json::parse(line).map_err(|e| anyhow::anyhow!("json: {e}"))?;
-    let prompt: Vec<u32> = v
+    let arr = v
         .get("prompt")
         .as_arr()
-        .context("prompt must be an array of token ids")?
-        .iter()
-        .map(|t| t.as_usize().unwrap_or(0) as u32)
-        .collect();
+        .context("prompt must be an array of token ids")?;
+    let mut prompt = Vec::with_capacity(arr.len());
+    for (i, t) in arr.iter().enumerate() {
+        let f = t.as_f64().with_context(|| {
+            format!("prompt[{i}] must be a number, not {t}")
+        })?;
+        if !f.is_finite() || f < 0.0 || f.fract() != 0.0
+            || f > u32::MAX as f64
+        {
+            anyhow::bail!(
+                "prompt[{i}] must be a non-negative integer token id \
+                 (got {f})"
+            );
+        }
+        prompt.push(f as u32);
+    }
     let mut params = SamplingParams::default();
     if let Some(m) = v.get("max_new_tokens").as_usize() {
         params.max_new_tokens = m;
@@ -85,6 +104,7 @@ pub fn response_json(id: u64, seq: &Sequence) -> String {
         ("finish", Value::str(finish)),
         ("ttft_ms", Value::num(ttft_ms)),
         ("e2e_ms", Value::num(e2e_ms)),
+        ("cached_tokens", Value::num(seq.cached_prefix_len as f64)),
     ])
     .to_string()
 }
@@ -312,16 +332,51 @@ mod tests {
     }
 
     #[test]
+    fn parse_rejects_malformed_prompt_entries() {
+        // these used to be silently coerced to token 0
+        assert!(parse_request(r#"{"prompt":[1,"x",3]}"#).is_err());
+        assert!(parse_request(r#"{"prompt":[1,null]}"#).is_err());
+        assert!(parse_request(r#"{"prompt":[1.5]}"#).is_err());
+        assert!(parse_request(r#"{"prompt":[-3]}"#).is_err());
+        assert!(parse_request(r#"{"prompt":[1e12]}"#).is_err());
+        assert!(parse_request(r#"{"prompt":[[1]]}"#).is_err());
+        assert!(parse_request(r#"{"prompt":7}"#).is_err());
+        // boundary values that must still parse
+        let r = parse_request(r#"{"prompt":[0, 4294967295]}"#).unwrap();
+        assert_eq!(r.prompt, vec![0, u32::MAX]);
+    }
+
+    #[test]
+    fn parse_request_roundtrip() {
+        // a request built the way `Client::request` builds it survives
+        // serialize -> parse unchanged
+        let prompt: Vec<u32> = vec![5, 0, 917, 64000];
+        let req = Value::obj(vec![
+            ("prompt",
+             Value::Arr(prompt.iter().map(|&t| Value::num(t as f64))
+                 .collect())),
+            ("max_new_tokens", Value::num(9.0)),
+            ("temperature", Value::num(0.25)),
+        ]);
+        let r = parse_request(&req.to_string()).unwrap();
+        assert_eq!(r.prompt, prompt);
+        assert_eq!(r.params.max_new_tokens, 9);
+        assert_eq!(r.params.temperature, 0.25);
+    }
+
+    #[test]
     fn response_shape() {
         use crate::coordinator::sequence::{FinishReason, Sequence};
         let mut s =
             Sequence::new(3, vec![1], SamplingParams::default());
         s.record_token(7);
+        s.cached_prefix_len = 4;
         s.finish(FinishReason::MaxTokens);
         let j = response_json(3, &s);
         let v = json::parse(&j).unwrap();
         assert_eq!(v.get("id").as_usize(), Some(3));
         assert_eq!(v.get("finish").as_str(), Some("max_tokens"));
         assert_eq!(v.get("tokens").as_arr().unwrap().len(), 1);
+        assert_eq!(v.get("cached_tokens").as_usize(), Some(4));
     }
 }

@@ -182,6 +182,77 @@ fn preempted_sequences_continue_deterministically() {
 }
 
 #[test]
+fn prefix_cache_golden_identical_streams_fewer_prefill_tokens() {
+    // Determinism golden test: the same seeded request trace through a
+    // cold-cache engine (prefix caching off) and a warm engine (caching
+    // on, requests share a prefix so later ones hit blocks registered
+    // by earlier ones) must emit bit-for-bit identical token streams —
+    // prefix reuse never changes sampling results — while the warm
+    // engine executes strictly fewer prefill tokens.
+    //
+    // Like `preempted_sequences_continue_deterministically` below, this
+    // relies on the prefill and decode executables agreeing at greedy-
+    // argmax level for the same context (the repo's standing recompute
+    // assumption); the cached KV rows themselves are bit-identical
+    // copies of the donor's.
+    let Some(m) = manifest() else { return };
+    let mut rng = sqplus::util::rng::Rng::new(42);
+    let prefix: Vec<u32> =
+        (0..16).map(|_| (1 + rng.below(511)) as u32).collect();
+    let prompts: Vec<Vec<u32>> = (0..6u32)
+        .map(|i| {
+            let mut p = prefix.clone();
+            p.extend((0..4u32).map(|t| (i * 37 + t * 11 + 1) % 512));
+            p
+        })
+        .collect();
+    let run = |enable: bool| {
+        let ecfg = EngineConfig {
+            block_size: 4,
+            enable_prefix_caching: enable,
+            ..Default::default()
+        };
+        let mut eng = fp16_engine(&m, ecfg);
+        let mut outs = vec![];
+        // submit sequentially so later requests can hit the blocks the
+        // earlier ones registered
+        for p in &prompts {
+            let id = eng.submit(
+                p.clone(),
+                SamplingParams { max_new_tokens: 6, ..Default::default() },
+            );
+            eng.run_to_completion(500).unwrap();
+            let fin = eng.take_finished();
+            let seq = fin.into_iter().find(|s| s.id == id).unwrap();
+            outs.push((seq.output.clone(), seq.cached_prefix_len));
+        }
+        let stats = eng.cache_stats();
+        (outs, eng.metrics.prefill_tokens_executed,
+         eng.metrics.cached_prefix_tokens, stats)
+    };
+    let (cold, cold_exec, cold_hit, cold_stats) = run(false);
+    let (warm, warm_exec, warm_hit, warm_stats) = run(true);
+    // identical token streams, bit for bit
+    let cold_tokens: Vec<&Vec<u32>> =
+        cold.iter().map(|(o, _)| o).collect();
+    let warm_tokens: Vec<&Vec<u32>> =
+        warm.iter().map(|(o, _)| o).collect();
+    assert_eq!(cold_tokens, warm_tokens);
+    // the cold engine computed everything; the warm one reused blocks
+    assert_eq!(cold_hit, 0);
+    assert_eq!(cold_stats.hits, 0);
+    assert!(warm_hit > 0, "no cached prefix tokens");
+    assert!(warm_stats.hits > 0);
+    assert!(warm_exec < cold_exec,
+            "warm prefill executed {warm_exec} !< cold {cold_exec}");
+    // every request after the first reported its cached prefix
+    assert_eq!(warm[0].1, 0);
+    for (_, c) in &warm[1..] {
+        assert_eq!(*c, 16, "expected a full shared-prefix hit");
+    }
+}
+
+#[test]
 fn rejects_overlong_prompt() {
     let Some(m) = manifest() else { return };
     let mut eng = fp16_engine(&m, EngineConfig::default());

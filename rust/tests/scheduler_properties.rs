@@ -1,0 +1,273 @@
+//! Randomized-workload property tests over scheduler + block manager —
+//! pure accounting, no PJRT runtime needed, so these run everywhere
+//! (including CI without artifacts).
+//!
+//! Invariants locked down, with and without prefix caching:
+//! * block conservation (`check_conservation`) after every plan;
+//! * no double-free when a sequence is preempted while its prefix
+//!   blocks are shared with other live sequences;
+//! * refcounts return to zero (whole pool free) after all sequences
+//!   finish;
+//! * FCFS admission order, LIFO preemption order.
+
+use std::collections::HashMap;
+
+use sqplus::config::EngineConfig;
+use sqplus::coordinator::block_manager::{Alloc, BlockManager};
+use sqplus::coordinator::scheduler::{Scheduler, StepPlan};
+use sqplus::coordinator::sequence::{
+    SamplingParams, SeqState, Sequence,
+};
+use sqplus::util::prop;
+use sqplus::util::rng::Rng;
+
+/// Deterministic token content for a sequence: one of a few shared
+/// prefixes (to provoke cache hits) plus a unique suffix.
+fn prompt(rng: &mut Rng, prefixes: &[Vec<u32>], uniq: u32) -> Vec<u32> {
+    let mut p = prefixes[rng.below(prefixes.len())].clone();
+    let extra = 1 + rng.below(12);
+    p.extend((0..extra as u32).map(|t| 1000 + uniq * 31 + t));
+    p
+}
+
+/// Drive a scheduler the way the engine does: prefill plans register
+/// their blocks, decode plans record a token, sequences finish at their
+/// token budget, preempted sequences are reset for recompute. Returns
+/// the admission order observed.
+fn drive(
+    s: &mut Scheduler, seqs: &mut HashMap<u64, Sequence>, rng: &mut Rng,
+    steps: usize, submit_total: usize, prefixes: &[Vec<u32>],
+) -> Vec<u64> {
+    let mut next_id = 0u64;
+    let mut admission_order = vec![];
+    // model of the running set in admission order, for LIFO checking
+    let mut running_model: Vec<u64> = vec![];
+    for _ in 0..steps {
+        if next_id < submit_total as u64 && rng.below(2) == 0 {
+            let p = prompt(rng, prefixes, next_id as u32);
+            seqs.insert(
+                next_id,
+                Sequence::new(next_id, p, SamplingParams::default()),
+            );
+            s.add(next_id);
+            next_id += 1;
+        }
+        let plan = s.plan(seqs);
+        // LIFO preemption: victims must come off the back of the
+        // running set, most recently admitted first
+        for &victim in &s.preempted {
+            assert_eq!(
+                running_model.pop(),
+                Some(victim),
+                "preemption not LIFO"
+            );
+            let q = seqs.get_mut(&victim).unwrap();
+            if q.state == SeqState::Running {
+                q.preempt();
+            }
+        }
+        match plan {
+            StepPlan::Prefill { ids, cached } => {
+                assert_eq!(ids.len(), cached.len());
+                for (i, id) in ids.iter().enumerate() {
+                    let toks = seqs[id].full_tokens();
+                    // the hit the scheduler reported is what the block
+                    // manager sees, block-aligned and never the whole
+                    // content
+                    assert_eq!(cached[i] % s.bm.block_size, 0);
+                    assert!(cached[i] < toks.len());
+                    // engine side: mark running, register blocks
+                    seqs.get_mut(id).unwrap().state = SeqState::Running;
+                    s.bm.register_prefix(*id, &toks);
+                    admission_order.push(*id);
+                    running_model.push(*id);
+                }
+            }
+            StepPlan::Decode { ids } => {
+                for id in ids {
+                    assert!(s.bm.holds(id) > 0, "decoding unallocated");
+                    let q = seqs.get_mut(&id).unwrap();
+                    q.record_token(7);
+                    if q.output.len() >= 4 + (id % 5) as usize {
+                        q.finish(
+                            sqplus::coordinator::sequence::FinishReason
+                                ::MaxTokens,
+                        );
+                        s.on_finished(id);
+                        running_model.retain(|&r| r != id);
+                    }
+                }
+            }
+            StepPlan::Idle => {
+                // Idle with fresh preemptions means the scheduler hit
+                // the cannot-make-progress case and dropped the last
+                // victim (a single sequence exceeding the pool); the
+                // engine finishes it with an error.
+                if s.running_len() == 0 {
+                    if let Some(&dropped) = s.preempted.last() {
+                        seqs.get_mut(&dropped).unwrap().state =
+                            SeqState::Finished;
+                        s.on_finished(dropped);
+                    }
+                }
+                if next_id == submit_total as u64 && !s.has_work() {
+                    break;
+                }
+            }
+        }
+        assert!(s.bm.check_conservation(), "conservation violated");
+        assert!(s.running_len() <= s.cfg.max_running);
+        assert!(s.bm.free_blocks() <= s.bm.total_blocks);
+    }
+    admission_order
+}
+
+fn shared_prefixes(bs: usize) -> Vec<Vec<u32>> {
+    (0..3u32)
+        .map(|i| (0..(bs * (1 + i as usize)) as u32)
+            .map(|t| i * 131 + t)
+            .collect())
+        .collect()
+}
+
+#[test]
+fn conservation_and_lifo_under_random_workload() {
+    for enable in [false, true] {
+        prop::check("scheduler conservation+LIFO", 12, |rng| {
+            let bs = 2 + rng.below(6);
+            let mut s = Scheduler::new(
+                EngineConfig {
+                    max_running: 1 + rng.below(6),
+                    max_batch_tokens: 32 + rng.below(96),
+                    decode_batches: vec![1, 2, 4, 8],
+                    prefill_buckets: vec![(4, 64)],
+                    enable_prefix_caching: enable,
+                    ..Default::default()
+                },
+                BlockManager::new(bs, 24 + rng.below(48)),
+            );
+            let mut seqs = HashMap::new();
+            drive(&mut s, &mut seqs, rng, 300, 40, &shared_prefixes(bs));
+        });
+    }
+}
+
+#[test]
+fn refcounts_zero_after_everything_finishes() {
+    for enable in [false, true] {
+        prop::check("drain to empty pool", 12, |rng| {
+            let bs = 2 + rng.below(4);
+            let mut s = Scheduler::new(
+                EngineConfig {
+                    max_running: 2 + rng.below(4),
+                    max_batch_tokens: 128,
+                    decode_batches: vec![1, 2, 4, 8],
+                    prefill_buckets: vec![(4, 64)],
+                    enable_prefix_caching: enable,
+                    ..Default::default()
+                },
+                // ample pool: every sequence can finish
+                BlockManager::new(bs, 128),
+            );
+            let mut seqs = HashMap::new();
+            drive(&mut s, &mut seqs, rng, 2000, 24, &shared_prefixes(bs));
+            assert!(!s.has_work(), "workload did not drain");
+            assert!(s.bm.check_conservation());
+            // cached blocks may remain (evictable), but nothing is
+            // referenced: the whole pool counts as free again
+            assert_eq!(s.bm.free_blocks(), s.bm.total_blocks);
+            for id in seqs.keys() {
+                assert_eq!(s.bm.holds(*id), 0);
+            }
+        });
+    }
+}
+
+#[test]
+fn fcfs_admission_order_without_pressure() {
+    for enable in [false, true] {
+        prop::check("FCFS admission", 8, |rng| {
+            let bs = 2 + rng.below(4);
+            let mut s = Scheduler::new(
+                EngineConfig {
+                    max_running: 4,
+                    max_batch_tokens: 256,
+                    decode_batches: vec![1, 2, 4],
+                    prefill_buckets: vec![(4, 64)],
+                    enable_prefix_caching: enable,
+                    ..Default::default()
+                },
+                BlockManager::new(bs, 512), // no preemption pressure
+            );
+            let mut seqs = HashMap::new();
+            let order = drive(&mut s, &mut seqs, rng, 2000, 20,
+                              &shared_prefixes(bs));
+            assert!(!s.has_work());
+            // without preemption, admission must be submission order
+            let sorted: Vec<u64> = (0..order.len() as u64).collect();
+            assert_eq!(order, sorted, "FCFS violated");
+        });
+    }
+}
+
+#[test]
+fn no_double_free_on_preempt_while_shared() {
+    // A registers its prefix; B and C share it. Preempting B (release)
+    // then finishing C and A must free every block exactly once.
+    let bs = 4;
+    let prefix: Vec<u32> = (0..8).collect();
+    let mk = |id: u64, uniq: u32| {
+        let mut p = prefix.clone();
+        p.extend([100 + uniq, 101 + uniq]);
+        Sequence::new(id, p, SamplingParams::default())
+    };
+    let mut bm = BlockManager::new(bs, 16);
+    bm.watermark_blocks = 0;
+    let a = mk(0, 0).full_tokens();
+    let b = mk(1, 10).full_tokens();
+    let c = mk(2, 20).full_tokens();
+    assert_eq!(bm.allocate(0, &a), Alloc::Ok);
+    bm.register_prefix(0, &a);
+    assert_eq!(bm.allocate(1, &b), Alloc::Ok);
+    assert_eq!(bm.allocate(2, &c), Alloc::Ok);
+    // both B and C share A's two prefix blocks
+    assert_eq!(bm.stats.shared_blocks, 4);
+    assert_eq!(bm.table(0).unwrap()[..2], bm.table(1).unwrap()[..2]);
+    assert!(bm.check_conservation());
+    // preempt B: its shared blocks drop one reference, not freed
+    bm.release(1);
+    assert!(bm.check_conservation());
+    assert_eq!(bm.holds(0), 3);
+    assert_eq!(bm.holds(2), 3);
+    // releasing B again is a no-op, not a second decrement
+    bm.release(1);
+    assert!(bm.check_conservation());
+    bm.release(0);
+    bm.release(2);
+    assert!(bm.check_conservation());
+    assert_eq!(bm.free_blocks(), bm.total_blocks);
+}
+
+#[test]
+fn preempt_while_shared_under_scheduler_pressure() {
+    // End-to-end through the scheduler: tight pool, shared prefixes,
+    // heavy decode growth — exercised with caching on, where preempting
+    // one sharer must never free blocks the other still uses.
+    prop::check("preempt-while-shared", 10, |rng| {
+        let bs = 2 + rng.below(3);
+        let mut s = Scheduler::new(
+            EngineConfig {
+                max_running: 3,
+                max_batch_tokens: 96,
+                decode_batches: vec![1, 2, 4],
+                prefill_buckets: vec![(4, 64)],
+                enable_prefix_caching: true,
+                ..Default::default()
+            },
+            // just enough for ~2 sequences: forces preempt of sharers
+            BlockManager::new(bs, 10 + rng.below(6)),
+        );
+        let mut seqs = HashMap::new();
+        drive(&mut s, &mut seqs, rng, 600, 16, &shared_prefixes(bs));
+    });
+}
