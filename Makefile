@@ -1,0 +1,29 @@
+# Convenience entry points documented in README.md. The Rust crate
+# lives in rust/; the AOT compile path (JAX + Pallas -> HLO text) lives
+# in python/compile and only runs at build time, never while serving.
+
+.PHONY: build test artifacts bench docs fmt
+
+# Tier-1: build + tests with the PJRT stub (no artifacts needed).
+build:
+	cd rust && cargo build --release
+
+test:
+	cd rust && cargo test -q
+
+# AOT-lower every (size, precision, bucket) executable to
+# artifacts/*.hlo.txt + manifest.json. Requires jax on the Python side;
+# afterwards run tier-1 with --features xla to un-skip the PJRT tests.
+artifacts:
+	cd python && python -m compile.aot --out-dir ../artifacts
+
+# Paper-figure regeneration benches (write BENCH_*.json at repo root).
+bench:
+	cd rust && cargo bench --bench micro_quant --bench micro_kernel \
+		--bench micro_scheduler --bench fig7a_throughput
+
+docs:
+	cd rust && RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
+
+fmt:
+	cd rust && cargo fmt --check

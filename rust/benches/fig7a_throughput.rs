@@ -90,6 +90,60 @@ fn run_shared_prefix(
      eng.metrics.cached_prefix_tokens)
 }
 
+/// Chunked-prefill workload: long cold prompts arriving while earlier
+/// requests decode — the traffic shape where unchunked prefill stalls
+/// decodes for whole steps and inflates inter-token latency. Returns
+/// (tokens/s, TTFT p50 in engine steps, chunks, mixed steps, sorted
+/// token streams for the bit-identity check).
+fn run_chunked(
+    m: &sqplus::runtime::manifest::Manifest, s: &common::Setup,
+    deploy_store: &sqplus::model::store::WeightStore, chunked: bool,
+    cap: usize, n_req: usize, prompt: usize, output: usize,
+) -> (f64, f64, usize, usize, Vec<Vec<u32>>) {
+    let rt = ModelRuntime::load(m, &s.cfg.name, Precision::W4a16,
+                                deploy_store)
+        .unwrap();
+    rt.warmup().unwrap();
+    let dep = Deployment::single(rt, GpuProfile::a100_40g());
+    let ecfg = EngineConfig {
+        enable_chunked_prefill: chunked,
+        max_prefill_chunk: cap,
+        ..Default::default()
+    };
+    let mut eng = Engine::new(dep, ecfg);
+    let mut rng = sqplus::util::rng::Rng::new(23);
+    let prompts: Vec<Vec<u32>> = (0..n_req)
+        .map(|_| trace::prompt_tokens(&mut rng, prompt, s.cfg.vocab))
+        .collect();
+    let t0 = std::time::Instant::now();
+    // staggered submission: half up front, half mid-flight so prefill
+    // chunks and decodes contend inside the same steps
+    for p in &prompts[..n_req / 2] {
+        eng.submit(p.clone(), SamplingParams {
+            max_new_tokens: output,
+            ..Default::default()
+        });
+    }
+    for _ in 0..3 {
+        let _ = eng.step();
+    }
+    for p in &prompts[n_req / 2..] {
+        eng.submit(p.clone(), SamplingParams {
+            max_new_tokens: output,
+            ..Default::default()
+        });
+    }
+    eng.run_to_completion(200_000).unwrap();
+    let tput = eng.metrics.output_tokens as f64
+        / t0.elapsed().as_secs_f64();
+    let rep = eng.metrics.report();
+    let mut fin = eng.take_finished();
+    fin.sort_by_key(|q| q.id);
+    let streams = fin.into_iter().map(|q| q.output).collect();
+    (tput, rep.ttft_steps.p50, rep.prefill_chunks, rep.mixed_steps,
+     streams)
+}
+
 fn main() {
     let Some(man) = common::manifest() else { return };
     let size = common::bench_sizes().first().cloned()
@@ -167,6 +221,62 @@ fn main() {
     rep.metric("output_tok_per_s_cached", tput_warm);
     rep.metric("tput_speedup", tput_warm / tput_cold.max(1e-9));
     if let Err(e) = rep.write() {
+        eprintln!("warning: BENCH_serve.json not written: {e}");
+    }
+
+    // chunked-prefill serving mode: long prompts + staggered arrivals;
+    // the same trace must stream identically for every chunking, while
+    // chunked runs interleave decodes with prefill chunks
+    let (n_req3, prompt3, output3) = (10usize, 48usize, 16usize);
+    let mut t4 = Table::new(
+        &format!(
+            "Figure 7a chunked prefill ({size}, SQ+ W4A16, {n_req3} \
+             reqs, prompt {prompt3}, output {output3})"
+        ),
+        &["mode", "output tok/s", "ttft p50 (steps)", "chunks",
+          "mixed steps"],
+    );
+    let mut golden: Option<Vec<Vec<u32>>> = None;
+    let mut chunk_rows = vec![];
+    for (label, chunked, cap) in [
+        ("unchunked (legacy)", false, 0usize),
+        ("chunked ∞", true, 0),
+        ("chunked 32", true, 32),
+        ("chunked 17", true, 17),
+    ] {
+        let (tput, ttft_steps, chunks, mixed, streams) = run_chunked(
+            &man, &s, sqp.deploy.as_ref().unwrap(), chunked, cap,
+            n_req3, prompt3, output3,
+        );
+        match &golden {
+            None => golden = Some(streams),
+            Some(g) => assert_eq!(
+                g, &streams,
+                "token streams changed under chunking mode {label}"
+            ),
+        }
+        t4.row(&[label.into(), format!("{tput:.1}"),
+                 format!("{ttft_steps:.1}"), chunks.to_string(),
+                 mixed.to_string()]);
+        chunk_rows.push((label, tput, ttft_steps, chunks, mixed));
+    }
+    t4.print();
+    let mut rep2 = JsonReport::at("BENCH_serve.json",
+                                  "fig7a_chunked_prefill");
+    rep2.metric("n_requests", n_req3 as f64);
+    rep2.metric("prompt_tokens", prompt3 as f64);
+    rep2.metric("output_tokens", output3 as f64);
+    for (label, tput, ttft_steps, chunks, mixed) in chunk_rows {
+        let key: String = label
+            .chars()
+            .map(|c| if c.is_alphanumeric() { c } else { '_' })
+            .collect();
+        rep2.metric(&format!("{key}_tok_per_s"), tput);
+        rep2.metric(&format!("{key}_ttft_p50_steps"), ttft_steps);
+        rep2.metric(&format!("{key}_chunks"), chunks as f64);
+        rep2.metric(&format!("{key}_mixed_steps"), mixed as f64);
+    }
+    if let Err(e) = rep2.write() {
         eprintln!("warning: BENCH_serve.json not written: {e}");
     }
 

@@ -14,8 +14,8 @@ use sqplus::coordinator::sequence::{SamplingParams, Sequence};
 use sqplus::runtime::kv::{self, SeqKv};
 use sqplus::util::bench::{Bench, Table};
 
-fn churn(total_blocks: usize, n_seqs: usize, prefix_cache: bool)
-    -> usize {
+fn churn(total_blocks: usize, n_seqs: usize, prefix_cache: bool,
+         max_chunk: usize) -> usize {
     let mut seqs: HashMap<u64, Sequence> = HashMap::new();
     let mut sch = Scheduler::new(
         // identical 24-token prompts (one full block + a partial): with
@@ -24,6 +24,7 @@ fn churn(total_blocks: usize, n_seqs: usize, prefix_cache: bool)
         // pre-cache pool-pressure workload
         EngineConfig {
             enable_prefix_caching: prefix_cache,
+            max_prefill_chunk: max_chunk,
             ..Default::default()
         },
         BlockManager::new(16, total_blocks),
@@ -36,30 +37,31 @@ fn churn(total_blocks: usize, n_seqs: usize, prefix_cache: bool)
     let mut plans = 0;
     let mut done = 0u64;
     while sch.has_work() {
-        match sch.plan(&seqs) {
-            StepPlan::Decode { ids } => {
-                for id in ids {
-                    let q = seqs.get_mut(&id).unwrap();
-                    q.record_token(1);
-                    if q.output.len() >= 24 {
-                        sch.on_finished(id);
-                        done += 1;
-                    }
-                }
+        let plan: StepPlan = sch.plan(&seqs);
+        for c in &plan.chunks {
+            let toks = seqs[&c.id].full_tokens();
+            sch.bm.register_prefix(c.id, &toks[..c.end]);
+            let q = seqs.get_mut(&c.id).unwrap();
+            q.prefill_progress = c.end;
+            if c.end == toks.len() {
+                q.state =
+                    sqplus::coordinator::sequence::SeqState::Running;
+                q.record_token(1);
+            } else {
+                q.state =
+                    sqplus::coordinator::sequence::SeqState::Prefilling;
             }
-            StepPlan::Prefill { ids, .. } => {
-                for id in ids {
-                    let toks = seqs[&id].full_tokens();
-                    sch.bm.register_prefix(id, &toks);
-                    seqs.get_mut(&id).unwrap().state =
-                        sqplus::coordinator::sequence::SeqState::Running;
-                }
+        }
+        for &id in &plan.decode {
+            let q = seqs.get_mut(&id).unwrap();
+            q.record_token(1);
+            if q.output.len() >= 24 {
+                sch.on_finished(id);
+                done += 1;
             }
-            StepPlan::Idle => {
-                if done == n_seqs as u64 {
-                    break;
-                }
-            }
+        }
+        if plan.is_idle() && done == n_seqs as u64 {
+            break;
         }
         plans += 1;
         if plans > 1_000_000 {
@@ -73,21 +75,24 @@ fn main() {
     let mut t = Table::new(
         "micro: scheduler plans/s under pool pressure (200 seqs, 24 \
          tokens each)",
-        &["pool blocks", "prefix cache", "plans", "plans/s"],
+        &["pool blocks", "prefix cache", "chunk cap", "plans",
+          "plans/s"],
     );
     for blocks in [64usize, 128, 512, 4096] {
-        for cache in [false, true] {
+        for (cache, chunk) in [(false, 0usize), (true, 0), (true, 8)] {
             let mut plans = 0;
             let r = Bench::new(
-                &format!("sched pool={blocks} cache={cache}"))
+                &format!("sched pool={blocks} cache={cache} \
+                          chunk={chunk}"))
                 .warmup(1)
                 .iters(5)
                 .run(|| {
-                    plans = churn(blocks, 200, cache);
+                    plans = churn(blocks, 200, cache, chunk);
                 });
             t.row(&[
                 blocks.to_string(),
                 if cache { "on" } else { "off" }.to_string(),
+                if chunk == 0 { "∞".into() } else { chunk.to_string() },
                 plans.to_string(),
                 format!("{:.0}", plans as f64 / r.p50_s),
             ]);

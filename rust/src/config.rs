@@ -203,6 +203,20 @@ pub struct EngineConfig {
     /// Content-hash prefix caching: share full KV blocks across
     /// sequences with equal prompt prefixes and skip their prefill.
     pub enable_prefix_caching: bool,
+    /// Chunked prefill: split any prefill work (cold prompts, warm
+    /// suffixes after a cache hit, recompute after preemption) into
+    /// per-step chunks so a sequence makes prefill progress across
+    /// engine steps, decodes co-schedule with prefill inside one token
+    /// budget, and no single step can exceed the largest compiled
+    /// prefill bucket. `false` restores the legacy all-at-once prefill
+    /// (admission then clamps generation so post-preemption recompute
+    /// still fits the largest bucket — the pre-chunking sharp edge).
+    pub enable_chunked_prefill: bool,
+    /// Per-sequence cap on prefill tokens advanced per engine step when
+    /// chunked prefill is on. `0` means no per-sequence cap: chunks are
+    /// still bounded by `max_batch_tokens` and, for cold chunks, by the
+    /// largest prefill bucket.
+    pub max_prefill_chunk: usize,
 }
 
 impl Default for EngineConfig {
@@ -217,6 +231,8 @@ impl Default for EngineConfig {
             reform_interval: 1,
             max_new_tokens: 32,
             enable_prefix_caching: true,
+            enable_chunked_prefill: true,
+            max_prefill_chunk: 0,
         }
     }
 }

@@ -30,12 +30,22 @@
 //!   capacity, reclaimed LRU (least recently released first) when the
 //!   free list runs dry. [`BlockManager::take_evicted`] reports reclaimed
 //!   ids so the engine can drop the host KV rows it stashed for them.
+//! * **Partially filled sequences** — under chunked prefill a sequence
+//!   is admitted with a table covering only its cached prefix plus the
+//!   first chunk ([`BlockManager::allocate_chunked`]); each later chunk
+//!   grows the table like decode growth does
+//!   ([`BlockManager::append_token`]). The admission *capacity check*
+//!   still covers the full content so an impossible sequence blocks the
+//!   FCFS head instead of thrashing the pool. Releasing a partially
+//!   filled table (preempt-while-prefilling) follows the same refcount
+//!   rules as any other release.
 
 use std::collections::{BTreeMap, HashMap};
 
 /// Outcome of an allocation request.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Alloc {
+    /// Allocation succeeded; the table is updated.
     Ok,
     /// Not enough free blocks now (caller may preempt and retry).
     NoSpace,
@@ -55,7 +65,7 @@ fn mix(mut h: u64) -> u64 {
 }
 
 /// Chained content hash of one full block given the previous block's
-/// hash (or [`HASH_SEED`] for the first block).
+/// hash (or the fixed `HASH_SEED` for the first block).
 pub fn block_hash(prev: u64, tokens: &[u32]) -> u64 {
     let mut h = mix(prev ^ 0x51_7e_ca_c4e);
     for &t in tokens {
@@ -93,9 +103,13 @@ pub struct CacheStats {
     pub registered: usize,
 }
 
+/// Paged KV-block accounting for the simulated device pool (see the
+/// module docs for the refcount / CoW / eviction rules).
 #[derive(Debug, Clone)]
 pub struct BlockManager {
+    /// Tokens per block (paged accounting granularity).
     pub block_size: usize,
+    /// Total blocks in the pool.
     pub total_blocks: usize,
     /// Per-block refcount/hash state, indexed by block id.
     blocks: Vec<Block>,
@@ -117,10 +131,12 @@ pub struct BlockManager {
     pub watermark_blocks: usize,
     /// Content-hash prefix caching on/off (off = the pre-cache manager).
     pub enable_prefix_caching: bool,
+    /// Prefix-cache counters.
     pub stats: CacheStats,
 }
 
 impl BlockManager {
+    /// A pool of `total_blocks` blocks of `block_size` tokens each.
     pub fn new(block_size: usize, total_blocks: usize) -> BlockManager {
         BlockManager {
             block_size,
@@ -149,6 +165,7 @@ impl BlockManager {
         BlockManager::new(block_size, (free / per_block.max(1)).max(1))
     }
 
+    /// Blocks needed to hold `tokens` token slots.
     pub fn blocks_for(&self, tokens: usize) -> usize {
         tokens.div_ceil(self.block_size)
     }
@@ -157,9 +174,11 @@ impl BlockManager {
     pub fn free_blocks(&self) -> usize {
         self.free.len() + self.evictable.len()
     }
+    /// Blocks currently referenced by at least one sequence table.
     pub fn used_blocks(&self) -> usize {
         self.total_blocks - self.free_blocks()
     }
+    /// Blocks held by sequence `id` (0 if not allocated).
     pub fn holds(&self, id: u64) -> usize {
         self.tables.get(&id).map_or(0, |t| t.len())
     }
@@ -167,6 +186,7 @@ impl BlockManager {
     pub fn table(&self, id: u64) -> Option<&[usize]> {
         self.tables.get(&id).map(|t| &t[..])
     }
+    /// Fraction of the pool referenced by live sequences.
     pub fn occupancy(&self) -> f64 {
         self.used_blocks() as f64 / self.total_blocks as f64
     }
@@ -242,15 +262,31 @@ impl BlockManager {
         Some(b)
     }
 
-    /// Allocate blocks for a newly admitted sequence, reusing cached
-    /// prefix blocks. Returns `Ok` with the table recorded; query the
-    /// covered prefix with [`cached_prefix_tokens`] (the scheduler passes
-    /// it to the engine so prefill starts at the first uncached token).
+    /// Allocate blocks for a newly admitted sequence covering its whole
+    /// content, reusing cached prefix blocks. Returns `Ok` with the
+    /// table recorded; query the covered prefix with
+    /// [`cached_prefix_tokens`] (the scheduler passes it to the engine
+    /// so prefill starts at the first uncached token).
     ///
     /// [`cached_prefix_tokens`]: BlockManager::cached_prefix_tokens
     pub fn allocate(&mut self, id: u64, tokens: &[u32]) -> Alloc {
+        self.allocate_chunked(id, tokens, tokens.len())
+    }
+
+    /// Admission for chunked prefill: the *capacity check* covers the
+    /// sequence's full content (so a sequence that can never fit blocks
+    /// the queue head under FCFS instead of admit/preempt thrashing),
+    /// but the table physically allocated covers only the cached-prefix
+    /// hits plus fresh blocks for the first `fill` tokens. Later chunks
+    /// and decode growth extend the table via
+    /// [`BlockManager::append_token`]. `fill` must be at least the hit
+    /// length (a chunk never ends inside the cached prefix) and at most
+    /// `tokens.len()`.
+    pub fn allocate_chunked(&mut self, id: u64, tokens: &[u32],
+                            fill: usize) -> Alloc {
         assert!(!self.tables.contains_key(&id),
                 "seq {id} already allocated");
+        debug_assert!(fill <= tokens.len());
         // one hash-chain walk serves both the capacity check and the
         // allocation (plan() calls this on the admission hot path)
         let need = self.blocks_for(tokens.len());
@@ -270,7 +306,8 @@ impl BlockManager {
             self.stats.misses += tokens.len() / self.block_size
                 - hits.len();
         }
-        let mut table = Vec::with_capacity(need);
+        let now = self.blocks_for(fill).max(hits.len());
+        let mut table = Vec::with_capacity(now);
         for &b in &hits {
             if self.blocks[b].ref_count == 0 {
                 self.evictable.remove(&self.blocks[b].lru_tick);
@@ -280,7 +317,7 @@ impl BlockManager {
             self.blocks[b].ref_count += 1;
             table.push(b);
         }
-        for _ in hits.len()..need {
+        for _ in hits.len()..now {
             let b = self.grab_free_block().expect("free-block accounting");
             self.blocks[b].ref_count = 1;
             debug_assert!(self.blocks[b].hash.is_none());
@@ -290,8 +327,9 @@ impl BlockManager {
         Alloc::Ok
     }
 
-    /// Grow a running sequence by one token; may need one more (always
-    /// private) block.
+    /// Grow an allocated sequence's table to cover `new_context` tokens
+    /// (decode growth by one, or the next prefill chunk of a partially
+    /// filled sequence); newly grabbed blocks are always private.
     pub fn append_token(&mut self, id: u64, new_context: usize) -> Alloc {
         let held = self.tables.get(&id).expect("seq not allocated").len();
         let need = self.blocks_for(new_context);
@@ -472,6 +510,61 @@ mod tests {
         bm.watermark_blocks = 0;
         bm.allocate(1, &toks(1, 8)); // both blocks
         assert_eq!(bm.append_token(1, 9), Alloc::NoSpace);
+        assert!(bm.check_conservation());
+    }
+
+    #[test]
+    fn chunked_allocation_grows_per_chunk() {
+        let mut bm = BlockManager::new(4, 10);
+        bm.watermark_blocks = 0;
+        let p = toks(3, 20); // 5 blocks total
+        // admit covering only the first 6 tokens (2 blocks)
+        assert_eq!(bm.allocate_chunked(1, &p, 6), Alloc::Ok);
+        assert_eq!(bm.holds(1), 2);
+        assert_eq!(bm.free_blocks(), 8);
+        // next chunk to 14 tokens -> 4 blocks
+        assert_eq!(bm.append_token(1, 14), Alloc::Ok);
+        assert_eq!(bm.holds(1), 4);
+        // final chunk to the full 20 -> 5 blocks
+        assert_eq!(bm.append_token(1, 20), Alloc::Ok);
+        assert_eq!(bm.holds(1), 5);
+        assert!(bm.check_conservation());
+        // preempt-while-partially-filled path: plain release
+        bm.release(1);
+        assert_eq!(bm.free_blocks(), 10);
+        assert!(bm.check_conservation());
+    }
+
+    #[test]
+    fn chunked_admission_checks_full_content_capacity() {
+        // pool of 3 blocks: a 5-block sequence must NOT admit even with
+        // a 1-block first chunk (it could never finish; FCFS head rule)
+        let mut bm = BlockManager::new(4, 3);
+        bm.watermark_blocks = 0;
+        let p = toks(1, 20);
+        assert_eq!(bm.allocate_chunked(1, &p, 4), Alloc::NoSpace);
+        assert_eq!(bm.holds(1), 0);
+        assert!(bm.check_conservation());
+    }
+
+    #[test]
+    fn chunked_allocation_reuses_cached_prefix() {
+        let mut bm = BlockManager::new(4, 16);
+        bm.watermark_blocks = 0;
+        let p = toks(7, 16); // 4 blocks
+        bm.allocate(1, &p);
+        assert_eq!(bm.register_prefix(1, &p).len(), 4);
+        // hit covers 3 blocks (lookup never covers the whole content);
+        // fill = 14 tokens -> 4 blocks: 3 shared + 1 fresh
+        assert_eq!(bm.cached_prefix_tokens(&p), 12);
+        let before = bm.free_blocks();
+        assert_eq!(bm.allocate_chunked(2, &p, 14), Alloc::Ok);
+        assert_eq!(bm.holds(2), 4);
+        assert_eq!(bm.free_blocks(), before - 1);
+        assert_eq!(bm.table(1).unwrap()[..3], bm.table(2).unwrap()[..3]);
+        assert!(bm.check_conservation());
+        bm.release(1);
+        bm.release(2);
         assert!(bm.check_conservation());
     }
 

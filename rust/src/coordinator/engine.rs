@@ -1,20 +1,43 @@
 //! The engine step loop: scheduler → PJRT runtime → sampler → state.
 //!
-//! One [`Engine::step`] executes one scheduler plan: either a prefill
-//! batch (admitting waiting sequences, building their KV, sampling their
-//! first token) or one decode step over the running batch. Preempted
+//! One [`Engine::step`] executes one scheduler [`StepPlan`]: a set of
+//! prefill *chunks* (admissions and continuations of partially
+//! prefilled sequences) and/or one decode round over the running batch
+//! — mixed steps are the normal case under chunked prefill. Preempted
 //! sequences drop their KV and recompute on re-admission (prompt +
-//! generated-so-far re-prefilled), vLLM's recompute policy.
+//! generated-so-far re-prefilled), vLLM's recompute policy; under
+//! chunked prefill that recompute is itself chunked, so it can never
+//! outgrow a compiled prefill bucket.
 //!
-//! Prefix caching: sequences the scheduler admitted with a cached prefix
-//! skip recomputing it — the engine copies the stashed host KV rows of
-//! the shared blocks into the sequence's cache and *partially prefills*
-//! from the first uncached token (driving the decode executable over the
-//! suffix, which is mathematically the same causal forward). After any
-//! prefill completes, the engine registers the sequence's newly filled
-//! full blocks back into the cache and stashes their KV rows, keyed by
-//! physical block id, so later admissions can reuse them. Evicted block
-//! ids reported by the block manager drop their stashed rows.
+//! # Chunk execution
+//!
+//! A chunk `[start, end)` builds KV rows for positions `start..end` of
+//! the sequence's full content:
+//!
+//! * `start == 0` (cold): the chunk runs through the smallest compiled
+//!   prefill bucket that fits it (the runtime's bucket selection); cold
+//!   chunks of one step batch into a single prefill call.
+//! * `start > 0` (cache-hit suffix, a later chunk, or recompute past
+//!   the first bucket): the engine drives the decode executable over
+//!   the chunk token by token — the same causal forward starting at
+//!   `start` — exactly like the PR 2 warm path, now bounded per step.
+//!
+//! When a chunk reaches the full content length the sequence's next
+//! token is sampled from the chunk's final logits and it joins the
+//! decode set.
+//!
+//! # Prefix cache
+//!
+//! Sequences admitted with a cached prefix skip recomputing it — the
+//! engine copies the stashed host KV rows of the shared blocks into the
+//! sequence's cache and the first chunk starts past the hit. After
+//! every chunk, and after every decode step that lands on a block
+//! boundary, the engine registers newly filled full blocks into the
+//! cache and stashes their KV rows keyed by physical block id — so
+//! long generations seed the cache too, and a preempted sequence's
+//! recompute can hit blocks it registered itself while decoding.
+//! Evicted block ids reported by the block manager drop their stashed
+//! rows.
 
 use std::collections::HashMap;
 
@@ -28,14 +51,22 @@ use crate::util::rng::Rng;
 use super::block_manager::{BlockManager, CacheStats};
 use super::metrics::Metrics;
 use super::sampler;
-use super::scheduler::{Scheduler, StepPlan};
+use super::scheduler::{PrefillChunk, Scheduler, StepPlan};
 use super::sequence::{FinishReason, SamplingParams, SeqState, Sequence};
 
 /// What a step did (for tests/telemetry).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum StepOutcome {
-    Prefilled(usize),
-    Decoded(usize),
+    /// Executed work this step.
+    Ran {
+        /// Prefill tokens computed across all chunks.
+        chunk_tokens: usize,
+        /// Sequences whose prefill completed (first token sampled).
+        completed_prefills: usize,
+        /// Sequences decoded one token.
+        decoded: usize,
+    },
+    /// Nothing schedulable.
     Idle,
 }
 
@@ -73,8 +104,12 @@ fn unstash_block(kvseq: &mut SeqKv, blk: usize, bs: usize, layers: usize,
     }
 }
 
+/// The serving engine: owns the deployment, the scheduler, and all
+/// per-sequence state (tokens, KV, metrics).
 pub struct Engine {
+    /// Model runtime plus simulated device topology.
     pub dep: Deployment,
+    /// Engine configuration (buckets synced from the runtime).
     pub ecfg: EngineConfig,
     sched: Scheduler,
     seqs: HashMap<u64, Sequence>,
@@ -84,18 +119,34 @@ pub struct Engine {
     /// cached (dropped on eviction).
     cached_kv: HashMap<usize, Vec<f32>>,
     finished: Vec<Sequence>,
+    /// Step/latency/cache counters.
     pub metrics: Metrics,
     next_id: u64,
     /// Engine-level seed mixed into per-token sampling streams.
     pub seed: u64,
 }
 
+/// Make the config's bucket view truthful: the scheduler plans against
+/// `ecfg.prefill_buckets` / `decode_batches`, so when the runtime knows
+/// its compiled buckets they override the config defaults (chunk caps
+/// and cold-batch caps must match what can actually execute).
+fn sync_buckets(dep: &Deployment, ecfg: &mut EngineConfig) {
+    let pb = dep.runtime.prefill_buckets();
+    if !pb.is_empty() {
+        ecfg.prefill_buckets = pb;
+    }
+    let db = dep.runtime.decode_batches();
+    if !db.is_empty() {
+        ecfg.max_running =
+            ecfg.max_running.min(db.iter().copied().max().unwrap());
+        ecfg.decode_batches = db;
+    }
+}
+
 impl Engine {
     /// Engine with an explicit block pool (tests, ablations).
     pub fn new(dep: Deployment, mut ecfg: EngineConfig) -> Engine {
-        let max_decode =
-            dep.runtime.decode_batches().into_iter().max().unwrap_or(1);
-        ecfg.max_running = ecfg.max_running.min(max_decode);
+        sync_buckets(&dep, &mut ecfg);
         let bm = BlockManager::new(ecfg.block_size, ecfg.total_blocks);
         Engine {
             sched: Scheduler::new(ecfg.clone(), bm),
@@ -124,9 +175,7 @@ impl Engine {
             ecfg.block_size, mem * 92 / 100, weight_bytes,
             cfg.kv_bytes_per_token(),
         );
-        let max_decode =
-            dep.runtime.decode_batches().into_iter().max().unwrap_or(1);
-        ecfg.max_running = ecfg.max_running.min(max_decode);
+        sync_buckets(&dep, &mut ecfg);
         Engine {
             sched: Scheduler::new(ecfg.clone(), bm),
             dep,
@@ -141,7 +190,9 @@ impl Engine {
         }
     }
 
-    /// Largest prompt the compiled prefill buckets accept.
+    /// Largest prompt the compiled prefill buckets accept in one call.
+    /// Under chunked prefill longer prompts still serve (chunks are
+    /// bucket-capped), but a prompt must at least fit the KV budget.
     pub fn max_prompt_len(&self) -> usize {
         self.dep
             .runtime
@@ -152,24 +203,55 @@ impl Engine {
             .unwrap_or(0)
     }
 
-    /// Submit a request; returns its id. Prompts longer than the prefill
-    /// bucket are rejected (finished with `PromptTooLong`); generation is
-    /// clamped so prompt + output fits the KV capacity.
+    /// Longest admissible prompt: with chunked prefill the KV length
+    /// budget governs; legacy mode also requires one-bucket prefill.
+    fn admissible_prompt_len(&self) -> usize {
+        let max_len = self.dep.runtime.cfg.max_len.saturating_sub(1);
+        if self.ecfg.enable_chunked_prefill {
+            max_len
+        } else {
+            max_len.min(self.max_prompt_len())
+        }
+    }
+
+    /// Submit a request; returns its id. Prompts longer than the engine
+    /// can admit are rejected (finished with `PromptTooLong`);
+    /// generation is clamped so prompt + output fits the KV capacity —
+    /// and, in legacy (unchunked) mode, so post-preemption recompute of
+    /// prompt + output fits the largest compiled prefill bucket (the
+    /// belt-and-braces fix for the recompute hazard; chunked mode needs
+    /// no clamp because recompute is just another chunked prefill).
     pub fn submit(&mut self, prompt: Vec<u32>, mut params: SamplingParams)
         -> u64 {
         let id = self.next_id;
         self.next_id += 1;
         self.metrics.on_submit(prompt.len());
         let max_len = self.dep.runtime.cfg.max_len;
-        let too_long =
-            prompt.is_empty() || prompt.len() > self.max_prompt_len()
-                || prompt.len() + 1 > max_len;
+        let too_long = prompt.is_empty()
+            || prompt.len() > self.admissible_prompt_len();
         params.max_new_tokens = params
             .max_new_tokens
             .min(max_len.saturating_sub(prompt.len()));
+        if !self.ecfg.enable_chunked_prefill {
+            params.max_new_tokens = params.max_new_tokens.min(
+                self.max_prompt_len().saturating_sub(prompt.len()),
+            );
+        }
+        // a prompt whose blocks can never fit the pool would block the
+        // FCFS head forever (admission checks full-content capacity):
+        // fail fast instead of wedging the queue
+        let pool_impossible = !too_long
+            && self.sched.bm.blocks_for(prompt.len())
+                + self.sched.bm.watermark_blocks
+                > self.sched.bm.total_blocks;
         let mut seq = Sequence::new(id, prompt, params);
-        if too_long {
-            seq.finish(FinishReason::PromptTooLong);
+        seq.arrived_step = self.metrics.engine_steps;
+        if too_long || pool_impossible {
+            seq.finish(if too_long {
+                FinishReason::PromptTooLong
+            } else {
+                FinishReason::PoolExhausted
+            });
             self.metrics.on_finished(&seq);
             self.finished.push(seq);
             return id;
@@ -179,9 +261,11 @@ impl Engine {
         id
     }
 
+    /// Anything queued or in flight?
     pub fn has_work(&self) -> bool {
         self.sched.has_work()
     }
+    /// Fraction of the KV block pool in use.
     pub fn kv_occupancy(&self) -> f64 {
         self.sched.bm.occupancy()
     }
@@ -189,55 +273,109 @@ impl Engine {
     pub fn cache_stats(&self) -> CacheStats {
         self.sched.bm.stats.clone()
     }
+    /// Drain finished sequences (response path).
     pub fn take_finished(&mut self) -> Vec<Sequence> {
         std::mem::take(&mut self.finished)
     }
 
     /// Execute one scheduler step.
     pub fn step(&mut self) -> Result<StepOutcome> {
-        let plan = self.sched.plan(&self.seqs);
+        let plan: StepPlan = self.sched.plan(&self.seqs);
         // blocks whose cached content was reclaimed lose their rows
         for b in self.sched.bm.take_evicted() {
             self.cached_kv.remove(&b);
         }
-        // drop KV of anything the scheduler preempted
+        // drop KV of anything the scheduler preempted (it will recompute
+        // on re-admission — possibly within this very plan)
         for id in self.sched.preempted.clone() {
             self.kvs.remove(&id);
             if let Some(s) = self.seqs.get_mut(&id) {
-                if s.state == SeqState::Running {
+                if matches!(s.state,
+                            SeqState::Running | SeqState::Prefilling) {
                     s.preempt();
                 }
             }
         }
-        match plan {
-            StepPlan::Idle => Ok(StepOutcome::Idle),
-            StepPlan::Prefill { ids, cached } => {
-                self.do_prefill(ids, cached)
+        // sequences that alone outgrow the pool cannot ever complete
+        for id in self.sched.dropped.clone() {
+            self.kvs.remove(&id);
+            if self.seqs.contains_key(&id) {
+                self.finish(id, FinishReason::PoolExhausted);
             }
-            StepPlan::Decode { ids } => self.do_decode(ids),
         }
+        if plan.is_idle() {
+            return Ok(StepOutcome::Idle);
+        }
+        self.metrics.engine_steps += 1;
+        let mut chunk_tokens = 0;
+        let mut completed = 0;
+        if !plan.chunks.is_empty() {
+            (chunk_tokens, completed) = self.run_chunks(&plan.chunks)?;
+            self.metrics.prefill_steps += 1;
+        }
+        let mut decoded = 0;
+        if !plan.decode.is_empty() {
+            decoded = self.do_decode(&plan.decode)?;
+            if decoded > 0 {
+                self.metrics.decode_steps += 1;
+            }
+        }
+        if !plan.chunks.is_empty() && decoded > 0 {
+            self.metrics.mixed_steps += 1;
+        }
+        self.metrics
+            .batch_sizes
+            .push((plan.chunks.len() + decoded) as f64);
+        self.metrics.kv_occupancy.push(self.sched.bm.occupancy());
+        Ok(StepOutcome::Ran { chunk_tokens,
+                              completed_prefills: completed, decoded })
     }
 
-    fn do_prefill(&mut self, ids: Vec<u64>, cached: Vec<usize>)
-        -> Result<StepOutcome> {
+    /// Execute a step's prefill chunks. Cold chunks (`start == 0`) batch
+    /// through one prefill-bucket call; all other chunks drive the
+    /// decode executable over their range. Returns (tokens computed,
+    /// prefills completed).
+    fn run_chunks(&mut self, chunks: &[PrefillChunk])
+        -> Result<(usize, usize)> {
         let cfg = self.dep.runtime.cfg.clone();
         let vocab = cfg.vocab;
-        // recompute semantics: preempted sequences re-prefill prompt +
-        // generated output
-        let full: Vec<Vec<u32>> =
-            ids.iter().map(|id| self.seqs[id].full_tokens()).collect();
-        let cold: Vec<usize> =
-            (0..ids.len()).filter(|&i| cached[i] == 0).collect();
-        let warm: Vec<usize> =
-            (0..ids.len()).filter(|&i| cached[i] > 0).collect();
+        // full content per chunk (recompute semantics: prompt + output)
+        let full: Vec<Vec<u32>> = chunks
+            .iter()
+            .map(|c| self.seqs[&c.id].full_tokens())
+            .collect();
 
-        // ---- cold sequences: one batched prefill over full prompts
+        // (re)admissions: state bookkeeping; warm admissions get a
+        // fresh KV pre-loaded with their cached-prefix rows (cold
+        // admissions build theirs in the batched prefill below)
+        for c in chunks.iter().filter(|c| c.admitted) {
+            if c.start > 0 {
+                let kvseq = self.kv_from_cached_prefix(c.id, c.start);
+                self.kvs.insert(c.id, kvseq);
+            }
+            let seq = self.seqs.get_mut(&c.id).unwrap();
+            seq.state = SeqState::Prefilling;
+            seq.prefill_progress = c.start;
+            seq.cached_prefix_len = c.start;
+            self.metrics.cached_prefix_tokens += c.start;
+        }
+
+        let mut completed = 0usize;
+        let mut tokens = 0usize;
+
+        // ---- cold chunks: one batched prefill through a bucket sized
+        // for the widest chunk (the runtime picks the smallest fit)
+        let cold: Vec<usize> = (0..chunks.len())
+            .filter(|&i| chunks[i].start == 0)
+            .collect();
         if !cold.is_empty() {
-            let views: Vec<&[u32]> =
-                cold.iter().map(|&i| &full[i][..]).collect();
+            let views: Vec<&[u32]> = cold
+                .iter()
+                .map(|&i| &full[i][..chunks[i].end])
+                .collect();
             let res = self.dep.prefill(&views)?;
             let lens: Vec<usize> =
-                cold.iter().map(|&i| full[i].len()).collect();
+                cold.iter().map(|&i| chunks[i].end).collect();
             let mut new_kvs: Vec<SeqKv> =
                 cold.iter().map(|_| SeqKv::new(&cfg)).collect();
             {
@@ -249,22 +387,18 @@ impl Engine {
             for ((b, &i), kvseq) in
                 cold.iter().enumerate().zip(new_kvs)
             {
-                let id = ids[i];
-                self.kvs.insert(id, kvseq);
-                self.register_filled_blocks(id, &full[i]);
-                let last = lens[b] - 1;
+                let c = &chunks[i];
+                debug_assert!(c.admitted); // cold chunks always are
+                self.kvs.insert(c.id, kvseq);
+                let last = c.end - 1;
                 let row =
                     &res.logits[(b * res.seq + last) * vocab..][..vocab];
-                self.sample_first_token(id, 0, row);
+                completed += self.finish_chunk(c, &full[i], Some(row));
+                tokens += c.end - c.start;
             }
-            self.metrics.prefill_tokens_executed +=
-                lens.iter().sum::<usize>();
         }
 
-        // ---- warm sequences: copy the cached prefix rows, then prefill
-        // only the suffix by driving the decode executable token by token
-        // (the same causal forward, starting at the first uncached
-        // position)
+        // ---- warm/continuation chunks: decode-executable per token
         let bucket = self
             .dep
             .runtime
@@ -272,18 +406,20 @@ impl Engine {
             .into_iter()
             .find(|&b| b >= 1)
             .unwrap_or(1);
-        for &i in &warm {
-            let id = ids[i];
+        let lane_sz = cfg.max_len * cfg.dim;
+        for (i, c) in chunks.iter().enumerate() {
+            if c.start == 0 {
+                continue;
+            }
             let toks = &full[i];
-            let c = cached[i];
-            let mut kvseq = self.kv_from_cached_prefix(id, c);
+            let mut kvseq = self.kvs.remove(&c.id).expect("chunk KV");
+            debug_assert_eq!(kvseq.len, c.start);
             let mut last_logits: Vec<f32> = vec![];
             // assemble the padded device batch once; per-token we only
             // scatter the one new row into slot b=0 (mirrors the
             // assemble_batch layout) instead of re-copying MAX rows
-            let lane_sz = cfg.max_len * cfg.dim;
             let mut kv_batch = kv::assemble_batch(&[&kvseq], &cfg, bucket);
-            for pos in c..toks.len() {
+            for pos in c.start..c.end {
                 let res = self.dep.decode(&[toks[pos]], &[kvseq.len],
                                           &kv_batch)?;
                 let row_pos = kvseq.len;
@@ -305,21 +441,38 @@ impl Engine {
                         );
                     }
                 }
-                if pos + 1 == toks.len() {
+                if pos + 1 == c.end {
                     last_logits = res.logits[..vocab].to_vec();
                 }
             }
-            self.kvs.insert(id, kvseq);
-            self.register_filled_blocks(id, toks);
-            self.sample_first_token(id, c, &last_logits);
-            self.metrics.prefill_tokens_executed += toks.len() - c;
-            self.metrics.cached_prefix_tokens += c;
+            self.kvs.insert(c.id, kvseq);
+            let row = if c.end == toks.len() {
+                Some(&last_logits[..])
+            } else {
+                None
+            };
+            completed += self.finish_chunk(c, toks, row);
+            tokens += c.end - c.start;
         }
 
-        self.metrics.prefill_steps += 1;
-        self.metrics.batch_sizes.push(ids.len() as f64);
-        self.metrics.kv_occupancy.push(self.sched.bm.occupancy());
-        Ok(StepOutcome::Prefilled(ids.len()))
+        self.metrics.prefill_chunks += chunks.len();
+        self.metrics.prefill_tokens_executed += tokens;
+        Ok((tokens, completed))
+    }
+
+    /// Per-chunk bookkeeping: advance the cursor, register newly filled
+    /// full blocks, and — when the chunk completes the prefill — sample
+    /// the sequence's next token from `row`. Returns 1 on completion.
+    fn finish_chunk(&mut self, c: &PrefillChunk, toks: &[u32],
+                    row: Option<&[f32]>) -> usize {
+        self.seqs.get_mut(&c.id).unwrap().prefill_progress = c.end;
+        self.register_filled_blocks(c.id, &toks[..c.end]);
+        if c.end == toks.len() {
+            let row = row.expect("completing chunk carries logits");
+            self.sample_first_token(c.id, row);
+            return 1;
+        }
+        0
     }
 
     /// A fresh SeqKv pre-loaded with the stashed rows of the sequence's
@@ -340,31 +493,43 @@ impl Engine {
         kvseq
     }
 
-    /// Register this sequence's full blocks into the prefix cache and
-    /// stash their freshly built KV rows (called right after prefill, so
-    /// the rows exist and the sequence still owns its table).
-    fn register_filled_blocks(&mut self, id: u64, tokens: &[u32]) {
+    /// Register this sequence's full blocks among `tokens` into the
+    /// prefix cache and stash their freshly built KV rows (called after
+    /// every chunk and after block-filling decode steps, while the rows
+    /// exist and the sequence still owns its table). Returns how many
+    /// blocks were newly registered.
+    fn register_filled_blocks(&mut self, id: u64, tokens: &[u32])
+        -> usize {
         let newly = self.sched.bm.register_prefix(id, tokens);
         if newly.is_empty() {
-            return;
+            return 0;
         }
         let bs = self.sched.bm.block_size;
         let (layers, dim) =
             (self.dep.runtime.cfg.layers, self.dep.runtime.cfg.dim);
         let kvseq = &self.kvs[&id];
+        let n = newly.len();
         for (blk, block_id) in newly {
             let rows = stash_block(kvseq, blk, bs, layers, dim);
             self.cached_kv.insert(block_id, rows);
         }
+        n
     }
 
-    /// Post-prefill bookkeeping shared by the cold and warm paths: mark
-    /// running, record the cache coverage, sample the first token.
-    fn sample_first_token(&mut self, id: u64, cached_len: usize,
-                          row: &[f32]) {
+    /// Post-prefill bookkeeping: mark running, sample the next token
+    /// (the first of this pass), record the TTFT-in-steps proxy.
+    fn sample_first_token(&mut self, id: u64, row: &[f32]) {
+        let first = {
+            let seq = self.seqs.get_mut(&id).unwrap();
+            seq.state = SeqState::Running;
+            seq.output.is_empty()
+        };
+        if first {
+            let waited = self.metrics.engine_steps
+                - self.seqs[&id].arrived_step;
+            self.metrics.ttft_steps.push(waited as f64);
+        }
         let seq = self.seqs.get_mut(&id).unwrap();
-        seq.state = SeqState::Running;
-        seq.cached_prefix_len = cached_len;
         let mut rng = Rng::new(
             self.seed
                 ^ seq.params.seed.wrapping_mul(0x9e3779b97f4a7c15)
@@ -376,12 +541,13 @@ impl Engine {
         self.finish_if_done(id);
     }
 
-    fn do_decode(&mut self, ids: Vec<u64>) -> Result<StepOutcome> {
+    fn do_decode(&mut self, ids: &[u64]) -> Result<usize> {
         let cfg = self.dep.runtime.cfg.clone();
         let vocab = cfg.vocab;
+        let bs = self.sched.bm.block_size;
         // KV-capacity guard: finish sequences whose cache is full
         let mut live = vec![];
-        for id in ids {
+        for &id in ids {
             let len = self.kvs[&id].len;
             if len + 1 >= cfg.max_len {
                 self.finish(id, FinishReason::MaxTokens);
@@ -390,7 +556,7 @@ impl Engine {
             }
         }
         if live.is_empty() {
-            return Ok(StepOutcome::Idle);
+            return Ok(0);
         }
         let tokens: Vec<u32> =
             live.iter().map(|id| self.seqs[id].last_token()).collect();
@@ -421,6 +587,16 @@ impl Engine {
             }
             kv::append_decode_rows(&mut refs, &cfg, res.batch, &res.kv_new);
         }
+        // decode-time cache registration: a decode that just filled a
+        // block makes it cacheable (generated content seeds the cache)
+        for &id in &live {
+            let n = self.kvs[&id].len;
+            if n % bs == 0 {
+                let toks = self.seqs[&id].full_tokens();
+                self.metrics.decode_registered_blocks +=
+                    self.register_filled_blocks(id, &toks[..n]);
+            }
+        }
         for (b, id) in live.iter().enumerate() {
             let row = &res.logits[b * vocab..(b + 1) * vocab];
             let seq = self.seqs.get_mut(id).unwrap();
@@ -434,10 +610,7 @@ impl Engine {
             seq.record_token(tok);
             self.finish_if_done(*id);
         }
-        self.metrics.decode_steps += 1;
-        self.metrics.batch_sizes.push(live.len() as f64);
-        self.metrics.kv_occupancy.push(self.sched.bm.occupancy());
-        Ok(StepOutcome::Decoded(live.len()))
+        Ok(live.len())
     }
 
     fn finish_if_done(&mut self, id: u64) {

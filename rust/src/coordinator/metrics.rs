@@ -1,6 +1,8 @@
 //! Engine metrics: throughput, time-to-first-token, inter-token latency,
-//! KV occupancy, preemption counts, and prefix-cache savings (prefill
-//! tokens actually executed vs. served from cached blocks).
+//! KV occupancy, preemption counts, prefix-cache savings (prefill tokens
+//! actually executed vs. served from cached blocks), and chunked-prefill
+//! accounting (chunks executed, mixed prefill+decode steps, and a
+//! deterministic TTFT proxy measured in engine steps).
 
 use std::time::Instant;
 
@@ -8,15 +10,31 @@ use crate::util::stats::{Accum, Summary};
 
 use super::sequence::Sequence;
 
+/// Mutable counters the engine updates as it steps.
 #[derive(Debug, Default)]
 pub struct Metrics {
+    /// First-submission wall-clock anchor.
     pub started_at: Option<Instant>,
+    /// Requests submitted.
     pub requests_in: usize,
+    /// Requests finished.
     pub requests_done: usize,
+    /// Prompt tokens across submissions.
     pub prompt_tokens: usize,
+    /// Generated tokens across finished requests.
     pub output_tokens: usize,
+    /// Steps that executed at least one prefill chunk.
     pub prefill_steps: usize,
+    /// Steps that executed a decode round.
     pub decode_steps: usize,
+    /// Non-idle engine steps (prefill, decode, or mixed).
+    pub engine_steps: usize,
+    /// Steps that ran prefill chunks *and* a decode round (only the
+    /// chunked scheduler produces these).
+    pub mixed_steps: usize,
+    /// Prefill chunks executed (one sequence advancing once).
+    pub prefill_chunks: usize,
+    /// Preemptions across finished requests (recompute policy).
     pub preemptions: usize,
     /// Prefill tokens actually run through the model (cache hits skip
     /// theirs; recompute-preemption re-runs its share).
@@ -24,24 +42,40 @@ pub struct Metrics {
     /// Prompt tokens served from shared cache blocks instead of
     /// recomputed.
     pub cached_prefix_tokens: usize,
+    /// Full blocks registered into the prefix cache during *decode*
+    /// (generated content seeding the cache).
+    pub decode_registered_blocks: usize,
+    /// Time to first token, seconds (wall clock).
     pub ttft_s: Accum,
+    /// Engine steps from submission to first token — a deterministic
+    /// TTFT proxy independent of host speed (chunked prefill should
+    /// lower it for decode-bound traffic, since admissions no longer
+    /// monopolize whole steps).
+    pub ttft_steps: Accum,
+    /// Gap between consecutive output tokens, seconds.
     pub inter_token_s: Accum,
+    /// End-to-end request latency, seconds.
     pub e2e_s: Accum,
+    /// Scheduled batch size per step.
     pub batch_sizes: Accum,
+    /// KV pool occupancy per step.
     pub kv_occupancy: Accum,
 }
 
 impl Metrics {
+    /// Fresh zeroed counters.
     pub fn new() -> Metrics {
         Metrics::default()
     }
 
+    /// Record a submission of `prompt_len` tokens.
     pub fn on_submit(&mut self, prompt_len: usize) {
         self.started_at.get_or_insert_with(Instant::now);
         self.requests_in += 1;
         self.prompt_tokens += prompt_len;
     }
 
+    /// Fold a finished sequence into the latency/throughput accums.
     pub fn on_finished(&mut self, seq: &Sequence) {
         self.requests_done += 1;
         self.output_tokens += seq.output.len();
@@ -58,6 +92,7 @@ impl Metrics {
         self.preemptions += seq.preemptions;
     }
 
+    /// Seconds since the first submission.
     pub fn elapsed_s(&self) -> f64 {
         self.started_at
             .map(|t| t.elapsed().as_secs_f64())
@@ -74,6 +109,7 @@ impl Metrics {
         }
     }
 
+    /// Snapshot the counters into an immutable report.
     pub fn report(&self) -> MetricsReport {
         MetricsReport {
             requests_done: self.requests_done,
@@ -81,6 +117,7 @@ impl Metrics {
             elapsed_s: self.elapsed_s(),
             output_tok_per_s: self.output_tok_per_s(),
             ttft: self.ttft_s.summary(),
+            ttft_steps: self.ttft_steps.summary(),
             inter_token: self.inter_token_s.summary(),
             e2e: self.e2e_s.summary(),
             mean_batch: self.batch_sizes.mean(),
@@ -88,27 +125,52 @@ impl Metrics {
             preemptions: self.preemptions,
             prefill_tokens_executed: self.prefill_tokens_executed,
             cached_prefix_tokens: self.cached_prefix_tokens,
+            prefill_chunks: self.prefill_chunks,
+            mixed_steps: self.mixed_steps,
+            decode_registered_blocks: self.decode_registered_blocks,
         }
     }
 }
 
+/// Immutable snapshot of [`Metrics`] (what benches/serving report).
 #[derive(Debug, Clone)]
 pub struct MetricsReport {
+    /// Requests finished.
     pub requests_done: usize,
+    /// Generated tokens across finished requests.
     pub output_tokens: usize,
+    /// Seconds since the first submission.
     pub elapsed_s: f64,
+    /// Generated tokens per second of wall clock.
     pub output_tok_per_s: f64,
+    /// Time-to-first-token distribution, seconds.
     pub ttft: Summary,
+    /// TTFT measured in engine steps (deterministic proxy).
+    pub ttft_steps: Summary,
+    /// Inter-token latency distribution, seconds.
     pub inter_token: Summary,
+    /// End-to-end latency distribution, seconds.
     pub e2e: Summary,
+    /// Mean scheduled batch size.
     pub mean_batch: f64,
+    /// Mean KV pool occupancy.
     pub mean_kv_occupancy: f64,
+    /// Preemptions across finished requests.
     pub preemptions: usize,
+    /// Prefill tokens actually run through the model.
     pub prefill_tokens_executed: usize,
+    /// Prompt tokens served from the prefix cache.
     pub cached_prefix_tokens: usize,
+    /// Prefill chunks executed.
+    pub prefill_chunks: usize,
+    /// Steps that mixed prefill chunks with a decode round.
+    pub mixed_steps: usize,
+    /// Blocks registered into the prefix cache during decode.
+    pub decode_registered_blocks: usize,
 }
 
 impl MetricsReport {
+    /// Human-readable dump (benches and `serve_trace`).
     pub fn print(&self, label: &str) {
         println!(
             "[{label}] done={} out_tokens={} elapsed={:.2}s \
@@ -119,15 +181,19 @@ impl MetricsReport {
             self.mean_kv_occupancy * 100.0, self.preemptions
         );
         println!(
-            "[{label}] ttft p50={:.1}ms p99={:.1}ms | inter-token \
-             p50={:.1}ms p99={:.1}ms | e2e p50={:.1}ms",
+            "[{label}] ttft p50={:.1}ms p99={:.1}ms ({:.1} steps p50) | \
+             inter-token p50={:.1}ms p99={:.1}ms | e2e p50={:.1}ms",
             self.ttft.p50 * 1e3, self.ttft.p99 * 1e3,
+            self.ttft_steps.p50,
             self.inter_token.p50 * 1e3, self.inter_token.p99 * 1e3,
             self.e2e.p50 * 1e3
         );
         println!(
-            "[{label}] prefill tokens executed={} cached={}",
-            self.prefill_tokens_executed, self.cached_prefix_tokens
+            "[{label}] prefill tokens executed={} cached={} chunks={} \
+             mixed_steps={} decode_registered_blocks={}",
+            self.prefill_tokens_executed, self.cached_prefix_tokens,
+            self.prefill_chunks, self.mixed_steps,
+            self.decode_registered_blocks
         );
     }
 }
@@ -154,5 +220,19 @@ mod tests {
         let r = m.report();
         assert_eq!(r.requests_done, 1);
         assert!(r.ttft.n == 1 && r.inter_token.n == 1);
+    }
+
+    #[test]
+    fn chunk_counters_roundtrip() {
+        let mut m = Metrics::new();
+        m.prefill_chunks = 5;
+        m.mixed_steps = 2;
+        m.decode_registered_blocks = 3;
+        m.ttft_steps.push(4.0);
+        let r = m.report();
+        assert_eq!(r.prefill_chunks, 5);
+        assert_eq!(r.mixed_steps, 2);
+        assert_eq!(r.decode_registered_blocks, 3);
+        assert_eq!(r.ttft_steps.n, 1);
     }
 }

@@ -4,16 +4,22 @@
 //! * [`block_manager`] — paged KV-cache accounting: ref-counted blocks
 //!   over a fixed device pool, watermark admission, preemption support,
 //!   and content-hash prefix caching (shared full blocks, LRU eviction).
-//! * [`scheduler`] — continuous batching: FCFS waiting queue, prefill
-//!   admission under a token budget (cache hits only budget the tokens
-//!   past the hit), decode batch formation, preemption under KV
-//!   pressure (recompute policy).
+//! * [`scheduler`] — continuous batching with **chunked prefill**: FCFS
+//!   waiting queue, per-step mixed plans (decode round + prefill chunks
+//!   under one token budget, cache hits only budget the tokens past the
+//!   hit), preemption under KV pressure (recompute policy — itself
+//!   chunked, so recompute can never outgrow a compiled bucket).
 //! * [`sampler`] — greedy / temperature / top-k sampling, seeded.
 //! * [`engine`] — the step loop tying scheduler → runtime → sampler →
-//!   sequence updates together; partially prefills from the first
-//!   uncached token and registers filled blocks back into the cache.
+//!   sequence updates together; executes chunks (cold chunks through a
+//!   right-sized prefill bucket, continuations through the decode
+//!   executable) and registers filled blocks back into the cache after
+//!   chunks *and* block-filling decode steps.
 //! * [`metrics`] — TTFT / per-token latency / throughput / cache-savings
-//!   accounting.
+//!   / chunk accounting.
+//!
+//! `docs/ARCHITECTURE.md` at the repo root walks one request through
+//! all of these modules end to end, with the block lifecycle diagram.
 //!
 //! # Prefix-cache design (across the three modules)
 //!

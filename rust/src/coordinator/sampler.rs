@@ -30,6 +30,7 @@ pub fn sample(logits: &[f32], params: &SamplingParams, rng: &mut Rng) -> u32 {
     idx[rng.weighted(&weights)]
 }
 
+/// Index of the largest logit (greedy decoding; ties pick the lowest).
 pub fn argmax(logits: &[f32]) -> u32 {
     let mut best = 0usize;
     for (i, &v) in logits.iter().enumerate() {

@@ -1,71 +1,133 @@
-//! Continuous-batching scheduler (the vLLM policy shape):
+//! Continuous-batching scheduler (the vLLM policy shape) with
+//! first-class **chunked prefill**:
 //!
-//! * FCFS waiting queue; prefill takes priority when new sequences can be
-//!   admitted (block-manager watermark + token budget + a free running
-//!   slot), otherwise the running set decodes one step as a batch.
+//! * FCFS waiting queue. With chunked prefill enabled (the default) a
+//!   step is *mixed*: one decode round over the fully-prefilled running
+//!   sequences plus prefill chunks — continuations for partially
+//!   prefilled sequences and first chunks for new admissions — all
+//!   inside one `max_batch_tokens` budget (each scheduled decode costs
+//!   one budget token; each chunk costs its width).
+//! * Any prefill work — a cold prompt, the suffix past a prefix-cache
+//!   hit, or post-preemption recompute of prompt+output — is split into
+//!   chunks of at most `max_prefill_chunk` tokens (0 = only the budget
+//!   and bucket caps apply). A chunk starting at position 0 additionally
+//!   never exceeds the largest compiled prefill bucket, which
+//!   *structurally* fixes the recompute hazard: recompute is just
+//!   another chunked prefill, so no single step can outgrow a bucket.
 //! * Admission consults the prefix cache: a sequence whose leading full
 //!   blocks are cached shares them (refcounted) instead of allocating,
-//!   and only the tokens past the hit count against the prefill token
-//!   budget — so warm traffic admits in larger batches. The per-sequence
-//!   hit length rides along in [`StepPlan::Prefill`] for the engine's
-//!   partial prefill.
+//!   and its first chunk starts past the hit — so warm traffic admits
+//!   in larger batches. Block allocation covers only the admitted
+//!   chunk; later chunks grow the table
+//!   ([`super::block_manager::BlockManager::append_token`]).
 //! * KV growth for every scheduled decode is reserved up front; on
 //!   pressure the *most recently admitted* running sequence is preempted
-//!   (LIFO, vLLM's recompute policy), releasing its blocks (shared ones
-//!   just drop a reference) and requeueing it at the waiting front.
+//!   (LIFO, vLLM's recompute policy) — partially prefilled sequences
+//!   included — releasing its blocks (shared ones just drop a
+//!   reference) and requeueing it at the waiting front. A sequence that
+//!   cannot make progress even alone — and likewise a waiting-queue
+//!   head whose content could never be admitted at all (recompute
+//!   content grows past the pool) — is *dropped* (reported via
+//!   [`Scheduler::dropped`]; the engine finishes it with
+//!   [`super::sequence::FinishReason::PoolExhausted`]) instead of
+//!   wedging the FCFS queue.
+//! * With `enable_chunked_prefill = false` the legacy policy runs:
+//!   whole-content prefill steps take priority over decode steps and
+//!   are never mixed. The engine's admission clamp then bounds
+//!   `max_new_tokens` so recompute still fits the largest bucket (the
+//!   belt-and-braces fix for the pre-chunking sharp edge).
 //!
 //! The scheduler owns sequence *ids* only; token/KV state lives in the
-//! engine maps.
+//! engine maps. Per-sequence prefill progress is read from
+//! [`Sequence::prefill_progress`], which the engine advances after
+//! executing each chunk.
 
 use std::collections::{HashMap, VecDeque};
 
 use crate::config::EngineConfig;
 
 use super::block_manager::{Alloc, BlockManager};
-use super::sequence::Sequence;
-#[cfg(test)]
-use super::sequence::SeqState;
+use super::sequence::{SeqState, Sequence};
 
-/// What the engine should execute this step.
+/// One unit of prefill work: build KV rows `start..end` of sequence
+/// `id`'s full token content (prompt + generated output) this step.
 #[derive(Debug, Clone, PartialEq, Eq)]
-pub enum StepPlan {
-    /// `cached[i]` is the prompt-prefix length of `ids[i]` already
-    /// covered by shared cache blocks (prefill starts past it).
-    Prefill { ids: Vec<u64>, cached: Vec<usize> },
-    Decode { ids: Vec<u64> },
-    Idle,
+pub struct PrefillChunk {
+    /// Sequence to advance.
+    pub id: u64,
+    /// First row computed by this chunk (equals the prefix-cache hit
+    /// length on the first chunk of an admission, the sequence's chunk
+    /// cursor otherwise).
+    pub start: usize,
+    /// One past the last row computed; `end == ` full content length
+    /// means this chunk completes the prefill (the engine samples the
+    /// sequence's next token from the chunk's final logits).
+    pub end: usize,
+    /// First chunk since (re)admission: the engine initializes the
+    /// sequence's KV, copying the `start` cached-prefix rows (0 = cold).
+    pub admitted: bool,
 }
 
+/// What the engine should execute this step: prefill chunks and/or one
+/// decode round. Both can be non-empty (a *mixed* step).
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct StepPlan {
+    /// Prefill chunks to run (disjoint sequence ids).
+    pub chunks: Vec<PrefillChunk>,
+    /// Sequences to decode one token (all fully prefilled; KV growth
+    /// already reserved).
+    pub decode: Vec<u64>,
+}
+
+impl StepPlan {
+    /// No work this step.
+    pub fn is_idle(&self) -> bool {
+        self.chunks.is_empty() && self.decode.is_empty()
+    }
+}
+
+/// Continuous-batching scheduler; see the module docs for the policy.
 #[derive(Debug)]
 pub struct Scheduler {
+    /// Engine/scheduler knobs (buckets, budgets, chunking).
     pub cfg: EngineConfig,
+    /// The paged-KV accountant admission and preemption run against.
     pub bm: BlockManager,
     waiting: VecDeque<u64>,
     running: Vec<u64>, // admission order; preemption pops from the back
-    /// ids preempted this step (engine must drop their KV).
+    /// ids preempted this step and requeued (engine must drop their KV).
     pub preempted: Vec<u64>,
+    /// ids dropped this step: alone they exceed the pool, so they are
+    /// not requeued (engine finishes them with `PoolExhausted`).
+    pub dropped: Vec<u64>,
 }
 
 impl Scheduler {
+    /// A scheduler over `bm` with `cfg`'s policy knobs.
     pub fn new(cfg: EngineConfig, mut bm: BlockManager) -> Scheduler {
         bm.enable_prefix_caching = cfg.enable_prefix_caching;
         Scheduler { cfg, bm, waiting: VecDeque::new(), running: vec![],
-                    preempted: vec![] }
+                    preempted: vec![], dropped: vec![] }
     }
 
+    /// Enqueue a sequence id at the back of the waiting queue.
     pub fn add(&mut self, id: u64) {
         self.waiting.push_back(id);
     }
 
+    /// Sequences in the waiting queue.
     pub fn waiting_len(&self) -> usize {
         self.waiting.len()
     }
+    /// Sequences admitted (prefilling or decoding).
     pub fn running_len(&self) -> usize {
         self.running.len()
     }
+    /// Admitted sequence ids in admission order.
     pub fn running_ids(&self) -> &[u64] {
         &self.running
     }
+    /// Anything queued or admitted?
     pub fn has_work(&self) -> bool {
         !self.waiting.is_empty() || !self.running.is_empty()
     }
@@ -77,54 +139,293 @@ impl Scheduler {
         self.bm.release(id);
     }
 
-    /// Decide the next step. `seqs` provides prompt/context lengths.
+    /// Decide the next step. `seqs` provides token content, context
+    /// lengths, states, and chunk cursors.
     pub fn plan(&mut self, seqs: &HashMap<u64, Sequence>) -> StepPlan {
         self.preempted.clear();
-        // ---- try prefill admission (vLLM prefers draining the queue)
-        let max_prefill_batch = self
-            .cfg
+        self.dropped.clear();
+        if self.cfg.enable_chunked_prefill {
+            self.plan_chunked(seqs)
+        } else {
+            self.plan_legacy(seqs)
+        }
+    }
+
+    /// Preempt the most recently admitted running sequence (LIFO).
+    /// Returns `false` when the victim was the *only* running sequence:
+    /// it cannot make progress even alone, so it is dropped (released,
+    /// reported in `dropped`, not requeued) and the caller should give
+    /// up for this step.
+    fn preempt_one(&mut self) -> bool {
+        let victim = *self.running.last().unwrap();
+        self.running.pop();
+        self.bm.release(victim);
+        if self.running.is_empty() {
+            self.dropped.push(victim);
+            return false;
+        }
+        self.waiting.push_front(victim);
+        self.preempted.push(victim);
+        true
+    }
+
+    /// Drop waiting-queue heads that could never be admitted: content
+    /// grown by decoding before a preemption can exceed what the whole
+    /// pool holds, and such a sequence would wedge the FCFS head
+    /// forever (the engine rejects impossible *prompts* at submit, but
+    /// recompute content grows). `blocks_for(content) + watermark >
+    /// total` means no admission can ever succeed — the table needs
+    /// that many distinct physical blocks regardless of cache sharing.
+    fn drop_impossible_heads(&mut self,
+                             seqs: &HashMap<u64, Sequence>) {
+        while let Some(&id) = self.waiting.front() {
+            let need = self.bm.blocks_for(seqs[&id].context_len())
+                + self.bm.watermark_blocks;
+            if need <= self.bm.total_blocks {
+                return;
+            }
+            self.waiting.pop_front();
+            self.dropped.push(id);
+        }
+    }
+
+    /// Width cap for cold chunks when `count` of them run in one
+    /// batched prefill call: the engine needs a *single* bucket with
+    /// `batch >= count && seq >= width`, so the cap is the largest seq
+    /// among buckets whose batch dimension fits `count` (0 = no bucket
+    /// can; with the compiled cross-product bucket grid this is
+    /// constant, but partial custom grids make it shrink with count).
+    fn cold_width_cap(&self, count: usize) -> usize {
+        self.cfg
             .prefill_buckets
             .iter()
-            .map(|&(b, _)| b)
+            .filter(|&&(b, _)| b >= count)
+            .map(|&(_, s)| s)
+            .max()
+            .unwrap_or(if self.cfg.prefill_buckets.is_empty() {
+                usize::MAX // no bucket info (tests without a runtime)
+            } else {
+                0
+            })
+    }
+
+    /// Chunked policy: decode round + chunk continuations + admissions
+    /// inside one token budget (see module docs).
+    fn plan_chunked(&mut self, seqs: &HashMap<u64, Sequence>) -> StepPlan {
+        let chunk_cap = if self.cfg.max_prefill_chunk == 0 {
+            usize::MAX
+        } else {
+            self.cfg.max_prefill_chunk
+        };
+        let max_decode = self
+            .cfg
+            .decode_batches
+            .iter()
+            .copied()
             .max()
             .unwrap_or(1);
+
+        // ---- decode round over fully-prefilled sequences: reserve +1
+        // token each, preempting LIFO (possibly a mid-prefill victim,
+        // whose blocks free up) until everything scheduled fits
+        let mut decode: Vec<u64> = vec![];
+        loop {
+            let batch: Vec<u64> = self
+                .running
+                .iter()
+                .copied()
+                .filter(|id| seqs[id].state == SeqState::Running)
+                .take(max_decode)
+                .collect();
+            let mut ok = true;
+            for &id in &batch {
+                let ctx = seqs[&id].context_len();
+                if self.bm.append_token(id, ctx + 1) == Alloc::NoSpace {
+                    ok = false;
+                    break;
+                }
+            }
+            if ok {
+                decode = batch;
+                break;
+            }
+            if !self.preempt_one() {
+                return StepPlan::default();
+            }
+        }
+
+        // decodes count against the token budget, but never starve
+        // prefill entirely: at least one chunk token stays schedulable
+        let mut budget = self
+            .cfg
+            .max_batch_tokens
+            .saturating_sub(decode.len())
+            .max(1);
+        let mut chunks: Vec<PrefillChunk> = vec![];
+
+        // ---- continuation chunks for partially prefilled sequences
+        // (FCFS in admission order); if nothing at all is schedulable
+        // while prefills are stuck on the pool, preempt LIFO and retry
+        loop {
+            for id in self.running.clone() {
+                if budget == 0 {
+                    break;
+                }
+                let q = &seqs[&id];
+                if q.state != SeqState::Prefilling {
+                    continue;
+                }
+                let start = q.prefill_progress;
+                let target = q.context_len();
+                // a Prefilling sequence has always run at least one
+                // chunk, so continuations are decode-driven (no
+                // prefill-bucket width cap applies)
+                debug_assert!(0 < start && start < target);
+                let mut end = target
+                    .min(start.saturating_add(chunk_cap))
+                    .min(start.saturating_add(budget));
+                if end <= start {
+                    continue;
+                }
+                if self.bm.append_token(id, end) == Alloc::NoSpace {
+                    // shrink the chunk to what held + free blocks can
+                    // cover (partial progress beats stalling)
+                    let cover = (self.bm.holds(id)
+                        + self.bm.free_blocks())
+                        * self.bm.block_size;
+                    end = end.min(cover);
+                    if end <= start
+                        || self.bm.append_token(id, end)
+                            == Alloc::NoSpace
+                    {
+                        continue; // no progress possible this step
+                    }
+                }
+                budget -= end - start;
+                chunks.push(PrefillChunk { id, start, end,
+                                           admitted: false });
+            }
+            if !chunks.is_empty() || !decode.is_empty() {
+                break;
+            }
+            // nothing schedulable at all while prefills are stuck on
+            // the pool (decode is empty here, so no reservation can be
+            // invalidated): preempt LIFO and retry
+            let stuck = self
+                .running
+                .iter()
+                .any(|id| seqs[id].state == SeqState::Prefilling);
+            if !stuck || !self.preempt_one() {
+                break;
+            }
+        }
+
+        // ---- admissions: first chunks for waiting sequences. Cold
+        // chunks (no cache hit) batch through ONE prefill executable,
+        // so their count and widths must jointly fit a single compiled
+        // bucket (batch >= count && seq >= widest).
+        self.drop_impossible_heads(seqs);
+        let mut cold = 0usize;
+        let mut cold_w = 0usize; // widest cold chunk admitted this step
+        while let Some(&id) = self.waiting.front() {
+            if self.running.len() >= self.cfg.max_running || budget == 0 {
+                break;
+            }
+            let toks = seqs[&id].full_tokens();
+            let hit = self.bm.cached_prefix_tokens(&toks);
+            let target = toks.len();
+            debug_assert!(hit < target);
+            let mut end = target
+                .min(hit.saturating_add(chunk_cap))
+                .min(hit.saturating_add(budget));
+            if hit == 0 {
+                let cap = self.cold_width_cap(cold + 1);
+                if cap < cold_w.max(1) {
+                    break; // no bucket fits one more cold chunk
+                }
+                end = end.min(cap);
+            }
+            if end <= hit {
+                break;
+            }
+            // allocate doubles as the capacity check; on NoSpace keep
+            // FCFS head-of-line order — don't skip ahead. (It re-walks
+            // the hash chain `cached_prefix_tokens` just probed; see
+            // ROADMAP for folding admission into one walk.)
+            if self.bm.allocate_chunked(id, &toks, end) == Alloc::NoSpace {
+                break;
+            }
+            budget -= end - hit;
+            if hit == 0 {
+                cold += 1;
+                cold_w = cold_w.max(end);
+            }
+            self.waiting.pop_front();
+            self.running.push(id);
+            chunks.push(PrefillChunk { id, start: hit, end,
+                                       admitted: true });
+        }
+
+        StepPlan { chunks, decode }
+    }
+
+    /// Legacy (pre-chunking) policy: whole-content prefill admission
+    /// takes priority; decode steps are separate, never mixed.
+    fn plan_legacy(&mut self, seqs: &HashMap<u64, Sequence>) -> StepPlan {
+        self.drop_impossible_heads(seqs);
         let slots = self.cfg.max_running.saturating_sub(self.running.len());
         if !self.waiting.is_empty() && slots > 0 {
-            let mut ids = vec![];
-            let mut cached = vec![];
+            let mut chunks = vec![];
             let mut tokens = 0usize;
+            let mut cold = 0usize;
+            let mut cold_w = 0usize;
             while let Some(&id) = self.waiting.front() {
-                if ids.len() >= max_prefill_batch.min(slots) {
+                if chunks.len() >= slots {
                     break;
                 }
                 let toks = seqs[&id].full_tokens();
                 // only tokens past the cached prefix cost prefill compute
                 let hit = self.bm.cached_prefix_tokens(&toks);
-                if !ids.is_empty()
+                if !chunks.is_empty()
                     && tokens + (toks.len() - hit)
                         > self.cfg.max_batch_tokens
                 {
                     break;
                 }
-                // allocate doubles as the admission check (one hash
-                // walk); on NoSpace keep FCFS head-of-line order —
-                // don't skip ahead
+                // cold admissions run whole in one batched prefill
+                // call: count + widths must jointly fit one bucket
+                if hit == 0
+                    && self.cold_width_cap(cold + 1)
+                        < cold_w.max(toks.len())
+                {
+                    break;
+                }
                 if self.bm.allocate(id, &toks) == Alloc::NoSpace {
                     break;
                 }
                 tokens += toks.len() - hit;
-                ids.push(id);
-                cached.push(hit);
+                if hit == 0 {
+                    cold += 1;
+                    cold_w = cold_w.max(toks.len());
+                }
+                chunks.push(PrefillChunk {
+                    id,
+                    start: hit,
+                    end: toks.len(),
+                    admitted: true,
+                });
                 self.waiting.pop_front();
             }
-            if !ids.is_empty() {
-                self.running.extend(&ids);
-                return StepPlan::Prefill { ids, cached };
+            if !chunks.is_empty() {
+                self.running
+                    .extend(chunks.iter().map(|c| c.id));
+                return StepPlan { chunks, decode: vec![] };
             }
         }
-        // ---- decode the running set (reserve growth; preempt on pressure)
+        // ---- decode the running set (reserve growth; preempt on
+        // pressure)
         if self.running.is_empty() {
-            return StepPlan::Idle;
+            return StepPlan::default();
         }
         let max_decode = self
             .cfg
@@ -133,8 +434,6 @@ impl Scheduler {
             .copied()
             .max()
             .unwrap_or(1);
-        // reserve +1 token for each scheduled sequence, preempting from
-        // the back until everything scheduled fits
         loop {
             let batch: Vec<u64> =
                 self.running.iter().copied().take(max_decode).collect();
@@ -147,25 +446,11 @@ impl Scheduler {
                 }
             }
             if ok {
-                if batch.is_empty() {
-                    return StepPlan::Idle;
-                }
-                return StepPlan::Decode { ids: batch };
+                return StepPlan { chunks: vec![], decode: batch };
             }
-            // preempt the most recent admission (never the oldest alone)
-            let victim = *self.running.last().unwrap();
-            if self.running.len() == 1 {
-                // cannot make progress: the single sequence exceeds the
-                // pool; the engine will finish it with an error
-                self.preempted.push(victim);
-                self.running.clear();
-                self.bm.release(victim);
-                return StepPlan::Idle;
+            if !self.preempt_one() {
+                return StepPlan::default();
             }
-            self.running.pop();
-            self.bm.release(victim);
-            self.waiting.push_front(victim);
-            self.preempted.push(victim);
         }
     }
 }
@@ -197,38 +482,196 @@ mod tests {
         }
     }
 
-    #[test]
-    fn prefill_first_then_decode() {
-        let seqs = mk_seqs(&[8, 8, 8]);
-        let mut s = Scheduler::new(cfg(), BlockManager::new(16, 64));
-        for id in 0..3 {
-            s.add(id);
-        }
-        match s.plan(&seqs) {
-            StepPlan::Prefill { ids, cached } => {
-                assert_eq!(ids, vec![0, 1, 2]);
-                assert_eq!(cached, vec![0, 0, 0]); // cold cache
+    /// Apply a plan the way the engine does: advance cursors, flip
+    /// states, register blocks, record decode tokens.
+    fn apply(s: &mut Scheduler, seqs: &mut HashMap<u64, Sequence>,
+             plan: &StepPlan) {
+        for c in &plan.chunks {
+            let toks = seqs[&c.id].full_tokens();
+            let q = seqs.get_mut(&c.id).unwrap();
+            q.prefill_progress = c.end;
+            if c.end >= toks.len() {
+                q.state = SeqState::Running;
+                q.record_token(7);
+            } else {
+                q.state = SeqState::Prefilling;
             }
-            p => panic!("want prefill, got {p:?}"),
+            s.bm.register_prefix(c.id, &toks[..c.end]);
         }
-        match s.plan(&seqs) {
-            StepPlan::Decode { ids } => assert_eq!(ids, vec![0, 1, 2]),
-            p => panic!("want decode, got {p:?}"),
+        for id in &plan.decode {
+            seqs.get_mut(id).unwrap().record_token(7);
         }
     }
 
     #[test]
-    fn token_budget_limits_prefill_batch() {
+    fn prefill_first_then_decode() {
+        let mut seqs = mk_seqs(&[8, 8, 8]);
+        let mut s = Scheduler::new(cfg(), BlockManager::new(16, 64));
+        for id in 0..3 {
+            s.add(id);
+        }
+        let plan = s.plan(&seqs);
+        let ids: Vec<u64> = plan.chunks.iter().map(|c| c.id).collect();
+        assert_eq!(ids, vec![0, 1, 2]);
+        for c in &plan.chunks {
+            assert!(c.admitted);
+            assert_eq!((c.start, c.end), (0, 8)); // cold, fits one chunk
+        }
+        assert!(plan.decode.is_empty());
+        apply(&mut s, &mut seqs, &plan);
+        let plan = s.plan(&seqs);
+        assert!(plan.chunks.is_empty());
+        assert_eq!(plan.decode, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn token_budget_limits_admission() {
         let seqs = mk_seqs(&[30, 30, 30]);
         let mut s = Scheduler::new(cfg(), BlockManager::new(16, 64));
         for id in 0..3 {
             s.add(id);
         }
-        match s.plan(&seqs) {
-            // 30 + 30 <= 64 but +30 more would exceed
-            StepPlan::Prefill { ids, .. } => assert_eq!(ids.len(), 2),
-            p => panic!("{p:?}"),
+        // 30 + 30 <= 64 but the third only gets the 4 remaining budget
+        // tokens as a partial first chunk
+        let plan = s.plan(&seqs);
+        assert_eq!(plan.chunks.len(), 3);
+        assert_eq!(plan.chunks[0].end, 30);
+        assert_eq!(plan.chunks[1].end, 30);
+        assert_eq!((plan.chunks[2].start, plan.chunks[2].end), (0, 4));
+        let total: usize =
+            plan.chunks.iter().map(|c| c.end - c.start).sum();
+        assert_eq!(total, 64);
+    }
+
+    #[test]
+    fn legacy_mode_token_budget_limits_prefill_batch() {
+        let seqs = mk_seqs(&[30, 30, 30]);
+        let mut s = Scheduler::new(
+            EngineConfig { enable_chunked_prefill: false, ..cfg() },
+            BlockManager::new(16, 64),
+        );
+        for id in 0..3 {
+            s.add(id);
         }
+        // legacy: 30 + 30 <= 64 but +30 more would exceed; no partials
+        let plan = s.plan(&seqs);
+        assert_eq!(plan.chunks.len(), 2);
+        assert!(plan.chunks.iter().all(|c| c.end - c.start == 30));
+        assert!(plan.decode.is_empty());
+    }
+
+    #[test]
+    fn chunk_cap_splits_prefill_across_steps() {
+        let mut seqs = mk_seqs(&[30]);
+        let mut s = Scheduler::new(
+            EngineConfig { max_prefill_chunk: 12, ..cfg() },
+            BlockManager::new(16, 64),
+        );
+        s.add(0);
+        let mut bounds = vec![];
+        for _ in 0..4 {
+            let plan = s.plan(&seqs);
+            if plan.is_idle() {
+                break;
+            }
+            if let Some(c) = plan.chunks.first() {
+                bounds.push((c.start, c.end));
+            }
+            apply(&mut s, &mut seqs, &plan);
+        }
+        assert_eq!(bounds, vec![(0, 12), (12, 24), (24, 30)]);
+        assert_eq!(seqs[&0].state, SeqState::Running);
+    }
+
+    #[test]
+    fn cold_chunk_never_exceeds_largest_bucket() {
+        // prompt longer than the largest prefill bucket (32): the cold
+        // first chunk is bucket-capped, the rest continues start>0 —
+        // the structural fix for the recompute hazard
+        let mut seqs = mk_seqs(&[50]);
+        let mut s = Scheduler::new(cfg(), BlockManager::new(16, 64));
+        s.add(0);
+        let plan = s.plan(&seqs);
+        assert_eq!(plan.chunks.len(), 1);
+        assert_eq!((plan.chunks[0].start, plan.chunks[0].end), (0, 32));
+        apply(&mut s, &mut seqs, &plan);
+        let plan = s.plan(&seqs);
+        assert_eq!((plan.chunks[0].start, plan.chunks[0].end), (32, 50));
+        assert!(!plan.chunks[0].admitted);
+        apply(&mut s, &mut seqs, &plan);
+        assert_eq!(seqs[&0].state, SeqState::Running);
+        assert!(s.bm.check_conservation());
+    }
+
+    #[test]
+    fn cold_batch_jointly_fits_one_bucket() {
+        // Non-cross-product bucket grid (1,128) + (4,32): two 100-token
+        // cold prompts must NOT admit together (no single bucket has
+        // batch >= 2 && seq >= 100) — the second waits, and each
+        // admitted cold batch fits one compiled bucket exactly.
+        let mut seqs = mk_seqs(&[100, 100]);
+        seqs.get_mut(&1).unwrap().prompt = vec![2; 100]; // no cache hit
+        let mut s = Scheduler::new(
+            EngineConfig {
+                max_running: 4,
+                max_batch_tokens: 512,
+                decode_batches: vec![1, 2, 4],
+                prefill_buckets: vec![(1, 128), (4, 32)],
+                ..Default::default()
+            },
+            BlockManager::new(16, 64),
+        );
+        s.add(0);
+        s.add(1);
+        let plan = s.plan(&seqs);
+        assert_eq!(plan.chunks.len(), 1);
+        assert_eq!((plan.chunks[0].id, plan.chunks[0].end), (0, 100));
+        apply(&mut s, &mut seqs, &plan);
+        // next step: seq 0 decodes, seq 1 admits alone via (1,128)
+        let plan = s.plan(&seqs);
+        assert_eq!(plan.decode, vec![0]);
+        assert_eq!(plan.chunks.len(), 1);
+        assert_eq!((plan.chunks[0].id, plan.chunks[0].end), (1, 100));
+        // and three short cold prompts batch through (4,32) together
+        let mut seqs = mk_seqs(&[20, 20, 20]);
+        let mut s = Scheduler::new(
+            EngineConfig {
+                max_running: 4,
+                max_batch_tokens: 512,
+                decode_batches: vec![1, 2, 4],
+                prefill_buckets: vec![(1, 128), (4, 32)],
+                ..Default::default()
+            },
+            BlockManager::new(16, 64),
+        );
+        for id in 0..3 {
+            s.add(id);
+        }
+        let plan = s.plan(&seqs);
+        assert_eq!(plan.chunks.len(), 3);
+    }
+
+    #[test]
+    fn mixed_step_decodes_while_chunking() {
+        let mut seqs = mk_seqs(&[8, 40]);
+        let mut s = Scheduler::new(
+            EngineConfig { max_prefill_chunk: 16, ..cfg() },
+            BlockManager::new(16, 64),
+        );
+        s.add(0);
+        let plan = s.plan(&seqs); // seq 0 admits whole
+        apply(&mut s, &mut seqs, &plan);
+        s.add(1);
+        let plan = s.plan(&seqs);
+        // seq 0 decodes while seq 1 runs its first chunk: a mixed step
+        assert_eq!(plan.decode, vec![0]);
+        assert_eq!(plan.chunks.len(), 1);
+        assert_eq!(plan.chunks[0].id, 1);
+        assert_eq!((plan.chunks[0].start, plan.chunks[0].end), (0, 16));
+        apply(&mut s, &mut seqs, &plan);
+        let plan = s.plan(&seqs);
+        assert_eq!(plan.decode, vec![0]);
+        assert_eq!((plan.chunks[0].start, plan.chunks[0].end), (16, 32));
     }
 
     #[test]
@@ -255,27 +698,19 @@ mod tests {
             BlockManager::new(16, 64),
         );
         s.add(0);
-        match s.plan(&seqs) {
-            StepPlan::Prefill { ids, cached } => {
-                assert_eq!(ids, vec![0]);
-                assert_eq!(cached, vec![0]);
-            }
-            p => panic!("{p:?}"),
-        }
-        // engine side: register the filled blocks, then finish
-        let toks = seqs[&0].full_tokens();
-        assert_eq!(s.bm.register_prefix(0, &toks).len(), 2);
-        seqs.get_mut(&0).unwrap().state = SeqState::Running;
+        let plan = s.plan(&seqs);
+        assert_eq!(plan.chunks.len(), 1);
+        assert_eq!((plan.chunks[0].start, plan.chunks[0].end), (0, 32));
+        apply(&mut s, &mut seqs, &plan);
         s.on_finished(0);
         s.add(1);
         s.add(2);
-        match s.plan(&seqs) {
-            StepPlan::Prefill { ids, cached } => {
-                // 16 + 16 post-hit tokens <= 40; full 32 + 32 would not fit
-                assert_eq!(ids, vec![1, 2]);
-                assert_eq!(cached, vec![16, 16]);
-            }
-            p => panic!("{p:?}"),
+        let plan = s.plan(&seqs);
+        // 16 + 16 post-hit tokens <= 40; full 32 + 32 would not fit
+        let ids: Vec<u64> = plan.chunks.iter().map(|c| c.id).collect();
+        assert_eq!(ids, vec![1, 2]);
+        for c in &plan.chunks {
+            assert_eq!((c.start, c.end), (16, 32));
         }
         assert!(s.bm.check_conservation());
         assert_eq!(s.bm.table(1).unwrap()[0], s.bm.table(2).unwrap()[0]);
@@ -283,13 +718,40 @@ mod tests {
 
     #[test]
     fn fcfs_no_starvation_head_of_line() {
-        // a huge head request blocks admission rather than being skipped
+        // a head request that does not fit *right now* (but could once
+        // the pool drains) blocks admission rather than being skipped
+        let mut seqs = mk_seqs(&[32, 96, 2]);
+        // distinct content so the big head can't ride seq 0's cache
+        seqs.get_mut(&1).unwrap().prompt = vec![2; 96];
+        let mut s = Scheduler::new(cfg(), BlockManager::new(16, 8));
+        s.bm.watermark_blocks = 1;
+        s.add(0);
+        let plan = s.plan(&seqs); // seq 0 prefills whole (2 blocks)
+        apply(&mut s, &mut seqs, &plan);
+        s.add(1); // needs 6 blocks + watermark > free, but <= pool
+        s.add(2);
+        let plan = s.plan(&seqs);
+        assert!(plan.chunks.is_empty()); // seq 2 must NOT skip ahead
+        assert_eq!(plan.decode, vec![0]);
+        assert_eq!(s.waiting_len(), 2);
+        assert!(s.dropped.is_empty());
+    }
+
+    #[test]
+    fn impossible_head_is_dropped_not_wedged() {
+        // a waiting sequence whose content can never fit the pool at
+        // all (recompute content grown past it, or an oversized direct
+        // add) is dropped so the queue behind it still serves
         let seqs = mk_seqs(&[1000, 2]);
         let mut s = Scheduler::new(cfg(), BlockManager::new(16, 8));
         s.add(0);
         s.add(1);
-        assert_eq!(s.plan(&seqs), StepPlan::Idle);
-        assert_eq!(s.waiting_len(), 2);
+        let plan = s.plan(&seqs);
+        assert_eq!(s.dropped, vec![0]);
+        assert_eq!(plan.chunks.len(), 1); // seq 1 admits
+        assert_eq!(plan.chunks[0].id, 1);
+        assert_eq!(s.waiting_len(), 0);
+        assert!(s.bm.check_conservation());
     }
 
     #[test]
@@ -300,31 +762,64 @@ mod tests {
         s.add(0);
         s.add(1);
         // both admitted: 4 + 4 = 8 of 9 blocks
-        match s.plan(&seqs) {
-            StepPlan::Prefill { ids, .. } => assert_eq!(ids.len(), 2),
-            p => panic!("{p:?}"),
-        }
-        // grow both: each wants a new block at ctx 17 -> only 1 free
-        for q in seqs.values_mut() {
-            q.state = SeqState::Running;
-        }
-        match s.plan(&seqs) {
-            StepPlan::Decode { ids } => {
-                assert_eq!(ids, vec![0]); // seq 1 preempted (LIFO)
-            }
-            p => panic!("{p:?}"),
-        }
+        let plan = s.plan(&seqs);
+        assert_eq!(plan.chunks.len(), 2);
+        apply(&mut s, &mut seqs, &plan);
+        // grow both: each wants a new block at ctx 18 -> only 1 free;
+        // seq 1 is preempted (LIFO). Its prompt blocks are cached
+        // (identical prompts), so the chunked scheduler immediately
+        // re-admits it warm in the same plan — recompute via a
+        // one-token suffix chunk instead of a full re-prefill.
+        let plan = s.plan(&seqs);
+        assert_eq!(plan.decode, vec![0]);
         assert_eq!(s.preempted, vec![1]);
-        assert_eq!(s.waiting_len(), 1);
+        for &id in &s.preempted {
+            seqs.get_mut(&id).unwrap().preempt();
+        }
+        assert_eq!(plan.chunks.len(), 1);
+        let c = &plan.chunks[0];
+        assert!(c.admitted && c.id == 1);
+        assert_eq!((c.start, c.end), (16, 17)); // warm recompute chunk
+        assert_eq!(s.waiting_len(), 0);
+        assert!(s.bm.check_conservation());
+    }
+
+    #[test]
+    fn sole_oversized_sequence_is_dropped() {
+        // one sequence that alone outgrows the pool: reported dropped,
+        // not requeued (the engine finishes it with PoolExhausted)
+        let mut seqs = mk_seqs(&[8]);
+        let mut s = Scheduler::new(cfg(), BlockManager::new(4, 3));
+        s.bm.watermark_blocks = 0;
+        s.add(0);
+        let plan = s.plan(&seqs);
+        assert_eq!(plan.chunks.len(), 1);
+        apply(&mut s, &mut seqs, &plan);
+        // grow until the pool (3 blocks = 12 slots) is outgrown
+        let mut dropped = false;
+        for _ in 0..8 {
+            let plan = s.plan(&seqs);
+            if !s.dropped.is_empty() {
+                assert_eq!(s.dropped, vec![0]);
+                assert!(plan.is_idle());
+                dropped = true;
+                break;
+            }
+            apply(&mut s, &mut seqs, &plan);
+        }
+        assert!(dropped, "oversized sequence never dropped");
+        assert_eq!(s.running_len(), 0);
+        assert_eq!(s.bm.holds(0), 0);
         assert!(s.bm.check_conservation());
     }
 
     #[test]
     fn finished_releases_blocks() {
-        let seqs = mk_seqs(&[8]);
+        let mut seqs = mk_seqs(&[8]);
         let mut s = Scheduler::new(cfg(), BlockManager::new(16, 8));
         s.add(0);
-        s.plan(&seqs);
+        let plan = s.plan(&seqs);
+        apply(&mut s, &mut seqs, &plan);
         assert!(s.bm.holds(0) > 0);
         s.on_finished(0);
         assert_eq!(s.bm.holds(0), 0);
@@ -333,67 +828,73 @@ mod tests {
 
     #[test]
     fn random_workload_invariants() {
-        prop::check("scheduler invariants", 15, |rng| {
-            let mut seqs = HashMap::new();
-            let mut s = Scheduler::new(
-                EngineConfig {
-                    max_running: 1 + rng.below(6),
-                    max_batch_tokens: 32 + rng.below(96),
-                    decode_batches: vec![1, 2, 4, 8],
-                    prefill_buckets: vec![(4, 32)],
-                    ..Default::default()
-                },
-                BlockManager::new(1 + rng.below(8), 16 + rng.below(64)),
-            );
-            let mut next = 0u64;
-            for _ in 0..120 {
-                if rng.below(3) == 0 {
-                    let l = 1 + rng.below(24);
-                    seqs.insert(
-                        next,
-                        Sequence::new(next, vec![1; l],
-                                      SamplingParams::default()),
-                    );
-                    s.add(next);
-                    next += 1;
-                }
-                match s.plan(&seqs) {
-                    StepPlan::Prefill { ids, .. } => {
-                        assert!(!ids.is_empty());
-                        for id in ids {
-                            seqs.get_mut(&id).unwrap().state =
-                                SeqState::Running;
-                        }
+        for chunk in [0usize, 7, 16] {
+            prop::check("scheduler invariants", 10, |rng| {
+                let mut seqs = HashMap::new();
+                let mut s = Scheduler::new(
+                    EngineConfig {
+                        max_running: 1 + rng.below(6),
+                        max_batch_tokens: 32 + rng.below(96),
+                        decode_batches: vec![1, 2, 4, 8],
+                        prefill_buckets: vec![(4, 32)],
+                        max_prefill_chunk: chunk,
+                        ..Default::default()
+                    },
+                    BlockManager::new(1 + rng.below(8),
+                                      16 + rng.below(64)),
+                );
+                let mut next = 0u64;
+                for _ in 0..120 {
+                    if rng.below(3) == 0 {
+                        let l = 1 + rng.below(24);
+                        seqs.insert(
+                            next,
+                            Sequence::new(next, vec![1; l],
+                                          SamplingParams::default()),
+                        );
+                        s.add(next);
+                        next += 1;
                     }
-                    StepPlan::Decode { ids } => {
-                        assert!(!ids.is_empty());
-                        // running set ⊆ allocated set
-                        for &id in &ids {
-                            assert!(s.bm.holds(id) > 0);
-                            let q = seqs.get_mut(&id).unwrap();
-                            q.record_token(7);
-                            // randomly finish
-                            if rng.below(8) == 0 {
-                                q.finish(
-                                    super::super::sequence::FinishReason
-                                        ::MaxTokens,
-                                );
-                                s.on_finished(id);
-                            }
-                        }
-                    }
-                    StepPlan::Idle => {}
-                }
-                for &id in &s.preempted {
-                    if let Some(q) = seqs.get_mut(&id) {
-                        if q.state == SeqState::Running {
+                    let plan = s.plan(&seqs);
+                    for &id in &s.preempted {
+                        let q = seqs.get_mut(&id).unwrap();
+                        if q.state == SeqState::Running
+                            || q.state == SeqState::Prefilling
+                        {
                             q.preempt();
                         }
                     }
+                    for &id in &s.dropped {
+                        seqs.get_mut(&id).unwrap().finish(
+                            super::super::sequence::FinishReason
+                                ::PoolExhausted,
+                        );
+                    }
+                    for c in &plan.chunks {
+                        // chunk invariants: in-range, block-covered
+                        let q = &seqs[&c.id];
+                        assert!(c.start < c.end);
+                        assert!(c.end <= q.context_len());
+                        assert!(s.bm.holds(c.id) * s.bm.block_size
+                            >= c.end);
+                    }
+                    apply(&mut s, &mut seqs, &plan);
+                    for id in plan.decode {
+                        assert!(s.bm.holds(id) > 0);
+                        let q = seqs.get_mut(&id).unwrap();
+                        // randomly finish
+                        if rng.below(8) == 0 {
+                            q.finish(
+                                super::super::sequence::FinishReason
+                                    ::MaxTokens,
+                            );
+                            s.on_finished(id);
+                        }
+                    }
+                    assert!(s.bm.check_conservation());
+                    assert!(s.running_len() <= s.cfg.max_running);
                 }
-                assert!(s.bm.check_conservation());
-                assert!(s.running_len() <= s.cfg.max_running);
-            }
-        });
+            });
+        }
     }
 }

@@ -1,34 +1,64 @@
 //! Request / sequence state machine.
+//!
+//! # Invariants
+//!
+//! * `prefill_progress` is the *chunk cursor*: how many KV rows of the
+//!   current prefill pass exist (computed **or** copied from cached
+//!   blocks). It is distinct from [`Sequence::cached_prefix_len`], which
+//!   records only how many of those rows came from the prefix cache at
+//!   the most recent admission. `cached_prefix_len <= prefill_progress`
+//!   always holds while prefilling.
+//! * A sequence is [`SeqState::Prefilling`] iff it is admitted (holds
+//!   blocks) but `prefill_progress` has not yet reached
+//!   [`Sequence::context_len`]; it becomes [`SeqState::Running`] the
+//!   moment its first token of the pass is sampled.
+//! * Preemption (recompute policy) drops all KV: `preempt()` resets the
+//!   chunk cursor and the cached-prefix count to zero; both are
+//!   re-established at the next admission. Generated output is *kept* —
+//!   it is re-prefilled as part of the content on re-admission.
 
 use std::time::Instant;
 
 /// Lifecycle of a request inside the engine.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SeqState {
-    /// In the waiting queue (not yet prefillled, or preempted).
+    /// In the waiting queue (not yet prefilled, or preempted).
     Waiting,
+    /// Admitted (blocks held) with prefill still in progress: the chunk
+    /// cursor has not reached the full content length yet.
+    Prefilling,
     /// In the running set (KV resident, decoding).
     Running,
     /// Finished (EOS / max tokens); output available.
     Finished,
 }
 
+/// Why a sequence stopped generating.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum FinishReason {
+    /// Generated its `max_new_tokens` budget.
     MaxTokens,
+    /// Emitted the end-of-sequence token.
     Eos,
     /// Prompt was longer than the model's max_len budget.
     PromptTooLong,
+    /// The sequence alone exceeded the KV block pool: the scheduler
+    /// could not make progress even after preempting everything else.
+    PoolExhausted,
 }
 
 /// Sampling parameters for one request.
 #[derive(Debug, Clone)]
 pub struct SamplingParams {
+    /// Generation budget (output tokens).
     pub max_new_tokens: usize,
+    /// Softmax temperature; `<= 0` means greedy argmax.
     pub temperature: f32,
+    /// Restrict sampling to the `top_k` highest logits (0 = no limit).
     pub top_k: usize,
     /// Token id treated as end-of-sequence (vocab-dependent); None = none.
     pub eos: Option<u32>,
+    /// Per-request sampling seed (mixed with the engine seed).
     pub seed: u64,
 }
 
@@ -47,25 +77,45 @@ impl Default for SamplingParams {
 /// One request tracked end-to-end.
 #[derive(Debug, Clone)]
 pub struct Sequence {
+    /// Engine-assigned id (submission order).
     pub id: u64,
+    /// Prompt token ids as submitted.
     pub prompt: Vec<u32>,
+    /// Generated token ids so far.
     pub output: Vec<u32>,
+    /// Sampling parameters for this request.
     pub params: SamplingParams,
+    /// Current lifecycle state.
     pub state: SeqState,
+    /// Finish reason once [`SeqState::Finished`].
     pub finish: Option<FinishReason>,
     /// Times a preemption evicted this sequence (recompute policy).
     pub preemptions: usize,
-    /// Prompt tokens served from the prefix cache at the most recent
-    /// admission (0 when the prefill was fully computed).
+    /// Tokens served from the prefix cache at the most recent
+    /// admission (0 when the prefill was fully computed). On a
+    /// re-admission after preemption this can exceed the prompt length:
+    /// blocks registered while *decoding* make generated tokens
+    /// cacheable too.
     pub cached_prefix_len: usize,
+    /// Chunk cursor: KV rows of the current prefill pass that exist
+    /// (copied from cache or computed). Advanced per executed chunk;
+    /// reset by [`Sequence::preempt`]. See the module docs for the
+    /// distinction from `cached_prefix_len`.
+    pub prefill_progress: usize,
+    /// Wall-clock arrival (submission) time.
     pub arrived: Instant,
+    /// Engine step count at submission (TTFT-in-steps proxy).
+    pub arrived_step: usize,
+    /// Wall-clock time of the first generated token, if any.
     pub first_token_at: Option<Instant>,
+    /// Wall-clock finish time, if finished.
     pub finished_at: Option<Instant>,
     /// Per-output-token completion times (for latency percentiles).
     pub token_times: Vec<Instant>,
 }
 
 impl Sequence {
+    /// A new sequence in [`SeqState::Waiting`] with empty output.
     pub fn new(id: u64, prompt: Vec<u32>, params: SamplingParams)
         -> Sequence {
         Sequence {
@@ -77,7 +127,9 @@ impl Sequence {
             finish: None,
             preemptions: 0,
             cached_prefix_len: 0,
+            prefill_progress: 0,
             arrived: Instant::now(),
+            arrived_step: 0,
             first_token_at: None,
             finished_at: None,
             token_times: Vec::new(),
@@ -107,6 +159,7 @@ impl Sequence {
             .expect("empty sequence")
     }
 
+    /// Append a generated token (records first-token/latency times).
     pub fn record_token(&mut self, tok: u32) {
         let now = Instant::now();
         if self.output.is_empty() {
@@ -116,6 +169,7 @@ impl Sequence {
         self.token_times.push(now);
     }
 
+    /// Whether the sequence should stop, and why.
     pub fn should_finish(&self) -> Option<FinishReason> {
         if let (Some(eos), Some(&last)) =
             (self.params.eos, self.output.last())
@@ -130,18 +184,27 @@ impl Sequence {
         None
     }
 
+    /// Mark finished with `reason` (records the finish time).
     pub fn finish(&mut self, reason: FinishReason) {
         self.state = SeqState::Finished;
         self.finish = Some(reason);
         self.finished_at = Some(Instant::now());
     }
 
-    /// Drop generated state for recompute-preemption: the prompt is
-    /// re-extended with the tokens generated so far so no output is lost.
+    /// Drop generated KV state for recompute-preemption: the content is
+    /// re-prefilled from scratch on re-admission (prompt + generated
+    /// tokens, so no output is lost). Valid while running *or* mid-way
+    /// through a chunked prefill.
     pub fn preempt(&mut self) {
-        assert_eq!(self.state, SeqState::Running);
+        assert!(
+            matches!(self.state, SeqState::Running | SeqState::Prefilling),
+            "preempt in state {:?}",
+            self.state
+        );
         self.state = SeqState::Waiting;
         self.preemptions += 1;
+        self.prefill_progress = 0;
+        self.cached_prefix_len = 0;
     }
 }
 
@@ -186,13 +249,27 @@ mod tests {
     }
 
     #[test]
-    fn preemption_counts() {
+    fn preemption_counts_and_resets_cursor() {
         let mut s = seq(&[1, 2], 5);
         s.state = SeqState::Running;
+        s.prefill_progress = 2;
+        s.cached_prefix_len = 2;
         s.record_token(9);
         s.preempt();
         assert_eq!(s.state, SeqState::Waiting);
         assert_eq!(s.preemptions, 1);
         assert_eq!(s.output, vec![9]); // output preserved for recompute
+        assert_eq!(s.prefill_progress, 0); // chunk cursor dropped with KV
+        assert_eq!(s.cached_prefix_len, 0);
+    }
+
+    #[test]
+    fn preempt_mid_prefill() {
+        let mut s = seq(&[1, 2, 3, 4], 5);
+        s.state = SeqState::Prefilling;
+        s.prefill_progress = 2;
+        s.preempt();
+        assert_eq!(s.state, SeqState::Waiting);
+        assert_eq!(s.prefill_progress, 0);
     }
 }

@@ -11,10 +11,14 @@
 //!
 //! `prompt` entries must be non-negative integer token ids; malformed
 //! entries reject the whole request with an `{"error": ...}` line (they
-//! are never silently coerced). `cached_tokens` reports how many prompt
-//! tokens were served from the engine's shared prefix cache (see
-//! [`crate::coordinator`] for the design: chained content hashes over
-//! full KV blocks, refcounted sharing, CoW tail block, LRU eviction).
+//! are never silently coerced). `cached_tokens` reports how many tokens
+//! were served from the engine's shared prefix cache at the last
+//! admission (see [`crate::coordinator`] for the design: chained
+//! content hashes over full KV blocks, refcounted sharing, CoW tail
+//! block, LRU eviction, chunked prefill; `docs/ARCHITECTURE.md` walks a
+//! request end to end). `finish` is one of `max_tokens`, `eos`,
+//! `prompt_too_long`, or `pool_exhausted` (the request alone outgrew
+//! the KV pool).
 //!
 //! Architecture: connection threads parse requests into an inbox; the
 //! engine thread (the only owner of the PJRT runtime, which is not Sync)
@@ -85,6 +89,9 @@ pub fn response_json(id: u64, seq: &Sequence) -> String {
         }
         Some(crate::coordinator::sequence::FinishReason::PromptTooLong) => {
             "prompt_too_long"
+        }
+        Some(crate::coordinator::sequence::FinishReason::PoolExhausted) => {
+            "pool_exhausted"
         }
         None => "unknown",
     };

@@ -262,3 +262,235 @@ fn rejects_overlong_prompt() {
     assert_eq!(fin.len(), 1);
     assert_eq!(fin[0].finish, Some(FinishReason::PromptTooLong));
 }
+
+#[test]
+fn impossible_pool_request_fails_fast() {
+    // a prompt whose blocks can never fit the pool must not wedge the
+    // FCFS queue head forever — it fails fast with PoolExhausted and
+    // traffic behind it still serves
+    let Some(m) = manifest() else { return };
+    let ecfg = EngineConfig {
+        block_size: 4,
+        total_blocks: 6, // 24 token slots
+        max_running: 2,
+        ..Default::default()
+    };
+    let mut eng = fp16_engine(&m, ecfg);
+    let huge = eng.submit(
+        (0..100u32).map(|t| t % 512).collect(),
+        SamplingParams { max_new_tokens: 4, ..Default::default() },
+    );
+    let small = eng.submit(
+        (0..6u32).map(|t| t + 1).collect(),
+        SamplingParams { max_new_tokens: 4, ..Default::default() },
+    );
+    eng.run_to_completion(500).unwrap();
+    let fin = eng.take_finished();
+    assert_eq!(fin.len(), 2);
+    let h = fin.iter().find(|s| s.id == huge).unwrap();
+    assert_eq!(h.finish, Some(FinishReason::PoolExhausted));
+    let s = fin.iter().find(|s| s.id == small).unwrap();
+    assert_eq!(s.output.len(), 4);
+}
+
+#[test]
+fn chunked_prefill_golden_identical_streams() {
+    // Engine golden test: the same trace run unchunked (legacy), with
+    // chunking on but uncapped, and with chunk caps 64 and 17 must emit
+    // bit-identical token streams — chunking changes *when* prefill
+    // work happens, never *what* is computed. The trace mixes cold
+    // long prompts (multiple chunks at cap 17), a shared prefix (warm
+    // suffix chunks), and enough requests for mixed steps.
+    let Some(m) = manifest() else { return };
+    let mut rng = sqplus::util::rng::Rng::new(7);
+    let prefix: Vec<u32> =
+        (0..16).map(|_| (1 + rng.below(511)) as u32).collect();
+    let mut prompts: Vec<Vec<u32>> = vec![];
+    for i in 0..4u32 {
+        // cold prompts of ~40 tokens
+        prompts.push(
+            (0..40u32).map(|t| (i * 53 + t * 17 + 1) % 512).collect(),
+        );
+        // warm prompts: shared 16-token prefix + unique suffix
+        let mut p = prefix.clone();
+        p.extend((0..6u32).map(|t| (i * 37 + t * 11 + 1) % 512));
+        prompts.push(p);
+    }
+    let run = |chunked: bool, cap: usize| {
+        let ecfg = EngineConfig {
+            block_size: 4,
+            enable_chunked_prefill: chunked,
+            max_prefill_chunk: cap,
+            ..Default::default()
+        };
+        let mut eng = fp16_engine(&m, ecfg);
+        for p in &prompts {
+            eng.submit(
+                p.clone(),
+                SamplingParams { max_new_tokens: 6, ..Default::default() },
+            );
+        }
+        eng.run_to_completion(5000).unwrap();
+        let mut fin = eng.take_finished();
+        fin.sort_by_key(|s| s.id);
+        let outs: Vec<Vec<u32>> =
+            fin.iter().map(|s| s.output.clone()).collect();
+        (outs, eng.metrics.prefill_chunks, eng.metrics.mixed_steps)
+    };
+    let (legacy, _, legacy_mixed) = run(false, 0);
+    assert_eq!(legacy.len(), prompts.len());
+    assert_eq!(legacy_mixed, 0, "legacy mode must never mix");
+    for (cap, min_chunks) in [(0usize, 1), (64, 1), (17, 2)] {
+        let (outs, chunks, _) = run(true, cap);
+        assert_eq!(legacy, outs,
+                   "stream changed with chunking cap {cap}");
+        assert!(chunks >= prompts.len() * min_chunks,
+                "cap {cap}: only {chunks} chunks");
+    }
+}
+
+/// Engine on the `small` model (max_len 256 > largest prefill bucket
+/// 128) — the configuration where the recompute hazard is real.
+fn small_fp16_engine(m: &Manifest, ecfg: EngineConfig) -> Option<Engine> {
+    let cfg = ModelConfig::small();
+    let w = init_weights(&cfg, &InitSpec::default());
+    let deploy = pipeline::fp16_deploy(&cfg, &w);
+    let Ok(rt) = ModelRuntime::load(m, "small", Precision::Fp16, &deploy)
+    else {
+        eprintln!("SKIP: small artifacts not built");
+        return None;
+    };
+    Some(Engine::new(
+        Deployment::single(rt, GpuProfile::sim_small(256)), ecfg,
+    ))
+}
+
+#[test]
+fn preemption_recompute_beyond_largest_bucket_completes() {
+    // The recompute hazard, structurally fixed: two 120-token prompts
+    // on a pool sized so one is preempted after decoding past the
+    // 128-token bucket. Its recompute content (prompt + output > 128)
+    // exceeds every compiled prefill bucket — pre-chunking this errored
+    // the engine loop ("no prefill bucket"); chunked prefill splits the
+    // recompute across a bucket-capped cold chunk plus decode-driven
+    // continuation chunks and completes.
+    let Some(m) = manifest() else { return };
+    let ecfg = EngineConfig {
+        block_size: 16,
+        total_blocks: 18,
+        max_running: 2,
+        ..Default::default()
+    };
+    let Some(mut eng) = small_fp16_engine(&m, ecfg) else { return };
+    for i in 0..2u32 {
+        eng.submit(
+            (0..120u32).map(|t| (i * 131 + t * 7 + 1) % 1024).collect(),
+            SamplingParams { max_new_tokens: 60, ..Default::default() },
+        );
+    }
+    eng.run_to_completion(20_000).unwrap();
+    let fin = eng.take_finished();
+    assert_eq!(fin.len(), 2);
+    for f in &fin {
+        assert_eq!(f.finish, Some(FinishReason::MaxTokens));
+        assert_eq!(f.output.len(), 60, "seq {} truncated", f.id);
+    }
+    let rep = eng.metrics.report();
+    assert!(rep.preemptions > 0, "pool never pressured (test too weak)");
+}
+
+#[test]
+fn legacy_clamp_keeps_recompute_within_bucket() {
+    // Belt-and-braces regression for unchunked mode: the same shape of
+    // workload used to error the engine loop when a preempted
+    // sequence's prompt+output outgrew the largest bucket. With
+    // chunking disabled, admission now clamps max_new_tokens to
+    // bucket capacity minus the prompt, so recompute always fits and
+    // the trace completes (with correspondingly truncated output).
+    let Some(m) = manifest() else { return };
+    let ecfg = EngineConfig {
+        block_size: 16,
+        total_blocks: 15,
+        max_running: 2,
+        enable_chunked_prefill: false,
+        ..Default::default()
+    };
+    let Some(mut eng) = small_fp16_engine(&m, ecfg) else { return };
+    for i in 0..2u32 {
+        eng.submit(
+            (0..100u32).map(|t| (i * 113 + t * 5 + 1) % 1024).collect(),
+            SamplingParams { max_new_tokens: 60, ..Default::default() },
+        );
+    }
+    eng.run_to_completion(20_000).unwrap();
+    let fin = eng.take_finished();
+    assert_eq!(fin.len(), 2);
+    for f in &fin {
+        // clamped to bucket (128) - prompt (100) = 28, never errored
+        assert_eq!(f.output.len(), 28);
+    }
+}
+
+#[test]
+fn long_prompt_beyond_bucket_serves_chunked() {
+    // A prompt longer than every compiled prefill bucket (but within
+    // max_len) is rejected by legacy mode and *served* by chunked mode.
+    let Some(m) = manifest() else { return };
+    let prompt: Vec<u32> =
+        (0..160u32).map(|t| (t * 13 + 1) % 1024).collect();
+    let legacy = EngineConfig {
+        enable_chunked_prefill: false,
+        ..Default::default()
+    };
+    let Some(mut eng) = small_fp16_engine(&m, legacy) else { return };
+    eng.submit(prompt.clone(), SamplingParams::default());
+    let fin = eng.take_finished();
+    assert_eq!(fin[0].finish, Some(FinishReason::PromptTooLong));
+
+    let Some(mut eng) =
+        small_fp16_engine(&m, EngineConfig::default()) else { return };
+    let id = eng.submit(
+        prompt,
+        SamplingParams { max_new_tokens: 8, ..Default::default() },
+    );
+    eng.run_to_completion(5000).unwrap();
+    let fin = eng.take_finished();
+    let seq = fin.iter().find(|s| s.id == id).unwrap();
+    assert_eq!(seq.finish, Some(FinishReason::MaxTokens));
+    assert_eq!(seq.output.len(), 8);
+    assert!(eng.metrics.prefill_chunks >= 2, "prompt was not chunked");
+}
+
+#[test]
+fn decode_fills_registered_blocks_warm_later_requests() {
+    // Third ROADMAP gap: blocks filled during *decode* seed the cache.
+    // A long generation registers its output blocks; a second request
+    // whose prompt equals prompt+output of the first hits them.
+    let Some(m) = manifest() else { return };
+    let ecfg = EngineConfig { block_size: 4, ..Default::default() };
+    let mut eng = fp16_engine(&m, ecfg);
+    let prompt: Vec<u32> = (0..8u32).map(|t| t * 29 % 512 + 1).collect();
+    let id = eng.submit(
+        prompt.clone(),
+        SamplingParams { max_new_tokens: 12, ..Default::default() },
+    );
+    eng.run_to_completion(500).unwrap();
+    let fin = eng.take_finished();
+    let first = fin.iter().find(|s| s.id == id).unwrap();
+    assert!(eng.metrics.decode_registered_blocks > 0,
+            "decode registered no blocks");
+    // second request: prompt = first's prompt + generated output
+    let mut warm_prompt = prompt;
+    warm_prompt.extend(&first.output);
+    let id2 = eng.submit(
+        warm_prompt.clone(),
+        SamplingParams { max_new_tokens: 4, ..Default::default() },
+    );
+    eng.run_to_completion(500).unwrap();
+    let fin = eng.take_finished();
+    let second = fin.iter().find(|s| s.id == id2).unwrap();
+    // hit covers all full blocks except the CoW tail: 20 tokens -> 4
+    // full blocks (16), last block private
+    assert_eq!(second.cached_prefix_len, 16,
+               "decode-filled blocks not hit");
+}

@@ -2,13 +2,20 @@
 //! pure accounting, no PJRT runtime needed, so these run everywhere
 //! (including CI without artifacts).
 //!
-//! Invariants locked down, with and without prefix caching:
+//! Invariants locked down, with and without prefix caching and across
+//! chunk sizes:
 //! * block conservation (`check_conservation`) after every plan;
 //! * no double-free when a sequence is preempted while its prefix
-//!   blocks are shared with other live sequences;
+//!   blocks are shared with other live sequences — including preemption
+//!   *while partially prefilled*;
 //! * refcounts return to zero (whole pool free) after all sequences
 //!   finish;
-//! * FCFS admission order, LIFO preemption order.
+//! * FCFS admission order, LIFO preemption order;
+//! * chunk ranges per sequence tile `[hit, target)` exactly — no gaps,
+//!   no overlaps — and cold chunks never exceed the largest bucket;
+//! * determinism: under a deterministic fake model, any
+//!   `max_prefill_chunk` (and legacy unchunked mode) produces the same
+//!   token stream per sequence.
 
 use std::collections::HashMap;
 
@@ -16,7 +23,7 @@ use sqplus::config::EngineConfig;
 use sqplus::coordinator::block_manager::{Alloc, BlockManager};
 use sqplus::coordinator::scheduler::{Scheduler, StepPlan};
 use sqplus::coordinator::sequence::{
-    SamplingParams, SeqState, Sequence,
+    FinishReason, SamplingParams, SeqState, Sequence,
 };
 use sqplus::util::prop;
 use sqplus::util::rng::Rng;
@@ -30,10 +37,24 @@ fn prompt(rng: &mut Rng, prefixes: &[Vec<u32>], uniq: u32) -> Vec<u32> {
     p
 }
 
-/// Drive a scheduler the way the engine does: prefill plans register
-/// their blocks, decode plans record a token, sequences finish at their
-/// token budget, preempted sequences are reset for recompute. Returns
-/// the admission order observed.
+/// Deterministic fake model: the next token is a pure function of the
+/// content so far. Any correct scheduler must therefore produce the
+/// same stream for a sequence regardless of how its prefill was
+/// chunked, interleaved, or preempted-and-recomputed.
+fn fake_next_token(content: &[u32]) -> u32 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &t in content {
+        h ^= t as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    (h % 997) as u32
+}
+
+/// Drive a scheduler the way the engine does: chunks advance cursors
+/// and register blocks, completed prefills and decodes record a token
+/// from the fake model, sequences finish at their token budget,
+/// preempted sequences are reset for recompute, dropped sequences
+/// finish with `PoolExhausted`. Returns the admission order observed.
 fn drive(
     s: &mut Scheduler, seqs: &mut HashMap<u64, Sequence>, rng: &mut Rng,
     steps: usize, submit_total: usize, prefixes: &[Vec<u32>],
@@ -62,58 +83,72 @@ fn drive(
                 "preemption not LIFO"
             );
             let q = seqs.get_mut(&victim).unwrap();
-            if q.state == SeqState::Running {
+            if q.state == SeqState::Running
+                || q.state == SeqState::Prefilling
+            {
                 q.preempt();
             }
         }
-        match plan {
-            StepPlan::Prefill { ids, cached } => {
-                assert_eq!(ids.len(), cached.len());
-                for (i, id) in ids.iter().enumerate() {
-                    let toks = seqs[id].full_tokens();
-                    // the hit the scheduler reported is what the block
-                    // manager sees, block-aligned and never the whole
-                    // content
-                    assert_eq!(cached[i] % s.bm.block_size, 0);
-                    assert!(cached[i] < toks.len());
-                    // engine side: mark running, register blocks
-                    seqs.get_mut(id).unwrap().state = SeqState::Running;
-                    s.bm.register_prefix(*id, &toks);
-                    admission_order.push(*id);
-                    running_model.push(*id);
-                }
+        // dropped: either the sole running sequence outgrew the pool
+        // (comes off the back, like a preemption) or a waiting head
+        // whose content can never fit; the engine finishes both with
+        // PoolExhausted
+        for &victim in &s.dropped {
+            if running_model.last() == Some(&victim) {
+                running_model.pop();
+            } else {
+                assert!(!running_model.contains(&victim),
+                        "mid-list drop");
             }
-            StepPlan::Decode { ids } => {
-                for id in ids {
-                    assert!(s.bm.holds(id) > 0, "decoding unallocated");
-                    let q = seqs.get_mut(&id).unwrap();
-                    q.record_token(7);
-                    if q.output.len() >= 4 + (id % 5) as usize {
-                        q.finish(
-                            sqplus::coordinator::sequence::FinishReason
-                                ::MaxTokens,
-                        );
-                        s.on_finished(id);
-                        running_model.retain(|&r| r != id);
-                    }
-                }
+            let q = seqs.get_mut(&victim).unwrap();
+            q.finish(FinishReason::PoolExhausted);
+        }
+        for c in &plan.chunks {
+            let toks = seqs[&c.id].full_tokens();
+            // chunk invariants: the range tiles the prefill pass
+            assert!(c.start < c.end && c.end <= toks.len());
+            if c.admitted {
+                // first chunk starts at the (block-aligned) cache hit
+                assert_eq!(c.start % s.bm.block_size, 0);
+                admission_order.push(c.id);
+                running_model.push(c.id);
+            } else {
+                assert_eq!(c.start, seqs[&c.id].prefill_progress,
+                           "chunk gap/overlap");
             }
-            StepPlan::Idle => {
-                // Idle with fresh preemptions means the scheduler hit
-                // the cannot-make-progress case and dropped the last
-                // victim (a single sequence exceeding the pool); the
-                // engine finishes it with an error.
-                if s.running_len() == 0 {
-                    if let Some(&dropped) = s.preempted.last() {
-                        seqs.get_mut(&dropped).unwrap().state =
-                            SeqState::Finished;
-                        s.on_finished(dropped);
-                    }
-                }
-                if next_id == submit_total as u64 && !s.has_work() {
-                    break;
-                }
+            // the table must cover every row the chunk computes
+            assert!(s.bm.holds(c.id) * s.bm.block_size >= c.end);
+            // engine side: advance cursor, register, maybe complete
+            let q = seqs.get_mut(&c.id).unwrap();
+            q.prefill_progress = c.end;
+            q.cached_prefix_len =
+                if c.admitted { c.start } else { q.cached_prefix_len };
+            if c.end == toks.len() {
+                q.state = SeqState::Running;
+                let t = fake_next_token(&toks);
+                q.record_token(t);
+            } else {
+                q.state = SeqState::Prefilling;
             }
+            s.bm.register_prefix(c.id, &toks[..c.end]);
+        }
+        for &id in &plan.decode {
+            assert!(s.bm.holds(id) > 0, "decoding unallocated");
+            assert_eq!(seqs[&id].state, SeqState::Running);
+            let q = seqs.get_mut(&id).unwrap();
+            let t = fake_next_token(&q.full_tokens());
+            q.record_token(t);
+            if q.output.len() >= 4 + (id % 5) as usize {
+                q.finish(FinishReason::MaxTokens);
+                s.on_finished(id);
+                running_model.retain(|&r| r != id);
+            }
+        }
+        if plan.is_idle()
+            && next_id == submit_total as u64
+            && !s.has_work()
+        {
+            break;
         }
         assert!(s.bm.check_conservation(), "conservation violated");
         assert!(s.running_len() <= s.cfg.max_running);
@@ -133,7 +168,33 @@ fn shared_prefixes(bs: usize) -> Vec<Vec<u32>> {
 #[test]
 fn conservation_and_lifo_under_random_workload() {
     for enable in [false, true] {
-        prop::check("scheduler conservation+LIFO", 12, |rng| {
+        for chunk in [0usize, 5] {
+            prop::check("scheduler conservation+LIFO", 8, |rng| {
+                let bs = 2 + rng.below(6);
+                let mut s = Scheduler::new(
+                    EngineConfig {
+                        max_running: 1 + rng.below(6),
+                        max_batch_tokens: 32 + rng.below(96),
+                        decode_batches: vec![1, 2, 4, 8],
+                        prefill_buckets: vec![(4, 64)],
+                        enable_prefix_caching: enable,
+                        max_prefill_chunk: chunk,
+                        ..Default::default()
+                    },
+                    BlockManager::new(bs, 24 + rng.below(48)),
+                );
+                let mut seqs = HashMap::new();
+                drive(&mut s, &mut seqs, rng, 400, 40,
+                      &shared_prefixes(bs));
+            });
+        }
+    }
+}
+
+#[test]
+fn legacy_mode_conservation_and_lifo() {
+    for enable in [false, true] {
+        prop::check("legacy scheduler conservation+LIFO", 8, |rng| {
             let bs = 2 + rng.below(6);
             let mut s = Scheduler::new(
                 EngineConfig {
@@ -142,20 +203,21 @@ fn conservation_and_lifo_under_random_workload() {
                     decode_batches: vec![1, 2, 4, 8],
                     prefill_buckets: vec![(4, 64)],
                     enable_prefix_caching: enable,
+                    enable_chunked_prefill: false,
                     ..Default::default()
                 },
                 BlockManager::new(bs, 24 + rng.below(48)),
             );
             let mut seqs = HashMap::new();
-            drive(&mut s, &mut seqs, rng, 300, 40, &shared_prefixes(bs));
+            drive(&mut s, &mut seqs, rng, 400, 40, &shared_prefixes(bs));
         });
     }
 }
 
 #[test]
 fn refcounts_zero_after_everything_finishes() {
-    for enable in [false, true] {
-        prop::check("drain to empty pool", 12, |rng| {
+    for chunk in [0usize, 3, 16] {
+        prop::check("drain to empty pool", 8, |rng| {
             let bs = 2 + rng.below(4);
             let mut s = Scheduler::new(
                 EngineConfig {
@@ -163,7 +225,7 @@ fn refcounts_zero_after_everything_finishes() {
                     max_batch_tokens: 128,
                     decode_batches: vec![1, 2, 4, 8],
                     prefill_buckets: vec![(4, 64)],
-                    enable_prefix_caching: enable,
+                    max_prefill_chunk: chunk,
                     ..Default::default()
                 },
                 // ample pool: every sequence can finish
@@ -185,8 +247,8 @@ fn refcounts_zero_after_everything_finishes() {
 
 #[test]
 fn fcfs_admission_order_without_pressure() {
-    for enable in [false, true] {
-        prop::check("FCFS admission", 8, |rng| {
+    for chunk in [0usize, 7] {
+        prop::check("FCFS admission", 6, |rng| {
             let bs = 2 + rng.below(4);
             let mut s = Scheduler::new(
                 EngineConfig {
@@ -194,7 +256,7 @@ fn fcfs_admission_order_without_pressure() {
                     max_batch_tokens: 256,
                     decode_batches: vec![1, 2, 4],
                     prefill_buckets: vec![(4, 64)],
-                    enable_prefix_caching: enable,
+                    max_prefill_chunk: chunk,
                     ..Default::default()
                 },
                 BlockManager::new(bs, 512), // no preemption pressure
@@ -253,21 +315,284 @@ fn preempt_while_shared_under_scheduler_pressure() {
     // End-to-end through the scheduler: tight pool, shared prefixes,
     // heavy decode growth — exercised with caching on, where preempting
     // one sharer must never free blocks the other still uses.
-    prop::check("preempt-while-shared", 10, |rng| {
+    for chunk in [0usize, 4] {
+        prop::check("preempt-while-shared", 8, |rng| {
+            let bs = 2 + rng.below(3);
+            let mut s = Scheduler::new(
+                EngineConfig {
+                    max_running: 3,
+                    max_batch_tokens: 96,
+                    decode_batches: vec![1, 2, 4],
+                    prefill_buckets: vec![(4, 64)],
+                    enable_prefix_caching: true,
+                    max_prefill_chunk: chunk,
+                    ..Default::default()
+                },
+                // just enough for ~2 sequences: forces preempt of sharers
+                BlockManager::new(bs, 10 + rng.below(6)),
+            );
+            let mut seqs = HashMap::new();
+            drive(&mut s, &mut seqs, rng, 600, 16, &shared_prefixes(bs));
+        });
+    }
+}
+
+#[test]
+fn preempt_while_partially_prefilled_drains_refcounts() {
+    // Small chunks + a pool barely bigger than one sequence: sequences
+    // are routinely preempted mid-prefill (cursor reset, blocks
+    // released). After the workload drains, no block may stay
+    // referenced.
+    prop::check("preempt mid-prefill", 10, |rng| {
         let bs = 2 + rng.below(3);
         let mut s = Scheduler::new(
             EngineConfig {
                 max_running: 3,
-                max_batch_tokens: 96,
-                decode_batches: vec![1, 2, 4],
+                max_batch_tokens: 64,
+                decode_batches: vec![1, 2],
                 prefill_buckets: vec![(4, 64)],
-                enable_prefix_caching: true,
+                max_prefill_chunk: 1 + rng.below(3),
                 ..Default::default()
             },
-            // just enough for ~2 sequences: forces preempt of sharers
-            BlockManager::new(bs, 10 + rng.below(6)),
+            BlockManager::new(bs, 12 + rng.below(4)),
         );
         let mut seqs = HashMap::new();
-        drive(&mut s, &mut seqs, rng, 600, 16, &shared_prefixes(bs));
+        drive(&mut s, &mut seqs, rng, 1500, 12, &shared_prefixes(bs));
+        assert!(!s.has_work(), "workload did not drain");
+        let preempted_mid: usize = seqs
+            .values()
+            .map(|q| q.preemptions)
+            .sum();
+        assert!(preempted_mid > 0 || seqs.is_empty(),
+                "workload never preempted (test too weak)");
+        assert_eq!(s.bm.free_blocks(), s.bm.total_blocks);
+        assert!(s.bm.check_conservation());
+    });
+}
+
+#[test]
+fn chunk_boundary_on_block_boundary() {
+    // chunk size == block size, prompt an exact multiple of both: every
+    // chunk ends exactly on a block boundary and registration after
+    // each chunk caches exactly the blocks covered so far.
+    let bs = 4;
+    let mut s = Scheduler::new(
+        EngineConfig {
+            max_running: 2,
+            max_batch_tokens: 64,
+            decode_batches: vec![1, 2],
+            prefill_buckets: vec![(4, 64)],
+            max_prefill_chunk: bs,
+            ..Default::default()
+        },
+        BlockManager::new(bs, 32),
+    );
+    let prompt: Vec<u32> = (0..16).collect(); // 4 blocks, 4 chunks
+    let mut seqs = HashMap::new();
+    seqs.insert(0, Sequence::new(0, prompt.clone(),
+                                 SamplingParams::default()));
+    s.add(0);
+    let mut bounds = vec![];
+    for _ in 0..8 {
+        let plan = s.plan(&seqs);
+        if plan.is_idle() {
+            break;
+        }
+        for c in &plan.chunks {
+            bounds.push((c.start, c.end));
+            assert_eq!(c.end % bs, 0, "chunk must end on block boundary");
+            let q = seqs.get_mut(&c.id).unwrap();
+            q.prefill_progress = c.end;
+            q.state = if c.end == prompt.len() {
+                SeqState::Running
+            } else {
+                SeqState::Prefilling
+            };
+            s.bm.register_prefix(c.id, &prompt[..c.end]);
+            // every block covered so far is now cached: a probe one
+            // token longer hits all of them (lookup never covers the
+            // whole query)
+            let mut probe = prompt[..c.end].to_vec();
+            probe.push(999);
+            assert_eq!(s.bm.cached_prefix_tokens(&probe), c.end);
+        }
+        if seqs[&0].state == SeqState::Running {
+            break;
+        }
+        assert!(s.bm.check_conservation());
+    }
+    assert_eq!(bounds, vec![(0, 4), (4, 8), (8, 12), (12, 16)]);
+}
+
+#[test]
+fn cache_hit_lands_mid_chunk() {
+    // A 8-token cached prefix with a 20-token chunk budget: the first
+    // chunk must start exactly at the hit (not 0, not a chunk multiple)
+    // and share the hit blocks.
+    let bs = 4;
+    let mut s = Scheduler::new(
+        EngineConfig {
+            max_running: 2,
+            max_batch_tokens: 64,
+            decode_batches: vec![1, 2],
+            prefill_buckets: vec![(4, 64)],
+            max_prefill_chunk: 20,
+            ..Default::default()
+        },
+        BlockManager::new(bs, 32),
+    );
+    s.bm.watermark_blocks = 0;
+    let prefix: Vec<u32> = (0..8).collect();
+    let mut donor = prefix.clone();
+    donor.extend([100, 101]);
+    let mut warm = prefix.clone();
+    warm.extend((0..14u32).map(|t| 200 + t)); // 22 tokens total
+    let mut seqs = HashMap::new();
+    seqs.insert(0, Sequence::new(0, donor.clone(),
+                                 SamplingParams::default()));
+    seqs.insert(1, Sequence::new(1, warm.clone(),
+                                 SamplingParams::default()));
+    s.add(0);
+    let plan = s.plan(&seqs);
+    assert_eq!(plan.chunks.len(), 1);
+    seqs.get_mut(&0).unwrap().prefill_progress = plan.chunks[0].end;
+    seqs.get_mut(&0).unwrap().state = SeqState::Running;
+    s.bm.register_prefix(0, &donor);
+    s.on_finished(0);
+    s.add(1);
+    let plan = s.plan(&seqs);
+    assert_eq!(plan.chunks.len(), 1);
+    let c = &plan.chunks[0];
+    assert!(c.admitted);
+    // 2 full blocks of the shared prefix are cached -> hit = 8
+    assert_eq!(c.start, 8);
+    // chunk cap 20 from position 8 would reach 28 but clamps to target
+    assert_eq!(c.end, 22);
+    assert!(s.bm.check_conservation());
+}
+
+#[test]
+fn grown_content_beyond_pool_drops_instead_of_wedging() {
+    // Regression (found in PR 3 review): sequence B's recompute content
+    // (prompt + generated output) outgrows the *whole* pool after a
+    // preemption. Pre-fix, B was requeued and its re-admission failed
+    // forever — the FCFS head wedged with has_work() true and every
+    // plan idle. Now the impossible head is dropped (PoolExhausted) and
+    // traffic drains.
+    let mut s = Scheduler::new(
+        EngineConfig {
+            max_running: 4,
+            max_batch_tokens: 256,
+            decode_batches: vec![1, 2, 4],
+            prefill_buckets: vec![(4, 64)],
+            ..Default::default()
+        },
+        BlockManager::new(4, 6), // 24 token slots
+    );
+    s.bm.watermark_blocks = 1;
+    let mut seqs = HashMap::new();
+    seqs.insert(
+        0,
+        Sequence::new(0, vec![1, 2, 3, 4], SamplingParams {
+            max_new_tokens: 20,
+            ..Default::default()
+        }),
+    );
+    seqs.insert(
+        1,
+        Sequence::new(1, (10..22).collect(), SamplingParams {
+            max_new_tokens: 16, // content would reach 28 > 24 slots
+            ..Default::default()
+        }),
+    );
+    s.add(0);
+    s.add(1);
+    let mut steps = 0;
+    while s.has_work() && steps < 2000 {
+        let plan = s.plan(&seqs);
+        for &v in &s.preempted {
+            let q = seqs.get_mut(&v).unwrap();
+            if q.state == SeqState::Running
+                || q.state == SeqState::Prefilling
+            {
+                q.preempt();
+            }
+        }
+        for &v in &s.dropped {
+            seqs.get_mut(&v).unwrap()
+                .finish(FinishReason::PoolExhausted);
+        }
+        for c in &plan.chunks {
+            let toks = seqs[&c.id].full_tokens();
+            let q = seqs.get_mut(&c.id).unwrap();
+            q.prefill_progress = c.end;
+            if c.end == toks.len() {
+                q.state = SeqState::Running;
+                q.record_token(7);
+            } else {
+                q.state = SeqState::Prefilling;
+            }
+            s.bm.register_prefix(c.id, &toks[..c.end]);
+        }
+        for &id in &plan.decode {
+            let q = seqs.get_mut(&id).unwrap();
+            q.record_token(7);
+            if q.output.len() >= q.params.max_new_tokens {
+                q.finish(FinishReason::MaxTokens);
+                s.on_finished(id);
+            }
+        }
+        assert!(s.bm.check_conservation());
+        steps += 1;
+    }
+    assert!(!s.has_work(), "scheduler wedged after {steps} steps");
+    assert_eq!(seqs[&0].finish, Some(FinishReason::MaxTokens));
+    assert_eq!(seqs[&0].output.len(), 20);
+    assert_eq!(seqs[&1].finish, Some(FinishReason::PoolExhausted));
+}
+
+#[test]
+fn token_streams_identical_for_any_chunk_size() {
+    // The determinism property: with the deterministic fake model, the
+    // same submission schedule must produce identical per-sequence
+    // token streams whatever the chunking (including legacy mode) —
+    // chunking changes *when* work happens, never *what* is computed.
+    prop::check("chunk-size determinism", 6, |rng| {
+        let bs = 2 + rng.below(4);
+        let prefixes = shared_prefixes(bs);
+        let seed = rng.below(1 << 30) as u64;
+        let blocks = 24 + rng.below(48);
+        let mut streams: Vec<Vec<(u64, Vec<u32>)>> = vec![];
+        for (chunked, chunk) in
+            [(false, 0usize), (true, 0), (true, 17), (true, 3)]
+        {
+            let mut s = Scheduler::new(
+                EngineConfig {
+                    max_running: 3,
+                    max_batch_tokens: 48,
+                    decode_batches: vec![1, 2, 4],
+                    prefill_buckets: vec![(4, 64)],
+                    enable_chunked_prefill: chunked,
+                    max_prefill_chunk: chunk,
+                    ..Default::default()
+                },
+                BlockManager::new(bs, blocks),
+            );
+            let mut seqs = HashMap::new();
+            let mut r = Rng::new(seed);
+            drive(&mut s, &mut seqs, &mut r, 3000, 16, &prefixes);
+            assert!(!s.has_work(), "did not drain");
+            let mut out: Vec<(u64, Vec<u32>)> = seqs
+                .iter()
+                .filter(|(_, q)| q.finish == Some(FinishReason::MaxTokens))
+                .map(|(&id, q)| (id, q.output.clone()))
+                .collect();
+            out.sort_by_key(|(id, _)| *id);
+            streams.push(out);
+        }
+        for other in &streams[1..] {
+            assert_eq!(&streams[0], other,
+                       "token stream depends on chunking");
+        }
     });
 }
