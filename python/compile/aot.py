@@ -49,12 +49,17 @@ def weight_specs_flat(cfg, precision):
     return out
 
 
-def input_descs(cfg, precision, phase, batch, seq):
+def input_descs(cfg, precision, phase, batch, seq, prefix=0):
     """Positional input descriptors for one artifact."""
     descs = []
     if phase == "prefill":
         descs.append(("tokens", (batch, seq), "i32"))
         descs.append(("lens", (batch,), "i32"))
+    elif phase == "chunk":
+        descs.append(("tokens", (batch, seq), "i32"))
+        descs.append(("starts", (batch,), "i32"))
+        descs.append(("kv", configs.kv_prefix_shape(cfg, batch, prefix),
+                      "f32"))
     else:
         descs.append(("tokens", (batch,), "i32"))
         descs.append(("lens", (batch,), "i32"))
@@ -64,7 +69,7 @@ def input_descs(cfg, precision, phase, batch, seq):
 
 
 def output_descs(cfg, phase, batch, seq):
-    if phase == "prefill":
+    if phase in ("prefill", "chunk"):
         return [
             ("logits", (batch, seq, cfg.vocab), "f32"),
             ("kv_new", (cfg.layers, 2, batch, seq, cfg.dim), "f32"),
@@ -75,19 +80,23 @@ def output_descs(cfg, phase, batch, seq):
     ]
 
 
-def lower_one(cfg, precision, phase, batch, seq):
-    descs = input_descs(cfg, precision, phase, batch, seq)
+def lower_one(cfg, precision, phase, batch, seq, prefix=0):
+    descs = input_descs(cfg, precision, phase, batch, seq, prefix)
     args = [spec(s, d) for (_, s, d) in descs]
     if phase == "prefill":
         fn = model.make_prefill(cfg, precision)
+    elif phase == "chunk":
+        fn = model.make_chunk(cfg, precision)
     else:
         fn = model.make_decode(cfg, precision)
     return jax.jit(fn).lower(*args)
 
 
-def artifact_name(size, precision, phase, batch, seq):
+def artifact_name(size, precision, phase, batch, seq, prefix=0):
     if phase == "prefill":
         return f"{size}_{precision}_prefill_b{batch}_s{seq}"
+    if phase == "chunk":
+        return f"{size}_{precision}_chunk_b{batch}_s{seq}_p{prefix}"
     return f"{size}_{precision}_decode_b{batch}"
 
 
@@ -97,15 +106,19 @@ def build(out_dir, sizes, precisions, force=False):
     for size in sizes:
         cfg = configs.SIZES[size]
         arts = []
-        jobs = [("prefill", b, s) for (b, s) in configs.PREFILL_BUCKETS]
-        jobs += [("decode", b, 0) for b in configs.DECODE_BATCHES]
+        jobs = [("prefill", b, s, 0) for (b, s) in configs.PREFILL_BUCKETS]
+        jobs += [("decode", b, 0, 0) for b in configs.DECODE_BATCHES]
+        jobs += [("chunk", b, s, p) for (b, s) in configs.CHUNK_BUCKETS
+                 for p in configs.chunk_prefix_buckets(cfg)]
         for precision in precisions:
-            for phase, batch, seq in jobs:
-                name = artifact_name(size, precision, phase, batch, seq)
+            for phase, batch, seq, prefix in jobs:
+                name = artifact_name(size, precision, phase, batch, seq,
+                                     prefix)
                 path = os.path.join(out_dir, name + ".hlo.txt")
                 t0 = time.time()
                 if force or not os.path.exists(path):
-                    lowered = lower_one(cfg, precision, phase, batch, seq)
+                    lowered = lower_one(cfg, precision, phase, batch, seq,
+                                        prefix)
                     text = to_hlo_text(lowered)
                     with open(path, "w") as f:
                         f.write(text)
@@ -120,10 +133,12 @@ def build(out_dir, sizes, precisions, force=False):
                     "phase": phase,
                     "batch": batch,
                     "seq": seq,
+                    "prefix": prefix,
                     "inputs": [
                         {"name": n, "shape": list(s), "dtype": d}
                         for (n, s, d) in
-                        input_descs(cfg, precision, phase, batch, seq)
+                        input_descs(cfg, precision, phase, batch, seq,
+                                    prefix)
                     ],
                     "outputs": [
                         {"name": n, "shape": list(s), "dtype": d}

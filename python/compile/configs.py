@@ -64,6 +64,24 @@ SIZES = {
 PREFILL_BUCKETS = [(1, 32), (1, 128), (4, 32), (4, 128)]
 DECODE_BATCHES = [1, 2, 4, 8]
 
+# Chunked-prefill executable buckets: (batch, chunk_len). Each pair is
+# compiled once per KV-prefix bucket (chunk_prefix_buckets), giving the
+# serving engine a (chunk_len, prefix_len) grid to cover continuation
+# chunks — cache-hit suffixes, later chunks of long prompts, recompute —
+# in one device call instead of one decode call per token.
+CHUNK_BUCKETS = [(1, 16), (1, 64), (4, 16), (4, 64)]
+
+
+def chunk_prefix_buckets(cfg: "ModelConfig"):
+    """KV-prefix length buckets for chunk executables.
+
+    The chunk phase takes the prefix cache as a ``[L, 2, B, P, D]``
+    input, so bucketing P (rather than always shipping ``max_len`` rows
+    like decode does) halves the host->device transfer for chunks that
+    start early in the sequence.
+    """
+    return [cfg.max_len // 2, cfg.max_len]
+
 LAYER_LINEARS = ["wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down"]
 
 
@@ -117,3 +135,8 @@ def weight_specs(cfg: ModelConfig, precision: str):
 def kv_cache_shape(cfg: ModelConfig, batch: int):
     """KV cache layout: [layers, 2 (k/v), batch, max_len, dim]."""
     return (cfg.layers, 2, batch, cfg.max_len, cfg.dim)
+
+
+def kv_prefix_shape(cfg: ModelConfig, batch: int, prefix: int):
+    """Chunk-phase KV-prefix input: [layers, 2, batch, prefix, dim]."""
+    return (cfg.layers, 2, batch, prefix, cfg.dim)

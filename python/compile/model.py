@@ -1,11 +1,19 @@
 """Layer-2: Llama-family forward pass in JAX, FP16 and W4A16 variants.
 
-Two entry points per model config, both AOT-lowered by aot.py:
+Three entry points per model config, all AOT-lowered by aot.py:
 
   * ``prefill(tokens[B,S], lens[B], *weights) -> (logits[B,S,V],
     kv_new[L,2,B,S,D])``
   * ``decode(tokens[B], lens[B], kv[L,2,B,MAX,D], *weights) ->
     (logits[B,V], kv_new[L,2,B,1,D])``
+  * ``chunk(tokens[B,C], starts[B], kv[L,2,B,P,D], *weights) ->
+    (logits[B,C,V], kv_new[L,2,B,C,D])`` — chunked prefill: C new
+    tokens per sequence appended at absolute positions ``starts[b] ..
+    starts[b]+C``, attending to the ``starts[b]`` cached prefix rows in
+    ``kv`` plus causally within the chunk. One device call computes a
+    whole continuation chunk (cache-hit suffixes, later chunks of a
+    long prompt, post-preemption recompute) that the serving engine
+    previously drove through ``decode`` token by token.
 
 The *full* KV cache ``f32[L, 2, B, MAX, D]`` is an input of decode; the
 outputs carry only the *newly produced* K/V rows. Rationale: the PJRT shim
@@ -142,6 +150,49 @@ def attention_decode(h, kv_l, lens, wd, lp, cfg, precision):
     return out, kv_new
 
 
+def attention_chunk(h, kv_l, starts, wd, lp, cfg, precision):
+    """Causal attention for a mid-sequence chunk against a KV prefix.
+
+    ``h: [B, C, D]`` are the chunk's hidden states; ``kv_l: [2, B, P, D]``
+    holds cached rows ``0..starts[b]-1`` (``P >= starts[b]``). Query row
+    ``i`` of sequence ``b`` sits at absolute position ``starts[b] + i``
+    and attends to every prefix row plus chunk rows ``<= i`` — the same
+    math ``decode`` applies one position at a time. Returns the block
+    output and this layer's new K/V rows ``[2, B, C, D]`` for the
+    coordinator to append host-side.
+    """
+    b, c, d = h.shape
+    hd, nh = cfg.head_dim, cfg.heads
+    x2 = h.reshape(b * c, d)
+    q = linear(x2, wd, lp + "wq", cfg, precision).reshape(b, c, nh, hd)
+    k = linear(x2, wd, lp + "wk", cfg, precision).reshape(b, c, nh, hd)
+    v = linear(x2, wd, lp + "wv", cfg, precision).reshape(b, c, nh, hd)
+
+    pos = starts[:, None] + jnp.arange(c, dtype=jnp.int32)[None, :]
+    cos, sin = rope_tables(pos, hd, cfg.rope_theta)  # [B, C, hd/2]
+    cos, sin = cos[:, :, None, :], sin[:, :, None, :]
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+
+    p = kv_l.shape[2]
+    kc = kv_l[0].reshape(b, p, nh, hd)
+    vc = kv_l[1].reshape(b, p, nh, hd)
+    cache = jnp.einsum("bqhd,bthd->bhqt", q, kc) / jnp.sqrt(float(hd))
+    t = jnp.arange(p, dtype=jnp.int32)
+    valid = t[None, None, None, :] < starts[:, None, None, None]
+    cache = jnp.where(valid, cache, -1e30)
+    intra = jnp.einsum("bqhd,bkhd->bhqk", q, k) / jnp.sqrt(float(hd))
+    ci = jnp.arange(c, dtype=jnp.int32)
+    causal = ci[None, :] <= ci[:, None]  # [q, k]
+    intra = jnp.where(causal[None, None, :, :], intra, -1e30)
+    probs = jax.nn.softmax(jnp.concatenate([cache, intra], axis=-1), -1)
+    out = jnp.einsum("bhqt,bthd->bqhd", probs[..., :p], vc) \
+        + jnp.einsum("bhqk,bkhd->bqhd", probs[..., p:], v)
+    out = linear(out.reshape(b * c, d), wd, lp + "wo", cfg, precision)
+    kv_new = jnp.stack([k.reshape(b, c, d), v.reshape(b, c, d)], axis=0)
+    return out.reshape(b, c, d), kv_new
+
+
 def mlp(x, wd, lp, cfg, precision):
     """SwiGLU MLP on ``x: [T, D]``."""
     gate = linear(x, wd, lp + "w_gate", cfg, precision)
@@ -190,12 +241,40 @@ def decode(cfg, precision, tokens, lens, kv, *flat_weights):
     return h @ wd["lm_head"], jnp.stack(new_lanes, axis=0)
 
 
+def chunk(cfg, precision, tokens, starts, kv, *flat_weights):
+    """One chunked-prefill call: ``tokens[B, C]`` appended at positions
+    ``starts[b]..starts[b]+C`` against the prefix cache ``kv[L,2,B,P,D]``.
+    Returns (logits[B,C,V], kv_new[L,2,B,C,D])."""
+    wd = _weights_dict(cfg, precision, flat_weights)
+    b, c = tokens.shape
+    h = wd["embed"][tokens]  # [B, C, D]
+    new_lanes = []
+    for i in range(cfg.layers):
+        lp = f"layers.{i}."
+        a, kv_l = attention_chunk(
+            rmsnorm(h, wd[lp + "attn_norm"], cfg.norm_eps),
+            kv[i], starts, wd, lp, cfg, precision)
+        new_lanes.append(kv_l)
+        h = h + a
+        m = mlp(
+            rmsnorm(h, wd[lp + "mlp_norm"], cfg.norm_eps).reshape(b * c, -1),
+            wd, lp, cfg, precision).reshape(b, c, -1)
+        h = h + m
+    h = rmsnorm(h, wd["final_norm"], cfg.norm_eps)
+    logits = h.reshape(b * c, -1) @ wd["lm_head"]
+    return logits.reshape(b, c, cfg.vocab), jnp.stack(new_lanes, axis=0)
+
+
 def make_prefill(cfg, precision):
     return functools.partial(prefill, cfg, precision)
 
 
 def make_decode(cfg, precision):
     return functools.partial(decode, cfg, precision)
+
+
+def make_chunk(cfg, precision):
+    return functools.partial(chunk, cfg, precision)
 
 
 # ------------------------------------------------------------ test helpers

@@ -68,6 +68,24 @@ def test_lower_one_hlo_text():
     assert n_params == len(aot.input_descs(cfg, "fp16", "decode", 1, 0))
 
 
+def test_chunk_lowering_and_descs():
+    cfg = configs.SIZES["tiny"]
+    prefix = configs.chunk_prefix_buckets(cfg)[0]
+    descs = aot.input_descs(cfg, "fp16", "chunk", 2, 16, prefix)
+    assert descs[0] == ("tokens", (2, 16), "i32")
+    assert descs[1] == ("starts", (2,), "i32")
+    assert descs[2] == ("kv", (cfg.layers, 2, 2, prefix, cfg.dim), "f32")
+    outs = aot.output_descs(cfg, "chunk", 2, 16)
+    assert outs[0] == ("logits", (2, 16, cfg.vocab), "f32")
+    assert outs[1] == ("kv_new", (cfg.layers, 2, 2, 16, cfg.dim), "f32")
+    lowered = aot.lower_one(cfg, "fp16", "chunk", 1, 16, prefix)
+    text = aot.to_hlo_text(lowered)
+    assert text.startswith("HloModule")
+    entry = text[text.index("ENTRY"):]
+    entry = entry[:entry.index("\n}")]
+    assert entry.count("parameter(") == len(descs)
+
+
 def test_w4a16_hlo_contains_int4_path():
     cfg = configs.SIZES["tiny"]
     lowered = aot.lower_one(cfg, "w4a16", "decode", 1, 0)
@@ -84,7 +102,8 @@ def test_manifest_consistent_with_configs():
         assert entry["config"]["dim"] == cfg.dim
         for art in entry["artifacts"]:
             descs = aot.input_descs(cfg, art["precision"], art["phase"],
-                                    art["batch"], art["seq"])
+                                    art["batch"], art["seq"],
+                                    art.get("prefix", 0))
             assert [i["name"] for i in art["inputs"]] == [n for n, _, _ in
                                                           descs]
             assert os.path.exists(os.path.join(ART, art["file"]))

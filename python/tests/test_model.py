@@ -85,6 +85,93 @@ def test_multi_step_decode_matches_prefill(weights):
                                    rtol=1e-3, atol=1e-4)
 
 
+def to_prefix_cache(kv_new, prefix):
+    """Scatter ``kv_new[L,2,B,S,D]`` into a zeroed ``P``-row prefix cache."""
+    l, _, b, s, d = kv_new.shape
+    out = np.zeros((l, 2, b, prefix, d), np.float32)
+    out[:, :, :, :s, :] = np.asarray(kv_new)
+    return jnp.asarray(out)
+
+
+def test_chunk_matches_prefill_rows(weights):
+    """chunk(t[s:e] | prefill(t[:s])) == prefill(t)[s:e] logits rows."""
+    rng = np.random.default_rng(10)
+    seq = toks(rng, 1, 24)
+    for prec in ("fp16", "w4a16"):
+        full, fkv = model.prefill(CFG, prec, seq,
+                                  jnp.asarray([24], jnp.int32),
+                                  *weights[prec])
+        _, kvp = model.prefill(CFG, prec, seq[:, :10],
+                               jnp.asarray([10], jnp.int32),
+                               *weights[prec])
+        lg, kvn = model.chunk(CFG, prec, seq[:, 10:24],
+                              jnp.asarray([10], jnp.int32),
+                              to_prefix_cache(kvp, 16), *weights[prec])
+        assert lg.shape == (1, 14, CFG.vocab)
+        assert kvn.shape == (CFG.layers, 2, 1, 14, CFG.dim)
+        np.testing.assert_allclose(np.asarray(lg[0]),
+                                   np.asarray(full[0, 10:24]),
+                                   rtol=1e-3, atol=1e-4)
+        # the chunk's new K/V rows equal the full prefill's rows 10..24
+        np.testing.assert_allclose(np.asarray(kvn),
+                                   np.asarray(fkv[:, :, :, 10:24, :]),
+                                   rtol=1e-3, atol=1e-4)
+
+
+def test_chunk_positionwise_batch(weights):
+    """Two sequences at *different* starts in one chunk call (the
+    engine's positionwise batching) match their solo prefills; chunk
+    padding rows past each sequence's width don't disturb real rows."""
+    rng = np.random.default_rng(11)
+    a = toks(rng, 1, 20)
+    b = toks(rng, 1, 14)
+    fa, _ = model.prefill(CFG, "fp16", a, jnp.asarray([20], jnp.int32),
+                          *weights["fp16"])
+    fb, _ = model.prefill(CFG, "fp16", b, jnp.asarray([14], jnp.int32),
+                          *weights["fp16"])
+    _, kva = model.prefill(CFG, "fp16", a[:, :12],
+                           jnp.asarray([12], jnp.int32), *weights["fp16"])
+    _, kvb = model.prefill(CFG, "fp16", b[:, :6],
+                           jnp.asarray([6], jnp.int32), *weights["fp16"])
+    # pack both prefixes into one padded [L,2,2,P,D] batch (P = 16)
+    prefix = np.zeros((CFG.layers, 2, 2, 16, CFG.dim), np.float32)
+    prefix[:, :, 0, :12, :] = np.asarray(kva)[:, :, 0]
+    prefix[:, :, 1, :6, :] = np.asarray(kvb)[:, :, 0]
+    # chunk widths 8 for both (a: 12..20, b: 6..14); bucket width 8
+    tokens = np.stack([np.asarray(a[0, 12:20]), np.asarray(b[0, 6:14])])
+    lg, _ = model.chunk(CFG, "fp16", jnp.asarray(tokens, jnp.int32),
+                        jnp.asarray([12, 6], jnp.int32),
+                        jnp.asarray(prefix), *weights["fp16"])
+    np.testing.assert_allclose(np.asarray(lg[0]),
+                               np.asarray(fa[0, 12:20]),
+                               rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(lg[1]),
+                               np.asarray(fb[0, 6:14]),
+                               rtol=1e-3, atol=1e-4)
+
+
+def test_chunk_equals_tokenwise_decode(weights):
+    """A T-token chunk reproduces T decode steps (the serving path it
+    replaces) to numerical tolerance."""
+    rng = np.random.default_rng(12)
+    seq = toks(rng, 1, 16)
+    _, kvp = model.prefill(CFG, "fp16", seq[:, :8],
+                           jnp.asarray([8], jnp.int32), *weights["fp16"])
+    cache = np.asarray(to_cache(kvp)).copy()
+    dec_logits = []
+    for i in range(8, 16):
+        lg, kv_new = model.decode(CFG, "fp16", seq[:, i],
+                                  jnp.asarray([i], jnp.int32),
+                                  jnp.asarray(cache), *weights["fp16"])
+        cache[:, :, :, i, :] = np.asarray(kv_new)[:, :, :, 0, :]
+        dec_logits.append(np.asarray(lg[0]))
+    ck, _ = model.chunk(CFG, "fp16", seq[:, 8:16],
+                        jnp.asarray([8], jnp.int32),
+                        to_prefix_cache(kvp, 64), *weights["fp16"])
+    np.testing.assert_allclose(np.asarray(ck[0]), np.stack(dec_logits),
+                               rtol=1e-3, atol=1e-4)
+
+
 def test_padding_invariance(weights):
     """logits for real positions must not depend on padded tail tokens."""
     rng = np.random.default_rng(4)

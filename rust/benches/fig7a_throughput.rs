@@ -93,13 +93,14 @@ fn run_shared_prefix(
 /// Chunked-prefill workload: long cold prompts arriving while earlier
 /// requests decode — the traffic shape where unchunked prefill stalls
 /// decodes for whole steps and inflates inter-token latency. Returns
-/// (tokens/s, TTFT p50 in engine steps, chunks, mixed steps, sorted
-/// token streams for the bit-identity check).
+/// (tokens/s, TTFT p50 in engine steps, chunks, mixed steps, device
+/// calls, sorted token streams for the bit-identity check).
 fn run_chunked(
     m: &sqplus::runtime::manifest::Manifest, s: &common::Setup,
     deploy_store: &sqplus::model::store::WeightStore, chunked: bool,
-    cap: usize, n_req: usize, prompt: usize, output: usize,
-) -> (f64, f64, usize, usize, Vec<Vec<u32>>) {
+    cap: usize, compiled: bool, n_req: usize, prompt: usize,
+    output: usize,
+) -> (f64, f64, usize, usize, usize, Vec<Vec<u32>>) {
     let rt = ModelRuntime::load(m, &s.cfg.name, Precision::W4a16,
                                 deploy_store)
         .unwrap();
@@ -108,6 +109,7 @@ fn run_chunked(
     let ecfg = EngineConfig {
         enable_chunked_prefill: chunked,
         max_prefill_chunk: cap,
+        enable_compiled_chunks: compiled,
         ..Default::default()
     };
     let mut eng = Engine::new(dep, ecfg);
@@ -141,7 +143,7 @@ fn run_chunked(
     fin.sort_by_key(|q| q.id);
     let streams = fin.into_iter().map(|q| q.output).collect();
     (tput, rep.ttft_steps.p50, rep.prefill_chunks, rep.mixed_steps,
-     streams)
+     rep.device_calls, streams)
 }
 
 fn main() {
@@ -226,7 +228,10 @@ fn main() {
 
     // chunked-prefill serving mode: long prompts + staggered arrivals;
     // the same trace must stream identically for every chunking, while
-    // chunked runs interleave decodes with prefill chunks
+    // chunked runs interleave decodes with prefill chunks. The
+    // per-token rows re-run the same caps with the compiled chunk
+    // executable disabled — the calls-per-chunk column is the PR 4
+    // headline (a T-token chunk: 1 device call vs T).
     let (n_req3, prompt3, output3) = (10usize, 48usize, 16usize);
     let mut t4 = Table::new(
         &format!(
@@ -234,20 +239,23 @@ fn main() {
              reqs, prompt {prompt3}, output {output3})"
         ),
         &["mode", "output tok/s", "ttft p50 (steps)", "chunks",
-          "mixed steps"],
+          "mixed steps", "device calls", "calls/chunk"],
     );
     let mut golden: Option<Vec<Vec<u32>>> = None;
     let mut chunk_rows = vec![];
-    for (label, chunked, cap) in [
-        ("unchunked (legacy)", false, 0usize),
-        ("chunked ∞", true, 0),
-        ("chunked 32", true, 32),
-        ("chunked 17", true, 17),
+    for (label, chunked, cap, compiled) in [
+        ("unchunked (legacy)", false, 0usize, true),
+        ("chunked ∞", true, 0, true),
+        ("chunked 32", true, 32, true),
+        ("chunked 17", true, 17, true),
+        ("chunked 32 per-token", true, 32, false),
+        ("chunked 17 per-token", true, 17, false),
     ] {
-        let (tput, ttft_steps, chunks, mixed, streams) = run_chunked(
-            &man, &s, sqp.deploy.as_ref().unwrap(), chunked, cap,
-            n_req3, prompt3, output3,
-        );
+        let (tput, ttft_steps, chunks, mixed, calls, streams) =
+            run_chunked(
+                &man, &s, sqp.deploy.as_ref().unwrap(), chunked, cap,
+                compiled, n_req3, prompt3, output3,
+            );
         match &golden {
             None => golden = Some(streams),
             Some(g) => assert_eq!(
@@ -255,18 +263,44 @@ fn main() {
                 "token streams changed under chunking mode {label}"
             ),
         }
+        let per_chunk = calls as f64 / chunks.max(1) as f64;
         t4.row(&[label.into(), format!("{tput:.1}"),
                  format!("{ttft_steps:.1}"), chunks.to_string(),
-                 mixed.to_string()]);
-        chunk_rows.push((label, tput, ttft_steps, chunks, mixed));
+                 mixed.to_string(), calls.to_string(),
+                 format!("{per_chunk:.2}")]);
+        chunk_rows.push((label, tput, ttft_steps, chunks, mixed, calls));
     }
     t4.print();
+    // old vs new: at equal caps the compiled chunk path must issue
+    // strictly fewer device calls than the per-token fallback — unless
+    // the artifact set predates the chunk executables, in which case
+    // the compiled rows silently ran the same fallback (the documented
+    // graceful degradation) and the comparison is vacuous
+    let has_chunk_arts = man
+        .artifacts(&s.cfg.name, Precision::W4a16)
+        .map(|arts| arts.iter().any(|a| a.phase == "chunk"))
+        .unwrap_or(false);
+    if has_chunk_arts {
+        let calls_of = |want: &str| {
+            chunk_rows.iter().find(|r| r.0 == want).map(|r| r.5).unwrap()
+        };
+        for cap in ["32", "17"] {
+            let compiled = calls_of(&format!("chunked {cap}"));
+            let per_token = calls_of(&format!("chunked {cap} per-token"));
+            assert!(compiled < per_token,
+                    "cap {cap}: compiled {compiled} !< per-token \
+                     {per_token}");
+        }
+    } else {
+        eprintln!("note: pre-chunk artifacts — compiled rows ran the \
+                   per-token fallback (rebuild with `make artifacts`)");
+    }
     let mut rep2 = JsonReport::at("BENCH_serve.json",
                                   "fig7a_chunked_prefill");
     rep2.metric("n_requests", n_req3 as f64);
     rep2.metric("prompt_tokens", prompt3 as f64);
     rep2.metric("output_tokens", output3 as f64);
-    for (label, tput, ttft_steps, chunks, mixed) in chunk_rows {
+    for (label, tput, ttft_steps, chunks, mixed, calls) in chunk_rows {
         let key: String = label
             .chars()
             .map(|c| if c.is_alphanumeric() { c } else { '_' })
@@ -275,6 +309,9 @@ fn main() {
         rep2.metric(&format!("{key}_ttft_p50_steps"), ttft_steps);
         rep2.metric(&format!("{key}_chunks"), chunks as f64);
         rep2.metric(&format!("{key}_mixed_steps"), mixed as f64);
+        rep2.metric(&format!("{key}_device_calls"), calls as f64);
+        rep2.metric(&format!("{key}_calls_per_chunk"),
+                    calls as f64 / chunks.max(1) as f64);
     }
     if let Err(e) = rep2.write() {
         eprintln!("warning: BENCH_serve.json not written: {e}");

@@ -217,6 +217,19 @@ pub struct EngineConfig {
     /// still bounded by `max_batch_tokens` and, for cold chunks, by the
     /// largest prefill bucket.
     pub max_prefill_chunk: usize,
+    /// Compiled chunk buckets `(batch, chunk_len, prefix_len)` — synced
+    /// from the runtime like `prefill_buckets`. Non-empty caps
+    /// continuation-chunk widths at the largest compiled `chunk_len`,
+    /// so a chunk maps to one executable call; empty (no chunk
+    /// artifacts, or tests without a runtime) leaves widths uncapped
+    /// and the engine drives continuations token by token.
+    pub chunk_buckets: Vec<(usize, usize, usize)>,
+    /// Execute continuation chunks through the compiled chunked-prefill
+    /// executable (one device call per chunk, batched positionwise
+    /// where bucket pairs match). `false` forces the token-by-token
+    /// decode-executable fallback — the pre-chunk-executable serving
+    /// path, kept for ablation and golden bit-identity tests.
+    pub enable_compiled_chunks: bool,
 }
 
 impl Default for EngineConfig {
@@ -233,6 +246,8 @@ impl Default for EngineConfig {
             enable_prefix_caching: true,
             enable_chunked_prefill: true,
             max_prefill_chunk: 0,
+            chunk_buckets: vec![],
+            enable_compiled_chunks: true,
         }
     }
 }

@@ -39,6 +39,13 @@
 //!   FCFS head instead of thrashing the pool. Releasing a partially
 //!   filled table (preempt-while-prefilling) follows the same refcount
 //!   rules as any other release.
+//! * **Single-walk admission** — an admission attempt walks the content
+//!   hash chain exactly once, inside the allocate family: the allocator
+//!   returns the hit (and the fill it honored) in [`Alloc::Ok`], and
+//!   the scheduler's policy caps (step budget, bucket width caps) are
+//!   parameters rather than caller-side pre-probes, so the hit the
+//!   scheduler budgets against is by construction the hit the table
+//!   reflects. `hash_walks` counts walks for the property tests.
 
 use std::collections::{BTreeMap, HashMap};
 
@@ -46,8 +53,22 @@ use std::collections::{BTreeMap, HashMap};
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Alloc {
     /// Allocation succeeded; the table is updated.
-    Ok,
-    /// Not enough free blocks now (caller may preempt and retry).
+    Ok {
+        /// Tokens of the content covered by prefix-cache hits at this
+        /// admission (0 for [`BlockManager::append_token`] growth).
+        /// Returned by the allocator so the scheduler budgets against
+        /// *exactly* the hit the table honors — no separate probe walk.
+        hit_tokens: usize,
+        /// Tokens the table now covers: the admission fill (hit +
+        /// first chunk, clamped by the caller's caps) or the grown
+        /// context. The scheduler uses it verbatim as the chunk end.
+        filled: usize,
+    },
+    /// Not enough free blocks now (caller may preempt and retry), the
+    /// full content can never be admitted under the watermark, or a
+    /// policy cap passed by the caller rejected the admission (a cold
+    /// chunk with no compiled bucket, a legacy admission over the step
+    /// budget).
     NoSpace,
 }
 
@@ -129,6 +150,10 @@ pub struct BlockManager {
     /// Blocks kept free as a scheduling watermark (headroom for decode
     /// growth of already-running sequences).
     pub watermark_blocks: usize,
+    /// Hash-chain walks performed (admission probes + allocations).
+    /// Observability for the single-walk admission contract: the
+    /// scheduler property tests assert one walk per admission attempt.
+    pub hash_walks: std::cell::Cell<u64>,
     /// Content-hash prefix caching on/off (off = the pre-cache manager).
     pub enable_prefix_caching: bool,
     /// Prefix-cache counters.
@@ -150,6 +175,7 @@ impl BlockManager {
             tick: 0,
             evicted: vec![],
             watermark_blocks: (total_blocks / 100).max(1),
+            hash_walks: std::cell::Cell::new(0),
             enable_prefix_caching: true,
             stats: CacheStats::default(),
         }
@@ -204,11 +230,14 @@ impl BlockManager {
     }
 
     /// Block ids of the longest cached prefix of `tokens`, capped so at
-    /// least one token is always left to compute.
+    /// least one token is always left to compute. This is *the*
+    /// hash-chain walk: admission calls it exactly once per attempt
+    /// (inside the allocate family), counted in `hash_walks`.
     fn prefix_hits(&self, tokens: &[u32]) -> Vec<usize> {
         if !self.enable_prefix_caching || tokens.len() <= 1 {
             return vec![];
         }
+        self.hash_walks.set(self.hash_walks.get() + 1);
         let bs = self.block_size;
         let max_blocks = (tokens.len() - 1) / bs;
         let mut h = HASH_SEED;
@@ -263,34 +292,81 @@ impl BlockManager {
     }
 
     /// Allocate blocks for a newly admitted sequence covering its whole
-    /// content, reusing cached prefix blocks. Returns `Ok` with the
-    /// table recorded; query the covered prefix with
-    /// [`cached_prefix_tokens`] (the scheduler passes it to the engine
-    /// so prefill starts at the first uncached token).
-    ///
-    /// [`cached_prefix_tokens`]: BlockManager::cached_prefix_tokens
+    /// content, reusing cached prefix blocks. Returns the hit it
+    /// honored in `Alloc::Ok` (no caller-side probe walk needed).
     pub fn allocate(&mut self, id: u64, tokens: &[u32]) -> Alloc {
-        self.allocate_chunked(id, tokens, tokens.len())
+        self.allocate_full(id, tokens, usize::MAX, usize::MAX)
     }
 
-    /// Admission for chunked prefill: the *capacity check* covers the
-    /// sequence's full content (so a sequence that can never fit blocks
-    /// the queue head under FCFS instead of admit/preempt thrashing),
-    /// but the table physically allocated covers only the cached-prefix
-    /// hits plus fresh blocks for the first `fill` tokens. Later chunks
-    /// and decode growth extend the table via
-    /// [`BlockManager::append_token`]. `fill` must be at least the hit
-    /// length (a chunk never ends inside the cached prefix) and at most
-    /// `tokens.len()`.
+    /// Whole-content admission (the legacy unchunked policy), policy
+    /// caps folded in so admission is **one hash-chain walk**:
+    ///
+    /// * `max_uncached` — reject (`NoSpace`) if more than this many
+    ///   tokens would need computing (`len - hit`); the scheduler's
+    ///   step token budget.
+    /// * `cold_cap` — reject a *cold* admission (no cache hit) longer
+    ///   than this; the scheduler's largest-fitting-prefill-bucket cap.
+    ///
+    /// On success the table covers the full content and `Alloc::Ok`
+    /// carries the hit the caps were evaluated against.
+    pub fn allocate_full(&mut self, id: u64, tokens: &[u32],
+                         max_uncached: usize, cold_cap: usize) -> Alloc {
+        let hits = self.prefix_hits(tokens);
+        let hit = hits.len() * self.block_size;
+        if hit == 0 && tokens.len() > cold_cap {
+            return Alloc::NoSpace;
+        }
+        if tokens.len() - hit > max_uncached {
+            return Alloc::NoSpace;
+        }
+        self.admit(id, tokens, hits, tokens.len())
+    }
+
+    /// Admission for chunked prefill in **one hash-chain walk**: the
+    /// *capacity check* covers the sequence's full content (so a
+    /// sequence that can never fit blocks the queue head under FCFS
+    /// instead of admit/preempt thrashing), but the table physically
+    /// allocated covers only the cached-prefix hits plus fresh blocks
+    /// for the first chunk:
+    ///
+    /// * hit > 0 (warm): the chunk spans `hit .. hit + min(budget,
+    ///   warm_cap)` clamped to the content length;
+    /// * hit == 0 (cold): it spans `0 .. min(budget, cold_cap)`
+    ///   clamped likewise, and `cold_cap == 0` rejects the admission
+    ///   outright (no compiled prefill bucket can take one more cold
+    ///   chunk this step).
+    ///
+    /// `Alloc::Ok` returns both the hit and the fill, so the hit the
+    /// scheduler budgets against and the chunk bounds the engine
+    /// executes are by construction the ones the allocator honored.
+    /// Later chunks and decode growth extend the table via
+    /// [`BlockManager::append_token`].
     pub fn allocate_chunked(&mut self, id: u64, tokens: &[u32],
-                            fill: usize) -> Alloc {
+                            budget: usize, cold_cap: usize,
+                            warm_cap: usize) -> Alloc {
+        let hits = self.prefix_hits(tokens);
+        let hit = hits.len() * self.block_size;
+        debug_assert!(hit < tokens.len());
+        let fill = if hit == 0 {
+            tokens.len().min(budget).min(cold_cap)
+        } else {
+            tokens.len().min(hit.saturating_add(budget.min(warm_cap)))
+        };
+        if fill <= hit {
+            return Alloc::NoSpace; // cold_cap 0, or no budget at all
+        }
+        self.admit(id, tokens, hits, fill)
+    }
+
+    /// Post-walk admission shared by the allocate family: capacity-check
+    /// the *full* content, then record a table of the `hits` blocks
+    /// (shared, refcounted) plus fresh private blocks through `fill`.
+    fn admit(&mut self, id: u64, tokens: &[u32], hits: Vec<usize>,
+             fill: usize) -> Alloc {
         assert!(!self.tables.contains_key(&id),
                 "seq {id} already allocated");
         debug_assert!(fill <= tokens.len());
-        // one hash-chain walk serves both the capacity check and the
-        // allocation (plan() calls this on the admission hot path)
         let need = self.blocks_for(tokens.len());
-        let hits = self.prefix_hits(tokens);
         let evictable_hits = hits
             .iter()
             .filter(|&&b| self.blocks[b].ref_count == 0)
@@ -300,9 +376,10 @@ impl BlockManager {
         {
             return Alloc::NoSpace;
         }
+        let hit_tokens = hits.len() * self.block_size;
         if self.enable_prefix_caching {
             self.stats.hits += hits.len();
-            self.stats.hit_tokens += hits.len() * self.block_size;
+            self.stats.hit_tokens += hit_tokens;
             self.stats.misses += tokens.len() / self.block_size
                 - hits.len();
         }
@@ -324,7 +401,7 @@ impl BlockManager {
             table.push(b);
         }
         self.tables.insert(id, table);
-        Alloc::Ok
+        Alloc::Ok { hit_tokens, filled: fill }
     }
 
     /// Grow an allocated sequence's table to cover `new_context` tokens
@@ -333,8 +410,9 @@ impl BlockManager {
     pub fn append_token(&mut self, id: u64, new_context: usize) -> Alloc {
         let held = self.tables.get(&id).expect("seq not allocated").len();
         let need = self.blocks_for(new_context);
+        let grown = Alloc::Ok { hit_tokens: 0, filled: new_context };
         if need <= held {
-            return Alloc::Ok;
+            return grown;
         }
         let extra = need - held;
         if extra > self.free_blocks() {
@@ -347,7 +425,7 @@ impl BlockManager {
             grabbed.push(b);
         }
         self.tables.get_mut(&id).unwrap().extend(grabbed);
-        Alloc::Ok
+        grown
     }
 
     /// Release everything a sequence holds (finish or preemption).
@@ -474,7 +552,9 @@ mod tests {
     fn allocate_release_roundtrip() {
         let mut bm = BlockManager::new(16, 10);
         bm.watermark_blocks = 1;
-        assert_eq!(bm.allocate(1, &toks(1, 40)), Alloc::Ok); // 3 blocks
+        // 3 blocks, no cache hit, whole content filled
+        assert_eq!(bm.allocate(1, &toks(1, 40)),
+                   Alloc::Ok { hit_tokens: 0, filled: 40 });
         assert_eq!(bm.holds(1), 3);
         assert_eq!(bm.free_blocks(), 7);
         bm.release(1);
@@ -489,7 +569,29 @@ mod tests {
         assert!(bm.can_admit(&toks(1, 48))); // 3 + 1 watermark = 4 <= 4
         assert!(!bm.can_admit(&toks(1, 64))); // 4 + 1 > 4
         assert_eq!(bm.allocate(1, &toks(1, 64)), Alloc::NoSpace);
-        assert_eq!(bm.allocate(1, &toks(1, 48)), Alloc::Ok);
+        assert!(matches!(bm.allocate(1, &toks(1, 48)), Alloc::Ok { .. }));
+    }
+
+    #[test]
+    fn allocate_full_policy_caps_reject_in_one_walk() {
+        let mut bm = BlockManager::new(4, 16);
+        bm.watermark_blocks = 0;
+        let p = toks(4, 12);
+        // cold admission longer than the cold cap is rejected
+        assert_eq!(bm.allocate_full(1, &p, usize::MAX, 8), Alloc::NoSpace);
+        assert_eq!(bm.holds(1), 0);
+        // a warm admission ignores the cold cap and charges only the
+        // uncached tokens against max_uncached
+        assert!(matches!(bm.allocate_full(1, &p, usize::MAX, usize::MAX),
+                         Alloc::Ok { .. }));
+        bm.register_prefix(1, &p);
+        bm.release(1);
+        // hit = 8 (2 of 3 blocks; lookup never covers the whole
+        // content), so 4 uncached tokens: budget 3 rejects, 4 admits
+        assert_eq!(bm.allocate_full(2, &p, 3, 0), Alloc::NoSpace);
+        assert_eq!(bm.allocate_full(2, &p, 4, 0),
+                   Alloc::Ok { hit_tokens: 8, filled: 12 });
+        assert!(bm.check_conservation());
     }
 
     #[test]
@@ -498,10 +600,13 @@ mod tests {
         bm.watermark_blocks = 0;
         bm.allocate(1, &toks(1, 4)); // exactly 1 block
         assert_eq!(bm.holds(1), 1);
-        assert_eq!(bm.append_token(1, 5), Alloc::Ok); // needs 2nd block
+        // growth needs a 2nd block; Ok echoes the grown context
+        assert_eq!(bm.append_token(1, 5),
+                   Alloc::Ok { hit_tokens: 0, filled: 5 });
         assert_eq!(bm.holds(1), 2);
-        assert_eq!(bm.append_token(1, 6), Alloc::Ok); // still 2 blocks
-        assert_eq!(bm.holds(1), 2);
+        assert_eq!(bm.append_token(1, 6),
+                   Alloc::Ok { hit_tokens: 0, filled: 6 });
+        assert_eq!(bm.holds(1), 2); // still 2 blocks
     }
 
     #[test]
@@ -518,15 +623,16 @@ mod tests {
         let mut bm = BlockManager::new(4, 10);
         bm.watermark_blocks = 0;
         let p = toks(3, 20); // 5 blocks total
-        // admit covering only the first 6 tokens (2 blocks)
-        assert_eq!(bm.allocate_chunked(1, &p, 6), Alloc::Ok);
+        // admit with a 6-token chunk budget: covers 2 blocks, no hit
+        assert_eq!(bm.allocate_chunked(1, &p, 6, usize::MAX, usize::MAX),
+                   Alloc::Ok { hit_tokens: 0, filled: 6 });
         assert_eq!(bm.holds(1), 2);
         assert_eq!(bm.free_blocks(), 8);
         // next chunk to 14 tokens -> 4 blocks
-        assert_eq!(bm.append_token(1, 14), Alloc::Ok);
+        assert!(matches!(bm.append_token(1, 14), Alloc::Ok { .. }));
         assert_eq!(bm.holds(1), 4);
         // final chunk to the full 20 -> 5 blocks
-        assert_eq!(bm.append_token(1, 20), Alloc::Ok);
+        assert!(matches!(bm.append_token(1, 20), Alloc::Ok { .. }));
         assert_eq!(bm.holds(1), 5);
         assert!(bm.check_conservation());
         // preempt-while-partially-filled path: plain release
@@ -542,7 +648,8 @@ mod tests {
         let mut bm = BlockManager::new(4, 3);
         bm.watermark_blocks = 0;
         let p = toks(1, 20);
-        assert_eq!(bm.allocate_chunked(1, &p, 4), Alloc::NoSpace);
+        assert_eq!(bm.allocate_chunked(1, &p, 4, usize::MAX, usize::MAX),
+                   Alloc::NoSpace);
         assert_eq!(bm.holds(1), 0);
         assert!(bm.check_conservation());
     }
@@ -555,10 +662,12 @@ mod tests {
         bm.allocate(1, &p);
         assert_eq!(bm.register_prefix(1, &p).len(), 4);
         // hit covers 3 blocks (lookup never covers the whole content);
-        // fill = 14 tokens -> 4 blocks: 3 shared + 1 fresh
+        // a 2-token chunk budget past the hit fills to 14 -> 4 blocks:
+        // 3 shared + 1 fresh — and Ok reports hit and fill together
         assert_eq!(bm.cached_prefix_tokens(&p), 12);
         let before = bm.free_blocks();
-        assert_eq!(bm.allocate_chunked(2, &p, 14), Alloc::Ok);
+        assert_eq!(bm.allocate_chunked(2, &p, 2, usize::MAX, usize::MAX),
+                   Alloc::Ok { hit_tokens: 12, filled: 14 });
         assert_eq!(bm.holds(2), 4);
         assert_eq!(bm.free_blocks(), before - 1);
         assert_eq!(bm.table(1).unwrap()[..3], bm.table(2).unwrap()[..3]);
@@ -580,14 +689,17 @@ mod tests {
         let mut bm = BlockManager::new(4, 16);
         bm.watermark_blocks = 0;
         let p = toks(7, 10); // 2 full blocks + partial
-        assert_eq!(bm.allocate(1, &p), Alloc::Ok);
+        assert_eq!(bm.allocate(1, &p),
+                   Alloc::Ok { hit_tokens: 0, filled: 10 });
         assert_eq!(bm.cached_prefix_tokens(&p), 0); // nothing registered
         let newly = bm.register_prefix(1, &p);
         assert_eq!(newly.len(), 2); // both full blocks cached
-        // identical content while seq 1 is still live: shared blocks
+        // identical content while seq 1 is still live: shared blocks —
+        // and the allocator reports the hit it honored
         assert_eq!(bm.cached_prefix_tokens(&p), 8);
         let before = bm.free_blocks();
-        assert_eq!(bm.allocate(2, &p), Alloc::Ok);
+        assert_eq!(bm.allocate(2, &p),
+                   Alloc::Ok { hit_tokens: 8, filled: 10 });
         // only the private tail block was newly consumed
         assert_eq!(bm.free_blocks(), before - 1);
         assert_eq!(bm.stats.hits, 2);
@@ -633,7 +745,7 @@ mod tests {
         bm.release(2); // b's block cached + evictable
         assert_eq!(bm.free_blocks(), 3);
         // a three-block allocation must reclaim both cached blocks
-        assert_eq!(bm.allocate(3, &toks(9, 12)), Alloc::Ok);
+        assert!(matches!(bm.allocate(3, &toks(9, 12)), Alloc::Ok { .. }));
         let ev = bm.take_evicted();
         assert_eq!(ev.len(), 2);
         assert_eq!(bm.stats.evictions, 2);
@@ -725,7 +837,8 @@ mod tests {
                                 90 + next_id as u32,
                                 1 + rng.below(2 * bs),
                             ));
-                            if bm.allocate(next_id, &p) == Alloc::Ok {
+                            if matches!(bm.allocate(next_id, &p),
+                                        Alloc::Ok { .. }) {
                                 live.push((next_id, p));
                             } else {
                                 bm.release(next_id); // no-op: not held

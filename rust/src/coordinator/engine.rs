@@ -18,9 +18,18 @@
 //!   prefill bucket that fits it (the runtime's bucket selection); cold
 //!   chunks of one step batch into a single prefill call.
 //! * `start > 0` (cache-hit suffix, a later chunk, or recompute past
-//!   the first bucket): the engine drives the decode executable over
-//!   the chunk token by token — the same causal forward starting at
-//!   `start` — exactly like the PR 2 warm path, now bounded per step.
+//!   the first bucket): the chunk executes through the compiled
+//!   **chunked-prefill executable** — one device call for the whole
+//!   chunk, against the sequence's KV prefix. Chunks of *different*
+//!   sequences whose smallest-fitting `(chunk_len, prefix_len)` bucket
+//!   pair matches batch **positionwise** into a single call (each batch
+//!   slot carries its own start position). When no compiled chunk
+//!   bucket fits — pre-chunk artifact sets, oversized shapes, or
+//!   `enable_compiled_chunks = false` — the engine falls back to
+//!   driving the decode executable over the chunk token by token (the
+//!   pre-chunk-executable path), which is bit-identical in token
+//!   streams but costs one device call per token. The `device_calls`
+//!   metric makes the difference observable.
 //!
 //! When a chunk reaches the full content length the sequence's next
 //! token is sampled from the chunk's final logits and it joins the
@@ -44,6 +53,7 @@ use std::collections::HashMap;
 use anyhow::Result;
 
 use crate::config::EngineConfig;
+use crate::runtime::executor::DecodeResult;
 use crate::runtime::kv::{self, SeqKv};
 use crate::runtime::simtp::Deployment;
 use crate::util::rng::Rng;
@@ -141,6 +151,10 @@ fn sync_buckets(dep: &Deployment, ecfg: &mut EngineConfig) {
             ecfg.max_running.min(db.iter().copied().max().unwrap());
         ecfg.decode_batches = db;
     }
+    // chunk buckets cap continuation-chunk widths so a chunk maps to
+    // one compiled call; empty (pre-chunk artifacts) leaves the
+    // scheduler uncapped and the engine on the per-token fallback
+    ecfg.chunk_buckets = dep.runtime.chunk_buckets();
 }
 
 impl Engine {
@@ -332,9 +346,11 @@ impl Engine {
     }
 
     /// Execute a step's prefill chunks. Cold chunks (`start == 0`) batch
-    /// through one prefill-bucket call; all other chunks drive the
-    /// decode executable over their range. Returns (tokens computed,
-    /// prefills completed).
+    /// through one prefill-bucket call; warm/continuation chunks run
+    /// through the compiled chunk executable — grouped positionwise by
+    /// matching bucket pair, one device call per group — with the
+    /// token-by-token decode fallback when no chunk bucket fits.
+    /// Returns (tokens computed, prefills completed).
     fn run_chunks(&mut self, chunks: &[PrefillChunk])
         -> Result<(usize, usize)> {
         let cfg = self.dep.runtime.cfg.clone();
@@ -374,6 +390,7 @@ impl Engine {
                 .map(|&i| &full[i][..chunks[i].end])
                 .collect();
             let res = self.dep.prefill(&views)?;
+            self.metrics.device_calls += 1;
             let lens: Vec<usize> =
                 cold.iter().map(|&i| chunks[i].end).collect();
             let mut new_kvs: Vec<SeqKv> =
@@ -398,66 +415,167 @@ impl Engine {
             }
         }
 
-        // ---- warm/continuation chunks: decode-executable per token
-        let bucket = self
-            .dep
-            .runtime
-            .decode_batches()
-            .into_iter()
-            .find(|&b| b >= 1)
-            .unwrap_or(1);
-        let lane_sz = cfg.max_len * cfg.dim;
-        for (i, c) in chunks.iter().enumerate() {
-            if c.start == 0 {
-                continue;
-            }
-            let toks = &full[i];
-            let mut kvseq = self.kvs.remove(&c.id).expect("chunk KV");
-            debug_assert_eq!(kvseq.len, c.start);
-            let mut last_logits: Vec<f32> = vec![];
-            // assemble the padded device batch once; per-token we only
-            // scatter the one new row into slot b=0 (mirrors the
-            // assemble_batch layout) instead of re-copying MAX rows
-            let mut kv_batch = kv::assemble_batch(&[&kvseq], &cfg, bucket);
-            for pos in c.start..c.end {
-                let res = self.dep.decode(&[toks[pos]], &[kvseq.len],
-                                          &kv_batch)?;
-                let row_pos = kvseq.len;
-                {
-                    let mut refs = [&mut kvseq];
-                    kv::append_decode_rows(&mut refs, &cfg, res.batch,
-                                           &res.kv_new);
-                }
-                for layer in 0..cfg.layers {
-                    for lane in 0..2 {
-                        // kv_new is [L, 2, B, 1, D], our row is b = 0
-                        let src =
-                            ((layer * 2) + lane) * res.batch * cfg.dim;
-                        let dst = (((layer * 2) + lane) * bucket)
-                            * lane_sz
-                            + row_pos * cfg.dim;
-                        kv_batch[dst..dst + cfg.dim].copy_from_slice(
-                            &res.kv_new[src..src + cfg.dim],
-                        );
+        // ---- warm/continuation chunks: compiled chunk executable
+        // where a bucket fits (grouped positionwise by bucket pair),
+        // decode-executable per token otherwise
+        let warm: Vec<usize> =
+            (0..chunks.len()).filter(|&i| chunks[i].start > 0).collect();
+        let mut fallback: Vec<usize> = vec![];
+        if self.ecfg.enable_compiled_chunks {
+            // group chunks whose smallest-fitting (chunk_len, prefix)
+            // bucket pair matches: their KV prefixes pad to the same
+            // shape, so they share one call with per-slot starts
+            let mut groups: Vec<((usize, usize), Vec<usize>)> = vec![];
+            for &i in &warm {
+                let c = &chunks[i];
+                match self.dep.runtime.pick_chunk_bucket(
+                    1, c.end - c.start, c.start,
+                ) {
+                    Some((_, cl, pl)) => {
+                        match groups.iter_mut().find(|(k, _)| *k == (cl, pl))
+                        {
+                            Some((_, v)) => v.push(i),
+                            None => groups.push(((cl, pl), vec![i])),
+                        }
                     }
-                }
-                if pos + 1 == c.end {
-                    last_logits = res.logits[..vocab].to_vec();
+                    None => fallback.push(i),
                 }
             }
-            self.kvs.insert(c.id, kvseq);
-            let row = if c.end == toks.len() {
-                Some(&last_logits[..])
-            } else {
-                None
-            };
-            completed += self.finish_chunk(c, toks, row);
-            tokens += c.end - c.start;
+            for ((cl, pl), idxs) in groups {
+                // split a group wider than the biggest batch bucket
+                let cap = self.dep.runtime.max_chunk_batch(cl, pl).max(1);
+                for sub in idxs.chunks(cap) {
+                    let (t, c) = self.run_chunk_group(sub, chunks, &full)?;
+                    tokens += t;
+                    completed += c;
+                }
+            }
+        } else {
+            fallback = warm;
+        }
+        for &i in &fallback {
+            let (t, c) = self.run_chunk_fallback(&chunks[i], &full[i])?;
+            tokens += t;
+            completed += c;
         }
 
         self.metrics.prefill_chunks += chunks.len();
         self.metrics.prefill_tokens_executed += tokens;
         Ok((tokens, completed))
+    }
+
+    /// Execute a group of continuation chunks (same compiled bucket
+    /// pair) in **one device call**: assemble their KV prefixes into
+    /// the bucket's `[L, 2, B, P, D]` input, run the chunk executable
+    /// with per-slot start positions, scatter the new rows back.
+    fn run_chunk_group(&mut self, idxs: &[usize], chunks: &[PrefillChunk],
+                       full: &[Vec<u32>]) -> Result<(usize, usize)> {
+        let cfg = self.dep.runtime.cfg.clone();
+        let vocab = cfg.vocab;
+        let mut kvseqs: Vec<SeqKv> = idxs
+            .iter()
+            .map(|&i| self.kvs.remove(&chunks[i].id).expect("chunk KV"))
+            .collect();
+        let starts: Vec<usize> =
+            idxs.iter().map(|&i| chunks[i].start).collect();
+        let widths: Vec<usize> = idxs
+            .iter()
+            .map(|&i| chunks[i].end - chunks[i].start)
+            .collect();
+        for (s, &st) in kvseqs.iter().zip(&starts) {
+            debug_assert_eq!(s.len, st);
+        }
+        let (ab, _, ap) = self
+            .dep
+            .runtime
+            .pick_chunk_bucket(
+                idxs.len(),
+                widths.iter().copied().max().unwrap(),
+                starts.iter().copied().max().unwrap(),
+            )
+            .expect("caller grouped by a fitting bucket");
+        let kv_batch = {
+            let refs: Vec<&SeqKv> = kvseqs.iter().collect();
+            kv::assemble_prefix_batch(&refs, &cfg, ab, ap)
+        };
+        let views: Vec<&[u32]> = idxs
+            .iter()
+            .map(|&i| &full[i][chunks[i].start..chunks[i].end])
+            .collect();
+        let res = self.dep.chunk(&views, &starts, &kv_batch)?;
+        self.metrics.device_calls += 1;
+        {
+            let mut refs: Vec<&mut SeqKv> = kvseqs.iter_mut().collect();
+            kv::append_chunk_rows(&mut refs, &cfg, res.batch, res.seq,
+                                  &res.kv_new, &widths);
+        }
+        let mut completed = 0usize;
+        let mut tokens = 0usize;
+        for ((b, &i), kvseq) in idxs.iter().enumerate().zip(kvseqs) {
+            let c = &chunks[i];
+            self.kvs.insert(c.id, kvseq);
+            let last = c.end - c.start - 1;
+            let row =
+                &res.logits[(b * res.seq + last) * vocab..][..vocab];
+            let row = if c.end == full[i].len() { Some(row) } else { None };
+            completed += self.finish_chunk(c, &full[i], row);
+            tokens += c.end - c.start;
+        }
+        Ok((tokens, completed))
+    }
+
+    /// Per-token fallback for one continuation chunk: drive the decode
+    /// executable over `[start, end)` — the pre-chunk-executable path,
+    /// kept for stub builds, pre-chunk artifact sets, shapes no chunk
+    /// bucket covers, and the `enable_compiled_chunks = false`
+    /// ablation. Bit-identical token streams, T device calls.
+    fn run_chunk_fallback(&mut self, c: &PrefillChunk, toks: &[u32])
+        -> Result<(usize, usize)> {
+        let cfg = self.dep.runtime.cfg.clone();
+        let vocab = cfg.vocab;
+        let bucket = self.dep.runtime.smallest_decode_batch(1);
+        let lane_sz = cfg.max_len * cfg.dim;
+        let mut kvseq = self.kvs.remove(&c.id).expect("chunk KV");
+        debug_assert_eq!(kvseq.len, c.start);
+        // assemble the padded device batch once; per-token we only
+        // scatter the one new row into slot b=0 (mirrors the
+        // assemble_batch layout) instead of re-copying MAX rows
+        let mut kv_batch = kv::assemble_batch(&[&kvseq], &cfg, bucket);
+        let mut last_res: Option<DecodeResult> = None;
+        for pos in c.start..c.end {
+            let res =
+                self.dep.decode(&[toks[pos]], &[kvseq.len], &kv_batch)?;
+            self.metrics.device_calls += 1;
+            let row_pos = kvseq.len;
+            {
+                let mut refs = [&mut kvseq];
+                kv::append_decode_rows(&mut refs, &cfg, res.batch,
+                                       &res.kv_new);
+            }
+            for layer in 0..cfg.layers {
+                for lane in 0..2 {
+                    // kv_new is [L, 2, B, 1, D], our row is b = 0
+                    let src = ((layer * 2) + lane) * res.batch * cfg.dim;
+                    let dst = (((layer * 2) + lane) * bucket) * lane_sz
+                        + row_pos * cfg.dim;
+                    kv_batch[dst..dst + cfg.dim].copy_from_slice(
+                        &res.kv_new[src..src + cfg.dim],
+                    );
+                }
+            }
+            last_res = Some(res);
+        }
+        self.kvs.insert(c.id, kvseq);
+        // borrow the final logits row out of the last decode result,
+        // like the cold path does — no copy
+        let last_res = last_res.expect("chunk ranges are non-empty");
+        let row = if c.end == toks.len() {
+            Some(&last_res.logits[..vocab])
+        } else {
+            None
+        };
+        let completed = self.finish_chunk(c, toks, row);
+        Ok((c.end - c.start, completed))
     }
 
     /// Per-chunk bookkeeping: advance the cursor, register newly filled
@@ -564,15 +682,10 @@ impl Engine {
             .collect();
         let kv_refs: Vec<&SeqKv> = live.iter().map(|id| &self.kvs[id])
             .collect();
-        let bucket = self
-            .dep
-            .runtime
-            .decode_batches()
-            .into_iter()
-            .find(|&b| b >= live.len())
-            .unwrap_or(live.len());
+        let bucket = self.dep.runtime.smallest_decode_batch(live.len());
         let kv_batch = kv::assemble_batch(&kv_refs, &cfg, bucket);
         let res = self.dep.decode(&tokens, &lens, &kv_batch)?;
+        self.metrics.device_calls += 1;
         // append new KV rows
         {
             let mut refs: Vec<&mut SeqKv> = Vec::with_capacity(live.len());

@@ -34,6 +34,12 @@ pub struct Metrics {
     pub mixed_steps: usize,
     /// Prefill chunks executed (one sequence advancing once).
     pub prefill_chunks: usize,
+    /// Device executions issued (prefill calls + decode calls + chunk
+    /// calls). The chunked-prefill executable's whole win is here: a
+    /// T-token continuation chunk costs 1 call on the compiled path vs
+    /// T on the per-token fallback, and positionwise batching drops it
+    /// below one call per chunk.
+    pub device_calls: usize,
     /// Preemptions across finished requests (recompute policy).
     pub preemptions: usize,
     /// Prefill tokens actually run through the model (cache hits skip
@@ -126,6 +132,7 @@ impl Metrics {
             prefill_tokens_executed: self.prefill_tokens_executed,
             cached_prefix_tokens: self.cached_prefix_tokens,
             prefill_chunks: self.prefill_chunks,
+            device_calls: self.device_calls,
             mixed_steps: self.mixed_steps,
             decode_registered_blocks: self.decode_registered_blocks,
         }
@@ -163,6 +170,8 @@ pub struct MetricsReport {
     pub cached_prefix_tokens: usize,
     /// Prefill chunks executed.
     pub prefill_chunks: usize,
+    /// Device executions issued (prefill + decode + chunk calls).
+    pub device_calls: usize,
     /// Steps that mixed prefill chunks with a decode round.
     pub mixed_steps: usize,
     /// Blocks registered into the prefix cache during decode.
@@ -190,9 +199,9 @@ impl MetricsReport {
         );
         println!(
             "[{label}] prefill tokens executed={} cached={} chunks={} \
-             mixed_steps={} decode_registered_blocks={}",
+             device_calls={} mixed_steps={} decode_registered_blocks={}",
             self.prefill_tokens_executed, self.cached_prefix_tokens,
-            self.prefill_chunks, self.mixed_steps,
+            self.prefill_chunks, self.device_calls, self.mixed_steps,
             self.decode_registered_blocks
         );
     }
@@ -228,11 +237,13 @@ mod tests {
         m.prefill_chunks = 5;
         m.mixed_steps = 2;
         m.decode_registered_blocks = 3;
+        m.device_calls = 7;
         m.ttft_steps.push(4.0);
         let r = m.report();
         assert_eq!(r.prefill_chunks, 5);
         assert_eq!(r.mixed_steps, 2);
         assert_eq!(r.decode_registered_blocks, 3);
+        assert_eq!(r.device_calls, 7);
         assert_eq!(r.ttft_steps.n, 1);
     }
 }

@@ -209,6 +209,20 @@ impl Scheduler {
             })
     }
 
+    /// Width cap for warm/continuation chunks: the largest compiled
+    /// chunk-executable length, so a chunk maps to one device call.
+    /// Uncapped when no chunk buckets exist (pre-chunk artifacts, or
+    /// tests without a runtime) — the engine then drives the chunk
+    /// through the decode executable token by token as before.
+    fn warm_width_cap(&self) -> usize {
+        self.cfg
+            .chunk_buckets
+            .iter()
+            .map(|&(_, s, _)| s)
+            .max()
+            .unwrap_or(usize::MAX)
+    }
+
     /// Chunked policy: decode round + chunk continuations + admissions
     /// inside one token budget (see module docs).
     fn plan_chunked(&mut self, seqs: &HashMap<u64, Sequence>) -> StepPlan {
@@ -266,6 +280,7 @@ impl Scheduler {
         // ---- continuation chunks for partially prefilled sequences
         // (FCFS in admission order); if nothing at all is schedulable
         // while prefills are stuck on the pool, preempt LIFO and retry
+        let warm_cap = self.warm_width_cap();
         loop {
             for id in self.running.clone() {
                 if budget == 0 {
@@ -278,11 +293,11 @@ impl Scheduler {
                 let start = q.prefill_progress;
                 let target = q.context_len();
                 // a Prefilling sequence has always run at least one
-                // chunk, so continuations are decode-driven (no
-                // prefill-bucket width cap applies)
+                // chunk, so no prefill-bucket width cap applies; the
+                // chunk-executable width cap keeps it one device call
                 debug_assert!(0 < start && start < target);
                 let mut end = target
-                    .min(start.saturating_add(chunk_cap))
+                    .min(start.saturating_add(chunk_cap.min(warm_cap)))
                     .min(start.saturating_add(budget));
                 if end <= start {
                     continue;
@@ -323,7 +338,10 @@ impl Scheduler {
         // ---- admissions: first chunks for waiting sequences. Cold
         // chunks (no cache hit) batch through ONE prefill executable,
         // so their count and widths must jointly fit a single compiled
-        // bucket (batch >= count && seq >= widest).
+        // bucket (batch >= count && seq >= widest). One allocator call
+        // per attempt does the hash-chain walk, the capacity check, and
+        // the allocation; it hands back the hit it honored plus the
+        // fill, which become the chunk bounds — no separate probe.
         self.drop_impossible_heads(seqs);
         let mut cold = 0usize;
         let mut cold_w = 0usize; // widest cold chunk admitted this step
@@ -332,38 +350,26 @@ impl Scheduler {
                 break;
             }
             let toks = seqs[&id].full_tokens();
-            let hit = self.bm.cached_prefix_tokens(&toks);
-            let target = toks.len();
-            debug_assert!(hit < target);
-            let mut end = target
-                .min(hit.saturating_add(chunk_cap))
-                .min(hit.saturating_add(budget));
-            if hit == 0 {
-                let cap = self.cold_width_cap(cold + 1);
-                if cap < cold_w.max(1) {
-                    break; // no bucket fits one more cold chunk
-                }
-                end = end.min(cap);
-            }
-            if end <= hit {
-                break;
-            }
-            // allocate doubles as the capacity check; on NoSpace keep
-            // FCFS head-of-line order — don't skip ahead. (It re-walks
-            // the hash chain `cached_prefix_tokens` just probed; see
-            // ROADMAP for folding admission into one walk.)
-            if self.bm.allocate_chunked(id, &toks, end) == Alloc::NoSpace {
-                break;
-            }
-            budget -= end - hit;
-            if hit == 0 {
+            let cap = self.cold_width_cap(cold + 1);
+            // 0 = no bucket fits one more cold chunk of any width
+            let cold_cap = if cap < cold_w.max(1) { 0 } else { cap };
+            let (start, end) = match self.bm.allocate_chunked(
+                id, &toks, chunk_cap.min(budget), cold_cap, warm_cap,
+            ) {
+                Alloc::Ok { hit_tokens, filled } => (hit_tokens, filled),
+                // pool or bucket rejection: keep FCFS head-of-line
+                // order — don't skip ahead
+                Alloc::NoSpace => break,
+            };
+            debug_assert!(start < end && end <= toks.len());
+            budget -= end - start;
+            if start == 0 {
                 cold += 1;
                 cold_w = cold_w.max(end);
             }
             self.waiting.pop_front();
             self.running.push(id);
-            chunks.push(PrefillChunk { id, start: hit, end,
-                                       admitted: true });
+            chunks.push(PrefillChunk { id, start, end, admitted: true });
         }
 
         StepPlan { chunks, decode }
@@ -384,25 +390,26 @@ impl Scheduler {
                     break;
                 }
                 let toks = seqs[&id].full_tokens();
-                // only tokens past the cached prefix cost prefill compute
-                let hit = self.bm.cached_prefix_tokens(&toks);
-                if !chunks.is_empty()
-                    && tokens + (toks.len() - hit)
-                        > self.cfg.max_batch_tokens
-                {
-                    break;
-                }
+                // one allocator call per attempt: the step token budget
+                // (only tokens past the cached prefix cost compute; the
+                // first admission is exempt) and the cold bucket cap
+                // are evaluated against the hit found by the same walk
+                // that allocates
+                let max_uncached = if chunks.is_empty() {
+                    usize::MAX
+                } else {
+                    self.cfg.max_batch_tokens.saturating_sub(tokens)
+                };
                 // cold admissions run whole in one batched prefill
                 // call: count + widths must jointly fit one bucket
-                if hit == 0
-                    && self.cold_width_cap(cold + 1)
-                        < cold_w.max(toks.len())
-                {
-                    break;
-                }
-                if self.bm.allocate(id, &toks) == Alloc::NoSpace {
-                    break;
-                }
+                let cap = self.cold_width_cap(cold + 1);
+                let cold_cap = if cap < cold_w { 0 } else { cap };
+                let hit = match self.bm.allocate_full(
+                    id, &toks, max_uncached, cold_cap,
+                ) {
+                    Alloc::Ok { hit_tokens, .. } => hit_tokens,
+                    Alloc::NoSpace => break,
+                };
                 tokens += toks.len() - hit;
                 if hit == 0 {
                     cold += 1;

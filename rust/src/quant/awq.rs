@@ -27,11 +27,14 @@ pub const AWQ_ALPHA_GRID: usize = 20;
 /// AWQ's clip-ratio candidates per unit.
 pub const AWQ_CLIP_GRID: [f32; 4] = [1.0, 0.95, 0.9, 0.85];
 
+/// Outcome of the AWQ per-unit (alpha, clip) grid search.
 #[derive(Debug, Clone)]
 pub struct AwqResult {
     /// (layer, site, alpha, clip) chosen per unit.
     pub choices: Vec<(usize, Site, f32, f32)>,
+    /// Loss evaluations performed across the grids.
     pub evals: usize,
+    /// Wall-clock search time.
     pub elapsed_s: f64,
 }
 

@@ -16,6 +16,7 @@ use crate::util::rng::Rng;
 /// Per-(layer, site) channel statistics + retained rows.
 #[derive(Debug, Clone)]
 pub struct SiteStats {
+    /// Input channels at this site.
     pub channels: usize,
     /// max_t |X[t, j]| over all calibration tokens.
     pub absmax: Vec<f32>,
@@ -23,17 +24,21 @@ pub struct SiteStats {
     pub absmean: Vec<f32>,
     /// Reservoir-sampled activation rows `[R, C]` for loss evaluation.
     pub rows: Tensor,
+    /// Calibration tokens folded into these statistics.
     pub tokens_seen: usize,
 }
 
 /// Calibration data for a whole model.
 #[derive(Debug, Clone)]
 pub struct CalibData {
+    /// Statistics per (decoder layer, activation site).
     pub sites: HashMap<(usize, Site), SiteStats>,
+    /// Total calibration tokens processed.
     pub tokens: usize,
 }
 
 impl CalibData {
+    /// Statistics for one (layer, site); panics if uncollected.
     pub fn stats(&self, layer: usize, site: Site) -> &SiteStats {
         self.sites
             .get(&(layer, site))

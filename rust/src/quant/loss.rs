@@ -145,10 +145,14 @@ pub fn site_of(linear: &str) -> Site {
 /// readout).
 #[derive(Debug, Clone)]
 pub struct ModelLoss {
+    /// Loss per decoder layer (summed over its linears).
     pub per_layer: Vec<f64>,
+    /// Sum over layers.
     pub total: f64,
 }
 
+/// Whole-model quantization loss of `effective` vs `orig` over the
+/// calibration rows (see [`ModelLoss`]).
 pub fn model_quant_loss(cfg: &ModelConfig, orig: &WeightStore,
                         effective: &WeightStore, calib: &CalibData)
     -> ModelLoss {

@@ -23,6 +23,7 @@ use super::smooth::smooth_model;
 /// Everything produced by quantizing a model with one method.
 #[derive(Debug, Clone)]
 pub struct QuantOutcome {
+    /// Method that produced this outcome.
     pub method: QuantMethod,
     /// fp16-layout store for `reffwd` evaluation. For smoothed methods this
     /// is the *smoothed* model with fake-quant linears (mathematically the
@@ -33,8 +34,11 @@ pub struct QuantOutcome {
     pub deploy: Option<WeightStore>,
     /// Whole-model quantization loss in the original activation frame.
     pub loss: ModelLoss,
+    /// Chosen smoothing strength (smoothed methods only).
     pub alpha: Option<f32>,
+    /// Alpha-search trace (SmoothQuant+ only).
     pub search: Option<SearchResult>,
+    /// Wall-clock quantization time.
     pub quantize_s: f64,
 }
 

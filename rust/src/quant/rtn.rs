@@ -23,6 +23,7 @@ use crate::util::threadpool::{parallel_for, SendPtr};
 
 use super::pack;
 
+/// Largest INT4 code (the grid spans 0..=15).
 pub const NIBBLE_MAX: f32 = 15.0;
 
 /// The INT4 grid for one (already clipped) group range: `(delta, zero)`.
@@ -48,13 +49,16 @@ pub struct QuantizedLinear {
     pub scales: Tensor,
     /// Per-group zero point (integer-valued f32) `f32[K/g, N]`.
     pub zeros: Tensor,
+    /// Input channels per quantization group.
     pub group_size: usize,
 }
 
 impl QuantizedLinear {
+    /// Input-channel count K.
     pub fn k(&self) -> usize {
         self.packed.shape[0] * 2
     }
+    /// Output-channel count N.
     pub fn n(&self) -> usize {
         self.packed.shape[1]
     }

@@ -27,13 +27,18 @@ use super::calib::CalibData;
 use super::loss::quant_loss;
 use super::smooth::{smoothing_factors, unit_weight_absmax};
 
+/// Outcome of the global-alpha grid search (paper Eq. 6/7).
 #[derive(Debug, Clone)]
 pub struct SearchResult {
+    /// Winning smoothing strength.
     pub alpha: f32,
+    /// Whole-model loss at the winner.
     pub loss: f64,
     /// (alpha, whole-model loss) for every grid point.
     pub grid: Vec<(f32, f64)>,
+    /// Loss evaluations performed.
     pub evals: usize,
+    /// Wall-clock search time.
     pub elapsed_s: f64,
 }
 
@@ -58,6 +63,7 @@ pub struct AlphaSearchCtx<'a> {
 }
 
 impl<'a> AlphaSearchCtx<'a> {
+    /// Context with factors and evaluation driven by the same calib set.
     pub fn new(cfg: &ModelConfig, w: &'a WeightStore,
                calib: &'a CalibData, group_size: usize) -> Self {
         Self::cross(cfg, w, calib, calib, group_size)

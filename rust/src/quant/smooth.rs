@@ -65,7 +65,9 @@ pub fn unit_weight_absmax(store: &WeightStore, layer: usize, site: Site)
 /// The smoothing factors chosen for each (layer, site).
 #[derive(Debug, Clone, Default)]
 pub struct SmoothingReport {
+    /// Per-channel factors applied at each (layer, site).
     pub factors: Vec<((usize, Site), Vec<f32>)>,
+    /// Smoothing strength the factors were computed with.
     pub alpha: f32,
 }
 

@@ -25,30 +25,54 @@ use super::manifest::{ArtifactMeta, Manifest};
 /// Runtime counters (compiles, executions, host<->device traffic).
 #[derive(Debug, Clone, Default)]
 pub struct RuntimeStats {
+    /// Executables compiled (lazy, one per bucket).
     pub compiles: usize,
+    /// Seconds spent compiling.
     pub compile_s: f64,
+    /// Prefill executions.
     pub prefills: usize,
+    /// Decode executions.
     pub decodes: usize,
+    /// Chunked-prefill executions (one per continuation chunk group).
+    pub chunks: usize,
+    /// Seconds spent executing.
     pub exec_s: f64,
+    /// Bytes uploaded host→device.
     pub h2d_bytes: u64,
+    /// Bytes downloaded device→host.
     pub d2h_bytes: u64,
+}
+
+impl RuntimeStats {
+    /// Total device executions — the launch-overhead currency the
+    /// chunked-prefill executable exists to save: a T-token
+    /// continuation chunk costs 1 here instead of T decode calls.
+    pub fn device_calls(&self) -> usize {
+        self.prefills + self.decodes + self.chunks
+    }
 }
 
 /// One loaded model: PJRT client + device-resident weights + executable
 /// cache. Not `Sync`: the engine drives it from a single thread.
 pub struct ModelRuntime {
     client: xla::PjRtClient,
+    /// Model architecture (from the manifest — cannot drift from HLO).
     pub cfg: ModelConfig,
+    /// Weight precision the runtime was loaded with.
     pub precision: Precision,
     arts: Vec<ArtifactMeta>,
     hlo_dir: std::path::PathBuf,
     exes: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
     weights: Vec<xla::PjRtBuffer>,
+    /// Execution/compile/traffic counters.
     pub stats: RefCell<RuntimeStats>,
 }
 
+/// Output of one batched prefill execution (padded to the bucket).
 pub struct PrefillResult {
+    /// Bucket batch dimension (>= the live prompt count).
     pub batch: usize,
+    /// Bucket sequence dimension (>= the longest prompt).
     pub seq: usize,
     /// `[B, S, V]` row-major.
     pub logits: Vec<f32>,
@@ -56,11 +80,25 @@ pub struct PrefillResult {
     pub kv_new: Vec<f32>,
 }
 
+/// Output of one decode execution (padded to the bucket).
 pub struct DecodeResult {
+    /// Bucket batch dimension (>= the live sequence count).
     pub batch: usize,
     /// `[B, V]` row-major.
     pub logits: Vec<f32>,
     /// `[L, 2, B, 1, D]` row-major.
+    pub kv_new: Vec<f32>,
+}
+
+/// Output of one chunked-prefill execution (padded to the bucket).
+pub struct ChunkResult {
+    /// Bucket batch dimension (>= the live chunk count).
+    pub batch: usize,
+    /// Bucket chunk-length dimension (>= the widest chunk).
+    pub seq: usize,
+    /// `[B, C, V]` row-major — one logits row per chunk position.
+    pub logits: Vec<f32>,
+    /// `[L, 2, B, C, D]` row-major — the chunk's new KV rows.
     pub kv_new: Vec<f32>,
 }
 
@@ -147,24 +185,98 @@ impl ModelRuntime {
         v
     }
 
-    fn pick_prefill(&self, batch: usize, seq: usize) -> Result<&ArtifactMeta> {
+    /// Available chunk buckets (batch, chunk_len, prefix_len), sorted
+    /// by capacity. Empty for pre-chunk artifact sets — the engine then
+    /// falls back to the token-by-token decode path.
+    pub fn chunk_buckets(&self) -> Vec<(usize, usize, usize)> {
+        let mut v: Vec<(usize, usize, usize)> = self
+            .arts
+            .iter()
+            .filter(|a| a.phase == "chunk")
+            .map(|a| (a.batch, a.seq, a.prefix))
+            .collect();
+        v.sort_by_key(|&(b, s, p)| (b * s * p, s, p));
+        v
+    }
+
+    /// The one smallest-fitting-bucket rule every phase routes through:
+    /// among `phase` artifacts accepted by `fits`, the minimum of
+    /// `capacity` (ties broken by the key's trailing components).
+    fn smallest_fit<F, K, O>(&self, phase: &str, fits: F, capacity: K)
+        -> Option<&ArtifactMeta>
+    where
+        F: Fn(&ArtifactMeta) -> bool,
+        K: Fn(&ArtifactMeta) -> O,
+        O: Ord,
+    {
         self.arts
             .iter()
-            .filter(|a| {
-                a.phase == "prefill" && a.batch >= batch && a.seq >= seq
-            })
-            .min_by_key(|a| (a.batch * a.seq, a.seq))
-            .with_context(|| {
-                format!("no prefill bucket for batch {batch} seq {seq}")
-            })
+            .filter(|a| a.phase == phase && fits(a))
+            .min_by_key(|a| capacity(a))
+    }
+
+    fn pick_prefill(&self, batch: usize, seq: usize) -> Result<&ArtifactMeta> {
+        self.smallest_fit(
+            "prefill",
+            |a| a.batch >= batch && a.seq >= seq,
+            |a| (a.batch * a.seq, a.seq),
+        )
+        .with_context(|| {
+            format!("no prefill bucket for batch {batch} seq {seq}")
+        })
     }
 
     fn pick_decode(&self, batch: usize) -> Result<&ArtifactMeta> {
+        self.smallest_fit("decode", |a| a.batch >= batch, |a| a.batch)
+            .with_context(|| format!("no decode bucket for batch {batch}"))
+    }
+
+    fn pick_chunk(&self, batch: usize, seq: usize, prefix: usize)
+        -> Result<&ArtifactMeta> {
+        self.smallest_fit(
+            "chunk",
+            |a| a.batch >= batch && a.seq >= seq && a.prefix >= prefix,
+            |a| (a.batch * a.seq * a.prefix, a.seq, a.prefix),
+        )
+        .with_context(|| {
+            format!("no chunk bucket for batch {batch} seq {seq} \
+                     prefix {prefix}")
+        })
+    }
+
+    /// Smallest decode batch bucket fitting `need` live sequences
+    /// (`need` itself when no bucket fits, so the execute call reports
+    /// the real error). Shared by the engine's decode round and the
+    /// per-token chunk fallback.
+    pub fn smallest_decode_batch(&self, need: usize) -> usize {
+        self.pick_decode(need).map(|a| a.batch).unwrap_or(need)
+    }
+
+    /// Bucket dims `(batch, chunk_len, prefix_len)` the runtime would
+    /// execute this chunk shape with, or `None` when no compiled chunk
+    /// bucket fits (the engine then uses the per-token fallback). The
+    /// caller assembles the KV-prefix batch with exactly these dims;
+    /// [`ModelRuntime::chunk`] re-derives the same pick.
+    pub fn pick_chunk_bucket(&self, batch: usize, seq: usize,
+                             prefix: usize)
+        -> Option<(usize, usize, usize)> {
+        self.pick_chunk(batch, seq, prefix)
+            .ok()
+            .map(|a| (a.batch, a.seq, a.prefix))
+    }
+
+    /// Largest batch any chunk bucket with `seq >= chunk_len` and
+    /// `prefix >= prefix_len` offers (0 if none) — how many chunks of a
+    /// matching bucket pair can batch positionwise into one call.
+    pub fn max_chunk_batch(&self, seq: usize, prefix: usize) -> usize {
         self.arts
             .iter()
-            .filter(|a| a.phase == "decode" && a.batch >= batch)
-            .min_by_key(|a| a.batch)
-            .with_context(|| format!("no decode bucket for batch {batch}"))
+            .filter(|a| {
+                a.phase == "chunk" && a.seq >= seq && a.prefix >= prefix
+            })
+            .map(|a| a.batch)
+            .max()
+            .unwrap_or(0)
     }
 
     fn get_exe(&self, art: &ArtifactMeta)
@@ -278,6 +390,66 @@ impl ModelRuntime {
         Ok(DecodeResult { batch: ab, logits, kv_new })
     }
 
+    /// One chunked-prefill call: `chunks[b]` holds sequence `b`'s new
+    /// tokens, appended at absolute positions `starts[b] ..`, attending
+    /// to the `starts[b]` prefix rows in `kv_batch` (layout
+    /// `[L, 2, B, P, D]` from [`super::kv::assemble_prefix_batch`],
+    /// with `(B, P)` matching the bucket [`pick_chunk_bucket`] reported
+    /// for this shape). Sequences may sit at *different* start
+    /// positions — that is the positionwise batching of continuation
+    /// chunks. Returns logits for every chunk position and the chunk's
+    /// new KV rows in one device call.
+    ///
+    /// [`pick_chunk_bucket`]: ModelRuntime::pick_chunk_bucket
+    pub fn chunk(&self, chunks: &[&[u32]], starts: &[usize],
+                 kv_batch: &[f32]) -> Result<ChunkResult> {
+        let live = chunks.len();
+        assert_eq!(live, starts.len());
+        let width = chunks.iter().map(|c| c.len()).max().unwrap_or(1);
+        let pre = starts.iter().copied().max().unwrap_or(0);
+        let art = self.pick_chunk(live, width, pre)?;
+        let (ab, ac, ap) = (art.batch, art.seq, art.prefix);
+        let exe = self.get_exe(art)?;
+        let expected = self.cfg.layers * 2 * ab * ap * self.cfg.dim;
+        if kv_batch.len() != expected {
+            bail!("kv prefix batch len {} != expected {expected} \
+                   (bucket b{ab} p{ap})", kv_batch.len());
+        }
+        let mut toks = vec![0i32; ab * ac];
+        let mut sts = vec![0i32; ab];
+        for (b, c) in chunks.iter().enumerate() {
+            for (i, &t) in c.iter().enumerate() {
+                toks[b * ac + i] = t as i32;
+            }
+            sts[b] = starts[b] as i32;
+        }
+        let t0 = Instant::now();
+        let tok_buf = self
+            .client
+            .buffer_from_host_buffer::<i32>(&toks, &[ab, ac], None)?;
+        let start_buf =
+            self.client.buffer_from_host_buffer::<i32>(&sts, &[ab], None)?;
+        let kv_shape = [self.cfg.layers, 2, ab, ap, self.cfg.dim];
+        let kv_buf = self
+            .client
+            .buffer_from_host_buffer::<f32>(kv_batch, &kv_shape, None)?;
+        let mut args: Vec<&xla::PjRtBuffer> =
+            vec![&tok_buf, &start_buf, &kv_buf];
+        args.extend(self.weights.iter());
+        let result = exe.execute_b(&args)?[0][0].to_literal_sync()?;
+        let (lg, kvn) = result.to_tuple2()?;
+        let logits = lg.to_vec::<f32>()?;
+        let kv_new = kvn.to_vec::<f32>()?;
+        let mut st = self.stats.borrow_mut();
+        st.chunks += 1;
+        st.exec_s += t0.elapsed().as_secs_f64();
+        st.h2d_bytes +=
+            (kv_batch.len() * 4 + toks.len() * 4 + sts.len() * 4) as u64;
+        st.d2h_bytes += (logits.len() * 4 + kv_new.len() * 4) as u64;
+        Ok(ChunkResult { batch: ab, seq: ac, logits, kv_new })
+    }
+
+    /// Vocabulary size of the loaded model.
     pub fn vocab(&self) -> usize {
         self.cfg.vocab
     }

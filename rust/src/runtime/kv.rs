@@ -12,8 +12,11 @@ use crate::config::ModelConfig;
 /// Per-sequence KV cache with capacity `max_len` tokens.
 #[derive(Debug, Clone)]
 pub struct SeqKv {
+    /// Decoder layers.
     pub layers: usize,
+    /// Row capacity (the model's static KV length).
     pub max_len: usize,
+    /// Hidden dimension per row.
     pub dim: usize,
     /// Tokens currently stored.
     pub len: usize,
@@ -22,6 +25,7 @@ pub struct SeqKv {
 }
 
 impl SeqKv {
+    /// An empty cache sized for `cfg`.
     pub fn new(cfg: &ModelConfig) -> SeqKv {
         SeqKv {
             layers: cfg.layers,
@@ -37,11 +41,13 @@ impl SeqKv {
         ((layer * 2) + lane) * self.max_len * self.dim
     }
 
+    /// One `D`-wide row (`lane` 0 = K, 1 = V) at position `pos`.
     pub fn row(&self, layer: usize, lane: usize, pos: usize) -> &[f32] {
         let o = self.lane_off(layer, lane) + pos * self.dim;
         &self.data[o..o + self.dim]
     }
 
+    /// Mutable access to one row (see [`SeqKv::row`]).
     pub fn row_mut(&mut self, layer: usize, lane: usize, pos: usize)
         -> &mut [f32] {
         let o = self.lane_off(layer, lane) + pos * self.dim;
@@ -60,6 +66,7 @@ impl SeqKv {
         self.data.fill(0.0);
     }
 
+    /// Host bytes this cache occupies.
     pub fn bytes(&self) -> usize {
         self.data.len() * 4
     }
@@ -83,6 +90,64 @@ pub fn assemble_batch(seqs: &[&SeqKv], cfg: &ModelConfig, batch: usize)
         }
     }
     out
+}
+
+/// Pack the first `prefix` rows of B sequence caches into one
+/// `[L, 2, B, P, D]` buffer — the chunk executable's KV-prefix input.
+/// Each sequence must hold at most `prefix` rows (the bucket was picked
+/// for the largest `start` in the batch); only the `len` live rows are
+/// copied — the zero-initialized buffer already covers the padding past
+/// them (and past the live sequence count), which the executable masks
+/// by `starts` anyway.
+pub fn assemble_prefix_batch(seqs: &[&SeqKv], cfg: &ModelConfig,
+                             batch: usize, prefix: usize) -> Vec<f32> {
+    assert!(seqs.len() <= batch);
+    let (l, d) = (cfg.layers, cfg.dim);
+    let lane_sz = prefix * d;
+    let mut out = vec![0.0f32; l * 2 * batch * lane_sz];
+    for layer in 0..l {
+        for lane in 0..2 {
+            for (b, s) in seqs.iter().enumerate() {
+                debug_assert!(s.len <= prefix && prefix <= s.max_len);
+                let live = s.len * d;
+                let dst = (((layer * 2) + lane) * batch + b) * lane_sz;
+                out[dst..dst + live]
+                    .copy_from_slice(&s.lane(layer, lane)[..live]);
+            }
+        }
+    }
+    out
+}
+
+/// Scatter chunk output `kv_new: [L, 2, B, C, D]` rows `0..counts[b]`
+/// into each sequence starting at its current length, then advance each
+/// length by its count (rows past a sequence's real chunk width are
+/// bucket padding and dropped).
+pub fn append_chunk_rows(seqs: &mut [&mut SeqKv], cfg: &ModelConfig,
+                         batch: usize, seq: usize, kv_new: &[f32],
+                         counts: &[usize]) {
+    let (l, d) = (cfg.layers, cfg.dim);
+    assert_eq!(kv_new.len(), l * 2 * batch * seq * d);
+    assert_eq!(seqs.len(), counts.len());
+    for layer in 0..l {
+        for lane in 0..2 {
+            for (b, s) in seqs.iter_mut().enumerate() {
+                let n = counts[b];
+                debug_assert!(n <= seq);
+                let src = ((((layer * 2) + lane) * batch + b) * seq) * d;
+                for r in 0..n {
+                    let pos = s.len + r;
+                    assert!(pos < s.max_len, "KV overflow at pos {pos}");
+                    s.row_mut(layer, lane, pos).copy_from_slice(
+                        &kv_new[src + r * d..src + (r + 1) * d],
+                    );
+                }
+            }
+        }
+    }
+    for (s, &n) in seqs.iter_mut().zip(counts) {
+        s.len += n;
+    }
 }
 
 /// Scatter decode output `kv_new: [L, 2, B, 1, D]` into each sequence at
@@ -205,6 +270,50 @@ mod tests {
         assert_eq!(s0.len, 4);
         assert_eq!(s1.len, 3);
         assert_eq!(s1.row(0, 0, 2)[0], 7.0);
+    }
+
+    #[test]
+    fn prefix_batch_and_chunk_append() {
+        let c = cfg();
+        let batch = 2; // padded bucket batch
+        let mut a = SeqKv::new(&c);
+        let mut b = SeqKv::new(&c);
+        // a holds 3 prefix rows, b holds 1 (different starts — the
+        // positionwise-batched case)
+        a.len = 3;
+        b.len = 1;
+        a.row_mut(1, 0, 2)[5] = 4.0;
+        b.row_mut(0, 1, 0)[0] = -2.0;
+        let prefix = 4;
+        let out = assemble_prefix_batch(&[&a, &b], &c, batch, prefix);
+        assert_eq!(out.len(), c.layers * 2 * batch * prefix * c.dim);
+        let lane = prefix * c.dim;
+        // (l=1, lane=0, b=0, pos=2, d=5)
+        let idx = (((1 * 2) + 0) * batch + 0) * lane + 2 * c.dim + 5;
+        assert_eq!(out[idx], 4.0);
+        // (l=0, lane=1, b=1, pos=0, d=0)
+        let idx = (((0 * 2) + 1) * batch + 1) * lane;
+        assert_eq!(out[idx], -2.0);
+
+        // chunk append: widths 2 and 3 out of a seq-4 bucket; padded
+        // rows past each width must be dropped
+        let seqw = 4;
+        let mut kv_new =
+            vec![0.0f32; c.layers * 2 * batch * seqw * c.dim];
+        // (l=0, lane=0, b=0, r=1, d=0) = 8 -> lands at a pos 3+1=4
+        kv_new[1 * c.dim] = 8.0;
+        // (l=0, lane=0, b=1, r=2, d=1) = 9 -> lands at b pos 1+2=3
+        kv_new[(((0 * 2) + 0) * batch + 1) * seqw * c.dim
+            + 2 * c.dim + 1] = 9.0;
+        {
+            let mut refs = [&mut a, &mut b];
+            append_chunk_rows(&mut refs, &c, batch, seqw, &kv_new,
+                              &[2, 3]);
+        }
+        assert_eq!(a.len, 5);
+        assert_eq!(b.len, 4);
+        assert_eq!(a.row(0, 0, 4)[0], 8.0);
+        assert_eq!(b.row(0, 0, 3)[1], 9.0);
     }
 
     #[test]

@@ -10,14 +10,19 @@ use anyhow::{bail, Context, Result};
 use crate::config::{ModelConfig, Precision};
 use crate::util::json::{self, Value};
 
+/// One positional input/output of a lowered executable.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TensorDesc {
+    /// Parameter name as lowered (e.g. `tokens`, `kv`, a weight name).
     pub name: String,
+    /// Static shape.
     pub shape: Vec<usize>,
-    pub dtype: String, // "f32" | "i32" | "u8"
+    /// Element type: "f32" | "i32" | "u8".
+    pub dtype: String,
 }
 
 impl TensorDesc {
+    /// Element count of the static shape.
     pub fn numel(&self) -> usize {
         self.shape.iter().product()
     }
@@ -36,32 +41,54 @@ impl TensorDesc {
     }
 }
 
+/// One compiled executable's bucket dimensions and I/O contract.
 #[derive(Debug, Clone)]
 pub struct ArtifactMeta {
+    /// Unique artifact name (also the executable-cache key).
     pub name: String,
+    /// HLO text file name under the artifacts directory.
     pub file: String,
+    /// Weight precision this executable was lowered for.
     pub precision: Precision,
-    /// "prefill" | "decode"
+    /// "prefill" | "decode" | "chunk"
     pub phase: String,
+    /// Batch bucket (sequences per call).
     pub batch: usize,
+    /// Sequence-length bucket: prompt rows (prefill) or chunk rows
+    /// (chunk); 0 for decode.
     pub seq: usize,
+    /// KV-prefix row bucket (chunk phase only; 0 otherwise). A chunk
+    /// executable's `kv` input carries `prefix` cache rows per
+    /// sequence, so chunks starting early ship fewer rows than the
+    /// decode path's fixed `max_len`.
+    pub prefix: usize,
+    /// Positional input descriptors (leading activations, then every
+    /// weight in canonical order).
     pub inputs: Vec<TensorDesc>,
+    /// Positional output descriptors (`logits`, `kv_new`).
     pub outputs: Vec<TensorDesc>,
 }
 
+/// One model size's manifest entry: config + its artifacts.
 #[derive(Debug, Clone)]
 pub struct ModelEntry {
+    /// Model architecture (the authoritative copy at runtime).
     pub config: ModelConfig,
+    /// Every artifact lowered for this size (all precisions).
     pub artifacts: Vec<ArtifactMeta>,
 }
 
+/// Parsed `artifacts/manifest.json`.
 #[derive(Debug, Clone)]
 pub struct Manifest {
+    /// Directory the manifest (and HLO files) live in.
     pub dir: PathBuf,
+    /// Model entries keyed by size name, in file order.
     pub models: Vec<(String, ModelEntry)>,
 }
 
 impl Manifest {
+    /// Parse `<dir>/manifest.json`.
     pub fn load(dir: &Path) -> Result<Manifest> {
         let path = dir.join("manifest.json");
         let text = std::fs::read_to_string(&path)
@@ -84,6 +111,9 @@ impl Manifest {
                     phase: a.get("phase").as_str().unwrap().to_string(),
                     batch: a.get("batch").as_usize().unwrap(),
                     seq: a.get("seq").as_usize().unwrap(),
+                    // absent in pre-chunk manifests (and meaningless
+                    // for prefill/decode): default 0
+                    prefix: a.get("prefix").as_usize().unwrap_or(0),
                     inputs: a
                         .get("inputs")
                         .as_arr()
@@ -105,6 +135,7 @@ impl Manifest {
         Ok(Manifest { dir: dir.to_path_buf(), models })
     }
 
+    /// The entry for one model size.
     pub fn model(&self, size: &str) -> Result<&ModelEntry> {
         self.models
             .iter()
@@ -124,6 +155,7 @@ impl Manifest {
             .collect())
     }
 
+    /// Absolute path of an artifact's HLO text file.
     pub fn hlo_path(&self, art: &ArtifactMeta) -> PathBuf {
         self.dir.join(&art.file)
     }
@@ -205,6 +237,34 @@ mod tests {
                 assert_eq!(a.outputs[1].shape,
                            vec![cfg.layers, 2, a.batch, 1, cfg.dim]);
             }
+        }
+    }
+
+    #[test]
+    fn chunk_artifacts_have_prefix_bucket_and_kv_input() {
+        let Some(m) = manifest() else { return };
+        let arts = m.artifacts("tiny", Precision::Fp16).unwrap();
+        let chunks: Vec<_> =
+            arts.iter().filter(|a| a.phase == "chunk").collect();
+        if chunks.is_empty() {
+            eprintln!("skipping: pre-chunk artifacts (rebuild)");
+            return;
+        }
+        let cfg = &m.model("tiny").unwrap().config;
+        for a in chunks {
+            assert!(a.prefix > 0 && a.prefix <= cfg.max_len, "{}", a.name);
+            assert!(a.seq > 0, "{}", a.name);
+            assert_eq!(a.inputs[0].name, "tokens");
+            assert_eq!(a.inputs[0].shape, vec![a.batch, a.seq]);
+            assert_eq!(a.inputs[1].name, "starts");
+            assert_eq!(a.inputs[2].name, "kv");
+            assert_eq!(a.inputs[2].shape,
+                       vec![cfg.layers, 2, a.batch, a.prefix, cfg.dim]);
+            assert_eq!(a.outputs[0].shape,
+                       vec![a.batch, a.seq, cfg.vocab]);
+            assert_eq!(a.outputs[1].name, "kv_new");
+            assert_eq!(a.outputs[1].shape,
+                       vec![cfg.layers, 2, a.batch, a.seq, cfg.dim]);
         }
     }
 

@@ -14,14 +14,18 @@ use crate::config::GpuProfile;
 /// Paper-scale model description (Code Llama-34B-like).
 #[derive(Debug, Clone)]
 pub struct PaperModel {
+    /// Parameter count.
     pub params: f64,
+    /// Decoder layers.
     pub layers: usize,
+    /// Hidden dimension.
     pub dim: usize,
     /// KV bytes per token (fp16, both lanes, all layers; GQA folded in).
     pub kv_bytes_per_token: f64,
 }
 
 impl PaperModel {
+    /// The paper's largest evaluated model (Code Llama-34B shapes).
     pub fn code_llama_34b() -> Self {
         // 34B params, 48 layers, d_model 8192, GQA 8 kv-heads / 64 heads.
         let layers = 48usize;
@@ -39,7 +43,9 @@ impl PaperModel {
 /// Deployment under the model.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Deploy {
+    /// FP16 weights sharded over two GPUs (tensor parallel).
     Fp16TwoGpu,
+    /// SmoothQuant+ W4A16 on one GPU.
     W4a16OneGpu,
     /// AWQ kernel on one GPU: same memory as W4A16, slower kernel
     /// (dequant inefficiency factor measured by the paper's Fig. 7, where
@@ -47,6 +53,7 @@ pub enum Deploy {
     AwqOneGpu,
 }
 
+/// Roofline estimate for one deployment at one context length.
 #[derive(Debug, Clone)]
 pub struct StepEstimate {
     /// Seconds per decode step at the given batch.

@@ -29,35 +29,44 @@ impl fmt::Display for Unavailable {
 
 impl std::error::Error for Unavailable {}
 
+/// Stub PJRT client; every constructor fails with [`Unavailable`].
 #[derive(Debug)]
 pub struct PjRtClient;
 
+/// Stub device buffer (never constructed).
 #[derive(Debug)]
 pub struct PjRtBuffer;
 
+/// Stub compiled executable (never constructed).
 #[derive(Debug)]
 pub struct PjRtLoadedExecutable;
 
+/// Stub host literal (never constructed).
 #[derive(Debug)]
 pub struct Literal;
 
+/// Stub HLO module proto (never constructed).
 #[derive(Debug)]
 pub struct HloModuleProto;
 
+/// Stub XLA computation (constructible, but uncompilable).
 #[derive(Debug)]
 pub struct XlaComputation;
 
 impl PjRtClient {
+    /// Mirror of `PjRtClient::cpu`; always [`Unavailable`].
     pub fn cpu() -> Result<PjRtClient, Unavailable> {
         Err(Unavailable)
     }
 
+    /// Mirror of the host->device upload; always [`Unavailable`].
     pub fn buffer_from_host_buffer<T>(
         &self, _data: &[T], _shape: &[usize], _device: Option<()>,
     ) -> Result<PjRtBuffer, Unavailable> {
         Err(Unavailable)
     }
 
+    /// Mirror of executable compilation; always [`Unavailable`].
     pub fn compile(&self, _comp: &XlaComputation)
         -> Result<PjRtLoadedExecutable, Unavailable> {
         Err(Unavailable)
@@ -65,12 +74,14 @@ impl PjRtClient {
 }
 
 impl PjRtBuffer {
+    /// Mirror of the device->host readback; always [`Unavailable`].
     pub fn to_literal_sync(&self) -> Result<Literal, Unavailable> {
         Err(Unavailable)
     }
 }
 
 impl PjRtLoadedExecutable {
+    /// Mirror of buffer-arg execution; always [`Unavailable`].
     pub fn execute_b(&self, _args: &[&PjRtBuffer])
         -> Result<Vec<Vec<PjRtBuffer>>, Unavailable> {
         Err(Unavailable)
@@ -78,16 +89,19 @@ impl PjRtLoadedExecutable {
 }
 
 impl Literal {
+    /// Mirror of two-element tuple destructuring; always [`Unavailable`].
     pub fn to_tuple2(self) -> Result<(Literal, Literal), Unavailable> {
         Err(Unavailable)
     }
 
+    /// Mirror of typed literal extraction; always [`Unavailable`].
     pub fn to_vec<T>(&self) -> Result<Vec<T>, Unavailable> {
         Err(Unavailable)
     }
 }
 
 impl HloModuleProto {
+    /// Mirror of HLO-text parsing; always [`Unavailable`].
     pub fn from_text_file(_path: impl AsRef<Path>)
         -> Result<HloModuleProto, Unavailable> {
         Err(Unavailable)
@@ -95,6 +109,7 @@ impl HloModuleProto {
 }
 
 impl XlaComputation {
+    /// Mirror of proto wrapping (infallible in the real crate too).
     pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
         XlaComputation
     }

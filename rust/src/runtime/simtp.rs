@@ -17,8 +17,11 @@ use anyhow::Result;
 
 use crate::config::GpuProfile;
 
-use super::executor::{DecodeResult, ModelRuntime, PrefillResult};
+use super::executor::{
+    ChunkResult, DecodeResult, ModelRuntime, PrefillResult,
+};
 
+/// How the simulated interconnect cost is applied.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum CommMode {
     /// Sleep the modeled communication time (wall-clock-faithful).
@@ -29,15 +32,20 @@ pub enum CommMode {
 
 /// A deployment: 1 worker, or N simulated tensor-parallel workers.
 pub struct Deployment {
+    /// The single real PJRT runtime compute executes on.
     pub runtime: ModelRuntime,
+    /// Simulated tensor-parallel worker count (1 = no comm cost).
     pub workers: usize,
+    /// Device profile the interconnect cost is modeled from.
     pub gpu: GpuProfile,
+    /// Sleep vs account-only for the modeled comm time.
     pub mode: CommMode,
     /// Total modeled communication time.
     pub comm_s: std::cell::Cell<f64>,
 }
 
 impl Deployment {
+    /// One worker, no interconnect cost.
     pub fn single(runtime: ModelRuntime, gpu: GpuProfile) -> Deployment {
         Deployment {
             runtime, workers: 1, gpu,
@@ -46,6 +54,7 @@ impl Deployment {
         }
     }
 
+    /// N simulated tensor-parallel workers (comm cost per step).
     pub fn tensor_parallel(runtime: ModelRuntime, gpu: GpuProfile,
                            workers: usize, mode: CommMode) -> Deployment {
         assert!(workers >= 2);
@@ -82,6 +91,7 @@ impl Deployment {
         }
     }
 
+    /// Batched prefill plus the step's modeled comm cost.
     pub fn prefill(&self, prompts: &[&[u32]]) -> Result<PrefillResult> {
         let r = self.runtime.prefill(prompts)?;
         let tokens: usize = prompts.iter().map(|p| p.len()).sum();
@@ -89,10 +99,22 @@ impl Deployment {
         Ok(r)
     }
 
+    /// One decode step plus the step's modeled comm cost.
     pub fn decode(&self, tokens: &[u32], lens: &[usize], kv: &[f32])
         -> Result<DecodeResult> {
         let r = self.runtime.decode(tokens, lens, kv)?;
         self.pay_comm(self.step_comm_s(tokens.len()));
+        Ok(r)
+    }
+
+    /// One chunked-prefill call plus the modeled comm cost for its
+    /// total token count (the same per-token activation all-reduce a
+    /// prefill of that many rows would pay).
+    pub fn chunk(&self, chunks: &[&[u32]], starts: &[usize], kv: &[f32])
+        -> Result<ChunkResult> {
+        let r = self.runtime.chunk(chunks, starts, kv)?;
+        let tokens: usize = chunks.iter().map(|c| c.len()).sum();
+        self.pay_comm(self.step_comm_s(tokens));
         Ok(r)
     }
 

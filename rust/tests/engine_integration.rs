@@ -349,6 +349,110 @@ fn chunked_prefill_golden_identical_streams() {
     }
 }
 
+#[test]
+fn compiled_chunk_path_matches_per_token_fallback() {
+    // PR 4 golden test: the same trace through the compiled
+    // chunked-prefill executable (including positionwise-batched
+    // groups), the per-token decode fallback, and legacy unchunked mode
+    // must emit bit-identical token streams — while the compiled path
+    // issues strictly fewer device calls whenever continuation chunks
+    // exist. Trace: cold ~40-token prompts (chunked at cap 17) plus
+    // warm shared-prefix prompts (suffix chunks).
+    let Some(m) = manifest() else { return };
+    let mut rng = sqplus::util::rng::Rng::new(9);
+    let prefix: Vec<u32> =
+        (0..16).map(|_| (1 + rng.below(511)) as u32).collect();
+    let mut prompts: Vec<Vec<u32>> = vec![];
+    for i in 0..4u32 {
+        prompts.push(
+            (0..40u32).map(|t| (i * 53 + t * 17 + 1) % 512).collect(),
+        );
+        let mut p = prefix.clone();
+        p.extend((0..6u32).map(|t| (i * 37 + t * 11 + 1) % 512));
+        prompts.push(p);
+    }
+    let run = |chunked: bool, cap: usize, compiled: bool| {
+        let ecfg = EngineConfig {
+            block_size: 4,
+            enable_chunked_prefill: chunked,
+            max_prefill_chunk: cap,
+            enable_compiled_chunks: compiled,
+            ..Default::default()
+        };
+        let mut eng = fp16_engine(&m, ecfg);
+        for p in &prompts {
+            eng.submit(
+                p.clone(),
+                SamplingParams { max_new_tokens: 6, ..Default::default() },
+            );
+        }
+        eng.run_to_completion(5000).unwrap();
+        let mut fin = eng.take_finished();
+        fin.sort_by_key(|s| s.id);
+        let outs: Vec<Vec<u32>> =
+            fin.iter().map(|s| s.output.clone()).collect();
+        let st = eng.dep.runtime.stats.borrow().clone();
+        assert_eq!(eng.metrics.device_calls, st.device_calls(),
+                   "engine metric disagrees with runtime stats");
+        (outs, eng.metrics.device_calls, st.chunks)
+    };
+    let (legacy, _, _) = run(false, 0, true);
+    for cap in [0usize, 64, 17] {
+        let (outs_c, calls_c, chunk_execs) = run(true, cap, true);
+        let (outs_f, calls_f, _) = run(true, cap, false);
+        assert_eq!(legacy, outs_c,
+                   "compiled stream changed at cap {cap}");
+        assert_eq!(legacy, outs_f,
+                   "fallback stream changed at cap {cap}");
+        if chunk_execs > 0 {
+            // the trace has warm suffix chunks at every cap, so the
+            // compiled path must save device calls vs the fallback
+            assert!(calls_c < calls_f,
+                    "cap {cap}: compiled {calls_c} !< fallback {calls_f}");
+        }
+    }
+}
+
+#[test]
+fn warm_chunks_batch_positionwise_into_one_call() {
+    // Four warm admissions whose suffix chunks share a bucket pair must
+    // execute as ONE chunk call (positionwise batching), not four.
+    let Some(m) = manifest() else { return };
+    let ecfg = EngineConfig { block_size: 4, ..Default::default() };
+    let mut eng = fp16_engine(&m, ecfg);
+    if eng.dep.runtime.chunk_buckets().is_empty() {
+        eprintln!("SKIP: pre-chunk artifacts (rebuild)");
+        return;
+    }
+    let mut rng = sqplus::util::rng::Rng::new(13);
+    let prefix: Vec<u32> =
+        (0..16).map(|_| (1 + rng.below(511)) as u32).collect();
+    // donor registers the shared-prefix blocks
+    let mut donor = prefix.clone();
+    donor.extend([7, 8, 9, 10]);
+    eng.submit(donor,
+               SamplingParams { max_new_tokens: 2, ..Default::default() });
+    eng.run_to_completion(500).unwrap();
+    eng.take_finished();
+    let chunks_before = eng.dep.runtime.stats.borrow().chunks;
+    // four warm requests land together: each hits 16 cached tokens and
+    // runs a [16, 22) suffix chunk — same (chunk_len, prefix) bucket
+    for i in 0..4u32 {
+        let mut p = prefix.clone();
+        p.extend((0..6u32).map(|t| (i * 91 + t * 13 + 1) % 512));
+        eng.submit(p, SamplingParams { max_new_tokens: 2,
+                                       ..Default::default() });
+    }
+    let _ = eng.step().unwrap(); // the admission step runs the chunks
+    let chunks_after = eng.dep.runtime.stats.borrow().chunks;
+    assert_eq!(chunks_after - chunks_before, 1,
+               "4 warm chunks should batch into one chunk call");
+    // donor's one cold chunk plus the 4 warm suffix chunks
+    assert_eq!(eng.metrics.prefill_chunks, 1 + 4);
+    eng.run_to_completion(500).unwrap();
+    assert_eq!(eng.take_finished().len(), 4);
+}
+
 /// Engine on the `small` model (max_len 256 > largest prefill bucket
 /// 128) — the configuration where the recompute hazard is real.
 fn small_fp16_engine(m: &Manifest, ecfg: EngineConfig) -> Option<Engine> {
@@ -459,6 +563,49 @@ fn long_prompt_beyond_bucket_serves_chunked() {
     assert_eq!(seq.finish, Some(FinishReason::MaxTokens));
     assert_eq!(seq.output.len(), 8);
     assert!(eng.metrics.prefill_chunks >= 2, "prompt was not chunked");
+}
+
+#[test]
+fn continuation_chunk_is_one_device_call() {
+    // Acceptance: a T-token continuation chunk costs exactly 1 device
+    // call on the compiled path. A 160-token prompt on `small` (bucket
+    // 128) splits into a cold [0,128) prefill call plus a [128,160)
+    // continuation; compiled that is 1 prefill + 1 chunk + 3 decode
+    // calls (the first of the 4 outputs samples from the chunk's final
+    // logits), while the per-token fallback pays 32 extra decode calls
+    // for the same 32-token chunk.
+    let Some(m) = manifest() else { return };
+    let prompt: Vec<u32> =
+        (0..160u32).map(|t| (t * 13 + 1) % 1024).collect();
+    let run = |compiled: bool| {
+        let ecfg = EngineConfig {
+            enable_compiled_chunks: compiled,
+            ..Default::default()
+        };
+        let mut eng = small_fp16_engine(&m, ecfg)?;
+        if eng.dep.runtime.chunk_buckets().is_empty() {
+            eprintln!("SKIP: pre-chunk artifacts (rebuild)");
+            return None;
+        }
+        eng.submit(
+            prompt.clone(),
+            SamplingParams { max_new_tokens: 4, ..Default::default() },
+        );
+        eng.run_to_completion(5000).unwrap();
+        let fin = eng.take_finished();
+        assert_eq!(fin[0].output.len(), 4);
+        let st = eng.dep.runtime.stats.borrow().clone();
+        assert_eq!(eng.metrics.device_calls, st.device_calls());
+        Some((fin[0].output.clone(), st))
+    };
+    let Some((out_c, st_c)) = run(true) else { return };
+    let Some((out_f, st_f)) = run(false) else { return };
+    assert_eq!(out_c, out_f, "compiled chunk changed the stream");
+    // compiled: one cold prefill, ONE chunk call for the 32-token
+    // continuation, one decode call per output after the first
+    assert_eq!((st_c.prefills, st_c.chunks, st_c.decodes), (1, 1, 3));
+    // fallback: the same continuation costs one decode call per token
+    assert_eq!((st_f.prefills, st_f.chunks, st_f.decodes), (1, 0, 35));
 }
 
 #[test]

@@ -15,7 +15,11 @@
 //!   no overlaps — and cold chunks never exceed the largest bucket;
 //! * determinism: under a deterministic fake model, any
 //!   `max_prefill_chunk` (and legacy unchunked mode) produces the same
-//!   token stream per sequence.
+//!   token stream per sequence;
+//! * single-walk admission: the hit the allocator returns (and the
+//!   scheduler budgets against) equals a reference double-walk probe on
+//!   a pre-plan snapshot, and a plan performs at most one hash-chain
+//!   walk per admission attempt.
 
 use std::collections::HashMap;
 
@@ -288,10 +292,10 @@ fn no_double_free_on_preempt_while_shared() {
     let a = mk(0, 0).full_tokens();
     let b = mk(1, 10).full_tokens();
     let c = mk(2, 20).full_tokens();
-    assert_eq!(bm.allocate(0, &a), Alloc::Ok);
+    assert!(matches!(bm.allocate(0, &a), Alloc::Ok { .. }));
     bm.register_prefix(0, &a);
-    assert_eq!(bm.allocate(1, &b), Alloc::Ok);
-    assert_eq!(bm.allocate(2, &c), Alloc::Ok);
+    assert!(matches!(bm.allocate(1, &b), Alloc::Ok { .. }));
+    assert!(matches!(bm.allocate(2, &c), Alloc::Ok { .. }));
     // both B and C share A's two prefix blocks
     assert_eq!(bm.stats.shared_blocks, 4);
     assert_eq!(bm.table(0).unwrap()[..2], bm.table(1).unwrap()[..2]);
@@ -549,6 +553,113 @@ fn grown_content_beyond_pool_drops_instead_of_wedging() {
     assert_eq!(seqs[&0].finish, Some(FinishReason::MaxTokens));
     assert_eq!(seqs[&0].output.len(), 20);
     assert_eq!(seqs[&1].finish, Some(FinishReason::PoolExhausted));
+}
+
+#[test]
+fn single_walk_admission_matches_reference_double_walk() {
+    // The PR 4 admission contract: one allocator call per attempt does
+    // the walk, the capacity check, and the allocation, returning the
+    // hit it honored. Against a pre-plan snapshot of the block manager
+    // (ample pool, so no mid-plan eviction mutates the cache) the old
+    // double-walk probe must agree with every admitted chunk's start —
+    // i.e. single-walk admission never over- or under-budgets relative
+    // to the reference — and the walk counter must not exceed one walk
+    // per attempt (admissions + at most one rejected head).
+    for (chunked, chunk) in [(true, 0usize), (true, 6), (false, 0)] {
+        prop::check("single-walk admission", 8, |rng| {
+            let bs = 2 + rng.below(4);
+            let prefixes = shared_prefixes(bs);
+            let mut s = Scheduler::new(
+                EngineConfig {
+                    max_running: 2 + rng.below(4),
+                    max_batch_tokens: 24 + rng.below(64),
+                    decode_batches: vec![1, 2, 4, 8],
+                    prefill_buckets: vec![(4, 64)],
+                    enable_chunked_prefill: chunked,
+                    max_prefill_chunk: chunk,
+                    ..Default::default()
+                },
+                BlockManager::new(bs, 512), // ample: no eviction
+            );
+            let mut seqs = HashMap::new();
+            let mut next_id = 0u64;
+            for _ in 0..300 {
+                if next_id < 30 && rng.below(2) == 0 {
+                    let p = prompt(rng, &prefixes, next_id as u32);
+                    seqs.insert(
+                        next_id,
+                        Sequence::new(next_id, p,
+                                      SamplingParams::default()),
+                    );
+                    s.add(next_id);
+                    next_id += 1;
+                }
+                let snap = s.bm.clone();
+                let walks_before = s.bm.hash_walks.get();
+                let plan = s.plan(&seqs);
+                let walks = s.bm.hash_walks.get() - walks_before;
+                let admitted: Vec<_> =
+                    plan.chunks.iter().filter(|c| c.admitted).collect();
+                // at most one walk per admission attempt: every
+                // admission walks once, plus at most one walk for the
+                // head whose attempt was rejected (the loop breaks)
+                assert!(
+                    walks <= admitted.len() as u64 + 1,
+                    "{walks} walks for {} admissions",
+                    admitted.len()
+                );
+                for c in &admitted {
+                    let toks = seqs[&c.id].full_tokens();
+                    assert_eq!(
+                        c.start,
+                        snap.cached_prefix_tokens(&toks),
+                        "allocator hit diverged from reference probe"
+                    );
+                }
+                // budget accounting over the returned hits: chunk
+                // tokens never exceed the step budget left by decodes
+                // (floored at one schedulable chunk token)
+                if chunked {
+                    let chunk_tokens: usize = plan
+                        .chunks
+                        .iter()
+                        .map(|c| c.end - c.start)
+                        .sum();
+                    let floor = s
+                        .cfg
+                        .max_batch_tokens
+                        .saturating_sub(plan.decode.len())
+                        .max(1);
+                    assert!(
+                        chunk_tokens <= floor,
+                        "over-budget: {chunk_tokens} > {floor}"
+                    );
+                }
+                // drive the engine side so the workload progresses
+                for c in &plan.chunks {
+                    let toks = seqs[&c.id].full_tokens();
+                    let q = seqs.get_mut(&c.id).unwrap();
+                    q.prefill_progress = c.end;
+                    if c.end == toks.len() {
+                        q.state = SeqState::Running;
+                        q.record_token(fake_next_token(&toks));
+                    } else {
+                        q.state = SeqState::Prefilling;
+                    }
+                    s.bm.register_prefix(c.id, &toks[..c.end]);
+                }
+                for id in plan.decode.clone() {
+                    let q = seqs.get_mut(&id).unwrap();
+                    q.record_token(fake_next_token(&q.full_tokens()));
+                    if q.output.len() >= 3 + (id % 4) as usize {
+                        q.finish(FinishReason::MaxTokens);
+                        s.on_finished(id);
+                    }
+                }
+                assert!(s.bm.check_conservation());
+            }
+        });
+    }
 }
 
 #[test]
