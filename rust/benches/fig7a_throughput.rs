@@ -14,9 +14,11 @@
 mod common;
 
 use sqplus::config::{
-    EngineConfig, GpuProfile, Precision, QuantMethod,
+    CacheWatermarks, EngineConfig, GpuProfile, Precision, QuantMethod,
+    RouterConfig, RoutingPolicy,
 };
 use sqplus::coordinator::engine::Engine;
+use sqplus::coordinator::router::Router;
 use sqplus::coordinator::sequence::SamplingParams;
 use sqplus::data::trace;
 use sqplus::quant::pipeline;
@@ -144,6 +146,95 @@ fn run_chunked(
     let streams = fin.into_iter().map(|q| q.output).collect();
     (tput, rep.ttft_steps.p50, rep.prefill_chunks, rep.mixed_steps,
      rep.device_calls, streams)
+}
+
+/// Multi-replica router workload: shared-prefix waves (the cache-aware
+/// policy's home turf) mixed with cold traffic, over `n_replicas`
+/// engines. Returns (tok/s, TTFT-in-steps p50 across all replicas,
+/// per-replica (routed, cold prefill tokens executed, cached prefix
+/// tokens), sorted token streams for the bit-identity check).
+#[allow(clippy::type_complexity)]
+fn run_router(
+    m: &sqplus::runtime::manifest::Manifest, s: &common::Setup,
+    deploy_store: &sqplus::model::store::WeightStore,
+    n_replicas: usize, routing: RoutingPolicy, n_req: usize,
+    prefix: usize, suffix: usize, output: usize,
+) -> (f64, f64, Vec<(usize, usize, usize)>, Vec<Vec<u32>>) {
+    let cores: Vec<Engine> = (0..n_replicas)
+        .map(|_| {
+            let rt = ModelRuntime::load(m, &s.cfg.name, Precision::W4a16,
+                                        deploy_store)
+                .unwrap();
+            rt.warmup().unwrap();
+            Engine::new(
+                Deployment::single(rt, GpuProfile::a100_40g()),
+                EngineConfig::default(),
+            )
+        })
+        .collect();
+    let mut router = Router::new(cores, RouterConfig {
+        routing,
+        watermarks: CacheWatermarks::new(64, 32),
+        // affinity dominates until a replica's backlog outweighs the
+        // shared prefix (the default 16-token penalty would spill a
+        // 1-block hit after a single queued request)
+        load_penalty_tokens: 1,
+        ..Default::default()
+    });
+    // a donor request registers the shared prefix on one replica (and
+    // shifts round-robin parity so RR genuinely sprays warm traffic),
+    // then waves of warm (shared prefix + suffix) followed by cold
+    // (unique) prompts
+    let warm = trace::shared_prefix_prompts(11, n_req, prefix, suffix,
+                                            s.cfg.vocab);
+    let mut rng = sqplus::util::rng::Rng::new(31);
+    let t0 = std::time::Instant::now();
+    let mut fins = vec![];
+    router.submit(warm[0].clone(), SamplingParams {
+        max_new_tokens: output,
+        ..Default::default()
+    });
+    router.run_to_completion(100_000).unwrap();
+    fins.extend(router.take_finished());
+    for wave in warm[1..].chunks(4) {
+        for p in wave {
+            router.submit(p.clone(), SamplingParams {
+                max_new_tokens: output,
+                ..Default::default()
+            });
+        }
+        for _ in wave {
+            let cold = trace::prompt_tokens(&mut rng, prefix + suffix,
+                                            s.cfg.vocab);
+            router.submit(cold, SamplingParams {
+                max_new_tokens: output,
+                ..Default::default()
+            });
+        }
+        router.run_to_completion(100_000).unwrap();
+        fins.extend(router.take_finished());
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    let out_tokens: usize =
+        fins.iter().map(|f| f.seq.output.len()).sum();
+    let mut ttft = sqplus::util::stats::Accum::new();
+    for r in router.replicas() {
+        ttft.extend(r.core().metrics.ttft_steps.samples());
+    }
+    let per_replica: Vec<(usize, usize, usize)> = router
+        .replicas()
+        .iter()
+        .map(|r| {
+            (r.requests_routed,
+             r.core().metrics.prefill_tokens_executed,
+             r.core().metrics.cached_prefix_tokens)
+        })
+        .collect();
+    fins.sort_by_key(|f| f.id);
+    let streams: Vec<Vec<u32>> =
+        fins.into_iter().map(|f| f.seq.output).collect();
+    (out_tokens as f64 / elapsed, ttft.summary().p50, per_replica,
+     streams)
 }
 
 fn main() {
@@ -314,6 +405,85 @@ fn main() {
                     calls as f64 / chunks.max(1) as f64);
     }
     if let Err(e) = rep2.write() {
+        eprintln!("warning: BENCH_serve.json not written: {e}");
+    }
+
+    // multi-replica router serving mode: N data-parallel W4A16 engines
+    // behind the front-end router, shared-prefix + cold traffic, one
+    // row per routing policy. Streams must be bit-identical across
+    // policies (routing never changes generations) and the cache-aware
+    // policy must execute fewer cold prefill tokens than round-robin.
+    let (n_rep, n_req4, prefix4, suffix4, output4) =
+        (2usize, 16usize, 24usize, 8usize, 12usize);
+    let mut t5 = Table::new(
+        &format!(
+            "Figure 7a router serving ({size}, SQ+ W4A16, {n_rep} \
+             replicas, {n_req4} warm (incl. donor) + {} cold reqs, \
+             prompt {prefix4}+{suffix4})",
+            n_req4 - 1
+        ),
+        &["routing", "output tok/s", "ttft p50 (steps)",
+          "routed/replica", "prefill executed/replica",
+          "cached tokens/replica"],
+    );
+    let mut rep3 = JsonReport::at("BENCH_serve.json", "fig7a_router");
+    rep3.metric("n_replicas", n_rep as f64);
+    rep3.metric("n_requests_warm", n_req4 as f64);
+    rep3.metric("n_requests_cold", (n_req4 - 1) as f64);
+    rep3.metric("prompt_prefix_tokens", prefix4 as f64);
+    rep3.metric("prompt_suffix_tokens", suffix4 as f64);
+    let mut router_golden: Option<Vec<Vec<u32>>> = None;
+    let mut exec_by_policy = vec![];
+    for routing in [RoutingPolicy::CacheAware, RoutingPolicy::LeastLoaded,
+                    RoutingPolicy::RoundRobin] {
+        let (tput, ttft_steps, per_replica, streams) = run_router(
+            &man, &s, sqp.deploy.as_ref().unwrap(), n_rep, routing,
+            n_req4, prefix4, suffix4, output4,
+        );
+        match &router_golden {
+            None => router_golden = Some(streams),
+            Some(g) => assert_eq!(
+                g, &streams,
+                "token streams changed under {} routing",
+                routing.as_str()
+            ),
+        }
+        let fmt_col = |f: fn(&(usize, usize, usize)) -> usize| {
+            per_replica.iter().map(|r| f(r).to_string())
+                .collect::<Vec<_>>().join("/")
+        };
+        t5.row(&[routing.as_str().into(), format!("{tput:.1}"),
+                 format!("{ttft_steps:.1}"),
+                 fmt_col(|r| r.0), fmt_col(|r| r.1), fmt_col(|r| r.2)]);
+        let key = routing.as_str().replace('-', "_");
+        rep3.metric(&format!("{key}_tok_per_s"), tput);
+        rep3.metric(&format!("{key}_ttft_p50_steps"), ttft_steps);
+        let executed: usize = per_replica.iter().map(|r| r.1).sum();
+        let cached: usize = per_replica.iter().map(|r| r.2).sum();
+        rep3.metric(&format!("{key}_prefill_tokens_executed"),
+                    executed as f64);
+        rep3.metric(&format!("{key}_cached_prefix_tokens"),
+                    cached as f64);
+        for (i, (routed, exec, hit)) in per_replica.iter().enumerate() {
+            rep3.metric(&format!("{key}_replica{i}_routed"),
+                        *routed as f64);
+            rep3.metric(&format!("{key}_replica{i}_prefill_executed"),
+                        *exec as f64);
+            rep3.metric(&format!("{key}_replica{i}_cached_tokens"),
+                        *hit as f64);
+        }
+        exec_by_policy.push((routing, executed));
+    }
+    t5.print();
+    let exec_of = |want: RoutingPolicy| {
+        exec_by_policy.iter().find(|(p, _)| *p == want).unwrap().1
+    };
+    assert!(
+        exec_of(RoutingPolicy::CacheAware)
+            < exec_of(RoutingPolicy::RoundRobin),
+        "cache-aware routing saved no cold prefill work"
+    );
+    if let Err(e) = rep3.write() {
         eprintln!("warning: BENCH_serve.json not written: {e}");
     }
 

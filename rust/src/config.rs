@@ -1,6 +1,7 @@
 //! Configuration: model sizes (mirroring `python/compile/configs.py` — the
 //! manifest is the authoritative copy at runtime), quantization settings,
-//! engine/scheduler settings, and simulated-GPU deployment profiles.
+//! engine/scheduler settings, multi-replica router settings, and
+//! simulated-GPU deployment profiles.
 
 use crate::util::json::Value;
 
@@ -9,19 +10,30 @@ use crate::util::json::Value;
 /// the lowered HLO can never drift.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ModelConfig {
+    /// Size name (`tiny` / `small` / `base`), the manifest lookup key.
     pub name: String,
+    /// Vocabulary size (tokenizer is trained to this).
     pub vocab: usize,
+    /// Model (embedding) dimension.
     pub dim: usize,
+    /// Decoder layer count.
     pub layers: usize,
+    /// Attention head count (`dim % heads == 0`).
     pub heads: usize,
+    /// FFN hidden dimension (SwiGLU inner width).
     pub ffn: usize,
+    /// Maximum context length (KV rows per sequence).
     pub max_len: usize,
+    /// Quantization group size along K for the W4A16 linears.
     pub group_size: usize,
+    /// RoPE base frequency.
     pub rope_theta: f32,
+    /// RMSNorm epsilon.
     pub norm_eps: f32,
 }
 
 impl ModelConfig {
+    /// The 2-layer laptop-scale model every test defaults to.
     pub fn tiny() -> Self {
         ModelConfig {
             name: "tiny".into(), vocab: 512, dim: 128, layers: 2, heads: 4,
@@ -29,6 +41,8 @@ impl ModelConfig {
             rope_theta: 10000.0, norm_eps: 1e-5,
         }
     }
+    /// The 4-layer model whose `max_len` exceeds the largest prefill
+    /// bucket (the configuration where chunked prefill is load-bearing).
     pub fn small() -> Self {
         ModelConfig {
             name: "small".into(), vocab: 1024, dim: 256, layers: 4, heads: 8,
@@ -36,6 +50,7 @@ impl ModelConfig {
             rope_theta: 10000.0, norm_eps: 1e-5,
         }
     }
+    /// The ~100M-parameter model for end-to-end paper-figure runs.
     pub fn base() -> Self {
         ModelConfig {
             name: "base".into(), vocab: 8192, dim: 768, layers: 12,
@@ -44,6 +59,7 @@ impl ModelConfig {
         }
     }
 
+    /// Look a size up by its CLI/manifest name.
     pub fn by_name(name: &str) -> Option<Self> {
         match name {
             "tiny" => Some(Self::tiny()),
@@ -69,6 +85,7 @@ impl ModelConfig {
         }
     }
 
+    /// Per-head dimension (`dim / heads`).
     pub fn head_dim(&self) -> usize {
         self.dim / self.heads
     }
@@ -82,6 +99,7 @@ impl ModelConfig {
         ]
     }
 
+    /// Total parameter count (embeddings + decoder + head).
     pub fn param_count(&self) -> usize {
         let (d, f, v, l) = (self.dim, self.ffn, self.vocab, self.layers);
         v * d + l * (4 * d * d + 3 * d * f + 2 * d) + d + d * v
@@ -114,19 +132,25 @@ impl ModelConfig {
     }
 }
 
+/// Serving weight precision (the paper's two deployment arms).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Precision {
+    /// FP16 weights everywhere (the baseline deployment).
     Fp16,
+    /// 4-bit weights on the decoder linears, FP16 activations and
+    /// embeddings/head (the SmoothQuant+ deployment).
     W4a16,
 }
 
 impl Precision {
+    /// Manifest/CLI spelling (`fp16` / `w4a16`).
     pub fn as_str(&self) -> &'static str {
         match self {
             Precision::Fp16 => "fp16",
             Precision::W4a16 => "w4a16",
         }
     }
+    /// Inverse of [`Precision::as_str`].
     pub fn parse(s: &str) -> Option<Precision> {
         match s {
             "fp16" => Some(Precision::Fp16),
@@ -150,6 +174,7 @@ pub enum QuantMethod {
 }
 
 impl QuantMethod {
+    /// Display name used in tables and the CLI.
     pub fn as_str(&self) -> &'static str {
         match self {
             QuantMethod::Fp16 => "FP16",
@@ -158,6 +183,7 @@ impl QuantMethod {
             QuantMethod::SmoothQuantPlus => "SmoothQuant+",
         }
     }
+    /// All methods, in the paper's comparison order.
     pub fn all() -> [QuantMethod; 4] {
         [QuantMethod::Fp16, QuantMethod::Rtn, QuantMethod::Awq,
          QuantMethod::SmoothQuantPlus]
@@ -167,6 +193,7 @@ impl QuantMethod {
 /// Quantization configuration.
 #[derive(Debug, Clone)]
 pub struct QuantConfig {
+    /// Group size along K for group-wise INT4 scales/zeros.
     pub group_size: usize,
     /// Grid-search step for the smoothing strength alpha (paper: 0.05).
     pub alpha_step: f64,
@@ -230,6 +257,11 @@ pub struct EngineConfig {
     /// decode-executable fallback — the pre-chunk-executable serving
     /// path, kept for ablation and golden bit-identity tests.
     pub enable_compiled_chunks: bool,
+    /// Sliding eviction window on cached-but-unreferenced KV blocks
+    /// (`high == 0` disables it — unbounded LRU, the pre-window
+    /// behavior). See
+    /// [`crate::coordinator::block_manager::BlockManager::set_cache_watermarks`].
+    pub cache_watermarks: CacheWatermarks,
 }
 
 impl Default for EngineConfig {
@@ -248,6 +280,95 @@ impl Default for EngineConfig {
             max_prefill_chunk: 0,
             chunk_buckets: vec![],
             enable_compiled_chunks: true,
+            cache_watermarks: CacheWatermarks::default(),
+        }
+    }
+}
+
+/// High/low watermark pair for the prefix cache's sliding eviction
+/// window: when the count of cached-but-unreferenced blocks exceeds
+/// `high`, the oldest-released are evicted until it is down to `low`.
+/// `high == 0` disables the window.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct CacheWatermarks {
+    /// Trip point (maximum cached-unreferenced blocks; 0 = disabled).
+    pub high: usize,
+    /// Eviction target once tripped (clamped to `high`).
+    pub low: usize,
+}
+
+impl CacheWatermarks {
+    /// A `high`/`low` window (`low` clamped to `high` at the manager).
+    pub fn new(high: usize, low: usize) -> CacheWatermarks {
+        CacheWatermarks { high, low }
+    }
+    /// Is the window active?
+    pub fn enabled(&self) -> bool {
+        self.high > 0
+    }
+}
+
+/// How the multi-replica router picks a replica for a new request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutingPolicy {
+    /// Score every replica by `cached prefix tokens (per the shared
+    /// cache directory) − load penalty` and pick the best, ties to the
+    /// lowest replica id. With no cache hits anywhere this degenerates
+    /// to least-loaded.
+    CacheAware,
+    /// Pick the replica with the fewest queued + running sequences,
+    /// ties to the lowest replica id.
+    LeastLoaded,
+    /// Rotate through replicas in submission order (the baseline the
+    /// bench compares against).
+    RoundRobin,
+}
+
+impl RoutingPolicy {
+    /// CLI spelling (`cache-aware` / `least-loaded` / `round-robin`).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            RoutingPolicy::CacheAware => "cache-aware",
+            RoutingPolicy::LeastLoaded => "least-loaded",
+            RoutingPolicy::RoundRobin => "round-robin",
+        }
+    }
+    /// Inverse of [`RoutingPolicy::as_str`].
+    pub fn parse(s: &str) -> Option<RoutingPolicy> {
+        match s {
+            "cache-aware" => Some(RoutingPolicy::CacheAware),
+            "least-loaded" => Some(RoutingPolicy::LeastLoaded),
+            "round-robin" => Some(RoutingPolicy::RoundRobin),
+            _ => None,
+        }
+    }
+}
+
+/// Front-end router configuration (the data-parallel serving knobs;
+/// see [`crate::coordinator::router`]).
+#[derive(Debug, Clone)]
+pub struct RouterConfig {
+    /// Replica count the router expects to own.
+    pub replicas: usize,
+    /// Replica-selection policy for new requests.
+    pub routing: RoutingPolicy,
+    /// Sliding eviction window applied to every replica's prefix cache
+    /// at router construction (when enabled; a disabled window leaves
+    /// each replica's own [`EngineConfig::cache_watermarks`] in force).
+    pub watermarks: CacheWatermarks,
+    /// Cache-aware scoring: how many cached prefix tokens one queued or
+    /// running sequence is worth. Higher values favor idle replicas
+    /// over warm ones; 0 routes purely on cache affinity.
+    pub load_penalty_tokens: usize,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        RouterConfig {
+            replicas: 1,
+            routing: RoutingPolicy::CacheAware,
+            watermarks: CacheWatermarks::default(),
+            load_penalty_tokens: 16,
         }
     }
 }
@@ -256,12 +377,17 @@ impl Default for EngineConfig {
 /// (paper-scale Fig 7 curves) and the memory-budget admission control.
 #[derive(Debug, Clone)]
 pub struct GpuProfile {
+    /// Profile name (reports / tables).
     pub name: String,
+    /// Device memory capacity in bytes.
     pub mem_bytes: usize,
+    /// HBM bandwidth, GB/s (roofline memory term).
     pub hbm_gbps: f64,
+    /// Peak FP16 throughput, TFLOP/s (roofline compute term).
     pub fp16_tflops: f64,
     /// PCIe/NVLink interconnect for tensor-parallel all-reduce.
     pub link_gbps: f64,
+    /// Per-message interconnect latency, microseconds.
     pub link_latency_us: f64,
 }
 
@@ -331,6 +457,19 @@ mod tests {
     fn by_name() {
         assert!(ModelConfig::by_name("tiny").is_some());
         assert!(ModelConfig::by_name("huge").is_none());
+    }
+
+    #[test]
+    fn routing_policy_roundtrip() {
+        for p in [RoutingPolicy::CacheAware, RoutingPolicy::LeastLoaded,
+                  RoutingPolicy::RoundRobin] {
+            assert_eq!(RoutingPolicy::parse(p.as_str()), Some(p));
+        }
+        assert_eq!(RoutingPolicy::parse("random"), None);
+        let rc = RouterConfig::default();
+        assert_eq!(rc.replicas, 1);
+        assert!(!rc.watermarks.enabled());
+        assert!(CacheWatermarks::new(4, 2).enabled());
     }
 
     #[test]

@@ -46,8 +46,48 @@
 //!   parameters rather than caller-side pre-probes, so the hit the
 //!   scheduler budgets against is by construction the hit the table
 //!   reflects. `hash_walks` counts walks for the property tests.
+//! * **Sliding-window eviction** — on top of the demand-driven LRU
+//!   reclaim above, the cached-but-unreferenced population itself is
+//!   bounded by a high/low watermark pair
+//!   ([`BlockManager::set_cache_watermarks`]): whenever a release
+//!   pushes the evictable count past `high`, the oldest-released
+//!   blocks are evicted (back onto the free list) until the count is
+//!   down to `low`. Refcounted blocks are never candidates — only the
+//!   evictable LRU window shrinks — so a hot shared prefix survives
+//!   while a long tail of one-off prompts cannot grow the cache
+//!   without bound. `high == 0` disables the window (the pre-window
+//!   behavior: unbounded until the free list runs dry).
+//! * **Cache events** — when enabled
+//!   ([`BlockManager::enable_cache_events`]), every registration and
+//!   eviction is also recorded as a [`CacheEvent`] and drained via
+//!   [`BlockManager::take_cache_events`]. The multi-replica router
+//!   feeds these into its shared cache directory (content hash →
+//!   replica hints) so cache-aware routing stays O(prompt blocks)
+//!   instead of walking every replica's chain per request. Disabled by
+//!   default so a standalone engine never accumulates an undrained
+//!   event log.
 
 use std::collections::{BTreeMap, HashMap};
+
+/// One prefix-cache mutation, reported for the router's cache
+/// directory: content `hash` became reusable (registered) or stopped
+/// being reusable (evicted). Events are recorded only while
+/// [`BlockManager::enable_cache_events`] is set and are drained in
+/// order by [`BlockManager::take_cache_events`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CacheEvent {
+    /// A full block of this content hash was registered into the cache.
+    Registered {
+        /// Chained content hash of the registered block.
+        hash: u64,
+    },
+    /// The cached block of this content hash was reclaimed (LRU demand
+    /// eviction or sliding-window eviction).
+    Evicted {
+        /// Chained content hash of the evicted block.
+        hash: u64,
+    },
+}
 
 /// Outcome of an allocation request.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -93,6 +133,21 @@ pub fn block_hash(prev: u64, tokens: &[u32]) -> u64 {
         h = mix(h ^ t as u64);
     }
     h
+}
+
+/// Chained hashes of every *full* `block_size` block of `tokens`, from
+/// the fixed seed — the exact chain [`BlockManager`] keys its cache
+/// with. Free-function form so the router's cache directory can walk
+/// the same chain without a block manager in hand.
+pub fn chain_hashes(tokens: &[u32], block_size: usize) -> Vec<u64> {
+    let mut h = HASH_SEED;
+    (0..tokens.len() / block_size)
+        .map(|i| {
+            h = block_hash(h,
+                           &tokens[i * block_size..(i + 1) * block_size]);
+            h
+        })
+        .collect()
 }
 
 /// One physical block's bookkeeping.
@@ -156,6 +211,18 @@ pub struct BlockManager {
     pub hash_walks: std::cell::Cell<u64>,
     /// Content-hash prefix caching on/off (off = the pre-cache manager).
     pub enable_prefix_caching: bool,
+    /// Record [`CacheEvent`]s for registration/eviction (router cache
+    /// directory feed). Off by default: without a consumer draining
+    /// [`BlockManager::take_cache_events`] the log would only grow.
+    pub enable_cache_events: bool,
+    /// Undrained cache events, in mutation order.
+    cache_events: Vec<CacheEvent>,
+    /// Sliding-window high watermark on cached-but-unreferenced blocks
+    /// (0 = window disabled). See the module docs.
+    cache_high_watermark: usize,
+    /// Sliding-window low watermark: once the window trips, evict
+    /// oldest-first down to this count.
+    cache_low_watermark: usize,
     /// Prefix-cache counters.
     pub stats: CacheStats,
 }
@@ -177,6 +244,10 @@ impl BlockManager {
             watermark_blocks: (total_blocks / 100).max(1),
             hash_walks: std::cell::Cell::new(0),
             enable_prefix_caching: true,
+            enable_cache_events: false,
+            cache_events: vec![],
+            cache_high_watermark: 0,
+            cache_low_watermark: 0,
             stats: CacheStats::default(),
         }
     }
@@ -219,14 +290,29 @@ impl BlockManager {
 
     /// Chained hashes of every *full* block of `tokens`.
     fn hash_chain(&self, tokens: &[u32]) -> Vec<u64> {
-        let bs = self.block_size;
-        let mut h = HASH_SEED;
-        (0..tokens.len() / bs)
-            .map(|i| {
-                h = block_hash(h, &tokens[i * bs..(i + 1) * bs]);
-                h
-            })
-            .collect()
+        chain_hashes(tokens, self.block_size)
+    }
+
+    /// Configure the sliding eviction window on cached-but-unreferenced
+    /// blocks: when their count exceeds `high`, the oldest-released are
+    /// evicted until it is down to `low` (clamped to `high`). `high ==
+    /// 0` disables the window. Takes effect at the next release.
+    pub fn set_cache_watermarks(&mut self, high: usize, low: usize) {
+        self.cache_high_watermark = high;
+        self.cache_low_watermark = low.min(high);
+    }
+
+    /// Cached blocks currently referenced by no sequence — the
+    /// population the sliding eviction window bounds.
+    pub fn cached_unreferenced(&self) -> usize {
+        self.evictable.len()
+    }
+
+    /// Drain the recorded [`CacheEvent`]s (registrations + evictions in
+    /// mutation order). Empty unless
+    /// [`BlockManager::enable_cache_events`] is set.
+    pub fn take_cache_events(&mut self) -> Vec<CacheEvent> {
+        std::mem::take(&mut self.cache_events)
     }
 
     /// Block ids of the longest cached prefix of `tokens`, capped so at
@@ -275,20 +361,49 @@ impl BlockManager {
             <= self.free_blocks()
     }
 
+    /// Evict the least-recently-released cached block: drop its content
+    /// from the cache, report it (ids via `evicted`, hash via a
+    /// [`CacheEvent`]), and return its id. `None` when nothing is
+    /// evictable. The caller decides whether the block is reused
+    /// directly (demand eviction) or returned to the free list
+    /// (sliding-window eviction).
+    fn evict_lru(&mut self) -> Option<usize> {
+        let (&tick, &b) = self.evictable.iter().next()?;
+        self.evictable.remove(&tick);
+        if let Some(h) = self.blocks[b].hash.take() {
+            self.cache.remove(&h);
+            if self.enable_cache_events {
+                self.cache_events.push(CacheEvent::Evicted { hash: h });
+            }
+        }
+        self.stats.evictions += 1;
+        self.evicted.push(b);
+        Some(b)
+    }
+
     /// Pop a content-free block, evicting the LRU cached block if the
     /// free list is dry. `None` only when the whole pool is referenced.
     fn grab_free_block(&mut self) -> Option<usize> {
         if let Some(b) = self.free.pop() {
             return Some(b);
         }
-        let (&tick, &b) = self.evictable.iter().next()?;
-        self.evictable.remove(&tick);
-        if let Some(h) = self.blocks[b].hash.take() {
-            self.cache.remove(&h);
+        self.evict_lru()
+    }
+
+    /// Sliding-window enforcement (see module docs): if the evictable
+    /// population exceeds the high watermark, evict oldest-first down
+    /// to the low watermark, returning the freed blocks to the free
+    /// list. No-op while the window is disabled (`high == 0`).
+    fn enforce_cache_window(&mut self) {
+        if self.cache_high_watermark == 0
+            || self.evictable.len() <= self.cache_high_watermark
+        {
+            return;
         }
-        self.stats.evictions += 1;
-        self.evicted.push(b);
-        Some(b)
+        while self.evictable.len() > self.cache_low_watermark {
+            let Some(b) = self.evict_lru() else { break };
+            self.free.push(b);
+        }
     }
 
     /// Allocate blocks for a newly admitted sequence covering its whole
@@ -449,6 +564,9 @@ impl BlockManager {
                 self.free.push(b);
             }
         }
+        // releases are the only place the evictable population grows,
+        // so the sliding window is enforced exactly here
+        self.enforce_cache_window();
         debug_assert!(self.free_blocks() <= self.total_blocks);
     }
 
@@ -463,9 +581,13 @@ impl BlockManager {
         }
         let Some(table) = self.tables.get(&id) else { return vec![] };
         let hashes = self.hash_chain(tokens);
-        debug_assert!(hashes.len() <= table.len());
+        // content can outgrow the table when growth was denied
+        // (append_token returned NoSpace but the sequence kept its
+        // tokens); only blocks the table physically covers are
+        // registrable
+        let covered = hashes.len().min(table.len());
         let mut newly = vec![];
-        for (i, &h) in hashes.iter().enumerate() {
+        for (i, &h) in hashes[..covered].iter().enumerate() {
             let b = table[i];
             if self.blocks[b].hash.is_some() {
                 continue; // already cached (a hit or earlier register)
@@ -479,6 +601,10 @@ impl BlockManager {
             self.blocks[b].hash = Some(hashes[i]);
             self.cache.insert(hashes[i], b);
             self.stats.registered += 1;
+            if self.enable_cache_events {
+                self.cache_events
+                    .push(CacheEvent::Registered { hash: hashes[i] });
+            }
         }
         newly
     }
@@ -814,6 +940,99 @@ mod tests {
     }
 
     #[test]
+    fn sliding_window_bounds_cached_unreferenced() {
+        // high 2 / low 1: releasing a third cached block must evict the
+        // oldest-released down to the low watermark, onto the free list
+        let mut bm = BlockManager::new(4, 16);
+        bm.watermark_blocks = 0;
+        bm.set_cache_watermarks(2, 1);
+        bm.enable_cache_events = true;
+        let prompts: Vec<Vec<u32>> = (0..3).map(|i| toks(i, 4)).collect();
+        for (i, p) in prompts.iter().enumerate() {
+            let id = i as u64;
+            assert!(matches!(bm.allocate(id, p), Alloc::Ok { .. }));
+            bm.register_prefix(id, p);
+            bm.release(id);
+            assert!(bm.cached_unreferenced() <= 2,
+                    "window exceeded: {}", bm.cached_unreferenced());
+            assert!(bm.check_conservation());
+        }
+        // third release tripped the window: down to low = 1
+        assert_eq!(bm.cached_unreferenced(), 1);
+        assert_eq!(bm.stats.evictions, 2);
+        assert_eq!(bm.take_evicted().len(), 2);
+        // oldest-first: prompts 0 and 1 evicted, prompt 2 survives
+        // (probes extended — a lookup never covers its whole query)
+        let probe = |p: &[u32]| {
+            let mut q = p.to_vec();
+            q.push(999);
+            q
+        };
+        assert_eq!(bm.cached_prefix_tokens(&probe(&prompts[0])), 0);
+        assert_eq!(bm.cached_prefix_tokens(&probe(&prompts[1])), 0);
+        assert_eq!(bm.cached_prefix_tokens(&probe(&prompts[2])), 4);
+        // events: 3 registrations then 2 evictions, in order
+        let ev = bm.take_cache_events();
+        assert_eq!(ev.len(), 5);
+        assert!(matches!(ev[0], CacheEvent::Registered { .. }));
+        assert!(matches!(ev[3], CacheEvent::Evicted { .. }));
+        let reg: Vec<u64> = ev[..3]
+            .iter()
+            .map(|e| match e {
+                CacheEvent::Registered { hash } => *hash,
+                _ => unreachable!(),
+            })
+            .collect();
+        let evi: Vec<u64> = ev[3..]
+            .iter()
+            .map(|e| match e {
+                CacheEvent::Evicted { hash } => *hash,
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_eq!(evi, reg[..2].to_vec(), "evictions not oldest-first");
+        assert!(bm.take_cache_events().is_empty());
+        assert!(bm.check_conservation());
+    }
+
+    #[test]
+    fn sliding_window_never_touches_refcounted_blocks() {
+        // a shared (refcounted) prefix block is not in the evictable
+        // window, so even a high watermark of 0-ish pressure from other
+        // releases must not evict it
+        let mut bm = BlockManager::new(4, 16);
+        bm.watermark_blocks = 0;
+        bm.set_cache_watermarks(1, 0);
+        let shared = toks(9, 8); // 2 full blocks
+        bm.allocate(0, &shared);
+        bm.register_prefix(0, &shared);
+        // seq 0 stays live: its 2 cached blocks are referenced
+        for i in 1..4u64 {
+            let p = toks(20 + i as u32, 4);
+            assert!(matches!(bm.allocate(i, &p), Alloc::Ok { .. }));
+            bm.register_prefix(i, &p);
+            bm.release(i);
+            assert!(bm.cached_unreferenced() <= 1);
+        }
+        // the shared content is still cached (probe past the CoW cap)
+        let mut probe = shared.clone();
+        probe.push(999);
+        assert_eq!(bm.cached_prefix_tokens(&probe), 8);
+        assert!(bm.check_conservation());
+        bm.release(0);
+        assert!(bm.check_conservation());
+    }
+
+    #[test]
+    fn chain_hashes_matches_manager_chain() {
+        let bm = BlockManager::new(4, 8);
+        let p = toks(3, 13);
+        assert_eq!(chain_hashes(&p, 4), bm.hash_chain(&p));
+        assert_eq!(chain_hashes(&p, 4).len(), 3); // full blocks only
+        assert!(chain_hashes(&p[..3], 4).is_empty());
+    }
+
+    #[test]
     fn conservation_under_random_workload() {
         for enable in [false, true] {
             prop::check("block conservation", 25, |rng| {
@@ -822,6 +1041,9 @@ mod tests {
                     BlockManager::new(bs, 8 + rng.below(64));
                 bm.enable_prefix_caching = enable;
                 bm.watermark_blocks = rng.below(3);
+                // sometimes run with a sliding eviction window on
+                let high = rng.below(2) * (2 + rng.below(8));
+                bm.set_cache_watermarks(high, high / 2);
                 // a small pool of shared prefixes to force hits
                 let prefixes: Vec<Vec<u32>> = (0..3)
                     .map(|i| toks(i, bs * (1 + rng.below(3))))
@@ -872,6 +1094,10 @@ mod tests {
                     assert!(bm.check_conservation(),
                             "conservation violated");
                     assert!(bm.free_blocks() <= bm.total_blocks);
+                    if high > 0 {
+                        assert!(bm.cached_unreferenced() <= high,
+                                "sliding window exceeded");
+                    }
                 }
                 // drain: refcounts return to zero, whole pool free
                 for (id, _) in live {

@@ -58,7 +58,7 @@ use crate::runtime::kv::{self, SeqKv};
 use crate::runtime::simtp::Deployment;
 use crate::util::rng::Rng;
 
-use super::block_manager::{BlockManager, CacheStats};
+use super::block_manager::{BlockManager, CacheEvent, CacheStats};
 use super::metrics::Metrics;
 use super::sampler;
 use super::scheduler::{PrefillChunk, Scheduler, StepPlan};
@@ -286,6 +286,33 @@ impl Engine {
     /// Block-level prefix-cache counters (hits, shared blocks, evictions).
     pub fn cache_stats(&self) -> CacheStats {
         self.sched.bm.stats.clone()
+    }
+    /// Queue depths `(waiting, running)` — the router's load signal.
+    pub fn queue_depths(&self) -> (usize, usize) {
+        (self.sched.waiting_len(), self.sched.running_len())
+    }
+    /// KV block size in tokens (the prefix-cache hash granularity).
+    pub fn block_size(&self) -> usize {
+        self.sched.bm.block_size
+    }
+    /// Cached blocks no live sequence references (the population the
+    /// sliding eviction window bounds).
+    pub fn cached_unreferenced_blocks(&self) -> usize {
+        self.sched.bm.cached_unreferenced()
+    }
+    /// Start recording prefix-cache [`CacheEvent`]s (router attach).
+    pub fn enable_cache_events(&mut self) {
+        self.sched.bm.enable_cache_events = true;
+    }
+    /// Drain recorded prefix-cache events (router directory feed).
+    pub fn take_cache_events(&mut self) -> Vec<CacheEvent> {
+        self.sched.bm.take_cache_events()
+    }
+    /// Configure the sliding eviction window on this engine's prefix
+    /// cache (see
+    /// [`super::block_manager::BlockManager::set_cache_watermarks`]).
+    pub fn set_cache_watermarks(&mut self, high: usize, low: usize) {
+        self.sched.bm.set_cache_watermarks(high, low);
     }
     /// Drain finished sequences (response path).
     pub fn take_finished(&mut self) -> Vec<Sequence> {

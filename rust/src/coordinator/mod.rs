@@ -17,6 +17,11 @@
 //!   chunks *and* block-filling decode steps.
 //! * [`metrics`] — TTFT / per-token latency / throughput / cache-savings
 //!   / chunk accounting.
+//! * [`replica`] — one engine bundle behind the [`replica::ReplicaCore`]
+//!   interface the multi-replica front end drives.
+//! * [`router`] — the data-parallel front end: N replicas, cache-aware
+//!   request routing over a shared content-hash directory, per-replica
+//!   stats.
 //!
 //! `docs/ARCHITECTURE.md` at the repo root walks one request through
 //! all of these modules end to end, with the block lifecycle diagram.
@@ -29,7 +34,10 @@
 //! shared; the tail partial block is always private, and a hit never
 //! covers the entire prompt (at least one token is recomputed for fresh
 //! sampling logits) — the copy-on-write boundary. Cached blocks with no
-//! live references are *evictable* free capacity reclaimed LRU. The
+//! live references are *evictable* free capacity reclaimed LRU — on
+//! demand when the free list runs dry, and proactively by the sliding
+//! eviction window (high/low watermarks on the evictable population)
+//! when one is configured. The
 //! engine stashes each cached block's host KV rows by physical block id
 //! and copies them into a new sequence's cache on a hit, so reuse skips
 //! real prefill compute, not just accounting.
@@ -37,6 +45,8 @@
 pub mod block_manager;
 pub mod engine;
 pub mod metrics;
+pub mod replica;
+pub mod router;
 pub mod sampler;
 pub mod scheduler;
 pub mod sequence;

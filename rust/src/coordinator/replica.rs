@@ -1,0 +1,186 @@
+//! The `Replica` abstraction: one complete serving engine (scheduler +
+//! block manager + runtime + metrics) behind the narrow interface the
+//! multi-replica [`super::router`] drives.
+//!
+//! [`ReplicaCore`] is the contract: submit requests, step, drain
+//! finished sequences and prefix-cache events, report load and stats.
+//! [`Engine`] is the production core; the router property tests
+//! implement the same trait over a deterministic fake model (scheduler
+//! + block manager only, no PJRT runtime), which is what makes the
+//! whole multi-replica stack testable in tier-1 CI without artifacts.
+//!
+//! [`Replica`] wraps a core with its replica id and the router-side
+//! accounting (requests routed here), and snapshots [`ReplicaStats`]
+//! for the server's `{"cmd":"stats"}` admin endpoint and the router
+//! bench.
+
+use anyhow::Result;
+
+use crate::config::CacheWatermarks;
+
+use super::block_manager::{CacheEvent, CacheStats};
+use super::engine::Engine;
+use super::sequence::{SamplingParams, Sequence};
+
+/// Point-in-time counters of one replica core (everything the routing
+/// policies and the stats endpoint need, cheap enough to snapshot per
+/// request).
+#[derive(Debug, Clone, Default)]
+pub struct CoreStats {
+    /// Sequences in the waiting queue.
+    pub waiting: usize,
+    /// Sequences admitted (prefilling or decoding).
+    pub running: usize,
+    /// Fraction of the KV block pool referenced by live sequences.
+    pub kv_occupancy: f64,
+    /// Prefix-cache counters (hits, misses, evictions, ...).
+    pub cache: CacheStats,
+    /// Prefill tokens actually run through the model (cold work).
+    pub prefill_tokens_executed: usize,
+    /// Prompt tokens served from cached blocks instead of recomputed.
+    pub cached_prefix_tokens: usize,
+    /// TTFT-in-engine-steps p50 (deterministic latency proxy).
+    pub ttft_steps_p50: f64,
+}
+
+impl CoreStats {
+    /// Block-level cache hit rate (`hits / (hits + misses)`; 0 when no
+    /// lookups happened yet).
+    pub fn cache_hit_rate(&self) -> f64 {
+        let total = self.cache.hits + self.cache.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.cache.hits as f64 / total as f64
+        }
+    }
+}
+
+/// One replica engine as the router sees it. [`Engine`] is the
+/// production implementation; tests substitute a deterministic fake
+/// core so router behavior is tier-1-testable without PJRT artifacts.
+pub trait ReplicaCore {
+    /// Submit a request; returns the core's *local* sequence id.
+    fn submit(&mut self, prompt: Vec<u32>, params: SamplingParams) -> u64;
+    /// Execute one scheduler step.
+    fn step(&mut self) -> Result<()>;
+    /// Anything queued or in flight?
+    fn has_work(&self) -> bool;
+    /// Drain finished sequences (their `id` is the local id).
+    fn take_finished(&mut self) -> Vec<Sequence>;
+    /// KV block size in tokens — the prefix-cache hash granularity.
+    /// Every replica behind one router must agree on it.
+    fn block_size(&self) -> usize;
+    /// Queued + running sequences (the routing load signal).
+    fn load(&self) -> usize;
+    /// Start recording prefix-cache events (called once on router
+    /// attach; events feed the shared cache directory).
+    fn enable_cache_events(&mut self);
+    /// Drain recorded prefix-cache events in mutation order.
+    fn take_cache_events(&mut self) -> Vec<CacheEvent>;
+    /// Configure the sliding eviction window on the prefix cache.
+    fn set_cache_watermarks(&mut self, wm: CacheWatermarks);
+    /// Snapshot the counters the stats endpoint and benches report.
+    fn core_stats(&self) -> CoreStats;
+}
+
+impl ReplicaCore for Engine {
+    fn submit(&mut self, prompt: Vec<u32>, params: SamplingParams) -> u64 {
+        Engine::submit(self, prompt, params)
+    }
+    fn step(&mut self) -> Result<()> {
+        Engine::step(self).map(|_| ())
+    }
+    fn has_work(&self) -> bool {
+        Engine::has_work(self)
+    }
+    fn take_finished(&mut self) -> Vec<Sequence> {
+        Engine::take_finished(self)
+    }
+    fn block_size(&self) -> usize {
+        Engine::block_size(self)
+    }
+    fn load(&self) -> usize {
+        let (w, r) = self.queue_depths();
+        w + r
+    }
+    fn enable_cache_events(&mut self) {
+        Engine::enable_cache_events(self)
+    }
+    fn take_cache_events(&mut self) -> Vec<CacheEvent> {
+        Engine::take_cache_events(self)
+    }
+    fn set_cache_watermarks(&mut self, wm: CacheWatermarks) {
+        Engine::set_cache_watermarks(self, wm.high, wm.low)
+    }
+    fn core_stats(&self) -> CoreStats {
+        let (waiting, running) = self.queue_depths();
+        CoreStats {
+            waiting,
+            running,
+            kv_occupancy: self.kv_occupancy(),
+            cache: self.cache_stats(),
+            prefill_tokens_executed: self.metrics.prefill_tokens_executed,
+            cached_prefix_tokens: self.metrics.cached_prefix_tokens,
+            ttft_steps_p50: self.metrics.ttft_steps.summary().p50,
+        }
+    }
+}
+
+/// One replica slot owned by the router: the core plus its id and the
+/// router-side routing counters.
+pub struct Replica<C: ReplicaCore> {
+    /// Router-assigned replica id (index; stable for a router's life).
+    pub id: usize,
+    core: C,
+    /// Requests the router has placed on this replica.
+    pub requests_routed: usize,
+}
+
+impl<C: ReplicaCore> Replica<C> {
+    /// Wrap `core` as replica `id`.
+    pub fn new(id: usize, core: C) -> Replica<C> {
+        Replica { id, core, requests_routed: 0 }
+    }
+    /// The wrapped core (read-only).
+    pub fn core(&self) -> &C {
+        &self.core
+    }
+    /// The wrapped core (the router steps/submits through this).
+    pub fn core_mut(&mut self) -> &mut C {
+        &mut self.core
+    }
+    /// Snapshot this replica's stats row.
+    pub fn stats(&self) -> ReplicaStats {
+        ReplicaStats {
+            id: self.id,
+            requests_routed: self.requests_routed,
+            core: self.core.core_stats(),
+        }
+    }
+}
+
+/// One row of the `{"cmd":"stats"}` admin response / router bench.
+#[derive(Debug, Clone)]
+pub struct ReplicaStats {
+    /// Replica id.
+    pub id: usize,
+    /// Requests the router placed here.
+    pub requests_routed: usize,
+    /// The core's counters at snapshot time.
+    pub core: CoreStats,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn core_stats_hit_rate() {
+        let mut s = CoreStats::default();
+        assert_eq!(s.cache_hit_rate(), 0.0);
+        s.cache.hits = 3;
+        s.cache.misses = 1;
+        assert_eq!(s.cache_hit_rate(), 0.75);
+    }
+}

@@ -1,0 +1,406 @@
+//! Multi-replica front end: one [`Router`] owns N [`Replica`]s (data
+//! parallelism — the scaling axis the paper's single-GPU W4A16 result
+//! opens up) and places every request with a cache-aware policy.
+//!
+//! # Routing
+//!
+//! [`RoutingPolicy::CacheAware`] (the default) scores every replica as
+//!
+//! ```text
+//! score(r) = cached_prefix_tokens(r, prompt)
+//!          − load_penalty_tokens · (queued(r) + running(r))
+//! ```
+//!
+//! and picks the max, ties broken by the lowest replica id — so a
+//! shared-prefix burst lands on the replica already holding the prefix
+//! KV (strictly less cold prefill work than spraying it round-robin),
+//! while a replica that is merely warm never starves the others: once
+//! its queue grows, the load penalty hands cold traffic to idle
+//! replicas. With no hits anywhere the score degenerates to
+//! least-loaded, which is also available directly
+//! ([`RoutingPolicy::LeastLoaded`]), as is round-robin
+//! ([`RoutingPolicy::RoundRobin`], the bench baseline).
+//!
+//! # The cache directory
+//!
+//! `cached_prefix_tokens(r, prompt)` is answered by a shared
+//! [`CacheDirectory`] — a map from block content hash to the replica
+//! ids caching that block — not by walking N block managers. Replicas
+//! record a [`CacheEvent`] per registration/eviction (sliding-window
+//! evictions included); the router drains those events after every
+//! step, so one routing decision costs a single hash-chain walk over
+//! the prompt's full blocks regardless of replica count. The directory
+//! is a *hint*: a stale entry can only misroute, never corrupt —
+//! admission inside the chosen replica re-walks its own chain with the
+//! usual single-walk machinery.
+//!
+//! # Ids
+//!
+//! The router assigns *global* request ids in submission order and maps
+//! them to `(replica, local id)`; finished sequences surface as
+//! [`RoutedFinish`] carrying both the global id and the replica that
+//! served it (reported on the wire as `"replica"`). A router over one
+//! replica is bit-identical to driving that replica's core directly:
+//! global ids equal local ids and `step` is a pass-through — the golden
+//! tests pin this.
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use crate::config::{RouterConfig, RoutingPolicy};
+
+use super::block_manager::{chain_hashes, CacheEvent};
+use super::replica::{Replica, ReplicaCore, ReplicaStats};
+use super::sequence::{SamplingParams, Sequence};
+
+/// Read-only (to the router's policies) map from block content hash to
+/// the replicas whose prefix caches hold that block, maintained from
+/// replica [`CacheEvent`]s. See the module docs.
+#[derive(Debug, Default)]
+pub struct CacheDirectory {
+    /// Content hash → sorted replica ids holding it.
+    map: HashMap<u64, Vec<usize>>,
+}
+
+impl CacheDirectory {
+    /// Empty directory.
+    pub fn new() -> CacheDirectory {
+        CacheDirectory::default()
+    }
+
+    /// Distinct content hashes currently hinted.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+    /// No hints at all?
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Record that `replica` registered a block of `hash`.
+    pub fn on_registered(&mut self, replica: usize, hash: u64) {
+        let ids = self.map.entry(hash).or_default();
+        if let Err(i) = ids.binary_search(&replica) {
+            ids.insert(i, replica);
+        }
+    }
+
+    /// Record that `replica` evicted its block of `hash`.
+    pub fn on_evicted(&mut self, replica: usize, hash: u64) {
+        let empty = match self.map.get_mut(&hash) {
+            Some(ids) => {
+                if let Ok(i) = ids.binary_search(&replica) {
+                    ids.remove(i);
+                }
+                ids.is_empty()
+            }
+            None => false,
+        };
+        if empty {
+            self.map.remove(&hash);
+        }
+    }
+
+    /// Per-replica cached-prefix length (tokens) for `tokens`, under
+    /// the same rules as
+    /// [`super::block_manager::BlockManager`] lookups: full
+    /// `block_size` blocks only, capped so at least one token is left
+    /// to compute. One chain walk total — each replica's hit is the
+    /// longest prefix of blocks whose hint set contains it.
+    pub fn prefix_hits(&self, tokens: &[u32], block_size: usize,
+                       n_replicas: usize) -> Vec<usize> {
+        let mut hit = vec![0usize; n_replicas];
+        if tokens.len() <= 1 || self.map.is_empty() {
+            return hit;
+        }
+        let max_blocks = (tokens.len() - 1) / block_size;
+        let mut alive = vec![true; n_replicas];
+        let hashes = chain_hashes(&tokens[..max_blocks * block_size],
+                                  block_size);
+        for (k, h) in hashes.iter().enumerate() {
+            let ids = self.map.get(h);
+            let mut any = false;
+            for r in 0..n_replicas {
+                if !alive[r] {
+                    continue;
+                }
+                match ids {
+                    Some(ids) if ids.binary_search(&r).is_ok() => {
+                        hit[r] = (k + 1) * block_size;
+                        any = true;
+                    }
+                    _ => alive[r] = false,
+                }
+            }
+            if !any {
+                break;
+            }
+        }
+        hit
+    }
+}
+
+/// A finished request as the router reports it: the router-assigned
+/// global id, the replica that served it, and the sequence (whose own
+/// `id` field is the replica-local id).
+#[derive(Debug)]
+pub struct RoutedFinish {
+    /// Router-assigned global request id (submission order).
+    pub id: u64,
+    /// Replica that served the request.
+    pub replica: usize,
+    /// The finished sequence (output, finish reason, timings).
+    pub seq: Sequence,
+}
+
+/// The multi-replica front end; see the module docs.
+pub struct Router<C: ReplicaCore> {
+    /// Router configuration (`replicas` reflects the actual count).
+    pub rcfg: RouterConfig,
+    replicas: Vec<Replica<C>>,
+    directory: CacheDirectory,
+    /// KV block size shared by every replica (asserted at construction).
+    block_size: usize,
+    /// Global id → (replica id, local id) for in-flight requests.
+    routes: HashMap<u64, (usize, u64)>,
+    /// Per-replica local id → global id.
+    local_to_global: Vec<HashMap<u64, u64>>,
+    finished: Vec<RoutedFinish>,
+    next_id: u64,
+    rr_next: usize,
+}
+
+impl<C: ReplicaCore> Router<C> {
+    /// A router over `cores` (replica ids are their indices). Applies
+    /// `rcfg.watermarks` to every replica when enabled and turns on
+    /// cache-event recording so the directory stays fed. All cores
+    /// must share one KV block size.
+    pub fn new(cores: Vec<C>, mut rcfg: RouterConfig) -> Router<C> {
+        assert!(!cores.is_empty(), "router needs at least one replica");
+        let block_size = cores[0].block_size();
+        let n = cores.len();
+        rcfg.replicas = n;
+        let mut replicas: Vec<Replica<C>> = cores
+            .into_iter()
+            .enumerate()
+            .map(|(i, c)| Replica::new(i, c))
+            .collect();
+        for r in &mut replicas {
+            assert_eq!(r.core().block_size(), block_size,
+                       "replicas disagree on block size");
+            // a single-replica router never consults the directory
+            // (route() short-circuits), so don't make its block
+            // manager record events nobody reads on the hot path
+            if n > 1 {
+                r.core_mut().enable_cache_events();
+            }
+            if rcfg.watermarks.enabled() {
+                r.core_mut().set_cache_watermarks(rcfg.watermarks);
+            }
+        }
+        Router {
+            rcfg,
+            replicas,
+            directory: CacheDirectory::new(),
+            block_size,
+            routes: HashMap::new(),
+            local_to_global: (0..n).map(|_| HashMap::new()).collect(),
+            finished: vec![],
+            next_id: 0,
+            rr_next: 0,
+        }
+    }
+
+    /// A single-replica router with default config — the drop-in shape
+    /// the server uses when no data parallelism is requested.
+    pub fn single(core: C) -> Router<C> {
+        Router::new(vec![core], RouterConfig::default())
+    }
+
+    /// The replicas, in id order (stats, benches, tests).
+    pub fn replicas(&self) -> &[Replica<C>] {
+        &self.replicas
+    }
+    /// The shared cache directory (tests assert it mirrors the
+    /// replicas' caches).
+    pub fn directory(&self) -> &CacheDirectory {
+        &self.directory
+    }
+    /// Any replica with queued or in-flight work?
+    pub fn has_work(&self) -> bool {
+        self.replicas.iter().any(|r| r.core().has_work())
+    }
+    /// Requests submitted so far (the next global id).
+    pub fn requests_submitted(&self) -> u64 {
+        self.next_id
+    }
+
+    /// Pick a replica for `prompt` under the configured policy.
+    /// Deterministic: ties always break to the lowest replica id.
+    fn route(&mut self, prompt: &[u32]) -> usize {
+        let n = self.replicas.len();
+        if n == 1 {
+            return 0;
+        }
+        match self.rcfg.routing {
+            RoutingPolicy::RoundRobin => {
+                let r = self.rr_next;
+                self.rr_next = (self.rr_next + 1) % n;
+                r
+            }
+            RoutingPolicy::LeastLoaded => self.least_loaded(),
+            RoutingPolicy::CacheAware => {
+                let hits = self.directory.prefix_hits(
+                    prompt, self.block_size, n,
+                );
+                let penalty = self.rcfg.load_penalty_tokens as i64;
+                let mut best = 0usize;
+                let mut best_score = i64::MIN;
+                for (i, r) in self.replicas.iter().enumerate() {
+                    let score = hits[i] as i64
+                        - penalty * r.core().load() as i64;
+                    if score > best_score {
+                        best = i;
+                        best_score = score;
+                    }
+                }
+                best
+            }
+        }
+    }
+
+    fn least_loaded(&self) -> usize {
+        let mut best = 0usize;
+        let mut best_load = usize::MAX;
+        for (i, r) in self.replicas.iter().enumerate() {
+            let load = r.core().load();
+            if load < best_load {
+                best = i;
+                best_load = load;
+            }
+        }
+        best
+    }
+
+    /// Submit a request: route it, place it, and return its global id.
+    pub fn submit(&mut self, prompt: Vec<u32>, params: SamplingParams)
+        -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        let r = self.route(&prompt);
+        let local = self.replicas[r].core_mut().submit(prompt, params);
+        self.replicas[r].requests_routed += 1;
+        self.routes.insert(id, (r, local));
+        self.local_to_global[r].insert(local, id);
+        id
+    }
+
+    /// Step every replica that has work (one engine step each, in id
+    /// order), then absorb their cache events and finished sequences.
+    pub fn step(&mut self) -> Result<()> {
+        for r in &mut self.replicas {
+            if r.core().has_work() {
+                r.core_mut().step()?;
+            }
+        }
+        self.absorb();
+        Ok(())
+    }
+
+    /// Drain replica-side cache events into the directory and finished
+    /// sequences into the router's finished list.
+    fn absorb(&mut self) {
+        for i in 0..self.replicas.len() {
+            for ev in self.replicas[i].core_mut().take_cache_events() {
+                match ev {
+                    CacheEvent::Registered { hash } => {
+                        self.directory.on_registered(i, hash)
+                    }
+                    CacheEvent::Evicted { hash } => {
+                        self.directory.on_evicted(i, hash)
+                    }
+                }
+            }
+            for seq in self.replicas[i].core_mut().take_finished() {
+                let id = self.local_to_global[i]
+                    .remove(&seq.id)
+                    .expect("finished sequence was never routed");
+                self.routes.remove(&id);
+                self.finished.push(RoutedFinish { id, replica: i, seq });
+            }
+        }
+    }
+
+    /// Drain finished requests (absorbs replica state first, so
+    /// requests that finish at submission — e.g. `prompt_too_long` —
+    /// surface without an intervening step).
+    pub fn take_finished(&mut self) -> Vec<RoutedFinish> {
+        self.absorb();
+        std::mem::take(&mut self.finished)
+    }
+
+    /// Drive until every submitted request finishes (or `max_steps`).
+    /// Returns the steps taken.
+    pub fn run_to_completion(&mut self, max_steps: usize)
+        -> Result<usize> {
+        let mut steps = 0;
+        while self.has_work() && steps < max_steps {
+            self.step()?;
+            steps += 1;
+        }
+        Ok(steps)
+    }
+
+    /// Per-replica stats rows, in replica id order.
+    pub fn stats(&self) -> Vec<ReplicaStats> {
+        self.replicas.iter().map(|r| r.stats()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn directory_tracks_registration_and_eviction() {
+        let mut d = CacheDirectory::new();
+        assert!(d.is_empty());
+        d.on_registered(1, 42);
+        d.on_registered(0, 42);
+        d.on_registered(0, 42); // idempotent
+        assert_eq!(d.len(), 1);
+        d.on_evicted(1, 42);
+        assert_eq!(d.len(), 1);
+        d.on_evicted(0, 42);
+        assert!(d.is_empty());
+        d.on_evicted(0, 42); // idempotent on absent
+    }
+
+    #[test]
+    fn directory_prefix_hits_walks_the_chain() {
+        // replica 0 caches blocks 0 and 1 of a 3-block prompt, replica
+        // 1 only block 0: hits are 8 and 4 tokens; an uncached replica
+        // gets 0; the CoW cap leaves the last block uncounted even if
+        // hinted
+        let bs = 4;
+        let prompt: Vec<u32> = (0..12).collect();
+        let hashes = chain_hashes(&prompt, bs);
+        let mut d = CacheDirectory::new();
+        d.on_registered(0, hashes[0]);
+        d.on_registered(0, hashes[1]);
+        d.on_registered(0, hashes[2]);
+        d.on_registered(1, hashes[0]);
+        assert_eq!(d.prefix_hits(&prompt, bs, 3), vec![8, 4, 0]);
+        // one token past the last block: all three blocks countable
+        let mut longer = prompt.clone();
+        longer.push(99);
+        assert_eq!(d.prefix_hits(&longer, bs, 2), vec![12, 4]);
+        // a gap breaks the chain: drop block 1, block 2's hint is
+        // unreachable
+        d.on_evicted(0, hashes[1]);
+        assert_eq!(d.prefix_hits(&longer, bs, 2), vec![4, 4]);
+        // short/empty prompts never hit
+        assert_eq!(d.prefix_hits(&prompt[..1], bs, 2), vec![0, 0]);
+    }
+}

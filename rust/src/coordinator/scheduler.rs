@@ -106,6 +106,8 @@ impl Scheduler {
     /// A scheduler over `bm` with `cfg`'s policy knobs.
     pub fn new(cfg: EngineConfig, mut bm: BlockManager) -> Scheduler {
         bm.enable_prefix_caching = cfg.enable_prefix_caching;
+        bm.set_cache_watermarks(cfg.cache_watermarks.high,
+                                cfg.cache_watermarks.low);
         Scheduler { cfg, bm, waiting: VecDeque::new(), running: vec![],
                     preempted: vec![], dropped: vec![] }
     }

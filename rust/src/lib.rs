@@ -6,9 +6,10 @@
 //!
 //! * **L3 (this crate)** — a vLLM-shaped serving engine (continuous
 //!   batching, chunked prefill, paged KV accounting, content-hash prefix
-//!   caching, preemption) plus the full quantization library: group-wise
-//!   INT4 RTN, SmoothQuant+ smoothing with global alpha search, and an
-//!   AWQ baseline.
+//!   caching with sliding-window eviction, preemption) behind a
+//!   multi-replica cache-aware router, plus the full quantization
+//!   library: group-wise INT4 RTN, SmoothQuant+ smoothing with global
+//!   alpha search, and an AWQ baseline.
 //! * **L2/L1 (`python/compile`)** — the Llama-family forward pass in JAX
 //!   with a Pallas W4A16 dequant-matmul kernel, AOT-lowered once to HLO
 //!   text and executed here through the PJRT C API (`xla` crate). Python
@@ -26,7 +27,6 @@
 // `cargo doc --no-deps` with warnings denied.
 #![warn(missing_docs)]
 
-#[allow(missing_docs)]
 pub mod config;
 pub mod coordinator;
 #[allow(missing_docs)]
@@ -39,7 +39,6 @@ pub mod quant;
 #[allow(missing_docs)]
 pub mod reffwd;
 pub mod runtime;
-#[allow(missing_docs)]
 pub mod server;
 #[allow(missing_docs)]
 pub mod tensor;

@@ -3,7 +3,8 @@
 //! ```text
 //! sqplus quantize  --model base --method smoothquant+ --out model.sqw
 //! sqplus generate  --model tiny --method rtn --prompt "def add(" -n 16
-//! sqplus serve     --model small --method smoothquant+ --port 7181
+//! sqplus serve     --model small --method smoothquant+ --port 7181 \
+//!                  --replicas 2 --routing cache-aware
 //! sqplus eval      --model small --methods fp16,rtn,awq,smoothquant+
 //! sqplus inspect   --model tiny        # activation/weight statistics
 //! ```
@@ -14,10 +15,11 @@
 use anyhow::{bail, Context, Result};
 
 use sqplus::config::{
-    EngineConfig, GpuProfile, ModelConfig, Precision, QuantConfig,
-    QuantMethod,
+    CacheWatermarks, EngineConfig, GpuProfile, ModelConfig, Precision,
+    QuantConfig, QuantMethod, RouterConfig, RoutingPolicy,
 };
 use sqplus::coordinator::engine::Engine;
+use sqplus::coordinator::router::Router;
 use sqplus::coordinator::sequence::SamplingParams;
 use sqplus::data::{corpus, tasks};
 use sqplus::model::init::{init_weights, InitSpec};
@@ -125,6 +127,34 @@ fn make_engine(args: &mut Args, out: &pipeline::QuantOutcome,
     ))
 }
 
+/// N replica engines behind a router (each replica loads its own
+/// runtime: device weights and executables are per-replica state).
+fn make_router(args: &mut Args, out: &pipeline::QuantOutcome,
+               cfg: &ModelConfig) -> Result<Router<Engine>> {
+    let replicas = args.opt_usize("replicas", 1, "replica engines");
+    let routing_s = args.opt("routing", "cache-aware",
+                             "cache-aware|least-loaded|round-robin");
+    let routing = RoutingPolicy::parse(&routing_s)
+        .with_context(|| format!("unknown routing policy {routing_s}"))?;
+    let high = args.opt_usize("cache-evict-high", 0,
+                              "sliding-window high watermark (blocks, \
+                               0 = unbounded)");
+    let low = args.opt_usize("cache-evict-low", high / 2,
+                             "sliding-window low watermark (blocks)");
+    anyhow::ensure!(replicas >= 1, "--replicas must be at least 1");
+    let mut cores = Vec::with_capacity(replicas);
+    for i in 0..replicas {
+        eprintln!("[setup] loading replica {i}/{replicas}");
+        cores.push(make_engine(args, out, cfg)?);
+    }
+    Ok(Router::new(cores, RouterConfig {
+        replicas,
+        routing,
+        watermarks: CacheWatermarks::new(high, low),
+        ..Default::default()
+    }))
+}
+
 fn cmd_quantize(args: &mut Args) -> Result<()> {
     let out_path = args.opt("out", "model.sqw", "output path");
     let (_, _, out, _) = build_model(args)?;
@@ -166,10 +196,13 @@ fn cmd_generate(args: &mut Args) -> Result<()> {
 fn cmd_serve(args: &mut Args) -> Result<()> {
     let port = args.opt_usize("port", 7181, "TCP port") as u16;
     let (cfg, _, out, _) = build_model(args)?;
-    let eng = make_engine(args, &out, &cfg)?;
-    let server = Server::spawn(eng, port)?;
-    println!("sqplus serving on {} (JSON lines: \
-              {{\"prompt\":[ids],\"max_new_tokens\":n}})", server.addr());
+    let router = make_router(args, &out, &cfg)?;
+    let n = router.replicas().len();
+    let policy = router.rcfg.routing.as_str();
+    let server = Server::spawn(router, port)?;
+    println!("sqplus serving on {} — {n} replica(s), {policy} routing \
+              (JSON lines: {{\"prompt\":[ids],\"max_new_tokens\":n}}; \
+              admin: {{\"cmd\":\"stats\"}})", server.addr());
     println!("press ctrl-c to stop");
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));

@@ -1,29 +1,45 @@
 //! JSON-lines TCP serving front end (std::net + threads; tokio is not
-//! available in the offline build).
+//! available in the offline build) over the multi-replica
+//! [`Router`](crate::coordinator::router::Router).
 //!
 //! Wire protocol — one JSON object per line:
 //!
 //! ```text
 //! -> {"prompt": [1,2,3], "max_new_tokens": 8, "temperature": 0.0}
-//! <- {"id": 0, "tokens": [4,5,...], "finish": "max_tokens",
+//! <- {"id": 0, "replica": 0, "tokens": [4,5,...], "finish": "max_tokens",
 //!     "ttft_ms": 12.3, "e2e_ms": 80.1, "cached_tokens": 0}
+//!
+//! -> {"cmd": "stats"}
+//! <- {"replicas": [{"id": 0, "requests_routed": 4, "waiting": 0,
+//!     "running": 1, "kv_occupancy": 0.03, "cache_hits": 6,
+//!     "cache_misses": 2, "cache_hit_rate": 0.75, "evictions": 0,
+//!     "prefill_tokens_executed": 120, "cached_prefix_tokens": 48,
+//!     "ttft_p50_steps": 2.0}]}
 //! ```
 //!
-//! `prompt` entries must be non-negative integer token ids; malformed
-//! entries reject the whole request with an `{"error": ...}` line (they
-//! are never silently coerced). `cached_tokens` reports how many tokens
-//! were served from the engine's shared prefix cache at the last
-//! admission (see [`crate::coordinator`] for the design: chained
-//! content hashes over full KV blocks, refcounted sharing, CoW tail
-//! block, LRU eviction, chunked prefill; `docs/ARCHITECTURE.md` walks a
-//! request end to end). `finish` is one of `max_tokens`, `eos`,
-//! `prompt_too_long`, or `pool_exhausted` (the request alone outgrew
-//! the KV pool).
+//! `prompt` entries must be non-negative integer token ids and
+//! `max_new_tokens`, when present, must be at least 1 (a request that
+//! can never produce a token is malformed); any violation rejects the
+//! whole request with an `{"error": ...}` line — nothing is silently
+//! coerced or clamped to a different meaning. `replica` is the id of
+//! the router replica that served the request; `cached_tokens` reports
+//! how many tokens were served from that replica's shared prefix cache
+//! at the last admission (see [`crate::coordinator`] for the design:
+//! chained content hashes over full KV blocks, refcounted sharing, CoW
+//! tail block, LRU + sliding-window eviction, chunked prefill;
+//! `docs/ARCHITECTURE.md` walks a request end to end). `finish` is one
+//! of `max_tokens`, `eos`, `prompt_too_long`, or `pool_exhausted` (the
+//! request alone outgrew the KV pool).
+//!
+//! The `{"cmd": "stats"}` admin request snapshots one row per replica:
+//! queue depth (`waiting`/`running`), KV occupancy, block-level cache
+//! hit/miss/eviction counters with the derived hit rate, prefill
+//! tokens executed vs served from cache, and the TTFT-in-steps p50.
 //!
 //! Architecture: connection threads parse requests into an inbox; the
-//! engine thread (the only owner of the PJRT runtime, which is not Sync)
-//! drains the inbox, steps the engine, and routes finished sequences back
-//! through per-request response channels.
+//! router thread (the only owner of the PJRT runtimes, which are not
+//! Sync) drains the inbox, steps every replica with work, and routes
+//! finished sequences back through per-request response channels.
 
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
@@ -34,16 +50,31 @@ use std::sync::{Arc, Mutex};
 use anyhow::{Context, Result};
 
 use crate::coordinator::engine::Engine;
+use crate::coordinator::replica::ReplicaStats;
+use crate::coordinator::router::Router;
 use crate::coordinator::sequence::{SamplingParams, Sequence};
 use crate::util::json::{self, Value};
 
-/// A parsed client request.
+/// A parsed generation request.
 #[derive(Debug, Clone)]
 pub struct Request {
+    /// Prompt token ids (validated non-negative integers).
     pub prompt: Vec<u32>,
+    /// Sampling parameters (defaults filled for absent fields).
     pub params: SamplingParams,
 }
 
+/// Any parsed client line: a generation request or an admin command.
+#[derive(Debug, Clone)]
+pub enum ClientRequest {
+    /// `{"prompt": [...], ...}` — generate tokens.
+    Generate(Request),
+    /// `{"cmd": "stats"}` — per-replica stats snapshot.
+    Stats,
+}
+
+/// Parse one generation-request line (strict: malformed prompt entries
+/// or a zero `max_new_tokens` reject the whole request).
 pub fn parse_request(line: &str) -> Result<Request> {
     let v = json::parse(line).map_err(|e| anyhow::anyhow!("json: {e}"))?;
     let arr = v
@@ -67,6 +98,11 @@ pub fn parse_request(line: &str) -> Result<Request> {
     }
     let mut params = SamplingParams::default();
     if let Some(m) = v.get("max_new_tokens").as_usize() {
+        if m == 0 {
+            // a 0-token budget would admit a sequence that can never
+            // produce a token: malformed, like any other bad field
+            anyhow::bail!("max_new_tokens must be at least 1 (got 0)");
+        }
         params.max_new_tokens = m;
     }
     if let Some(t) = v.get("temperature").as_f64() {
@@ -81,7 +117,21 @@ pub fn parse_request(line: &str) -> Result<Request> {
     Ok(Request { prompt, params })
 }
 
-pub fn response_json(id: u64, seq: &Sequence) -> String {
+/// Parse any client line: `{"cmd": ...}` admin commands first, else a
+/// generation request.
+pub fn parse_client_request(line: &str) -> Result<ClientRequest> {
+    let v = json::parse(line).map_err(|e| anyhow::anyhow!("json: {e}"))?;
+    if let Some(cmd) = v.get("cmd").as_str() {
+        return match cmd {
+            "stats" => Ok(ClientRequest::Stats),
+            other => Err(anyhow::anyhow!("unknown cmd {other:?}")),
+        };
+    }
+    parse_request(line).map(ClientRequest::Generate)
+}
+
+/// Serialize one finished sequence as its wire response line.
+pub fn response_json(id: u64, replica: usize, seq: &Sequence) -> String {
     let finish = match seq.finish {
         Some(crate::coordinator::sequence::FinishReason::Eos) => "eos",
         Some(crate::coordinator::sequence::FinishReason::MaxTokens) => {
@@ -105,6 +155,7 @@ pub fn response_json(id: u64, seq: &Sequence) -> String {
         .unwrap_or(0.0);
     Value::obj(vec![
         ("id", Value::num(id as f64)),
+        ("replica", Value::num(replica as f64)),
         ("tokens",
          Value::Arr(seq.output.iter().map(|&t| Value::num(t as f64))
              .collect())),
@@ -116,47 +167,89 @@ pub fn response_json(id: u64, seq: &Sequence) -> String {
     .to_string()
 }
 
+/// Serialize per-replica stats rows as the `{"cmd":"stats"}` response.
+pub fn stats_json(stats: &[ReplicaStats]) -> Value {
+    Value::obj(vec![(
+        "replicas",
+        Value::Arr(
+            stats
+                .iter()
+                .map(|s| {
+                    Value::obj(vec![
+                        ("id", Value::num(s.id as f64)),
+                        ("requests_routed",
+                         Value::num(s.requests_routed as f64)),
+                        ("waiting", Value::num(s.core.waiting as f64)),
+                        ("running", Value::num(s.core.running as f64)),
+                        ("kv_occupancy",
+                         Value::num(s.core.kv_occupancy)),
+                        ("cache_hits",
+                         Value::num(s.core.cache.hits as f64)),
+                        ("cache_misses",
+                         Value::num(s.core.cache.misses as f64)),
+                        ("cache_hit_rate",
+                         Value::num(s.core.cache_hit_rate())),
+                        ("evictions",
+                         Value::num(s.core.cache.evictions as f64)),
+                        ("prefill_tokens_executed",
+                         Value::num(s.core.prefill_tokens_executed
+                             as f64)),
+                        ("cached_prefix_tokens",
+                         Value::num(s.core.cached_prefix_tokens as f64)),
+                        ("ttft_p50_steps",
+                         Value::num(s.core.ttft_steps_p50)),
+                    ])
+                })
+                .collect(),
+        ),
+    )])
+}
+
 enum Inbox {
     Submit(Request, mpsc::Sender<String>),
+    Stats(mpsc::Sender<String>),
     Shutdown,
 }
 
-/// Move-only wrapper that transfers the engine to its serving thread.
+/// Move-only wrapper that transfers the router to its serving thread.
 ///
-/// SAFETY: `Engine` is not `Send` because the xla crate's PJRT handles use
-/// `Rc` internally. Every `Rc` clone of the client lives inside this same
-/// `Engine` (runtime buffers + executable cache), so moving the whole
-/// engine to exactly one thread — which is all this wrapper permits —
-/// never shares an `Rc` across threads. The engine thread is the sole
-/// owner for the rest of its life.
-struct SendEngine(Engine);
-unsafe impl Send for SendEngine {}
+/// SAFETY: `Engine` is not `Send` because the xla crate's PJRT handles
+/// use `Rc` internally. Every `Rc` clone of a client lives inside the
+/// same `Engine` (runtime buffers + executable cache), and every engine
+/// lives inside this router, so moving the whole router to exactly one
+/// thread — which is all this wrapper permits — never shares an `Rc`
+/// across threads. The router thread is the sole owner for the rest of
+/// its life.
+struct SendRouter(Router<Engine>);
+unsafe impl Send for SendRouter {}
 
-/// A running server; `addr()` gives the bound address, `shutdown()` stops
-/// the engine loop after draining.
+/// A running server; `addr()` gives the bound address, `shutdown()`
+/// stops the router loop after draining.
 pub struct Server {
     addr: std::net::SocketAddr,
     inbox: mpsc::Sender<Inbox>,
-    engine_thread: Option<std::thread::JoinHandle<()>>,
+    router_thread: Option<std::thread::JoinHandle<()>>,
     accept_thread: Option<std::thread::JoinHandle<()>>,
 }
 
 impl Server {
     /// Spawn the server on `127.0.0.1:port` (0 = ephemeral). Takes
-    /// ownership of the engine (PJRT runtime is not Sync; it lives on the
-    /// engine thread).
-    pub fn spawn(engine: Engine, port: u16) -> Result<Server> {
+    /// ownership of the router and its replicas (the PJRT runtimes are
+    /// not Sync; they live on the router thread). A single engine can
+    /// be served by wrapping it:
+    /// `Server::spawn(Router::single(engine), port)`.
+    pub fn spawn(router: Router<Engine>, port: u16) -> Result<Server> {
         let listener = TcpListener::bind(("127.0.0.1", port))?;
         let addr = listener.local_addr()?;
         let (tx, rx) = mpsc::channel::<Inbox>();
 
-        // engine loop thread (sole owner of the PJRT runtime).
+        // router loop thread (sole owner of the PJRT runtimes).
         // NB: bind the whole wrapper inside the closure — edition-2021
         // disjoint capture would otherwise capture the non-Send field.
-        let boxed = SendEngine(engine);
-        let engine_thread = std::thread::spawn(move || {
+        let boxed = SendRouter(router);
+        let router_thread = std::thread::spawn(move || {
             let whole = boxed; // force whole-struct capture (RFC 2229)
-            engine_loop(whole.0, rx);
+            router_loop(whole.0, rx);
         });
 
         // accept loop thread
@@ -175,18 +268,21 @@ impl Server {
         Ok(Server {
             addr,
             inbox: tx,
-            engine_thread: Some(engine_thread),
+            router_thread: Some(router_thread),
             accept_thread: Some(accept_thread),
         })
     }
 
+    /// The bound listen address.
     pub fn addr(&self) -> std::net::SocketAddr {
         self.addr
     }
 
+    /// Stop accepting, drain in-flight requests, and join the router
+    /// thread.
     pub fn shutdown(mut self) {
         let _ = self.inbox.send(Inbox::Shutdown);
-        if let Some(t) = self.engine_thread.take() {
+        if let Some(t) = self.router_thread.take() {
             let _ = t.join();
         }
         // unblock the accept loop with a dummy connection
@@ -212,13 +308,17 @@ fn handle_conn(stream: TcpStream, tx: mpsc::Sender<Inbox>) -> Result<()> {
         if line.is_empty() {
             continue;
         }
-        match parse_request(line) {
+        match parse_client_request(line) {
             Ok(req) => {
                 let (rtx, rrx) = mpsc::channel::<String>();
-                if tx.send(Inbox::Submit(req, rtx)).is_err() {
+                let msg = match req {
+                    ClientRequest::Generate(r) => Inbox::Submit(r, rtx),
+                    ClientRequest::Stats => Inbox::Stats(rtx),
+                };
+                if tx.send(msg).is_err() {
                     return Ok(());
                 }
-                // wait for the engine's response, then write it back
+                // wait for the router's response, then write it back
                 if let Ok(resp) = rrx.recv() {
                     let mut w = writer.lock().unwrap();
                     writeln!(w, "{resp}")?;
@@ -234,13 +334,25 @@ fn handle_conn(stream: TcpStream, tx: mpsc::Sender<Inbox>) -> Result<()> {
     }
 }
 
-fn engine_loop(mut engine: Engine, rx: mpsc::Receiver<Inbox>) {
+fn router_loop(mut router: Router<Engine>, rx: mpsc::Receiver<Inbox>) {
     let mut pending: HashMap<u64, mpsc::Sender<String>> = HashMap::new();
     let mut shutdown = false;
     loop {
-        // drain inbox (non-blocking while there is engine work)
+        // deliver finished responses first: a submission can finish
+        // without any engine work (e.g. prompt_too_long), and its
+        // response must go out before the loop blocks for new input
+        for fin in router.take_finished() {
+            if let Some(resp) = pending.remove(&fin.id) {
+                let _ =
+                    resp.send(response_json(fin.id, fin.replica, &fin.seq));
+            }
+        }
+        if shutdown && !router.has_work() && pending.is_empty() {
+            break;
+        }
+        // drain the inbox (blocking only while fully idle)
         loop {
-            let msg = if engine.has_work() || shutdown {
+            let msg = if router.has_work() || shutdown {
                 match rx.try_recv() {
                     Ok(m) => Some(m),
                     Err(mpsc::TryRecvError::Empty) => None,
@@ -250,7 +362,6 @@ fn engine_loop(mut engine: Engine, rx: mpsc::Receiver<Inbox>) {
                     }
                 }
             } else {
-                // idle: block until the next request
                 match rx.recv() {
                     Ok(m) => Some(m),
                     Err(_) => {
@@ -261,27 +372,24 @@ fn engine_loop(mut engine: Engine, rx: mpsc::Receiver<Inbox>) {
             };
             match msg {
                 Some(Inbox::Submit(req, resp)) => {
-                    let id = engine.submit(req.prompt, req.params);
+                    let id = router.submit(req.prompt, req.params);
                     pending.insert(id, resp);
+                    if !router.has_work() {
+                        break; // finished at submission: drain now
+                    }
+                }
+                Some(Inbox::Stats(resp)) => {
+                    let _ = resp.send(stats_json(&router.stats())
+                        .to_string());
                 }
                 Some(Inbox::Shutdown) => shutdown = true,
                 None => break,
             }
-            if shutdown && !engine.has_work() {
+            if shutdown {
                 break;
             }
         }
-        if engine.has_work() {
-            if engine.step().is_err() {
-                break;
-            }
-        }
-        for seq in engine.take_finished() {
-            if let Some(resp) = pending.remove(&seq.id) {
-                let _ = resp.send(response_json(seq.id, &seq));
-            }
-        }
-        if shutdown && !engine.has_work() && pending.is_empty() {
+        if router.has_work() && router.step().is_err() {
             break;
         }
     }
@@ -293,11 +401,12 @@ pub struct Client {
 }
 
 impl Client {
+    /// Connect to a running [`Server`].
     pub fn connect(addr: std::net::SocketAddr) -> Result<Client> {
         Ok(Client { stream: BufReader::new(TcpStream::connect(addr)?) })
     }
 
-    /// Send one request and wait for its response line.
+    /// Send one generation request and wait for its response line.
     pub fn request(&mut self, prompt: &[u32], max_new: usize)
         -> Result<Value> {
         let req = Value::obj(vec![
@@ -306,6 +415,15 @@ impl Client {
                  .collect())),
             ("max_new_tokens", Value::num(max_new as f64)),
         ]);
+        self.roundtrip(&req)
+    }
+
+    /// Request the per-replica stats snapshot.
+    pub fn stats(&mut self) -> Result<Value> {
+        self.roundtrip(&Value::obj(vec![("cmd", Value::str("stats"))]))
+    }
+
+    fn roundtrip(&mut self, req: &Value) -> Result<Value> {
         let s = self.stream.get_mut();
         writeln!(s, "{req}")?;
         let mut line = String::new();
@@ -317,6 +435,7 @@ impl Client {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::replica::CoreStats;
 
     #[test]
     fn parse_request_fields() {
@@ -354,6 +473,33 @@ mod tests {
     }
 
     #[test]
+    fn parse_rejects_zero_max_new_tokens() {
+        // a 0-token generation budget admits a sequence that can never
+        // produce a token — rejected like any other malformed field
+        assert!(parse_request(r#"{"prompt":[1],"max_new_tokens":0}"#)
+            .is_err());
+        // 1 is the smallest valid budget; absent means the default
+        let r = parse_request(r#"{"prompt":[1],"max_new_tokens":1}"#)
+            .unwrap();
+        assert_eq!(r.params.max_new_tokens, 1);
+        let r = parse_request(r#"{"prompt":[1]}"#).unwrap();
+        assert_eq!(r.params.max_new_tokens,
+                   SamplingParams::default().max_new_tokens);
+    }
+
+    #[test]
+    fn parse_client_request_dispatches() {
+        assert!(matches!(parse_client_request(r#"{"cmd":"stats"}"#),
+                         Ok(ClientRequest::Stats)));
+        assert!(parse_client_request(r#"{"cmd":"reboot"}"#).is_err());
+        assert!(matches!(
+            parse_client_request(r#"{"prompt":[1,2]}"#),
+            Ok(ClientRequest::Generate(_))
+        ));
+        assert!(parse_client_request("not json").is_err());
+    }
+
+    #[test]
     fn parse_request_roundtrip() {
         // a request built the way `Client::request` builds it survives
         // serialize -> parse unchanged
@@ -379,11 +525,57 @@ mod tests {
         s.record_token(7);
         s.cached_prefix_len = 4;
         s.finish(FinishReason::MaxTokens);
-        let j = response_json(3, &s);
+        // global id 11 on replica 1 (seq.id is the replica-local id)
+        let j = response_json(11, 1, &s);
         let v = json::parse(&j).unwrap();
-        assert_eq!(v.get("id").as_usize(), Some(3));
+        assert_eq!(v.get("id").as_usize(), Some(11));
+        assert_eq!(v.get("replica").as_usize(), Some(1));
         assert_eq!(v.get("finish").as_str(), Some("max_tokens"));
         assert_eq!(v.get("tokens").as_arr().unwrap().len(), 1);
         assert_eq!(v.get("cached_tokens").as_usize(), Some(4));
+    }
+
+    #[test]
+    fn stats_json_roundtrip() {
+        let mut core = CoreStats {
+            waiting: 2,
+            running: 3,
+            kv_occupancy: 0.5,
+            ..Default::default()
+        };
+        core.cache.hits = 6;
+        core.cache.misses = 2;
+        core.cache.evictions = 1;
+        core.prefill_tokens_executed = 120;
+        core.cached_prefix_tokens = 48;
+        core.ttft_steps_p50 = 2.5;
+        let rows = vec![
+            ReplicaStats { id: 0, requests_routed: 4, core },
+            ReplicaStats {
+                id: 1,
+                requests_routed: 0,
+                core: CoreStats::default(),
+            },
+        ];
+        let v = json::parse(&stats_json(&rows).to_string()).unwrap();
+        let reps = v.get("replicas").as_arr().unwrap();
+        assert_eq!(reps.len(), 2);
+        let r0 = &reps[0];
+        assert_eq!(r0.get("id").as_usize(), Some(0));
+        assert_eq!(r0.get("requests_routed").as_usize(), Some(4));
+        assert_eq!(r0.get("waiting").as_usize(), Some(2));
+        assert_eq!(r0.get("running").as_usize(), Some(3));
+        assert_eq!(r0.get("kv_occupancy").as_f64(), Some(0.5));
+        assert_eq!(r0.get("cache_hits").as_usize(), Some(6));
+        assert_eq!(r0.get("cache_misses").as_usize(), Some(2));
+        assert_eq!(r0.get("cache_hit_rate").as_f64(), Some(0.75));
+        assert_eq!(r0.get("evictions").as_usize(), Some(1));
+        assert_eq!(r0.get("prefill_tokens_executed").as_usize(),
+                   Some(120));
+        assert_eq!(r0.get("cached_prefix_tokens").as_usize(), Some(48));
+        assert_eq!(r0.get("ttft_p50_steps").as_f64(), Some(2.5));
+        let r1 = &reps[1];
+        assert_eq!(r1.get("id").as_usize(), Some(1));
+        assert_eq!(r1.get("cache_hit_rate").as_f64(), Some(0.0));
     }
 }

@@ -20,6 +20,10 @@ impl Accum {
     pub fn len(&self) -> usize {
         self.samples.len()
     }
+    /// The raw samples (e.g. to merge accumulators across replicas).
+    pub fn samples(&self) -> &[f64] {
+        &self.samples
+    }
     pub fn is_empty(&self) -> bool {
         self.samples.is_empty()
     }

@@ -3,10 +3,11 @@
 //! Requires `make artifacts` (tests skip otherwise).
 
 use sqplus::config::{
-    EngineConfig, GpuProfile, ModelConfig, Precision, QuantConfig,
-    QuantMethod,
+    CacheWatermarks, EngineConfig, GpuProfile, ModelConfig, Precision,
+    QuantConfig, QuantMethod, RouterConfig, RoutingPolicy,
 };
 use sqplus::coordinator::engine::Engine;
+use sqplus::coordinator::router::Router;
 use sqplus::coordinator::sequence::{FinishReason, SamplingParams};
 use sqplus::model::init::{init_weights, InitSpec};
 use sqplus::quant::{calib, pipeline};
@@ -606,6 +607,121 @@ fn continuation_chunk_is_one_device_call() {
     assert_eq!((st_c.prefills, st_c.chunks, st_c.decodes), (1, 1, 3));
     // fallback: the same continuation costs one decode call per token
     assert_eq!((st_f.prefills, st_f.chunks, st_f.decodes), (1, 0, 35));
+}
+
+#[test]
+fn multi_replica_router_golden() {
+    // PR 5 acceptance golden: the same request trace served by (a) one
+    // engine and (b) an N=2 router — cache-aware and round-robin —
+    // produces the same token stream per request; the cache-aware
+    // router executes strictly fewer cold prefill tokens than
+    // round-robin on the shared-prefix burst; and with a sliding
+    // eviction window configured, every replica's cached-unreferenced
+    // block count stays at/below the high watermark for the whole run.
+    let Some(m) = manifest() else { return };
+    let mut rng = sqplus::util::rng::Rng::new(77);
+    let prefix: Vec<u32> =
+        (0..32).map(|_| (1 + rng.below(511)) as u32).collect();
+    // donor (registers the prefix), then a warm burst + cold traffic
+    let mut donor = prefix.clone();
+    donor.extend([7, 8]);
+    let mut burst: Vec<Vec<u32>> = vec![];
+    for i in 0..4u32 {
+        let mut p = prefix.clone();
+        p.extend((0..4u32).map(|t| (i * 37 + t * 11 + 1) % 512));
+        burst.push(p);
+        burst.push(
+            (0..20u32).map(|t| (i * 53 + t * 17 + 1) % 512).collect(),
+        );
+    }
+    let ecfg = EngineConfig { block_size: 4, ..Default::default() };
+    let high = 8usize;
+
+    // (a) single engine, same two-phase schedule
+    let mut eng = fp16_engine(&m, ecfg.clone());
+    let mut single: Vec<(u64, Vec<u32>)> = vec![];
+    let id = eng.submit(donor.clone(), SamplingParams {
+        max_new_tokens: 2, ..Default::default()
+    });
+    eng.run_to_completion(2000).unwrap();
+    single.extend(eng.take_finished().into_iter()
+        .filter(|s| s.id == id).map(|s| (s.id, s.output)));
+    for p in &burst {
+        eng.submit(p.clone(), SamplingParams {
+            max_new_tokens: 4, ..Default::default()
+        });
+    }
+    eng.run_to_completion(5000).unwrap();
+    single.extend(eng.take_finished().into_iter()
+        .map(|s| (s.id, s.output)));
+    single.sort_by_key(|(id, _)| *id);
+
+    // (b) N=2 routers
+    let run = |routing: RoutingPolicy| {
+        let cores =
+            vec![fp16_engine(&m, ecfg.clone()),
+                 fp16_engine(&m, ecfg.clone())];
+        let mut router = Router::new(cores, RouterConfig {
+            routing,
+            watermarks: CacheWatermarks::new(high, high / 2),
+            load_penalty_tokens: 1,
+            ..Default::default()
+        });
+        let mut fins = vec![];
+        let drive = |router: &mut Router<Engine>| {
+            while router.has_work() {
+                router.step().unwrap();
+                for r in router.replicas() {
+                    assert!(
+                        r.core().cached_unreferenced_blocks() <= high,
+                        "sliding window exceeded on replica {}", r.id
+                    );
+                }
+            }
+        };
+        router.submit(donor.clone(), SamplingParams {
+            max_new_tokens: 2, ..Default::default()
+        });
+        drive(&mut router);
+        fins.extend(router.take_finished());
+        for p in &burst {
+            router.submit(p.clone(), SamplingParams {
+                max_new_tokens: 4, ..Default::default()
+            });
+        }
+        drive(&mut router);
+        fins.extend(router.take_finished());
+        let mut streams: Vec<(u64, Vec<u32>)> = fins
+            .iter()
+            .map(|f| (f.id, f.seq.output.clone()))
+            .collect();
+        streams.sort_by_key(|(id, _)| *id);
+        let executed: usize = router
+            .replicas()
+            .iter()
+            .map(|r| r.core().metrics.prefill_tokens_executed)
+            .sum();
+        let routed: Vec<usize> = router
+            .replicas()
+            .iter()
+            .map(|r| r.requests_routed)
+            .collect();
+        (streams, executed, routed)
+    };
+    let (ca_streams, ca_exec, ca_routed) = run(RoutingPolicy::CacheAware);
+    let (rr_streams, rr_exec, rr_routed) = run(RoutingPolicy::RoundRobin);
+    assert_eq!(single, ca_streams,
+               "cache-aware router diverged from single engine");
+    assert_eq!(single, rr_streams,
+               "round-robin router diverged from single engine");
+    // both replicas served traffic under round-robin
+    assert!(rr_routed.iter().all(|&n| n > 0), "{rr_routed:?}");
+    // the warm burst followed the prefix: replica 0 took the donor and
+    // every shared-prefix request, so cache-aware must execute strictly
+    // fewer cold prefill tokens than round-robin
+    assert!(ca_routed[0] > ca_routed[1], "{ca_routed:?}");
+    assert!(ca_exec < rr_exec,
+            "cache-aware executed {ca_exec} !< round-robin {rr_exec}");
 }
 
 #[test]

@@ -1,0 +1,591 @@
+//! Multi-replica router properties over a deterministic fake replica
+//! core — pure scheduler + block-manager accounting with a
+//! content-determined fake model, no PJRT runtime, so everything here
+//! runs in tier-1 CI without artifacts (the `scheduler_properties.rs`
+//! harness style extended to the router layer).
+//!
+//! Locked down:
+//! * an N=1 router is *bit-identical* to driving the replica core
+//!   directly (same submission schedule → same ids, streams, finish
+//!   reasons);
+//! * an N=2 router serves the same trace with the same per-request
+//!   token streams as one core (the fake model is content-determined,
+//!   so any correct routing/scheduling must agree);
+//! * cache-aware routing sends a shared-prefix burst to the replica
+//!   already holding the prefix and executes strictly fewer cold
+//!   prefill tokens than round-robin on the same trace;
+//! * the shared cache directory exactly mirrors every replica's own
+//!   hash-chain lookups after each step (randomized);
+//! * sliding-window eviction keeps every replica's
+//!   cached-but-unreferenced block count at/below the high watermark
+//!   for the whole run and never breaks block conservation
+//!   (randomized);
+//! * the `{"cmd":"stats"}` payload round-trips the per-replica rows.
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use sqplus::config::{
+    CacheWatermarks, EngineConfig, RouterConfig, RoutingPolicy,
+};
+use sqplus::coordinator::block_manager::{BlockManager, CacheEvent};
+use sqplus::coordinator::replica::{CoreStats, ReplicaCore};
+use sqplus::coordinator::router::{RoutedFinish, Router};
+use sqplus::coordinator::scheduler::Scheduler;
+use sqplus::coordinator::sequence::{
+    FinishReason, SamplingParams, SeqState, Sequence,
+};
+use sqplus::util::json;
+use sqplus::util::prop;
+use sqplus::util::rng::Rng;
+
+/// Deterministic fake model: the next token is a pure function of the
+/// content so far — so token streams cannot depend on routing,
+/// chunking, preemption, or batching, and any divergence is a real
+/// scheduling bug.
+fn fake_next_token(content: &[u32]) -> u32 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &t in content {
+        h ^= t as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    (h % 997) as u32
+}
+
+/// One replica core: the real scheduler + block manager driven exactly
+/// the way `Engine` drives them, with the fake model supplying tokens.
+struct FakeCore {
+    sched: Scheduler,
+    seqs: HashMap<u64, Sequence>,
+    finished: Vec<Sequence>,
+    next_id: u64,
+    prefill_tokens_executed: usize,
+    cached_prefix_tokens: usize,
+}
+
+impl FakeCore {
+    fn new(ecfg: EngineConfig, total_blocks: usize) -> FakeCore {
+        let bm = BlockManager::new(ecfg.block_size, total_blocks);
+        FakeCore {
+            sched: Scheduler::new(ecfg, bm),
+            seqs: HashMap::new(),
+            finished: vec![],
+            next_id: 0,
+            prefill_tokens_executed: 0,
+            cached_prefix_tokens: 0,
+        }
+    }
+
+    fn finish_if_done(&mut self, id: u64) {
+        if let Some(r) = self.seqs[&id].should_finish() {
+            let mut q = self.seqs.remove(&id).unwrap();
+            q.finish(r);
+            self.sched.on_finished(id);
+            self.finished.push(q);
+        }
+    }
+}
+
+impl ReplicaCore for FakeCore {
+    fn submit(&mut self, prompt: Vec<u32>, params: SamplingParams)
+        -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.seqs.insert(id, Sequence::new(id, prompt, params));
+        self.sched.add(id);
+        id
+    }
+
+    fn step(&mut self) -> Result<()> {
+        let plan = self.sched.plan(&self.seqs);
+        for v in self.sched.preempted.clone() {
+            let q = self.seqs.get_mut(&v).unwrap();
+            if matches!(q.state,
+                        SeqState::Running | SeqState::Prefilling) {
+                q.preempt();
+            }
+        }
+        for v in self.sched.dropped.clone() {
+            if let Some(mut q) = self.seqs.remove(&v) {
+                q.finish(FinishReason::PoolExhausted);
+                self.sched.on_finished(v);
+                self.finished.push(q);
+            }
+        }
+        for c in &plan.chunks {
+            let toks = self.seqs[&c.id].full_tokens();
+            {
+                let q = self.seqs.get_mut(&c.id).unwrap();
+                q.prefill_progress = c.end;
+                if c.admitted {
+                    q.cached_prefix_len = c.start;
+                    self.cached_prefix_tokens += c.start;
+                }
+            }
+            self.prefill_tokens_executed += c.end - c.start;
+            self.sched.bm.register_prefix(c.id, &toks[..c.end]);
+            let q = self.seqs.get_mut(&c.id).unwrap();
+            if c.end == toks.len() {
+                q.state = SeqState::Running;
+                q.record_token(fake_next_token(&toks));
+                self.finish_if_done(c.id);
+            } else {
+                q.state = SeqState::Prefilling;
+            }
+        }
+        for id in plan.decode.clone() {
+            let q = self.seqs.get_mut(&id).unwrap();
+            q.record_token(fake_next_token(&q.full_tokens()));
+            self.finish_if_done(id);
+        }
+        Ok(())
+    }
+
+    fn has_work(&self) -> bool {
+        self.sched.has_work()
+    }
+    fn take_finished(&mut self) -> Vec<Sequence> {
+        std::mem::take(&mut self.finished)
+    }
+    fn block_size(&self) -> usize {
+        self.sched.bm.block_size
+    }
+    fn load(&self) -> usize {
+        self.sched.waiting_len() + self.sched.running_len()
+    }
+    fn enable_cache_events(&mut self) {
+        self.sched.bm.enable_cache_events = true;
+    }
+    fn take_cache_events(&mut self) -> Vec<CacheEvent> {
+        self.sched.bm.take_cache_events()
+    }
+    fn set_cache_watermarks(&mut self, wm: CacheWatermarks) {
+        self.sched.bm.set_cache_watermarks(wm.high, wm.low);
+    }
+    fn core_stats(&self) -> CoreStats {
+        CoreStats {
+            waiting: self.sched.waiting_len(),
+            running: self.sched.running_len(),
+            kv_occupancy: self.sched.bm.occupancy(),
+            cache: self.sched.bm.stats.clone(),
+            prefill_tokens_executed: self.prefill_tokens_executed,
+            cached_prefix_tokens: self.cached_prefix_tokens,
+            ttft_steps_p50: 0.0,
+        }
+    }
+}
+
+fn ecfg(block_size: usize) -> EngineConfig {
+    EngineConfig {
+        max_running: 4,
+        max_batch_tokens: 64,
+        decode_batches: vec![1, 2, 4, 8],
+        prefill_buckets: vec![(4, 64)],
+        block_size,
+        ..Default::default()
+    }
+}
+
+fn shared_prefixes(bs: usize) -> Vec<Vec<u32>> {
+    (0..3u32)
+        .map(|i| (0..(bs * (1 + i as usize)) as u32)
+            .map(|t| i * 131 + t)
+            .collect())
+        .collect()
+}
+
+fn prompt(rng: &mut Rng, prefixes: &[Vec<u32>], uniq: u32) -> Vec<u32> {
+    let mut p = prefixes[rng.below(prefixes.len())].clone();
+    let extra = 1 + rng.below(12);
+    p.extend((0..extra as u32).map(|t| 1000 + uniq * 31 + t));
+    p
+}
+
+/// Deterministic submission schedule: request `i` is submitted before
+/// step `3 * i`, with a per-request token budget. The same schedule is
+/// replayable against a bare core or any router.
+fn schedule(prompts: &[Vec<u32>]) -> Vec<(usize, Vec<u32>, usize)> {
+    prompts
+        .iter()
+        .enumerate()
+        .map(|(i, p)| (3 * i, p.clone(), 2 + i % 5))
+        .collect()
+}
+
+/// Drive a bare core through the schedule; streams by submission id.
+fn run_bare(mut core: FakeCore, sched: &[(usize, Vec<u32>, usize)])
+    -> Vec<(u64, Vec<u32>, Option<FinishReason>)> {
+    let mut out = vec![];
+    let mut next = 0usize;
+    for step in 0..10_000 {
+        while next < sched.len() && sched[next].0 <= step {
+            let (_, p, max_new) = &sched[next];
+            core.submit(p.clone(), SamplingParams {
+                max_new_tokens: *max_new,
+                ..Default::default()
+            });
+            next += 1;
+        }
+        core.step().unwrap();
+        for q in core.take_finished() {
+            out.push((q.id, q.output.clone(), q.finish));
+        }
+        if next == sched.len() && !core.has_work() {
+            break;
+        }
+    }
+    assert!(!core.has_work(), "bare core did not drain");
+    out.sort_by_key(|(id, _, _)| *id);
+    out
+}
+
+/// Drive a router through the same schedule; streams by global id.
+fn run_router(mut router: Router<FakeCore>,
+              sched: &[(usize, Vec<u32>, usize)])
+    -> (Vec<(u64, Vec<u32>, Option<FinishReason>)>, Vec<RoutedFinish>) {
+    let mut fins: Vec<RoutedFinish> = vec![];
+    let mut next = 0usize;
+    for step in 0..10_000 {
+        while next < sched.len() && sched[next].0 <= step {
+            let (_, p, max_new) = &sched[next];
+            router.submit(p.clone(), SamplingParams {
+                max_new_tokens: *max_new,
+                ..Default::default()
+            });
+            next += 1;
+        }
+        router.step().unwrap();
+        fins.extend(router.take_finished());
+        if next == sched.len() && !router.has_work() {
+            break;
+        }
+    }
+    assert!(!router.has_work(), "router did not drain");
+    let mut out: Vec<(u64, Vec<u32>, Option<FinishReason>)> = fins
+        .iter()
+        .map(|f| (f.id, f.seq.output.clone(), f.seq.finish))
+        .collect();
+    out.sort_by_key(|(id, _, _)| *id);
+    (out, fins)
+}
+
+#[test]
+fn router_n1_bit_identical_to_bare_core() {
+    // The golden identity: a router over one replica is a pass-through.
+    // Same schedule → same global ids, same streams, same finish
+    // reasons, every request served by replica 0.
+    let bs = 4;
+    let prefixes = shared_prefixes(bs);
+    let mut rng = Rng::new(0x1234);
+    let prompts: Vec<Vec<u32>> =
+        (0..16u32).map(|i| prompt(&mut rng, &prefixes, i)).collect();
+    let sched = schedule(&prompts);
+    let bare = run_bare(FakeCore::new(ecfg(bs), 256), &sched);
+    let router = Router::new(
+        vec![FakeCore::new(ecfg(bs), 256)],
+        RouterConfig::default(),
+    );
+    let (routed, fins) = run_router(router, &sched);
+    assert_eq!(bare, routed, "N=1 router diverged from bare core");
+    assert!(fins.iter().all(|f| f.replica == 0));
+    // local ids equal global ids through a single replica
+    assert!(fins.iter().all(|f| f.id == f.seq.id));
+}
+
+#[test]
+fn router_n2_streams_match_single_core() {
+    // Acceptance golden: the same trace through one core and through an
+    // N=2 router (all three policies) produces the same token stream
+    // per request — routing changes *where* work runs, never *what* is
+    // generated.
+    let bs = 4;
+    let prefixes = shared_prefixes(bs);
+    let mut rng = Rng::new(0xbeef);
+    let prompts: Vec<Vec<u32>> =
+        (0..18u32).map(|i| prompt(&mut rng, &prefixes, i)).collect();
+    let sched = schedule(&prompts);
+    let bare = run_bare(FakeCore::new(ecfg(bs), 256), &sched);
+    for routing in [RoutingPolicy::CacheAware, RoutingPolicy::LeastLoaded,
+                    RoutingPolicy::RoundRobin] {
+        let router = Router::new(
+            vec![FakeCore::new(ecfg(bs), 256),
+                 FakeCore::new(ecfg(bs), 256)],
+            RouterConfig { routing, ..Default::default() },
+        );
+        let (routed, fins) = run_router(router, &sched);
+        assert_eq!(bare, routed,
+                   "N=2 {} diverged from single core",
+                   routing.as_str());
+        // with round-robin both replicas must actually serve traffic
+        if routing == RoutingPolicy::RoundRobin {
+            assert!(fins.iter().any(|f| f.replica == 0));
+            assert!(fins.iter().any(|f| f.replica == 1));
+        }
+    }
+}
+
+/// Shared-prefix burst trace: a donor request warms one replica's
+/// cache, then `burst` requests share its prefix. Returns (total
+/// prefill tokens executed, per-replica routed counts, streams).
+fn run_burst(routing: RoutingPolicy)
+    -> (usize, Vec<usize>, Vec<(u64, Vec<u32>)>) {
+    let bs = 4;
+    let prefix: Vec<u32> = (0..32).map(|t| 7000 + t).collect();
+    let router_cfg = RouterConfig {
+        routing,
+        // 1 token per queued request: affinity dominates until a
+        // replica's backlog outweighs the whole prefix
+        load_penalty_tokens: 1,
+        ..Default::default()
+    };
+    let mut router = Router::new(
+        vec![FakeCore::new(ecfg(bs), 256), FakeCore::new(ecfg(bs), 256)],
+        router_cfg,
+    );
+    // donor: prefix + 2 unique tokens; run to completion so its blocks
+    // are registered and the directory is warm
+    let mut donor = prefix.clone();
+    donor.extend([9001, 9002]);
+    router.submit(donor, SamplingParams {
+        max_new_tokens: 2,
+        ..Default::default()
+    });
+    router.run_to_completion(1000).unwrap();
+    let mut fins = router.take_finished();
+    // burst: 6 warm prompts, submitted together before any step
+    for i in 0..6u32 {
+        let mut p = prefix.clone();
+        p.extend((0..3u32).map(|t| 8000 + i * 31 + t));
+        router.submit(p, SamplingParams {
+            max_new_tokens: 3,
+            ..Default::default()
+        });
+    }
+    router.run_to_completion(1000).unwrap();
+    fins.extend(router.take_finished());
+    let executed: usize = router
+        .replicas()
+        .iter()
+        .map(|r| r.core().core_stats().prefill_tokens_executed)
+        .sum();
+    let routed: Vec<usize> = router
+        .replicas()
+        .iter()
+        .map(|r| r.requests_routed)
+        .collect();
+    let mut streams: Vec<(u64, Vec<u32>)> = fins
+        .into_iter()
+        .map(|f| (f.id, f.seq.output))
+        .collect();
+    streams.sort_by_key(|(id, _)| *id);
+    (executed, routed, streams)
+}
+
+#[test]
+fn cache_aware_burst_lands_on_warm_replica() {
+    let (ca_exec, ca_routed, ca_streams) =
+        run_burst(RoutingPolicy::CacheAware);
+    let (rr_exec, rr_routed, rr_streams) =
+        run_burst(RoutingPolicy::RoundRobin);
+    // identical generations either way (content-determined model)
+    assert_eq!(ca_streams, rr_streams);
+    // cache-aware: donor and the whole burst on replica 0
+    assert_eq!(ca_routed, vec![7, 0],
+               "burst did not follow the warm prefix");
+    // round-robin sprays the burst across both replicas
+    assert_eq!(rr_routed, vec![4, 3]);
+    // the headline: strictly fewer cold prefill tokens executed
+    assert!(ca_exec < rr_exec,
+            "cache-aware executed {ca_exec} !< round-robin {rr_exec}");
+}
+
+#[test]
+fn least_loaded_balances_a_cold_burst() {
+    // with no cache hints and equal loads, least-loaded alternates via
+    // the queue-depth signal instead of starving one replica
+    let bs = 4;
+    let mut router = Router::new(
+        vec![FakeCore::new(ecfg(bs), 256), FakeCore::new(ecfg(bs), 256)],
+        RouterConfig {
+            routing: RoutingPolicy::LeastLoaded,
+            ..Default::default()
+        },
+    );
+    for i in 0..8u32 {
+        let p: Vec<u32> =
+            (0..10u32).map(|t| 100 + i * 97 + t).collect();
+        router.submit(p, SamplingParams {
+            max_new_tokens: 2,
+            ..Default::default()
+        });
+    }
+    let routed: Vec<usize> = router
+        .replicas()
+        .iter()
+        .map(|r| r.requests_routed)
+        .collect();
+    assert_eq!(routed, vec![4, 4], "cold burst not balanced");
+    router.run_to_completion(1000).unwrap();
+    assert_eq!(router.take_finished().len(), 8);
+}
+
+#[test]
+fn directory_mirrors_replica_caches_randomized() {
+    // After every router step the shared directory must answer prefix
+    // probes exactly as each replica's own block manager would — the
+    // O(1)-routing contract: hints are drained-in-order events, so
+    // post-step they are in sync (mid-step staleness is unobservable
+    // from the routing path).
+    prop::check("directory sync", 6, |rng| {
+        let bs = 2 + rng.below(4);
+        let prefixes = shared_prefixes(bs);
+        let n = 2 + rng.below(2);
+        let cores: Vec<FakeCore> = (0..n)
+            .map(|_| FakeCore::new(ecfg(bs), 24 + rng.below(48)))
+            .collect();
+        let mut router = Router::new(cores, RouterConfig {
+            routing: RoutingPolicy::CacheAware,
+            // small sliding window so evictions happen and must be
+            // reflected in the directory too
+            watermarks: CacheWatermarks::new(4, 2),
+            ..Default::default()
+        });
+        let mut submitted = 0usize;
+        for _ in 0..300 {
+            if submitted < 24 && rng.below(2) == 0 {
+                let p = prompt(rng, &prefixes, submitted as u32);
+                router.submit(p, SamplingParams {
+                    max_new_tokens: 1 + rng.below(6),
+                    ..Default::default()
+                });
+                submitted += 1;
+            }
+            router.step().unwrap();
+            router.take_finished();
+            // probe with every shared prefix extended past its end (a
+            // lookup never covers the whole query) and a random one
+            for pre in &prefixes {
+                let mut probe = pre.clone();
+                probe.extend([999_999, 999_998]);
+                let dir_hits = router.directory().prefix_hits(
+                    &probe, bs, router.replicas().len(),
+                );
+                for (i, r) in router.replicas().iter().enumerate() {
+                    let bm_hit = r
+                        .core()
+                        .sched
+                        .bm
+                        .cached_prefix_tokens(&probe);
+                    assert_eq!(
+                        dir_hits[i], bm_hit,
+                        "directory diverged from replica {i}"
+                    );
+                }
+            }
+            if submitted == 24 && !router.has_work() {
+                break;
+            }
+        }
+        assert!(!router.has_work(), "workload did not drain");
+    });
+}
+
+#[test]
+fn sliding_window_bounds_every_replica_for_whole_run() {
+    // Acceptance: with watermarks configured through the router, no
+    // replica's cached-but-unreferenced population ever exceeds the
+    // high watermark, conservation holds throughout, and the pool
+    // drains to fully free at the end.
+    prop::check("router sliding window", 6, |rng| {
+        let bs = 2 + rng.below(3);
+        let prefixes = shared_prefixes(bs);
+        let high = 2 + rng.below(4);
+        let low = rng.below(high + 1);
+        let mut router = Router::new(
+            vec![
+                FakeCore::new(ecfg(bs), 32 + rng.below(32)),
+                FakeCore::new(ecfg(bs), 32 + rng.below(32)),
+            ],
+            RouterConfig {
+                routing: RoutingPolicy::CacheAware,
+                watermarks: CacheWatermarks::new(high, low),
+                ..Default::default()
+            },
+        );
+        let mut submitted = 0usize;
+        let mut finished = 0usize;
+        for _ in 0..600 {
+            if submitted < 30 && rng.below(2) == 0 {
+                let p = prompt(rng, &prefixes, submitted as u32);
+                router.submit(p, SamplingParams {
+                    max_new_tokens: 1 + rng.below(5),
+                    ..Default::default()
+                });
+                submitted += 1;
+            }
+            router.step().unwrap();
+            finished += router.take_finished().len();
+            for r in router.replicas() {
+                let bm = &r.core().sched.bm;
+                assert!(bm.cached_unreferenced() <= high,
+                        "window exceeded: {} > {high}",
+                        bm.cached_unreferenced());
+                assert!(bm.check_conservation(), "conservation broken");
+            }
+            if submitted == 30 && !router.has_work() {
+                break;
+            }
+        }
+        assert!(!router.has_work(), "workload did not drain");
+        assert_eq!(finished, submitted);
+        for r in router.replicas() {
+            let bm = &r.core().sched.bm;
+            assert_eq!(bm.free_blocks(), bm.total_blocks,
+                       "pool did not drain to free");
+        }
+    });
+}
+
+#[test]
+fn stats_rows_roundtrip_through_wire_json() {
+    // End-to-end stats check against live rows: submit traffic, step,
+    // snapshot, serialize with the server's encoder, parse back.
+    let bs = 4;
+    let mut router = Router::new(
+        vec![FakeCore::new(ecfg(bs), 64), FakeCore::new(ecfg(bs), 64)],
+        RouterConfig {
+            routing: RoutingPolicy::RoundRobin,
+            ..Default::default()
+        },
+    );
+    for i in 0..4u32 {
+        let p: Vec<u32> = (0..12u32).map(|t| i * 131 + t + 1).collect();
+        router.submit(p, SamplingParams {
+            max_new_tokens: 4,
+            ..Default::default()
+        });
+    }
+    for _ in 0..3 {
+        router.step().unwrap();
+    }
+    let rows = router.stats();
+    let v = json::parse(&sqplus::server::stats_json(&rows).to_string())
+        .unwrap();
+    let reps = v.get("replicas").as_arr().unwrap();
+    assert_eq!(reps.len(), 2);
+    for (i, rep) in reps.iter().enumerate() {
+        assert_eq!(rep.get("id").as_usize(), Some(i));
+        assert_eq!(rep.get("requests_routed").as_usize(),
+                   Some(rows[i].requests_routed));
+        assert_eq!(rep.get("waiting").as_usize(),
+                   Some(rows[i].core.waiting));
+        assert_eq!(rep.get("running").as_usize(),
+                   Some(rows[i].core.running));
+        assert_eq!(rep.get("prefill_tokens_executed").as_usize(),
+                   Some(rows[i].core.prefill_tokens_executed));
+    }
+    assert_eq!(rows[0].requests_routed + rows[1].requests_routed, 4);
+    router.run_to_completion(1000).unwrap();
+    assert_eq!(router.take_finished().len(), 4);
+}
