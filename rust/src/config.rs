@@ -360,6 +360,22 @@ pub struct RouterConfig {
     /// running sequence is worth. Higher values favor idle replicas
     /// over warm ones; 0 routes purely on cache affinity.
     pub load_penalty_tokens: usize,
+    /// Admission control: maximum queued + running sequences per
+    /// replica. A submission that would push every alive replica past
+    /// this cap is shed (`FinishReason::Shed`). 0 = unbounded.
+    pub max_replica_queue: usize,
+    /// Admission control: global waiting budget — when the waiting
+    /// queues across alive replicas already hold this many sequences, a
+    /// new submission is shed instead of queued forever. 0 = unbounded.
+    pub max_waiting: usize,
+    /// Transient step failures tolerated per replica before it is
+    /// declared Dead and its in-flight requests are replayed. Each
+    /// tolerated failure quarantines the replica with backoff.
+    pub max_step_retries: usize,
+    /// Quarantine backoff after the first transient failure, measured
+    /// in router steps; doubles per consecutive failure (deterministic
+    /// exponential backoff). Clamped to at least 1.
+    pub retry_backoff_steps: usize,
 }
 
 impl Default for RouterConfig {
@@ -369,6 +385,10 @@ impl Default for RouterConfig {
             routing: RoutingPolicy::CacheAware,
             watermarks: CacheWatermarks::default(),
             load_penalty_tokens: 16,
+            max_replica_queue: 0,
+            max_waiting: 0,
+            max_step_retries: 2,
+            retry_backoff_steps: 2,
         }
     }
 }

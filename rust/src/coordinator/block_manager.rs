@@ -615,6 +615,21 @@ impl BlockManager {
         std::mem::take(&mut self.evicted)
     }
 
+    /// Drop the entire evictable prefix cache (replica teardown):
+    /// every cached-but-unreferenced block is evicted back onto the
+    /// free list, emitting the usual eviction events/ids. Blocks still
+    /// referenced by live sequences are untouched, so call this after
+    /// releasing every sequence for a fully free pool. Returns the
+    /// number of blocks reclaimed.
+    pub fn clear_cache(&mut self) -> usize {
+        let mut n = 0;
+        while let Some(b) = self.evict_lru() {
+            self.free.push(b);
+            n += 1;
+        }
+        n
+    }
+
     /// Invariant check: every block is in exactly one of {free,
     /// evictable, referenced}; stored refcounts match the tables; the
     /// cache map and per-block hashes agree.

@@ -319,6 +319,25 @@ impl Engine {
         std::mem::take(&mut self.finished)
     }
 
+    /// Replica teardown: remove and return every unfinished sequence
+    /// (with its partial output, so a router can replay it on another
+    /// replica), releasing all scheduler, pool, and prefix-cache state
+    /// this engine held for them. The cache is cleared outright — a
+    /// torn-down replica serves nobody, so its stashed KV rows are dead
+    /// weight. Sorted by id (submission order) for deterministic
+    /// replay.
+    pub fn drain_inflight(&mut self) -> Vec<Sequence> {
+        self.sched.drain();
+        let mut out: Vec<Sequence> =
+            self.seqs.drain().map(|(_, s)| s).collect();
+        self.kvs.clear();
+        self.sched.bm.clear_cache();
+        self.sched.bm.take_evicted();
+        self.cached_kv.clear();
+        out.sort_by_key(|s| s.id);
+        out
+    }
+
     /// Execute one scheduler step.
     pub fn step(&mut self) -> Result<StepOutcome> {
         let plan: StepPlan = self.sched.plan(&self.seqs);

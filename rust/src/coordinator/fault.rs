@@ -1,0 +1,239 @@
+//! Deterministic fault injection for the replica/router seam.
+//!
+//! [`FaultyCore`] wraps any [`ReplicaCore`] and fails its `step` /
+//! `submit` calls on a deterministic [`FaultSpec`] schedule, leaving
+//! every other method a pass-through. A failed call does **no** work on
+//! the inner core — exactly the contract a real failure presents: the
+//! step that errored produced nothing.
+//!
+//! This is the tier-1 test harness for the router's health machine
+//! (Healthy → Quarantined → Dead), bounded retry-with-backoff,
+//! in-flight replay, and load shedding: wrap the deterministic
+//! `FakeCore` from the router property tests (or a real [`Engine`])
+//! and every recovery path becomes reproducible without artifacts.
+//!
+//! [`Engine`]: super::engine::Engine
+
+use crate::config::CacheWatermarks;
+
+use super::block_manager::CacheEvent;
+use super::engine::StepOutcome;
+use super::replica::{CoreStats, ReplicaCore, ReplicaError};
+use super::sequence::{SamplingParams, Sequence};
+
+/// When and how a [`FaultyCore`] fails. All schedules count calls
+/// 1-based, so `FailOnStepK { k: 1 }` fails the very first step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultSpec {
+    /// Permanent failure on step call `k` and every step after it —
+    /// the replica "crashes" at a chosen point mid-stream.
+    FailOnStepK {
+        /// First failing step call (1-based).
+        k: usize,
+    },
+    /// Transient failure on every `n`-th step call (the flaky device:
+    /// fails, recovers, fails again).
+    FailEveryN {
+        /// Failure period in step calls (must be ≥ 1).
+        n: usize,
+    },
+    /// Permanent failure on submit call `k` and every submit after it;
+    /// steps keep succeeding until the router reacts.
+    FailOnSubmit {
+        /// First failing submit call (1-based).
+        k: usize,
+    },
+    /// Transient failures on step calls `from .. from + fails`, healthy
+    /// before and after — the recoverable brown-out.
+    TransientThenRecover {
+        /// First failing step call (1-based).
+        from: usize,
+        /// Number of consecutive failing step calls.
+        fails: usize,
+    },
+}
+
+/// A [`ReplicaCore`] wrapper that injects failures per a
+/// [`FaultSpec`]; see the module docs.
+pub struct FaultyCore<C: ReplicaCore> {
+    inner: C,
+    spec: FaultSpec,
+    steps: usize,
+    submits: usize,
+}
+
+impl<C: ReplicaCore> FaultyCore<C> {
+    /// Wrap `inner` with the failure schedule `spec`.
+    pub fn new(inner: C, spec: FaultSpec) -> FaultyCore<C> {
+        FaultyCore { inner, spec, steps: 0, submits: 0 }
+    }
+
+    /// The wrapped core (assertions on post-failure state).
+    pub fn inner(&self) -> &C {
+        &self.inner
+    }
+
+    /// Step calls observed so far (failed ones included).
+    pub fn steps_seen(&self) -> usize {
+        self.steps
+    }
+
+    /// The error this step call must produce, if any.
+    fn step_fault(&self) -> Option<ReplicaError> {
+        match self.spec {
+            FaultSpec::FailOnStepK { k } if self.steps >= k => {
+                Some(ReplicaError::Permanent(format!(
+                    "injected: failed at step {k}"
+                )))
+            }
+            FaultSpec::FailEveryN { n } if self.steps % n.max(1) == 0 => {
+                Some(ReplicaError::Transient(format!(
+                    "injected: step {} (every {n})", self.steps
+                )))
+            }
+            FaultSpec::TransientThenRecover { from, fails }
+                if self.steps >= from && self.steps < from + fails =>
+            {
+                Some(ReplicaError::Transient(format!(
+                    "injected: brown-out step {}", self.steps
+                )))
+            }
+            _ => None,
+        }
+    }
+}
+
+impl<C: ReplicaCore> ReplicaCore for FaultyCore<C> {
+    fn submit(&mut self, prompt: Vec<u32>, params: SamplingParams)
+        -> Result<u64, ReplicaError> {
+        self.submits += 1;
+        if let FaultSpec::FailOnSubmit { k } = self.spec {
+            if self.submits >= k {
+                return Err(ReplicaError::Permanent(format!(
+                    "injected: failed at submit {k}"
+                )));
+            }
+        }
+        self.inner.submit(prompt, params)
+    }
+
+    fn step(&mut self) -> Result<StepOutcome, ReplicaError> {
+        self.steps += 1;
+        if let Some(e) = self.step_fault() {
+            return Err(e);
+        }
+        self.inner.step()
+    }
+
+    fn has_work(&self) -> bool {
+        self.inner.has_work()
+    }
+    fn take_finished(&mut self) -> Vec<Sequence> {
+        self.inner.take_finished()
+    }
+    fn drain_inflight(&mut self) -> Vec<Sequence> {
+        self.inner.drain_inflight()
+    }
+    fn block_size(&self) -> usize {
+        self.inner.block_size()
+    }
+    fn queue_depths(&self) -> (usize, usize) {
+        self.inner.queue_depths()
+    }
+    fn enable_cache_events(&mut self) {
+        self.inner.enable_cache_events()
+    }
+    fn take_cache_events(&mut self) -> Vec<CacheEvent> {
+        self.inner.take_cache_events()
+    }
+    fn set_cache_watermarks(&mut self, wm: CacheWatermarks) {
+        self.inner.set_cache_watermarks(wm)
+    }
+    fn core_stats(&self) -> CoreStats {
+        self.inner.core_stats()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A do-nothing core for schedule unit tests.
+    struct NullCore;
+    impl ReplicaCore for NullCore {
+        fn submit(&mut self, _: Vec<u32>, _: SamplingParams)
+            -> Result<u64, ReplicaError> {
+            Ok(0)
+        }
+        fn step(&mut self) -> Result<StepOutcome, ReplicaError> {
+            Ok(StepOutcome::Idle)
+        }
+        fn has_work(&self) -> bool {
+            false
+        }
+        fn take_finished(&mut self) -> Vec<Sequence> {
+            vec![]
+        }
+        fn drain_inflight(&mut self) -> Vec<Sequence> {
+            vec![]
+        }
+        fn block_size(&self) -> usize {
+            4
+        }
+        fn queue_depths(&self) -> (usize, usize) {
+            (0, 0)
+        }
+        fn enable_cache_events(&mut self) {}
+        fn take_cache_events(&mut self) -> Vec<CacheEvent> {
+            vec![]
+        }
+        fn set_cache_watermarks(&mut self, _: CacheWatermarks) {}
+        fn core_stats(&self) -> CoreStats {
+            CoreStats::default()
+        }
+    }
+
+    #[test]
+    fn fail_on_step_k_is_permanent_and_sticky() {
+        let mut c =
+            FaultyCore::new(NullCore, FaultSpec::FailOnStepK { k: 3 });
+        assert!(c.step().is_ok());
+        assert!(c.step().is_ok());
+        let e = c.step().unwrap_err();
+        assert!(!e.is_transient());
+        assert!(c.step().is_err(), "crash must be sticky");
+    }
+
+    #[test]
+    fn fail_every_n_is_transient_and_periodic() {
+        let mut c =
+            FaultyCore::new(NullCore, FaultSpec::FailEveryN { n: 2 });
+        assert!(c.step().is_ok()); // 1
+        let e = c.step().unwrap_err(); // 2
+        assert!(e.is_transient());
+        assert!(c.step().is_ok()); // 3
+        assert!(c.step().is_err()); // 4
+    }
+
+    #[test]
+    fn transient_window_recovers() {
+        let mut c = FaultyCore::new(
+            NullCore,
+            FaultSpec::TransientThenRecover { from: 2, fails: 2 },
+        );
+        assert!(c.step().is_ok()); // 1
+        assert!(c.step().unwrap_err().is_transient()); // 2
+        assert!(c.step().unwrap_err().is_transient()); // 3
+        assert!(c.step().is_ok()); // 4: recovered
+        assert_eq!(c.steps_seen(), 4);
+    }
+
+    #[test]
+    fn fail_on_submit_leaves_steps_alone() {
+        let mut c =
+            FaultyCore::new(NullCore, FaultSpec::FailOnSubmit { k: 2 });
+        assert!(c.submit(vec![1], SamplingParams::default()).is_ok());
+        assert!(c.submit(vec![1], SamplingParams::default()).is_err());
+        assert!(c.step().is_ok());
+    }
+}

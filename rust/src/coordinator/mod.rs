@@ -18,10 +18,14 @@
 //! * [`metrics`] — TTFT / per-token latency / throughput / cache-savings
 //!   / chunk accounting.
 //! * [`replica`] — one engine bundle behind the [`replica::ReplicaCore`]
-//!   interface the multi-replica front end drives.
+//!   interface the multi-replica front end drives; fallible step/submit
+//!   ([`replica::ReplicaError`]) and the replica health states.
 //! * [`router`] — the data-parallel front end: N replicas, cache-aware
 //!   request routing over a shared content-hash directory, per-replica
-//!   stats.
+//!   stats, replica failure detection with bounded retry, in-flight
+//!   replay onto survivors, and load-shedding admission control.
+//! * [`fault`] — deterministic fault injection
+//!   ([`fault::FaultyCore`]) driving the tier-1 recovery tests.
 //!
 //! `docs/ARCHITECTURE.md` at the repo root walks one request through
 //! all of these modules end to end, with the block lifecycle diagram.
@@ -44,6 +48,7 @@
 
 pub mod block_manager;
 pub mod engine;
+pub mod fault;
 pub mod metrics;
 pub mod replica;
 pub mod router;

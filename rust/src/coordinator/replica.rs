@@ -4,23 +4,111 @@
 //!
 //! [`ReplicaCore`] is the contract: submit requests, step, drain
 //! finished sequences and prefix-cache events, report load and stats.
-//! [`Engine`] is the production core; the router property tests
+//! Both `submit` and `step` are **fallible** — a core reports a
+//! [`ReplicaError`] instead of unwinding, and the router's health
+//! machinery (quarantine, retry, replacement) decides what happens
+//! next. [`Engine`] is the production core; the router property tests
 //! implement the same trait over a deterministic fake model (scheduler
 //! + block manager only, no PJRT runtime), which is what makes the
-//! whole multi-replica stack testable in tier-1 CI without artifacts.
+//! whole multi-replica stack testable in tier-1 CI without artifacts,
+//! and [`super::fault::FaultyCore`] wraps any core with a deterministic
+//! failure schedule for the fault-injection tests.
 //!
 //! [`Replica`] wraps a core with its replica id and the router-side
-//! accounting (requests routed here), and snapshots [`ReplicaStats`]
-//! for the server's `{"cmd":"stats"}` admin endpoint and the router
-//! bench.
+//! accounting (requests routed here, health, replay counts), and
+//! snapshots [`ReplicaStats`] for the server's `{"cmd":"stats"}` /
+//! `{"cmd":"metrics"}` admin endpoints and the router bench.
 
-use anyhow::Result;
+use std::fmt;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 
 use crate::config::CacheWatermarks;
 
 use super::block_manager::{CacheEvent, CacheStats};
-use super::engine::Engine;
+use super::engine::{Engine, StepOutcome};
 use super::sequence::{SamplingParams, Sequence};
+
+/// Why a replica core refused or failed an operation. The distinction
+/// drives the router's health machine: transient errors are retried
+/// with backoff (Healthy → Quarantined), permanent errors kill the
+/// replica immediately (→ Dead, in-flight requests replayed).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ReplicaError {
+    /// The operation failed but the replica may recover (e.g. a device
+    /// hiccup); worth retrying after backoff.
+    Transient(String),
+    /// The replica is gone or its internal invariants are broken (a
+    /// caught panic, a poisoned pool); never retried.
+    Permanent(String),
+}
+
+impl ReplicaError {
+    /// Is this error worth retrying?
+    pub fn is_transient(&self) -> bool {
+        matches!(self, ReplicaError::Transient(_))
+    }
+    /// The underlying error description.
+    pub fn message(&self) -> &str {
+        match self {
+            ReplicaError::Transient(m) | ReplicaError::Permanent(m) => m,
+        }
+    }
+}
+
+impl fmt::Display for ReplicaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ReplicaError::Transient(m) => {
+                write!(f, "transient replica error: {m}")
+            }
+            ReplicaError::Permanent(m) => {
+                write!(f, "permanent replica error: {m}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ReplicaError {}
+
+/// Router-side health state of one replica (the failure lifecycle;
+/// `docs/ARCHITECTURE.md` has the diagram).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReplicaHealth {
+    /// Serving normally; routable.
+    Healthy,
+    /// Hit transient step failures; not stepped again until the router
+    /// step counter reaches `retry_at_step` (deterministic exponential
+    /// backoff), and only routed to when no healthy replica exists.
+    Quarantined {
+        /// Consecutive transient failures observed so far.
+        failures: u32,
+        /// Router step count at which the next retry is due.
+        retry_at_step: u64,
+    },
+    /// Permanently failed (or retries exhausted): never stepped or
+    /// routed to again; its in-flight requests were replayed. The slot
+    /// is kept so replica ids stay stable.
+    Dead,
+}
+
+impl ReplicaHealth {
+    /// Wire/metric spelling (`healthy` / `quarantined` / `dead`).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ReplicaHealth::Healthy => "healthy",
+            ReplicaHealth::Quarantined { .. } => "quarantined",
+            ReplicaHealth::Dead => "dead",
+        }
+    }
+    /// Is the replica permanently out of service?
+    pub fn is_dead(&self) -> bool {
+        matches!(self, ReplicaHealth::Dead)
+    }
+    /// Can the replica still serve (healthy or quarantined)?
+    pub fn is_alive(&self) -> bool {
+        !self.is_dead()
+    }
+}
 
 /// Point-in-time counters of one replica core (everything the routing
 /// policies and the stats endpoint need, cheap enough to snapshot per
@@ -60,19 +148,34 @@ impl CoreStats {
 /// production implementation; tests substitute a deterministic fake
 /// core so router behavior is tier-1-testable without PJRT artifacts.
 pub trait ReplicaCore {
-    /// Submit a request; returns the core's *local* sequence id.
-    fn submit(&mut self, prompt: Vec<u32>, params: SamplingParams) -> u64;
-    /// Execute one scheduler step.
-    fn step(&mut self) -> Result<()>;
+    /// Submit a request; returns the core's *local* sequence id, or a
+    /// [`ReplicaError`] when the core cannot accept work at all (the
+    /// router then retries on another replica).
+    fn submit(&mut self, prompt: Vec<u32>, params: SamplingParams)
+        -> Result<u64, ReplicaError>;
+    /// Execute one scheduler step. Errors instead of unwinding; the
+    /// transient/permanent split drives the router's health machine.
+    fn step(&mut self) -> Result<StepOutcome, ReplicaError>;
     /// Anything queued or in flight?
     fn has_work(&self) -> bool;
     /// Drain finished sequences (their `id` is the local id).
     fn take_finished(&mut self) -> Vec<Sequence>;
+    /// Replica teardown: remove and return every *unfinished* sequence
+    /// (with its partial output, so the router can replay it
+    /// elsewhere), releasing all pool and cache state it held. After
+    /// this the core reports no work.
+    fn drain_inflight(&mut self) -> Vec<Sequence>;
     /// KV block size in tokens — the prefix-cache hash granularity.
     /// Every replica behind one router must agree on it.
     fn block_size(&self) -> usize;
+    /// Queue depths `(waiting, running)` — the admission-control and
+    /// routing load signals.
+    fn queue_depths(&self) -> (usize, usize);
     /// Queued + running sequences (the routing load signal).
-    fn load(&self) -> usize;
+    fn load(&self) -> usize {
+        let (w, r) = self.queue_depths();
+        w + r
+    }
     /// Start recording prefix-cache events (called once on router
     /// attach; events feed the shared cache directory).
     fn enable_cache_events(&mut self);
@@ -84,12 +187,37 @@ pub trait ReplicaCore {
     fn core_stats(&self) -> CoreStats;
 }
 
-impl ReplicaCore for Engine {
-    fn submit(&mut self, prompt: Vec<u32>, params: SamplingParams) -> u64 {
-        Engine::submit(self, prompt, params)
+/// Render a caught panic payload as an error message.
+fn panic_msg(p: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        format!("panic: {s}")
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        format!("panic: {s}")
+    } else {
+        "panic: <non-string payload>".to_string()
     }
-    fn step(&mut self) -> Result<()> {
-        Engine::step(self).map(|_| ())
+}
+
+/// The production core. Internal panics (pool-invariant violations,
+/// bookkeeping bugs) are caught and surfaced as
+/// [`ReplicaError::Permanent`] instead of unwinding through the
+/// router; runtime (`anyhow`) step errors surface as
+/// [`ReplicaError::Transient`] — a device hiccup may clear, and a core
+/// whose internal state the failure corrupted will fail again and
+/// escalate to Dead through the router's bounded retries.
+impl ReplicaCore for Engine {
+    fn submit(&mut self, prompt: Vec<u32>, params: SamplingParams)
+        -> Result<u64, ReplicaError> {
+        catch_unwind(AssertUnwindSafe(|| Engine::submit(self, prompt,
+                                                        params)))
+            .map_err(|p| ReplicaError::Permanent(panic_msg(p)))
+    }
+    fn step(&mut self) -> Result<StepOutcome, ReplicaError> {
+        match catch_unwind(AssertUnwindSafe(|| Engine::step(self))) {
+            Ok(Ok(outcome)) => Ok(outcome),
+            Ok(Err(e)) => Err(ReplicaError::Transient(format!("{e:#}"))),
+            Err(p) => Err(ReplicaError::Permanent(panic_msg(p))),
+        }
     }
     fn has_work(&self) -> bool {
         Engine::has_work(self)
@@ -97,12 +225,14 @@ impl ReplicaCore for Engine {
     fn take_finished(&mut self) -> Vec<Sequence> {
         Engine::take_finished(self)
     }
+    fn drain_inflight(&mut self) -> Vec<Sequence> {
+        Engine::drain_inflight(self)
+    }
     fn block_size(&self) -> usize {
         Engine::block_size(self)
     }
-    fn load(&self) -> usize {
-        let (w, r) = self.queue_depths();
-        w + r
+    fn queue_depths(&self) -> (usize, usize) {
+        Engine::queue_depths(self)
     }
     fn enable_cache_events(&mut self) {
         Engine::enable_cache_events(self)
@@ -128,19 +258,31 @@ impl ReplicaCore for Engine {
 }
 
 /// One replica slot owned by the router: the core plus its id and the
-/// router-side routing counters.
+/// router-side routing/health accounting.
 pub struct Replica<C: ReplicaCore> {
-    /// Router-assigned replica id (index; stable for a router's life).
+    /// Router-assigned replica id (index; stable for a router's life,
+    /// even after death — the slot is kept).
     pub id: usize,
     core: C,
-    /// Requests the router has placed on this replica.
+    /// Requests the router has placed on this replica (replays onto it
+    /// included).
     pub requests_routed: usize,
+    /// Health state (owned by the router's failure handling).
+    pub health: ReplicaHealth,
+    /// In-flight requests replayed *off* this replica when it died.
+    pub replayed_out: usize,
 }
 
 impl<C: ReplicaCore> Replica<C> {
-    /// Wrap `core` as replica `id`.
+    /// Wrap `core` as replica `id` (healthy).
     pub fn new(id: usize, core: C) -> Replica<C> {
-        Replica { id, core, requests_routed: 0 }
+        Replica {
+            id,
+            core,
+            requests_routed: 0,
+            health: ReplicaHealth::Healthy,
+            replayed_out: 0,
+        }
     }
     /// The wrapped core (read-only).
     pub fn core(&self) -> &C {
@@ -155,6 +297,8 @@ impl<C: ReplicaCore> Replica<C> {
         ReplicaStats {
             id: self.id,
             requests_routed: self.requests_routed,
+            health: self.health,
+            replayed_out: self.replayed_out,
             core: self.core.core_stats(),
         }
     }
@@ -167,6 +311,10 @@ pub struct ReplicaStats {
     pub id: usize,
     /// Requests the router placed here.
     pub requests_routed: usize,
+    /// Health state at snapshot time.
+    pub health: ReplicaHealth,
+    /// In-flight requests replayed off this replica at its death.
+    pub replayed_out: usize,
     /// The core's counters at snapshot time.
     pub core: CoreStats,
 }
@@ -182,5 +330,26 @@ mod tests {
         s.cache.hits = 3;
         s.cache.misses = 1;
         assert_eq!(s.cache_hit_rate(), 0.75);
+    }
+
+    #[test]
+    fn replica_error_classification() {
+        let t = ReplicaError::Transient("device hiccup".into());
+        let p = ReplicaError::Permanent("panic: pool invariant".into());
+        assert!(t.is_transient());
+        assert!(!p.is_transient());
+        assert_eq!(t.message(), "device hiccup");
+        assert!(format!("{p}").contains("permanent"));
+    }
+
+    #[test]
+    fn health_lifecycle_spellings() {
+        assert_eq!(ReplicaHealth::Healthy.as_str(), "healthy");
+        let q = ReplicaHealth::Quarantined { failures: 1,
+                                             retry_at_step: 4 };
+        assert_eq!(q.as_str(), "quarantined");
+        assert!(q.is_alive());
+        assert!(ReplicaHealth::Dead.is_dead());
+        assert!(!ReplicaHealth::Dead.is_alive());
     }
 }

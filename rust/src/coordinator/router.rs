@@ -39,10 +39,38 @@
 //! The router assigns *global* request ids in submission order and maps
 //! them to `(replica, local id)`; finished sequences surface as
 //! [`RoutedFinish`] carrying both the global id and the replica that
-//! served it (reported on the wire as `"replica"`). A router over one
-//! replica is bit-identical to driving that replica's core directly:
-//! global ids equal local ids and `step` is a pass-through — the golden
-//! tests pin this.
+//! served it (reported on the wire as `"replica"`; `None` for requests
+//! that never reached a replica — shed, or failed with no survivor). A
+//! router over one replica is bit-identical to driving that replica's
+//! core directly: global ids equal local ids and `step` is a
+//! pass-through — the golden tests pin this.
+//!
+//! # Fault tolerance
+//!
+//! Every replica carries a [`ReplicaHealth`] state: **Healthy →
+//! Quarantined → Dead**. A transient step failure quarantines the
+//! replica with deterministic exponential backoff (measured in router
+//! steps); a successful retry restores it to Healthy, while exceeding
+//! [`RouterConfig::max_step_retries`] — or any permanent failure —
+//! kills it. Killing a replica delivers whatever it already finished,
+//! purges its entries from the cache directory (routing never scores a
+//! dead replica), then drains its in-flight sequences and **replays**
+//! each one onto a surviving replica: the re-submission's prompt is
+//! the original prompt plus the tokens already emitted, its budget is
+//! the remainder, and at finish the router stitches the stream back
+//! together — so the client sees one uninterrupted stream with no lost
+//! or duplicated tokens. Replays route through the normal policy, so
+//! cache-aware placement lands them where their prefix is warm.
+//!
+//! Admission control sheds load instead of queueing forever: a fresh
+//! submission is rejected with `FinishReason::Shed` when the global
+//! waiting budget ([`RouterConfig::max_waiting`]) is exhausted or every
+//! alive replica is at its queue cap
+//! ([`RouterConfig::max_replica_queue`]). Replays bypass shedding —
+//! they were admitted once. When no alive replica remains, requests
+//! finish with `FinishReason::ReplicaFailed`. [`Router::router_stats`]
+//! surfaces the shed/replay/retry counters and the degraded flag
+//! (exactly one alive replica left out of several).
 
 use std::collections::HashMap;
 
@@ -51,8 +79,8 @@ use anyhow::Result;
 use crate::config::{RouterConfig, RoutingPolicy};
 
 use super::block_manager::{chain_hashes, CacheEvent};
-use super::replica::{Replica, ReplicaCore, ReplicaStats};
-use super::sequence::{SamplingParams, Sequence};
+use super::replica::{Replica, ReplicaCore, ReplicaHealth, ReplicaStats};
+use super::sequence::{FinishReason, SamplingParams, Sequence};
 
 /// Read-only (to the router's policies) map from block content hash to
 /// the replicas whose prefix caches hold that block, maintained from
@@ -102,6 +130,23 @@ impl CacheDirectory {
         }
     }
 
+    /// Remove every hint for `replica` (replica death): routing must
+    /// never score a dead replica's cache again.
+    pub fn purge_replica(&mut self, replica: usize) {
+        self.map.retain(|_, ids| {
+            if let Ok(i) = ids.binary_search(&replica) {
+                ids.remove(i);
+            }
+            !ids.is_empty()
+        });
+    }
+
+    /// Does any hint still name `replica`? (Purge observability for
+    /// the recovery-invariant tests.)
+    pub fn mentions_replica(&self, replica: usize) -> bool {
+        self.map.values().any(|ids| ids.binary_search(&replica).is_ok())
+    }
+
     /// Per-replica cached-prefix length (tokens) for `tokens`, under
     /// the same rules as
     /// [`super::block_manager::BlockManager`] lookups: full
@@ -142,16 +187,54 @@ impl CacheDirectory {
 }
 
 /// A finished request as the router reports it: the router-assigned
-/// global id, the replica that served it, and the sequence (whose own
-/// `id` field is the replica-local id).
+/// global id, the replica that served it (`None` when no replica ever
+/// did — shed at admission, or failed with no survivor), and the
+/// sequence (whose own `id` field is the replica-local id).
 #[derive(Debug)]
 pub struct RoutedFinish {
     /// Router-assigned global request id (submission order).
     pub id: u64,
-    /// Replica that served the request.
-    pub replica: usize,
-    /// The finished sequence (output, finish reason, timings).
+    /// Replica that served the request; `None` for shed /
+    /// no-survivor-failed requests that never reached one.
+    pub replica: Option<usize>,
+    /// The finished sequence (output, finish reason, timings). For a
+    /// request that survived a replica death the stream is already
+    /// stitched: `output` holds pre-death and post-replay tokens in
+    /// order, `prompt` is the original prompt.
     pub seq: Sequence,
+}
+
+/// Router-level failure/shedding counters and the health roll-up —
+/// the `{"cmd":"stats"}` `"router"` object.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct RouterStats {
+    /// Fresh submissions rejected by admission control.
+    pub shed: usize,
+    /// In-flight requests replayed off dead replicas.
+    pub replayed: usize,
+    /// Retry attempts: quarantined-step retries plus failed-submit
+    /// re-placements.
+    pub retries: usize,
+    /// Requests finished `ReplicaFailed` (no survivor to take them).
+    pub replica_failed: usize,
+    /// Replicas still alive (healthy or quarantined).
+    pub alive: usize,
+    /// Replicas dead.
+    pub dead: usize,
+    /// Degraded mode: more than one replica configured, exactly one
+    /// still alive — the last line of service before total failure.
+    pub degraded: bool,
+}
+
+/// Per-global-id bookkeeping for a request replayed across a replica
+/// death: enough to stitch the client-visible stream back together.
+#[derive(Debug)]
+struct ReplayState {
+    /// Length of the *original* prompt (replay prompts are longer: the
+    /// emitted tokens ride along).
+    prompt_len: usize,
+    /// Tokens emitted before the death(s), in order.
+    emitted: Vec<u32>,
 }
 
 /// The multi-replica front end; see the module docs.
@@ -166,9 +249,17 @@ pub struct Router<C: ReplicaCore> {
     routes: HashMap<u64, (usize, u64)>,
     /// Per-replica local id → global id.
     local_to_global: Vec<HashMap<u64, u64>>,
+    /// Stream-stitching state for requests replayed across a death.
+    replays: HashMap<u64, ReplayState>,
     finished: Vec<RoutedFinish>,
     next_id: u64,
     rr_next: usize,
+    /// Router step counter (the clock quarantine backoff runs on).
+    steps: u64,
+    shed: usize,
+    replayed: usize,
+    retries: usize,
+    replica_failed: usize,
 }
 
 impl<C: ReplicaCore> Router<C> {
@@ -206,9 +297,15 @@ impl<C: ReplicaCore> Router<C> {
             block_size,
             routes: HashMap::new(),
             local_to_global: (0..n).map(|_| HashMap::new()).collect(),
+            replays: HashMap::new(),
             finished: vec![],
             next_id: 0,
             rr_next: 0,
+            steps: 0,
+            shed: 0,
+            replayed: 0,
+            retries: 0,
+            replica_failed: 0,
         }
     }
 
@@ -218,7 +315,8 @@ impl<C: ReplicaCore> Router<C> {
         Router::new(vec![core], RouterConfig::default())
     }
 
-    /// The replicas, in id order (stats, benches, tests).
+    /// The replicas, in id order (stats, benches, tests). Dead
+    /// replicas keep their slot.
     pub fn replicas(&self) -> &[Replica<C>] {
         &self.replicas
     }
@@ -227,81 +325,284 @@ impl<C: ReplicaCore> Router<C> {
     pub fn directory(&self) -> &CacheDirectory {
         &self.directory
     }
-    /// Any replica with queued or in-flight work?
+    /// Any alive replica with queued or in-flight work?
     pub fn has_work(&self) -> bool {
-        self.replicas.iter().any(|r| r.core().has_work())
+        self.replicas
+            .iter()
+            .any(|r| r.health.is_alive() && r.core().has_work())
     }
     /// Requests submitted so far (the next global id).
     pub fn requests_submitted(&self) -> u64 {
         self.next_id
     }
 
-    /// Pick a replica for `prompt` under the configured policy.
-    /// Deterministic: ties always break to the lowest replica id.
-    fn route(&mut self, prompt: &[u32]) -> usize {
-        let n = self.replicas.len();
-        if n == 1 {
-            return 0;
-        }
-        match self.rcfg.routing {
-            RoutingPolicy::RoundRobin => {
-                let r = self.rr_next;
-                self.rr_next = (self.rr_next + 1) % n;
-                r
+    /// Candidate replicas for a placement, in preference order:
+    /// healthy before quarantined, under-cap before capped (fresh
+    /// submissions only), never dead, never in `tried`. Empty when no
+    /// alive replica remains outside `tried`.
+    fn candidates(&self, fresh: bool, tried: &[usize]) -> Vec<usize> {
+        let alive: Vec<usize> = (0..self.replicas.len())
+            .filter(|&i| self.replicas[i].health.is_alive()
+                && !tried.contains(&i))
+            .collect();
+        let pick_from = |pool: &[usize]| -> Vec<usize> {
+            let healthy: Vec<usize> = pool
+                .iter()
+                .copied()
+                .filter(|&i| {
+                    self.replicas[i].health == ReplicaHealth::Healthy
+                })
+                .collect();
+            if healthy.is_empty() { pool.to_vec() } else { healthy }
+        };
+        let cap = self.rcfg.max_replica_queue;
+        if fresh && cap > 0 {
+            let under: Vec<usize> = alive
+                .iter()
+                .copied()
+                .filter(|&i| self.replicas[i].core().load() < cap)
+                .collect();
+            if !under.is_empty() {
+                return pick_from(&under);
             }
-            RoutingPolicy::LeastLoaded => self.least_loaded(),
-            RoutingPolicy::CacheAware => {
-                let hits = self.directory.prefix_hits(
-                    prompt, self.block_size, n,
-                );
-                let penalty = self.rcfg.load_penalty_tokens as i64;
-                let mut best = 0usize;
-                let mut best_score = i64::MIN;
-                for (i, r) in self.replicas.iter().enumerate() {
-                    let score = hits[i] as i64
-                        - penalty * r.core().load() as i64;
-                    if score > best_score {
-                        best = i;
-                        best_score = score;
+        }
+        pick_from(&alive)
+    }
+
+    /// Pick a replica for `prompt` from `cands` under the configured
+    /// policy. Deterministic: ties always break to the lowest replica
+    /// id. `None` iff `cands` is empty.
+    fn pick(&mut self, cands: &[usize], prompt: &[u32])
+        -> Option<usize> {
+        match cands {
+            [] => None,
+            [only] => Some(*only),
+            _ => Some(match self.rcfg.routing {
+                RoutingPolicy::RoundRobin => {
+                    let n = self.replicas.len();
+                    let r = (0..n)
+                        .map(|off| (self.rr_next + off) % n)
+                        .find(|r| cands.contains(r))
+                        .expect("cands is non-empty");
+                    self.rr_next = (r + 1) % n;
+                    r
+                }
+                RoutingPolicy::LeastLoaded => cands
+                    .iter()
+                    .copied()
+                    .min_by_key(|&i| (self.replicas[i].core().load(), i))
+                    .expect("cands is non-empty"),
+                RoutingPolicy::CacheAware => {
+                    let hits = self.directory.prefix_hits(
+                        prompt, self.block_size, self.replicas.len(),
+                    );
+                    let penalty = self.rcfg.load_penalty_tokens as i64;
+                    let mut best = cands[0];
+                    let mut best_score = i64::MIN;
+                    for &i in cands {
+                        let score = hits[i] as i64
+                            - penalty
+                                * self.replicas[i].core().load() as i64;
+                        if score > best_score {
+                            best = i;
+                            best_score = score;
+                        }
+                    }
+                    best
+                }
+            }),
+        }
+    }
+
+    /// Should a fresh submission be shed? (Replays bypass this — they
+    /// were admitted once already.)
+    fn should_shed(&self) -> bool {
+        let alive: Vec<&Replica<C>> = self
+            .replicas
+            .iter()
+            .filter(|r| r.health.is_alive())
+            .collect();
+        if alive.is_empty() {
+            return false; // that's the ReplicaFailed path, not Shed
+        }
+        if self.rcfg.max_waiting > 0 {
+            let waiting: usize =
+                alive.iter().map(|r| r.core().queue_depths().0).sum();
+            if waiting >= self.rcfg.max_waiting {
+                return true;
+            }
+        }
+        let cap = self.rcfg.max_replica_queue;
+        cap > 0 && alive.iter().all(|r| r.core().load() >= cap)
+    }
+
+    /// Finish a request that never reached a replica (shed /
+    /// no-survivor), delivering it through the normal finished path so
+    /// any replay state still stitches the stream.
+    fn finish_unrouted(&mut self, id: u64, prompt: Vec<u32>,
+                       params: SamplingParams, reason: FinishReason) {
+        let mut seq = Sequence::new(id, prompt, params);
+        seq.finish(reason);
+        self.push_finished(id, None, seq);
+    }
+
+    /// Place request `id` on some alive replica (`fresh` = a new
+    /// client submission, subject to admission control; replays pass
+    /// `false`). Retries on submit failure: a transiently failing
+    /// replica is quarantined and skipped, a permanently failing one
+    /// is killed (which replays *its* in-flight load too); when every
+    /// candidate is exhausted the request finishes `ReplicaFailed`.
+    fn place(&mut self, id: u64, prompt: Vec<u32>,
+             params: SamplingParams, fresh: bool) {
+        if fresh && self.should_shed() {
+            self.shed += 1;
+            self.finish_unrouted(id, prompt, params, FinishReason::Shed);
+            return;
+        }
+        let mut tried: Vec<usize> = vec![];
+        loop {
+            let cands = self.candidates(fresh, &tried);
+            let Some(r) = self.pick(&cands, &prompt) else {
+                self.replica_failed += 1;
+                self.finish_unrouted(id, prompt, params,
+                                     FinishReason::ReplicaFailed);
+                return;
+            };
+            match self.replicas[r]
+                .core_mut()
+                .submit(prompt.clone(), params.clone())
+            {
+                Ok(local) => {
+                    self.replicas[r].requests_routed += 1;
+                    self.routes.insert(id, (r, local));
+                    self.local_to_global[r].insert(local, id);
+                    return;
+                }
+                Err(e) => {
+                    self.retries += 1;
+                    tried.push(r);
+                    if e.is_transient() {
+                        self.note_transient(r);
+                    } else {
+                        self.kill(r);
                     }
                 }
-                best
             }
         }
     }
 
-    fn least_loaded(&self) -> usize {
-        let mut best = 0usize;
-        let mut best_load = usize::MAX;
-        for (i, r) in self.replicas.iter().enumerate() {
-            let load = r.core().load();
-            if load < best_load {
-                best = i;
-                best_load = load;
-            }
-        }
-        best
-    }
-
-    /// Submit a request: route it, place it, and return its global id.
+    /// Submit a request: admission-check it, route it, place it, and
+    /// return its global id. Over-budget submissions finish
+    /// immediately with `Shed`; with no alive replica they finish
+    /// `ReplicaFailed` (both surface through
+    /// [`Router::take_finished`]).
     pub fn submit(&mut self, prompt: Vec<u32>, params: SamplingParams)
         -> u64 {
         let id = self.next_id;
         self.next_id += 1;
-        let r = self.route(&prompt);
-        let local = self.replicas[r].core_mut().submit(prompt, params);
-        self.replicas[r].requests_routed += 1;
-        self.routes.insert(id, (r, local));
-        self.local_to_global[r].insert(local, id);
+        self.place(id, prompt, params, true);
         id
     }
 
-    /// Step every replica that has work (one engine step each, in id
-    /// order), then absorb their cache events and finished sequences.
+    /// Record a transient failure: quarantine with deterministic
+    /// exponential backoff, or kill once the bounded retries are
+    /// exhausted.
+    fn note_transient(&mut self, i: usize) {
+        let failures = match self.replicas[i].health {
+            ReplicaHealth::Quarantined { failures, .. } => failures + 1,
+            _ => 1,
+        };
+        if failures as usize > self.rcfg.max_step_retries {
+            self.kill(i);
+            return;
+        }
+        let backoff = (self.rcfg.retry_backoff_steps.max(1) as u64)
+            << (failures - 1).min(16);
+        self.replicas[i].health = ReplicaHealth::Quarantined {
+            failures,
+            retry_at_step: self.steps + backoff,
+        };
+    }
+
+    /// Kill replica `i`: deliver what it already finished, purge its
+    /// directory entries, drain its in-flight sequences, and replay
+    /// each onto a survivor (emitted tokens appended to the prompt,
+    /// budget reduced by the same amount — the stream stitches back
+    /// together at finish). Idempotent.
+    fn kill(&mut self, i: usize) {
+        if self.replicas[i].health.is_dead() {
+            return;
+        }
+        self.replicas[i].health = ReplicaHealth::Dead;
+        // responses that exist are delivered, not replayed
+        for seq in self.replicas[i].core_mut().take_finished() {
+            if let Some(gid) = self.local_to_global[i].remove(&seq.id) {
+                self.routes.remove(&gid);
+                self.push_finished(gid, Some(i), seq);
+            }
+        }
+        let inflight = self.replicas[i].core_mut().drain_inflight();
+        // teardown emits eviction events nobody will read — discard,
+        // then purge every hint so routing never scores this replica
+        self.replicas[i].core_mut().take_cache_events();
+        self.directory.purge_replica(i);
+        self.replicas[i].replayed_out += inflight.len();
+        self.replayed += inflight.len();
+        for seq in inflight {
+            let Some(gid) = self.local_to_global[i].remove(&seq.id)
+            else {
+                continue;
+            };
+            self.routes.remove(&gid);
+            let st = self.replays.entry(gid).or_insert(ReplayState {
+                prompt_len: seq.prompt.len(),
+                emitted: vec![],
+            });
+            st.emitted.extend_from_slice(&seq.output);
+            let mut params = seq.params.clone();
+            // unfinished ⇒ output < budget, so the remainder is ≥ 1
+            debug_assert!(seq.output.len() < params.max_new_tokens);
+            params.max_new_tokens -= seq.output.len();
+            self.place(gid, seq.full_tokens(), params, false);
+        }
+        self.local_to_global[i].clear();
+    }
+
+    /// Step every alive replica that has work (one engine step each,
+    /// in id order), then absorb their cache events and finished
+    /// sequences. Replica failures are handled here — quarantine,
+    /// retry, kill-and-replay — so this never propagates an error;
+    /// the `Result` stays for call-site compatibility.
     pub fn step(&mut self) -> Result<()> {
-        for r in &mut self.replicas {
-            if r.core().has_work() {
-                r.core_mut().step()?;
+        self.steps += 1;
+        for i in 0..self.replicas.len() {
+            let quarantined = match self.replicas[i].health {
+                ReplicaHealth::Dead => continue,
+                ReplicaHealth::Quarantined { retry_at_step, .. } => {
+                    if self.steps < retry_at_step {
+                        continue; // backing off
+                    }
+                    true
+                }
+                ReplicaHealth::Healthy => false,
+            };
+            if !self.replicas[i].core().has_work() {
+                if quarantined {
+                    // nothing to retry against and nothing can fail
+                    // while idle: presume recovered
+                    self.replicas[i].health = ReplicaHealth::Healthy;
+                }
+                continue;
+            }
+            if quarantined {
+                self.retries += 1;
+            }
+            match self.replicas[i].core_mut().step() {
+                Ok(_) => {
+                    self.replicas[i].health = ReplicaHealth::Healthy;
+                }
+                Err(e) if e.is_transient() => self.note_transient(i),
+                Err(_) => self.kill(i),
             }
         }
         self.absorb();
@@ -312,6 +613,9 @@ impl<C: ReplicaCore> Router<C> {
     /// sequences into the router's finished list.
     fn absorb(&mut self) {
         for i in 0..self.replicas.len() {
+            if self.replicas[i].health.is_dead() {
+                continue;
+            }
             for ev in self.replicas[i].core_mut().take_cache_events() {
                 match ev {
                     CacheEvent::Registered { hash } => {
@@ -323,18 +627,34 @@ impl<C: ReplicaCore> Router<C> {
                 }
             }
             for seq in self.replicas[i].core_mut().take_finished() {
-                let id = self.local_to_global[i]
+                let gid = self.local_to_global[i]
                     .remove(&seq.id)
                     .expect("finished sequence was never routed");
-                self.routes.remove(&id);
-                self.finished.push(RoutedFinish { id, replica: i, seq });
+                self.routes.remove(&gid);
+                self.push_finished(gid, Some(i), seq);
             }
         }
     }
 
+    /// Deliver a finished sequence, stitching the stream for requests
+    /// that were replayed across a replica death: prompt back to the
+    /// original, output = pre-death emissions ++ post-replay tokens,
+    /// budget restored to the client's.
+    fn push_finished(&mut self, id: u64, replica: Option<usize>,
+                     mut seq: Sequence) {
+        if let Some(st) = self.replays.remove(&id) {
+            seq.prompt.truncate(st.prompt_len);
+            seq.params.max_new_tokens += st.emitted.len();
+            let mut output = st.emitted;
+            output.extend_from_slice(&seq.output);
+            seq.output = output;
+        }
+        self.finished.push(RoutedFinish { id, replica, seq });
+    }
+
     /// Drain finished requests (absorbs replica state first, so
-    /// requests that finish at submission — e.g. `prompt_too_long` —
-    /// surface without an intervening step).
+    /// requests that finish at submission — e.g. `prompt_too_long` or
+    /// `shed` — surface without an intervening step).
     pub fn take_finished(&mut self) -> Vec<RoutedFinish> {
         self.absorb();
         std::mem::take(&mut self.finished)
@@ -352,9 +672,28 @@ impl<C: ReplicaCore> Router<C> {
         Ok(steps)
     }
 
-    /// Per-replica stats rows, in replica id order.
+    /// Per-replica stats rows, in replica id order (dead replicas
+    /// included — their slot and counters survive).
     pub fn stats(&self) -> Vec<ReplicaStats> {
         self.replicas.iter().map(|r| r.stats()).collect()
+    }
+
+    /// Router-level counters and the health roll-up.
+    pub fn router_stats(&self) -> RouterStats {
+        let alive = self
+            .replicas
+            .iter()
+            .filter(|r| r.health.is_alive())
+            .count();
+        RouterStats {
+            shed: self.shed,
+            replayed: self.replayed,
+            retries: self.retries,
+            replica_failed: self.replica_failed,
+            alive,
+            dead: self.replicas.len() - alive,
+            degraded: self.replicas.len() > 1 && alive == 1,
+        }
     }
 }
 
@@ -402,5 +741,21 @@ mod tests {
         assert_eq!(d.prefix_hits(&longer, bs, 2), vec![4, 4]);
         // short/empty prompts never hit
         assert_eq!(d.prefix_hits(&prompt[..1], bs, 2), vec![0, 0]);
+    }
+
+    #[test]
+    fn directory_purge_removes_every_hint() {
+        let mut d = CacheDirectory::new();
+        d.on_registered(0, 1);
+        d.on_registered(1, 1);
+        d.on_registered(1, 2);
+        assert!(d.mentions_replica(1));
+        d.purge_replica(1);
+        assert!(!d.mentions_replica(1));
+        assert!(d.mentions_replica(0));
+        // hash 2 had only replica 1: entry dropped entirely
+        assert_eq!(d.len(), 1);
+        d.purge_replica(1); // idempotent
+        assert_eq!(d.len(), 1);
     }
 }

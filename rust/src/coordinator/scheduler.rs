@@ -141,6 +141,21 @@ impl Scheduler {
         self.bm.release(id);
     }
 
+    /// Replica teardown: empty both queues, releasing every drained
+    /// sequence's blocks back to the pool, and return the drained ids
+    /// (waiting first, then running, each in queue order). The prefix
+    /// cache is left intact — the caller decides its fate.
+    pub fn drain(&mut self) -> Vec<u64> {
+        let mut ids: Vec<u64> = self.waiting.drain(..).collect();
+        ids.extend(self.running.drain(..));
+        self.preempted.clear();
+        self.dropped.clear();
+        for &id in &ids {
+            self.bm.release(id);
+        }
+        ids
+    }
+
     /// Decide the next step. `seqs` provides token content, context
     /// lengths, states, and chunk cursors.
     pub fn plan(&mut self, seqs: &HashMap<u64, Sequence>) -> StepPlan {

@@ -45,6 +45,12 @@ pub enum FinishReason {
     /// The sequence alone exceeded the KV block pool: the scheduler
     /// could not make progress even after preempting everything else.
     PoolExhausted,
+    /// Rejected at admission by the router's load-shedding policy
+    /// (per-replica queue cap or global waiting budget exceeded).
+    Shed,
+    /// The replica serving this request died and no surviving replica
+    /// could take over the replay.
+    ReplicaFailed,
 }
 
 /// Sampling parameters for one request.

@@ -7,25 +7,37 @@
 
 use crate::util::rng::Rng;
 
+/// One synthetic text domain, with its own identifier pools,
+/// punctuation density, and line structure (so its token statistics are
+/// distinguishable from the others').
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Domain {
+    /// Python-like function definitions (the paper's primary domain).
     CodePython,
+    /// Java-like static methods (Table 2 multilingual setting).
     CodeJava,
+    /// Go-like functions with tab indentation.
     CodeGo,
+    /// C++-like functions over `std::vector`.
     CodeCpp,
+    /// Pile-like running prose (Table 3 calibration-set study).
     PileProse,
+    /// C4-like noisy web text with markup fragments.
     C4Web,
 }
 
 impl Domain {
+    /// Every domain, code first (stable order used by the benches).
     pub fn all() -> [Domain; 6] {
         [Domain::CodePython, Domain::CodeJava, Domain::CodeGo,
          Domain::CodeCpp, Domain::PileProse, Domain::C4Web]
     }
+    /// Just the four code domains (the Table 2 multilingual set).
     pub fn code_domains() -> [Domain; 4] {
         [Domain::CodePython, Domain::CodeJava, Domain::CodeGo,
          Domain::CodeCpp]
     }
+    /// Short lowercase tag used in CLI flags and bench report keys.
     pub fn as_str(&self) -> &'static str {
         match self {
             Domain::CodePython => "python",

@@ -6,13 +6,17 @@ use crate::util::rng::Rng;
 
 use super::corpus::Domain;
 
+/// Number of tasks per domain — matches HumanEval's 164 problems.
 pub const NUM_TASKS: usize = 164;
 
 /// One evaluation task: a prompt the model completes greedily.
 #[derive(Debug, Clone)]
 pub struct Task {
+    /// Task index within its domain's set, `0..NUM_TASKS`.
     pub id: usize,
+    /// The code domain the prompt asks for.
     pub domain: Domain,
+    /// The comment-style task description the model completes.
     pub prompt: String,
 }
 

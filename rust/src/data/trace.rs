@@ -10,7 +10,9 @@ use crate::util::rng::Rng;
 pub struct TraceRequest {
     /// Arrival offset from trace start, seconds.
     pub at_s: f64,
+    /// Prompt length in tokens.
     pub prompt_tokens: usize,
+    /// Requested generation length in tokens.
     pub output_tokens: usize,
 }
 

@@ -29,7 +29,6 @@
 
 pub mod config;
 pub mod coordinator;
-#[allow(missing_docs)]
 pub mod data;
 #[allow(missing_docs)]
 pub mod eval;

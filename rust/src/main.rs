@@ -141,6 +141,19 @@ fn make_router(args: &mut Args, out: &pipeline::QuantOutcome,
                                0 = unbounded)");
     let low = args.opt_usize("cache-evict-low", high / 2,
                              "sliding-window low watermark (blocks)");
+    let defaults = RouterConfig::default();
+    let max_replica_queue = args.opt_usize(
+        "max-queue", defaults.max_replica_queue,
+        "per-replica queue cap before shedding (0 = unbounded)");
+    let max_waiting = args.opt_usize(
+        "max-waiting", defaults.max_waiting,
+        "global waiting budget before shedding (0 = unbounded)");
+    let max_step_retries = args.opt_usize(
+        "step-retries", defaults.max_step_retries,
+        "transient step failures tolerated before a replica is dead");
+    let retry_backoff_steps = args.opt_usize(
+        "retry-backoff", defaults.retry_backoff_steps,
+        "quarantine backoff base (router steps, doubled per failure)");
     anyhow::ensure!(replicas >= 1, "--replicas must be at least 1");
     let mut cores = Vec::with_capacity(replicas);
     for i in 0..replicas {
@@ -151,6 +164,10 @@ fn make_router(args: &mut Args, out: &pipeline::QuantOutcome,
         replicas,
         routing,
         watermarks: CacheWatermarks::new(high, low),
+        max_replica_queue,
+        max_waiting,
+        max_step_retries,
+        retry_backoff_steps,
         ..Default::default()
     }))
 }
@@ -202,7 +219,8 @@ fn cmd_serve(args: &mut Args) -> Result<()> {
     let server = Server::spawn(router, port)?;
     println!("sqplus serving on {} — {n} replica(s), {policy} routing \
               (JSON lines: {{\"prompt\":[ids],\"max_new_tokens\":n}}; \
-              admin: {{\"cmd\":\"stats\"}})", server.addr());
+              admin: {{\"cmd\":\"stats\"}}, {{\"cmd\":\"metrics\"}})",
+             server.addr());
     println!("press ctrl-c to stop");
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));

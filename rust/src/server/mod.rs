@@ -10,11 +10,23 @@
 //!     "ttft_ms": 12.3, "e2e_ms": 80.1, "cached_tokens": 0}
 //!
 //! -> {"cmd": "stats"}
-//! <- {"replicas": [{"id": 0, "requests_routed": 4, "waiting": 0,
-//!     "running": 1, "kv_occupancy": 0.03, "cache_hits": 6,
-//!     "cache_misses": 2, "cache_hit_rate": 0.75, "evictions": 0,
+//! <- {"replicas": [{"id": 0, "requests_routed": 4, "health": "healthy",
+//!     "replayed_out": 0, "waiting": 0, "running": 1,
+//!     "kv_occupancy": 0.03, "cache_hits": 6, "cache_misses": 2,
+//!     "cache_hit_rate": 0.75, "evictions": 0,
 //!     "prefill_tokens_executed": 120, "cached_prefix_tokens": 48,
-//!     "ttft_p50_steps": 2.0}]}
+//!     "ttft_p50_steps": 2.0}],
+//!     "router": {"shed": 0, "replayed": 0, "retries": 0,
+//!     "replica_failed": 0, "alive": 1, "dead": 0, "degraded": false}}
+//!
+//! -> {"cmd": "metrics"}
+//! <- # TYPE sqplus_replica_up gauge
+//!    sqplus_replica_up{replica="0",health="healthy"} 1
+//!    ...
+//!    # TYPE sqplus_router_shed_total counter
+//!    sqplus_router_shed_total 0
+//!    ...
+//!    # EOF
 //! ```
 //!
 //! `prompt` entries must be non-negative integer token ids and
@@ -22,38 +34,65 @@
 //! can never produce a token is malformed); any violation rejects the
 //! whole request with an `{"error": ...}` line — nothing is silently
 //! coerced or clamped to a different meaning. `replica` is the id of
-//! the router replica that served the request; `cached_tokens` reports
-//! how many tokens were served from that replica's shared prefix cache
-//! at the last admission (see [`crate::coordinator`] for the design:
-//! chained content hashes over full KV blocks, refcounted sharing, CoW
-//! tail block, LRU + sliding-window eviction, chunked prefill;
-//! `docs/ARCHITECTURE.md` walks a request end to end). `finish` is one
-//! of `max_tokens`, `eos`, `prompt_too_long`, or `pool_exhausted` (the
-//! request alone outgrew the KV pool).
+//! the router replica that served the request — `null` when no replica
+//! ever did (the request was shed at admission, or every replica died);
+//! `cached_tokens` reports how many tokens were served from that
+//! replica's shared prefix cache at the last admission (see
+//! [`crate::coordinator`] for the design: chained content hashes over
+//! full KV blocks, refcounted sharing, CoW tail block, LRU +
+//! sliding-window eviction, chunked prefill; `docs/ARCHITECTURE.md`
+//! walks a request end to end). `finish` is one of `max_tokens`, `eos`,
+//! `prompt_too_long`, `pool_exhausted` (the request alone outgrew the
+//! KV pool), `shed` (rejected by the router's load-shedding admission
+//! control), or `replica_failed` (the serving replica died with no
+//! survivor to replay onto). A request whose replica dies mid-stream
+//! with a survivor is replayed transparently: its response carries the
+//! full stitched token stream and the survivor's replica id.
 //!
-//! The `{"cmd": "stats"}` admin request snapshots one row per replica:
-//! queue depth (`waiting`/`running`), KV occupancy, block-level cache
-//! hit/miss/eviction counters with the derived hit rate, prefill
-//! tokens executed vs served from cache, and the TTFT-in-steps p50.
+//! The `{"cmd": "stats"}` admin request snapshots one row per replica —
+//! queue depth (`waiting`/`running`), health state, KV occupancy,
+//! block-level cache hit/miss/eviction counters with the derived hit
+//! rate, prefill tokens executed vs served from cache, the
+//! TTFT-in-steps p50, and how many in-flight requests were replayed off
+//! the replica at death — plus a `"router"` object with the shedding /
+//! replay / retry counters and the degraded flag. `{"cmd": "metrics"}`
+//! reports the same snapshot as Prometheus-style text (`# TYPE` +
+//! name-value lines, `{replica="i"}` labels), terminated by a `# EOF`
+//! line so line-based clients can frame the multi-line body.
 //!
 //! Architecture: connection threads parse requests into an inbox; the
 //! router thread (the only owner of the PJRT runtimes, which are not
 //! Sync) drains the inbox, steps every replica with work, and routes
 //! finished sequences back through per-request response channels.
+//! Connection reads carry a short timeout so an idle client can never
+//! pin its thread past shutdown: [`Server::shutdown`] raises a flag,
+//! drains in-flight work, and joins *both* service threads (accept
+//! loop included — a self-connect wakes it to observe the flag).
 
 use std::collections::HashMap;
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, ErrorKind, Write};
 use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 use anyhow::{Context, Result};
 
 use crate::coordinator::engine::Engine;
-use crate::coordinator::replica::ReplicaStats;
-use crate::coordinator::router::Router;
-use crate::coordinator::sequence::{SamplingParams, Sequence};
+use crate::coordinator::replica::{
+    CoreStats, ReplicaCore, ReplicaHealth, ReplicaStats,
+};
+use crate::coordinator::router::{Router, RouterStats};
+use crate::coordinator::sequence::{
+    FinishReason, SamplingParams, Sequence,
+};
 use crate::util::json::{self, Value};
+
+/// How long a connection thread blocks on a read before re-checking
+/// the shutdown flag. Short enough that shutdown never waits on an
+/// idle client; long enough to stay off the scheduler's hot path.
+const CONN_READ_TIMEOUT: Duration = Duration::from_millis(100);
 
 /// A parsed generation request.
 #[derive(Debug, Clone)]
@@ -69,8 +108,11 @@ pub struct Request {
 pub enum ClientRequest {
     /// `{"prompt": [...], ...}` — generate tokens.
     Generate(Request),
-    /// `{"cmd": "stats"}` — per-replica stats snapshot.
+    /// `{"cmd": "stats"}` — per-replica + router stats snapshot (JSON).
     Stats,
+    /// `{"cmd": "metrics"}` — the same snapshot as Prometheus-style
+    /// text.
+    Metrics,
 }
 
 /// Parse one generation-request line (strict: malformed prompt entries
@@ -124,6 +166,7 @@ pub fn parse_client_request(line: &str) -> Result<ClientRequest> {
     if let Some(cmd) = v.get("cmd").as_str() {
         return match cmd {
             "stats" => Ok(ClientRequest::Stats),
+            "metrics" => Ok(ClientRequest::Metrics),
             other => Err(anyhow::anyhow!("unknown cmd {other:?}")),
         };
     }
@@ -131,18 +174,17 @@ pub fn parse_client_request(line: &str) -> Result<ClientRequest> {
 }
 
 /// Serialize one finished sequence as its wire response line.
-pub fn response_json(id: u64, replica: usize, seq: &Sequence) -> String {
+/// `replica` is `None` for requests no replica ever served (shed /
+/// no-survivor failures) — reported as `"replica": null`.
+pub fn response_json(id: u64, replica: Option<usize>, seq: &Sequence)
+    -> String {
     let finish = match seq.finish {
-        Some(crate::coordinator::sequence::FinishReason::Eos) => "eos",
-        Some(crate::coordinator::sequence::FinishReason::MaxTokens) => {
-            "max_tokens"
-        }
-        Some(crate::coordinator::sequence::FinishReason::PromptTooLong) => {
-            "prompt_too_long"
-        }
-        Some(crate::coordinator::sequence::FinishReason::PoolExhausted) => {
-            "pool_exhausted"
-        }
+        Some(FinishReason::Eos) => "eos",
+        Some(FinishReason::MaxTokens) => "max_tokens",
+        Some(FinishReason::PromptTooLong) => "prompt_too_long",
+        Some(FinishReason::PoolExhausted) => "pool_exhausted",
+        Some(FinishReason::Shed) => "shed",
+        Some(FinishReason::ReplicaFailed) => "replica_failed",
         None => "unknown",
     };
     let ttft_ms = seq
@@ -155,7 +197,8 @@ pub fn response_json(id: u64, replica: usize, seq: &Sequence) -> String {
         .unwrap_or(0.0);
     Value::obj(vec![
         ("id", Value::num(id as f64)),
-        ("replica", Value::num(replica as f64)),
+        ("replica",
+         replica.map_or(Value::Null, |r| Value::num(r as f64))),
         ("tokens",
          Value::Arr(seq.output.iter().map(|&t| Value::num(t as f64))
              .collect())),
@@ -167,47 +210,243 @@ pub fn response_json(id: u64, replica: usize, seq: &Sequence) -> String {
     .to_string()
 }
 
-/// Serialize per-replica stats rows as the `{"cmd":"stats"}` response.
-pub fn stats_json(stats: &[ReplicaStats]) -> Value {
-    Value::obj(vec![(
-        "replicas",
-        Value::Arr(
-            stats
-                .iter()
-                .map(|s| {
-                    Value::obj(vec![
-                        ("id", Value::num(s.id as f64)),
-                        ("requests_routed",
-                         Value::num(s.requests_routed as f64)),
-                        ("waiting", Value::num(s.core.waiting as f64)),
-                        ("running", Value::num(s.core.running as f64)),
-                        ("kv_occupancy",
-                         Value::num(s.core.kv_occupancy)),
-                        ("cache_hits",
-                         Value::num(s.core.cache.hits as f64)),
-                        ("cache_misses",
-                         Value::num(s.core.cache.misses as f64)),
-                        ("cache_hit_rate",
-                         Value::num(s.core.cache_hit_rate())),
-                        ("evictions",
-                         Value::num(s.core.cache.evictions as f64)),
-                        ("prefill_tokens_executed",
-                         Value::num(s.core.prefill_tokens_executed
-                             as f64)),
-                        ("cached_prefix_tokens",
-                         Value::num(s.core.cached_prefix_tokens as f64)),
-                        ("ttft_p50_steps",
-                         Value::num(s.core.ttft_steps_p50)),
-                    ])
-                })
-                .collect(),
+/// Serialize the stats snapshot (per-replica rows + router counters)
+/// as the `{"cmd":"stats"}` response.
+pub fn stats_json(stats: &[ReplicaStats], router: &RouterStats)
+    -> Value {
+    Value::obj(vec![
+        (
+            "replicas",
+            Value::Arr(
+                stats
+                    .iter()
+                    .map(|s| {
+                        Value::obj(vec![
+                            ("id", Value::num(s.id as f64)),
+                            ("requests_routed",
+                             Value::num(s.requests_routed as f64)),
+                            ("health", Value::str(s.health.as_str())),
+                            ("replayed_out",
+                             Value::num(s.replayed_out as f64)),
+                            ("waiting",
+                             Value::num(s.core.waiting as f64)),
+                            ("running",
+                             Value::num(s.core.running as f64)),
+                            ("kv_occupancy",
+                             Value::num(s.core.kv_occupancy)),
+                            ("cache_hits",
+                             Value::num(s.core.cache.hits as f64)),
+                            ("cache_misses",
+                             Value::num(s.core.cache.misses as f64)),
+                            ("cache_hit_rate",
+                             Value::num(s.core.cache_hit_rate())),
+                            ("evictions",
+                             Value::num(s.core.cache.evictions as f64)),
+                            ("prefill_tokens_executed",
+                             Value::num(s.core.prefill_tokens_executed
+                                 as f64)),
+                            ("cached_prefix_tokens",
+                             Value::num(s.core.cached_prefix_tokens
+                                 as f64)),
+                            ("ttft_p50_steps",
+                             Value::num(s.core.ttft_steps_p50)),
+                        ])
+                    })
+                    .collect(),
+            ),
         ),
-    )])
+        (
+            "router",
+            Value::obj(vec![
+                ("shed", Value::num(router.shed as f64)),
+                ("replayed", Value::num(router.replayed as f64)),
+                ("retries", Value::num(router.retries as f64)),
+                ("replica_failed",
+                 Value::num(router.replica_failed as f64)),
+                ("alive", Value::num(router.alive as f64)),
+                ("dead", Value::num(router.dead as f64)),
+                ("degraded", Value::Bool(router.degraded)),
+            ]),
+        ),
+    ])
+}
+
+/// A required numeric field, as f64; errors name the missing field.
+fn req_f64(v: &Value, path: &str, key: &str) -> Result<f64> {
+    v.get(key).as_f64().with_context(|| {
+        format!("{path}.{key}: missing or not a number")
+    })
+}
+
+/// A required non-negative integer field; errors name the field.
+fn req_usize(v: &Value, path: &str, key: &str) -> Result<usize> {
+    let f = req_f64(v, path, key)?;
+    if !f.is_finite() || f < 0.0 || f.fract() != 0.0 {
+        anyhow::bail!(
+            "{path}.{key}: must be a non-negative integer (got {f})"
+        );
+    }
+    Ok(f as usize)
+}
+
+/// Decode a `{"cmd":"stats"}` response strictly: every field the
+/// encoder writes must be present with the right type, and an error
+/// names the first offending field — nothing is silently defaulted or
+/// dropped. (The derived `cache_hit_rate` is re-derivable and
+/// ignored; a `"quarantined"` health decodes with zeroed backoff
+/// bookkeeping, which the wire format does not carry.)
+pub fn decode_stats(v: &Value)
+    -> Result<(Vec<ReplicaStats>, RouterStats)> {
+    let reps = v
+        .get("replicas")
+        .as_arr()
+        .context("replicas: missing or not an array")?;
+    let mut rows = Vec::with_capacity(reps.len());
+    for (i, r) in reps.iter().enumerate() {
+        let path = format!("replicas[{i}]");
+        let health = match r.get("health").as_str().with_context(|| {
+            format!("{path}.health: missing or not a string")
+        })? {
+            "healthy" => ReplicaHealth::Healthy,
+            "quarantined" => ReplicaHealth::Quarantined {
+                failures: 0,
+                retry_at_step: 0,
+            },
+            "dead" => ReplicaHealth::Dead,
+            other => anyhow::bail!(
+                "{path}.health: unknown state {other:?}"
+            ),
+        };
+        let mut core = CoreStats {
+            waiting: req_usize(r, &path, "waiting")?,
+            running: req_usize(r, &path, "running")?,
+            kv_occupancy: req_f64(r, &path, "kv_occupancy")?,
+            prefill_tokens_executed:
+                req_usize(r, &path, "prefill_tokens_executed")?,
+            cached_prefix_tokens:
+                req_usize(r, &path, "cached_prefix_tokens")?,
+            ttft_steps_p50: req_f64(r, &path, "ttft_p50_steps")?,
+            ..Default::default()
+        };
+        core.cache.hits = req_usize(r, &path, "cache_hits")?;
+        core.cache.misses = req_usize(r, &path, "cache_misses")?;
+        core.cache.evictions = req_usize(r, &path, "evictions")?;
+        rows.push(ReplicaStats {
+            id: req_usize(r, &path, "id")?,
+            requests_routed: req_usize(r, &path, "requests_routed")?,
+            health,
+            replayed_out: req_usize(r, &path, "replayed_out")?,
+            core,
+        });
+    }
+    let ro = v.get("router");
+    if ro.as_obj().is_none() {
+        anyhow::bail!("router: missing or not an object");
+    }
+    let router = RouterStats {
+        shed: req_usize(ro, "router", "shed")?,
+        replayed: req_usize(ro, "router", "replayed")?,
+        retries: req_usize(ro, "router", "retries")?,
+        replica_failed: req_usize(ro, "router", "replica_failed")?,
+        alive: req_usize(ro, "router", "alive")?,
+        dead: req_usize(ro, "router", "dead")?,
+        degraded: ro.get("degraded").as_bool().context(
+            "router.degraded: missing or not a boolean",
+        )?,
+    };
+    Ok((rows, router))
+}
+
+/// Format a metric value like the JSON encoder does (integers without
+/// a fraction).
+fn fmt_metric(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+/// Render the stats snapshot as Prometheus-style text: one `# TYPE`
+/// line per family, `{replica="i"}`-labelled per-replica samples,
+/// unlabelled router-level samples, and a final `# EOF` line so
+/// line-based clients can frame the body.
+pub fn metrics_text(stats: &[ReplicaStats], router: &RouterStats)
+    -> String {
+    let mut out = String::new();
+    let mut family = |name: &str, kind: &str,
+                      samples: Vec<(String, f64)>| {
+        out.push_str(&format!("# TYPE {name} {kind}\n"));
+        for (labels, v) in samples {
+            out.push_str(&format!("{name}{labels} {}\n",
+                                  fmt_metric(v)));
+        }
+    };
+    let per = |f: &dyn Fn(&ReplicaStats) -> f64| -> Vec<(String, f64)> {
+        stats
+            .iter()
+            .map(|s| (format!("{{replica=\"{}\"}}", s.id), f(s)))
+            .collect()
+    };
+    family(
+        "sqplus_replica_up",
+        "gauge",
+        stats
+            .iter()
+            .map(|s| {
+                (
+                    format!("{{replica=\"{}\",health=\"{}\"}}",
+                            s.id, s.health.as_str()),
+                    if s.health.is_alive() { 1.0 } else { 0.0 },
+                )
+            })
+            .collect(),
+    );
+    family("sqplus_replica_requests_routed", "counter",
+           per(&|s| s.requests_routed as f64));
+    family("sqplus_replica_replayed_out", "counter",
+           per(&|s| s.replayed_out as f64));
+    family("sqplus_replica_waiting", "gauge",
+           per(&|s| s.core.waiting as f64));
+    family("sqplus_replica_running", "gauge",
+           per(&|s| s.core.running as f64));
+    family("sqplus_replica_kv_occupancy", "gauge",
+           per(&|s| s.core.kv_occupancy));
+    family("sqplus_replica_cache_hits", "counter",
+           per(&|s| s.core.cache.hits as f64));
+    family("sqplus_replica_cache_misses", "counter",
+           per(&|s| s.core.cache.misses as f64));
+    family("sqplus_replica_cache_evictions", "counter",
+           per(&|s| s.core.cache.evictions as f64));
+    family("sqplus_replica_prefill_tokens_executed", "counter",
+           per(&|s| s.core.prefill_tokens_executed as f64));
+    family("sqplus_replica_cached_prefix_tokens", "counter",
+           per(&|s| s.core.cached_prefix_tokens as f64));
+    family("sqplus_replica_ttft_p50_steps", "gauge",
+           per(&|s| s.core.ttft_steps_p50));
+    let single = |v: f64| vec![(String::new(), v)];
+    family("sqplus_router_shed_total", "counter",
+           single(router.shed as f64));
+    family("sqplus_router_replayed_total", "counter",
+           single(router.replayed as f64));
+    family("sqplus_router_retries_total", "counter",
+           single(router.retries as f64));
+    family("sqplus_router_replica_failed_total", "counter",
+           single(router.replica_failed as f64));
+    family("sqplus_router_replicas_alive", "gauge",
+           single(router.alive as f64));
+    family("sqplus_router_replicas_dead", "gauge",
+           single(router.dead as f64));
+    family("sqplus_router_degraded", "gauge",
+           single(if router.degraded { 1.0 } else { 0.0 }));
+    out.push_str("# EOF");
+    out
 }
 
 enum Inbox {
     Submit(Request, mpsc::Sender<String>),
     Stats(mpsc::Sender<String>),
+    Metrics(mpsc::Sender<String>),
     Shutdown,
 }
 
@@ -224,10 +463,12 @@ struct SendRouter(Router<Engine>);
 unsafe impl Send for SendRouter {}
 
 /// A running server; `addr()` gives the bound address, `shutdown()`
-/// stops the router loop after draining.
+/// stops the router loop after draining and joins every service
+/// thread.
 pub struct Server {
     addr: std::net::SocketAddr,
     inbox: mpsc::Sender<Inbox>,
+    shutdown: Arc<AtomicBool>,
     router_thread: Option<std::thread::JoinHandle<()>>,
     accept_thread: Option<std::thread::JoinHandle<()>>,
 }
@@ -239,28 +480,50 @@ impl Server {
     /// be served by wrapping it:
     /// `Server::spawn(Router::single(engine), port)`.
     pub fn spawn(router: Router<Engine>, port: u16) -> Result<Server> {
-        let listener = TcpListener::bind(("127.0.0.1", port))?;
-        let addr = listener.local_addr()?;
-        let (tx, rx) = mpsc::channel::<Inbox>();
-
-        // router loop thread (sole owner of the PJRT runtimes).
         // NB: bind the whole wrapper inside the closure — edition-2021
         // disjoint capture would otherwise capture the non-Send field.
         let boxed = SendRouter(router);
-        let router_thread = std::thread::spawn(move || {
+        Server::spawn_inner(port, move |rx| {
             let whole = boxed; // force whole-struct capture (RFC 2229)
             router_loop(whole.0, rx);
-        });
+        })
+    }
 
-        // accept loop thread
+    /// Spawn the server over any `Send` replica core — the seam the
+    /// server lifecycle tests use (a stub core needs no PJRT runtime).
+    pub fn spawn_core<C>(router: Router<C>, port: u16) -> Result<Server>
+    where
+        C: ReplicaCore + Send + 'static,
+    {
+        Server::spawn_inner(port, move |rx| router_loop(router, rx))
+    }
+
+    fn spawn_inner(
+        port: u16,
+        run_router: impl FnOnce(mpsc::Receiver<Inbox>) + Send + 'static,
+    ) -> Result<Server> {
+        let listener = TcpListener::bind(("127.0.0.1", port))?;
+        let addr = listener.local_addr()?;
+        let (tx, rx) = mpsc::channel::<Inbox>();
+        let shutdown = Arc::new(AtomicBool::new(false));
+
+        // router loop thread (sole owner of the replica cores)
+        let router_thread = std::thread::spawn(move || run_router(rx));
+
+        // accept loop thread; checks the shutdown flag per connection
+        // (shutdown() self-connects to force one more iteration)
         let tx_accept = tx.clone();
+        let flag = shutdown.clone();
         let accept_thread = std::thread::spawn(move || {
-            listener.set_nonblocking(false).ok();
             for stream in listener.incoming() {
+                if flag.load(Ordering::SeqCst) {
+                    break;
+                }
                 let Ok(stream) = stream else { break };
                 let tx = tx_accept.clone();
+                let conn_flag = flag.clone();
                 std::thread::spawn(move || {
-                    let _ = handle_conn(stream, tx);
+                    let _ = handle_conn(stream, tx, conn_flag);
                 });
             }
         });
@@ -268,6 +531,7 @@ impl Server {
         Ok(Server {
             addr,
             inbox: tx,
+            shutdown,
             router_thread: Some(router_thread),
             accept_thread: Some(accept_thread),
         })
@@ -278,42 +542,59 @@ impl Server {
         self.addr
     }
 
-    /// Stop accepting, drain in-flight requests, and join the router
-    /// thread.
+    /// Stop accepting, drain in-flight requests, and join both service
+    /// threads. Connection threads observe the flag at their next read
+    /// timeout and exit on their own — an idle client cannot pin the
+    /// process.
     pub fn shutdown(mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
         let _ = self.inbox.send(Inbox::Shutdown);
         if let Some(t) = self.router_thread.take() {
             let _ = t.join();
         }
-        // unblock the accept loop with a dummy connection
+        // unblock the accept loop so it sees the flag, then join it
         let _ = TcpStream::connect(self.addr);
         if let Some(t) = self.accept_thread.take() {
-            // the accept thread may be blocked on `incoming`; detach is
-            // fine here since the process owns it
-            drop(t);
+            let _ = t.join();
         }
     }
 }
 
-fn handle_conn(stream: TcpStream, tx: mpsc::Sender<Inbox>) -> Result<()> {
+fn handle_conn(stream: TcpStream, tx: mpsc::Sender<Inbox>,
+               shutdown: Arc<AtomicBool>) -> Result<()> {
+    // bounded reads: an idle client parks here at most one timeout
+    // interval past shutdown instead of pinning the thread forever
+    stream.set_read_timeout(Some(CONN_READ_TIMEOUT))?;
     let peer_read = stream.try_clone()?;
     let mut reader = BufReader::new(peer_read);
     let writer = Arc::new(Mutex::new(stream));
+    // read_line appends, so a line split across timeouts accumulates
+    let mut line = String::new();
     loop {
-        let mut line = String::new();
-        if reader.read_line(&mut line)? == 0 {
-            return Ok(()); // client closed
+        match reader.read_line(&mut line) {
+            Ok(0) => return Ok(()), // client closed
+            Ok(_) => {}
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock
+                                         | ErrorKind::TimedOut) => {
+                if shutdown.load(Ordering::SeqCst) {
+                    return Ok(());
+                }
+                continue;
+            }
+            Err(e) => return Err(e.into()),
         }
-        let line = line.trim();
-        if line.is_empty() {
+        let req_line = line.trim().to_string();
+        line.clear();
+        if req_line.is_empty() {
             continue;
         }
-        match parse_client_request(line) {
+        match parse_client_request(&req_line) {
             Ok(req) => {
                 let (rtx, rrx) = mpsc::channel::<String>();
                 let msg = match req {
                     ClientRequest::Generate(r) => Inbox::Submit(r, rtx),
                     ClientRequest::Stats => Inbox::Stats(rtx),
+                    ClientRequest::Metrics => Inbox::Metrics(rtx),
                 };
                 if tx.send(msg).is_err() {
                     return Ok(());
@@ -334,13 +615,14 @@ fn handle_conn(stream: TcpStream, tx: mpsc::Sender<Inbox>) -> Result<()> {
     }
 }
 
-fn router_loop(mut router: Router<Engine>, rx: mpsc::Receiver<Inbox>) {
+fn router_loop<C: ReplicaCore>(mut router: Router<C>,
+                               rx: mpsc::Receiver<Inbox>) {
     let mut pending: HashMap<u64, mpsc::Sender<String>> = HashMap::new();
     let mut shutdown = false;
     loop {
         // deliver finished responses first: a submission can finish
-        // without any engine work (e.g. prompt_too_long), and its
-        // response must go out before the loop blocks for new input
+        // without any engine work (e.g. prompt_too_long or shed), and
+        // its response must go out before the loop blocks for new input
         for fin in router.take_finished() {
             if let Some(resp) = pending.remove(&fin.id) {
                 let _ =
@@ -379,8 +661,17 @@ fn router_loop(mut router: Router<Engine>, rx: mpsc::Receiver<Inbox>) {
                     }
                 }
                 Some(Inbox::Stats(resp)) => {
-                    let _ = resp.send(stats_json(&router.stats())
-                        .to_string());
+                    let _ = resp.send(
+                        stats_json(&router.stats(),
+                                   &router.router_stats())
+                            .to_string(),
+                    );
+                }
+                Some(Inbox::Metrics(resp)) => {
+                    let _ = resp.send(metrics_text(
+                        &router.stats(),
+                        &router.router_stats(),
+                    ));
                 }
                 Some(Inbox::Shutdown) => shutdown = true,
                 None => break,
@@ -389,6 +680,8 @@ fn router_loop(mut router: Router<Engine>, rx: mpsc::Receiver<Inbox>) {
                 break;
             }
         }
+        // step() handles replica failures internally (quarantine /
+        // kill-and-replay) and only errs on router-fatal conditions
         if router.has_work() && router.step().is_err() {
             break;
         }
@@ -418,9 +711,28 @@ impl Client {
         self.roundtrip(&req)
     }
 
-    /// Request the per-replica stats snapshot.
+    /// Request the stats snapshot (JSON).
     pub fn stats(&mut self) -> Result<Value> {
         self.roundtrip(&Value::obj(vec![("cmd", Value::str("stats"))]))
+    }
+
+    /// Request the Prometheus-style metrics text (everything up to,
+    /// excluding, the `# EOF` frame line).
+    pub fn metrics(&mut self) -> Result<String> {
+        let s = self.stream.get_mut();
+        writeln!(s, "{}",
+                 Value::obj(vec![("cmd", Value::str("metrics"))]))?;
+        let mut out = String::new();
+        loop {
+            let mut line = String::new();
+            if self.stream.read_line(&mut line)? == 0 {
+                anyhow::bail!("connection closed before # EOF");
+            }
+            if line.trim_end() == "# EOF" {
+                return Ok(out);
+            }
+            out.push_str(&line);
+        }
     }
 
     fn roundtrip(&mut self, req: &Value) -> Result<Value> {
@@ -435,7 +747,10 @@ impl Client {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::replica::CoreStats;
+    use crate::config::{CacheWatermarks, RouterConfig};
+    use crate::coordinator::block_manager::CacheEvent;
+    use crate::coordinator::engine::StepOutcome;
+    use crate::coordinator::replica::ReplicaError;
 
     #[test]
     fn parse_request_fields() {
@@ -491,6 +806,8 @@ mod tests {
     fn parse_client_request_dispatches() {
         assert!(matches!(parse_client_request(r#"{"cmd":"stats"}"#),
                          Ok(ClientRequest::Stats)));
+        assert!(matches!(parse_client_request(r#"{"cmd":"metrics"}"#),
+                         Ok(ClientRequest::Metrics)));
         assert!(parse_client_request(r#"{"cmd":"reboot"}"#).is_err());
         assert!(matches!(
             parse_client_request(r#"{"prompt":[1,2]}"#),
@@ -519,14 +836,13 @@ mod tests {
 
     #[test]
     fn response_shape() {
-        use crate::coordinator::sequence::{FinishReason, Sequence};
         let mut s =
             Sequence::new(3, vec![1], SamplingParams::default());
         s.record_token(7);
         s.cached_prefix_len = 4;
         s.finish(FinishReason::MaxTokens);
         // global id 11 on replica 1 (seq.id is the replica-local id)
-        let j = response_json(11, 1, &s);
+        let j = response_json(11, Some(1), &s);
         let v = json::parse(&j).unwrap();
         assert_eq!(v.get("id").as_usize(), Some(11));
         assert_eq!(v.get("replica").as_usize(), Some(1));
@@ -536,7 +852,23 @@ mod tests {
     }
 
     #[test]
-    fn stats_json_roundtrip() {
+    fn response_shape_for_unrouted_finishes() {
+        // shed / no-survivor responses carry no replica: null on the
+        // wire, not 0 (which is a real replica id)
+        let mut s =
+            Sequence::new(0, vec![1, 2], SamplingParams::default());
+        s.finish(FinishReason::Shed);
+        let v = json::parse(&response_json(5, None, &s)).unwrap();
+        assert_eq!(*v.get("replica"), Value::Null);
+        assert_eq!(v.get("finish").as_str(), Some("shed"));
+        let mut s =
+            Sequence::new(0, vec![1, 2], SamplingParams::default());
+        s.finish(FinishReason::ReplicaFailed);
+        let v = json::parse(&response_json(6, None, &s)).unwrap();
+        assert_eq!(v.get("finish").as_str(), Some("replica_failed"));
+    }
+
+    fn sample_rows() -> (Vec<ReplicaStats>, RouterStats) {
         let mut core = CoreStats {
             waiting: 2,
             running: 3,
@@ -550,19 +882,45 @@ mod tests {
         core.cached_prefix_tokens = 48;
         core.ttft_steps_p50 = 2.5;
         let rows = vec![
-            ReplicaStats { id: 0, requests_routed: 4, core },
+            ReplicaStats {
+                id: 0,
+                requests_routed: 4,
+                health: ReplicaHealth::Healthy,
+                replayed_out: 0,
+                core,
+            },
             ReplicaStats {
                 id: 1,
-                requests_routed: 0,
+                requests_routed: 2,
+                health: ReplicaHealth::Dead,
+                replayed_out: 3,
                 core: CoreStats::default(),
             },
         ];
-        let v = json::parse(&stats_json(&rows).to_string()).unwrap();
+        let router = RouterStats {
+            shed: 5,
+            replayed: 3,
+            retries: 7,
+            replica_failed: 1,
+            alive: 1,
+            dead: 1,
+            degraded: true,
+        };
+        (rows, router)
+    }
+
+    #[test]
+    fn stats_json_roundtrip() {
+        let (rows, router) = sample_rows();
+        let v = json::parse(&stats_json(&rows, &router).to_string())
+            .unwrap();
         let reps = v.get("replicas").as_arr().unwrap();
         assert_eq!(reps.len(), 2);
         let r0 = &reps[0];
         assert_eq!(r0.get("id").as_usize(), Some(0));
         assert_eq!(r0.get("requests_routed").as_usize(), Some(4));
+        assert_eq!(r0.get("health").as_str(), Some("healthy"));
+        assert_eq!(r0.get("replayed_out").as_usize(), Some(0));
         assert_eq!(r0.get("waiting").as_usize(), Some(2));
         assert_eq!(r0.get("running").as_usize(), Some(3));
         assert_eq!(r0.get("kv_occupancy").as_f64(), Some(0.5));
@@ -576,6 +934,210 @@ mod tests {
         assert_eq!(r0.get("ttft_p50_steps").as_f64(), Some(2.5));
         let r1 = &reps[1];
         assert_eq!(r1.get("id").as_usize(), Some(1));
+        assert_eq!(r1.get("health").as_str(), Some("dead"));
+        assert_eq!(r1.get("replayed_out").as_usize(), Some(3));
         assert_eq!(r1.get("cache_hit_rate").as_f64(), Some(0.0));
+        let ro = v.get("router");
+        assert_eq!(ro.get("shed").as_usize(), Some(5));
+        assert_eq!(ro.get("replayed").as_usize(), Some(3));
+        assert_eq!(ro.get("retries").as_usize(), Some(7));
+        assert_eq!(ro.get("replica_failed").as_usize(), Some(1));
+        assert_eq!(ro.get("alive").as_usize(), Some(1));
+        assert_eq!(ro.get("dead").as_usize(), Some(1));
+        assert_eq!(ro.get("degraded").as_bool(), Some(true));
+    }
+
+    #[test]
+    fn decode_stats_inverts_the_encoder() {
+        let (rows, router) = sample_rows();
+        let v = json::parse(&stats_json(&rows, &router).to_string())
+            .unwrap();
+        let (drows, drouter) = decode_stats(&v).unwrap();
+        assert_eq!(drouter, router);
+        assert_eq!(drows.len(), rows.len());
+        for (d, r) in drows.iter().zip(&rows) {
+            assert_eq!(d.id, r.id);
+            assert_eq!(d.requests_routed, r.requests_routed);
+            assert_eq!(d.health.as_str(), r.health.as_str());
+            assert_eq!(d.replayed_out, r.replayed_out);
+            assert_eq!(d.core.waiting, r.core.waiting);
+            assert_eq!(d.core.running, r.core.running);
+            assert_eq!(d.core.kv_occupancy, r.core.kv_occupancy);
+            assert_eq!(d.core.cache.hits, r.core.cache.hits);
+            assert_eq!(d.core.cache.misses, r.core.cache.misses);
+            assert_eq!(d.core.cache.evictions, r.core.cache.evictions);
+            assert_eq!(d.core.prefill_tokens_executed,
+                       r.core.prefill_tokens_executed);
+            assert_eq!(d.core.cached_prefix_tokens,
+                       r.core.cached_prefix_tokens);
+            assert_eq!(d.core.ttft_steps_p50, r.core.ttft_steps_p50);
+        }
+    }
+
+    #[test]
+    fn decode_stats_rejects_malformed_input() {
+        // strict: a missing or mistyped field errors (naming it),
+        // instead of being silently defaulted
+        let (rows, router) = sample_rows();
+        let good = stats_json(&rows, &router).to_string();
+        // no replicas array at all
+        let e = decode_stats(&json::parse(r#"{}"#).unwrap())
+            .unwrap_err();
+        assert!(format!("{e:#}").contains("replicas"));
+        // drop one per-replica field
+        let broken = good.replacen(r#""waiting":2,"#, "", 1);
+        let e = decode_stats(&json::parse(&broken).unwrap())
+            .unwrap_err();
+        assert!(format!("{e:#}").contains("replicas[0].waiting"));
+        // mistype a router field
+        let broken = good.replacen(r#""shed":5"#, r#""shed":"5""#, 1);
+        let e = decode_stats(&json::parse(&broken).unwrap())
+            .unwrap_err();
+        assert!(format!("{e:#}").contains("router.shed"));
+        // unknown health state
+        let broken =
+            good.replacen(r#""health":"dead""#, r#""health":"zombie""#, 1);
+        let e = decode_stats(&json::parse(&broken).unwrap())
+            .unwrap_err();
+        assert!(format!("{e:#}").contains("health"));
+        // drop the router object
+        let broken = json::parse(&good).unwrap();
+        let mut o = broken.as_obj().unwrap().clone();
+        o.remove("router");
+        let e = decode_stats(&Value::Obj(o)).unwrap_err();
+        assert!(format!("{e:#}").contains("router"));
+    }
+
+    #[test]
+    fn metrics_text_shape() {
+        let (rows, router) = sample_rows();
+        let text = metrics_text(&rows, &router);
+        assert!(text
+            .contains("# TYPE sqplus_replica_waiting gauge\n"));
+        assert!(text
+            .contains("sqplus_replica_waiting{replica=\"0\"} 2\n"));
+        assert!(text.contains(
+            "sqplus_replica_up{replica=\"0\",health=\"healthy\"} 1\n"
+        ));
+        assert!(text.contains(
+            "sqplus_replica_up{replica=\"1\",health=\"dead\"} 0\n"
+        ));
+        assert!(text
+            .contains("sqplus_replica_replayed_out{replica=\"1\"} 3\n"));
+        assert!(text.contains("sqplus_router_shed_total 5\n"));
+        assert!(text.contains("sqplus_router_degraded 1\n"));
+        assert!(text
+            .contains("sqplus_replica_ttft_p50_steps{replica=\"0\"} 2.5\n"));
+        // framed for line-based clients
+        assert!(text.ends_with("# EOF"));
+        // every non-comment line is `name{labels} value`
+        for l in text.lines().filter(|l| !l.starts_with('#')) {
+            assert!(l.rsplit_once(' ').is_some(), "bad sample: {l}");
+        }
+    }
+
+    /// A stub core that finishes every request at submission (echoing
+    /// one token) — enough to drive the full server lifecycle without
+    /// a PJRT runtime.
+    struct EchoCore {
+        next: u64,
+        finished: Vec<Sequence>,
+    }
+    impl EchoCore {
+        fn new() -> EchoCore {
+            EchoCore { next: 0, finished: vec![] }
+        }
+    }
+    impl ReplicaCore for EchoCore {
+        fn submit(&mut self, prompt: Vec<u32>, params: SamplingParams)
+            -> Result<u64, ReplicaError> {
+            let id = self.next;
+            self.next += 1;
+            let first = prompt.first().copied().unwrap_or(0);
+            let mut seq = Sequence::new(id, prompt, params);
+            seq.record_token(first);
+            seq.finish(FinishReason::MaxTokens);
+            self.finished.push(seq);
+            Ok(id)
+        }
+        fn step(&mut self) -> Result<StepOutcome, ReplicaError> {
+            Ok(StepOutcome::Idle)
+        }
+        fn has_work(&self) -> bool {
+            false
+        }
+        fn take_finished(&mut self) -> Vec<Sequence> {
+            std::mem::take(&mut self.finished)
+        }
+        fn drain_inflight(&mut self) -> Vec<Sequence> {
+            vec![]
+        }
+        fn block_size(&self) -> usize {
+            4
+        }
+        fn queue_depths(&self) -> (usize, usize) {
+            (0, 0)
+        }
+        fn enable_cache_events(&mut self) {}
+        fn take_cache_events(&mut self) -> Vec<CacheEvent> {
+            vec![]
+        }
+        fn set_cache_watermarks(&mut self, _: CacheWatermarks) {}
+        fn core_stats(&self) -> CoreStats {
+            CoreStats::default()
+        }
+    }
+
+    fn echo_router() -> Router<EchoCore> {
+        Router::new(vec![EchoCore::new()], RouterConfig::default())
+    }
+
+    #[test]
+    fn server_round_trips_and_shuts_down_with_idle_connection() {
+        let server = Server::spawn_core(echo_router(), 0).unwrap();
+        let addr = server.addr();
+        let mut c = Client::connect(addr).unwrap();
+        let v = c.request(&[7, 8, 9], 4).unwrap();
+        assert_eq!(v.get("finish").as_str(), Some("max_tokens"));
+        assert_eq!(v.get("replica").as_usize(), Some(0));
+        assert_eq!(v.get("tokens").as_arr().unwrap().len(), 1);
+        // a second, never-used connection stays idle through shutdown:
+        // the regression this pins is shutdown() hanging on (or
+        // leaking) the accept loop and timeout-less reader threads
+        let _idle = Client::connect(addr).unwrap();
+        let (tx, rx) = mpsc::channel();
+        std::thread::spawn(move || {
+            server.shutdown();
+            let _ = tx.send(());
+        });
+        assert!(
+            rx.recv_timeout(Duration::from_secs(30)).is_ok(),
+            "shutdown hung with an idle connection open"
+        );
+        drop(c);
+    }
+
+    #[test]
+    fn server_stats_and_metrics_over_the_wire() {
+        let server = Server::spawn_core(echo_router(), 0).unwrap();
+        let mut c = Client::connect(server.addr()).unwrap();
+        c.request(&[1, 2], 2).unwrap();
+        let v = c.stats().unwrap();
+        let (rows, router) = decode_stats(&v).unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].requests_routed, 1);
+        assert_eq!(rows[0].health.as_str(), "healthy");
+        assert_eq!(router.alive, 1);
+        assert!(!router.degraded);
+        let text = c.metrics().unwrap();
+        assert!(text.contains(
+            "sqplus_replica_requests_routed{replica=\"0\"} 1\n"
+        ));
+        assert!(text.contains("sqplus_router_replicas_alive 1\n"));
+        assert!(!text.contains("# EOF"), "frame line must be stripped");
+        // the same connection still serves generation afterwards
+        let v = c.request(&[3], 1).unwrap();
+        assert_eq!(v.get("finish").as_str(), Some("max_tokens"));
+        server.shutdown();
     }
 }

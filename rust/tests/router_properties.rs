@@ -20,17 +20,28 @@
 //!   cached-but-unreferenced block count at/below the high watermark
 //!   for the whole run and never breaks block conservation
 //!   (randomized);
-//! * the `{"cmd":"stats"}` payload round-trips the per-replica rows.
+//! * the `{"cmd":"stats"}` payload round-trips the per-replica rows;
+//! * **fault tolerance** (via [`FaultyCore`]'s deterministic failure
+//!   schedules): a replica crashing permanently mid-stream loses no
+//!   request and duplicates no token — its in-flight load replays onto
+//!   the survivor and every stream stays bit-identical to the
+//!   fault-free run; transient failures quarantine with backoff and
+//!   recover; exhausted retries escalate to Dead; failed submits
+//!   reroute; admission control sheds over-budget load with the `shed`
+//!   finish reason; and a randomized fault-injection sweep holds all
+//!   of the recovery invariants at once.
 
 use std::collections::HashMap;
-
-use anyhow::Result;
 
 use sqplus::config::{
     CacheWatermarks, EngineConfig, RouterConfig, RoutingPolicy,
 };
 use sqplus::coordinator::block_manager::{BlockManager, CacheEvent};
-use sqplus::coordinator::replica::{CoreStats, ReplicaCore};
+use sqplus::coordinator::engine::StepOutcome;
+use sqplus::coordinator::fault::{FaultSpec, FaultyCore};
+use sqplus::coordinator::replica::{
+    CoreStats, ReplicaCore, ReplicaError, ReplicaHealth,
+};
 use sqplus::coordinator::router::{RoutedFinish, Router};
 use sqplus::coordinator::scheduler::Scheduler;
 use sqplus::coordinator::sequence::{
@@ -42,8 +53,8 @@ use sqplus::util::rng::Rng;
 
 /// Deterministic fake model: the next token is a pure function of the
 /// content so far — so token streams cannot depend on routing,
-/// chunking, preemption, or batching, and any divergence is a real
-/// scheduling bug.
+/// chunking, preemption, batching, or *replica replay*, and any
+/// divergence is a real scheduling/recovery bug.
 fn fake_next_token(content: &[u32]) -> u32 {
     let mut h = 0xcbf2_9ce4_8422_2325u64;
     for &t in content {
@@ -89,15 +100,15 @@ impl FakeCore {
 
 impl ReplicaCore for FakeCore {
     fn submit(&mut self, prompt: Vec<u32>, params: SamplingParams)
-        -> u64 {
+        -> Result<u64, ReplicaError> {
         let id = self.next_id;
         self.next_id += 1;
         self.seqs.insert(id, Sequence::new(id, prompt, params));
         self.sched.add(id);
-        id
+        Ok(id)
     }
 
-    fn step(&mut self) -> Result<()> {
+    fn step(&mut self) -> Result<StepOutcome, ReplicaError> {
         let plan = self.sched.plan(&self.seqs);
         for v in self.sched.preempted.clone() {
             let q = self.seqs.get_mut(&v).unwrap();
@@ -113,6 +124,8 @@ impl ReplicaCore for FakeCore {
                 self.finished.push(q);
             }
         }
+        let mut chunk_tokens = 0;
+        let mut completed_prefills = 0;
         for c in &plan.chunks {
             let toks = self.seqs[&c.id].full_tokens();
             {
@@ -124,9 +137,11 @@ impl ReplicaCore for FakeCore {
                 }
             }
             self.prefill_tokens_executed += c.end - c.start;
+            chunk_tokens += c.end - c.start;
             self.sched.bm.register_prefix(c.id, &toks[..c.end]);
             let q = self.seqs.get_mut(&c.id).unwrap();
             if c.end == toks.len() {
+                completed_prefills += 1;
                 q.state = SeqState::Running;
                 q.record_token(fake_next_token(&toks));
                 self.finish_if_done(c.id);
@@ -134,12 +149,21 @@ impl ReplicaCore for FakeCore {
                 q.state = SeqState::Prefilling;
             }
         }
+        let decoded = plan.decode.len();
         for id in plan.decode.clone() {
             let q = self.seqs.get_mut(&id).unwrap();
             q.record_token(fake_next_token(&q.full_tokens()));
             self.finish_if_done(id);
         }
-        Ok(())
+        if chunk_tokens == 0 && decoded == 0 {
+            Ok(StepOutcome::Idle)
+        } else {
+            Ok(StepOutcome::Ran {
+                chunk_tokens,
+                completed_prefills,
+                decoded,
+            })
+        }
     }
 
     fn has_work(&self) -> bool {
@@ -148,11 +172,20 @@ impl ReplicaCore for FakeCore {
     fn take_finished(&mut self) -> Vec<Sequence> {
         std::mem::take(&mut self.finished)
     }
+    fn drain_inflight(&mut self) -> Vec<Sequence> {
+        self.sched.drain();
+        let mut out: Vec<Sequence> =
+            self.seqs.drain().map(|(_, s)| s).collect();
+        self.sched.bm.clear_cache();
+        self.sched.bm.take_evicted();
+        out.sort_by_key(|s| s.id);
+        out
+    }
     fn block_size(&self) -> usize {
         self.sched.bm.block_size
     }
-    fn load(&self) -> usize {
-        self.sched.waiting_len() + self.sched.running_len()
+    fn queue_depths(&self) -> (usize, usize) {
+        (self.sched.waiting_len(), self.sched.running_len())
     }
     fn enable_cache_events(&mut self) {
         self.sched.bm.enable_cache_events = true;
@@ -202,6 +235,12 @@ fn prompt(rng: &mut Rng, prefixes: &[Vec<u32>], uniq: u32) -> Vec<u32> {
     p
 }
 
+/// A never-failing fault wrapper — the control arm, type-compatible
+/// with the faulty replicas in the same router.
+fn stable(core: FakeCore) -> FaultyCore<FakeCore> {
+    FaultyCore::new(core, FaultSpec::FailOnStepK { k: usize::MAX })
+}
+
 /// Deterministic submission schedule: request `i` is submitted before
 /// step `3 * i`, with a per-request token budget. The same schedule is
 /// replayable against a bare core or any router.
@@ -224,7 +263,8 @@ fn run_bare(mut core: FakeCore, sched: &[(usize, Vec<u32>, usize)])
             core.submit(p.clone(), SamplingParams {
                 max_new_tokens: *max_new,
                 ..Default::default()
-            });
+            })
+            .unwrap();
             next += 1;
         }
         core.step().unwrap();
@@ -241,9 +281,16 @@ fn run_bare(mut core: FakeCore, sched: &[(usize, Vec<u32>, usize)])
 }
 
 /// Drive a router through the same schedule; streams by global id.
-fn run_router(mut router: Router<FakeCore>,
-              sched: &[(usize, Vec<u32>, usize)])
-    -> (Vec<(u64, Vec<u32>, Option<FinishReason>)>, Vec<RoutedFinish>) {
+/// Returns the router too, so tests can inspect post-run health,
+/// directory, and stats state.
+fn run_router<C: ReplicaCore>(
+    mut router: Router<C>,
+    sched: &[(usize, Vec<u32>, usize)],
+) -> (
+    Vec<(u64, Vec<u32>, Option<FinishReason>)>,
+    Vec<RoutedFinish>,
+    Router<C>,
+) {
     let mut fins: Vec<RoutedFinish> = vec![];
     let mut next = 0usize;
     for step in 0..10_000 {
@@ -267,7 +314,7 @@ fn run_router(mut router: Router<FakeCore>,
         .map(|f| (f.id, f.seq.output.clone(), f.seq.finish))
         .collect();
     out.sort_by_key(|(id, _, _)| *id);
-    (out, fins)
+    (out, fins, router)
 }
 
 #[test]
@@ -286,9 +333,9 @@ fn router_n1_bit_identical_to_bare_core() {
         vec![FakeCore::new(ecfg(bs), 256)],
         RouterConfig::default(),
     );
-    let (routed, fins) = run_router(router, &sched);
+    let (routed, fins, _) = run_router(router, &sched);
     assert_eq!(bare, routed, "N=1 router diverged from bare core");
-    assert!(fins.iter().all(|f| f.replica == 0));
+    assert!(fins.iter().all(|f| f.replica == Some(0)));
     // local ids equal global ids through a single replica
     assert!(fins.iter().all(|f| f.id == f.seq.id));
 }
@@ -313,16 +360,323 @@ fn router_n2_streams_match_single_core() {
                  FakeCore::new(ecfg(bs), 256)],
             RouterConfig { routing, ..Default::default() },
         );
-        let (routed, fins) = run_router(router, &sched);
+        let (routed, fins, _) = run_router(router, &sched);
         assert_eq!(bare, routed,
                    "N=2 {} diverged from single core",
                    routing.as_str());
         // with round-robin both replicas must actually serve traffic
         if routing == RoutingPolicy::RoundRobin {
-            assert!(fins.iter().any(|f| f.replica == 0));
-            assert!(fins.iter().any(|f| f.replica == 1));
+            assert!(fins.iter().any(|f| f.replica == Some(0)));
+            assert!(fins.iter().any(|f| f.replica == Some(1)));
         }
     }
+}
+
+#[test]
+fn replica_death_midstream_replays_without_token_loss() {
+    // THE fault-tolerance acceptance golden: N=2 round-robin router;
+    // replica 1 crashes permanently on its 2nd step — mid-stream for
+    // the request it was decoding (one token already emitted). Every
+    // submitted request still completes exactly once, every stream is
+    // bit-identical to the fault-free bare-core run (no lost or
+    // duplicated tokens across the replay), and the final stats report
+    // exactly one dead replica with its in-flight count replayed.
+    let bs = 4;
+    let prefixes = shared_prefixes(bs);
+    let mut rng = Rng::new(0xdead);
+    let prompts: Vec<Vec<u32>> =
+        (0..14u32).map(|i| prompt(&mut rng, &prefixes, i)).collect();
+    let sched = schedule(&prompts);
+    let bare = run_bare(FakeCore::new(ecfg(bs), 256), &sched);
+    let router = Router::new(
+        vec![
+            stable(FakeCore::new(ecfg(bs), 256)),
+            FaultyCore::new(FakeCore::new(ecfg(bs), 256),
+                            FaultSpec::FailOnStepK { k: 2 }),
+        ],
+        RouterConfig {
+            routing: RoutingPolicy::RoundRobin,
+            ..Default::default()
+        },
+    );
+    let (routed, fins, router) = run_router(router, &sched);
+    // no request lost, none answered twice
+    let mut ids: Vec<u64> = fins.iter().map(|f| f.id).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), sched.len(), "lost or duplicated requests");
+    // streams bit-identical to the fault-free run — replays continued
+    // exactly where the dead replica stopped
+    assert_eq!(bare, routed, "streams diverged across a replica death");
+    // exactly one dead replica, its in-flight load replayed
+    let rs = router.router_stats();
+    assert_eq!((rs.alive, rs.dead), (1, 1));
+    assert!(rs.degraded, "1-of-2 alive must surface as degraded");
+    assert!(rs.replayed > 0, "death happened with nothing in flight");
+    assert_eq!(router.replicas()[1].replayed_out, rs.replayed);
+    assert!(router.replicas()[1].health.is_dead());
+    assert_eq!(rs.shed, 0);
+    assert_eq!(rs.replica_failed, 0);
+    // routing never scores the dead replica's cache again
+    assert!(!router.directory().mentions_replica(1));
+    // the mid-stream victim (request 1, round-robin's second pick)
+    // finished on the survivor with its full budget honored
+    let f1 = fins.iter().find(|f| f.id == 1).unwrap();
+    assert_eq!(f1.replica, Some(0));
+    assert_eq!(f1.seq.output.len(), sched[1].2);
+}
+
+#[test]
+fn transient_failures_quarantine_then_recover() {
+    // A brown-out (2 consecutive transient step failures) quarantines
+    // the replica with backoff; the retry succeeds, the replica
+    // returns to Healthy, nothing dies, and no stream is perturbed.
+    let bs = 4;
+    let prefixes = shared_prefixes(bs);
+    let mut rng = Rng::new(0x7777);
+    let prompts: Vec<Vec<u32>> =
+        (0..10u32).map(|i| prompt(&mut rng, &prefixes, i)).collect();
+    let sched = schedule(&prompts);
+    let bare = run_bare(FakeCore::new(ecfg(bs), 256), &sched);
+    let router = Router::new(
+        vec![
+            stable(FakeCore::new(ecfg(bs), 256)),
+            FaultyCore::new(
+                FakeCore::new(ecfg(bs), 256),
+                FaultSpec::TransientThenRecover { from: 2, fails: 2 },
+            ),
+        ],
+        RouterConfig {
+            routing: RoutingPolicy::RoundRobin,
+            max_step_retries: 3,
+            retry_backoff_steps: 1,
+            ..Default::default()
+        },
+    );
+    let (routed, _, router) = run_router(router, &sched);
+    assert_eq!(bare, routed, "brown-out perturbed the streams");
+    let rs = router.router_stats();
+    assert_eq!(rs.dead, 0, "a recoverable brown-out must not kill");
+    assert_eq!(rs.replayed, 0);
+    assert!(rs.retries >= 1, "quarantine retries were never counted");
+    assert!(!rs.degraded);
+    assert!(router
+        .replicas()
+        .iter()
+        .all(|r| r.health == ReplicaHealth::Healthy));
+}
+
+#[test]
+fn exhausted_retries_escalate_to_dead() {
+    // A replica failing transiently on *every* step exhausts the retry
+    // budget and is killed — with its in-flight load replayed, so the
+    // trace still completes bit-identically.
+    let bs = 4;
+    let prefixes = shared_prefixes(bs);
+    let mut rng = Rng::new(0x5150);
+    let prompts: Vec<Vec<u32>> =
+        (0..10u32).map(|i| prompt(&mut rng, &prefixes, i)).collect();
+    let sched = schedule(&prompts);
+    let bare = run_bare(FakeCore::new(ecfg(bs), 256), &sched);
+    let router = Router::new(
+        vec![
+            stable(FakeCore::new(ecfg(bs), 256)),
+            FaultyCore::new(FakeCore::new(ecfg(bs), 256),
+                            FaultSpec::FailEveryN { n: 1 }),
+        ],
+        RouterConfig {
+            routing: RoutingPolicy::RoundRobin,
+            max_step_retries: 1,
+            retry_backoff_steps: 1,
+            ..Default::default()
+        },
+    );
+    let (routed, _, router) = run_router(router, &sched);
+    assert_eq!(bare, routed);
+    let rs = router.router_stats();
+    assert_eq!(rs.dead, 1, "exhausted retries must escalate to Dead");
+    assert!(rs.retries >= 1);
+    assert!(rs.replayed >= 1, "the stuck replica's queue must replay");
+    assert!(router.replicas()[1].health.is_dead());
+    assert!(!router.directory().mentions_replica(1));
+}
+
+#[test]
+fn submit_failure_reroutes_to_survivor() {
+    let bs = 4;
+    let p: Vec<u32> = (0..10).collect();
+    let params = SamplingParams {
+        max_new_tokens: 3,
+        ..Default::default()
+    };
+    // round-robin picks replica 0 first; its submit fails permanently,
+    // so it is killed and the request lands on replica 1 instead
+    let mut router = Router::new(
+        vec![
+            FaultyCore::new(FakeCore::new(ecfg(bs), 256),
+                            FaultSpec::FailOnSubmit { k: 1 }),
+            stable(FakeCore::new(ecfg(bs), 256)),
+        ],
+        RouterConfig {
+            routing: RoutingPolicy::RoundRobin,
+            ..Default::default()
+        },
+    );
+    router.submit(p.clone(), params.clone());
+    router.run_to_completion(1000).unwrap();
+    let fins = router.take_finished();
+    assert_eq!(fins.len(), 1);
+    assert_eq!(fins[0].replica, Some(1));
+    assert!(matches!(fins[0].seq.finish,
+                     Some(FinishReason::MaxTokens)));
+    let rs = router.router_stats();
+    assert_eq!(rs.dead, 1);
+    assert!(rs.retries >= 1, "a failed submit is a counted retry");
+    assert_eq!(rs.replica_failed, 0);
+
+    // ...and with no survivor at all, the request fails cleanly with
+    // `replica_failed` instead of hanging a client forever
+    let mut router = Router::new(
+        vec![FaultyCore::new(FakeCore::new(ecfg(bs), 256),
+                             FaultSpec::FailOnSubmit { k: 1 })],
+        RouterConfig::default(),
+    );
+    let id = router.submit(p, params);
+    let fins = router.take_finished();
+    assert_eq!(fins.len(), 1);
+    assert_eq!(fins[0].id, id);
+    assert_eq!(fins[0].replica, None);
+    assert!(matches!(fins[0].seq.finish,
+                     Some(FinishReason::ReplicaFailed)));
+    assert_eq!(router.router_stats().replica_failed, 1);
+}
+
+#[test]
+fn admission_control_sheds_over_budget_load() {
+    let bs = 4;
+    let p: Vec<u32> = (0..8).collect();
+    let params = SamplingParams {
+        max_new_tokens: 2,
+        ..Default::default()
+    };
+    // global waiting budget: the third submission (2 already waiting)
+    // sheds immediately — empty output, no replica, `shed` finish
+    let mut router = Router::new(
+        vec![FakeCore::new(ecfg(bs), 256)],
+        RouterConfig { max_waiting: 2, ..Default::default() },
+    );
+    for _ in 0..3 {
+        router.submit(p.clone(), params.clone());
+    }
+    let fins = router.take_finished();
+    assert_eq!(fins.len(), 1, "third submission must shed");
+    assert_eq!(fins[0].id, 2);
+    assert_eq!(fins[0].replica, None);
+    assert!(matches!(fins[0].seq.finish, Some(FinishReason::Shed)));
+    assert!(fins[0].seq.output.is_empty());
+    assert_eq!(router.router_stats().shed, 1);
+    // the two admitted requests still complete normally
+    router.run_to_completion(1000).unwrap();
+    assert_eq!(router.take_finished().len(), 2);
+    assert_eq!(router.router_stats().shed, 1);
+
+    // per-replica queue cap: submissions spread across under-cap
+    // replicas first, and shed only once *every* replica is full
+    let mut router = Router::new(
+        vec![FakeCore::new(ecfg(bs), 256),
+             FakeCore::new(ecfg(bs), 256)],
+        RouterConfig {
+            routing: RoutingPolicy::LeastLoaded,
+            max_replica_queue: 1,
+            ..Default::default()
+        },
+    );
+    for _ in 0..3 {
+        router.submit(p.clone(), params.clone());
+    }
+    let fins = router.take_finished();
+    assert_eq!(fins.len(), 1);
+    assert!(matches!(fins[0].seq.finish, Some(FinishReason::Shed)));
+    let routed: Vec<usize> = router
+        .replicas()
+        .iter()
+        .map(|r| r.requests_routed)
+        .collect();
+    assert_eq!(routed, vec![1, 1], "cap must spread before shedding");
+    router.run_to_completion(1000).unwrap();
+    assert_eq!(router.take_finished().len(), 2);
+    assert_eq!(router.router_stats().shed, 1);
+}
+
+#[test]
+fn randomized_fault_injection_preserves_every_request() {
+    // Randomized recovery-invariant sweep: N replicas, one random
+    // victim crashing permanently at a random step. Invariants:
+    // (a) every submitted request finishes exactly once — none lost,
+    //     none answered twice;
+    // (b) every stream is bit-identical to the fault-free run (the
+    //     fake model is content-determined, so a correct replay *must*
+    //     continue exactly where the victim stopped);
+    // (c) a dead victim's directory entries are purged, its replay
+    //     count is coherent, and nothing was shed or dropped.
+    prop::check("fault sweep", 6, |rng| {
+        let bs = 2 + rng.below(3);
+        let prefixes = shared_prefixes(bs);
+        let n_req = 8 + rng.below(8);
+        let prompts: Vec<Vec<u32>> = (0..n_req)
+            .map(|i| prompt(rng, &prefixes, i as u32))
+            .collect();
+        let sched = schedule(&prompts);
+        let bare = run_bare(FakeCore::new(ecfg(bs), 256), &sched);
+        let n = 2 + rng.below(2);
+        let victim = rng.below(n);
+        let k = 1 + rng.below(12);
+        let cores: Vec<FaultyCore<FakeCore>> = (0..n)
+            .map(|i| {
+                let core = FakeCore::new(ecfg(bs), 256);
+                if i == victim {
+                    FaultyCore::new(core,
+                                    FaultSpec::FailOnStepK { k })
+                } else {
+                    stable(core)
+                }
+            })
+            .collect();
+        let router = Router::new(cores, RouterConfig {
+            routing: RoutingPolicy::CacheAware,
+            ..Default::default()
+        });
+        let (routed, fins, router) = run_router(router, &sched);
+        // (a)
+        let mut ids: Vec<u64> = fins.iter().map(|f| f.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), sched.len(),
+                   "lost or duplicated requests");
+        // (b)
+        assert_eq!(bare, routed,
+                   "streams diverged under fault injection");
+        // (c)
+        let rs = router.router_stats();
+        let dead = router
+            .replicas()
+            .iter()
+            .filter(|r| r.health.is_dead())
+            .count();
+        assert_eq!(dead, rs.dead);
+        assert!(rs.dead <= 1, "only the victim may die");
+        if router.replicas()[victim].health.is_dead() {
+            assert!(!router.directory().mentions_replica(victim),
+                    "dead replica still hinted in the directory");
+            assert_eq!(rs.replayed,
+                       router.replicas()[victim].replayed_out);
+        } else {
+            // the victim was never stepped enough times to fire
+            assert_eq!(rs.replayed, 0);
+        }
+        assert_eq!(rs.shed, 0);
+        assert_eq!(rs.replica_failed, 0);
+    });
 }
 
 /// Shared-prefix burst trace: a donor request warms one replica's
@@ -550,7 +904,8 @@ fn sliding_window_bounds_every_replica_for_whole_run() {
 #[test]
 fn stats_rows_roundtrip_through_wire_json() {
     // End-to-end stats check against live rows: submit traffic, step,
-    // snapshot, serialize with the server's encoder, parse back.
+    // snapshot, serialize with the server's encoder, parse back — and
+    // strict-decode back into typed rows.
     let bs = 4;
     let mut router = Router::new(
         vec![FakeCore::new(ecfg(bs), 64), FakeCore::new(ecfg(bs), 64)],
@@ -570,14 +925,18 @@ fn stats_rows_roundtrip_through_wire_json() {
         router.step().unwrap();
     }
     let rows = router.stats();
-    let v = json::parse(&sqplus::server::stats_json(&rows).to_string())
-        .unwrap();
+    let rstats = router.router_stats();
+    let v = json::parse(
+        &sqplus::server::stats_json(&rows, &rstats).to_string(),
+    )
+    .unwrap();
     let reps = v.get("replicas").as_arr().unwrap();
     assert_eq!(reps.len(), 2);
     for (i, rep) in reps.iter().enumerate() {
         assert_eq!(rep.get("id").as_usize(), Some(i));
         assert_eq!(rep.get("requests_routed").as_usize(),
                    Some(rows[i].requests_routed));
+        assert_eq!(rep.get("health").as_str(), Some("healthy"));
         assert_eq!(rep.get("waiting").as_usize(),
                    Some(rows[i].core.waiting));
         assert_eq!(rep.get("running").as_usize(),
@@ -585,6 +944,11 @@ fn stats_rows_roundtrip_through_wire_json() {
         assert_eq!(rep.get("prefill_tokens_executed").as_usize(),
                    Some(rows[i].core.prefill_tokens_executed));
     }
+    assert_eq!(v.get("router").get("alive").as_usize(), Some(2));
+    assert_eq!(v.get("router").get("degraded").as_bool(), Some(false));
+    let (drows, drouter) = sqplus::server::decode_stats(&v).unwrap();
+    assert_eq!(drows.len(), 2);
+    assert_eq!(drouter, rstats);
     assert_eq!(rows[0].requests_routed + rows[1].requests_routed, 4);
     router.run_to_completion(1000).unwrap();
     assert_eq!(router.take_finished().len(), 4);
