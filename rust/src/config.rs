@@ -360,6 +360,12 @@ pub struct RouterConfig {
     /// running sequence is worth. Higher values favor idle replicas
     /// over warm ones; 0 routes purely on cache affinity.
     pub load_penalty_tokens: usize,
+    /// Cache-aware fairness: after this many *consecutive* placements
+    /// on one replica, the next cache-aware pick excludes that replica
+    /// when any other candidate is alive — so a single hot prefix
+    /// cannot starve a cold replica of work forever. 0 disables the
+    /// cap (pure affinity scoring, the pre-PR 7 behavior).
+    pub cache_spread_limit: usize,
     /// Admission control: maximum queued + running sequences per
     /// replica. A submission that would push every alive replica past
     /// this cap is shed (`FinishReason::Shed`). 0 = unbounded.
@@ -385,6 +391,7 @@ impl Default for RouterConfig {
             routing: RoutingPolicy::CacheAware,
             watermarks: CacheWatermarks::default(),
             load_penalty_tokens: 16,
+            cache_spread_limit: 0,
             max_replica_queue: 0,
             max_waiting: 0,
             max_step_retries: 2,

@@ -129,6 +129,11 @@ pub struct Engine {
     /// cached (dropped on eviction).
     cached_kv: HashMap<usize, Vec<f32>>,
     finished: Vec<Sequence>,
+    /// Tokens sampled since the last [`Engine::take_emitted`] drain, in
+    /// emission order — the streaming surface. Appended exactly where
+    /// `Sequence::record_token` runs, so the incremental stream and the
+    /// final `output` cannot drift.
+    emitted: Vec<(u64, u32)>,
     /// Step/latency/cache counters.
     pub metrics: Metrics,
     next_id: u64,
@@ -170,6 +175,7 @@ impl Engine {
             kvs: HashMap::new(),
             cached_kv: HashMap::new(),
             finished: vec![],
+            emitted: vec![],
             metrics: Metrics::new(),
             next_id: 0,
             seed: 0,
@@ -198,6 +204,7 @@ impl Engine {
             kvs: HashMap::new(),
             cached_kv: HashMap::new(),
             finished: vec![],
+            emitted: vec![],
             metrics: Metrics::new(),
             next_id: 0,
             seed: 0,
@@ -318,6 +325,13 @@ impl Engine {
     pub fn take_finished(&mut self) -> Vec<Sequence> {
         std::mem::take(&mut self.finished)
     }
+    /// Drain tokens sampled since the last drain, as `(local id, token)`
+    /// in emission order — the per-step streaming surface. A token
+    /// appears here exactly once, in the same step that appended it to
+    /// the sequence's `output`.
+    pub fn take_emitted(&mut self) -> Vec<(u64, u32)> {
+        std::mem::take(&mut self.emitted)
+    }
 
     /// Replica teardown: remove and return every unfinished sequence
     /// (with its partial output, so a router can replay it on another
@@ -334,6 +348,9 @@ impl Engine {
         self.sched.bm.clear_cache();
         self.sched.bm.take_evicted();
         self.cached_kv.clear();
+        // any tokens still in the stream buffer travel with the drained
+        // sequences (their `output` already holds them)
+        self.emitted.clear();
         out.sort_by_key(|s| s.id);
         out
     }
@@ -702,6 +719,7 @@ impl Engine {
         );
         let tok = sampler::sample(row, &seq.params, &mut rng);
         seq.record_token(tok);
+        self.emitted.push((id, tok));
         self.finish_if_done(id);
     }
 
@@ -767,6 +785,7 @@ impl Engine {
             );
             let tok = sampler::sample(row, &seq.params, &mut rng);
             seq.record_token(tok);
+            self.emitted.push((*id, tok));
             self.finish_if_done(*id);
         }
         Ok(live.len())

@@ -1,0 +1,321 @@
+//! Deterministic replica cores for tests and benchmarks — no PJRT
+//! runtime, no artifacts, so everything built on them runs in tier-1
+//! CI.
+//!
+//! * [`FakeCore`] is the real [`Scheduler`] + `BlockManager` driven
+//!   exactly the way [`Engine`](super::engine::Engine) drives them,
+//!   with [`fake_next_token`] standing in for the model: the next
+//!   token is a pure function of the content so far, so token streams
+//!   cannot depend on routing, chunking, preemption, batching, replica
+//!   replay, or *thread interleaving* — any divergence between two
+//!   serving loops over FakeCores is a real scheduling/recovery bug.
+//!   That property is what makes the async-vs-sync stream-identity
+//!   goldens possible.
+//! * [`EchoCore`] finishes every request at submission (echoing the
+//!   first prompt token) — the minimal core for server-lifecycle tests
+//!   where engine behavior is irrelevant.
+//!
+//! Both implement [`ReplicaCore`] including the incremental
+//! [`take_emitted`](ReplicaCore::take_emitted) streaming surface, and
+//! both are `Send`, so they can drive the per-replica worker threads
+//! in [`worker`](super::worker) as well as the synchronous loop.
+
+use std::collections::HashMap;
+
+use crate::config::{CacheWatermarks, EngineConfig};
+
+use super::block_manager::{BlockManager, CacheEvent};
+use super::engine::StepOutcome;
+use super::replica::{CoreStats, ReplicaCore, ReplicaError};
+use super::scheduler::Scheduler;
+use super::sequence::{
+    FinishReason, SamplingParams, SeqState, Sequence,
+};
+
+/// Deterministic fake model: the next token is a pure function of the
+/// content so far (FNV-1a over the tokens, mod 997).
+pub fn fake_next_token(content: &[u32]) -> u32 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &t in content {
+        h ^= t as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    (h % 997) as u32
+}
+
+/// One replica core: the real scheduler + block manager driven exactly
+/// the way `Engine` drives them, with the fake model supplying tokens.
+pub struct FakeCore {
+    /// The scheduler (public so tests can probe `sched.bm` cache
+    /// state directly against the router's shared directory).
+    pub sched: Scheduler,
+    seqs: HashMap<u64, Sequence>,
+    finished: Vec<Sequence>,
+    emitted: Vec<(u64, u32)>,
+    next_id: u64,
+    prefill_tokens_executed: usize,
+    cached_prefix_tokens: usize,
+}
+
+impl FakeCore {
+    /// Build over a fresh `BlockManager` with `total_blocks` blocks.
+    pub fn new(ecfg: EngineConfig, total_blocks: usize) -> FakeCore {
+        let bm = BlockManager::new(ecfg.block_size, total_blocks);
+        FakeCore {
+            sched: Scheduler::new(ecfg, bm),
+            seqs: HashMap::new(),
+            finished: vec![],
+            emitted: vec![],
+            next_id: 0,
+            prefill_tokens_executed: 0,
+            cached_prefix_tokens: 0,
+        }
+    }
+
+    fn finish_if_done(&mut self, id: u64) {
+        if let Some(r) = self.seqs[&id].should_finish() {
+            let mut q = self.seqs.remove(&id).unwrap();
+            q.finish(r);
+            self.sched.on_finished(id);
+            self.finished.push(q);
+        }
+    }
+}
+
+impl ReplicaCore for FakeCore {
+    fn submit(&mut self, prompt: Vec<u32>, params: SamplingParams)
+        -> Result<u64, ReplicaError> {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.seqs.insert(id, Sequence::new(id, prompt, params));
+        self.sched.add(id);
+        Ok(id)
+    }
+
+    fn step(&mut self) -> Result<StepOutcome, ReplicaError> {
+        let plan = self.sched.plan(&self.seqs);
+        for v in self.sched.preempted.clone() {
+            let q = self.seqs.get_mut(&v).unwrap();
+            if matches!(q.state,
+                        SeqState::Running | SeqState::Prefilling) {
+                q.preempt();
+            }
+        }
+        for v in self.sched.dropped.clone() {
+            if let Some(mut q) = self.seqs.remove(&v) {
+                q.finish(FinishReason::PoolExhausted);
+                self.sched.on_finished(v);
+                self.finished.push(q);
+            }
+        }
+        let mut chunk_tokens = 0;
+        let mut completed_prefills = 0;
+        for c in &plan.chunks {
+            let toks = self.seqs[&c.id].full_tokens();
+            {
+                let q = self.seqs.get_mut(&c.id).unwrap();
+                q.prefill_progress = c.end;
+                if c.admitted {
+                    q.cached_prefix_len = c.start;
+                    self.cached_prefix_tokens += c.start;
+                }
+            }
+            self.prefill_tokens_executed += c.end - c.start;
+            chunk_tokens += c.end - c.start;
+            self.sched.bm.register_prefix(c.id, &toks[..c.end]);
+            let q = self.seqs.get_mut(&c.id).unwrap();
+            if c.end == toks.len() {
+                completed_prefills += 1;
+                q.state = SeqState::Running;
+                let tok = fake_next_token(&toks);
+                q.record_token(tok);
+                self.emitted.push((c.id, tok));
+                self.finish_if_done(c.id);
+            } else {
+                q.state = SeqState::Prefilling;
+            }
+        }
+        let decoded = plan.decode.len();
+        for id in plan.decode.clone() {
+            let q = self.seqs.get_mut(&id).unwrap();
+            let tok = fake_next_token(&q.full_tokens());
+            q.record_token(tok);
+            self.emitted.push((id, tok));
+            self.finish_if_done(id);
+        }
+        if chunk_tokens == 0 && decoded == 0 {
+            Ok(StepOutcome::Idle)
+        } else {
+            Ok(StepOutcome::Ran {
+                chunk_tokens,
+                completed_prefills,
+                decoded,
+            })
+        }
+    }
+
+    fn has_work(&self) -> bool {
+        self.sched.has_work()
+    }
+    fn take_finished(&mut self) -> Vec<Sequence> {
+        std::mem::take(&mut self.finished)
+    }
+    fn take_emitted(&mut self) -> Vec<(u64, u32)> {
+        std::mem::take(&mut self.emitted)
+    }
+    fn drain_inflight(&mut self) -> Vec<Sequence> {
+        self.sched.drain();
+        let mut out: Vec<Sequence> =
+            self.seqs.drain().map(|(_, s)| s).collect();
+        self.sched.bm.clear_cache();
+        self.sched.bm.take_evicted();
+        // the drained sequences' outputs already hold any tokens still
+        // buffered in the stream log
+        self.emitted.clear();
+        out.sort_by_key(|s| s.id);
+        out
+    }
+    fn block_size(&self) -> usize {
+        self.sched.bm.block_size
+    }
+    fn queue_depths(&self) -> (usize, usize) {
+        (self.sched.waiting_len(), self.sched.running_len())
+    }
+    fn enable_cache_events(&mut self) {
+        self.sched.bm.enable_cache_events = true;
+    }
+    fn take_cache_events(&mut self) -> Vec<CacheEvent> {
+        self.sched.bm.take_cache_events()
+    }
+    fn set_cache_watermarks(&mut self, wm: CacheWatermarks) {
+        self.sched.bm.set_cache_watermarks(wm.high, wm.low);
+    }
+    fn core_stats(&self) -> CoreStats {
+        CoreStats {
+            waiting: self.sched.waiting_len(),
+            running: self.sched.running_len(),
+            kv_occupancy: self.sched.bm.occupancy(),
+            cache: self.sched.bm.stats.clone(),
+            prefill_tokens_executed: self.prefill_tokens_executed,
+            cached_prefix_tokens: self.cached_prefix_tokens,
+            ttft_steps_p50: 0.0,
+        }
+    }
+}
+
+/// A stub core that finishes every request at submission (echoing one
+/// token) — enough to drive the full server lifecycle without a PJRT
+/// runtime or even a scheduler.
+pub struct EchoCore {
+    next: u64,
+    finished: Vec<Sequence>,
+    emitted: Vec<(u64, u32)>,
+}
+
+impl EchoCore {
+    /// A fresh echo core.
+    pub fn new() -> EchoCore {
+        EchoCore { next: 0, finished: vec![], emitted: vec![] }
+    }
+}
+
+impl Default for EchoCore {
+    fn default() -> EchoCore {
+        EchoCore::new()
+    }
+}
+
+impl ReplicaCore for EchoCore {
+    fn submit(&mut self, prompt: Vec<u32>, params: SamplingParams)
+        -> Result<u64, ReplicaError> {
+        let id = self.next;
+        self.next += 1;
+        let first = prompt.first().copied().unwrap_or(0);
+        let mut seq = Sequence::new(id, prompt, params);
+        seq.record_token(first);
+        self.emitted.push((id, first));
+        seq.finish(FinishReason::MaxTokens);
+        self.finished.push(seq);
+        Ok(id)
+    }
+    fn step(&mut self) -> Result<StepOutcome, ReplicaError> {
+        Ok(StepOutcome::Idle)
+    }
+    fn has_work(&self) -> bool {
+        false
+    }
+    fn take_finished(&mut self) -> Vec<Sequence> {
+        std::mem::take(&mut self.finished)
+    }
+    fn take_emitted(&mut self) -> Vec<(u64, u32)> {
+        std::mem::take(&mut self.emitted)
+    }
+    fn drain_inflight(&mut self) -> Vec<Sequence> {
+        vec![]
+    }
+    fn block_size(&self) -> usize {
+        4
+    }
+    fn queue_depths(&self) -> (usize, usize) {
+        (0, 0)
+    }
+    fn enable_cache_events(&mut self) {}
+    fn take_cache_events(&mut self) -> Vec<CacheEvent> {
+        vec![]
+    }
+    fn set_cache_watermarks(&mut self, _: CacheWatermarks) {}
+    fn core_stats(&self) -> CoreStats {
+        CoreStats::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fake_core_streams_every_recorded_token_exactly_once() {
+        let mut core = FakeCore::new(EngineConfig {
+            block_size: 4,
+            ..Default::default()
+        }, 64);
+        let id = core
+            .submit(vec![1, 2, 3], SamplingParams {
+                max_new_tokens: 3,
+                ..Default::default()
+            })
+            .unwrap();
+        let mut streamed: Vec<u32> = vec![];
+        let mut fin = None;
+        for _ in 0..100 {
+            core.step().unwrap();
+            streamed.extend(
+                core.take_emitted().into_iter().map(|(_, t)| t),
+            );
+            if let Some(q) = core.take_finished().pop() {
+                fin = Some(q);
+                break;
+            }
+        }
+        let fin = fin.expect("request never finished");
+        assert_eq!(fin.id, id);
+        // the incremental stream is exactly the final output
+        assert_eq!(streamed, fin.output);
+        assert_eq!(streamed.len(), 3);
+        // a second drain is empty
+        assert!(core.take_emitted().is_empty());
+    }
+
+    #[test]
+    fn echo_core_emits_its_token_at_submission() {
+        let mut core = EchoCore::new();
+        let id = core
+            .submit(vec![9, 8], SamplingParams::default())
+            .unwrap();
+        assert_eq!(core.take_emitted(), vec![(id, 9)]);
+        let fins = core.take_finished();
+        assert_eq!(fins.len(), 1);
+        assert_eq!(fins[0].output, vec![9]);
+        assert_eq!(fins[0].finish, Some(FinishReason::MaxTokens));
+    }
+}

@@ -131,6 +131,9 @@ impl<C: ReplicaCore> ReplicaCore for FaultyCore<C> {
     fn take_finished(&mut self) -> Vec<Sequence> {
         self.inner.take_finished()
     }
+    fn take_emitted(&mut self) -> Vec<(u64, u32)> {
+        self.inner.take_emitted()
+    }
     fn drain_inflight(&mut self) -> Vec<Sequence> {
         self.inner.drain_inflight()
     }

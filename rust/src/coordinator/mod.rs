@@ -24,8 +24,16 @@
 //!   request routing over a shared content-hash directory, per-replica
 //!   stats, replica failure detection with bounded retry, in-flight
 //!   replay onto survivors, and load-shedding admission control.
+//! * [`worker`] — the threaded serving loop: one worker thread per
+//!   replica stepping continuously, an [`worker::AsyncRouter`] front
+//!   end placing requests and folding worker events (tokens, finishes,
+//!   cache updates, failures) back into routing/replay state over
+//!   channels — no shared mutable state on the hot path.
 //! * [`fault`] — deterministic fault injection
 //!   ([`fault::FaultyCore`]) driving the tier-1 recovery tests.
+//! * [`fake`] — deterministic replica cores ([`fake::FakeCore`],
+//!   [`fake::EchoCore`]) with a content-determined fake model, shared
+//!   by the router/server/worker test suites.
 //!
 //! `docs/ARCHITECTURE.md` at the repo root walks one request through
 //! all of these modules end to end, with the block lifecycle diagram.
@@ -48,6 +56,7 @@
 
 pub mod block_manager;
 pub mod engine;
+pub mod fake;
 pub mod fault;
 pub mod metrics;
 pub mod replica;
@@ -55,3 +64,4 @@ pub mod router;
 pub mod sampler;
 pub mod scheduler;
 pub mod sequence;
+pub mod worker;

@@ -160,6 +160,16 @@ pub trait ReplicaCore {
     fn has_work(&self) -> bool;
     /// Drain finished sequences (their `id` is the local id).
     fn take_finished(&mut self) -> Vec<Sequence>;
+    /// Drain tokens sampled since the last drain, as
+    /// `(local id, token)` in emission order — the incremental
+    /// streaming surface. A token appears exactly once, in the same
+    /// step that appended it to the sequence's output, so concatenating
+    /// a sequence's emitted tokens reproduces its final `output`
+    /// bit-for-bit. Cores that cannot surface tokens incrementally may
+    /// keep the default (tokens then stream only at finish).
+    fn take_emitted(&mut self) -> Vec<(u64, u32)> {
+        vec![]
+    }
     /// Replica teardown: remove and return every *unfinished* sequence
     /// (with its partial output, so the router can replay it
     /// elsewhere), releasing all pool and cache state it held. After
@@ -224,6 +234,9 @@ impl ReplicaCore for Engine {
     }
     fn take_finished(&mut self) -> Vec<Sequence> {
         Engine::take_finished(self)
+    }
+    fn take_emitted(&mut self) -> Vec<(u64, u32)> {
+        Engine::take_emitted(self)
     }
     fn drain_inflight(&mut self) -> Vec<Sequence> {
         Engine::drain_inflight(self)

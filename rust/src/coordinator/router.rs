@@ -229,12 +229,100 @@ pub struct RouterStats {
 /// Per-global-id bookkeeping for a request replayed across a replica
 /// death: enough to stitch the client-visible stream back together.
 #[derive(Debug)]
-struct ReplayState {
+pub(crate) struct ReplayState {
     /// Length of the *original* prompt (replay prompts are longer: the
     /// emitted tokens ride along).
-    prompt_len: usize,
+    pub(crate) prompt_len: usize,
     /// Tokens emitted before the death(s), in order.
-    emitted: Vec<u32>,
+    pub(crate) emitted: Vec<u32>,
+}
+
+/// Mutable placement state shared across picks: the round-robin cursor
+/// and the consecutive-placement counter behind
+/// [`RouterConfig::cache_spread_limit`]. One instance per front end
+/// (the synchronous [`Router`] and the threaded
+/// [`super::worker::AsyncRouter`] each own one).
+#[derive(Debug, Default)]
+pub(crate) struct PickState {
+    /// Next replica the round-robin policy prefers.
+    pub(crate) rr_next: usize,
+    /// Replica of the most recent placement.
+    pub(crate) last_pick: Option<usize>,
+    /// How many consecutive placements landed on `last_pick`.
+    pub(crate) consec: usize,
+}
+
+impl PickState {
+    /// Record a placement on `r`.
+    fn note(&mut self, r: usize) {
+        if self.last_pick == Some(r) {
+            self.consec += 1;
+        } else {
+            self.last_pick = Some(r);
+            self.consec = 1;
+        }
+    }
+}
+
+/// Pure placement decision shared by the synchronous [`Router`] and the
+/// threaded front-end: pick a replica from `cands` under `rcfg.routing`,
+/// given per-replica directory prefix hits (tokens) and load counts
+/// (queued + running). Deterministic: ties always break to the lowest
+/// replica id. `None` iff `cands` is empty.
+///
+/// The cache-aware policy additionally honors
+/// [`RouterConfig::cache_spread_limit`]: once `st` records that many
+/// consecutive placements on one replica, that replica is excluded from
+/// this pick when any other candidate remains — bounding how long a
+/// skewed (single-hot-prefix) workload can starve the cold replicas.
+pub(crate) fn pick_replica(rcfg: &RouterConfig, st: &mut PickState,
+                           cands: &[usize], n_replicas: usize,
+                           hits: &[usize], loads: &[usize])
+    -> Option<usize> {
+    let r = match cands {
+        [] => return None,
+        [only] => *only,
+        _ => match rcfg.routing {
+            RoutingPolicy::RoundRobin => {
+                let r = (0..n_replicas)
+                    .map(|off| (st.rr_next + off) % n_replicas)
+                    .find(|r| cands.contains(r))
+                    .expect("cands is non-empty");
+                st.rr_next = (r + 1) % n_replicas;
+                r
+            }
+            RoutingPolicy::LeastLoaded => cands
+                .iter()
+                .copied()
+                .min_by_key(|&i| (loads[i], i))
+                .expect("cands is non-empty"),
+            RoutingPolicy::CacheAware => {
+                let spread = rcfg.cache_spread_limit;
+                let mut pool: Vec<usize> = cands.to_vec();
+                if spread > 0 && st.consec >= spread {
+                    if let Some(last) = st.last_pick {
+                        if pool.len() > 1 {
+                            pool.retain(|&i| i != last);
+                        }
+                    }
+                }
+                let penalty = rcfg.load_penalty_tokens as i64;
+                let mut best = pool[0];
+                let mut best_score = i64::MIN;
+                for &i in &pool {
+                    let score =
+                        hits[i] as i64 - penalty * loads[i] as i64;
+                    if score > best_score {
+                        best = i;
+                        best_score = score;
+                    }
+                }
+                best
+            }
+        },
+    };
+    st.note(r);
+    Some(r)
 }
 
 /// The multi-replica front end; see the module docs.
@@ -251,9 +339,12 @@ pub struct Router<C: ReplicaCore> {
     local_to_global: Vec<HashMap<u64, u64>>,
     /// Stream-stitching state for requests replayed across a death.
     replays: HashMap<u64, ReplayState>,
+    /// Incrementally emitted `(global id, token)` pairs not yet
+    /// drained by [`Router::take_emitted`].
+    emitted: Vec<(u64, u32)>,
     finished: Vec<RoutedFinish>,
     next_id: u64,
-    rr_next: usize,
+    pick_state: PickState,
     /// Router step counter (the clock quarantine backoff runs on).
     steps: u64,
     shed: usize,
@@ -298,9 +389,10 @@ impl<C: ReplicaCore> Router<C> {
             routes: HashMap::new(),
             local_to_global: (0..n).map(|_| HashMap::new()).collect(),
             replays: HashMap::new(),
+            emitted: vec![],
             finished: vec![],
             next_id: 0,
-            rr_next: 0,
+            pick_state: PickState::default(),
             steps: 0,
             shed: 0,
             replayed: 0,
@@ -370,48 +462,22 @@ impl<C: ReplicaCore> Router<C> {
     }
 
     /// Pick a replica for `prompt` from `cands` under the configured
-    /// policy. Deterministic: ties always break to the lowest replica
-    /// id. `None` iff `cands` is empty.
+    /// policy (delegates to [`pick_replica`], which the threaded
+    /// front-end shares). Deterministic: ties always break to the
+    /// lowest replica id. `None` iff `cands` is empty.
     fn pick(&mut self, cands: &[usize], prompt: &[u32])
         -> Option<usize> {
-        match cands {
-            [] => None,
-            [only] => Some(*only),
-            _ => Some(match self.rcfg.routing {
-                RoutingPolicy::RoundRobin => {
-                    let n = self.replicas.len();
-                    let r = (0..n)
-                        .map(|off| (self.rr_next + off) % n)
-                        .find(|r| cands.contains(r))
-                        .expect("cands is non-empty");
-                    self.rr_next = (r + 1) % n;
-                    r
-                }
-                RoutingPolicy::LeastLoaded => cands
-                    .iter()
-                    .copied()
-                    .min_by_key(|&i| (self.replicas[i].core().load(), i))
-                    .expect("cands is non-empty"),
-                RoutingPolicy::CacheAware => {
-                    let hits = self.directory.prefix_hits(
-                        prompt, self.block_size, self.replicas.len(),
-                    );
-                    let penalty = self.rcfg.load_penalty_tokens as i64;
-                    let mut best = cands[0];
-                    let mut best_score = i64::MIN;
-                    for &i in cands {
-                        let score = hits[i] as i64
-                            - penalty
-                                * self.replicas[i].core().load() as i64;
-                        if score > best_score {
-                            best = i;
-                            best_score = score;
-                        }
-                    }
-                    best
-                }
-            }),
-        }
+        let n = self.replicas.len();
+        let hits = match self.rcfg.routing {
+            RoutingPolicy::CacheAware => {
+                self.directory.prefix_hits(prompt, self.block_size, n)
+            }
+            _ => vec![0; n],
+        };
+        let loads: Vec<usize> =
+            self.replicas.iter().map(|r| r.core().load()).collect();
+        pick_replica(&self.rcfg, &mut self.pick_state, cands, n, &hits,
+                     &loads)
     }
 
     /// Should a fresh submission be shed? (Replays bypass this — they
@@ -626,6 +692,15 @@ impl<C: ReplicaCore> Router<C> {
                     }
                 }
             }
+            // tokens before finishes: a sequence that finished this
+            // step still has its id mapping until the loop below
+            for (local, tok) in
+                self.replicas[i].core_mut().take_emitted()
+            {
+                if let Some(&gid) = self.local_to_global[i].get(&local) {
+                    self.emitted.push((gid, tok));
+                }
+            }
             for seq in self.replicas[i].core_mut().take_finished() {
                 let gid = self.local_to_global[i]
                     .remove(&seq.id)
@@ -658,6 +733,18 @@ impl<C: ReplicaCore> Router<C> {
     pub fn take_finished(&mut self) -> Vec<RoutedFinish> {
         self.absorb();
         std::mem::take(&mut self.finished)
+    }
+
+    /// Drain incrementally emitted tokens as `(global id, token)` in
+    /// emission order — the streaming surface the serving loops read.
+    /// A request replayed across a replica death never re-emits here:
+    /// its pre-death tokens ride in the replay *prompt*, so the
+    /// concatenation of a request's drained tokens is exactly its
+    /// final stitched `output` (for cores that implement
+    /// [`ReplicaCore::take_emitted`]).
+    pub fn take_emitted(&mut self) -> Vec<(u64, u32)> {
+        self.absorb();
+        std::mem::take(&mut self.emitted)
     }
 
     /// Drive until every submitted request finishes (or `max_steps`).

@@ -1,0 +1,997 @@
+//! Threaded serving loop: one worker thread per replica, a lock-free
+//! channel seam, and the [`AsyncRouter`] front end.
+//!
+//! The synchronous [`Router`](super::router::Router) steps all
+//! replicas from one thread — replica K's step waits for replica
+//! K−1's. This module removes that serialization: each replica core
+//! moves onto its own **worker thread** that steps continuously
+//! whenever it has work, and the front end only exchanges messages
+//! with it:
+//!
+//! ```text
+//!              WorkerCmd (submit / shutdown)
+//!   AsyncRouter ────────────────────────────▶ worker 0 ─ core 0
+//!       │        ◀──────────────────────────  worker 1 ─ core 1
+//!       │          (replica, WorkerEvent)      ...
+//!       ▼
+//!   RouterEvent (Token / Finished) → serving loop → clients
+//! ```
+//!
+//! There is **no shared mutable state on the hot path**: the front end
+//! owns the routing state (cache directory, health mirror, per-request
+//! records), each worker owns its core outright, and everything
+//! crossing the seam is a moved message over an `mpsc` channel. A
+//! stalled consumer of [`AsyncRouter::poll`] therefore never blocks a
+//! replica step, and one replica's death never stops another
+//! mid-step.
+//!
+//! # Division of labor
+//!
+//! The *worker* handles what needs the core: local↔global id
+//! translation, transient-step retry with exponential backoff
+//! (sleeping its own thread, nobody else's), and death — on a
+//! permanent failure (or retries exhausted) it salvages finished
+//! sequences, drains its in-flight load, bounces still-queued
+//! submissions, and reports [`WorkerEvent::Dead`] with everything the
+//! front end needs to replay.
+//!
+//! The *front end* handles placement and global state: the shared
+//! cache directory (fed by cache events riding each
+//! [`WorkerEvent::Stepped`]), admission control, the health mirror
+//! reported by stats, and **replay**: it retains each request's
+//! prompt, budget, and streamed tokens, so when a worker dies — even
+//! by raw panic, without a `Dead` event — every in-flight request is
+//! re-placed on a survivor with the emitted tokens folded into the
+//! replay prompt. Clients observe one continuous token stream with
+//! contiguous indices across the death.
+//!
+//! Placement load is the front end's own outstanding count per worker
+//! (placed − finished), the message-passing analogue of
+//! `waiting + running`; admission control
+//! ([`RouterConfig::max_waiting`] / `max_replica_queue`) runs against
+//! it deterministically at submit time.
+
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::time::Duration;
+
+use crate::config::{RouterConfig, RoutingPolicy};
+
+use super::block_manager::CacheEvent;
+use super::replica::{
+    CoreStats, ReplicaCore, ReplicaError, ReplicaHealth, ReplicaStats,
+};
+use super::router::{
+    pick_replica, CacheDirectory, PickState, RoutedFinish, RouterStats,
+};
+use super::sequence::{FinishReason, SamplingParams, Sequence};
+
+/// Longest single backoff sleep a worker takes between transient-step
+/// retries. Bounds how long a brown-out can stall one replica's drain
+/// (and keeps the fault-injection tests fast).
+const MAX_BACKOFF_MS: u64 = 50;
+
+/// Front end → worker.
+enum WorkerCmd {
+    /// Place request `gid` on this worker's core.
+    Submit {
+        gid: u64,
+        prompt: Vec<u32>,
+        params: SamplingParams,
+    },
+    /// Drain everything in flight, then stop.
+    Shutdown,
+}
+
+/// Worker → front end (always paired with the worker's replica index).
+enum WorkerEvent {
+    /// `submit` failed on the core; the request was never admitted
+    /// here and must be re-placed.
+    Rejected { gid: u64, transient: bool },
+    /// One step's worth of results (also sent for submit-time
+    /// finishes, which need no step). `err` carries a transient step
+    /// failure being retried worker-side — a health signal only.
+    Stepped {
+        tokens: Vec<(u64, u32)>,
+        finished: Vec<(u64, Sequence)>,
+        cache: Vec<CacheEvent>,
+        stats: CoreStats,
+        err: Option<String>,
+    },
+    /// The core failed permanently (or exhausted retries): these
+    /// in-flight sequences need replay; the worker thread is gone.
+    Dead {
+        error: String,
+        inflight: Vec<(u64, Sequence)>,
+    },
+    /// Clean drain after [`WorkerCmd::Shutdown`]: nothing in flight,
+    /// the worker thread is exiting.
+    Stopped,
+}
+
+/// One replica's serving thread: owns the core, loops
+/// recv-commands → step → flush-results until drained or dead.
+struct Worker<C: ReplicaCore> {
+    idx: usize,
+    core: C,
+    cmd_rx: mpsc::Receiver<WorkerCmd>,
+    events: mpsc::Sender<(usize, WorkerEvent)>,
+    /// Core-local sequence id → router-global request id.
+    to_global: HashMap<u64, u64>,
+    max_step_retries: usize,
+    backoff_ms: u64,
+    failures: u32,
+    draining: bool,
+}
+
+impl<C: ReplicaCore> Worker<C> {
+    fn run(mut self) {
+        loop {
+            if self.draining && !self.core.has_work() {
+                self.flush(None);
+                let _ = self
+                    .events
+                    .send((self.idx, WorkerEvent::Stopped));
+                return;
+            }
+            // gather commands: block while idle (a worker with no work
+            // burns no CPU), drain without blocking while busy
+            if !self.draining && !self.core.has_work() {
+                match self.cmd_rx.recv() {
+                    Ok(cmd) => {
+                        if !self.apply(cmd) {
+                            return;
+                        }
+                    }
+                    Err(_) => self.draining = true,
+                }
+            }
+            loop {
+                match self.cmd_rx.try_recv() {
+                    Ok(cmd) => {
+                        if !self.apply(cmd) {
+                            return;
+                        }
+                    }
+                    Err(mpsc::TryRecvError::Empty) => break,
+                    Err(mpsc::TryRecvError::Disconnected) => {
+                        self.draining = true;
+                        break;
+                    }
+                }
+            }
+            if self.core.has_work() {
+                match self.core.step() {
+                    Ok(_) => {
+                        self.failures = 0;
+                        self.flush(None);
+                    }
+                    Err(e) if e.is_transient() => {
+                        self.failures += 1;
+                        if self.failures as usize
+                            > self.max_step_retries
+                        {
+                            self.die(e);
+                            return;
+                        }
+                        // report the failure (health mirror), then
+                        // back off on our own clock — sleeping here
+                        // stalls only this replica
+                        self.flush(Some(e.message().to_string()));
+                        let shift = (self.failures - 1).min(16);
+                        let ms = self
+                            .backoff_ms
+                            .checked_shl(shift)
+                            .unwrap_or(u64::MAX)
+                            .min(MAX_BACKOFF_MS);
+                        std::thread::sleep(Duration::from_millis(ms));
+                    }
+                    Err(e) => {
+                        self.die(e);
+                        return;
+                    }
+                }
+            } else {
+                // submit-time finishes (prompt_too_long, echo cores)
+                // surface without a step
+                self.flush(None);
+            }
+        }
+    }
+
+    /// Apply one command; `false` means the worker died doing it.
+    fn apply(&mut self, cmd: WorkerCmd) -> bool {
+        match cmd {
+            WorkerCmd::Submit { gid, prompt, params } => {
+                match self.core.submit(prompt, params) {
+                    Ok(local) => {
+                        self.to_global.insert(local, gid);
+                        true
+                    }
+                    Err(e) => {
+                        let transient = e.is_transient();
+                        let _ = self.events.send((
+                            self.idx,
+                            WorkerEvent::Rejected { gid, transient },
+                        ));
+                        if transient {
+                            true
+                        } else {
+                            self.die(e);
+                            false
+                        }
+                    }
+                }
+            }
+            WorkerCmd::Shutdown => {
+                self.draining = true;
+                true
+            }
+        }
+    }
+
+    /// Send everything the core produced since the last flush. Quiet
+    /// flushes (nothing produced, no error) send nothing — channel
+    /// traffic is bounded by actual work.
+    fn flush(&mut self, err: Option<String>) {
+        let tokens: Vec<(u64, u32)> = self
+            .core
+            .take_emitted()
+            .into_iter()
+            .filter_map(|(l, t)| {
+                self.to_global.get(&l).map(|&g| (g, t))
+            })
+            .collect();
+        let finished: Vec<(u64, Sequence)> = self
+            .core
+            .take_finished()
+            .into_iter()
+            .filter_map(|s| self.to_global.remove(&s.id).map(|g| (g, s)))
+            .collect();
+        let cache = self.core.take_cache_events();
+        if tokens.is_empty()
+            && finished.is_empty()
+            && cache.is_empty()
+            && err.is_none()
+        {
+            return;
+        }
+        let stats = self.core.core_stats();
+        let _ = self.events.send((
+            self.idx,
+            WorkerEvent::Stepped { tokens, finished, cache, stats, err },
+        ));
+    }
+
+    /// Permanent failure: salvage what already finished or streamed,
+    /// hand the in-flight load back for replay, bounce submissions
+    /// still queued behind us, and report death.
+    fn die(&mut self, err: ReplicaError) {
+        self.flush(None);
+        let inflight: Vec<(u64, Sequence)> = self
+            .core
+            .drain_inflight()
+            .into_iter()
+            .filter_map(|s| self.to_global.remove(&s.id).map(|g| (g, s)))
+            .collect();
+        // teardown emits eviction events nobody will read
+        let _ = self.core.take_cache_events();
+        // submissions queued behind the failure can never run here
+        while let Ok(cmd) = self.cmd_rx.try_recv() {
+            if let WorkerCmd::Submit { gid, .. } = cmd {
+                let _ = self.events.send((
+                    self.idx,
+                    WorkerEvent::Rejected { gid, transient: false },
+                ));
+            }
+        }
+        let _ = self.events.send((
+            self.idx,
+            WorkerEvent::Dead {
+                error: err.message().to_string(),
+                inflight,
+            },
+        ));
+    }
+}
+
+/// Front-end bookkeeping for one worker.
+struct WorkerHandle {
+    cmd: mpsc::Sender<WorkerCmd>,
+    thread: Option<std::thread::JoinHandle<()>>,
+    /// Health mirror (the worker manages its own retries; this drives
+    /// placement and stats).
+    health: ReplicaHealth,
+    /// Clean [`WorkerEvent::Stopped`] received.
+    stopped: bool,
+    /// Death fully processed (via `Dead` event or loss detection) —
+    /// in-flight requests were replayed exactly once.
+    dead_handled: bool,
+    /// Requests placed here and not yet finished — the placement and
+    /// admission-control load signal.
+    outstanding: usize,
+    requests_routed: usize,
+    replayed_out: usize,
+    /// Stats snapshot from the worker's most recent `Stepped`.
+    stats: CoreStats,
+}
+
+/// Per-request record: everything needed to stream tokens with
+/// contiguous indices and to replay the request if its worker dies —
+/// even a worker that vanishes without handing its sequences back.
+struct ReqState {
+    /// The client's original prompt.
+    prompt: Vec<u32>,
+    /// The client's original token budget.
+    max_new: usize,
+    params: SamplingParams,
+    /// Tokens generated by now-dead placements, in order (they ride in
+    /// the replay prompt and are stitched back at finish).
+    prior: Vec<u32>,
+    /// Tokens streamed by the current placement.
+    cur: Vec<u32>,
+    /// Current placement.
+    replica: Option<usize>,
+}
+
+/// An event the front end surfaces to the serving loop.
+#[derive(Debug)]
+pub enum RouterEvent {
+    /// One incrementally emitted token. `index` is the token's
+    /// position in the request's output stream, contiguous from 0
+    /// even across a mid-stream replica death and replay.
+    Token {
+        /// Router-assigned global request id.
+        id: u64,
+        /// Position in the request's output stream (0-based).
+        index: usize,
+        /// The sampled token.
+        token: u32,
+    },
+    /// A finished request, stream already stitched (same shape the
+    /// synchronous router reports).
+    Finished(RoutedFinish),
+}
+
+/// The threaded multi-replica front end; see the module docs.
+///
+/// Unlike [`Router`](super::router::Router) this is not generic: the
+/// cores move onto their worker threads at construction and only
+/// messages remain.
+pub struct AsyncRouter {
+    /// Router configuration (`replicas` reflects the actual count).
+    pub rcfg: RouterConfig,
+    workers: Vec<WorkerHandle>,
+    events_rx: mpsc::Receiver<(usize, WorkerEvent)>,
+    directory: CacheDirectory,
+    block_size: usize,
+    requests: HashMap<u64, ReqState>,
+    next_id: u64,
+    pick_state: PickState,
+    out: Vec<RouterEvent>,
+    shed: usize,
+    replayed: usize,
+    retries: usize,
+    replica_failed: usize,
+}
+
+impl AsyncRouter {
+    /// Spawn one worker thread per core (replica ids are the indices).
+    /// Applies `rcfg.watermarks` and turns on cache-event recording
+    /// (multi-replica only) before the cores move to their threads.
+    /// All cores must share one KV block size.
+    ///
+    /// `C: Send` is required because each core crosses onto its
+    /// thread; a core is owned by exactly one worker for the rest of
+    /// its life.
+    pub fn new<C>(cores: Vec<C>, mut rcfg: RouterConfig) -> AsyncRouter
+    where
+        C: ReplicaCore + Send + 'static,
+    {
+        assert!(!cores.is_empty(), "router needs at least one replica");
+        let block_size = cores[0].block_size();
+        let n = cores.len();
+        rcfg.replicas = n;
+        let (events_tx, events_rx) = mpsc::channel();
+        let mut workers = Vec::with_capacity(n);
+        for (i, mut core) in cores.into_iter().enumerate() {
+            assert_eq!(core.block_size(), block_size,
+                       "replicas disagree on block size");
+            if n > 1 {
+                core.enable_cache_events();
+            }
+            if rcfg.watermarks.enabled() {
+                core.set_cache_watermarks(rcfg.watermarks);
+            }
+            let (cmd_tx, cmd_rx) = mpsc::channel();
+            let worker = Worker {
+                idx: i,
+                core,
+                cmd_rx,
+                events: events_tx.clone(),
+                to_global: HashMap::new(),
+                max_step_retries: rcfg.max_step_retries,
+                backoff_ms: rcfg.retry_backoff_steps.max(1) as u64,
+                failures: 0,
+                draining: false,
+            };
+            let thread = std::thread::spawn(move || worker.run());
+            workers.push(WorkerHandle {
+                cmd: cmd_tx,
+                thread: Some(thread),
+                health: ReplicaHealth::Healthy,
+                stopped: false,
+                dead_handled: false,
+                outstanding: 0,
+                requests_routed: 0,
+                replayed_out: 0,
+                stats: CoreStats::default(),
+            });
+        }
+        // `events_tx` drops here: the channel disconnects exactly when
+        // the last worker thread exits
+        AsyncRouter {
+            rcfg,
+            workers,
+            events_rx,
+            directory: CacheDirectory::new(),
+            block_size,
+            requests: HashMap::new(),
+            next_id: 0,
+            pick_state: PickState::default(),
+            out: vec![],
+            shed: 0,
+            replayed: 0,
+            retries: 0,
+            replica_failed: 0,
+        }
+    }
+
+    /// The shared cache directory (tests assert purge-on-death).
+    pub fn directory(&self) -> &CacheDirectory {
+        &self.directory
+    }
+    /// Requests submitted so far (the next global id).
+    pub fn requests_submitted(&self) -> u64 {
+        self.next_id
+    }
+    /// Requests placed and not yet finished.
+    pub fn outstanding(&self) -> usize {
+        self.requests.len()
+    }
+    /// Anything still in flight, or events not yet polled?
+    pub fn has_work(&self) -> bool {
+        !self.requests.is_empty() || !self.out.is_empty()
+    }
+
+    /// Submit a request and return its global id. Admission control
+    /// runs here, deterministically, against the front end's own
+    /// outstanding counts — shed / no-survivor requests finish
+    /// immediately and surface from the next [`AsyncRouter::poll`].
+    pub fn submit(&mut self, prompt: Vec<u32>, params: SamplingParams)
+        -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.requests.insert(id, ReqState {
+            prompt,
+            max_new: params.max_new_tokens,
+            params,
+            prior: vec![],
+            cur: vec![],
+            replica: None,
+        });
+        self.place(id, true, vec![]);
+        id
+    }
+
+    /// Collect pending [`RouterEvent`]s, blocking up to `timeout` when
+    /// none are immediately available. Never blocks a worker: this
+    /// only reads the event channel.
+    pub fn poll(&mut self, timeout: Duration) -> Vec<RouterEvent> {
+        self.drain_events();
+        if self.out.is_empty() && !timeout.is_zero() {
+            if let Ok((i, ev)) = self.events_rx.recv_timeout(timeout) {
+                self.absorb(i, ev);
+                self.drain_events();
+            }
+        }
+        self.reap_lost();
+        std::mem::take(&mut self.out)
+    }
+
+    /// Per-replica stats rows from the front end's mirror (the worker
+    /// snapshot rides each `Stepped` event).
+    pub fn stats(&self) -> Vec<ReplicaStats> {
+        self.workers
+            .iter()
+            .enumerate()
+            .map(|(i, w)| ReplicaStats {
+                id: i,
+                requests_routed: w.requests_routed,
+                health: w.health,
+                replayed_out: w.replayed_out,
+                core: w.stats.clone(),
+            })
+            .collect()
+    }
+
+    /// Router-level counters and the health roll-up.
+    pub fn router_stats(&self) -> RouterStats {
+        let alive = self
+            .workers
+            .iter()
+            .filter(|w| w.health.is_alive())
+            .count();
+        RouterStats {
+            shed: self.shed,
+            replayed: self.replayed,
+            retries: self.retries,
+            replica_failed: self.replica_failed,
+            alive,
+            dead: self.workers.len() - alive,
+            degraded: self.workers.len() > 1 && alive == 1,
+        }
+    }
+
+    /// Drain every worker (in-flight requests run to completion),
+    /// join every thread, and return the final events — finish lines
+    /// for all remaining streams included.
+    pub fn shutdown(mut self) -> Vec<RouterEvent> {
+        for w in &self.workers {
+            let _ = w.cmd.send(WorkerCmd::Shutdown);
+        }
+        loop {
+            let all_done = self.workers.iter().all(|w| {
+                w.stopped
+                    || w.thread
+                        .as_ref()
+                        .map(|t| t.is_finished())
+                        .unwrap_or(true)
+            });
+            if all_done {
+                break;
+            }
+            match self
+                .events_rx
+                .recv_timeout(Duration::from_millis(50))
+            {
+                Ok((i, ev)) => {
+                    self.absorb(i, ev);
+                    self.drain_events();
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        for w in &mut self.workers {
+            if let Some(t) = w.thread.take() {
+                let _ = t.join();
+            }
+        }
+        // every event ever sent is in the channel now
+        self.drain_events();
+        self.reap_lost();
+        std::mem::take(&mut self.out)
+    }
+
+    /// Absorb every event already queued, without blocking.
+    fn drain_events(&mut self) {
+        loop {
+            match self.events_rx.try_recv() {
+                Ok((i, ev)) => self.absorb(i, ev),
+                Err(_) => return,
+            }
+        }
+    }
+
+    /// Fold one worker event into routing state and the output queue.
+    fn absorb(&mut self, i: usize, ev: WorkerEvent) {
+        match ev {
+            WorkerEvent::Rejected { gid, transient } => {
+                self.retries += 1;
+                if self.requests.contains_key(&gid) {
+                    let w = &mut self.workers[i];
+                    w.outstanding = w.outstanding.saturating_sub(1);
+                }
+                if transient {
+                    self.quarantine_mirror(i);
+                } else if self.workers[i].health.is_alive() {
+                    // death confirmed by the Dead event that follows;
+                    // stop placing here immediately
+                    self.workers[i].health = ReplicaHealth::Dead;
+                    self.directory.purge_replica(i);
+                }
+                if self.requests.contains_key(&gid) {
+                    self.place(gid, false, vec![i]);
+                }
+            }
+            WorkerEvent::Stepped {
+                tokens,
+                finished,
+                cache,
+                stats,
+                err,
+            } => {
+                for ev in cache {
+                    match ev {
+                        CacheEvent::Registered { hash } => {
+                            self.directory.on_registered(i, hash)
+                        }
+                        CacheEvent::Evicted { hash } => {
+                            self.directory.on_evicted(i, hash)
+                        }
+                    }
+                }
+                for (gid, tok) in tokens {
+                    if let Some(req) = self.requests.get_mut(&gid) {
+                        req.cur.push(tok);
+                        self.out.push(RouterEvent::Token {
+                            id: gid,
+                            index: req.prior.len() + req.cur.len() - 1,
+                            token: tok,
+                        });
+                    }
+                }
+                for (gid, seq) in finished {
+                    self.finish_routed(i, gid, seq);
+                }
+                self.workers[i].stats = stats;
+                if err.is_some() {
+                    self.quarantine_mirror(i);
+                } else if matches!(self.workers[i].health,
+                                   ReplicaHealth::Quarantined { .. }) {
+                    self.workers[i].health = ReplicaHealth::Healthy;
+                }
+            }
+            WorkerEvent::Dead { error: _, inflight } => {
+                {
+                    let w = &mut self.workers[i];
+                    w.health = ReplicaHealth::Dead;
+                    w.dead_handled = true;
+                    w.outstanding = 0;
+                    w.replayed_out += inflight.len();
+                }
+                self.replayed += inflight.len();
+                self.directory.purge_replica(i);
+                for (gid, seq) in inflight {
+                    if let Some(req) = self.requests.get_mut(&gid) {
+                        // the drained output is authoritative (it
+                        // covers cores that do not stream); for
+                        // streaming cores it equals `cur`
+                        req.prior.extend_from_slice(&seq.output);
+                        req.cur.clear();
+                    }
+                    self.place(gid, false, vec![i]);
+                }
+            }
+            WorkerEvent::Stopped => {
+                self.workers[i].stopped = true;
+            }
+        }
+    }
+
+    /// A worker thread that exited without `Stopped` or `Dead` lost
+    /// its core to a raw panic. Every event it ever sent has already
+    /// been drained (sends happen before thread exit), so the front
+    /// end's own records are all that's left — replay from them.
+    fn reap_lost(&mut self) {
+        for i in 0..self.workers.len() {
+            let gone = self.workers[i]
+                .thread
+                .as_ref()
+                .map(|t| t.is_finished())
+                .unwrap_or(true);
+            if !gone
+                || self.workers[i].stopped
+                || self.workers[i].dead_handled
+            {
+                continue;
+            }
+            self.workers[i].health = ReplicaHealth::Dead;
+            self.workers[i].dead_handled = true;
+            self.workers[i].outstanding = 0;
+            self.directory.purge_replica(i);
+            let gids: Vec<u64> = self
+                .requests
+                .iter()
+                .filter(|(_, r)| r.replica == Some(i))
+                .map(|(&g, _)| g)
+                .collect();
+            self.workers[i].replayed_out += gids.len();
+            self.replayed += gids.len();
+            for gid in gids {
+                if let Some(req) = self.requests.get_mut(&gid) {
+                    // best effort: the streamed tokens are all we know
+                    let cur = std::mem::take(&mut req.cur);
+                    req.prior.extend(cur);
+                }
+                self.place(gid, false, vec![i]);
+            }
+        }
+    }
+
+    /// Mirror a transient failure (placement preference + stats; the
+    /// worker manages its own retry/backoff clock).
+    fn quarantine_mirror(&mut self, i: usize) {
+        let failures = match self.workers[i].health {
+            ReplicaHealth::Quarantined { failures, .. } => failures + 1,
+            ReplicaHealth::Dead => return,
+            ReplicaHealth::Healthy => 1,
+        };
+        self.workers[i].health =
+            ReplicaHealth::Quarantined { failures, retry_at_step: 0 };
+    }
+
+    /// Candidate workers for a placement, in preference order (the
+    /// synchronous router's rules over the mirror): alive and not in
+    /// `tried`; healthy preferred over quarantined; under-cap
+    /// preferred for fresh submissions.
+    fn candidates(&self, fresh: bool, tried: &[usize]) -> Vec<usize> {
+        let alive: Vec<usize> = (0..self.workers.len())
+            .filter(|&i| self.workers[i].health.is_alive()
+                && !tried.contains(&i))
+            .collect();
+        let pick_from = |pool: &[usize]| -> Vec<usize> {
+            let healthy: Vec<usize> = pool
+                .iter()
+                .copied()
+                .filter(|&i| {
+                    self.workers[i].health == ReplicaHealth::Healthy
+                })
+                .collect();
+            if healthy.is_empty() { pool.to_vec() } else { healthy }
+        };
+        let cap = self.rcfg.max_replica_queue;
+        if fresh && cap > 0 {
+            let under: Vec<usize> = alive
+                .iter()
+                .copied()
+                .filter(|&i| self.workers[i].outstanding < cap)
+                .collect();
+            if !under.is_empty() {
+                return pick_from(&under);
+            }
+        }
+        pick_from(&alive)
+    }
+
+    /// Should a fresh submission be shed? Same config knobs as the
+    /// synchronous router, evaluated against outstanding counts (the
+    /// front end cannot see queue splits across the seam, so
+    /// `max_waiting` bounds total outstanding — a slightly stricter,
+    /// still deterministic reading).
+    fn should_shed(&self) -> bool {
+        let alive: Vec<&WorkerHandle> = self
+            .workers
+            .iter()
+            .filter(|w| w.health.is_alive())
+            .collect();
+        if alive.is_empty() {
+            return false; // ReplicaFailed path, not Shed
+        }
+        if self.rcfg.max_waiting > 0 {
+            let total: usize =
+                alive.iter().map(|w| w.outstanding).sum();
+            if total >= self.rcfg.max_waiting {
+                return true;
+            }
+        }
+        let cap = self.rcfg.max_replica_queue;
+        cap > 0 && alive.iter().all(|w| w.outstanding >= cap)
+    }
+
+    /// Place request `gid` on some alive worker (`fresh` = subject to
+    /// admission control; replays and re-placements pass `false`).
+    /// A worker whose command channel is gone is marked dead and
+    /// skipped; with no candidate left the request finishes
+    /// `ReplicaFailed`.
+    fn place(&mut self, gid: u64, fresh: bool, mut tried: Vec<usize>) {
+        if fresh && self.should_shed() {
+            self.shed += 1;
+            self.finish_unrouted(gid, FinishReason::Shed);
+            return;
+        }
+        loop {
+            let (full_prompt, params) = {
+                let Some(req) = self.requests.get(&gid) else {
+                    return;
+                };
+                let mut p = req.prompt.clone();
+                p.extend_from_slice(&req.prior);
+                let mut params = req.params.clone();
+                // unfinished ⇒ prior < budget, so remainder ≥ 1
+                debug_assert!(req.prior.len() < req.max_new);
+                params.max_new_tokens =
+                    req.max_new.saturating_sub(req.prior.len()).max(1);
+                (p, params)
+            };
+            let n = self.workers.len();
+            let cands = self.candidates(fresh, &tried);
+            let hits = match self.rcfg.routing {
+                RoutingPolicy::CacheAware => self
+                    .directory
+                    .prefix_hits(&full_prompt, self.block_size, n),
+                _ => vec![0; n],
+            };
+            let loads: Vec<usize> =
+                self.workers.iter().map(|w| w.outstanding).collect();
+            let Some(r) = pick_replica(&self.rcfg,
+                                       &mut self.pick_state, &cands, n,
+                                       &hits, &loads)
+            else {
+                self.replica_failed += 1;
+                self.finish_unrouted(gid, FinishReason::ReplicaFailed);
+                return;
+            };
+            let cmd = WorkerCmd::Submit {
+                gid,
+                prompt: full_prompt,
+                params,
+            };
+            if self.workers[r].cmd.send(cmd).is_ok() {
+                self.workers[r].requests_routed += 1;
+                self.workers[r].outstanding += 1;
+                if let Some(req) = self.requests.get_mut(&gid) {
+                    req.replica = Some(r);
+                }
+                return;
+            }
+            // the worker is gone (its receiver dropped); its Dead
+            // event — or reap_lost — replays whatever it held
+            self.retries += 1;
+            if self.workers[r].health.is_alive() {
+                self.workers[r].health = ReplicaHealth::Dead;
+                self.directory.purge_replica(r);
+            }
+            tried.push(r);
+        }
+    }
+
+    /// Deliver a finished sequence from worker `i`, restoring the
+    /// client's prompt/budget and stitching replayed streams.
+    fn finish_routed(&mut self, i: usize, gid: u64, mut seq: Sequence) {
+        let Some(req) = self.requests.remove(&gid) else { return };
+        let w = &mut self.workers[i];
+        w.outstanding = w.outstanding.saturating_sub(1);
+        seq.prompt = req.prompt;
+        seq.params.max_new_tokens = req.max_new;
+        if !req.prior.is_empty() {
+            let mut output = req.prior;
+            output.extend_from_slice(&seq.output);
+            seq.output = output;
+        }
+        self.out.push(RouterEvent::Finished(RoutedFinish {
+            id: gid,
+            replica: Some(i),
+            seq,
+        }));
+    }
+
+    /// Finish a request no worker is serving (shed at admission, or no
+    /// survivor left). Tokens already streamed still stitch into the
+    /// reported output.
+    fn finish_unrouted(&mut self, gid: u64, reason: FinishReason) {
+        let Some(req) = self.requests.remove(&gid) else { return };
+        let mut params = req.params;
+        params.max_new_tokens = req.max_new;
+        let mut seq = Sequence::new(gid, req.prompt, params);
+        seq.output = req.prior;
+        seq.finish(reason);
+        self.out.push(RouterEvent::Finished(RoutedFinish {
+            id: gid,
+            replica: None,
+            seq,
+        }));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::EngineConfig;
+    use crate::coordinator::fake::{EchoCore, FakeCore};
+
+    fn drain(router: &mut AsyncRouter)
+        -> (Vec<RouterEvent>, Vec<RoutedFinish>) {
+        let mut events = vec![];
+        let mut fins = vec![];
+        for _ in 0..1000 {
+            for ev in router.poll(Duration::from_millis(50)) {
+                match ev {
+                    RouterEvent::Finished(f) => fins.push(f),
+                    t => events.push(t),
+                }
+            }
+            if !router.has_work() {
+                break;
+            }
+        }
+        (events, fins)
+    }
+
+    #[test]
+    fn single_echo_worker_round_trips() {
+        let mut r = AsyncRouter::new(vec![EchoCore::new()],
+                                     RouterConfig::default());
+        let id = r.submit(vec![7, 8], SamplingParams::default());
+        let (tokens, fins) = drain(&mut r);
+        assert_eq!(fins.len(), 1);
+        assert_eq!(fins[0].id, id);
+        assert_eq!(fins[0].replica, Some(0));
+        assert_eq!(fins[0].seq.output, vec![7]);
+        // the token streamed before (or with) the finish
+        assert!(matches!(tokens[..],
+                         [RouterEvent::Token { id: 0, index: 0,
+                                               token: 7 }]));
+        assert!(r.shutdown().is_empty());
+    }
+
+    #[test]
+    fn fake_worker_streams_match_final_output() {
+        let ecfg = EngineConfig {
+            block_size: 4,
+            ..Default::default()
+        };
+        let mut r = AsyncRouter::new(
+            vec![FakeCore::new(ecfg, 64)],
+            RouterConfig::default(),
+        );
+        let prompt: Vec<u32> = (0..9).collect();
+        let id = r.submit(prompt, SamplingParams {
+            max_new_tokens: 5,
+            ..Default::default()
+        });
+        let (tokens, fins) = drain(&mut r);
+        assert_eq!(fins.len(), 1);
+        let streamed: Vec<u32> = tokens
+            .iter()
+            .map(|t| match t {
+                RouterEvent::Token { id: tid, token, .. } => {
+                    assert_eq!(*tid, id);
+                    *token
+                }
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_eq!(streamed, fins[0].seq.output);
+        assert_eq!(streamed.len(), 5);
+        // indices are contiguous from zero
+        for (k, t) in tokens.iter().enumerate() {
+            match t {
+                RouterEvent::Token { index, .. } => {
+                    assert_eq!(*index, k)
+                }
+                _ => unreachable!(),
+            }
+        }
+        assert!(r.shutdown().is_empty());
+    }
+
+    #[test]
+    fn shutdown_finishes_inflight_requests() {
+        let ecfg = EngineConfig {
+            block_size: 4,
+            ..Default::default()
+        };
+        let mut r = AsyncRouter::new(
+            vec![FakeCore::new(ecfg, 64)],
+            RouterConfig::default(),
+        );
+        let id = r.submit((0..7).collect(), SamplingParams {
+            max_new_tokens: 4,
+            ..Default::default()
+        });
+        // no polling at all: shutdown alone must drain and deliver
+        let events = r.shutdown();
+        let fins: Vec<&RoutedFinish> = events
+            .iter()
+            .filter_map(|e| match e {
+                RouterEvent::Finished(f) => Some(f),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(fins.len(), 1);
+        assert_eq!(fins[0].id, id);
+        assert_eq!(fins[0].seq.output.len(), 4);
+    }
+}

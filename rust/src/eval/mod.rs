@@ -23,6 +23,8 @@ use crate::model::store::WeightStore;
 use crate::reffwd::{NoHook, RefModel};
 use crate::util::threadpool::parallel_map;
 
+/// Accuracy scores for one candidate store against the FP16 reference
+/// (see the module docs for the metric definitions).
 #[derive(Debug, Clone, Default)]
 pub struct EvalReport {
     /// Fraction of prompts whose greedy generation matches FP16 exactly.
@@ -32,6 +34,7 @@ pub struct EvalReport {
     /// Mean negative log-likelihood the candidate assigns to the
     /// reference model's greedy tokens (cross-model perplexity proxy).
     pub nll: f64,
+    /// Number of eval prompts the averages above were taken over.
     pub n_prompts: usize,
 }
 

@@ -30,7 +30,6 @@
 pub mod config;
 pub mod coordinator;
 pub mod data;
-#[allow(missing_docs)]
 pub mod eval;
 #[allow(missing_docs)]
 pub mod model;

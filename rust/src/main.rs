@@ -19,7 +19,6 @@ use sqplus::config::{
     QuantConfig, QuantMethod, RouterConfig, RoutingPolicy,
 };
 use sqplus::coordinator::engine::Engine;
-use sqplus::coordinator::router::Router;
 use sqplus::coordinator::sequence::SamplingParams;
 use sqplus::data::{corpus, tasks};
 use sqplus::model::init::{init_weights, InitSpec};
@@ -28,7 +27,7 @@ use sqplus::quant::{calib, pipeline};
 use sqplus::runtime::executor::ModelRuntime;
 use sqplus::runtime::manifest;
 use sqplus::runtime::simtp::Deployment;
-use sqplus::server::Server;
+use sqplus::server::{ServeOptions, Server};
 use sqplus::tokenizer::Tokenizer;
 use sqplus::util::cli::Args;
 
@@ -127,10 +126,12 @@ fn make_engine(args: &mut Args, out: &pipeline::QuantOutcome,
     ))
 }
 
-/// N replica engines behind a router (each replica loads its own
-/// runtime: device weights and executables are per-replica state).
-fn make_router(args: &mut Args, out: &pipeline::QuantOutcome,
-               cfg: &ModelConfig) -> Result<Router<Engine>> {
+/// N replica engines + the router configuration (each replica loads
+/// its own runtime: device weights and executables are per-replica
+/// state).
+fn make_replicas(args: &mut Args, out: &pipeline::QuantOutcome,
+                 cfg: &ModelConfig)
+    -> Result<(Vec<Engine>, RouterConfig)> {
     let replicas = args.opt_usize("replicas", 1, "replica engines");
     let routing_s = args.opt("routing", "cache-aware",
                              "cache-aware|least-loaded|round-robin");
@@ -154,13 +155,17 @@ fn make_router(args: &mut Args, out: &pipeline::QuantOutcome,
     let retry_backoff_steps = args.opt_usize(
         "retry-backoff", defaults.retry_backoff_steps,
         "quarantine backoff base (router steps, doubled per failure)");
+    let cache_spread_limit = args.opt_usize(
+        "cache-spread", defaults.cache_spread_limit,
+        "consecutive cache-aware placements on one replica before the \
+         pick spreads (0 = unbounded)");
     anyhow::ensure!(replicas >= 1, "--replicas must be at least 1");
     let mut cores = Vec::with_capacity(replicas);
     for i in 0..replicas {
         eprintln!("[setup] loading replica {i}/{replicas}");
         cores.push(make_engine(args, out, cfg)?);
     }
-    Ok(Router::new(cores, RouterConfig {
+    Ok((cores, RouterConfig {
         replicas,
         routing,
         watermarks: CacheWatermarks::new(high, low),
@@ -168,6 +173,7 @@ fn make_router(args: &mut Args, out: &pipeline::QuantOutcome,
         max_waiting,
         max_step_retries,
         retry_backoff_steps,
+        cache_spread_limit,
         ..Default::default()
     }))
 }
@@ -212,13 +218,29 @@ fn cmd_generate(args: &mut Args) -> Result<()> {
 
 fn cmd_serve(args: &mut Args) -> Result<()> {
     let port = args.opt_usize("port", 7181, "TCP port") as u16;
+    let loop_s = args.opt("serve-loop", "async",
+                          "async (per-replica worker threads) | sync \
+                           (single-thread reference loop)");
+    let sync_loop = match loop_s.as_str() {
+        "async" => false,
+        "sync" => true,
+        other => bail!("unknown serve loop {other}"),
+    };
+    let stream_buffer = args.opt_usize(
+        "stream-buffer", ServeOptions::default().stream_buffer,
+        "buffered lines per streaming response before a slow reader's \
+         stream parks");
     let (cfg, _, out, _) = build_model(args)?;
-    let router = make_router(args, &out, &cfg)?;
-    let n = router.replicas().len();
-    let policy = router.rcfg.routing.as_str();
-    let server = Server::spawn(router, port)?;
-    println!("sqplus serving on {} — {n} replica(s), {policy} routing \
-              (JSON lines: {{\"prompt\":[ids],\"max_new_tokens\":n}}; \
+    let (engines, rcfg) = make_replicas(args, &out, &cfg)?;
+    let n = engines.len();
+    let policy = rcfg.routing.as_str();
+    let mode = if sync_loop { "sync" } else { "threaded" };
+    let server = Server::spawn(engines, rcfg, port,
+                               ServeOptions { stream_buffer, sync_loop })?;
+    println!("sqplus serving on {} — {n} replica(s), {policy} routing, \
+              {mode} loop \
+              (JSON lines: {{\"prompt\":[ids],\"max_new_tokens\":n}}, \
+              add \"stream\":true for token lines; \
               admin: {{\"cmd\":\"stats\"}}, {{\"cmd\":\"metrics\"}})",
              server.addr());
     println!("press ctrl-c to stop");

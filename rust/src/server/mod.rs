@@ -1,12 +1,21 @@
 //! JSON-lines TCP serving front end (std::net + threads; tokio is not
-//! available in the offline build) over the multi-replica
-//! [`Router`](crate::coordinator::router::Router).
+//! available in the offline build) over the threaded multi-replica
+//! [`AsyncRouter`](crate::coordinator::worker::AsyncRouter) (or, with
+//! [`ServeOptions::sync_loop`], the synchronous
+//! [`Router`](crate::coordinator::router::Router) loop).
 //!
 //! Wire protocol — one JSON object per line:
 //!
 //! ```text
 //! -> {"prompt": [1,2,3], "max_new_tokens": 8, "temperature": 0.0}
 //! <- {"id": 0, "replica": 0, "tokens": [4,5,...], "finish": "max_tokens",
+//!     "ttft_ms": 12.3, "e2e_ms": 80.1, "cached_tokens": 0}
+//!
+//! -> {"prompt": [1,2,3], "max_new_tokens": 3, "stream": true}
+//! <- {"id": 1, "index": 0, "token": 4}
+//! <- {"id": 1, "index": 1, "token": 5}
+//! <- {"id": 1, "index": 2, "token": 6}
+//! <- {"id": 1, "replica": 0, "tokens": [4,5,6], "finish": "max_tokens",
 //!     "ttft_ms": 12.3, "e2e_ms": 80.1, "cached_tokens": 0}
 //!
 //! -> {"cmd": "stats"}
@@ -49,6 +58,14 @@
 //! with a survivor is replayed transparently: its response carries the
 //! full stitched token stream and the survivor's replica id.
 //!
+//! With `"stream": true` the response is preceded by one JSON line per
+//! emitted token — `{"id", "index", "token"}`, `index` contiguous from
+//! 0 — and always terminated by the normal response line (which
+//! repeats the full token list, so a streaming client can verify it
+//! dropped nothing). Replica death mid-stream does not restart the
+//! stream: replayed tokens are never re-sent, and indices stay
+//! contiguous across the replay.
+//!
 //! The `{"cmd": "stats"}` admin request snapshots one row per replica —
 //! queue depth (`waiting`/`running`), health state, KV occupancy,
 //! block-level cache hit/miss/eviction counters with the derived hit
@@ -61,32 +78,46 @@
 //! line so line-based clients can frame the multi-line body.
 //!
 //! Architecture: connection threads parse requests into an inbox; the
-//! router thread (the only owner of the PJRT runtimes, which are not
-//! Sync) drains the inbox, steps every replica with work, and routes
-//! finished sequences back through per-request response channels.
-//! Connection reads carry a short timeout so an idle client can never
-//! pin its thread past shutdown: [`Server::shutdown`] raises a flag,
-//! drains in-flight work, and joins *both* service threads (accept
-//! loop included — a self-connect wakes it to observe the flag).
+//! serving thread drains the inbox into the router front end and
+//! routes response lines back through bounded per-request channels;
+//! each replica core steps continuously on its own worker thread
+//! (see [`crate::coordinator::worker`]) — or, in `sync_loop` mode, the
+//! serving thread itself steps every replica in turn. Each connection
+//! thread owns its write half outright (requests on one connection are
+//! served strictly in order, so no lock is needed — and no lock means
+//! no poison to cascade). Response channels are bounded
+//! ([`ServeOptions::stream_buffer`] lines for a stream): when a slow
+//! reader's channel fills, its remaining lines park in the serving
+//! thread's per-stream queue and are re-offered round-robin each pass
+//! — a stalled client delays only its own stream, never a replica
+//! step and never another client. Connection reads carry a short
+//! timeout so an idle client can never pin its thread past shutdown:
+//! [`Server::shutdown`] raises a flag, drains in-flight work (streams
+//! in flight get their token and finish lines), and joins *both*
+//! service threads (accept loop included — a self-connect wakes it to
+//! observe the flag).
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::io::{BufRead, BufReader, ErrorKind, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::Duration;
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::engine::Engine;
+use crate::config::{CacheWatermarks, RouterConfig};
+use crate::coordinator::block_manager::CacheEvent;
+use crate::coordinator::engine::{Engine, StepOutcome};
 use crate::coordinator::replica::{
-    CoreStats, ReplicaCore, ReplicaHealth, ReplicaStats,
+    CoreStats, ReplicaCore, ReplicaError, ReplicaHealth, ReplicaStats,
 };
 use crate::coordinator::router::{Router, RouterStats};
 use crate::coordinator::sequence::{
     FinishReason, SamplingParams, Sequence,
 };
+use crate::coordinator::worker::{AsyncRouter, RouterEvent};
 use crate::util::json::{self, Value};
 
 /// How long a connection thread blocks on a read before re-checking
@@ -101,6 +132,9 @@ pub struct Request {
     pub prompt: Vec<u32>,
     /// Sampling parameters (defaults filled for absent fields).
     pub params: SamplingParams,
+    /// Stream one `{"id","index","token"}` line per emitted token
+    /// before the response line (`"stream": true` on the wire).
+    pub stream: bool,
 }
 
 /// Any parsed client line: a generation request or an admin command.
@@ -156,7 +190,18 @@ pub fn parse_request(line: &str) -> Result<Request> {
     if let Some(s) = v.get("seed").as_f64() {
         params.seed = s as u64;
     }
-    Ok(Request { prompt, params })
+    let stream = v.get("stream").as_bool().unwrap_or(false);
+    Ok(Request { prompt, params, stream })
+}
+
+/// Serialize one incrementally emitted token as its wire line.
+pub fn token_json(id: u64, index: usize, token: u32) -> String {
+    Value::obj(vec![
+        ("id", Value::num(id as f64)),
+        ("index", Value::num(index as f64)),
+        ("token", Value::num(token as f64)),
+    ])
+    .to_string()
 }
 
 /// Parse any client line: `{"cmd": ...}` admin commands first, else a
@@ -444,23 +489,92 @@ pub fn metrics_text(stats: &[ReplicaStats], router: &RouterStats)
 }
 
 enum Inbox {
-    Submit(Request, mpsc::Sender<String>),
-    Stats(mpsc::Sender<String>),
-    Metrics(mpsc::Sender<String>),
+    Submit(Request, mpsc::SyncSender<String>),
+    Stats(mpsc::SyncSender<String>),
+    Metrics(mpsc::SyncSender<String>),
     Shutdown,
 }
 
-/// Move-only wrapper that transfers the router to its serving thread.
+/// Serving-loop options.
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    /// Capacity, in lines, of each streaming response channel. A
+    /// stream whose client stops reading parks after this many
+    /// undelivered lines (further lines queue in the serving thread,
+    /// bounded by the request's own token budget) — other streams and
+    /// the replica step loops are unaffected.
+    pub stream_buffer: usize,
+    /// Serve from the single-thread synchronous [`Router`] loop
+    /// instead of per-replica worker threads — the pre-threading
+    /// behavior, kept for debugging and A/B tests (the stream-identity
+    /// golden pins the two loops to identical output).
+    pub sync_loop: bool,
+}
+
+impl Default for ServeOptions {
+    fn default() -> ServeOptions {
+        ServeOptions { stream_buffer: 32, sync_loop: false }
+    }
+}
+
+/// Move-only wrapper that lets an [`Engine`] cross onto its serving
+/// thread.
 ///
 /// SAFETY: `Engine` is not `Send` because the xla crate's PJRT handles
 /// use `Rc` internally. Every `Rc` clone of a client lives inside the
-/// same `Engine` (runtime buffers + executable cache), and every engine
-/// lives inside this router, so moving the whole router to exactly one
-/// thread — which is all this wrapper permits — never shares an `Rc`
-/// across threads. The router thread is the sole owner for the rest of
-/// its life.
-struct SendRouter(Router<Engine>);
-unsafe impl Send for SendRouter {}
+/// same `Engine` (runtime buffers + executable cache), so an engine
+/// moved *whole* to one thread never shares an `Rc` across threads.
+/// The serving loops uphold exactly that: each wrapped engine is owned
+/// by a single thread for the rest of its life — the synchronous
+/// router-loop thread (all replicas together), or in threaded mode its
+/// own worker thread (one replica each).
+pub struct SendEngine(pub Engine);
+unsafe impl Send for SendEngine {}
+
+impl ReplicaCore for SendEngine {
+    fn submit(&mut self, prompt: Vec<u32>, params: SamplingParams)
+        -> Result<u64, ReplicaError> {
+        // the trait impl, not the inherent method: it carries the
+        // catch_unwind fault classification
+        ReplicaCore::submit(&mut self.0, prompt, params)
+    }
+    fn step(&mut self) -> Result<StepOutcome, ReplicaError> {
+        ReplicaCore::step(&mut self.0)
+    }
+    fn has_work(&self) -> bool {
+        ReplicaCore::has_work(&self.0)
+    }
+    fn take_finished(&mut self) -> Vec<Sequence> {
+        ReplicaCore::take_finished(&mut self.0)
+    }
+    fn take_emitted(&mut self) -> Vec<(u64, u32)> {
+        ReplicaCore::take_emitted(&mut self.0)
+    }
+    fn drain_inflight(&mut self) -> Vec<Sequence> {
+        ReplicaCore::drain_inflight(&mut self.0)
+    }
+    fn block_size(&self) -> usize {
+        ReplicaCore::block_size(&self.0)
+    }
+    fn queue_depths(&self) -> (usize, usize) {
+        ReplicaCore::queue_depths(&self.0)
+    }
+    fn load(&self) -> usize {
+        ReplicaCore::load(&self.0)
+    }
+    fn enable_cache_events(&mut self) {
+        ReplicaCore::enable_cache_events(&mut self.0)
+    }
+    fn take_cache_events(&mut self) -> Vec<CacheEvent> {
+        ReplicaCore::take_cache_events(&mut self.0)
+    }
+    fn set_cache_watermarks(&mut self, wm: CacheWatermarks) {
+        ReplicaCore::set_cache_watermarks(&mut self.0, wm)
+    }
+    fn core_stats(&self) -> CoreStats {
+        ReplicaCore::core_stats(&self.0)
+    }
+}
 
 /// A running server; `addr()` gives the bound address, `shutdown()`
 /// stops the router loop after draining and joins every service
@@ -474,32 +588,39 @@ pub struct Server {
 }
 
 impl Server {
-    /// Spawn the server on `127.0.0.1:port` (0 = ephemeral). Takes
-    /// ownership of the router and its replicas (the PJRT runtimes are
-    /// not Sync; they live on the router thread). A single engine can
-    /// be served by wrapping it:
-    /// `Server::spawn(Router::single(engine), port)`.
-    pub fn spawn(router: Router<Engine>, port: u16) -> Result<Server> {
-        // NB: bind the whole wrapper inside the closure — edition-2021
-        // disjoint capture would otherwise capture the non-Send field.
-        let boxed = SendRouter(router);
-        Server::spawn_inner(port, move |rx| {
-            let whole = boxed; // force whole-struct capture (RFC 2229)
-            router_loop(whole.0, rx);
-        })
+    /// Spawn the server on `127.0.0.1:port` (0 = ephemeral) over PJRT
+    /// engines — one replica each. Default options serve from
+    /// per-replica worker threads; `opts.sync_loop` restores the
+    /// single-thread loop.
+    pub fn spawn(engines: Vec<Engine>, rcfg: RouterConfig, port: u16,
+                 opts: ServeOptions) -> Result<Server> {
+        let cores: Vec<SendEngine> =
+            engines.into_iter().map(SendEngine).collect();
+        Server::spawn_core(cores, rcfg, port, opts)
     }
 
-    /// Spawn the server over any `Send` replica core — the seam the
+    /// Spawn the server over any `Send` replica cores — the seam the
     /// server lifecycle tests use (a stub core needs no PJRT runtime).
-    pub fn spawn_core<C>(router: Router<C>, port: u16) -> Result<Server>
+    pub fn spawn_core<C>(cores: Vec<C>, rcfg: RouterConfig, port: u16,
+                         opts: ServeOptions) -> Result<Server>
     where
         C: ReplicaCore + Send + 'static,
     {
-        Server::spawn_inner(port, move |rx| router_loop(router, rx))
+        let stream_buffer = opts.stream_buffer.max(1);
+        if opts.sync_loop {
+            Server::spawn_inner(port, stream_buffer, move |rx| {
+                router_loop(Router::new(cores, rcfg), rx)
+            })
+        } else {
+            Server::spawn_inner(port, stream_buffer, move |rx| {
+                async_loop(AsyncRouter::new(cores, rcfg), rx)
+            })
+        }
     }
 
     fn spawn_inner(
         port: u16,
+        stream_buffer: usize,
         run_router: impl FnOnce(mpsc::Receiver<Inbox>) + Send + 'static,
     ) -> Result<Server> {
         let listener = TcpListener::bind(("127.0.0.1", port))?;
@@ -507,7 +628,8 @@ impl Server {
         let (tx, rx) = mpsc::channel::<Inbox>();
         let shutdown = Arc::new(AtomicBool::new(false));
 
-        // router loop thread (sole owner of the replica cores)
+        // serving-loop thread (owner of the router front end; in
+        // sync mode also of every replica core)
         let router_thread = std::thread::spawn(move || run_router(rx));
 
         // accept loop thread; checks the shutdown flag per connection
@@ -523,7 +645,8 @@ impl Server {
                 let tx = tx_accept.clone();
                 let conn_flag = flag.clone();
                 std::thread::spawn(move || {
-                    let _ = handle_conn(stream, tx, conn_flag);
+                    let _ = handle_conn(stream, tx, conn_flag,
+                                        stream_buffer);
                 });
             }
         });
@@ -560,14 +683,30 @@ impl Server {
     }
 }
 
+/// The `{"error": ...}` line a request gets when the serving loop goes
+/// away before answering it (shutdown race, or a serving-loop crash).
+/// Silently writing *nothing* here — the old behavior — left the
+/// client blocked on a response that would never come.
+fn dropped_request_line() -> String {
+    Value::obj(vec![(
+        "error",
+        Value::str("server dropped the request (shutting down)"),
+    )])
+    .to_string()
+}
+
 fn handle_conn(stream: TcpStream, tx: mpsc::Sender<Inbox>,
-               shutdown: Arc<AtomicBool>) -> Result<()> {
+               shutdown: Arc<AtomicBool>, stream_buffer: usize)
+    -> Result<()> {
     // bounded reads: an idle client parks here at most one timeout
     // interval past shutdown instead of pinning the thread forever
     stream.set_read_timeout(Some(CONN_READ_TIMEOUT))?;
     let peer_read = stream.try_clone()?;
     let mut reader = BufReader::new(peer_read);
-    let writer = Arc::new(Mutex::new(stream));
+    // this thread is the write half's sole owner — requests on one
+    // connection are answered strictly in order, so no shared writer,
+    // no lock, and no lock poison to cascade across requests
+    let mut writer = stream;
     // read_line appends, so a line split across timeouts accumulates
     let mut line = String::new();
     loop {
@@ -590,24 +729,40 @@ fn handle_conn(stream: TcpStream, tx: mpsc::Sender<Inbox>,
         }
         match parse_client_request(&req_line) {
             Ok(req) => {
-                let (rtx, rrx) = mpsc::channel::<String>();
+                // bounded response channel: the serving loop parks a
+                // stream whose client lags more than `stream_buffer`
+                // lines (admin responses are a single line)
+                let cap = match &req {
+                    ClientRequest::Generate(r) if r.stream => {
+                        stream_buffer
+                    }
+                    _ => 1,
+                };
+                let (rtx, rrx) = mpsc::sync_channel::<String>(cap);
                 let msg = match req {
                     ClientRequest::Generate(r) => Inbox::Submit(r, rtx),
                     ClientRequest::Stats => Inbox::Stats(rtx),
                     ClientRequest::Metrics => Inbox::Metrics(rtx),
                 };
                 if tx.send(msg).is_err() {
+                    writeln!(writer, "{}", dropped_request_line())?;
                     return Ok(());
                 }
-                // wait for the router's response, then write it back
-                if let Ok(resp) = rrx.recv() {
-                    let mut w = writer.lock().unwrap();
-                    writeln!(w, "{resp}")?;
+                // write every line (token lines, then the response)
+                // until the serving loop drops its sender
+                let mut delivered = 0usize;
+                while let Ok(resp) = rrx.recv() {
+                    writeln!(writer, "{resp}")?;
+                    delivered += 1;
+                }
+                if delivered == 0 {
+                    // the loop dropped the request unanswered — tell
+                    // the client instead of leaving it to hang
+                    writeln!(writer, "{}", dropped_request_line())?;
                 }
             }
             Err(e) => {
-                let mut w = writer.lock().unwrap();
-                writeln!(w, "{}", Value::obj(vec![
+                writeln!(writer, "{}", Value::obj(vec![
                     ("error", Value::str(format!("{e}"))),
                 ]))?;
             }
@@ -615,26 +770,166 @@ fn handle_conn(stream: TcpStream, tx: mpsc::Sender<Inbox>,
     }
 }
 
-fn router_loop<C: ReplicaCore>(mut router: Router<C>,
-                               rx: mpsc::Receiver<Inbox>) {
-    let mut pending: HashMap<u64, mpsc::Sender<String>> = HashMap::new();
-    let mut shutdown = false;
-    loop {
-        // deliver finished responses first: a submission can finish
-        // without any engine work (e.g. prompt_too_long or shed), and
-        // its response must go out before the loop blocks for new input
-        for fin in router.take_finished() {
-            if let Some(resp) = pending.remove(&fin.id) {
-                let _ =
-                    resp.send(response_json(fin.id, fin.replica, &fin.seq));
+/// Per-request response plumbing shared by both serving loops:
+/// bounded-channel delivery with per-stream parking and round-robin
+/// fairness across parked streams.
+struct Streams {
+    pending: HashMap<u64, Pending>,
+    /// Flush-pass rotation offset (fairness: no stream is always
+    /// first in line for channel capacity).
+    rotate: usize,
+}
+
+struct Pending {
+    tx: mpsc::SyncSender<String>,
+    stream: bool,
+    /// Token lines produced so far — i.e. the next token's index.
+    tokens: usize,
+    /// Lines produced but not yet accepted by the bounded channel
+    /// (a slow reader parks here; bounded by the request's budget).
+    queued: VecDeque<String>,
+    /// The response line is queued; the entry retires (dropping `tx`,
+    /// which ends the client's read loop) once `queued` drains.
+    done: bool,
+}
+
+impl Streams {
+    fn new() -> Streams {
+        Streams { pending: HashMap::new(), rotate: 0 }
+    }
+
+    fn insert(&mut self, id: u64, tx: mpsc::SyncSender<String>,
+              stream: bool) {
+        self.pending.insert(id, Pending {
+            tx,
+            stream,
+            tokens: 0,
+            queued: VecDeque::new(),
+            done: false,
+        });
+    }
+
+    fn on_token(&mut self, id: u64, token: u32) {
+        let Some(p) = self.pending.get_mut(&id) else { return };
+        if p.stream {
+            p.queued.push_back(token_json(id, p.tokens, token));
+        }
+        p.tokens += 1;
+    }
+
+    fn on_finished(&mut self, fin: &RoutedFinish) {
+        if let Some(p) = self.pending.get_mut(&fin.id) {
+            p.queued
+                .push_back(response_json(fin.id, fin.replica, &fin.seq));
+            p.done = true;
+        }
+    }
+
+    /// One delivery pass: offer each stream's queued lines to its
+    /// bounded channel, one line per stream per round (round-robin, so
+    /// a deep backlog cannot monopolize the pass), until every channel
+    /// is full or every queue is empty. Fully delivered requests
+    /// retire here. Never blocks.
+    fn flush(&mut self) {
+        let mut ids: Vec<u64> = self.pending.keys().copied().collect();
+        if ids.is_empty() {
+            return;
+        }
+        ids.sort_unstable();
+        self.rotate = (self.rotate + 1) % ids.len();
+        ids.rotate_left(self.rotate);
+        loop {
+            let mut progressed = false;
+            for &id in &ids {
+                let Some(p) = self.pending.get_mut(&id) else {
+                    continue;
+                };
+                let Some(line) = p.queued.front() else { continue };
+                match p.tx.try_send(line.clone()) {
+                    Ok(()) => {
+                        p.queued.pop_front();
+                        progressed = true;
+                    }
+                    Err(mpsc::TrySendError::Full(_)) => {}
+                    Err(mpsc::TrySendError::Disconnected(_)) => {
+                        // client gone; drop its lines (the router
+                        // still runs the request to completion)
+                        p.queued.clear();
+                    }
+                }
+            }
+            if !progressed {
+                break;
             }
         }
-        if shutdown && !router.has_work() && pending.is_empty() {
+        self.pending
+            .retain(|_, p| !(p.done && p.queued.is_empty()));
+    }
+
+    fn has_pending(&self) -> bool {
+        !self.pending.is_empty()
+    }
+
+    /// Any produced-but-undelivered lines? (Idle-blocking is only safe
+    /// when false — otherwise a parked stream would never drain.)
+    fn any_queued(&self) -> bool {
+        self.pending.values().any(|p| !p.queued.is_empty())
+    }
+
+    /// Retry delivery until everything drains or `total` elapses, then
+    /// drop the leftovers (each dropped sender ends its client's read
+    /// loop). Shutdown must not hang on a client that stopped reading.
+    fn flush_deadline(&mut self, total: Duration) {
+        let deadline = std::time::Instant::now() + total;
+        loop {
+            self.flush();
+            if !self.has_pending()
+                || std::time::Instant::now() >= deadline
+            {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        self.pending.clear();
+    }
+}
+
+/// The synchronous serving loop (`ServeOptions::sync_loop`): one
+/// thread owns every replica core and steps them in turn. Kept as the
+/// reference implementation the threaded loop is pinned against.
+fn router_loop<C: ReplicaCore>(mut router: Router<C>,
+                               rx: mpsc::Receiver<Inbox>) {
+    let mut streams = Streams::new();
+    let mut shutdown = false;
+    loop {
+        // deliver produced lines first: a submission can finish
+        // without any engine work (e.g. prompt_too_long or shed), and
+        // its response must go out before the loop blocks for input.
+        // Tokens drain before finishes — a finish retires its stream.
+        for (id, tok) in router.take_emitted() {
+            streams.on_token(id, tok);
+        }
+        for fin in router.take_finished() {
+            streams.on_finished(&fin);
+        }
+        streams.flush();
+        if shutdown && !router.has_work() {
             break;
         }
         // drain the inbox (blocking only while fully idle)
         loop {
-            let msg = if router.has_work() || shutdown {
+            let idle = !router.has_work()
+                && !streams.any_queued()
+                && !shutdown;
+            let msg = if idle {
+                match rx.recv() {
+                    Ok(m) => Some(m),
+                    Err(_) => {
+                        shutdown = true;
+                        None
+                    }
+                }
+            } else {
                 match rx.try_recv() {
                     Ok(m) => Some(m),
                     Err(mpsc::TryRecvError::Empty) => None,
@@ -643,32 +938,24 @@ fn router_loop<C: ReplicaCore>(mut router: Router<C>,
                         None
                     }
                 }
-            } else {
-                match rx.recv() {
-                    Ok(m) => Some(m),
-                    Err(_) => {
-                        shutdown = true;
-                        None
-                    }
-                }
             };
             match msg {
                 Some(Inbox::Submit(req, resp)) => {
                     let id = router.submit(req.prompt, req.params);
-                    pending.insert(id, resp);
+                    streams.insert(id, resp, req.stream);
                     if !router.has_work() {
                         break; // finished at submission: drain now
                     }
                 }
                 Some(Inbox::Stats(resp)) => {
-                    let _ = resp.send(
+                    let _ = resp.try_send(
                         stats_json(&router.stats(),
                                    &router.router_stats())
                             .to_string(),
                     );
                 }
                 Some(Inbox::Metrics(resp)) => {
-                    let _ = resp.send(metrics_text(
+                    let _ = resp.try_send(metrics_text(
                         &router.stats(),
                         &router.router_stats(),
                     ));
@@ -682,9 +969,105 @@ fn router_loop<C: ReplicaCore>(mut router: Router<C>,
         }
         // step() handles replica failures internally (quarantine /
         // kill-and-replay) and only errs on router-fatal conditions
-        if router.has_work() && router.step().is_err() {
+        if router.has_work() {
+            if router.step().is_err() {
+                break;
+            }
+        } else if streams.any_queued() && !shutdown {
+            // only a parked stream is left: wait for its reader
+            // without spinning
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+    // bounded final delivery: a reader that stopped consuming cannot
+    // pin shutdown
+    streams.flush_deadline(Duration::from_secs(2));
+}
+
+/// The threaded serving loop (default): replica cores step on their
+/// own worker threads; this thread only moves messages — inbox
+/// requests into the [`AsyncRouter`], router events out to the
+/// per-request channels.
+fn async_loop(mut router: AsyncRouter, rx: mpsc::Receiver<Inbox>) {
+    let mut streams = Streams::new();
+    let mut shutdown = false;
+    while !shutdown {
+        // block for input only when fully idle; otherwise just drain
+        // what's already queued
+        let idle = !router.has_work() && !streams.any_queued();
+        if idle {
+            match rx.recv() {
+                Ok(m) => {
+                    shutdown |= handle_msg(&mut router, &mut streams, m)
+                }
+                Err(_) => shutdown = true,
+            }
+        }
+        loop {
+            match rx.try_recv() {
+                Ok(m) => {
+                    shutdown |= handle_msg(&mut router, &mut streams, m)
+                }
+                Err(mpsc::TryRecvError::Empty) => break,
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    shutdown = true;
+                    break;
+                }
+            }
+        }
+        if shutdown {
             break;
         }
+        // collect worker events; the bounded wait paces this loop
+        // while work is in flight (workers never wait on it)
+        for ev in router.poll(Duration::from_millis(5)) {
+            match ev {
+                RouterEvent::Token { id, token, .. } => {
+                    streams.on_token(id, token)
+                }
+                RouterEvent::Finished(fin) => streams.on_finished(&fin),
+            }
+        }
+        streams.flush();
+    }
+    // drain the workers — every in-flight stream gets its remaining
+    // token lines and its finish line
+    for ev in router.shutdown() {
+        match ev {
+            RouterEvent::Token { id, token, .. } => {
+                streams.on_token(id, token)
+            }
+            RouterEvent::Finished(fin) => streams.on_finished(&fin),
+        }
+    }
+    streams.flush_deadline(Duration::from_secs(2));
+}
+
+/// Apply one inbox message to the threaded loop; `true` means
+/// shutdown was requested.
+fn handle_msg(router: &mut AsyncRouter, streams: &mut Streams,
+              msg: Inbox) -> bool {
+    match msg {
+        Inbox::Submit(req, resp) => {
+            let id = router.submit(req.prompt, req.params);
+            streams.insert(id, resp, req.stream);
+            false
+        }
+        Inbox::Stats(resp) => {
+            let _ = resp.try_send(
+                stats_json(&router.stats(), &router.router_stats())
+                    .to_string(),
+            );
+            false
+        }
+        Inbox::Metrics(resp) => {
+            let _ = resp.try_send(metrics_text(
+                &router.stats(),
+                &router.router_stats(),
+            ));
+            false
+        }
+        Inbox::Shutdown => true,
     }
 }
 
@@ -709,6 +1092,37 @@ impl Client {
             ("max_new_tokens", Value::num(max_new as f64)),
         ]);
         self.roundtrip(&req)
+    }
+
+    /// Send one streaming generation request; returns the token lines
+    /// (in arrival order) and the final response line.
+    pub fn request_stream(&mut self, prompt: &[u32], max_new: usize)
+        -> Result<(Vec<Value>, Value)> {
+        let req = Value::obj(vec![
+            ("prompt",
+             Value::Arr(prompt.iter().map(|&t| Value::num(t as f64))
+                 .collect())),
+            ("max_new_tokens", Value::num(max_new as f64)),
+            ("stream", Value::Bool(true)),
+        ]);
+        let s = self.stream.get_mut();
+        writeln!(s, "{req}")?;
+        let mut tokens = vec![];
+        loop {
+            let mut line = String::new();
+            if self.stream.read_line(&mut line)? == 0 {
+                anyhow::bail!("connection closed mid-stream");
+            }
+            let v = json::parse(line.trim())
+                .map_err(|e| anyhow::anyhow!("resp: {e}"))?;
+            // token lines carry "token"; the final line carries
+            // "finish" (or "error")
+            if v.get("token").as_f64().is_some() {
+                tokens.push(v);
+            } else {
+                return Ok((tokens, v));
+            }
+        }
     }
 
     /// Request the stats snapshot (JSON).
@@ -747,10 +1161,8 @@ impl Client {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::{CacheWatermarks, RouterConfig};
-    use crate::coordinator::block_manager::CacheEvent;
-    use crate::coordinator::engine::StepOutcome;
-    use crate::coordinator::replica::ReplicaError;
+    use crate::config::{EngineConfig, RouterConfig};
+    use crate::coordinator::fake::{EchoCore, FakeCore};
 
     #[test]
     fn parse_request_fields() {
@@ -1036,65 +1448,15 @@ mod tests {
         }
     }
 
-    /// A stub core that finishes every request at submission (echoing
-    /// one token) — enough to drive the full server lifecycle without
-    /// a PJRT runtime.
-    struct EchoCore {
-        next: u64,
-        finished: Vec<Sequence>,
-    }
-    impl EchoCore {
-        fn new() -> EchoCore {
-            EchoCore { next: 0, finished: vec![] }
-        }
-    }
-    impl ReplicaCore for EchoCore {
-        fn submit(&mut self, prompt: Vec<u32>, params: SamplingParams)
-            -> Result<u64, ReplicaError> {
-            let id = self.next;
-            self.next += 1;
-            let first = prompt.first().copied().unwrap_or(0);
-            let mut seq = Sequence::new(id, prompt, params);
-            seq.record_token(first);
-            seq.finish(FinishReason::MaxTokens);
-            self.finished.push(seq);
-            Ok(id)
-        }
-        fn step(&mut self) -> Result<StepOutcome, ReplicaError> {
-            Ok(StepOutcome::Idle)
-        }
-        fn has_work(&self) -> bool {
-            false
-        }
-        fn take_finished(&mut self) -> Vec<Sequence> {
-            std::mem::take(&mut self.finished)
-        }
-        fn drain_inflight(&mut self) -> Vec<Sequence> {
-            vec![]
-        }
-        fn block_size(&self) -> usize {
-            4
-        }
-        fn queue_depths(&self) -> (usize, usize) {
-            (0, 0)
-        }
-        fn enable_cache_events(&mut self) {}
-        fn take_cache_events(&mut self) -> Vec<CacheEvent> {
-            vec![]
-        }
-        fn set_cache_watermarks(&mut self, _: CacheWatermarks) {}
-        fn core_stats(&self) -> CoreStats {
-            CoreStats::default()
-        }
-    }
-
-    fn echo_router() -> Router<EchoCore> {
-        Router::new(vec![EchoCore::new()], RouterConfig::default())
+    fn echo_server(opts: ServeOptions) -> Server {
+        Server::spawn_core(vec![EchoCore::new()],
+                           RouterConfig::default(), 0, opts)
+            .unwrap()
     }
 
     #[test]
     fn server_round_trips_and_shuts_down_with_idle_connection() {
-        let server = Server::spawn_core(echo_router(), 0).unwrap();
+        let server = echo_server(ServeOptions::default());
         let addr = server.addr();
         let mut c = Client::connect(addr).unwrap();
         let v = c.request(&[7, 8, 9], 4).unwrap();
@@ -1119,7 +1481,7 @@ mod tests {
 
     #[test]
     fn server_stats_and_metrics_over_the_wire() {
-        let server = Server::spawn_core(echo_router(), 0).unwrap();
+        let server = echo_server(ServeOptions::default());
         let mut c = Client::connect(server.addr()).unwrap();
         c.request(&[1, 2], 2).unwrap();
         let v = c.stats().unwrap();
@@ -1138,6 +1500,95 @@ mod tests {
         // the same connection still serves generation afterwards
         let v = c.request(&[3], 1).unwrap();
         assert_eq!(v.get("finish").as_str(), Some("max_tokens"));
+        server.shutdown();
+    }
+
+    #[test]
+    fn dropped_reply_sender_yields_error_line() {
+        // regression: the serving loop dying (or shutting down) with a
+        // request outstanding used to silently write *nothing*,
+        // leaving the client blocked forever on a response line
+        let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+        let addr = listener.local_addr().unwrap();
+        let (tx, rx) = mpsc::channel::<Inbox>();
+        let flag = Arc::new(AtomicBool::new(false));
+        let conn = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let _ = handle_conn(stream, tx, flag, 8);
+        });
+        // the "router" receives the request, then dies without a reply
+        let router = std::thread::spawn(move || match rx.recv() {
+            Ok(Inbox::Submit(_, rtx)) => drop(rtx),
+            other => panic!("expected a submit, got {:?}",
+                            other.is_ok()),
+        });
+        let mut c = Client::connect(addr).unwrap();
+        let v = c.request(&[1, 2], 3).unwrap();
+        assert!(
+            v.get("error")
+                .as_str()
+                .map(|e| e.contains("dropped"))
+                .unwrap_or(false),
+            "expected a dropped-request error line, got {v}"
+        );
+        router.join().unwrap();
+        drop(c);
+        conn.join().unwrap();
+    }
+
+    #[test]
+    fn streaming_over_the_wire_tokens_before_finish() {
+        let ecfg = EngineConfig {
+            block_size: 4,
+            ..Default::default()
+        };
+        let server = Server::spawn_core(
+            vec![FakeCore::new(ecfg, 64)],
+            RouterConfig::default(),
+            0,
+            ServeOptions::default(),
+        )
+        .unwrap();
+        let mut c = Client::connect(server.addr()).unwrap();
+        let (tokens, fin) = c.request_stream(&[1, 2, 3, 4, 5], 4)
+            .unwrap();
+        // every token line precedes the finish line, in index order
+        assert_eq!(tokens.len(), 4);
+        let idx: Vec<usize> = tokens
+            .iter()
+            .map(|t| t.get("index").as_usize().unwrap())
+            .collect();
+        assert_eq!(idx, vec![0, 1, 2, 3]);
+        // the finish line repeats the streamed tokens exactly
+        let streamed: Vec<usize> = tokens
+            .iter()
+            .map(|t| t.get("token").as_usize().unwrap())
+            .collect();
+        let fin_tokens: Vec<usize> = fin
+            .get("tokens")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_usize().unwrap())
+            .collect();
+        assert_eq!(streamed, fin_tokens);
+        assert_eq!(fin.get("finish").as_str(), Some("max_tokens"));
+        server.shutdown();
+    }
+
+    #[test]
+    fn sync_loop_mode_serves_and_streams() {
+        let server = echo_server(ServeOptions {
+            sync_loop: true,
+            ..Default::default()
+        });
+        let mut c = Client::connect(server.addr()).unwrap();
+        let v = c.request(&[5], 1).unwrap();
+        assert_eq!(v.get("finish").as_str(), Some("max_tokens"));
+        let (tokens, fin) = c.request_stream(&[9, 8], 1).unwrap();
+        assert_eq!(tokens.len(), 1);
+        assert_eq!(tokens[0].get("token").as_usize(), Some(9));
+        assert_eq!(fin.get("tokens").as_arr().unwrap().len(), 1);
         server.shutdown();
     }
 }

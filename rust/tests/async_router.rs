@@ -1,0 +1,374 @@
+//! Threaded front-end ([`AsyncRouter`]) properties over deterministic
+//! fake cores — the async counterpart of `router_properties.rs`.
+//!
+//! The content-determined fake model makes exact stream goldens
+//! feasible even though worker threads interleave nondeterministically:
+//! any correct scheduling/batching/replay must produce bit-identical
+//! per-request token streams. Locked down:
+//!
+//! * **stream-identity golden**: the N-worker threaded router produces
+//!   the same `(id, output, finish)` triples as the synchronous
+//!   [`Router`] and as a bare [`FakeCore`] on the same work, and every
+//!   incrementally streamed token sequence equals the finished output
+//!   (indices contiguous from 0);
+//! * a replica **killed mid-stream** on its own worker thread loses no
+//!   request and duplicates no token: in-flight work replays onto the
+//!   survivor and streams stay bit-identical to the fault-free run,
+//!   with the dead replica purged from the cache directory;
+//! * a transient **brown-out recovers** on the worker's own
+//!   retry/backoff clock without death or replay;
+//! * **admission control sheds deterministically**: back-to-back
+//!   submissions are judged against the front end's own outstanding
+//!   counts, which cannot change between submits.
+
+use std::collections::HashMap;
+use std::time::Duration;
+
+use sqplus::config::{EngineConfig, RouterConfig, RoutingPolicy};
+use sqplus::coordinator::fake::FakeCore;
+use sqplus::coordinator::fault::{FaultSpec, FaultyCore};
+use sqplus::coordinator::replica::{ReplicaCore, ReplicaStats};
+use sqplus::coordinator::router::{RoutedFinish, Router, RouterStats};
+use sqplus::coordinator::sequence::{FinishReason, SamplingParams};
+use sqplus::coordinator::worker::{AsyncRouter, RouterEvent};
+
+fn ecfg(block_size: usize) -> EngineConfig {
+    EngineConfig {
+        max_running: 4,
+        max_batch_tokens: 64,
+        decode_batches: vec![1, 2, 4, 8],
+        prefill_buckets: vec![(4, 64)],
+        block_size,
+        ..Default::default()
+    }
+}
+
+fn sp(max_new: usize) -> SamplingParams {
+    SamplingParams { max_new_tokens: max_new, ..Default::default() }
+}
+
+/// Deterministic work list: 6 unique prompts with mixed budgets.
+fn work_list() -> Vec<(Vec<u32>, usize)> {
+    (0..6u32)
+        .map(|i| {
+            let p: Vec<u32> = (0..(6 + i as usize % 5) as u32)
+                .map(|t| 500 + i * 97 + t)
+                .collect();
+            (p, 2 + i as usize % 4)
+        })
+        .collect()
+}
+
+type Outs = Vec<(u64, Vec<u32>, Option<FinishReason>)>;
+
+/// Drive a bare core over the work list; the reference streams.
+fn run_bare(mut core: FakeCore, work: &[(Vec<u32>, usize)]) -> Outs {
+    for (p, max_new) in work {
+        core.submit(p.clone(), sp(*max_new)).unwrap();
+    }
+    let mut out: Outs = vec![];
+    for _ in 0..10_000 {
+        core.step().unwrap();
+        for q in core.take_finished() {
+            out.push((q.id, q.output.clone(), q.finish));
+        }
+        if !core.has_work() {
+            break;
+        }
+    }
+    assert!(!core.has_work(), "bare core did not drain");
+    out.sort_by_key(|(id, _, _)| *id);
+    out
+}
+
+/// Drive the synchronous router over the same work.
+fn run_sync(
+    cores: Vec<FakeCore>,
+    rcfg: RouterConfig,
+    work: &[(Vec<u32>, usize)],
+) -> Outs {
+    let mut router = Router::new(cores, rcfg);
+    for (p, max_new) in work {
+        router.submit(p.clone(), sp(*max_new));
+    }
+    router.run_to_completion(10_000).unwrap();
+    let mut out: Outs = router
+        .take_finished()
+        .into_iter()
+        .map(|f| (f.id, f.seq.output, f.seq.finish))
+        .collect();
+    out.sort_by_key(|(id, _, _)| *id);
+    out
+}
+
+/// Everything a threaded run produced, for assertions after the fact.
+struct AsyncRun {
+    outs: Outs,
+    fins: Vec<RoutedFinish>,
+    /// Incrementally streamed tokens per request, in index order
+    /// (contiguity is asserted as the events arrive).
+    streams: HashMap<u64, Vec<u32>>,
+    stats: Vec<ReplicaStats>,
+    rstats: RouterStats,
+    /// Whether the cache directory still hints at replica `i`
+    /// (snapshot taken after the last request finished).
+    dir_mentions: Vec<bool>,
+}
+
+fn apply(
+    ev: RouterEvent,
+    streams: &mut HashMap<u64, Vec<u32>>,
+    fins: &mut Vec<RoutedFinish>,
+) {
+    match ev {
+        RouterEvent::Token { id, index, token } => {
+            let s = streams.entry(id).or_default();
+            assert_eq!(index, s.len(),
+                       "stream {id}: non-contiguous token index");
+            s.push(token);
+        }
+        RouterEvent::Finished(f) => fins.push(f),
+    }
+}
+
+/// Submit the whole work list back-to-back, poll to completion, then
+/// shut down and fold in the final events.
+fn run_async<C>(
+    cores: Vec<C>,
+    rcfg: RouterConfig,
+    work: &[(Vec<u32>, usize)],
+) -> AsyncRun
+where
+    C: ReplicaCore + Send + 'static,
+{
+    let mut router = AsyncRouter::new(cores, rcfg);
+    for (p, max_new) in work {
+        router.submit(p.clone(), sp(*max_new));
+    }
+    let mut streams: HashMap<u64, Vec<u32>> = HashMap::new();
+    let mut fins: Vec<RoutedFinish> = vec![];
+    let mut polls = 0usize;
+    while fins.len() < work.len() {
+        polls += 1;
+        assert!(polls < 3_000,
+                "async router did not drain: {}/{} finished",
+                fins.len(), work.len());
+        for ev in router.poll(Duration::from_millis(10)) {
+            apply(ev, &mut streams, &mut fins);
+        }
+    }
+    let stats = router.stats();
+    let rstats = router.router_stats();
+    let dir_mentions = (0..stats.len())
+        .map(|i| router.directory().mentions_replica(i))
+        .collect();
+    for ev in router.shutdown() {
+        apply(ev, &mut streams, &mut fins);
+    }
+    let mut outs: Outs = fins
+        .iter()
+        .map(|f| (f.id, f.seq.output.clone(), f.seq.finish))
+        .collect();
+    outs.sort_by_key(|(id, _, _)| *id);
+    AsyncRun { outs, fins, streams, stats, rstats, dir_mentions }
+}
+
+/// Every non-shed request's incremental stream must equal its finished
+/// output exactly — no token lost, duplicated, or re-sent on replay.
+fn assert_streams_match(run: &AsyncRun) {
+    for (id, output, finish) in &run.outs {
+        let streamed =
+            run.streams.get(id).cloned().unwrap_or_default();
+        if *finish == Some(FinishReason::Shed) {
+            assert!(streamed.is_empty(),
+                    "shed request {id} streamed tokens");
+        } else {
+            assert_eq!(&streamed, output,
+                       "request {id}: streamed tokens != final output");
+        }
+    }
+}
+
+#[test]
+fn n2_worker_router_bit_identical_to_sync_and_bare() {
+    // The stream-identity golden: same work through a bare core, the
+    // synchronous router, and the 2-worker threaded router — three
+    // identical sets of (id, output, finish) triples, and the threaded
+    // router's incremental streams equal its finished outputs.
+    let bs = 4;
+    let work = work_list();
+    let bare = run_bare(FakeCore::new(ecfg(bs), 128), &work);
+    let sync = run_sync(
+        vec![FakeCore::new(ecfg(bs), 128), FakeCore::new(ecfg(bs), 128)],
+        RouterConfig {
+            routing: RoutingPolicy::RoundRobin,
+            ..Default::default()
+        },
+        &work,
+    );
+    let run = run_async(
+        vec![FakeCore::new(ecfg(bs), 128), FakeCore::new(ecfg(bs), 128)],
+        RouterConfig {
+            routing: RoutingPolicy::RoundRobin,
+            ..Default::default()
+        },
+        &work,
+    );
+    assert_eq!(sync, bare, "sync router diverged from bare core");
+    assert_eq!(run.outs, bare, "threaded router diverged from bare");
+    assert_streams_match(&run);
+    // placement happens at submit time on the caller's thread, so
+    // round-robin over back-to-back submits is exact
+    let routed: Vec<usize> =
+        run.stats.iter().map(|s| s.requests_routed).collect();
+    assert_eq!(routed, vec![3, 3]);
+    assert_eq!(run.rstats.dead, 0);
+    assert_eq!(run.rstats.replayed, 0);
+    assert_eq!(run.rstats.shed, 0);
+    for f in &run.fins {
+        assert!(f.replica.is_some(), "finish without a placement");
+    }
+}
+
+#[test]
+fn replica_killed_mid_stream_replays_onto_survivor() {
+    // Worker 0's core dies permanently on its second step — mid-stream,
+    // while worker 1 keeps stepping on its own thread. Every request
+    // must still finish, streams must stay bit-identical to the
+    // fault-free run, and no token may be duplicated or re-sent.
+    let bs = 4;
+    let work = work_list();
+    let bare = run_bare(FakeCore::new(ecfg(bs), 128), &work);
+    let run = run_async(
+        vec![
+            FaultyCore::new(FakeCore::new(ecfg(bs), 128),
+                            FaultSpec::FailOnStepK { k: 2 }),
+            FaultyCore::new(FakeCore::new(ecfg(bs), 128),
+                            FaultSpec::FailOnStepK { k: usize::MAX }),
+        ],
+        RouterConfig {
+            routing: RoutingPolicy::RoundRobin,
+            ..Default::default()
+        },
+        &work,
+    );
+    assert_eq!(run.outs, bare,
+               "streams diverged across mid-stream replica death");
+    assert_streams_match(&run);
+    assert_eq!(run.rstats.dead, 1);
+    assert_eq!(run.rstats.alive, 1);
+    assert!(run.rstats.degraded);
+    assert!(run.rstats.replayed >= 1,
+            "death at step 2 must strand at least one in-flight \
+             request");
+    assert_eq!(run.rstats.replica_failed, 0);
+    assert!(run.stats[0].health.is_dead());
+    assert!(run.stats[1].health.is_alive());
+    assert!(!run.dir_mentions[0],
+            "dead replica still hinted in the directory");
+    // the survivor ends up serving everything the victim dropped
+    assert!(run.stats[1].requests_routed >= 3 + run.rstats.replayed);
+}
+
+#[test]
+fn transient_brownout_recovers_on_worker_clock() {
+    // Worker 0 browns out for two consecutive steps, then recovers.
+    // The worker retries with backoff on its own thread; the front end
+    // only mirrors the quarantine. No death, no replay, identical
+    // streams.
+    let bs = 4;
+    let work = work_list();
+    let bare = run_bare(FakeCore::new(ecfg(bs), 128), &work);
+    let run = run_async(
+        vec![
+            FaultyCore::new(FakeCore::new(ecfg(bs), 128),
+                            FaultSpec::TransientThenRecover {
+                                from: 2,
+                                fails: 2,
+                            }),
+            FaultyCore::new(FakeCore::new(ecfg(bs), 128),
+                            FaultSpec::FailOnStepK { k: usize::MAX }),
+        ],
+        RouterConfig {
+            routing: RoutingPolicy::RoundRobin,
+            max_step_retries: 10,
+            retry_backoff_steps: 1,
+            ..Default::default()
+        },
+        &work,
+    );
+    assert_eq!(run.outs, bare, "brown-out changed a stream");
+    assert_streams_match(&run);
+    assert_eq!(run.rstats.dead, 0);
+    assert_eq!(run.rstats.replayed, 0);
+    assert_eq!(run.rstats.replica_failed, 0);
+    for (_, _, finish) in &run.outs {
+        assert_eq!(*finish, Some(FinishReason::MaxTokens));
+    }
+    for s in &run.stats {
+        assert!(s.health.is_alive());
+    }
+}
+
+#[test]
+fn admission_sheds_back_to_back_submits_deterministically() {
+    // Admission control runs on the caller's thread against the front
+    // end's own outstanding counts, which cannot change between
+    // back-to-back submits — so exactly the first `max_waiting`
+    // requests are admitted and the rest shed, every run.
+    let bs = 4;
+    let work = work_list();
+    let mut router = AsyncRouter::new(
+        vec![FakeCore::new(ecfg(bs), 128)],
+        RouterConfig { max_waiting: 2, ..Default::default() },
+    );
+    let ids: Vec<u64> = work
+        .iter()
+        .map(|(p, max_new)| router.submit(p.clone(), sp(*max_new)))
+        .collect();
+    let mut streams: HashMap<u64, Vec<u32>> = HashMap::new();
+    let mut fins: Vec<RoutedFinish> = vec![];
+    let mut polls = 0usize;
+    while fins.len() < work.len() {
+        polls += 1;
+        assert!(polls < 3_000, "shed run did not drain");
+        for ev in router.poll(Duration::from_millis(10)) {
+            apply(ev, &mut streams, &mut fins);
+        }
+    }
+    let rstats = router.router_stats();
+    for ev in router.shutdown() {
+        apply(ev, &mut streams, &mut fins);
+    }
+    fins.sort_by_key(|f| f.id);
+    let shed_ids: Vec<u64> = fins
+        .iter()
+        .filter(|f| f.seq.finish == Some(FinishReason::Shed))
+        .map(|f| f.id)
+        .collect();
+    assert_eq!(shed_ids, ids[2..].to_vec(),
+               "shed set is not the deterministic tail");
+    assert_eq!(rstats.shed, work.len() - 2);
+    for f in &fins {
+        if f.seq.finish == Some(FinishReason::Shed) {
+            assert!(f.replica.is_none());
+            assert!(f.seq.output.is_empty());
+            assert!(!streams.contains_key(&f.id),
+                    "shed request {} streamed tokens", f.id);
+        } else {
+            assert_eq!(f.seq.finish, Some(FinishReason::MaxTokens));
+        }
+    }
+    // the two admitted requests generate exactly what a bare core
+    // would for the same prompts
+    let bare = run_bare(FakeCore::new(ecfg(bs), 128), &work[..2]);
+    for ((id, out), (_, bare_out, _)) in fins
+        .iter()
+        .filter(|f| f.seq.finish == Some(FinishReason::MaxTokens))
+        .map(|f| (f.id, f.seq.output.clone()))
+        .zip(bare)
+    {
+        assert_eq!(out, bare_out, "admitted request {id} diverged");
+        assert_eq!(streams[&id], out);
+    }
+}

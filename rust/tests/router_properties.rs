@@ -31,183 +31,17 @@
 //!   finish reason; and a randomized fault-injection sweep holds all
 //!   of the recovery invariants at once.
 
-use std::collections::HashMap;
-
 use sqplus::config::{
     CacheWatermarks, EngineConfig, RouterConfig, RoutingPolicy,
 };
-use sqplus::coordinator::block_manager::{BlockManager, CacheEvent};
-use sqplus::coordinator::engine::StepOutcome;
+use sqplus::coordinator::fake::FakeCore;
 use sqplus::coordinator::fault::{FaultSpec, FaultyCore};
-use sqplus::coordinator::replica::{
-    CoreStats, ReplicaCore, ReplicaError, ReplicaHealth,
-};
+use sqplus::coordinator::replica::{ReplicaCore, ReplicaHealth};
 use sqplus::coordinator::router::{RoutedFinish, Router};
-use sqplus::coordinator::scheduler::Scheduler;
-use sqplus::coordinator::sequence::{
-    FinishReason, SamplingParams, SeqState, Sequence,
-};
+use sqplus::coordinator::sequence::{FinishReason, SamplingParams};
 use sqplus::util::json;
 use sqplus::util::prop;
 use sqplus::util::rng::Rng;
-
-/// Deterministic fake model: the next token is a pure function of the
-/// content so far — so token streams cannot depend on routing,
-/// chunking, preemption, batching, or *replica replay*, and any
-/// divergence is a real scheduling/recovery bug.
-fn fake_next_token(content: &[u32]) -> u32 {
-    let mut h = 0xcbf2_9ce4_8422_2325u64;
-    for &t in content {
-        h ^= t as u64;
-        h = h.wrapping_mul(0x100_0000_01b3);
-    }
-    (h % 997) as u32
-}
-
-/// One replica core: the real scheduler + block manager driven exactly
-/// the way `Engine` drives them, with the fake model supplying tokens.
-struct FakeCore {
-    sched: Scheduler,
-    seqs: HashMap<u64, Sequence>,
-    finished: Vec<Sequence>,
-    next_id: u64,
-    prefill_tokens_executed: usize,
-    cached_prefix_tokens: usize,
-}
-
-impl FakeCore {
-    fn new(ecfg: EngineConfig, total_blocks: usize) -> FakeCore {
-        let bm = BlockManager::new(ecfg.block_size, total_blocks);
-        FakeCore {
-            sched: Scheduler::new(ecfg, bm),
-            seqs: HashMap::new(),
-            finished: vec![],
-            next_id: 0,
-            prefill_tokens_executed: 0,
-            cached_prefix_tokens: 0,
-        }
-    }
-
-    fn finish_if_done(&mut self, id: u64) {
-        if let Some(r) = self.seqs[&id].should_finish() {
-            let mut q = self.seqs.remove(&id).unwrap();
-            q.finish(r);
-            self.sched.on_finished(id);
-            self.finished.push(q);
-        }
-    }
-}
-
-impl ReplicaCore for FakeCore {
-    fn submit(&mut self, prompt: Vec<u32>, params: SamplingParams)
-        -> Result<u64, ReplicaError> {
-        let id = self.next_id;
-        self.next_id += 1;
-        self.seqs.insert(id, Sequence::new(id, prompt, params));
-        self.sched.add(id);
-        Ok(id)
-    }
-
-    fn step(&mut self) -> Result<StepOutcome, ReplicaError> {
-        let plan = self.sched.plan(&self.seqs);
-        for v in self.sched.preempted.clone() {
-            let q = self.seqs.get_mut(&v).unwrap();
-            if matches!(q.state,
-                        SeqState::Running | SeqState::Prefilling) {
-                q.preempt();
-            }
-        }
-        for v in self.sched.dropped.clone() {
-            if let Some(mut q) = self.seqs.remove(&v) {
-                q.finish(FinishReason::PoolExhausted);
-                self.sched.on_finished(v);
-                self.finished.push(q);
-            }
-        }
-        let mut chunk_tokens = 0;
-        let mut completed_prefills = 0;
-        for c in &plan.chunks {
-            let toks = self.seqs[&c.id].full_tokens();
-            {
-                let q = self.seqs.get_mut(&c.id).unwrap();
-                q.prefill_progress = c.end;
-                if c.admitted {
-                    q.cached_prefix_len = c.start;
-                    self.cached_prefix_tokens += c.start;
-                }
-            }
-            self.prefill_tokens_executed += c.end - c.start;
-            chunk_tokens += c.end - c.start;
-            self.sched.bm.register_prefix(c.id, &toks[..c.end]);
-            let q = self.seqs.get_mut(&c.id).unwrap();
-            if c.end == toks.len() {
-                completed_prefills += 1;
-                q.state = SeqState::Running;
-                q.record_token(fake_next_token(&toks));
-                self.finish_if_done(c.id);
-            } else {
-                q.state = SeqState::Prefilling;
-            }
-        }
-        let decoded = plan.decode.len();
-        for id in plan.decode.clone() {
-            let q = self.seqs.get_mut(&id).unwrap();
-            q.record_token(fake_next_token(&q.full_tokens()));
-            self.finish_if_done(id);
-        }
-        if chunk_tokens == 0 && decoded == 0 {
-            Ok(StepOutcome::Idle)
-        } else {
-            Ok(StepOutcome::Ran {
-                chunk_tokens,
-                completed_prefills,
-                decoded,
-            })
-        }
-    }
-
-    fn has_work(&self) -> bool {
-        self.sched.has_work()
-    }
-    fn take_finished(&mut self) -> Vec<Sequence> {
-        std::mem::take(&mut self.finished)
-    }
-    fn drain_inflight(&mut self) -> Vec<Sequence> {
-        self.sched.drain();
-        let mut out: Vec<Sequence> =
-            self.seqs.drain().map(|(_, s)| s).collect();
-        self.sched.bm.clear_cache();
-        self.sched.bm.take_evicted();
-        out.sort_by_key(|s| s.id);
-        out
-    }
-    fn block_size(&self) -> usize {
-        self.sched.bm.block_size
-    }
-    fn queue_depths(&self) -> (usize, usize) {
-        (self.sched.waiting_len(), self.sched.running_len())
-    }
-    fn enable_cache_events(&mut self) {
-        self.sched.bm.enable_cache_events = true;
-    }
-    fn take_cache_events(&mut self) -> Vec<CacheEvent> {
-        self.sched.bm.take_cache_events()
-    }
-    fn set_cache_watermarks(&mut self, wm: CacheWatermarks) {
-        self.sched.bm.set_cache_watermarks(wm.high, wm.low);
-    }
-    fn core_stats(&self) -> CoreStats {
-        CoreStats {
-            waiting: self.sched.waiting_len(),
-            running: self.sched.running_len(),
-            kv_occupancy: self.sched.bm.occupancy(),
-            cache: self.sched.bm.stats.clone(),
-            prefill_tokens_executed: self.prefill_tokens_executed,
-            cached_prefix_tokens: self.cached_prefix_tokens,
-            ttft_steps_p50: 0.0,
-        }
-    }
-}
 
 fn ecfg(block_size: usize) -> EngineConfig {
     EngineConfig {
@@ -782,6 +616,90 @@ fn least_loaded_balances_a_cold_burst() {
     assert_eq!(routed, vec![4, 4], "cold burst not balanced");
     router.run_to_completion(1000).unwrap();
     assert_eq!(router.take_finished().len(), 8);
+}
+
+#[test]
+fn cache_spread_limit_unsticks_a_cold_replica() {
+    // ROADMAP debt: pure cache affinity pins a single-hot-prefix
+    // workload to the warm replica forever (the pinned `vec![7, 0]`
+    // assertion above). `cache_spread_limit: k` caps consecutive
+    // placements on one replica at k, so a cold replica is guaranteed
+    // work at least every k+1 placements — without changing what any
+    // request generates.
+    prop::check("cache spread", 6, |rng| {
+        let bs = 4;
+        let prefix: Vec<u32> = (0..32).map(|t| 7000 + t).collect();
+        let burst = 5 + rng.below(8);
+        let spread = 1 + rng.below(3);
+        let run = |spread_limit: usize| {
+            let mut router = Router::new(
+                vec![
+                    FakeCore::new(ecfg(bs), 256),
+                    FakeCore::new(ecfg(bs), 256),
+                ],
+                RouterConfig {
+                    routing: RoutingPolicy::CacheAware,
+                    // no load penalty: affinity alone decides, so
+                    // only the spread cap can move work off replica 0
+                    load_penalty_tokens: 0,
+                    cache_spread_limit: spread_limit,
+                    ..Default::default()
+                },
+            );
+            // donor warms replica 0's cache with the shared prefix
+            let mut donor = prefix.clone();
+            donor.extend([9001, 9002]);
+            router.submit(donor, SamplingParams {
+                max_new_tokens: 2,
+                ..Default::default()
+            });
+            router.run_to_completion(1000).unwrap();
+            let mut fins = router.take_finished();
+            // every burst request shares the hot prefix; submitted
+            // back-to-back so placement sees a warm directory only
+            // for replica 0
+            for i in 0..burst as u32 {
+                let mut p = prefix.clone();
+                p.extend((0..2u32).map(|t| 8000 + i * 31 + t));
+                router.submit(p, SamplingParams {
+                    max_new_tokens: 3,
+                    ..Default::default()
+                });
+            }
+            router.run_to_completion(2000).unwrap();
+            fins.extend(router.take_finished());
+            let routed: Vec<usize> = router
+                .replicas()
+                .iter()
+                .map(|r| r.requests_routed)
+                .collect();
+            let mut streams: Vec<(u64, Vec<u32>)> = fins
+                .into_iter()
+                .map(|f| (f.id, f.seq.output))
+                .collect();
+            streams.sort_by_key(|(id, _)| *id);
+            (routed, streams)
+        };
+        // control arm: with the cap off (default), affinity starves
+        // the cold replica outright
+        let (pinned, base_streams) = run(0);
+        assert_eq!(pinned[1], 0, "control arm was not pinned");
+        assert_eq!(pinned[0], burst + 1);
+        let (spreaded, spread_streams) = run(spread);
+        // the cold replica eventually receives work...
+        assert!(spreaded[1] > 0,
+                "cold replica starved despite spread limit {spread}: \
+                 {spreaded:?}");
+        // ...at the guaranteed cadence of one per k+1 placements...
+        assert!(spreaded[1] >= burst / (spread + 1),
+                "spread limit {spread} too weak: {spreaded:?} for \
+                 burst {burst}");
+        assert_eq!(spreaded[0] + spreaded[1], burst + 1);
+        // ...and generations are byte-identical (content-determined
+        // model): spreading is a placement policy, not a semantics
+        // change
+        assert_eq!(spread_streams, base_streams);
+    });
 }
 
 #[test]

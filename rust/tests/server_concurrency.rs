@@ -1,0 +1,280 @@
+//! Concurrent server lifecycle tests over the threaded serving loop —
+//! N clients pipelining generate / stats / metrics / streaming
+//! requests against stub replica cores (no PJRT runtime), exercising
+//! the full TCP seam: accept loop → per-connection threads → inbox →
+//! per-replica workers → bounded streaming delivery → client sockets.
+//!
+//! Locked down:
+//! * concurrent clients each get coherent responses (their own ids,
+//!   their own token streams, correct budgets) while stats/metrics
+//!   admin requests interleave on other connections;
+//! * a replica killed mid-stream on its own worker thread is invisible
+//!   to clients: every stream still arrives whole (contiguous indices,
+//!   streamed tokens == final response tokens) and the death is
+//!   observable only in the stats snapshot;
+//! * shutdown with streams in flight delivers a finish line to every
+//!   client — no stream is silently dropped.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::mpsc;
+use std::thread;
+
+use sqplus::config::{EngineConfig, RouterConfig, RoutingPolicy};
+use sqplus::coordinator::fake::{EchoCore, FakeCore};
+use sqplus::coordinator::fault::{FaultSpec, FaultyCore};
+use sqplus::server::{Client, ServeOptions, Server};
+use sqplus::util::json;
+
+fn ecfg(block_size: usize) -> EngineConfig {
+    EngineConfig {
+        max_running: 4,
+        max_batch_tokens: 64,
+        decode_batches: vec![1, 2, 4, 8],
+        prefill_buckets: vec![(4, 64)],
+        block_size,
+        ..Default::default()
+    }
+}
+
+fn fake_server(n: usize) -> Server {
+    let cores: Vec<FakeCore> =
+        (0..n).map(|_| FakeCore::new(ecfg(4), 128)).collect();
+    Server::spawn_core(
+        cores,
+        RouterConfig {
+            routing: RoutingPolicy::RoundRobin,
+            ..Default::default()
+        },
+        0,
+        ServeOptions::default(),
+    )
+    .unwrap()
+}
+
+/// A unique prompt per (client, round) so every stream is
+/// content-distinct under the content-determined fake model.
+fn prompt_for(client: usize, round: usize) -> Vec<u32> {
+    (0..8u32)
+        .map(|t| 1000 + (client as u32) * 991 + (round as u32) * 53 + t)
+        .collect()
+}
+
+#[test]
+fn clients_pipeline_generate_stats_metrics_concurrently() {
+    let server = fake_server(2);
+    let addr = server.addr();
+    let handles: Vec<_> = (0..4)
+        .map(|ci| {
+            thread::spawn(move || {
+                let mut c = Client::connect(addr).unwrap();
+                for round in 0..3 {
+                    let p = prompt_for(ci, round);
+                    let resp = c.request(&p, 3).unwrap();
+                    assert_eq!(resp.get("finish").as_str(),
+                               Some("max_tokens"));
+                    assert_eq!(
+                        resp.get("tokens").as_arr().unwrap().len(),
+                        3
+                    );
+                    let stats = c.stats().unwrap();
+                    assert_eq!(
+                        stats.get("replicas").as_arr().unwrap().len(),
+                        2
+                    );
+                    let metrics = c.metrics().unwrap();
+                    assert!(metrics.contains("sqplus_replica_up"),
+                            "metrics text missing the up gauge");
+                    let ps = prompt_for(ci, round + 100);
+                    let (tokens, fin) =
+                        c.request_stream(&ps, 4).unwrap();
+                    assert_eq!(fin.get("finish").as_str(),
+                               Some("max_tokens"));
+                    let streamed: Vec<f64> = tokens
+                        .iter()
+                        .map(|t| t.get("token").as_f64().unwrap())
+                        .collect();
+                    let final_tokens: Vec<f64> = fin
+                        .get("tokens")
+                        .as_arr()
+                        .unwrap()
+                        .iter()
+                        .map(|t| t.as_f64().unwrap())
+                        .collect();
+                    assert_eq!(streamed, final_tokens,
+                               "streamed tokens != final tokens");
+                    for (i, t) in tokens.iter().enumerate() {
+                        assert_eq!(t.get("index").as_usize(), Some(i));
+                    }
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    server.shutdown();
+}
+
+#[test]
+fn echo_server_serves_concurrent_clients() {
+    let server = Server::spawn_core(
+        vec![EchoCore::new()],
+        RouterConfig::default(),
+        0,
+        ServeOptions::default(),
+    )
+    .unwrap();
+    let addr = server.addr();
+    let handles: Vec<_> = (0..4)
+        .map(|ci| {
+            thread::spawn(move || {
+                let mut c = Client::connect(addr).unwrap();
+                for round in 0..5 {
+                    let first = 7_000 + (ci * 10 + round) as u32;
+                    let p = vec![first, 1, 2];
+                    let resp = c.request(&p, 4).unwrap();
+                    // the echo core replies with the first prompt
+                    // token — each client must get its own back
+                    let toks = resp.get("tokens").as_arr().unwrap();
+                    assert_eq!(toks.len(), 1);
+                    assert_eq!(toks[0].as_f64(), Some(first as f64));
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    server.shutdown();
+}
+
+#[test]
+fn replica_death_mid_stream_is_invisible_to_clients() {
+    // Replica 0 dies permanently on its third step while 16-token
+    // streams are in flight on both workers. Clients must never
+    // notice: every stream arrives whole and duplicate-free; only the
+    // stats snapshot records the death and the replays.
+    let server = Server::spawn_core(
+        vec![
+            FaultyCore::new(FakeCore::new(ecfg(4), 128),
+                            FaultSpec::FailOnStepK { k: 3 }),
+            FaultyCore::new(FakeCore::new(ecfg(4), 128),
+                            FaultSpec::FailOnStepK { k: usize::MAX }),
+        ],
+        RouterConfig {
+            routing: RoutingPolicy::RoundRobin,
+            ..Default::default()
+        },
+        0,
+        ServeOptions::default(),
+    )
+    .unwrap();
+    let addr = server.addr();
+    let handles: Vec<_> = (0..4)
+        .map(|ci| {
+            thread::spawn(move || {
+                let mut c = Client::connect(addr).unwrap();
+                let p = prompt_for(ci, 7);
+                let (tokens, fin) = c.request_stream(&p, 16).unwrap();
+                assert_eq!(fin.get("finish").as_str(),
+                           Some("max_tokens"),
+                           "stream died with the replica: {fin}");
+                assert_eq!(tokens.len(), 16);
+                for (i, t) in tokens.iter().enumerate() {
+                    assert_eq!(t.get("index").as_usize(), Some(i),
+                               "non-contiguous stream after replay");
+                }
+                let streamed: Vec<f64> = tokens
+                    .iter()
+                    .map(|t| t.get("token").as_f64().unwrap())
+                    .collect();
+                let final_tokens: Vec<f64> = fin
+                    .get("tokens")
+                    .as_arr()
+                    .unwrap()
+                    .iter()
+                    .map(|t| t.as_f64().unwrap())
+                    .collect();
+                assert_eq!(streamed, final_tokens,
+                           "replay duplicated or dropped a token");
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    // the death is visible in stats: one dead replica, work replayed
+    let mut c = Client::connect(addr).unwrap();
+    let stats = c.stats().unwrap();
+    assert_eq!(stats.get("router").get("alive").as_usize(), Some(1));
+    assert_eq!(stats.get("router").get("dead").as_usize(), Some(1));
+    assert!(stats.get("router").get("replayed").as_usize().unwrap()
+                >= 1,
+            "no replay recorded for a mid-stream death");
+    server.shutdown();
+}
+
+#[test]
+fn shutdown_with_inflight_streams_delivers_finish_lines() {
+    // Three clients open 48-token streams and confirm the stream is
+    // live (first token line read) before the server is told to shut
+    // down. Shutdown drains the workers, so every client must still
+    // receive its full stream and a finish line — never a silent EOF.
+    let server = fake_server(2);
+    let addr = server.addr();
+    let (started_tx, started_rx) = mpsc::channel::<()>();
+    let handles: Vec<_> = (0..3)
+        .map(|ci| {
+            let started = started_tx.clone();
+            thread::spawn(move || {
+                let stream = TcpStream::connect(addr).unwrap();
+                let mut reader = BufReader::new(stream);
+                let p = prompt_for(ci, 9);
+                let body: Vec<String> =
+                    p.iter().map(|t| t.to_string()).collect();
+                writeln!(
+                    reader.get_mut(),
+                    "{{\"prompt\":[{}],\"max_new_tokens\":48,\
+                     \"stream\":true}}",
+                    body.join(",")
+                )
+                .unwrap();
+                let mut line = String::new();
+                reader.read_line(&mut line).unwrap();
+                let first = json::parse(line.trim()).unwrap();
+                assert!(first.get("token").as_f64().is_some(),
+                        "first line is not a token: {line}");
+                // the stream is live; let the main thread pull the
+                // plug while the rest is still being generated
+                started.send(()).unwrap();
+                let mut count = 1usize;
+                loop {
+                    let mut line = String::new();
+                    assert!(reader.read_line(&mut line).unwrap() > 0,
+                            "connection closed without a finish line");
+                    let v = json::parse(line.trim()).unwrap();
+                    if v.get("token").as_f64().is_some() {
+                        assert_eq!(v.get("index").as_usize(),
+                                   Some(count));
+                        count += 1;
+                    } else {
+                        assert_eq!(v.get("finish").as_str(),
+                                   Some("max_tokens"),
+                                   "stream ended abnormally: {v}");
+                        assert_eq!(count, 48,
+                                   "stream truncated at shutdown");
+                        return;
+                    }
+                }
+            })
+        })
+        .collect();
+    for _ in 0..3 {
+        started_rx.recv().unwrap();
+    }
+    server.shutdown();
+    for h in handles {
+        h.join().unwrap();
+    }
+}
