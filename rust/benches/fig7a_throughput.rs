@@ -14,8 +14,8 @@
 mod common;
 
 use sqplus::config::{
-    CacheWatermarks, EngineConfig, GpuProfile, Precision, QuantMethod,
-    RouterConfig, RoutingPolicy,
+    CacheWatermarks, EngineConfig, GpuProfile, KvCacheMode, Precision,
+    QuantMethod, RouterConfig, RoutingPolicy,
 };
 use sqplus::coordinator::engine::Engine;
 use sqplus::coordinator::router::Router;
@@ -146,6 +146,66 @@ fn run_chunked(
     let streams = fin.into_iter().map(|q| q.output).collect();
     (tput, rep.ttft_steps.p50, rep.prefill_chunks, rep.mixed_steps,
      rep.device_calls, streams)
+}
+
+/// Tiered KV pool workload: shared-prefix waves separated by cold
+/// bursts big enough to evict the warm prefix between waves, under a
+/// deliberately small block budget. With `pool == 0` every wave
+/// re-prefills the evicted prefix; with a pool, the evicted blocks
+/// demote to the host tier and restore on the next wave. Returns
+/// (tok/s, prefill tokens executed, demotions, restores,
+/// recompute-avoided tokens, sorted token streams).
+#[allow(clippy::too_many_arguments)]
+fn run_kv_tier(
+    m: &sqplus::runtime::manifest::Manifest, s: &common::Setup,
+    deploy_store: &sqplus::model::store::WeightStore, mode: KvCacheMode,
+    pool: usize, n_req: usize, prefix: usize, suffix: usize,
+    output: usize,
+) -> (f64, usize, usize, usize, usize, Vec<Vec<u32>>) {
+    let rt = ModelRuntime::load(m, &s.cfg.name, Precision::W4a16,
+                                deploy_store)
+        .unwrap();
+    rt.warmup().unwrap();
+    let dep = Deployment::single(rt, GpuProfile::a100_40g());
+    let ecfg = EngineConfig {
+        block_size: 4,
+        total_blocks: 24, // 96 slots: a cold burst evicts the prefix
+        kv_cache_mode: mode,
+        kv_pool_blocks: pool,
+        ..Default::default()
+    };
+    let mut eng = Engine::new(dep, ecfg);
+    let warm = trace::shared_prefix_prompts(11, n_req, prefix, suffix,
+                                            s.cfg.vocab);
+    let mut rng = sqplus::util::rng::Rng::new(41);
+    let t0 = std::time::Instant::now();
+    let mut fins = vec![];
+    for wave in warm.chunks(2) {
+        for p in wave {
+            eng.submit(p.clone(), SamplingParams {
+                max_new_tokens: output,
+                ..Default::default()
+            });
+        }
+        eng.run_to_completion(100_000).unwrap();
+        fins.extend(eng.take_finished());
+        // cold burst needing most of the block budget: demand-evicts
+        // the warm prefix (demoting it when the pool is on)
+        let cold = trace::prompt_tokens(&mut rng, 72, s.cfg.vocab);
+        eng.submit(cold, SamplingParams {
+            max_new_tokens: output,
+            ..Default::default()
+        });
+        eng.run_to_completion(100_000).unwrap();
+        fins.extend(eng.take_finished());
+    }
+    let tput = eng.metrics.output_tokens as f64
+        / t0.elapsed().as_secs_f64();
+    fins.sort_by_key(|q| q.id);
+    let streams = fins.into_iter().map(|q| q.output).collect();
+    (tput, eng.metrics.prefill_tokens_executed,
+     eng.metrics.kv_demotions, eng.metrics.kv_restores,
+     eng.metrics.recompute_avoided_tokens, streams)
 }
 
 /// Multi-replica router workload: shared-prefix waves (the cache-aware
@@ -484,6 +544,91 @@ fn main() {
         "cache-aware routing saved no cold prefill work"
     );
     if let Err(e) = rep3.write() {
+        eprintln!("warning: BENCH_serve.json not written: {e}");
+    }
+
+    // tiered KV cache serving mode: shared-prefix waves with eviction
+    // pressure between them. Tiering off vs on (f32: restores must be
+    // bit-identical AND save prefill work), then the quantized stash
+    // modes on the same trace (reported with token agreement vs f32).
+    let (n_req5, prefix5, suffix5, output5) =
+        (12usize, 24usize, 8usize, 12usize);
+    let pool5 = 12usize;
+    let mut t6 = Table::new(
+        &format!(
+            "Figure 7a tiered KV cache ({size}, SQ+ W4A16, {n_req5} warm \
+             + cold-burst reqs, prompt {prefix5}+{suffix5}, pool \
+             {pool5} blocks)"
+        ),
+        &["kv mode", "output tok/s", "prefill executed", "demotions",
+          "restores", "recompute avoided", "agree vs f32"],
+    );
+    let mut rep4 = JsonReport::at("BENCH_serve.json", "fig7a_kv_tier");
+    rep4.metric("n_requests_warm", n_req5 as f64);
+    rep4.metric("prompt_prefix_tokens", prefix5 as f64);
+    rep4.metric("prompt_suffix_tokens", suffix5 as f64);
+    rep4.metric("pool_blocks_bound", pool5 as f64);
+    let mut tier_golden: Option<Vec<Vec<u32>>> = None;
+    let mut tier_exec = vec![];
+    for (label, mode, pool) in [
+        ("f32 untiered", KvCacheMode::F32, 0usize),
+        ("f32 tiered", KvCacheMode::F32, pool5),
+        ("q8 tiered", KvCacheMode::Q8, pool5),
+        ("q4 tiered", KvCacheMode::Q4, pool5),
+    ] {
+        let (tput, exec, demotions, restores, avoided, streams) =
+            run_kv_tier(&man, &s, sqp.deploy.as_ref().unwrap(), mode,
+                        pool, n_req5, prefix5, suffix5, output5);
+        let agree = match &tier_golden {
+            None => {
+                tier_golden = Some(streams.clone());
+                1.0
+            }
+            Some(g) => {
+                let total: usize = g.iter().map(|o| o.len()).sum();
+                let same: usize = g.iter().zip(&streams)
+                    .map(|(a, b)| {
+                        a.iter().zip(b.iter())
+                            .filter(|(x, y)| x == y).count()
+                    })
+                    .sum();
+                same as f64 / total.max(1) as f64
+            }
+        };
+        if mode == KvCacheMode::F32 {
+            assert!((agree - 1.0).abs() < 1e-12,
+                    "f32 tiered restore changed a stream");
+        }
+        if pool > 0 {
+            assert!(restores > 0 && avoided == restores * 4,
+                    "{label}: pool never restored or accounting broke");
+        } else {
+            assert_eq!((demotions, restores, avoided), (0, 0, 0));
+        }
+        t6.row(&[label.into(), format!("{tput:.1}"), exec.to_string(),
+                 demotions.to_string(), restores.to_string(),
+                 avoided.to_string(), format!("{agree:.3}")]);
+        let key = label.replace(' ', "_");
+        rep4.metric(&format!("{key}_tok_per_s"), tput);
+        rep4.metric(&format!("{key}_prefill_tokens_executed"),
+                    exec as f64);
+        rep4.metric(&format!("{key}_pool_demotions"), demotions as f64);
+        rep4.metric(&format!("{key}_pool_restores"), restores as f64);
+        rep4.metric(&format!("{key}_recompute_avoided_tokens"),
+                    avoided as f64);
+        rep4.metric(&format!("{key}_token_agreement_vs_f32"), agree);
+        tier_exec.push((label, exec));
+    }
+    t6.print();
+    let exec_tier = |want: &str| {
+        tier_exec.iter().find(|(l, _)| *l == want).unwrap().1
+    };
+    assert!(exec_tier("f32 tiered") < exec_tier("f32 untiered"),
+            "tiered pool saved no prefill work");
+    rep4.metric("prefill_tokens_saved_frac",
+                1.0 - exec_tier("f32 tiered") as f64
+                    / exec_tier("f32 untiered").max(1) as f64);
+    if let Err(e) = rep4.write() {
         eprintln!("warning: BENCH_serve.json not written: {e}");
     }
 

@@ -160,6 +160,44 @@ impl Precision {
     }
 }
 
+/// Storage precision for stashed KV-cache rows — the engine's host-side
+/// per-block stash and the tiered demotion pool (see `runtime::kvq`).
+/// `F32` keeps exact rows (restores are bit-identical); `Q8`/`Q4`
+/// shrink the stash 4–8× via group-wise asymmetric quantization, at a
+/// bounded per-group reconstruction error (restored streams may
+/// legitimately diverge — gated on task metrics, not bit-identity).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum KvCacheMode {
+    /// Exact f32 rows (the pre-quantization stash; the default).
+    #[default]
+    F32,
+    /// Group-wise asymmetric INT8, one byte per value.
+    Q8,
+    /// Group-wise asymmetric INT4, two values per byte (the paper's
+    /// weight grid, `quant::rtn::int4_grid`, applied to KV).
+    Q4,
+}
+
+impl KvCacheMode {
+    /// CLI spelling (`f32` / `q8` / `q4`).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            KvCacheMode::F32 => "f32",
+            KvCacheMode::Q8 => "q8",
+            KvCacheMode::Q4 => "q4",
+        }
+    }
+    /// Inverse of [`KvCacheMode::as_str`].
+    pub fn parse(s: &str) -> Option<KvCacheMode> {
+        match s {
+            "f32" => Some(KvCacheMode::F32),
+            "q8" => Some(KvCacheMode::Q8),
+            "q4" => Some(KvCacheMode::Q4),
+            _ => None,
+        }
+    }
+}
+
 /// Quantization method under test (the paper's baselines + SQ+).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum QuantMethod {
@@ -262,6 +300,17 @@ pub struct EngineConfig {
     /// behavior). See
     /// [`crate::coordinator::block_manager::BlockManager::set_cache_watermarks`].
     pub cache_watermarks: CacheWatermarks,
+    /// Storage precision for stashed prefix-KV rows (host stash and
+    /// tiered pool). The `F32` default keeps every golden stream
+    /// bit-identical; `Q8`/`Q4` trade bounded reconstruction error for
+    /// a 4–8× smaller stash.
+    pub kv_cache_mode: KvCacheMode,
+    /// Capacity (in blocks) of the host-side tiered KV pool that
+    /// evicted cached blocks demote into instead of dropping their
+    /// rows; a later hit on a demoted block restores by dequantize+copy
+    /// instead of recompute. `0` (the default) disables tiering —
+    /// eviction discards rows, the pre-tiering behavior.
+    pub kv_pool_blocks: usize,
 }
 
 impl Default for EngineConfig {
@@ -281,6 +330,8 @@ impl Default for EngineConfig {
             chunk_buckets: vec![],
             enable_compiled_chunks: true,
             cache_watermarks: CacheWatermarks::default(),
+            kv_cache_mode: KvCacheMode::F32,
+            kv_pool_blocks: 0,
         }
     }
 }
@@ -478,6 +529,19 @@ mod tests {
             assert_eq!(Precision::parse(p.as_str()), Some(p));
         }
         assert_eq!(Precision::parse("int8"), None);
+    }
+
+    #[test]
+    fn kv_cache_mode_roundtrip() {
+        for m in [KvCacheMode::F32, KvCacheMode::Q8, KvCacheMode::Q4] {
+            assert_eq!(KvCacheMode::parse(m.as_str()), Some(m));
+        }
+        assert_eq!(KvCacheMode::parse("q2"), None);
+        // the defaults keep golden streams bit-identical: exact rows,
+        // tiering off
+        let e = EngineConfig::default();
+        assert_eq!(e.kv_cache_mode, KvCacheMode::F32);
+        assert_eq!(e.kv_pool_blocks, 0);
     }
 
     #[test]

@@ -57,6 +57,21 @@
 //!   while a long tail of one-off prompts cannot grow the cache
 //!   without bound. `high == 0` disables the window (the pre-window
 //!   behavior: unbounded until the free list runs dry).
+//! * **Tiered demotion pool** — with [`BlockManager::set_kv_pool`]
+//!   bound > 0, eviction (demand LRU *and* sliding window) *demotes*
+//!   the block's content hash into a bounded host-side pool index
+//!   instead of forgetting it: the hash stays serveable, and a later
+//!   walk hit on a pooled hash is honored by grabbing a fresh device
+//!   block and reporting the pair via [`BlockManager::take_restored`]
+//!   so the engine moves the stashed (quantized) rows back instead of
+//!   recomputing them. The pool itself is LRU-bounded: overflow drops
+//!   the oldest pooled hash (reported via
+//!   [`BlockManager::take_pool_dropped`], and as an `Evicted` cache
+//!   event — that is the moment the content truly stops being
+//!   serveable). Demotion emits *no* `Evicted` event, so a router
+//!   directory keeps routing repeats at the replica that still holds
+//!   the (pooled) rows. The manager owns only the *index*; the engine
+//!   owns the bytes ([`crate::runtime::kvq`]).
 //! * **Cache events** — when enabled
 //!   ([`BlockManager::enable_cache_events`]), every registration and
 //!   eviction is also recorded as a [`CacheEvent`] and drained via
@@ -110,6 +125,17 @@ pub enum Alloc {
     /// chunk with no compiled bucket, a legacy admission over the step
     /// budget).
     NoSpace,
+}
+
+/// One step of the admission walk: the block's content is serveable
+/// either from a device-resident cached block (shared by refcount) or
+/// from the tiered pool (restored into a fresh block at admission).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum PrefixHit {
+    /// Cached block id on device.
+    Device(usize),
+    /// Content hash resident in the tiered pool.
+    Pooled(u64),
 }
 
 /// Seed of the block-content hash chain (arbitrary odd constant).
@@ -177,6 +203,12 @@ pub struct CacheStats {
     pub evictions: usize,
     /// Blocks registered into the cache after prefill.
     pub registered: usize,
+    /// Evictions that demoted into the tiered pool instead of dropping
+    /// content (a subset of `evictions`; 0 while tiering is off).
+    pub demotions: usize,
+    /// Admission hits served from the tiered pool: blocks restored to
+    /// the device cache instead of recomputed.
+    pub restores: usize,
 }
 
 /// Paged KV-block accounting for the simulated device pool (see the
@@ -199,9 +231,26 @@ pub struct BlockManager {
     tables: HashMap<u64, Vec<usize>>,
     /// Monotonic counter ordering LRU entries.
     tick: u64,
-    /// Cached blocks reclaimed since the last `take_evicted` (the engine
-    /// drops its stashed host KV rows for these).
-    evicted: Vec<usize>,
+    /// Cached `(block id, content hash)` pairs reclaimed since the last
+    /// `take_evicted` (the engine drops — or, under tiering, demotes —
+    /// the host KV rows it stashed for them).
+    evicted: Vec<(usize, u64)>,
+    /// Tiered-pool capacity in blocks (0 = tiering off: eviction drops
+    /// content, the pre-pool behavior).
+    kv_pool_blocks: usize,
+    /// Pooled content hash -> its LRU tick. Disjoint from `cache` by
+    /// construction: a hash lives on device *or* in the pool, never
+    /// both.
+    pool: HashMap<u64, u64>,
+    /// Pool LRU order: tick -> pooled hash (shares the `tick` counter).
+    pool_lru: BTreeMap<u64, u64>,
+    /// Pooled hashes dropped (overflow, supersession, teardown) since
+    /// the last `take_pool_dropped` — the engine frees their bytes.
+    pool_dropped: Vec<u64>,
+    /// `(block id, hash)` pairs restored from the pool at admission
+    /// since the last `take_restored` — the engine moves the stashed
+    /// rows back onto these device blocks.
+    restored: Vec<(usize, u64)>,
     /// Blocks kept free as a scheduling watermark (headroom for decode
     /// growth of already-running sequences).
     pub watermark_blocks: usize,
@@ -241,6 +290,11 @@ impl BlockManager {
             tables: HashMap::new(),
             tick: 0,
             evicted: vec![],
+            kv_pool_blocks: 0,
+            pool: HashMap::new(),
+            pool_lru: BTreeMap::new(),
+            pool_dropped: vec![],
+            restored: vec![],
             watermark_blocks: (total_blocks / 100).max(1),
             hash_walks: std::cell::Cell::new(0),
             enable_prefix_caching: true,
@@ -315,11 +369,13 @@ impl BlockManager {
         std::mem::take(&mut self.cache_events)
     }
 
-    /// Block ids of the longest cached prefix of `tokens`, capped so at
-    /// least one token is always left to compute. This is *the*
-    /// hash-chain walk: admission calls it exactly once per attempt
-    /// (inside the allocate family), counted in `hash_walks`.
-    fn prefix_hits(&self, tokens: &[u32]) -> Vec<usize> {
+    /// The longest serveable prefix of `tokens`, capped so at least one
+    /// token is always left to compute. Each covered block is either on
+    /// device (a cached block to share) or in the tiered pool (a hash
+    /// whose rows restore into a fresh block). This is *the* hash-chain
+    /// walk: admission calls it exactly once per attempt (inside the
+    /// allocate family), counted in `hash_walks`.
+    fn prefix_hits(&self, tokens: &[u32]) -> Vec<PrefixHit> {
         if !self.enable_prefix_caching || tokens.len() <= 1 {
             return vec![];
         }
@@ -330,28 +386,48 @@ impl BlockManager {
         let mut out = vec![];
         for i in 0..max_blocks {
             h = block_hash(h, &tokens[i * bs..(i + 1) * bs]);
-            match self.cache.get(&h) {
-                Some(&b) => out.push(b),
-                None => break,
+            if let Some(&b) = self.cache.get(&h) {
+                out.push(PrefixHit::Device(b));
+            } else if self.pool.contains_key(&h) {
+                out.push(PrefixHit::Pooled(h));
+            } else {
+                break;
             }
         }
         out
     }
 
-    /// Prompt tokens a cached prefix would cover for this content.
+    /// Prompt tokens a cached prefix would cover for this content —
+    /// device-cached and pool-restorable blocks both count (either way
+    /// the prefill is skipped).
     pub fn cached_prefix_tokens(&self, tokens: &[u32]) -> usize {
         self.prefix_hits(tokens).len() * self.block_size
     }
 
-    /// Free-pool consumption of admitting `tokens`: fresh blocks plus
-    /// hits that must be rescued from the evictable pool.
+    /// Device and evictable hit counts of a walk: pooled hits need a
+    /// fresh block (charged like a miss), device hits with refcount 0
+    /// must be rescued out of the evictable pool.
+    fn walk_costs(&self, walk: &[PrefixHit]) -> (usize, usize) {
+        let mut device = 0;
+        let mut evictable = 0;
+        for hit in walk {
+            if let PrefixHit::Device(b) = *hit {
+                device += 1;
+                if self.blocks[b].ref_count == 0 {
+                    evictable += 1;
+                }
+            }
+        }
+        (device, evictable)
+    }
+
+    /// Free-pool consumption of admitting `tokens`: fresh blocks
+    /// (including blocks restored from the tiered pool) plus hits that
+    /// must be rescued from the evictable pool.
     fn admission_cost(&self, tokens: &[u32]) -> usize {
-        let hits = self.prefix_hits(tokens);
-        let evictable_hits = hits
-            .iter()
-            .filter(|&&b| self.blocks[b].ref_count == 0)
-            .count();
-        self.blocks_for(tokens.len()) - hits.len() + evictable_hits
+        let walk = self.prefix_hits(tokens);
+        let (device, evictable) = self.walk_costs(&walk);
+        self.blocks_for(tokens.len()) - device + evictable
     }
 
     /// Can a *new* sequence of this content be admitted (leaving the
@@ -362,23 +438,69 @@ impl BlockManager {
     }
 
     /// Evict the least-recently-released cached block: drop its content
-    /// from the cache, report it (ids via `evicted`, hash via a
-    /// [`CacheEvent`]), and return its id. `None` when nothing is
-    /// evictable. The caller decides whether the block is reused
-    /// directly (demand eviction) or returned to the free list
-    /// (sliding-window eviction).
+    /// from the cache, report it (`(id, hash)` via `evicted`, hash via
+    /// a [`CacheEvent`] or a pool demotion), and return its id. `None`
+    /// when nothing is evictable. The caller decides whether the block
+    /// is reused directly (demand eviction) or returned to the free
+    /// list (sliding-window eviction). With tiering on, the hash
+    /// demotes into the pool — still serveable, so *no* `Evicted`
+    /// event; otherwise the content is forgotten and the event fires.
     fn evict_lru(&mut self) -> Option<usize> {
         let (&tick, &b) = self.evictable.iter().next()?;
         self.evictable.remove(&tick);
-        if let Some(h) = self.blocks[b].hash.take() {
-            self.cache.remove(&h);
-            if self.enable_cache_events {
-                self.cache_events.push(CacheEvent::Evicted { hash: h });
-            }
+        let h = self.blocks[b].hash.take()
+            .expect("evictable blocks are cached");
+        self.cache.remove(&h);
+        if self.kv_pool_blocks > 0 {
+            self.demote(h);
+        } else if self.enable_cache_events {
+            self.cache_events.push(CacheEvent::Evicted { hash: h });
         }
         self.stats.evictions += 1;
-        self.evicted.push(b);
+        self.evicted.push((b, h));
         Some(b)
+    }
+
+    /// Remove `h` from the pool index (both maps). False if not pooled.
+    fn pool_remove(&mut self, h: u64) -> bool {
+        match self.pool.remove(&h) {
+            Some(t) => {
+                self.pool_lru.remove(&t);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Drop the least-recently-demoted pooled hash: report it via
+    /// `pool_dropped` (the engine frees its bytes) and as an `Evicted`
+    /// event — this is where pooled content truly stops being
+    /// serveable.
+    fn drop_pool_oldest(&mut self) -> Option<u64> {
+        let (&t, &h) = self.pool_lru.iter().next()?;
+        self.pool_lru.remove(&t);
+        self.pool.remove(&h);
+        self.pool_dropped.push(h);
+        if self.enable_cache_events {
+            self.cache_events.push(CacheEvent::Evicted { hash: h });
+        }
+        Some(h)
+    }
+
+    /// Demote an evicted hash into the tiered pool, bounding the pool
+    /// by dropping oldest-first on overflow.
+    fn demote(&mut self, h: u64) {
+        // a stale pooled copy of this content (recomputed, registered,
+        // evicted again) is simply superseded — the engine overwrites
+        // the bytes when it processes the eviction
+        self.pool_remove(h);
+        self.tick += 1;
+        self.pool.insert(h, self.tick);
+        self.pool_lru.insert(self.tick, h);
+        self.stats.demotions += 1;
+        while self.pool.len() > self.kv_pool_blocks {
+            self.drop_pool_oldest();
+        }
     }
 
     /// Pop a content-free block, evicting the LRU cached block if the
@@ -474,42 +596,74 @@ impl BlockManager {
     }
 
     /// Post-walk admission shared by the allocate family: capacity-check
-    /// the *full* content, then record a table of the `hits` blocks
-    /// (shared, refcounted) plus fresh private blocks through `fill`.
-    fn admit(&mut self, id: u64, tokens: &[u32], hits: Vec<usize>,
+    /// the *full* content, then record a table of the walk's hits
+    /// (device hits shared by refcount, pooled hits restored into fresh
+    /// blocks) plus fresh private blocks through `fill`.
+    fn admit(&mut self, id: u64, tokens: &[u32], walk: Vec<PrefixHit>,
              fill: usize) -> Alloc {
         assert!(!self.tables.contains_key(&id),
                 "seq {id} already allocated");
         debug_assert!(fill <= tokens.len());
         let need = self.blocks_for(tokens.len());
-        let evictable_hits = hits
-            .iter()
-            .filter(|&&b| self.blocks[b].ref_count == 0)
-            .count();
-        if need - hits.len() + evictable_hits + self.watermark_blocks
+        let (device_hits, evictable_hits) = self.walk_costs(&walk);
+        if need - device_hits + evictable_hits + self.watermark_blocks
             > self.free_blocks()
         {
             return Alloc::NoSpace;
         }
-        let hit_tokens = hits.len() * self.block_size;
+        let hit_tokens = walk.len() * self.block_size;
         if self.enable_prefix_caching {
-            self.stats.hits += hits.len();
+            self.stats.hits += walk.len();
             self.stats.hit_tokens += hit_tokens;
             self.stats.misses += tokens.len() / self.block_size
-                - hits.len();
+                - walk.len();
         }
-        let now = self.blocks_for(fill).max(hits.len());
-        let mut table = Vec::with_capacity(now);
-        for &b in &hits {
-            if self.blocks[b].ref_count == 0 {
-                self.evictable.remove(&self.blocks[b].lru_tick);
-            } else {
-                self.stats.shared_blocks += 1;
+        // reserve pooled hits out of the pool index up front: the block
+        // grabs below can demote other blocks and overflow the pool,
+        // which must never drop a hit this admission is about to
+        // restore
+        for hit in &walk {
+            if let PrefixHit::Pooled(h) = *hit {
+                let reserved = self.pool_remove(h);
+                debug_assert!(reserved, "walk saw {h} in the pool");
             }
-            self.blocks[b].ref_count += 1;
-            table.push(b);
         }
-        for _ in hits.len()..now {
+        // pass 1: pin every device hit before any fresh grab, so a
+        // demand eviction triggered by a pooled/fresh grab can never
+        // reclaim a hit sitting later in the walk
+        for hit in &walk {
+            if let PrefixHit::Device(b) = *hit {
+                if self.blocks[b].ref_count == 0 {
+                    self.evictable.remove(&self.blocks[b].lru_tick);
+                } else {
+                    self.stats.shared_blocks += 1;
+                }
+                self.blocks[b].ref_count += 1;
+            }
+        }
+        // pass 2: the table in walk order; a pooled hit re-enters the
+        // device cache on a fresh block and is reported via
+        // `take_restored` so the engine moves the stashed rows back. No
+        // Registered event: the hash never left the directory.
+        let now = self.blocks_for(fill).max(walk.len());
+        let mut table = Vec::with_capacity(now);
+        for hit in &walk {
+            match *hit {
+                PrefixHit::Device(b) => table.push(b),
+                PrefixHit::Pooled(h) => {
+                    let b = self.grab_free_block()
+                        .expect("free-block accounting");
+                    self.blocks[b].ref_count = 1;
+                    debug_assert!(self.blocks[b].hash.is_none());
+                    self.blocks[b].hash = Some(h);
+                    self.cache.insert(h, b);
+                    self.stats.restores += 1;
+                    self.restored.push((b, h));
+                    table.push(b);
+                }
+            }
+        }
+        for _ in walk.len()..now {
             let b = self.grab_free_block().expect("free-block accounting");
             self.blocks[b].ref_count = 1;
             debug_assert!(self.blocks[b].hash.is_none());
@@ -598,6 +752,13 @@ impl BlockManager {
             newly.push((i, b));
         }
         for &(i, b) in &newly {
+            // a pool-resident copy of this content is stale the moment
+            // the device rows are registered (the walk stopped short of
+            // the pooled entry and the sequence recomputed it):
+            // supersede it so a hash is never serveable from two tiers
+            if self.pool_remove(hashes[i]) {
+                self.pool_dropped.push(hashes[i]);
+            }
             self.blocks[b].hash = Some(hashes[i]);
             self.cache.insert(hashes[i], b);
             self.stats.registered += 1;
@@ -609,24 +770,65 @@ impl BlockManager {
         newly
     }
 
-    /// Cached blocks reclaimed since the last call (engine drops the
-    /// host KV rows it stashed for them).
-    pub fn take_evicted(&mut self) -> Vec<usize> {
+    /// Cached `(block id, content hash)` pairs reclaimed since the last
+    /// call. The engine drops the host KV rows it stashed for them —
+    /// or, when the hash was demoted (tiering on), moves the stash into
+    /// its pool keyed by the hash.
+    pub fn take_evicted(&mut self) -> Vec<(usize, u64)> {
         std::mem::take(&mut self.evicted)
     }
 
-    /// Drop the entire evictable prefix cache (replica teardown):
-    /// every cached-but-unreferenced block is evicted back onto the
-    /// free list, emitting the usual eviction events/ids. Blocks still
-    /// referenced by live sequences are untouched, so call this after
-    /// releasing every sequence for a fully free pool. Returns the
-    /// number of blocks reclaimed.
+    /// Pooled hashes dropped since the last call (pool overflow,
+    /// supersession by a recomputed device copy, or teardown). The
+    /// engine frees the pooled bytes for these.
+    pub fn take_pool_dropped(&mut self) -> Vec<u64> {
+        std::mem::take(&mut self.pool_dropped)
+    }
+
+    /// `(block id, content hash)` pairs restored from the tiered pool
+    /// at admission since the last call. The engine moves the pooled
+    /// stash back under the device block id (dequantize happens lazily
+    /// at first use).
+    pub fn take_restored(&mut self) -> Vec<(usize, u64)> {
+        std::mem::take(&mut self.restored)
+    }
+
+    /// Configure the tiered demotion pool: evictions demote their
+    /// content hash into a pool of at most `blocks` entries (LRU,
+    /// oldest dropped on overflow) instead of forgetting it. `0`
+    /// disables tiering and drops any pooled entries immediately.
+    /// Shrinking the bound drops overflow oldest-first.
+    pub fn set_kv_pool(&mut self, blocks: usize) {
+        self.kv_pool_blocks = blocks;
+        while self.pool.len() > blocks {
+            self.drop_pool_oldest();
+        }
+    }
+
+    /// Entries currently in the tiered pool (≤ the configured bound).
+    pub fn kv_pool_len(&self) -> usize {
+        self.pool.len()
+    }
+
+    /// Drop the entire evictable prefix cache *and* the tiered pool
+    /// (replica teardown): every cached-but-unreferenced block is
+    /// evicted back onto the free list and every pooled hash is
+    /// dropped, emitting the usual eviction events/ids — demotion is
+    /// suppressed so teardown forgets content outright (a killed
+    /// replica's pool must not be restorable). Blocks still referenced
+    /// by live sequences are untouched, so call this after releasing
+    /// every sequence for a fully free pool. Returns the number of
+    /// device blocks reclaimed.
     pub fn clear_cache(&mut self) -> usize {
+        let bound = self.kv_pool_blocks;
+        self.kv_pool_blocks = 0; // suppress demotion during teardown
         let mut n = 0;
         while let Some(b) = self.evict_lru() {
             self.free.push(b);
             n += 1;
         }
+        self.kv_pool_blocks = bound;
+        while self.drop_pool_oldest().is_some() {}
         n
     }
 
@@ -670,6 +872,23 @@ impl BlockManager {
             }
         }
         if !seen.iter().all(|&s| s) {
+            return false;
+        }
+        // tiered-pool invariants: index maps mirror each other, the
+        // bound holds (and an unset bound means an empty pool), and no
+        // hash is serveable from two tiers at once
+        if self.pool.len() != self.pool_lru.len()
+            || self
+                .pool
+                .iter()
+                .any(|(&h, &t)| self.pool_lru.get(&t) != Some(&h))
+        {
+            return false;
+        }
+        if self.pool.len() > self.kv_pool_blocks {
+            return false;
+        }
+        if self.pool.keys().any(|h| self.cache.contains_key(h)) {
             return false;
         }
         self.cache.iter().all(|(&h, &b)| self.blocks[b].hash == Some(h))
@@ -1048,6 +1267,148 @@ mod tests {
     }
 
     #[test]
+    fn demote_then_restore_roundtrip() {
+        // pool of 2 device blocks + tiered pool: evicting a's block
+        // demotes its hash, and re-admitting the same content restores
+        // it (fresh block + take_restored) instead of recomputing
+        let mut bm = BlockManager::new(4, 2);
+        bm.watermark_blocks = 0;
+        bm.set_kv_pool(4);
+        bm.enable_cache_events = true;
+        let a = toks(1, 4);
+        bm.allocate(1, &a);
+        bm.register_prefix(1, &a);
+        bm.release(1);
+        // demand eviction: a 2-block allocation reclaims a's block
+        bm.allocate(2, &toks(2, 8));
+        let ev = bm.take_evicted();
+        assert_eq!(ev.len(), 1);
+        assert_eq!(bm.kv_pool_len(), 1);
+        assert_eq!(bm.stats.demotions, 1);
+        // demotion keeps the hash serveable: the walk still covers it
+        let mut probe = a.clone();
+        probe.push(999);
+        assert_eq!(bm.cached_prefix_tokens(&probe), 4);
+        // and no Evicted event fired (only the registration is logged)
+        assert!(bm
+            .take_cache_events()
+            .iter()
+            .all(|e| matches!(e, CacheEvent::Registered { .. })));
+        bm.release(2);
+        // re-admit content starting with a: the pooled hash restores
+        let r = bm.allocate(3, &probe);
+        assert_eq!(r, Alloc::Ok { hit_tokens: 4, filled: 5 });
+        let restored = bm.take_restored();
+        assert_eq!(restored.len(), 1);
+        assert_eq!(restored[0].1, ev[0].1, "hash must round-trip");
+        assert_eq!(bm.stats.restores, 1);
+        assert_eq!(bm.kv_pool_len(), 0);
+        assert!(bm.check_conservation());
+        bm.release(3);
+        assert!(bm.check_conservation());
+    }
+
+    #[test]
+    fn pool_overflow_drops_oldest_and_reports() {
+        let mut bm = BlockManager::new(4, 1);
+        bm.watermark_blocks = 0;
+        bm.set_kv_pool(2);
+        bm.enable_cache_events = true;
+        // cycle three contents through the single device block; each
+        // admission demand-evicts the previous into the pool
+        let prompts: Vec<Vec<u32>> = (0..3).map(|i| toks(i, 4)).collect();
+        for (i, p) in prompts.iter().enumerate() {
+            bm.allocate(i as u64, p);
+            bm.register_prefix(i as u64, p);
+            bm.release(i as u64);
+            assert!(bm.kv_pool_len() <= 2);
+            assert!(bm.check_conservation());
+        }
+        // evicting prompt 2's block (still cached on device) is not
+        // needed — the pool holds prompts 0 and 1; force one more
+        // demotion to overflow
+        bm.allocate(9, &toks(9, 4));
+        assert_eq!(bm.kv_pool_len(), 2, "bound holds");
+        // prompt 0's hash was oldest: dropped and reported
+        let dropped = bm.take_pool_dropped();
+        assert_eq!(dropped.len(), 1);
+        let mut probe = prompts[0].clone();
+        probe.push(999);
+        assert_eq!(bm.cached_prefix_tokens(&probe), 0, "truly gone");
+        // the drop (and only the drop) fired an Evicted event
+        let evicted: Vec<_> = bm
+            .take_cache_events()
+            .into_iter()
+            .filter(|e| matches!(e, CacheEvent::Evicted { .. }))
+            .collect();
+        assert_eq!(evicted, vec![CacheEvent::Evicted { hash: dropped[0] }]);
+        assert!(bm.check_conservation());
+    }
+
+    #[test]
+    fn clear_cache_drops_pool_without_demoting() {
+        let mut bm = BlockManager::new(4, 4);
+        bm.watermark_blocks = 0;
+        bm.set_kv_pool(8);
+        let (a, b) = (toks(1, 4), toks(2, 4));
+        bm.allocate(1, &a);
+        bm.register_prefix(1, &a);
+        bm.release(1);
+        bm.allocate(2, &b);
+        bm.register_prefix(2, &b);
+        bm.release(2);
+        // demote both cached blocks via demand eviction (whole pool
+        // grabbed), then release so the device pool is free again
+        bm.allocate(3, &toks(7, 16));
+        bm.release(3);
+        assert_eq!(bm.kv_pool_len(), 2);
+        // leave one cached-but-unreferenced block on device as well
+        let c = toks(3, 4);
+        bm.allocate(4, &c);
+        bm.register_prefix(4, &c);
+        bm.release(4);
+        // teardown: the evictable block is freed WITHOUT demoting (so
+        // exactly the two pooled hashes are dropped), the pool empties
+        let n = bm.clear_cache();
+        assert_eq!(n, 1);
+        assert_eq!(bm.kv_pool_len(), 0);
+        assert_eq!(bm.take_pool_dropped().len(), 2);
+        assert_eq!(bm.free_blocks(), 4);
+        let mut probe = a;
+        probe.push(999);
+        assert_eq!(bm.cached_prefix_tokens(&probe), 0,
+                   "teardown must forget pooled content");
+        assert!(bm.check_conservation());
+    }
+
+    #[test]
+    fn register_supersedes_stale_pool_entry() {
+        // content demoted to the pool, then recomputed (walk disabled so
+        // admission doesn't restore it) and re-registered: the device
+        // copy wins and the pooled copy is reported dropped
+        let mut bm = BlockManager::new(4, 1);
+        bm.watermark_blocks = 0;
+        bm.set_kv_pool(4);
+        let a = toks(1, 4);
+        bm.allocate(1, &a);
+        bm.register_prefix(1, &a);
+        bm.release(1);
+        bm.allocate(2, &toks(2, 4)); // demand-evicts a's block -> pool
+        bm.release(2);
+        assert_eq!(bm.kv_pool_len(), 1);
+        bm.enable_prefix_caching = false; // force a blind recompute
+        bm.allocate(3, &a);
+        bm.enable_prefix_caching = true;
+        bm.register_prefix(3, &a);
+        // the stale pooled copy of a's hash was superseded
+        assert_eq!(bm.kv_pool_len(), 0);
+        assert_eq!(bm.take_pool_dropped().len(), 1);
+        assert!(bm.check_conservation());
+        bm.release(3);
+        assert!(bm.check_conservation());
+    }
+
+    #[test]
     fn conservation_under_random_workload() {
         for enable in [false, true] {
             prop::check("block conservation", 25, |rng| {
@@ -1059,6 +1420,9 @@ mod tests {
                 // sometimes run with a sliding eviction window on
                 let high = rng.below(2) * (2 + rng.below(8));
                 bm.set_cache_watermarks(high, high / 2);
+                // ... and sometimes with a tiered demotion pool
+                let pool = rng.below(2) * (1 + rng.below(8));
+                bm.set_kv_pool(pool);
                 // a small pool of shared prefixes to force hits
                 let prefixes: Vec<Vec<u32>> = (0..3)
                     .map(|i| toks(i, bs * (1 + rng.below(3))))
@@ -1113,6 +1477,14 @@ mod tests {
                         assert!(bm.cached_unreferenced() <= high,
                                 "sliding window exceeded");
                     }
+                    assert!(bm.kv_pool_len() <= pool,
+                            "tiered pool bound exceeded");
+                    if rng.below(8) == 0 {
+                        // engine-side drains happen at arbitrary times
+                        bm.take_evicted();
+                        bm.take_pool_dropped();
+                        bm.take_restored();
+                    }
                 }
                 // drain: refcounts return to zero, whole pool free
                 for (id, _) in live {
@@ -1120,6 +1492,10 @@ mod tests {
                 }
                 assert!(bm.check_conservation());
                 assert_eq!(bm.free_blocks(), bm.total_blocks);
+                // teardown forgets pooled content too
+                bm.clear_cache();
+                assert_eq!(bm.kv_pool_len(), 0);
+                assert!(bm.check_conservation());
             });
         }
     }

@@ -45,8 +45,22 @@
 //! cache and stashes their KV rows keyed by physical block id — so
 //! long generations seed the cache too, and a preempted sequence's
 //! recompute can hit blocks it registered itself while decoding.
-//! Evicted block ids reported by the block manager drop their stashed
-//! rows.
+//! Stashes are stored at [`crate::config::EngineConfig::kv_cache_mode`]
+//! precision ([`crate::runtime::kvq`]): `F32` keeps exact rows
+//! (bit-identical restores), `Q8`/`Q4` shrink them 4–8×.
+//!
+//! # Tiered KV pool
+//!
+//! With [`crate::config::EngineConfig::kv_pool_blocks`] > 0, evicted
+//! blocks *demote*: the block manager keeps the content hash in a
+//! bounded pool index and the engine moves the stashed rows into
+//! `kv_pool` keyed by hash; a later admission hit on a pooled hash
+//! restores the rows onto a fresh device block instead of recomputing
+//! the prefix (`recompute_avoided_tokens` counts the savings). With
+//! tiering off, evicted block ids drop their stashed rows — the
+//! pre-pool behavior. The byte moves happen in
+//! [`Engine::drain_cache_tiering`], ordered so a demote-then-restore
+//! within one plan is resolved before any chunk reads the rows.
 
 use std::collections::HashMap;
 
@@ -55,6 +69,7 @@ use anyhow::Result;
 use crate::config::EngineConfig;
 use crate::runtime::executor::DecodeResult;
 use crate::runtime::kv::{self, SeqKv};
+use crate::runtime::kvq::KvStash;
 use crate::runtime::simtp::Deployment;
 use crate::util::rng::Rng;
 
@@ -124,10 +139,15 @@ pub struct Engine {
     sched: Scheduler,
     seqs: HashMap<u64, Sequence>,
     kvs: HashMap<u64, SeqKv>,
-    /// Host KV rows of cached blocks, keyed by physical block id; layout
-    /// `[L, 2, block_size, D]`. Entries live as long as the block stays
-    /// cached (dropped on eviction).
-    cached_kv: HashMap<usize, Vec<f32>>,
+    /// Host KV rows of cached blocks, keyed by physical block id; row
+    /// layout `[L, 2, block_size, D]`, stored at `ecfg.kv_cache_mode`
+    /// precision. Entries live as long as the block stays cached
+    /// (dropped — or demoted into `kv_pool` — on eviction).
+    cached_kv: HashMap<usize, KvStash>,
+    /// Tiered-pool bytes: stashes of demoted blocks, keyed by content
+    /// hash. The block manager owns the matching index (bound, LRU,
+    /// membership); this map holds exactly the bytes for that index.
+    kv_pool: HashMap<u64, KvStash>,
     finished: Vec<Sequence>,
     /// Tokens sampled since the last [`Engine::take_emitted`] drain, in
     /// emission order — the streaming surface. Appended exactly where
@@ -166,7 +186,8 @@ impl Engine {
     /// Engine with an explicit block pool (tests, ablations).
     pub fn new(dep: Deployment, mut ecfg: EngineConfig) -> Engine {
         sync_buckets(&dep, &mut ecfg);
-        let bm = BlockManager::new(ecfg.block_size, ecfg.total_blocks);
+        let mut bm = BlockManager::new(ecfg.block_size, ecfg.total_blocks);
+        bm.set_kv_pool(ecfg.kv_pool_blocks);
         Engine {
             sched: Scheduler::new(ecfg.clone(), bm),
             dep,
@@ -174,6 +195,7 @@ impl Engine {
             seqs: HashMap::new(),
             kvs: HashMap::new(),
             cached_kv: HashMap::new(),
+            kv_pool: HashMap::new(),
             finished: vec![],
             emitted: vec![],
             metrics: Metrics::new(),
@@ -191,10 +213,11 @@ impl Engine {
         let precision = dep.runtime.precision;
         let weight_bytes = cfg.weight_bytes(precision);
         let mem = dep.gpu.mem_bytes * dep.workers;
-        let bm = BlockManager::from_memory(
+        let mut bm = BlockManager::from_memory(
             ecfg.block_size, mem * 92 / 100, weight_bytes,
             cfg.kv_bytes_per_token(),
         );
+        bm.set_kv_pool(ecfg.kv_pool_blocks);
         sync_buckets(&dep, &mut ecfg);
         Engine {
             sched: Scheduler::new(ecfg.clone(), bm),
@@ -203,6 +226,7 @@ impl Engine {
             seqs: HashMap::new(),
             kvs: HashMap::new(),
             cached_kv: HashMap::new(),
+            kv_pool: HashMap::new(),
             finished: vec![],
             emitted: vec![],
             metrics: Metrics::new(),
@@ -307,6 +331,11 @@ impl Engine {
     pub fn cached_unreferenced_blocks(&self) -> usize {
         self.sched.bm.cached_unreferenced()
     }
+    /// Blocks currently demoted into the tiered KV pool (≤ the
+    /// configured `kv_pool_blocks` bound; 0 while tiering is off).
+    pub fn kv_pool_len(&self) -> usize {
+        self.sched.bm.kv_pool_len()
+    }
     /// Start recording prefix-cache [`CacheEvent`]s (router attach).
     pub fn enable_cache_events(&mut self) {
         self.sched.bm.enable_cache_events = true;
@@ -347,6 +376,12 @@ impl Engine {
         self.kvs.clear();
         self.sched.bm.clear_cache();
         self.sched.bm.take_evicted();
+        // the tiered pool dies with the replica: drop the index drains
+        // and the pooled bytes so a killed replica's demoted blocks can
+        // never be restored
+        self.sched.bm.take_pool_dropped();
+        self.sched.bm.take_restored();
+        self.kv_pool.clear();
         self.cached_kv.clear();
         // any tokens still in the stream buffer travel with the drained
         // sequences (their `output` already holds them)
@@ -358,10 +393,7 @@ impl Engine {
     /// Execute one scheduler step.
     pub fn step(&mut self) -> Result<StepOutcome> {
         let plan: StepPlan = self.sched.plan(&self.seqs);
-        // blocks whose cached content was reclaimed lose their rows
-        for b in self.sched.bm.take_evicted() {
-            self.cached_kv.remove(&b);
-        }
+        self.drain_cache_tiering();
         // drop KV of anything the scheduler preempted (it will recompute
         // on re-admission — possibly within this very plan)
         for id in self.sched.preempted.clone() {
@@ -406,6 +438,41 @@ impl Engine {
         self.metrics.kv_occupancy.push(self.sched.bm.occupancy());
         Ok(StepOutcome::Ran { chunk_tokens,
                               completed_prefills: completed, decoded })
+    }
+
+    /// Reconcile stashed KV bytes with the block manager's tiering
+    /// decisions, in decision order: evicted blocks demote their stash
+    /// into the pool (or drop it, tiering off), pool drops (overflow,
+    /// supersession, teardown) free pooled bytes, and restored blocks
+    /// move pooled bytes back under their fresh device block id. Runs
+    /// right after `sched.plan`, before any chunk reads rows, so a
+    /// demotion from an earlier step that this plan's admission
+    /// restores is resolved bytes-first. (The reverse order —
+    /// restore-then-evict of one block inside a single batch — cannot
+    /// arise: a restored block is refcounted by its admitting sequence,
+    /// and the scheduler preempts only before it admits.)
+    fn drain_cache_tiering(&mut self) {
+        let tiering = self.ecfg.kv_pool_blocks > 0;
+        for (b, h) in self.sched.bm.take_evicted() {
+            match self.cached_kv.remove(&b) {
+                Some(stash) if tiering => {
+                    self.kv_pool.insert(h, stash);
+                    self.metrics.kv_demotions += 1;
+                }
+                _ => {}
+            }
+        }
+        for h in self.sched.bm.take_pool_dropped() {
+            self.kv_pool.remove(&h);
+        }
+        for (b, h) in self.sched.bm.take_restored() {
+            if let Some(stash) = self.kv_pool.remove(&h) {
+                self.cached_kv.insert(b, stash);
+                self.metrics.kv_restores += 1;
+                self.metrics.recompute_avoided_tokens +=
+                    self.sched.bm.block_size;
+            }
+        }
     }
 
     /// Execute a step's prefill chunks. Cold chunks (`start == 0`) batch
@@ -667,8 +734,19 @@ impl Engine {
             self.sched.bm.table(id).expect("admitted seq has a table");
         let mut kvseq = SeqKv::new(cfg);
         for blk in 0..cached_tokens / bs {
-            let rows = &self.cached_kv[&table[blk]];
-            unstash_block(&mut kvseq, blk, bs, cfg.layers, cfg.dim, rows);
+            match &self.cached_kv[&table[blk]] {
+                // exact rows borrow straight into the copy (the
+                // bit-identity path costs no extra allocation)
+                KvStash::F32(rows) => unstash_block(
+                    &mut kvseq, blk, bs, cfg.layers, cfg.dim, rows,
+                ),
+                KvStash::Quant(q) => {
+                    let rows = q.dequantize_rows();
+                    unstash_block(
+                        &mut kvseq, blk, bs, cfg.layers, cfg.dim, &rows,
+                    );
+                }
+            }
         }
         kvseq.len = cached_tokens;
         kvseq
@@ -692,7 +770,9 @@ impl Engine {
         let n = newly.len();
         for (blk, block_id) in newly {
             let rows = stash_block(kvseq, blk, bs, layers, dim);
-            self.cached_kv.insert(block_id, rows);
+            let stash = KvStash::encode(rows, dim,
+                                        self.ecfg.kv_cache_mode);
+            self.cached_kv.insert(block_id, stash);
         }
         n
     }

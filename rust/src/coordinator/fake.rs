@@ -60,7 +60,8 @@ pub struct FakeCore {
 impl FakeCore {
     /// Build over a fresh `BlockManager` with `total_blocks` blocks.
     pub fn new(ecfg: EngineConfig, total_blocks: usize) -> FakeCore {
-        let bm = BlockManager::new(ecfg.block_size, total_blocks);
+        let mut bm = BlockManager::new(ecfg.block_size, total_blocks);
+        bm.set_kv_pool(ecfg.kv_pool_blocks);
         FakeCore {
             sched: Scheduler::new(ecfg, bm),
             seqs: HashMap::new(),
@@ -94,6 +95,13 @@ impl ReplicaCore for FakeCore {
 
     fn step(&mut self) -> Result<StepOutcome, ReplicaError> {
         let plan = self.sched.plan(&self.seqs);
+        // The fake model holds no stash bytes, so tiering needs no byte
+        // moves here — but the report vecs must still be drained (the
+        // engine does the same in `drain_cache_tiering`), and the
+        // demotion/restore *counters* live in `bm.stats` regardless.
+        self.sched.bm.take_evicted();
+        self.sched.bm.take_pool_dropped();
+        self.sched.bm.take_restored();
         for v in self.sched.preempted.clone() {
             let q = self.seqs.get_mut(&v).unwrap();
             if matches!(q.state,
@@ -169,6 +177,8 @@ impl ReplicaCore for FakeCore {
             self.seqs.drain().map(|(_, s)| s).collect();
         self.sched.bm.clear_cache();
         self.sched.bm.take_evicted();
+        self.sched.bm.take_pool_dropped();
+        self.sched.bm.take_restored();
         // the drained sequences' outputs already hold any tokens still
         // buffered in the stream log
         self.emitted.clear();
@@ -199,6 +209,9 @@ impl ReplicaCore for FakeCore {
             prefill_tokens_executed: self.prefill_tokens_executed,
             cached_prefix_tokens: self.cached_prefix_tokens,
             ttft_steps_p50: 0.0,
+            pool_blocks: self.sched.bm.kv_pool_len(),
+            recompute_avoided_tokens: self.sched.bm.stats.restores
+                * self.sched.bm.block_size,
         }
     }
 }

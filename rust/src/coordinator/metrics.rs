@@ -51,6 +51,16 @@ pub struct Metrics {
     /// Full blocks registered into the prefix cache during *decode*
     /// (generated content seeding the cache).
     pub decode_registered_blocks: usize,
+    /// Evicted blocks whose stash was demoted into the tiered KV pool
+    /// (0 while tiering is off).
+    pub kv_demotions: usize,
+    /// Blocks restored from the tiered pool at admission (dequantize +
+    /// copy instead of recompute).
+    pub kv_restores: usize,
+    /// Prefill tokens whose recompute was avoided by a tiered-pool
+    /// restore (`kv_restores * block_size` — the exact accounting the
+    /// tiering tests pin).
+    pub recompute_avoided_tokens: usize,
     /// Time to first token, seconds (wall clock).
     pub ttft_s: Accum,
     /// Engine steps from submission to first token — a deterministic
@@ -135,6 +145,9 @@ impl Metrics {
             device_calls: self.device_calls,
             mixed_steps: self.mixed_steps,
             decode_registered_blocks: self.decode_registered_blocks,
+            kv_demotions: self.kv_demotions,
+            kv_restores: self.kv_restores,
+            recompute_avoided_tokens: self.recompute_avoided_tokens,
         }
     }
 }
@@ -176,6 +189,12 @@ pub struct MetricsReport {
     pub mixed_steps: usize,
     /// Blocks registered into the prefix cache during decode.
     pub decode_registered_blocks: usize,
+    /// Evicted blocks demoted into the tiered KV pool.
+    pub kv_demotions: usize,
+    /// Blocks restored from the tiered pool instead of recomputed.
+    pub kv_restores: usize,
+    /// Prefill tokens saved by tiered-pool restores.
+    pub recompute_avoided_tokens: usize,
 }
 
 impl MetricsReport {
@@ -203,6 +222,12 @@ impl MetricsReport {
             self.prefill_tokens_executed, self.cached_prefix_tokens,
             self.prefill_chunks, self.device_calls, self.mixed_steps,
             self.decode_registered_blocks
+        );
+        println!(
+            "[{label}] kv tier: demotions={} restores={} \
+             recompute_avoided_tokens={}",
+            self.kv_demotions, self.kv_restores,
+            self.recompute_avoided_tokens
         );
     }
 }
@@ -239,11 +264,17 @@ mod tests {
         m.decode_registered_blocks = 3;
         m.device_calls = 7;
         m.ttft_steps.push(4.0);
+        m.kv_demotions = 4;
+        m.kv_restores = 2;
+        m.recompute_avoided_tokens = 32;
         let r = m.report();
         assert_eq!(r.prefill_chunks, 5);
         assert_eq!(r.mixed_steps, 2);
         assert_eq!(r.decode_registered_blocks, 3);
         assert_eq!(r.device_calls, 7);
         assert_eq!(r.ttft_steps.n, 1);
+        assert_eq!(r.kv_demotions, 4);
+        assert_eq!(r.kv_restores, 2);
+        assert_eq!(r.recompute_avoided_tokens, 32);
     }
 }

@@ -129,6 +129,14 @@ pub struct CoreStats {
     pub cached_prefix_tokens: usize,
     /// TTFT-in-engine-steps p50 (deterministic latency proxy).
     pub ttft_steps_p50: f64,
+    /// Blocks currently demoted into the tiered KV pool (occupancy; ≤
+    /// the configured bound, 0 while tiering is off). Demotion/restore
+    /// *counters* ride in `cache` ([`CacheStats::demotions`] /
+    /// [`CacheStats::restores`]).
+    pub pool_blocks: usize,
+    /// Prefill tokens whose recompute a tiered-pool restore avoided
+    /// (`cache.restores * block_size` — exact by construction).
+    pub recompute_avoided_tokens: usize,
 }
 
 impl CoreStats {
@@ -266,6 +274,9 @@ impl ReplicaCore for Engine {
             prefill_tokens_executed: self.metrics.prefill_tokens_executed,
             cached_prefix_tokens: self.metrics.cached_prefix_tokens,
             ttft_steps_p50: self.metrics.ttft_steps.summary().p50,
+            pool_blocks: self.kv_pool_len(),
+            recompute_avoided_tokens:
+                self.metrics.recompute_avoided_tokens,
         }
     }
 }

@@ -15,8 +15,9 @@
 use anyhow::{bail, Context, Result};
 
 use sqplus::config::{
-    CacheWatermarks, EngineConfig, GpuProfile, ModelConfig, Precision,
-    QuantConfig, QuantMethod, RouterConfig, RoutingPolicy,
+    CacheWatermarks, EngineConfig, GpuProfile, KvCacheMode,
+    ModelConfig, Precision, QuantConfig, QuantMethod, RouterConfig,
+    RoutingPolicy,
 };
 use sqplus::coordinator::engine::Engine;
 use sqplus::coordinator::sequence::SamplingParams;
@@ -111,6 +112,13 @@ fn build_model(args: &mut Args)
 fn make_engine(args: &mut Args, out: &pipeline::QuantOutcome,
                cfg: &ModelConfig) -> Result<Engine> {
     let size = args.opt("model", "tiny", "model size");
+    let kv_quant_s = args.opt("kv-quant", "f32",
+                              "KV stash precision: f32|q8|q4");
+    let kv_cache_mode = KvCacheMode::parse(&kv_quant_s)
+        .with_context(|| format!("unknown kv-quant mode {kv_quant_s}"))?;
+    let kv_pool_blocks = args.opt_usize(
+        "kv-pool", 0,
+        "tiered demotion pool bound (blocks, 0 = tiering off)");
     let man = manifest::require_artifacts()?;
     let (precision, deploy) = match &out.deploy {
         Some(d) => (Precision::W4a16, d.clone()),
@@ -122,7 +130,11 @@ fn make_engine(args: &mut Args, out: &pipeline::QuantOutcome,
               rt.decode_batches().len() + rt.prefill_buckets().len());
     Ok(Engine::new(
         Deployment::single(rt, GpuProfile::sim_small(512)),
-        EngineConfig::default(),
+        EngineConfig {
+            kv_cache_mode,
+            kv_pool_blocks,
+            ..Default::default()
+        },
     ))
 }
 

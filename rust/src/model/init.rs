@@ -19,6 +19,7 @@ use super::{weight_names, weight_shape};
 /// Outlier-injection settings (DESIGN.md §5 substitution table).
 #[derive(Debug, Clone)]
 pub struct InitSpec {
+    /// Base RNG seed; every weight forks a name-hashed substream off it.
     pub seed: u64,
     /// Number of outlier channels per norm (0 disables injection).
     pub outlier_channels: usize,
@@ -34,9 +35,12 @@ impl Default for InitSpec {
 }
 
 impl InitSpec {
+    /// Init with outlier injection disabled (the "benign" ablation arm
+    /// where RTN already matches FP16).
     pub fn benign(seed: u64) -> Self {
         InitSpec { seed, outlier_channels: 0, outlier_scale: 1.0 }
     }
+    /// Init with an explicit outlier channel count and gain scale.
     pub fn with_outliers(seed: u64, channels: usize, scale: f32) -> Self {
         InitSpec { seed, outlier_channels: channels, outlier_scale: scale }
     }

@@ -8,6 +8,8 @@ pub mod store;
 
 use crate::config::ModelConfig;
 
+/// The 7 quantizable linears of a decoder layer, in canonical order —
+/// the set expanded to `(packed, scales, zeros)` triples under W4A16.
 pub const LAYER_LINEARS: [&str; 7] =
     ["wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down"];
 

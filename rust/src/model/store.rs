@@ -13,23 +13,28 @@ use crate::tensor::{Tensor, U8Tensor};
 /// A named tensor: fp32 host data or packed nibbles.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Entry {
+    /// Full-precision host tensor (norms, embeddings, fp16 linears).
     F32(Tensor),
+    /// Packed-nibble / byte tensor (W4A16 `packed` payloads).
     U8(U8Tensor),
 }
 
 impl Entry {
+    /// Shape of the underlying tensor, whichever variant it is.
     pub fn shape(&self) -> &[usize] {
         match self {
             Entry::F32(t) => &t.shape,
             Entry::U8(t) => &t.shape,
         }
     }
+    /// The f32 tensor; panics if this entry holds packed bytes.
     pub fn as_f32(&self) -> &Tensor {
         match self {
             Entry::F32(t) => t,
             Entry::U8(_) => panic!("expected f32 tensor"),
         }
     }
+    /// The u8 tensor; panics if this entry holds f32 data.
     pub fn as_u8(&self) -> &U8Tensor {
         match self {
             Entry::U8(t) => t,
@@ -48,10 +53,13 @@ pub struct WeightStore {
 }
 
 impl WeightStore {
+    /// Empty store; tensors append in canonical order via `push*`.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Append a named entry (panics on a duplicate name — the canonical
+    /// order admits each parameter exactly once).
     pub fn push(&mut self, name: &str, e: Entry) {
         assert!(
             !self.index.contains_key(name),
@@ -61,26 +69,34 @@ impl WeightStore {
         self.names.push(name.to_string());
         self.entries.push(e);
     }
+    /// Append an f32 tensor.
     pub fn push_f32(&mut self, name: &str, t: Tensor) {
         self.push(name, Entry::F32(t));
     }
+    /// Append a packed u8 tensor.
     pub fn push_u8(&mut self, name: &str, t: U8Tensor) {
         self.push(name, Entry::U8(t));
     }
 
+    /// Number of stored tensors.
     pub fn len(&self) -> usize {
         self.entries.len()
     }
+    /// True when no tensors have been pushed.
     pub fn is_empty(&self) -> bool {
         self.entries.is_empty()
     }
+    /// Names in push (canonical) order.
     pub fn names(&self) -> &[String] {
         &self.names
     }
+    /// Whether `name` has been pushed.
     pub fn contains(&self, name: &str) -> bool {
         self.index.contains_key(name)
     }
 
+    /// Entry by name (panics when absent — a missing canonical weight
+    /// is a programming error, not an I/O condition).
     pub fn get(&self, name: &str) -> &Entry {
         let i = *self
             .index
@@ -88,12 +104,15 @@ impl WeightStore {
             .unwrap_or_else(|| panic!("missing weight {name}"));
         &self.entries[i]
     }
+    /// f32 tensor by name (panics when absent or packed).
     pub fn f32(&self, name: &str) -> &Tensor {
         self.get(name).as_f32()
     }
+    /// u8 tensor by name (panics when absent or f32).
     pub fn u8(&self, name: &str) -> &U8Tensor {
         self.get(name).as_u8()
     }
+    /// Mutable f32 tensor by name (smoothing edits weights in place).
     pub fn f32_mut(&mut self, name: &str) -> &mut Tensor {
         let i = *self
             .index
@@ -104,11 +123,13 @@ impl WeightStore {
             Entry::U8(_) => panic!("expected f32 tensor {name}"),
         }
     }
+    /// Replace an existing entry with an f32 tensor (same name/slot).
     pub fn set_f32(&mut self, name: &str, t: Tensor) {
         let i = *self.index.get(name).expect("missing weight");
         self.entries[i] = Entry::F32(t);
     }
 
+    /// Iterate `(name, entry)` pairs in canonical order.
     pub fn iter(&self) -> impl Iterator<Item = (&String, &Entry)> {
         self.names.iter().zip(self.entries.iter())
     }
@@ -146,6 +167,8 @@ impl WeightStore {
 
     // ------------------------------------------------------ .sqw format
 
+    /// Serialize to the `.sqw` format (magic `SQW1`, little-endian;
+    /// per-entry: name, dtype tag, shape, raw data).
     pub fn save(&self, path: &Path) -> Result<()> {
         let mut f = std::io::BufWriter::new(
             std::fs::File::create(path)
@@ -178,6 +201,7 @@ impl WeightStore {
         Ok(())
     }
 
+    /// Inverse of [`WeightStore::save`]; rejects bad magic or dtypes.
     pub fn load(path: &Path) -> Result<WeightStore> {
         let mut f = std::io::BufReader::new(
             std::fs::File::open(path)

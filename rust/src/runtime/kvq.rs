@@ -1,0 +1,330 @@
+//! Group-wise 4/8-bit quantization of stashed KV rows — the paper's
+//! weight trick applied to the serving engine's other memory hog.
+//!
+//! The engine keeps cached prefix blocks host-side as `[L, 2,
+//! block_size, D]` row stashes (see `coordinator::engine`). Stored in
+//! f32 those stashes cost as much as the device rows they mirror; the
+//! tiered demotion pool would inherit the same footprint. This module
+//! quantizes each stash with the same group-wise asymmetric grid the
+//! weight quantizer uses — per-group `(delta, zero)` over each
+//! `dim`-row, [`crate::quant::rtn::int4_grid`] as the single source of
+//! truth for the INT4 grid — shrinking a stash 4× (Q8) to 8× (Q4)
+//! versus f32.
+//!
+//! Layouts match `quant/pack.rs`: Q4 packs two *consecutive* values per
+//! byte, low nibble first (even `dim` routes through
+//! [`crate::quant::pack::pack_nibbles`] itself; an odd `dim` leaves the
+//! final nibble of each row's last byte zero). Dequantization reads the
+//! packed bytes in place and applies the grid as it goes — the
+//! `quant/kernel.rs` fused-dequant idiom, no intermediate nibble
+//! buffer.
+//!
+//! Accuracy contract: quantize→dequantize error is bounded per group by
+//! `1.5 * delta` (round-to-nearest plus the rounded zero point plus
+//! boundary clamp), property-tested in `tests/quant_properties.rs`.
+//! Quantized restores are therefore *not* bit-identical to recompute —
+//! the engine tests gate Q4/Q8 on task-level agreement, while
+//! [`KvCacheMode::F32`] keeps the exact rows and stays bit-identical.
+
+use crate::config::KvCacheMode;
+use crate::quant::pack;
+use crate::quant::rtn::{int4_grid, NIBBLE_MAX};
+
+/// Quantization group length along each `dim`-row. Smaller groups track
+/// outliers tighter at more scale/zero overhead; 64 keeps the overhead
+/// at one f32 pair per 64 values while halving the group the weight
+/// quantizer defaults to (KV rows see no smoothing, so finer grouping
+/// carries the accuracy instead).
+pub const KV_QUANT_GROUP: usize = 64;
+
+/// Largest INT8 code (the Q8 grid spans 0..=255).
+const BYTE_MAX: f32 = 255.0;
+
+/// The INT8 grid for one group range: `(delta, zero)` — the Q8
+/// analogue of [`int4_grid`], same zero-range guard.
+#[inline]
+fn int8_grid(lo: f32, hi: f32) -> (f32, f32) {
+    let mut delta = (hi - lo) / BYTE_MAX;
+    if delta == 0.0 {
+        delta = hi.abs().max(1e-12) / BYTE_MAX;
+    }
+    (delta, (-lo / delta).round())
+}
+
+/// One KV block's rows in group-wise quantized form: `rows` rows of
+/// `dim` values, each row split into `ceil(dim / group)` groups with a
+/// private `(scale, zero)` pair. Q4 data is nibble-packed per row
+/// (`(dim + 1) / 2` bytes/row, low nibble first); Q8 is one byte per
+/// value.
+#[derive(Debug, Clone)]
+pub struct QuantKvBlock {
+    /// Quantized width ([`KvCacheMode::Q4`] or [`KvCacheMode::Q8`]).
+    pub mode: KvCacheMode,
+    /// Number of `dim`-rows quantized.
+    pub rows: usize,
+    /// Values per row.
+    pub dim: usize,
+    /// Group length the scales/zeros were fit over.
+    pub group: usize,
+    /// Per-group step, `rows * ceil(dim / group)` entries, row-major.
+    pub scales: Vec<f32>,
+    /// Per-group zero point (already rounded), same layout as `scales`.
+    pub zeros: Vec<f32>,
+    /// Quantized codes: packed nibbles (Q4) or bytes (Q8), row-major.
+    pub data: Vec<u8>,
+}
+
+impl QuantKvBlock {
+    /// Groups per row.
+    fn groups_per_row(&self) -> usize {
+        self.dim.div_ceil(self.group)
+    }
+
+    /// Stored bytes per row of `data`.
+    fn row_bytes(&self) -> usize {
+        match self.mode {
+            KvCacheMode::Q4 => self.dim.div_ceil(2),
+            _ => self.dim,
+        }
+    }
+
+    /// Exact heap bytes this block holds (codes + scale/zero tables) —
+    /// the number the pool-occupancy accounting and the byte-size
+    /// property test pin down.
+    pub fn bytes(&self) -> usize {
+        self.data.len() + 4 * (self.scales.len() + self.zeros.len())
+    }
+
+    /// Reconstruct the f32 rows (`rows * dim` values): read the packed
+    /// codes in place and apply each group's grid as it goes — the
+    /// fused-dequant idiom, no intermediate nibble buffer.
+    pub fn dequantize_rows(&self) -> Vec<f32> {
+        let gpr = self.groups_per_row();
+        let rb = self.row_bytes();
+        let mut out = vec![0.0f32; self.rows * self.dim];
+        for r in 0..self.rows {
+            let row = &self.data[r * rb..(r + 1) * rb];
+            for j in 0..self.dim {
+                let q = match self.mode {
+                    KvCacheMode::Q4 => {
+                        let b = row[j / 2];
+                        if j % 2 == 0 { b & 0xF } else { b >> 4 }
+                    }
+                    _ => row[j],
+                };
+                let g = r * gpr + j / self.group;
+                out[r * self.dim + j] =
+                    (q as f32 - self.zeros[g]) * self.scales[g];
+            }
+        }
+        out
+    }
+}
+
+/// Quantize `rows.len() / dim` rows of `dim` f32 values group-wise at
+/// the given width. Each group (length `group`, short tail allowed)
+/// gets an asymmetric grid over its own min/max — [`int4_grid`] for Q4
+/// so the KV grid and the weight grid cannot drift, the byte-range
+/// analogue for Q8. Panics on [`KvCacheMode::F32`] (nothing to
+/// quantize; store the rows as [`KvStash::F32`] instead).
+pub fn quantize_rows(rows: &[f32], dim: usize, group: usize,
+                     mode: KvCacheMode) -> QuantKvBlock {
+    assert!(mode != KvCacheMode::F32, "F32 rows are stored verbatim");
+    assert!(dim > 0 && group > 0);
+    assert_eq!(rows.len() % dim, 0, "rows must be whole dim-rows");
+    let nrows = rows.len() / dim;
+    let gpr = dim.div_ceil(group);
+    let qmax = match mode {
+        KvCacheMode::Q4 => NIBBLE_MAX,
+        _ => BYTE_MAX,
+    };
+    let mut scales = Vec::with_capacity(nrows * gpr);
+    let mut zeros = Vec::with_capacity(nrows * gpr);
+    let mut q = vec![0u8; rows.len()];
+    for r in 0..nrows {
+        let row = &rows[r * dim..(r + 1) * dim];
+        for g in 0..gpr {
+            let span = &row[g * group..dim.min((g + 1) * group)];
+            let lo = span.iter().copied().fold(f32::INFINITY, f32::min);
+            let hi = span.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+            let (delta, zero) = match mode {
+                KvCacheMode::Q4 => int4_grid(lo, hi),
+                _ => int8_grid(lo, hi),
+            };
+            for (j, &v) in span.iter().enumerate() {
+                q[r * dim + g * group + j] =
+                    ((v / delta).round() + zero).clamp(0.0, qmax) as u8;
+            }
+            scales.push(delta);
+            zeros.push(zero);
+        }
+    }
+    let data = match mode {
+        KvCacheMode::Q4 if dim % 2 == 0 => {
+            // even rows: the whole buffer pairs cleanly, so the packed
+            // layout IS the reference pack (two consecutive values per
+            // byte, low nibble first)
+            pack::pack_nibbles(&q, q.len(), 1).data
+        }
+        KvCacheMode::Q4 => {
+            // odd dim: pack per row so codes never straddle rows; the
+            // final byte's high nibble stays zero
+            let rb = dim.div_ceil(2);
+            let mut out = vec![0u8; nrows * rb];
+            for r in 0..nrows {
+                for j in 0..dim {
+                    let v = q[r * dim + j];
+                    let b = &mut out[r * rb + j / 2];
+                    *b |= if j % 2 == 0 { v } else { v << 4 };
+                }
+            }
+            out
+        }
+        _ => q,
+    };
+    QuantKvBlock {
+        mode,
+        rows: nrows,
+        dim,
+        group,
+        scales,
+        zeros,
+        data,
+    }
+}
+
+/// One cached block's stashed KV rows, in whichever form
+/// [`crate::config::EngineConfig::kv_cache_mode`] selected. `F32` keeps
+/// the exact rows the engine stashed (bit-identical restores — the
+/// golden-stream contract); `Quant` holds the group-wise quantized
+/// form, 4–8× smaller.
+#[derive(Debug, Clone)]
+pub enum KvStash {
+    /// Exact f32 rows, layout `[L, 2, block_size, D]`.
+    F32(Vec<f32>),
+    /// Group-wise quantized rows (Q4 or Q8).
+    Quant(QuantKvBlock),
+}
+
+impl KvStash {
+    /// Encode freshly stashed rows (`[L, 2, block_size, D]`, row width
+    /// `dim`) at the configured mode.
+    pub fn encode(rows: Vec<f32>, dim: usize, mode: KvCacheMode)
+        -> KvStash {
+        match mode {
+            KvCacheMode::F32 => KvStash::F32(rows),
+            m => KvStash::Quant(quantize_rows(&rows, dim,
+                                              KV_QUANT_GROUP, m)),
+        }
+    }
+
+    /// Heap bytes this stash holds (the pool accounting number).
+    pub fn bytes(&self) -> usize {
+        match self {
+            KvStash::F32(rows) => 4 * rows.len(),
+            KvStash::Quant(q) => q.bytes(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn rand_rows(rng: &mut Rng, nrows: usize, dim: usize) -> Vec<f32> {
+        (0..nrows * dim).map(|_| rng.normal() as f32 * 0.3).collect()
+    }
+
+    #[test]
+    fn q4_roundtrip_is_group_bounded() {
+        prop::check("kvq q4 roundtrip", 30, |rng| {
+            let dim = 1 + rng.below(40);
+            let group = 1 + rng.below(dim + 4);
+            let nrows = 1 + rng.below(6);
+            let rows = rand_rows(rng, nrows, dim);
+            let q = quantize_rows(&rows, dim, group, KvCacheMode::Q4);
+            let back = q.dequantize_rows();
+            for r in 0..nrows {
+                for j in 0..dim {
+                    let g = r * dim.div_ceil(group) + j / group;
+                    let tol = 1.5 * q.scales[g] + 1e-5;
+                    let (a, b) =
+                        (rows[r * dim + j], back[r * dim + j]);
+                    assert!((a - b).abs() <= tol,
+                            "row {r} col {j}: {a} vs {b} (tol {tol})");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn q8_is_tighter_than_q4() {
+        prop::check("kvq q8 tighter", 20, |rng| {
+            let dim = 2 * (1 + rng.below(16));
+            let rows = rand_rows(rng, 4, dim);
+            let e4 = prop::max_abs_diff(
+                &rows,
+                &quantize_rows(&rows, dim, 8, KvCacheMode::Q4)
+                    .dequantize_rows(),
+            );
+            let e8 = prop::max_abs_diff(
+                &rows,
+                &quantize_rows(&rows, dim, 8, KvCacheMode::Q8)
+                    .dequantize_rows(),
+            );
+            assert!(e8 <= e4 + 1e-6, "q8 {e8} worse than q4 {e4}");
+        });
+    }
+
+    #[test]
+    fn constant_group_is_exact() {
+        // the zero-range guard: a constant group reconstructs exactly
+        let rows = vec![0.25f32; 3 * 10];
+        for mode in [KvCacheMode::Q4, KvCacheMode::Q8] {
+            let back =
+                quantize_rows(&rows, 10, 4, mode).dequantize_rows();
+            prop::assert_allclose(&rows, &back, 1e-6, 1e-6, "constant");
+        }
+    }
+
+    #[test]
+    fn byte_accounting_is_exact() {
+        // 5 rows of 9 values, group 4 -> 3 groups/row
+        let rows: Vec<f32> = (0..45).map(|i| i as f32 * 0.1).collect();
+        let q4 = quantize_rows(&rows, 9, 4, KvCacheMode::Q4);
+        assert_eq!(q4.data.len(), 5 * 5); // ceil(9/2) bytes/row
+        assert_eq!(q4.scales.len(), 5 * 3);
+        assert_eq!(q4.bytes(), 25 + 4 * (15 + 15));
+        let q8 = quantize_rows(&rows, 9, 4, KvCacheMode::Q8);
+        assert_eq!(q8.data.len(), 45);
+        assert_eq!(q8.bytes(), 45 + 4 * (15 + 15));
+        // the stash wrapper agrees, and F32 is 4 bytes/value
+        assert_eq!(KvStash::Quant(q8).bytes(), 45 + 120);
+        assert_eq!(KvStash::F32(rows).bytes(), 4 * 45);
+    }
+
+    #[test]
+    fn even_dim_packing_matches_reference_pack() {
+        // the even-dim fast path routes through pack::pack_nibbles; the
+        // odd-dim path must agree with it on the shared prefix bytes
+        let mut rng = Rng::new(7);
+        let rows = rand_rows(&mut rng, 3, 8);
+        let q = quantize_rows(&rows, 8, 4, KvCacheMode::Q4);
+        // unpack with the reference routine and re-apply the grid
+        let packed = crate::tensor::U8Tensor::from_vec(
+            &[q.data.len(), 1], q.data.clone());
+        let codes = pack::unpack_nibbles(&packed);
+        let gpr = 2;
+        for r in 0..3 {
+            for j in 0..8 {
+                let g = r * gpr + j / 4;
+                let v = (codes[r * 8 + j] as f32 - q.zeros[g])
+                    * q.scales[g];
+                let d = q.dequantize_rows()[r * 8 + j];
+                assert!((v - d).abs() < 1e-6);
+            }
+        }
+    }
+}

@@ -12,6 +12,9 @@
 //! * [`executor`] — the model runtime: weight upload (the paper's
 //!   "quantize while migrating to the device" loader), lazy executable
 //!   compilation per (phase, batch, seq) bucket, prefill/decode execution.
+//! * [`kvq`] — group-wise 4/8-bit quantization of stashed KV rows (the
+//!   paper's weight grid reused on the cache), backing the engine's
+//!   host stash and the tiered demotion pool.
 //! * [`simtp`] — deployment wrapper: single worker or simulated
 //!   tensor-parallel worker group with an interconnect cost model.
 //! * [`perfmodel`] — analytic A100 roofline model that generates the
@@ -19,6 +22,7 @@
 
 pub mod executor;
 pub mod kv;
+pub mod kvq;
 pub mod manifest;
 pub mod perfmodel;
 #[cfg(not(feature = "xla"))]

@@ -24,7 +24,8 @@
 //!     "kv_occupancy": 0.03, "cache_hits": 6, "cache_misses": 2,
 //!     "cache_hit_rate": 0.75, "evictions": 0,
 //!     "prefill_tokens_executed": 120, "cached_prefix_tokens": 48,
-//!     "ttft_p50_steps": 2.0}],
+//!     "ttft_p50_steps": 2.0, "pool_blocks": 1, "pool_demotions": 4,
+//!     "pool_restores": 2, "recompute_avoided_tokens": 32}],
 //!     "router": {"shed": 0, "replayed": 0, "retries": 0,
 //!     "replica_failed": 0, "alive": 1, "dead": 0, "degraded": false}}
 //!
@@ -295,6 +296,16 @@ pub fn stats_json(stats: &[ReplicaStats], router: &RouterStats)
                                  as f64)),
                             ("ttft_p50_steps",
                              Value::num(s.core.ttft_steps_p50)),
+                            ("pool_blocks",
+                             Value::num(s.core.pool_blocks as f64)),
+                            ("pool_demotions",
+                             Value::num(s.core.cache.demotions
+                                 as f64)),
+                            ("pool_restores",
+                             Value::num(s.core.cache.restores as f64)),
+                            ("recompute_avoided_tokens",
+                             Value::num(s.core.recompute_avoided_tokens
+                                 as f64)),
                         ])
                     })
                     .collect(),
@@ -371,11 +382,16 @@ pub fn decode_stats(v: &Value)
             cached_prefix_tokens:
                 req_usize(r, &path, "cached_prefix_tokens")?,
             ttft_steps_p50: req_f64(r, &path, "ttft_p50_steps")?,
+            pool_blocks: req_usize(r, &path, "pool_blocks")?,
+            recompute_avoided_tokens:
+                req_usize(r, &path, "recompute_avoided_tokens")?,
             ..Default::default()
         };
         core.cache.hits = req_usize(r, &path, "cache_hits")?;
         core.cache.misses = req_usize(r, &path, "cache_misses")?;
         core.cache.evictions = req_usize(r, &path, "evictions")?;
+        core.cache.demotions = req_usize(r, &path, "pool_demotions")?;
+        core.cache.restores = req_usize(r, &path, "pool_restores")?;
         rows.push(ReplicaStats {
             id: req_usize(r, &path, "id")?,
             requests_routed: req_usize(r, &path, "requests_routed")?,
@@ -469,6 +485,14 @@ pub fn metrics_text(stats: &[ReplicaStats], router: &RouterStats)
            per(&|s| s.core.cached_prefix_tokens as f64));
     family("sqplus_replica_ttft_p50_steps", "gauge",
            per(&|s| s.core.ttft_steps_p50));
+    family("sqplus_replica_pool_blocks", "gauge",
+           per(&|s| s.core.pool_blocks as f64));
+    family("sqplus_replica_pool_demotions", "counter",
+           per(&|s| s.core.cache.demotions as f64));
+    family("sqplus_replica_pool_restores", "counter",
+           per(&|s| s.core.cache.restores as f64));
+    family("sqplus_replica_recompute_avoided_tokens", "counter",
+           per(&|s| s.core.recompute_avoided_tokens as f64));
     let single = |v: f64| vec![(String::new(), v)];
     family("sqplus_router_shed_total", "counter",
            single(router.shed as f64));
@@ -1293,6 +1317,10 @@ mod tests {
         core.prefill_tokens_executed = 120;
         core.cached_prefix_tokens = 48;
         core.ttft_steps_p50 = 2.5;
+        core.cache.demotions = 4;
+        core.cache.restores = 2;
+        core.pool_blocks = 1;
+        core.recompute_avoided_tokens = 32;
         let rows = vec![
             ReplicaStats {
                 id: 0,
@@ -1344,6 +1372,11 @@ mod tests {
                    Some(120));
         assert_eq!(r0.get("cached_prefix_tokens").as_usize(), Some(48));
         assert_eq!(r0.get("ttft_p50_steps").as_f64(), Some(2.5));
+        assert_eq!(r0.get("pool_blocks").as_usize(), Some(1));
+        assert_eq!(r0.get("pool_demotions").as_usize(), Some(4));
+        assert_eq!(r0.get("pool_restores").as_usize(), Some(2));
+        assert_eq!(r0.get("recompute_avoided_tokens").as_usize(),
+                   Some(32));
         let r1 = &reps[1];
         assert_eq!(r1.get("id").as_usize(), Some(1));
         assert_eq!(r1.get("health").as_str(), Some("dead"));
@@ -1383,6 +1416,11 @@ mod tests {
             assert_eq!(d.core.cached_prefix_tokens,
                        r.core.cached_prefix_tokens);
             assert_eq!(d.core.ttft_steps_p50, r.core.ttft_steps_p50);
+            assert_eq!(d.core.pool_blocks, r.core.pool_blocks);
+            assert_eq!(d.core.cache.demotions, r.core.cache.demotions);
+            assert_eq!(d.core.cache.restores, r.core.cache.restores);
+            assert_eq!(d.core.recompute_avoided_tokens,
+                       r.core.recompute_avoided_tokens);
         }
     }
 
@@ -1401,6 +1439,18 @@ mod tests {
         let e = decode_stats(&json::parse(&broken).unwrap())
             .unwrap_err();
         assert!(format!("{e:#}").contains("replicas[0].waiting"));
+        // drop a tiered-pool field
+        let broken = good.replacen(r#""pool_blocks":1,"#, "", 1);
+        let e = decode_stats(&json::parse(&broken).unwrap())
+            .unwrap_err();
+        assert!(format!("{e:#}").contains("replicas[0].pool_blocks"));
+        // mistype a tiered-pool field (fractional counters are
+        // malformed, not rounded)
+        let broken = good
+            .replacen(r#""pool_restores":2"#, r#""pool_restores":2.5"#, 1);
+        let e = decode_stats(&json::parse(&broken).unwrap())
+            .unwrap_err();
+        assert!(format!("{e:#}").contains("replicas[0].pool_restores"));
         // mistype a router field
         let broken = good.replacen(r#""shed":5"#, r#""shed":"5""#, 1);
         let e = decode_stats(&json::parse(&broken).unwrap())
@@ -1440,6 +1490,17 @@ mod tests {
         assert!(text.contains("sqplus_router_degraded 1\n"));
         assert!(text
             .contains("sqplus_replica_ttft_p50_steps{replica=\"0\"} 2.5\n"));
+        assert!(text
+            .contains("# TYPE sqplus_replica_pool_blocks gauge\n"));
+        assert!(text
+            .contains("sqplus_replica_pool_blocks{replica=\"0\"} 1\n"));
+        assert!(text
+            .contains("sqplus_replica_pool_demotions{replica=\"0\"} 4\n"));
+        assert!(text
+            .contains("sqplus_replica_pool_restores{replica=\"0\"} 2\n"));
+        assert!(text.contains(
+            "sqplus_replica_recompute_avoided_tokens{replica=\"0\"} 32\n"
+        ));
         // framed for line-based clients
         assert!(text.ends_with("# EOF"));
         // every non-comment line is `name{labels} value`

@@ -22,10 +22,21 @@ fn base_seed() -> u64 {
         .unwrap_or(0x5eed_cafe)
 }
 
-/// Run `body` for `cases` independent seeded RNGs. Panics (with the case
+/// Case-count override: SQPLUS_PROP_CASES replaces every `check`'s
+/// `cases` argument when set — the nightly sweep cranks it up without
+/// touching test code, and a local repro can wind it down to 1.
+fn cases_override() -> Option<u32> {
+    std::env::var("SQPLUS_PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+}
+
+/// Run `body` for `cases` independent seeded RNGs (the count is
+/// overridden by SQPLUS_PROP_CASES when set). Panics (with the case
 /// seed) on the first failing case.
 pub fn check<F: Fn(&mut Rng)>(name: &str, cases: u32, body: F) {
     let base = base_seed();
+    let cases = cases_override().unwrap_or(cases);
     for case in 0..cases {
         let seed = base ^ (case as u64).wrapping_mul(0x9e3779b97f4a7c15);
         let mut rng = Rng::new(seed);

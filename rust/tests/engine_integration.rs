@@ -3,8 +3,9 @@
 //! Requires `make artifacts` (tests skip otherwise).
 
 use sqplus::config::{
-    CacheWatermarks, EngineConfig, GpuProfile, ModelConfig, Precision,
-    QuantConfig, QuantMethod, RouterConfig, RoutingPolicy,
+    CacheWatermarks, EngineConfig, GpuProfile, KvCacheMode,
+    ModelConfig, Precision, QuantConfig, QuantMethod, RouterConfig,
+    RoutingPolicy,
 };
 use sqplus::coordinator::engine::Engine;
 use sqplus::coordinator::router::Router;
@@ -722,6 +723,108 @@ fn multi_replica_router_golden() {
     assert!(ca_routed[0] > ca_routed[1], "{ca_routed:?}");
     assert!(ca_exec < rr_exec,
             "cache-aware executed {ca_exec} !< round-robin {rr_exec}");
+}
+
+/// Drive the shared-prefix evict-then-rehit trace sequentially at the
+/// given tiered-pool bound and stash precision: a donor seeds the
+/// prefix, a pool-filling stranger demand-evicts every cached block,
+/// then the rehit reuses the prefix. Returns (per-request outputs,
+/// demotions, restores, recompute-avoided tokens, prefill executed).
+fn kv_tier_run(m: &Manifest, pool: usize, mode: KvCacheMode)
+    -> (Vec<Vec<u32>>, usize, usize, usize, usize) {
+    let prefix: Vec<u32> =
+        (0..16u32).map(|t| (t * 29 + 1) % 512).collect();
+    let mut donor = prefix.clone();
+    donor.extend([7, 8]);
+    // needs the whole 12-block pool (44 + 4 generated = 48 slots), so
+    // admission demand-evicts everything the donor cached
+    let filler: Vec<u32> =
+        (0..44u32).map(|t| (t * 31 + 3) % 512).collect();
+    let mut rehit = prefix.clone();
+    rehit.extend([9, 10, 11]);
+    let ecfg = EngineConfig {
+        block_size: 4,
+        total_blocks: 12,
+        kv_cache_mode: mode,
+        kv_pool_blocks: pool,
+        ..Default::default()
+    };
+    let mut eng = fp16_engine(m, ecfg);
+    let mut outs = vec![];
+    for p in [&donor, &filler, &rehit] {
+        let id = eng.submit(
+            p.clone(),
+            SamplingParams { max_new_tokens: 4, ..Default::default() },
+        );
+        eng.run_to_completion(1000).unwrap();
+        let fin = eng.take_finished();
+        let seq = fin.into_iter().find(|s| s.id == id).unwrap();
+        assert_eq!(seq.finish, Some(FinishReason::MaxTokens));
+        outs.push(seq.output);
+        assert!(eng.kv_pool_len() <= pool, "pool exceeded its bound");
+    }
+    (outs, eng.metrics.kv_demotions, eng.metrics.kv_restores,
+     eng.metrics.recompute_avoided_tokens,
+     eng.metrics.prefill_tokens_executed)
+}
+
+#[test]
+fn tiered_f32_pool_restores_bit_identical_and_saves_prefill() {
+    // The F32 identity golden: a tiered restore copies the exact rows
+    // the engine stashed, so the evict-then-rehit trace must emit
+    // bit-identical streams with the pool on or off — while the tiered
+    // run demotes, restores, and executes strictly fewer prefill
+    // tokens, with the recompute saving accounted exactly.
+    let Some(m) = manifest() else { return };
+    let (cold, d0, r0, a0, cold_exec) =
+        kv_tier_run(&m, 0, KvCacheMode::F32);
+    assert_eq!((d0, r0, a0), (0, 0, 0),
+               "tiering counters moved with the pool off");
+    let (warm, d1, r1, a1, warm_exec) =
+        kv_tier_run(&m, 8, KvCacheMode::F32);
+    assert_eq!(cold, warm, "F32 tiered restore changed a stream");
+    assert!(d1 > 0, "eviction never demoted");
+    assert!(r1 > 0, "rehit never restored from the pool");
+    assert_eq!(a1, r1 * 4, "restore accounting must be exact");
+    assert!(warm_exec < cold_exec,
+            "tiering saved nothing: {warm_exec} !< {cold_exec}");
+}
+
+#[test]
+fn quantized_kv_tier_restores_with_bounded_token_drift() {
+    // The acceptance trace for `--kv-quant q8|q4` + tiering: the rehit
+    // restores from the *quantized* pool (recompute-avoided tokens > 0,
+    // asserted), and because dequantized KV rows are not bit-identical
+    // the gate is task-level: every request still completes with its
+    // full budget, and token agreement with the F32 run stays above a
+    // width-dependent floor (Q8's grid is 16x finer than Q4's).
+    let Some(m) = manifest() else { return };
+    let (f32_outs, ..) = kv_tier_run(&m, 8, KvCacheMode::F32);
+    let total: usize = f32_outs.iter().map(|o| o.len()).sum();
+    for (mode, floor) in
+        [(KvCacheMode::Q8, 0.5), (KvCacheMode::Q4, 0.25)]
+    {
+        let (outs, d, r, a, _) = kv_tier_run(&m, 8, mode);
+        assert!(d > 0, "{mode:?}: eviction never demoted");
+        assert!(r > 0, "{mode:?}: rehit never restored");
+        assert!(a > 0 && a == r * 4,
+                "{mode:?}: recompute-avoided accounting broken");
+        assert_eq!(outs.len(), f32_outs.len());
+        for (o, f) in outs.iter().zip(&f32_outs) {
+            assert_eq!(o.len(), f.len(),
+                       "{mode:?}: generation budget not honored");
+        }
+        let agree: usize = outs
+            .iter()
+            .zip(&f32_outs)
+            .map(|(o, f)| {
+                o.iter().zip(f.iter()).filter(|(a, b)| a == b).count()
+            })
+            .sum();
+        assert!(agree as f64 >= floor * total as f64,
+                "{mode:?}: only {agree}/{total} tokens agree with F32 \
+                 (floor {floor})");
+    }
 }
 
 #[test]

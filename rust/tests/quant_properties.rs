@@ -3,10 +3,11 @@
 //! alphas and shapes (in-tree `prop` harness; proptest is unavailable in
 //! the offline build).
 
-use sqplus::config::{ModelConfig, QuantConfig, QuantMethod};
+use sqplus::config::{KvCacheMode, ModelConfig, QuantConfig, QuantMethod};
 use sqplus::model::init::{init_weights, InitSpec};
 use sqplus::quant::{calib, kernel, loss, pipeline, rtn, smooth};
 use sqplus::reffwd::{NoHook, RefModel, Site};
+use sqplus::runtime::kvq::{quantize_rows, KvStash};
 use sqplus::tensor::Tensor;
 use sqplus::util::prop;
 use sqplus::util::rng::Rng;
@@ -68,6 +69,78 @@ fn prop_pack_unpack_roundtrip() {
         let q: Vec<u8> = (0..k * n).map(|_| rng.below(16) as u8).collect();
         let packed = sqplus::quant::pack::pack_nibbles(&q, k, n);
         assert_eq!(sqplus::quant::pack::unpack_nibbles(&packed), q);
+    });
+}
+
+#[test]
+fn prop_kv_roundtrip_error_is_group_bounded() {
+    // KV stash quantization inherits the weight quantizer's accuracy
+    // contract: per value, |x - dequant(quant(x))| <= 1.5 * the owning
+    // group's scale, for both widths, across random dims (odd tails
+    // included) and group sizes that don't divide the row evenly
+    prop::check("kvq roundtrip bound", 25, |rng| {
+        let dim = 1 + rng.below(96);
+        let group = 1 + rng.below(dim + 8);
+        let nrows = 1 + rng.below(8);
+        let scale = 0.01 + rng.f32() * 4.0;
+        let loc = (rng.f32() - 0.5) * 2.0;
+        let rows: Vec<f32> = (0..nrows * dim)
+            .map(|_| rng.normal() as f32 * scale + loc)
+            .collect();
+        for mode in [KvCacheMode::Q4, KvCacheMode::Q8] {
+            let q = quantize_rows(&rows, dim, group, mode);
+            let back = q.dequantize_rows();
+            assert_eq!(back.len(), rows.len());
+            let gpr = dim.div_ceil(group);
+            for r in 0..nrows {
+                for j in 0..dim {
+                    let s = q.scales[r * gpr + j / group];
+                    let e = (rows[r * dim + j] - back[r * dim + j]).abs();
+                    assert!(e <= 1.5 * s + 1e-5,
+                            "{mode:?} row {r} col {j}: err {e} > 1.5*{s}");
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_kv_pack_roundtrip_on_kv_shapes() {
+    // nibble packing must be a bit-exact inverse on KV-stash shapes:
+    // [L, 2, block_size, D] flattens to (L*2*block_size) rows of D
+    // codes, and even-D stashes pack as one contiguous buffer
+    prop::check("kvq pack roundtrip", 20, |rng| {
+        let layers = 1 + rng.below(3);
+        let bs = 1 + rng.below(16);
+        let d = 2 * (1 + rng.below(64));
+        let n = layers * 2 * bs * d;
+        let q: Vec<u8> = (0..n).map(|_| rng.below(16) as u8).collect();
+        let packed = sqplus::quant::pack::pack_nibbles(&q, n, 1);
+        assert_eq!(packed.data.len(), n / 2);
+        assert_eq!(sqplus::quant::pack::unpack_nibbles(&packed), q);
+    });
+}
+
+#[test]
+fn prop_kv_byte_accounting_is_exact() {
+    // QuantKvBlock::bytes() must equal the closed-form footprint:
+    // codes (packed nibbles or bytes) + one f32 (scale, zero) pair per
+    // group — the number the tiered pool's occupancy accounting trusts
+    prop::check("kvq byte accounting", 25, |rng| {
+        let dim = 1 + rng.below(80);
+        let group = 1 + rng.below(dim + 4);
+        let nrows = 1 + rng.below(10);
+        let rows: Vec<f32> =
+            (0..nrows * dim).map(|_| rng.normal() as f32).collect();
+        let gpr = dim.div_ceil(group);
+        let q4 = quantize_rows(&rows, dim, group, KvCacheMode::Q4);
+        assert_eq!(q4.bytes(),
+                   nrows * dim.div_ceil(2) + 4 * 2 * (nrows * gpr));
+        let q8 = quantize_rows(&rows, dim, group, KvCacheMode::Q8);
+        assert_eq!(q8.bytes(), nrows * dim + 4 * 2 * (nrows * gpr));
+        assert!(q4.bytes() < q8.bytes() || dim == 1,
+                "q4 must be smaller for dim > 1");
+        assert_eq!(KvStash::F32(rows).bytes(), 4 * nrows * dim);
     });
 }
 

@@ -29,7 +29,9 @@
 //!   recover; exhausted retries escalate to Dead; failed submits
 //!   reroute; admission control sheds over-budget load with the `shed`
 //!   finish reason; and a randomized fault-injection sweep holds all
-//!   of the recovery invariants at once.
+//!   of the recovery invariants at once — with and without the tiered
+//!   KV demotion pool, where a killed replica's pool must come back
+//!   empty (its demoted blocks can never be restored).
 
 use sqplus::config::{
     CacheWatermarks, EngineConfig, RouterConfig, RoutingPolicy,
@@ -452,7 +454,10 @@ fn randomized_fault_injection_preserves_every_request() {
     //     fake model is content-determined, so a correct replay *must*
     //     continue exactly where the victim stopped);
     // (c) a dead victim's directory entries are purged, its replay
-    //     count is coherent, and nothing was shed or dropped.
+    //     count is coherent, and nothing was shed or dropped;
+    // (d) with the tiered KV pool on, every replica's pool occupancy
+    //     stays within its bound and a *killed* replica's pool is
+    //     empty — its demoted blocks can never be restored.
     prop::check("fault sweep", 6, |rng| {
         let bs = 2 + rng.below(3);
         let prefixes = shared_prefixes(bs);
@@ -465,51 +470,74 @@ fn randomized_fault_injection_preserves_every_request() {
         let n = 2 + rng.below(2);
         let victim = rng.below(n);
         let k = 1 + rng.below(12);
-        let cores: Vec<FaultyCore<FakeCore>> = (0..n)
-            .map(|i| {
-                let core = FakeCore::new(ecfg(bs), 256);
-                if i == victim {
-                    FaultyCore::new(core,
-                                    FaultSpec::FailOnStepK { k })
-                } else {
-                    stable(core)
+        // small device pools force evictions, so the tiering arm
+        // actually demotes; the untiered arm is the original sweep
+        let blocks = 24 + rng.below(32);
+        for pool in [0usize, 4 + rng.below(8)] {
+            let cores: Vec<FaultyCore<FakeCore>> = (0..n)
+                .map(|i| {
+                    let core = FakeCore::new(
+                        EngineConfig {
+                            kv_pool_blocks: pool,
+                            ..ecfg(bs)
+                        },
+                        blocks,
+                    );
+                    if i == victim {
+                        FaultyCore::new(core,
+                                        FaultSpec::FailOnStepK { k })
+                    } else {
+                        stable(core)
+                    }
+                })
+                .collect();
+            let router = Router::new(cores, RouterConfig {
+                routing: RoutingPolicy::CacheAware,
+                ..Default::default()
+            });
+            let (routed, fins, router) = run_router(router, &sched);
+            // (a)
+            let mut ids: Vec<u64> = fins.iter().map(|f| f.id).collect();
+            ids.sort_unstable();
+            ids.dedup();
+            assert_eq!(ids.len(), sched.len(),
+                       "lost or duplicated requests");
+            // (b)
+            assert_eq!(bare, routed,
+                       "streams diverged under fault injection");
+            // (c)
+            let rs = router.router_stats();
+            let dead = router
+                .replicas()
+                .iter()
+                .filter(|r| r.health.is_dead())
+                .count();
+            assert_eq!(dead, rs.dead);
+            assert!(rs.dead <= 1, "only the victim may die");
+            if router.replicas()[victim].health.is_dead() {
+                assert!(!router.directory().mentions_replica(victim),
+                        "dead replica still hinted in the directory");
+                assert_eq!(rs.replayed,
+                           router.replicas()[victim].replayed_out);
+            } else {
+                // the victim was never stepped enough times to fire
+                assert_eq!(rs.replayed, 0);
+            }
+            assert_eq!(rs.shed, 0);
+            assert_eq!(rs.replica_failed, 0);
+            // (d)
+            for (i, r) in router.replicas().iter().enumerate() {
+                let bm = &r.core().inner().sched.bm;
+                assert!(bm.kv_pool_len() <= pool,
+                        "replica {i} pool over bound");
+                assert!(bm.check_conservation());
+                if r.health.is_dead() {
+                    assert_eq!(bm.kv_pool_len(), 0,
+                               "killed replica {i} kept demoted \
+                                blocks restorable");
                 }
-            })
-            .collect();
-        let router = Router::new(cores, RouterConfig {
-            routing: RoutingPolicy::CacheAware,
-            ..Default::default()
-        });
-        let (routed, fins, router) = run_router(router, &sched);
-        // (a)
-        let mut ids: Vec<u64> = fins.iter().map(|f| f.id).collect();
-        ids.sort_unstable();
-        ids.dedup();
-        assert_eq!(ids.len(), sched.len(),
-                   "lost or duplicated requests");
-        // (b)
-        assert_eq!(bare, routed,
-                   "streams diverged under fault injection");
-        // (c)
-        let rs = router.router_stats();
-        let dead = router
-            .replicas()
-            .iter()
-            .filter(|r| r.health.is_dead())
-            .count();
-        assert_eq!(dead, rs.dead);
-        assert!(rs.dead <= 1, "only the victim may die");
-        if router.replicas()[victim].health.is_dead() {
-            assert!(!router.directory().mentions_replica(victim),
-                    "dead replica still hinted in the directory");
-            assert_eq!(rs.replayed,
-                       router.replicas()[victim].replayed_out);
-        } else {
-            // the victim was never stepped enough times to fire
-            assert_eq!(rs.replayed, 0);
+            }
         }
-        assert_eq!(rs.shed, 0);
-        assert_eq!(rs.replica_failed, 0);
     });
 }
 
