@@ -2,7 +2,7 @@
 # lives in rust/; the AOT compile path (JAX + Pallas -> HLO text) lives
 # in python/compile and only runs at build time, never while serving.
 
-.PHONY: build test artifacts bench docs fmt
+.PHONY: build test artifacts bench docs fmt lint
 
 # Tier-1: build + tests with the PJRT stub (no artifacts needed).
 build:
@@ -27,3 +27,10 @@ docs:
 
 fmt:
 	cd rust && cargo fmt --check
+
+# Project-invariant static analysis (panic paths, determinism, locks,
+# wire parity) — the same gate CI runs first. See
+# docs/STATIC_ANALYSIS.md for the pass catalog and allow-marker syntax.
+lint:
+	cd rust && cargo run --release --quiet --bin sqlint -- \
+		--baseline lint-baseline.txt src tests

@@ -1,0 +1,112 @@
+//! `sqlint` CLI — run the project-invariant lint passes.
+//!
+//! ```text
+//! sqlint [--baseline FILE] [--write-baseline FILE] [PATH ...]
+//! ```
+//!
+//! Paths default to `src tests` (relative to the current directory —
+//! run from `rust/`, or use `make lint`). Exit codes: 0 clean, 1
+//! findings, 2 usage or I/O error. Findings print to stdout as
+//! `path:line: [pass] message`; the summary line goes to stderr.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use sqplus::lint;
+
+fn usage() -> &'static str {
+    "usage: sqlint [--baseline FILE] [--write-baseline FILE] [PATH ...]\n\
+     \n\
+     Runs the panic/determinism/locks/wire passes over the given roots\n\
+     (default: src tests). --baseline filters known findings;\n\
+     --write-baseline records the current findings and exits 0."
+}
+
+fn main() -> ExitCode {
+    let mut baseline: Option<PathBuf> = None;
+    let mut write_baseline: Option<PathBuf> = None;
+    let mut roots: Vec<PathBuf> = Vec::new();
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "-h" | "--help" => {
+                println!("{}", usage());
+                return ExitCode::SUCCESS;
+            }
+            "--baseline" => {
+                let Some(f) = args.next() else {
+                    eprintln!("sqlint: --baseline needs a file\n{}", usage());
+                    return ExitCode::from(2);
+                };
+                baseline = Some(PathBuf::from(f));
+            }
+            "--write-baseline" => {
+                let Some(f) = args.next() else {
+                    eprintln!(
+                        "sqlint: --write-baseline needs a file\n{}",
+                        usage()
+                    );
+                    return ExitCode::from(2);
+                };
+                write_baseline = Some(PathBuf::from(f));
+            }
+            s if s.starts_with('-') => {
+                eprintln!("sqlint: unknown flag `{s}`\n{}", usage());
+                return ExitCode::from(2);
+            }
+            s => roots.push(PathBuf::from(s)),
+        }
+    }
+    if roots.is_empty() {
+        roots.push(PathBuf::from("src"));
+        roots.push(PathBuf::from("tests"));
+    }
+    let diags = match lint::run_paths(&roots) {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("sqlint: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    if let Some(out) = write_baseline {
+        let mut text = String::from(
+            "# sqlint baseline — one `pass path:line` key per line.\n\
+             # Regenerate with: sqlint --write-baseline <this file> <roots>\n",
+        );
+        for d in &diags {
+            text.push_str(&d.baseline_key());
+            text.push('\n');
+        }
+        if let Err(e) = std::fs::write(&out, text) {
+            eprintln!("sqlint: writing {}: {e}", out.display());
+            return ExitCode::from(2);
+        }
+        eprintln!(
+            "sqlint: wrote {} finding(s) to {}",
+            diags.len(),
+            out.display()
+        );
+        return ExitCode::SUCCESS;
+    }
+    let diags = if let Some(b) = baseline {
+        let known = match lint::load_baseline(&b) {
+            Ok(k) => k,
+            Err(e) => {
+                eprintln!("sqlint: reading {}: {e}", b.display());
+                return ExitCode::from(2);
+            }
+        };
+        lint::apply_baseline(diags, &known)
+    } else {
+        diags
+    };
+    for d in &diags {
+        println!("{}", d.render());
+    }
+    eprintln!("sqlint: {} finding(s)", diags.len());
+    if diags.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}

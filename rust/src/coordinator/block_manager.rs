@@ -449,6 +449,7 @@ impl BlockManager {
         let (&tick, &b) = self.evictable.iter().next()?;
         self.evictable.remove(&tick);
         let h = self.blocks[b].hash.take()
+            // sqlint: allow(panic) evictable entries always point at cached blocks (eviction invariant)
             .expect("evictable blocks are cached");
         self.cache.remove(&h);
         if self.kv_pool_blocks > 0 {
@@ -652,6 +653,7 @@ impl BlockManager {
                 PrefixHit::Device(b) => table.push(b),
                 PrefixHit::Pooled(h) => {
                     let b = self.grab_free_block()
+                        // sqlint: allow(panic) free-block accounting: can_allocate checked this same step
                         .expect("free-block accounting");
                     self.blocks[b].ref_count = 1;
                     debug_assert!(self.blocks[b].hash.is_none());
@@ -664,6 +666,7 @@ impl BlockManager {
             }
         }
         for _ in walk.len()..now {
+            // sqlint: allow(panic) free-block accounting: can_allocate checked this same step
             let b = self.grab_free_block().expect("free-block accounting");
             self.blocks[b].ref_count = 1;
             debug_assert!(self.blocks[b].hash.is_none());
@@ -677,6 +680,7 @@ impl BlockManager {
     /// (decode growth by one, or the next prefill chunk of a partially
     /// filled sequence); newly grabbed blocks are always private.
     pub fn append_token(&mut self, id: u64, new_context: usize) -> Alloc {
+        // sqlint: allow(panic) allocate() inserted this sequence's table
         let held = self.tables.get(&id).expect("seq not allocated").len();
         let need = self.blocks_for(new_context);
         let grown = Alloc::Ok { hit_tokens: 0, filled: new_context };
@@ -689,10 +693,12 @@ impl BlockManager {
         }
         let mut grabbed = Vec::with_capacity(extra);
         for _ in 0..extra {
+            // sqlint: allow(panic) free-block accounting: can_append checked this same step
             let b = self.grab_free_block().expect("free-block accounting");
             self.blocks[b].ref_count = 1;
             grabbed.push(b);
         }
+        // sqlint: allow(panic) allocate() inserted this sequence's table
         self.tables.get_mut(&id).unwrap().extend(grabbed);
         grown
     }
@@ -837,6 +843,7 @@ impl BlockManager {
     /// cache map and per-block hashes agree.
     pub fn check_conservation(&self) -> bool {
         let mut rc = vec![0usize; self.total_blocks];
+        // sqlint: allow(determinism) commutative refcount accumulation; order cannot change the result
         for t in self.tables.values() {
             for &b in t {
                 rc[b] += 1;

@@ -20,6 +20,7 @@
 //! both are `Send`, so they can drive the per-replica worker threads
 //! in [`worker`](super::worker) as well as the synchronous loop.
 
+// sqlint: allow-file(panic) test-double core — a panic is an injected fault
 use std::collections::HashMap;
 
 use crate::config::{CacheWatermarks, EngineConfig};

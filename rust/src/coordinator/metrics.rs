@@ -86,6 +86,7 @@ impl Metrics {
 
     /// Record a submission of `prompt_len` tokens.
     pub fn on_submit(&mut self, prompt_len: usize) {
+        // sqlint: allow(determinism) wall-clock serving-time stamp feeds metrics only, never scheduling
         self.started_at.get_or_insert_with(Instant::now);
         self.requests_in += 1;
         self.prompt_tokens += prompt_len;

@@ -287,6 +287,7 @@ pub(crate) fn pick_replica(rcfg: &RouterConfig, st: &mut PickState,
                 let r = (0..n_replicas)
                     .map(|off| (st.rr_next + off) % n_replicas)
                     .find(|r| cands.contains(r))
+                    // sqlint: allow(panic) guarded: the `[] => return None` arm handled empty cands
                     .expect("cands is non-empty");
                 st.rr_next = (r + 1) % n_replicas;
                 r
@@ -295,6 +296,7 @@ pub(crate) fn pick_replica(rcfg: &RouterConfig, st: &mut PickState,
                 .iter()
                 .copied()
                 .min_by_key(|&i| (loads[i], i))
+                // sqlint: allow(panic) guarded: the `[] => return None` arm handled empty cands
                 .expect("cands is non-empty"),
             RoutingPolicy::CacheAware => {
                 let spread = rcfg.cache_spread_limit;
@@ -704,6 +706,7 @@ impl<C: ReplicaCore> Router<C> {
             for seq in self.replicas[i].core_mut().take_finished() {
                 let gid = self.local_to_global[i]
                     .remove(&seq.id)
+                    // sqlint: allow(panic) every finished sequence was placed by route() first
                     .expect("finished sequence was never routed");
                 self.routes.remove(&gid);
                 self.push_finished(gid, Some(i), seq);

@@ -14,10 +14,11 @@ pub fn sample(logits: &[f32], params: &SamplingParams, rng: &mut Rng) -> u32 {
     } else {
         params.top_k.min(logits.len())
     };
-    // top-k indices by logit
+    // top-k indices by logit; total_cmp gives NaN a defined order, so
+    // a poisoned logits row cannot panic the replica mid-decode
     let mut idx: Vec<u32> = (0..logits.len() as u32).collect();
     idx.sort_unstable_by(|&a, &b| {
-        logits[b as usize].partial_cmp(&logits[a as usize]).unwrap()
+        logits[b as usize].total_cmp(&logits[a as usize])
     });
     idx.truncate(k);
     // softmax over the kept set at the given temperature

@@ -174,8 +174,11 @@ impl Scheduler {
     /// reported in `dropped`, not requeued) and the caller should give
     /// up for this step.
     fn preempt_one(&mut self) -> bool {
-        let victim = *self.running.last().unwrap();
-        self.running.pop();
+        let Some(victim) = self.running.pop() else {
+            // nothing left to preempt: tell the caller to give up the
+            // step rather than panicking the replica
+            return false;
+        };
         self.bm.release(victim);
         if self.running.is_empty() {
             self.dropped.push(victim);
@@ -196,6 +199,7 @@ impl Scheduler {
     fn drop_impossible_heads(&mut self,
                              seqs: &HashMap<u64, Sequence>) {
         while let Some(&id) = self.waiting.front() {
+            // sqlint: allow(panic) queue ids are live `seqs` keys (finish removes from both)
             let need = self.bm.blocks_for(seqs[&id].context_len())
                 + self.bm.watermark_blocks;
             if need <= self.bm.total_blocks {
@@ -270,6 +274,7 @@ impl Scheduler {
                 .collect();
             let mut ok = true;
             for &id in &batch {
+                // sqlint: allow(panic) queue ids are live `seqs` keys (finish removes from both)
                 let ctx = seqs[&id].context_len();
                 if self.bm.append_token(id, ctx + 1) == Alloc::NoSpace {
                     ok = false;
@@ -303,6 +308,7 @@ impl Scheduler {
                 if budget == 0 {
                     break;
                 }
+                // sqlint: allow(panic) queue ids are live `seqs` keys (finish removes from both)
                 let q = &seqs[&id];
                 if q.state != SeqState::Prefilling {
                     continue;
@@ -366,6 +372,7 @@ impl Scheduler {
             if self.running.len() >= self.cfg.max_running || budget == 0 {
                 break;
             }
+            // sqlint: allow(panic) queue ids are live `seqs` keys (finish removes from both)
             let toks = seqs[&id].full_tokens();
             let cap = self.cold_width_cap(cold + 1);
             // 0 = no bucket fits one more cold chunk of any width
@@ -406,6 +413,7 @@ impl Scheduler {
                 if chunks.len() >= slots {
                     break;
                 }
+                // sqlint: allow(panic) queue ids are live `seqs` keys (finish removes from both)
                 let toks = seqs[&id].full_tokens();
                 // one allocator call per attempt: the step token budget
                 // (only tokens past the cached prefix cost compute; the
@@ -463,6 +471,7 @@ impl Scheduler {
                 self.running.iter().copied().take(max_decode).collect();
             let mut ok = true;
             for &id in &batch {
+                // sqlint: allow(panic) queue ids are live `seqs` keys (finish removes from both)
                 let ctx = seqs[&id].context_len();
                 if self.bm.append_token(id, ctx + 1) == Alloc::NoSpace {
                     ok = false;

@@ -134,6 +134,7 @@ impl Sequence {
             preemptions: 0,
             cached_prefix_len: 0,
             prefill_progress: 0,
+            // sqlint: allow(determinism) wall-clock arrival stamp: latency metrics only, never scheduling
             arrived: Instant::now(),
             arrived_step: 0,
             first_token_at: None,
@@ -162,11 +163,13 @@ impl Sequence {
             .output
             .last()
             .or_else(|| self.prompt.last())
+            // sqlint: allow(panic) engine rejects empty prompts at submit (PromptTooLong)
             .expect("empty sequence")
     }
 
     /// Append a generated token (records first-token/latency times).
     pub fn record_token(&mut self, tok: u32) {
+        // sqlint: allow(determinism) wall-clock latency stamp: metrics/response only, never scheduling
         let now = Instant::now();
         if self.output.is_empty() {
             self.first_token_at = Some(now);
@@ -194,6 +197,7 @@ impl Sequence {
     pub fn finish(&mut self, reason: FinishReason) {
         self.state = SeqState::Finished;
         self.finish = Some(reason);
+        // sqlint: allow(determinism) wall-clock finish stamp: latency metrics only, never scheduling
         self.finished_at = Some(Instant::now());
     }
 

@@ -691,12 +691,16 @@ impl AsyncRouter {
             self.workers[i].dead_handled = true;
             self.workers[i].outstanding = 0;
             self.directory.purge_replica(i);
-            let gids: Vec<u64> = self
+            let mut gids: Vec<u64> = self
                 .requests
                 .iter()
                 .filter(|(_, r)| r.replica == Some(i))
                 .map(|(&g, _)| g)
                 .collect();
+            // replay in global-id order: the HashMap's iteration order
+            // must not leak into placement (the Dead-event path replays
+            // in the core's sorted drain order; match it)
+            gids.sort_unstable();
             self.workers[i].replayed_out += gids.len();
             self.replayed += gids.len();
             for gid in gids {

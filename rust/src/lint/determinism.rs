@@ -1,0 +1,246 @@
+//! Pass `determinism`: the scheduling/quantization core must be a pure
+//! function of its inputs.
+//!
+//! Scope: `src/coordinator/`, `src/runtime/`, `src/quant/` — the
+//! async-vs-sync stream-identity goldens and the quantization
+//! round-trip tests both depend on bit-identical replay. Flags
+//! wall-clock reads (`Instant::now`, `SystemTime`), unseeded RNG
+//! construction, and iteration over `HashMap`/`HashSet` values whose
+//! order can leak into output. Iteration is exempt when the adaptor
+//! chain is order-insensitive (`any`/`sum`/`max`/… or a re-`collect`
+//! into a map/set) or when a `.sort` appears within the next 20 lines.
+
+use super::source::{in_scope, SourceFile};
+use super::Diagnostic;
+use crate::lint::lexer::{TokKind, Token};
+use std::collections::HashSet;
+
+const ITER_FNS: [&str; 9] = [
+    "iter", "iter_mut", "keys", "values", "values_mut", "drain",
+    "into_iter", "into_keys", "into_values",
+];
+const ORDER_OK: [&str; 12] = [
+    "any", "all", "count", "sum", "product", "min", "max", "contains",
+    "contains_key", "is_empty", "len", "retain",
+];
+const RNG_IDENTS: [&str; 3] = ["thread_rng", "from_entropy", "OsRng"];
+const MAP_TYPES: [&str; 4] = ["HashMap", "HashSet", "BTreeMap", "BTreeSet"];
+
+/// Names bound to a `HashMap`/`HashSet`: struct fields (`name:
+/// HashMap<..>`) and local lets (`let name = HashMap::new()`).
+fn collect_map_names(sf: &SourceFile) -> HashSet<String> {
+    let mut names = HashSet::new();
+    let t = &sf.toks;
+    for (i, tok) in t.iter().enumerate() {
+        if tok.kind != TokKind::Ident
+            || (tok.text != "HashMap" && tok.text != "HashSet")
+        {
+            continue;
+        }
+        let mut j = i as isize - 1;
+        while j >= 0 {
+            let x = &t[j as usize];
+            let skip = matches!(
+                x.text.as_str(),
+                ":" | "&" | "mut" | "std" | "collections" | "<" | ">"
+            ) || x.kind == TokKind::Life;
+            if !skip {
+                break;
+            }
+            j -= 1;
+        }
+        if j >= 1 {
+            let x = &t[j as usize];
+            if x.kind == TokKind::Ident && t[j as usize + 1].text == ":" {
+                names.insert(x.text.clone());
+                continue;
+            }
+        }
+        // `let name = HashMap::new()`
+        if j >= 0 && t[j as usize].text == "=" {
+            j -= 1;
+            while j >= 0 && t[j as usize].text == "mut" {
+                j -= 1;
+            }
+            if j >= 1
+                && t[j as usize].kind == TokKind::Ident
+                && t[j as usize - 1].text == "let"
+            {
+                names.insert(t[j as usize].text.clone());
+            }
+        }
+    }
+    names
+}
+
+/// Is there a `.sort` within the next 20 source lines?
+fn sorted_lookahead(sf: &SourceFile, line: usize) -> bool {
+    let hi = (line + 20).min(sf.lines.len());
+    for ln in line..=hi {
+        if ln >= 1 && ln <= sf.lines.len() && sf.lines[ln - 1].contains(".sort")
+        {
+            return true;
+        }
+    }
+    false
+}
+
+/// Does the adaptor chain after token `i` (scanning at most 80 tokens,
+/// stopping at `;`) reach an order-insensitive consumer?
+fn chain_order_ok(t: &[Token], i: usize) -> bool {
+    let mut j = i;
+    while j < t.len() && j < i + 80 {
+        if t[j].text == ";" {
+            return false;
+        }
+        if t[j].kind == TokKind::Ident {
+            if ORDER_OK.contains(&t[j].text.as_str()) {
+                return true;
+            }
+            if t[j].text == "collect" {
+                // collect::<HashMap/HashSet/BTreeMap/BTreeSet<..>>
+                let mut k = j + 1;
+                while k < t.len() && k < j + 12 {
+                    if t[k].kind == TokKind::Ident
+                        && MAP_TYPES.contains(&t[k].text.as_str())
+                    {
+                        return true;
+                    }
+                    if t[k].text == "(" {
+                        break;
+                    }
+                    k += 1;
+                }
+            }
+        }
+        j += 1;
+    }
+    false
+}
+
+/// Run the pass over one file.
+pub fn run(sf: &SourceFile, diags: &mut Vec<Diagnostic>) {
+    if !in_scope(
+        &sf.rel,
+        &["src/coordinator/", "src/runtime/", "src/quant/"],
+    ) {
+        return;
+    }
+    let t = &sf.toks;
+    let maps = collect_map_names(sf);
+    for (i, tok) in t.iter().enumerate() {
+        if tok.kind != TokKind::Ident {
+            continue;
+        }
+        match tok.text.as_str() {
+            "Instant" => {
+                if i + 3 < t.len()
+                    && t[i + 1].text == ":"
+                    && t[i + 2].text == ":"
+                    && t[i + 3].text == "now"
+                {
+                    sf.emit(
+                        diags,
+                        "determinism",
+                        tok.line,
+                        "wall-clock `Instant::now()` in deterministic core"
+                            .to_string(),
+                        true,
+                    );
+                }
+            }
+            "SystemTime" => {
+                sf.emit(
+                    diags,
+                    "determinism",
+                    tok.line,
+                    "wall-clock `SystemTime` in deterministic core"
+                        .to_string(),
+                    true,
+                );
+            }
+            s if RNG_IDENTS.contains(&s) => {
+                sf.emit(
+                    diags,
+                    "determinism",
+                    tok.line,
+                    format!("unseeded RNG `{s}` in deterministic core"),
+                    true,
+                );
+            }
+            s if ITER_FNS.contains(&s) => {
+                if !(i > 0
+                    && t[i - 1].text == "."
+                    && i + 1 < t.len()
+                    && t[i + 1].text == "(")
+                {
+                    continue;
+                }
+                if i < 2 || t[i - 2].kind != TokKind::Ident {
+                    continue;
+                }
+                let recv = &t[i - 2].text;
+                if !maps.contains(recv) {
+                    continue;
+                }
+                if chain_order_ok(t, i) || sorted_lookahead(sf, tok.line) {
+                    continue;
+                }
+                sf.emit(
+                    diags,
+                    "determinism",
+                    tok.line,
+                    format!(
+                        "`{recv}.{}()` iterates a HashMap/HashSet in \
+                         arbitrary order",
+                        tok.text
+                    ),
+                    true,
+                );
+            }
+            "for" => {
+                // for pat in [&][mut] [self .] name {
+                let mut j = i + 1;
+                while j < t.len() && t[j].text != "in" && t[j].text != "{" {
+                    j += 1;
+                }
+                if j >= t.len() || t[j].text != "in" {
+                    continue;
+                }
+                let mut k = j + 1;
+                let mut expr: Vec<&Token> = Vec::new();
+                while k < t.len() && t[k].text != "{" {
+                    expr.push(&t[k]);
+                    k += 1;
+                    if expr.len() > 5 {
+                        break;
+                    }
+                }
+                if expr.len() > 5 || expr.is_empty() {
+                    continue;
+                }
+                if expr.iter().any(|e| e.text == "(") {
+                    continue;
+                }
+                let last = expr[expr.len() - 1];
+                if last.kind != TokKind::Ident || !maps.contains(&last.text) {
+                    continue;
+                }
+                if !sorted_lookahead(sf, tok.line) {
+                    sf.emit(
+                        diags,
+                        "determinism",
+                        tok.line,
+                        format!(
+                            "`for .. in {}` iterates a HashMap/HashSet in \
+                             arbitrary order",
+                            last.text
+                        ),
+                        true,
+                    );
+                }
+            }
+            _ => {}
+        }
+    }
+}

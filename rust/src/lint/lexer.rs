@@ -1,0 +1,260 @@
+//! Minimal hand-rolled Rust token lexer for the `sqlint` passes.
+//!
+//! No `syn`, no external deps — the repo must stay offline-buildable.
+//! Produces a flat token stream with 1-based line numbers plus the
+//! comment list (comments carry the `sqlint:` allow markers). It
+//! understands just enough Rust to make pattern passes reliable:
+//! line and nested block comments, plain/raw/byte strings, char
+//! literals vs lifetimes, identifiers, and numbers; everything else
+//! is a single-character punctuation token.
+
+/// Kind of a lexed token.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword.
+    Ident,
+    /// Single punctuation character.
+    Punct,
+    /// String literal (including raw and byte strings).
+    Str,
+    /// Char literal.
+    Char,
+    /// Lifetime (`'a`).
+    Life,
+    /// Numeric literal.
+    Num,
+}
+
+/// One lexed token.
+#[derive(Debug, Clone)]
+pub struct Token {
+    /// Token class.
+    pub kind: TokKind,
+    /// Exact source text.
+    pub text: String,
+    /// 1-based line of the token's first character.
+    pub line: usize,
+}
+
+/// One comment (not part of the token stream).
+#[derive(Debug, Clone)]
+pub struct Comment {
+    /// 1-based line the comment starts on.
+    pub line: usize,
+    /// Full text including the `//` / `/*` delimiters.
+    pub text: String,
+    /// True when nothing but whitespace precedes it on its line.
+    pub standalone: bool,
+}
+
+fn is_ident_start(b: u8) -> bool {
+    b.is_ascii_alphabetic() || b == b'_'
+}
+fn is_ident_cont(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+fn text_of(bytes: &[u8], i: usize, j: usize) -> String {
+    String::from_utf8_lossy(&bytes[i..j.min(bytes.len())]).into_owned()
+}
+
+/// `b?r#*"` raw-string opener at `i`? Returns one past its end.
+fn try_raw_string(b: &[u8], i: usize) -> Option<usize> {
+    let mut k = i;
+    if b[k] == b'b' {
+        k += 1;
+    }
+    if k >= b.len() || b[k] != b'r' {
+        return None;
+    }
+    k += 1;
+    let mut hashes = 0usize;
+    while k < b.len() && b[k] == b'#' {
+        hashes += 1;
+        k += 1;
+    }
+    if k >= b.len() || b[k] != b'"' {
+        return None;
+    }
+    k += 1;
+    while k < b.len() {
+        if b[k] == b'"' {
+            let mut h = 0usize;
+            while h < hashes && k + 1 + h < b.len() && b[k + 1 + h] == b'#' {
+                h += 1;
+            }
+            if h == hashes {
+                return Some(k + 1 + hashes);
+            }
+        }
+        k += 1;
+    }
+    Some(b.len())
+}
+
+/// Lex `src` into its token stream and comment list.
+pub fn lex(src: &str) -> (Vec<Token>, Vec<Comment>) {
+    let b = src.as_bytes();
+    let n = b.len();
+    let mut toks: Vec<Token> = Vec::new();
+    let mut comments: Vec<Comment> = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1usize;
+    let mut line_has_code = false;
+    while i < n {
+        let c = b[i];
+        if c == b'\n' {
+            line += 1;
+            line_has_code = false;
+            i += 1;
+            continue;
+        }
+        if c == b' ' || c == b'\t' || c == b'\r' {
+            i += 1;
+            continue;
+        }
+        // line comment
+        if c == b'/' && i + 1 < n && b[i + 1] == b'/' {
+            let mut j = i;
+            while j < n && b[j] != b'\n' {
+                j += 1;
+            }
+            comments.push(Comment {
+                line,
+                text: text_of(b, i, j),
+                standalone: !line_has_code,
+            });
+            i = j;
+            continue;
+        }
+        // block comment (nested)
+        if c == b'/' && i + 1 < n && b[i + 1] == b'*' {
+            let start_line = line;
+            let standalone = !line_has_code;
+            let mut depth = 1usize;
+            let mut j = i + 2;
+            while j < n && depth > 0 {
+                if b[j] == b'\n' {
+                    line += 1;
+                    j += 1;
+                } else if b[j] == b'/' && j + 1 < n && b[j + 1] == b'*' {
+                    depth += 1;
+                    j += 2;
+                } else if b[j] == b'*' && j + 1 < n && b[j + 1] == b'/' {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+            }
+            comments.push(Comment {
+                line: start_line,
+                text: text_of(b, i, j),
+                standalone,
+            });
+            i = j;
+            continue;
+        }
+        line_has_code = true;
+        // raw / byte-raw strings
+        if c == b'r' || c == b'b' {
+            if let Some(j) = try_raw_string(b, i) {
+                let start_line = line;
+                let t = text_of(b, i, j);
+                line += t.bytes().filter(|&x| x == b'\n').count();
+                toks.push(Token { kind: TokKind::Str, text: t, line: start_line });
+                i = j;
+                continue;
+            }
+        }
+        // plain / byte strings
+        if c == b'"' || (c == b'b' && i + 1 < n && b[i + 1] == b'"') {
+            let start = i;
+            let start_line = line;
+            let mut j = i + if c == b'b' { 2 } else { 1 };
+            while j < n && b[j] != b'"' {
+                if b[j] == b'\\' {
+                    if j + 1 < n && b[j + 1] == b'\n' {
+                        line += 1;
+                    }
+                    j += 2;
+                } else {
+                    if b[j] == b'\n' {
+                        line += 1;
+                    }
+                    j += 1;
+                }
+            }
+            j = (j + 1).min(n);
+            toks.push(Token {
+                kind: TokKind::Str,
+                text: text_of(b, start, j),
+                line: start_line,
+            });
+            i = j;
+            continue;
+        }
+        // char literal vs lifetime
+        if c == b'\'' {
+            if i + 3 < n && b[i + 1] == b'\\' && b[i + 3] == b'\'' {
+                toks.push(Token {
+                    kind: TokKind::Char,
+                    text: text_of(b, i, i + 4),
+                    line,
+                });
+                i += 4;
+                continue;
+            }
+            if i + 2 < n && b[i + 1] != b'\\' && b[i + 1] != b'\'' && b[i + 2] == b'\'' {
+                toks.push(Token {
+                    kind: TokKind::Char,
+                    text: text_of(b, i, i + 3),
+                    line,
+                });
+                i += 3;
+                continue;
+            }
+            let mut j = i + 1;
+            while j < n && is_ident_cont(b[j]) {
+                j += 1;
+            }
+            toks.push(Token { kind: TokKind::Life, text: text_of(b, i, j), line });
+            i = j.max(i + 1);
+            continue;
+        }
+        if is_ident_start(c) {
+            let mut j = i;
+            while j < n && is_ident_cont(b[j]) {
+                j += 1;
+            }
+            toks.push(Token {
+                kind: TokKind::Ident,
+                text: text_of(b, i, j),
+                line,
+            });
+            i = j;
+            continue;
+        }
+        if c.is_ascii_digit() {
+            let mut j = i;
+            while j < n && is_ident_cont(b[j]) {
+                j += 1;
+            }
+            if j + 1 < n && b[j] == b'.' && b[j + 1].is_ascii_digit() {
+                j += 1;
+                while j < n && is_ident_cont(b[j]) {
+                    j += 1;
+                }
+            }
+            toks.push(Token { kind: TokKind::Num, text: text_of(b, i, j), line });
+            i = j;
+            continue;
+        }
+        toks.push(Token {
+            kind: TokKind::Punct,
+            text: text_of(b, i, i + 1),
+            line,
+        });
+        i += 1;
+    }
+    (toks, comments)
+}

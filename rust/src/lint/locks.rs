@@ -1,0 +1,111 @@
+//! Pass `locks`: mutex and channel discipline.
+//!
+//! Rule A (all of `src/`): `.lock().unwrap()` / `.lock().expect(..)`
+//! turns mutex poisoning — some *other* thread panicked — into a panic
+//! here too, cascading one replica's death into its neighbors. Handle
+//! the `Err` (the poisoned data is still accessible via
+//! `into_inner`).
+//!
+//! Rule B (`coordinator/worker.rs` and `src/server/` only): a lock
+//! guard bound by `let`/`match` and then held across a channel
+//! `.send()`/`.recv()` serializes the serving loop on that mutex — or
+//! deadlocks it outright if the peer needs the same lock to make
+//! progress. Drop the guard before blocking on a channel.
+
+use super::source::SourceFile;
+use super::Diagnostic;
+use crate::lint::lexer::TokKind;
+
+const SEND_RECV: [&str; 5] =
+    ["send", "recv", "try_recv", "recv_timeout", "send_timeout"];
+
+/// Run the pass over one file.
+pub fn run(sf: &SourceFile, diags: &mut Vec<Diagnostic>) {
+    let t = &sf.toks;
+    let in_src = sf.rel.contains("src/");
+    let rule_b = (sf.rel.ends_with("worker.rs")
+        && sf.rel.contains("coordinator"))
+        || sf.rel.contains("src/server/");
+    for (i, tok) in t.iter().enumerate() {
+        if tok.kind != TokKind::Ident || tok.text != "lock" {
+            continue;
+        }
+        if !(i > 0
+            && t[i - 1].text == "."
+            && i + 1 < t.len()
+            && t[i + 1].text == "(")
+        {
+            continue;
+        }
+        // rule A: .lock().unwrap() / .lock().expect(
+        if in_src
+            && i + 4 < t.len()
+            && t[i + 2].text == ")"
+            && t[i + 3].text == "."
+            && (t[i + 4].text == "unwrap" || t[i + 4].text == "expect")
+        {
+            sf.emit(
+                diags,
+                "locks",
+                tok.line,
+                "`.lock().unwrap()` propagates mutex poisoning; handle \
+                 the Err"
+                    .to_string(),
+                true,
+            );
+        }
+        if !rule_b {
+            continue;
+        }
+        // rule B: guard bound by let/match and held across send/recv
+        let mut j = i as isize - 1;
+        let mut bound = false;
+        while j >= 0 {
+            let x = &t[j as usize].text;
+            if x == ";" || x == "{" || x == "}" {
+                break;
+            }
+            if x == "let" || x == "match" {
+                bound = true;
+                break;
+            }
+            j -= 1;
+        }
+        if !bound {
+            continue;
+        }
+        let mut depth = 0isize;
+        let mut k = i + 1;
+        while k < t.len() {
+            let x = &t[k];
+            if x.text == "{" {
+                depth += 1;
+            } else if x.text == "}" {
+                depth -= 1;
+                if depth < 0 {
+                    break;
+                }
+            } else if x.text == ";" && depth < 0 {
+                break;
+            } else if x.kind == TokKind::Ident
+                && SEND_RECV.contains(&x.text.as_str())
+                && k > 0
+                && t[k - 1].text == "."
+                && k + 1 < t.len()
+                && t[k + 1].text == "("
+            {
+                sf.emit(
+                    diags,
+                    "locks",
+                    x.line,
+                    "channel send/recv while a lock guard may still be \
+                     held"
+                        .to_string(),
+                    true,
+                );
+                break;
+            }
+            k += 1;
+        }
+    }
+}

@@ -1,0 +1,234 @@
+//! `sqlint` — the project-invariant static-analysis passes.
+//!
+//! A dependency-free lint over the repo's own source (no `syn`, no
+//! network): a hand-rolled token [`lexer`] feeds four passes that pin
+//! the invariants this codebase's tests rely on but rustc cannot see:
+//!
+//! * **panic** — no `.unwrap()` / `.expect()` / panicking macros /
+//!   `m[&k]` map indexing in `coordinator/` and `server/`; a panic
+//!   there takes a replica down with every in-flight request.
+//! * **determinism** — no wall-clock reads, unseeded RNG, or
+//!   order-leaking `HashMap`/`HashSet` iteration in `coordinator/`,
+//!   `runtime/`, `quant/`; the stream-identity goldens depend on
+//!   bit-identical replay.
+//! * **locks** — no `.lock().unwrap()` anywhere in `src/`; no lock
+//!   guard held across a channel `.send()`/`.recv()` in the serving
+//!   loop.
+//! * **wire** — every field of `CoreStats`/`RouterStats` must appear
+//!   in `stats_json`, `decode_stats`, and `metrics_text`.
+//!
+//! Findings are suppressed per line with
+//! `// sqlint: allow(<pass>) <justification>` (a standalone marker
+//! covers the next non-comment line; a trailing marker covers its own
+//! line) or per file with `// sqlint: allow-file(<pass>)
+//! <justification>`. The justification is mandatory — an empty one is
+//! itself a finding (pass id `marker`). `#[cfg(test)]` / `#[test]`
+//! regions are skipped by every pass except `wire`.
+//!
+//! The CLI front-end is `src/bin/sqlint.rs`; run it via `make lint`.
+//! See `docs/STATIC_ANALYSIS.md` for the pass catalog and the
+//! baseline workflow.
+
+pub mod lexer;
+pub mod source;
+
+mod determinism;
+mod locks;
+mod panic;
+mod wire;
+
+use std::collections::HashSet;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+use source::SourceFile;
+
+/// One finding: `path:line: [pass] message`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Diagnostic {
+    /// Pass id: `panic`, `determinism`, `locks`, `wire`, or `marker`.
+    pub pass: String,
+    /// Path as given on the command line.
+    pub path: String,
+    /// 1-based line.
+    pub line: usize,
+    /// Human-readable explanation.
+    pub message: String,
+}
+
+impl Diagnostic {
+    /// Render as `path:line: [pass] message`.
+    pub fn render(&self) -> String {
+        format!("{}:{}: [{}] {}", self.path, self.line, self.pass, self.message)
+    }
+
+    /// Stable key used by the baseline file: `pass path:line`.
+    pub fn baseline_key(&self) -> String {
+        format!("{} {}:{}", self.pass, self.path, self.line)
+    }
+}
+
+/// Collect the `.rs` files under each root (a root may also be a single
+/// file), skipping `lint_fixtures` and `target` directories. Directory
+/// entries are visited in sorted order so output is stable.
+pub fn collect_files(roots: &[PathBuf]) -> io::Result<Vec<PathBuf>> {
+    let mut out = Vec::new();
+    for root in roots {
+        if root.is_file() {
+            out.push(root.clone());
+            continue;
+        }
+        walk_dir(root, &mut out)?;
+    }
+    Ok(out)
+}
+
+fn walk_dir(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    let mut entries: Vec<PathBuf> = fs::read_dir(dir)?
+        .collect::<Result<Vec<_>, _>>()?
+        .into_iter()
+        .map(|e| e.path())
+        .collect();
+    entries.sort();
+    let mut subdirs = Vec::new();
+    for p in entries {
+        if p.is_dir() {
+            let name = p.file_name().and_then(|n| n.to_str()).unwrap_or("");
+            if name == "lint_fixtures" || name == "target" {
+                continue;
+            }
+            subdirs.push(p);
+        } else if p.extension().and_then(|e| e.to_str()) == Some("rs") {
+            out.push(p);
+        }
+    }
+    for d in subdirs {
+        walk_dir(&d, out)?;
+    }
+    Ok(())
+}
+
+/// Run every pass over the `.rs` files under `roots` and return the
+/// findings sorted by `(path, line, pass)`.
+pub fn run_paths(roots: &[PathBuf]) -> io::Result<Vec<Diagnostic>> {
+    let mut diags: Vec<Diagnostic> = Vec::new();
+    let mut files: Vec<SourceFile> = Vec::new();
+    for path in collect_files(roots)? {
+        let rel = path.to_string_lossy().into_owned();
+        let src = fs::read_to_string(&path)?;
+        let sf = SourceFile::new(&rel, &src);
+        for (line, pid) in &sf.bad_markers {
+            diags.push(Diagnostic {
+                pass: "marker".to_string(),
+                path: rel.clone(),
+                line: *line,
+                message: format!(
+                    "allow({pid}) marker missing a justification"
+                ),
+            });
+        }
+        panic::run(&sf, &mut diags);
+        determinism::run(&sf, &mut diags);
+        locks::run(&sf, &mut diags);
+        files.push(sf);
+    }
+    wire::run(&files, &mut diags);
+    diags.sort_by(|a, b| {
+        (&a.path, a.line, &a.pass).cmp(&(&b.path, b.line, &b.pass))
+    });
+    Ok(diags)
+}
+
+/// Load a baseline file: one `pass path:line` key per line, `#`
+/// comments and blank lines ignored.
+pub fn load_baseline(path: &Path) -> io::Result<HashSet<String>> {
+    let text = fs::read_to_string(path)?;
+    Ok(text
+        .lines()
+        .map(str::trim)
+        .filter(|l| !l.is_empty() && !l.starts_with('#'))
+        .map(str::to_string)
+        .collect())
+}
+
+/// Drop findings whose [`Diagnostic::baseline_key`] is in `baseline`.
+pub fn apply_baseline(
+    diags: Vec<Diagnostic>,
+    baseline: &HashSet<String>,
+) -> Vec<Diagnostic> {
+    diags
+        .into_iter()
+        .filter(|d| !baseline.contains(&d.baseline_key()))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::lexer::{lex, TokKind};
+    use super::source::SourceFile;
+    use super::*;
+
+    #[test]
+    fn lexer_strings_comments_lifetimes() {
+        let src = "fn f<'a>(s: &'a str) { let c = 'x'; // tail\n\
+                   let r = r#\"raw \" here\"#; /* block\nstill */ }";
+        let (toks, comments) = lex(src);
+        assert_eq!(comments.len(), 2);
+        assert!(!comments[0].standalone);
+        let lifes: Vec<_> =
+            toks.iter().filter(|t| t.kind == TokKind::Life).collect();
+        assert_eq!(lifes.len(), 2);
+        let strs: Vec<_> =
+            toks.iter().filter(|t| t.kind == TokKind::Str).collect();
+        assert_eq!(strs.len(), 1);
+        assert!(strs[0].text.contains("raw \" here"));
+        let chars: Vec<_> =
+            toks.iter().filter(|t| t.kind == TokKind::Char).collect();
+        assert_eq!(chars.len(), 1);
+    }
+
+    #[test]
+    fn standalone_marker_covers_next_code_line() {
+        let src = "// sqlint: allow(panic) reason here\n\
+                   // another comment\n\
+                   x.unwrap();\n";
+        let sf = SourceFile::new("src/coordinator/x.rs", src);
+        assert!(sf.allowed.contains(&("panic".to_string(), 3)));
+        let mut diags = Vec::new();
+        super::panic::run(&sf, &mut diags);
+        assert!(diags.is_empty());
+    }
+
+    #[test]
+    fn marker_without_justification_is_a_finding() {
+        let src = "x.unwrap(); // sqlint: allow(panic)\n";
+        let sf = SourceFile::new("src/coordinator/x.rs", src);
+        assert_eq!(sf.bad_markers.len(), 1);
+        let mut diags = Vec::new();
+        super::panic::run(&sf, &mut diags);
+        assert_eq!(diags.len(), 1);
+    }
+
+    #[test]
+    fn test_regions_are_skipped() {
+        let src = "#[cfg(test)]\nmod tests {\n    fn f() { x.unwrap(); }\n}\n";
+        let sf = SourceFile::new("src/coordinator/x.rs", src);
+        let mut diags = Vec::new();
+        super::panic::run(&sf, &mut diags);
+        assert!(diags.is_empty(), "{diags:?}");
+    }
+
+    #[test]
+    fn baseline_roundtrip_filters_findings() {
+        let d = Diagnostic {
+            pass: "panic".to_string(),
+            path: "src/coordinator/x.rs".to_string(),
+            line: 7,
+            message: "m".to_string(),
+        };
+        let mut base = HashSet::new();
+        base.insert(d.baseline_key());
+        assert!(apply_baseline(vec![d], &base).is_empty());
+    }
+}

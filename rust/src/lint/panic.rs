@@ -1,0 +1,75 @@
+//! Pass `panic`: no panic-capable constructs on the request path.
+//!
+//! Scope: `src/coordinator/` and `src/server/` — a panic there takes a
+//! replica (or the whole server) down with every in-flight request.
+//! Flags `.unwrap()` / `.expect()`, the panicking macros, and map-key
+//! indexing `m[&k]` (the narrowed indexing rule: `[` preceded by an
+//! identifier / `]` / `)` and immediately followed by `&`, which in
+//! this codebase is exactly the `HashMap` index sugar that panics on a
+//! missing key).
+
+use super::source::{in_scope, SourceFile};
+use super::Diagnostic;
+use crate::lint::lexer::TokKind;
+
+const PANIC_MACROS: [&str; 4] =
+    ["panic", "unreachable", "todo", "unimplemented"];
+
+/// Run the pass over one file.
+pub fn run(sf: &SourceFile, diags: &mut Vec<Diagnostic>) {
+    if !in_scope(&sf.rel, &["src/coordinator/", "src/server/"]) {
+        return;
+    }
+    let t = &sf.toks;
+    for (i, tok) in t.iter().enumerate() {
+        if tok.kind != TokKind::Ident {
+            if tok.text == "["
+                && i > 0
+                && i + 1 < t.len()
+                && (t[i - 1].kind == TokKind::Ident
+                    || t[i - 1].text == ")"
+                    || t[i - 1].text == "]")
+                && t[i + 1].text == "&"
+            {
+                sf.emit(
+                    diags,
+                    "panic",
+                    tok.line,
+                    "map index `[&..]` can panic; use `.get()`".to_string(),
+                    true,
+                );
+            }
+            continue;
+        }
+        if tok.text == "unwrap" || tok.text == "expect" {
+            if i > 0
+                && t[i - 1].text == "."
+                && i + 1 < t.len()
+                && t[i + 1].text == "("
+            {
+                sf.emit(
+                    diags,
+                    "panic",
+                    tok.line,
+                    format!(
+                        "request-path `.{}()` can panic (replica death)",
+                        tok.text
+                    ),
+                    true,
+                );
+            }
+        } else if PANIC_MACROS.contains(&tok.text.as_str())
+            && i + 1 < t.len()
+            && t[i + 1].text == "!"
+            && (i == 0 || t[i - 1].text != ".")
+        {
+            sf.emit(
+                diags,
+                "panic",
+                tok.line,
+                format!("request-path `{}!` macro", tok.text),
+                true,
+            );
+        }
+    }
+}

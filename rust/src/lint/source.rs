@@ -1,0 +1,214 @@
+//! A lexed source file plus its `sqlint:` allow markers and
+//! `#[cfg(test)]` regions — the unit every pass operates on.
+
+use std::collections::HashSet;
+
+use super::lexer::{lex, Comment, TokKind, Token};
+use super::Diagnostic;
+
+/// A parsed allow marker: `// sqlint: allow(<pass>) <justification>` or
+/// `// sqlint: allow-file(<pass>) <justification>`.
+struct Marker {
+    is_file: bool,
+    pass: String,
+    justification: String,
+}
+
+/// Parse the first `sqlint:` marker in a comment's text, if any.
+fn parse_marker(text: &str) -> Option<Marker> {
+    let at = text.find("sqlint:")?;
+    let rest = text[at + "sqlint:".len()..].trim_start();
+    let rest = rest.strip_prefix("allow")?;
+    let (is_file, rest) = match rest.strip_prefix("-file") {
+        Some(r) => (true, r),
+        None => (false, rest),
+    };
+    let rest = rest.strip_prefix('(')?;
+    let close = rest.find(')')?;
+    let pass = &rest[..close];
+    if pass.is_empty() || !pass.bytes().all(|b| b.is_ascii_lowercase()) {
+        return None;
+    }
+    Some(Marker {
+        is_file,
+        pass: pass.to_string(),
+        justification: rest[close + 1..].trim().to_string(),
+    })
+}
+
+/// One source file, lexed and annotated for the passes.
+pub struct SourceFile {
+    /// Path as given on the command line (used in diagnostics and for
+    /// pass scoping by substring, e.g. `src/coordinator/`).
+    pub rel: String,
+    /// Raw source lines (1-based access via `lines[n - 1]`).
+    pub lines: Vec<String>,
+    /// The token stream.
+    pub toks: Vec<Token>,
+    /// Passes allowed for the whole file.
+    pub allow_file: HashSet<String>,
+    /// `(pass, line)` pairs individually allowed.
+    pub allowed: HashSet<(String, usize)>,
+    /// Markers with an empty justification: `(line, pass)`.
+    pub bad_markers: Vec<(usize, String)>,
+    /// Lines inside `#[cfg(test)]` / `#[test]` items.
+    pub test_lines: HashSet<usize>,
+}
+
+impl SourceFile {
+    /// Lex `src` and resolve its markers and test regions.
+    pub fn new(rel: &str, src: &str) -> SourceFile {
+        let (toks, comments) = lex(src);
+        let mut allow_file = HashSet::new();
+        let mut allowed = HashSet::new();
+        let mut bad_markers = Vec::new();
+        let comment_lines: HashSet<usize> = comments
+            .iter()
+            .filter(|c| c.standalone)
+            .map(|c| c.line)
+            .collect();
+        for c in &comments {
+            let Some(m) = parse_marker(&c.text) else {
+                continue;
+            };
+            if m.justification.is_empty() {
+                bad_markers.push((c.line, m.pass));
+                continue;
+            }
+            if m.is_file {
+                allow_file.insert(m.pass);
+            } else if c.standalone {
+                // a standalone marker covers the next non-comment line
+                let mut tgt = c.line + 1;
+                while comment_lines.contains(&tgt) {
+                    tgt += 1;
+                }
+                allowed.insert((m.pass, tgt));
+            } else {
+                allowed.insert((m.pass, c.line));
+            }
+        }
+        let test_lines = test_regions(&toks);
+        SourceFile {
+            rel: rel.to_string(),
+            lines: src.split('\n').map(str::to_string).collect(),
+            toks,
+            allow_file,
+            allowed,
+            bad_markers,
+            test_lines,
+        }
+    }
+
+    /// Record a finding unless a marker (or test region) suppresses it.
+    pub fn emit(
+        &self,
+        diags: &mut Vec<Diagnostic>,
+        pass: &str,
+        line: usize,
+        msg: String,
+        skip_test: bool,
+    ) {
+        if skip_test && self.test_lines.contains(&line) {
+            return;
+        }
+        if self.allow_file.contains(pass)
+            || self.allowed.contains(&(pass.to_string(), line))
+        {
+            return;
+        }
+        diags.push(Diagnostic {
+            pass: pass.to_string(),
+            path: self.rel.clone(),
+            line,
+            message: msg,
+        });
+    }
+}
+
+/// Any substring of `parts` present in `rel`?
+pub fn in_scope(rel: &str, parts: &[&str]) -> bool {
+    parts.iter().any(|p| rel.contains(p))
+}
+
+/// Lines covered by `#[cfg(test)]` / `#[test]` items (attribute through
+/// the item's matching close brace).
+fn test_regions(t: &[Token]) -> HashSet<usize> {
+    let mut out = HashSet::new();
+    let mut i = 0usize;
+    while i < t.len() {
+        if !(t[i].text == "#" && i + 1 < t.len() && t[i + 1].text == "[") {
+            i += 1;
+            continue;
+        }
+        // scan attribute contents
+        let mut j = i + 2;
+        let mut depth = 1usize;
+        let mut names: Vec<&str> = Vec::new();
+        while j < t.len() && depth > 0 {
+            if t[j].text == "[" {
+                depth += 1;
+            } else if t[j].text == "]" {
+                depth -= 1;
+            } else if t[j].kind == TokKind::Ident {
+                names.push(&t[j].text);
+            }
+            j += 1;
+        }
+        let is_test = (names.iter().any(|n| *n == "cfg")
+            && names.iter().any(|n| *n == "test"))
+            || names == ["test"];
+        if !is_test {
+            i = j;
+            continue;
+        }
+        // skip any further attributes on the same item
+        while j < t.len()
+            && t[j].text == "#"
+            && j + 1 < t.len()
+            && t[j + 1].text == "["
+        {
+            let mut d = 1usize;
+            j += 2;
+            while j < t.len() && d > 0 {
+                if t[j].text == "[" {
+                    d += 1;
+                } else if t[j].text == "]" {
+                    d -= 1;
+                }
+                j += 1;
+            }
+        }
+        // the item runs to its first `{` (brace-matched) or a `;`
+        let mut k = j;
+        while k < t.len() && t[k].text != "{" && t[k].text != ";" {
+            k += 1;
+        }
+        let end_line = if k < t.len() && t[k].text == "{" {
+            let mut d = 1usize;
+            let mut e = k + 1;
+            while e < t.len() && d > 0 {
+                if t[e].text == "{" {
+                    d += 1;
+                } else if t[e].text == "}" {
+                    d -= 1;
+                }
+                e += 1;
+            }
+            if e >= 1 && e - 1 < t.len() {
+                t[e - 1].line
+            } else {
+                t.last().map_or(1, |x| x.line)
+            }
+        } else if k < t.len() {
+            t[k].line
+        } else {
+            t.last().map_or(1, |x| x.line)
+        };
+        for ln in t[i].line..=end_line {
+            out.insert(ln);
+        }
+        i = k.max(i + 1);
+    }
+    out
+}

@@ -1,0 +1,180 @@
+//! Pass `wire`: stats-surface parity.
+//!
+//! Every field of [`CoreStats`](crate::coordinator::replica::CoreStats)
+//! and `RouterStats` must appear in all three wire functions —
+//! `stats_json` (the `/stats` encoder), `decode_stats` (the client
+//! decoder), and `metrics_text` (the Prometheus exposition) — either
+//! as an identifier in the function body or as a substring of one of
+//! its string literals. Adding a counter to a stats struct without
+//! threading it through the wire silently ships a surface that lies by
+//! omission; this pass turns that into a CI failure at the field's
+//! declaration site.
+
+use super::source::SourceFile;
+use super::Diagnostic;
+use crate::lint::lexer::TokKind;
+use std::collections::{HashMap, HashSet};
+
+const WIRE_STRUCTS: [&str; 2] = ["CoreStats", "RouterStats"];
+const WIRE_FNS: [&str; 3] = ["stats_json", "decode_stats", "metrics_text"];
+
+/// Fields of each wire struct defined in `sf`: name → `(field, line)`.
+fn collect_struct_fields(
+    sf: &SourceFile,
+) -> Vec<(String, Vec<(String, usize)>)> {
+    let mut out = Vec::new();
+    let t = &sf.toks;
+    for (i, tok) in t.iter().enumerate() {
+        if tok.text != "struct"
+            || i + 1 >= t.len()
+            || !WIRE_STRUCTS.contains(&t[i + 1].text.as_str())
+        {
+            continue;
+        }
+        let name = t[i + 1].text.clone();
+        let mut j = i + 2;
+        while j < t.len() && t[j].text != "{" && t[j].text != ";" {
+            j += 1;
+        }
+        if j >= t.len() || t[j].text == ";" {
+            continue;
+        }
+        let mut depth = 1usize;
+        j += 1;
+        let mut fields: Vec<(String, usize)> = Vec::new();
+        let mut expect_field = true;
+        while j < t.len() && depth > 0 {
+            let x = &t[j];
+            if x.text == "{" {
+                depth += 1;
+            } else if x.text == "}" {
+                depth -= 1;
+            } else if depth == 1 {
+                if x.text == "#" {
+                    // skip an attribute
+                    j += 1;
+                    if j < t.len() && t[j].text == "[" {
+                        let mut d = 1usize;
+                        j += 1;
+                        while j < t.len() && d > 0 {
+                            if t[j].text == "[" {
+                                d += 1;
+                            } else if t[j].text == "]" {
+                                d -= 1;
+                            }
+                            j += 1;
+                        }
+                    }
+                    continue;
+                }
+                if expect_field
+                    && x.kind == TokKind::Ident
+                    && x.text != "pub"
+                    && j + 1 < t.len()
+                    && t[j + 1].text == ":"
+                {
+                    fields.push((x.text.clone(), x.line));
+                    expect_field = false;
+                } else if x.text == "," {
+                    expect_field = true;
+                }
+            }
+            j += 1;
+        }
+        out.push((name, fields));
+    }
+    out
+}
+
+/// Bodies of the wire functions defined in `sf`: name → (idents in the
+/// body, string literals in the body).
+fn collect_fn_bodies(
+    sf: &SourceFile,
+) -> Vec<(String, HashSet<String>, Vec<String>)> {
+    let mut out = Vec::new();
+    let t = &sf.toks;
+    for (i, tok) in t.iter().enumerate() {
+        if tok.text != "fn"
+            || i + 1 >= t.len()
+            || !WIRE_FNS.contains(&t[i + 1].text.as_str())
+        {
+            continue;
+        }
+        let name = t[i + 1].text.clone();
+        let mut j = i + 2;
+        while j < t.len() && t[j].text != "{" {
+            j += 1;
+        }
+        let mut depth = 1usize;
+        j += 1;
+        let mut idents: HashSet<String> = HashSet::new();
+        let mut strings: Vec<String> = Vec::new();
+        while j < t.len() && depth > 0 {
+            let x = &t[j];
+            if x.text == "{" {
+                depth += 1;
+            } else if x.text == "}" {
+                depth -= 1;
+            } else if x.kind == TokKind::Ident {
+                idents.insert(x.text.clone());
+            } else if x.kind == TokKind::Str {
+                strings.push(x.text.clone());
+            }
+            j += 1;
+        }
+        out.push((name, idents, strings));
+    }
+    out
+}
+
+/// Run the pass over the whole file set (the struct and the wire
+/// functions live in different files).
+pub fn run(files: &[SourceFile], diags: &mut Vec<Diagnostic>) {
+    let mut structs: Vec<(String, Vec<(String, usize)>, usize)> = Vec::new();
+    let mut seen_structs: HashSet<String> = HashSet::new();
+    let mut fns: HashMap<String, (HashSet<String>, Vec<String>)> =
+        HashMap::new();
+    let mut fn_order: Vec<String> = Vec::new();
+    for (fi, sf) in files.iter().enumerate() {
+        for (name, fields) in collect_struct_fields(sf) {
+            if seen_structs.insert(name.clone()) {
+                structs.push((name, fields, fi));
+            }
+        }
+        for (name, idents, strings) in collect_fn_bodies(sf) {
+            if !fns.contains_key(&name) {
+                fn_order.push(name.clone());
+                fns.insert(name, (idents, strings));
+            }
+        }
+    }
+    if fns.is_empty() {
+        return;
+    }
+    for (sname, fields, fi) in &structs {
+        let sf = &files[*fi];
+        for fname in &fn_order {
+            let Some((idents, strings)) = fns.get(fname) else {
+                continue;
+            };
+            for (field, line) in fields {
+                if idents.contains(field) {
+                    continue;
+                }
+                if strings.iter().any(|s| s.contains(field.as_str())) {
+                    continue;
+                }
+                sf.emit(
+                    diags,
+                    "wire",
+                    *line,
+                    format!(
+                        "field `{sname}.{field}` does not appear in \
+                         `{fname}`"
+                    ),
+                    false,
+                );
+            }
+        }
+    }
+}

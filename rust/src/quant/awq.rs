@@ -43,6 +43,7 @@ pub struct AwqResult {
 pub fn awq_search_and_smooth(store: &mut WeightStore, cfg: &ModelConfig,
                              calib: &CalibData, qcfg: &QuantConfig)
     -> AwqResult {
+    // sqlint: allow(determinism) wall-clock timing for pipeline reporting; results unaffected
     let t0 = Instant::now();
     let mut choices = Vec::new();
     let mut evals = 0;

@@ -47,6 +47,7 @@ pub struct QuantOutcome {
 pub fn quantize_model(cfg: &ModelConfig, model: &WeightStore,
                       calib: &CalibData, method: QuantMethod,
                       qcfg: &QuantConfig) -> QuantOutcome {
+    // sqlint: allow(determinism) wall-clock timing for pipeline reporting; results unaffected
     let t0 = Instant::now();
     match method {
         QuantMethod::Fp16 => QuantOutcome {

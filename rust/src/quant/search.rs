@@ -158,6 +158,7 @@ pub fn loss_at_alpha_cross(cfg: &ModelConfig, w: &WeightStore,
 /// prebuilt context across all grid points.
 pub fn search_alpha_with(ctx: &AlphaSearchCtx, qcfg: &QuantConfig)
     -> SearchResult {
+    // sqlint: allow(determinism) wall-clock timing for pipeline reporting; results unaffected
     let t0 = Instant::now();
     let mut grid = Vec::new();
     let steps = (1.0 / qcfg.alpha_step).round() as usize;

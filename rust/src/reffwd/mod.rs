@@ -38,6 +38,7 @@ pub enum Site {
 }
 
 impl Site {
+    /// Every site, in layer-execution order.
     pub fn all() -> [Site; 4] {
         [Site::AttnIn, Site::OIn, Site::MlpIn, Site::DownIn]
     }
@@ -50,6 +51,7 @@ impl Site {
             Site::DownIn => &["w_down"],
         }
     }
+    /// Stable snake_case name (used in calibration stats and figures).
     pub fn as_str(&self) -> &'static str {
         match self {
             Site::AttnIn => "attn_in",
@@ -75,13 +77,17 @@ impl ActHook for NoHook {
 /// Growable per-layer KV cache: `k[layer]`, `v[layer]` are `[len, D]`.
 #[derive(Debug, Clone)]
 pub struct KvCache {
+    /// Per-layer key rows, flattened `[len * D]`.
     pub k: Vec<Vec<f32>>,
+    /// Per-layer value rows, flattened `[len * D]`.
     pub v: Vec<Vec<f32>>,
+    /// Number of cached positions.
     pub len: usize,
     dim: usize,
 }
 
 impl KvCache {
+    /// Empty cache shaped for `cfg` (one k/v lane per layer).
     pub fn new(cfg: &ModelConfig) -> Self {
         KvCache {
             k: vec![vec![]; cfg.layers],
@@ -94,9 +100,11 @@ impl KvCache {
         self.k[layer].extend_from_slice(krow);
         self.v[layer].extend_from_slice(vrow);
     }
+    /// All cached key rows of `layer`, flattened `[len * D]`.
     pub fn k_rows(&self, layer: usize) -> &[f32] {
         &self.k[layer]
     }
+    /// Row width `D` (the model dim).
     pub fn dim(&self) -> usize {
         self.dim
     }
@@ -105,7 +113,9 @@ impl KvCache {
 /// Reference model: a config plus a canonical fp16-layout weight store,
 /// or a w4a16 deploy-layout store (packed mode — see module docs).
 pub struct RefModel<'a> {
+    /// Model geometry (layers, dim, heads, RoPE/eps constants).
     pub cfg: &'a ModelConfig,
+    /// The weight store being evaluated.
     pub w: &'a WeightStore,
     /// Whether `w` is a deploy-layout store (decoder linears present as
     /// packed/scales/zeros triples). Detected once here so the dense
@@ -114,6 +124,7 @@ pub struct RefModel<'a> {
 }
 
 impl<'a> RefModel<'a> {
+    /// Wrap a store, probing it once for deploy (packed) layout.
     pub fn new(cfg: &'a ModelConfig, w: &'a WeightStore) -> Self {
         let packed = w.contains("layers.0.wq.packed");
         RefModel { cfg, w, packed }

@@ -1,0 +1,26 @@
+//! Fixture: determinism positives that are exempt — by marker, by an
+//! order-insensitive adaptor chain, or by a `.sort` within the
+//! 20-line lookahead. Must produce zero findings.
+
+use std::collections::HashMap;
+
+pub struct S {
+    reqs: HashMap<u64, u32>,
+}
+
+impl S {
+    pub fn f(&self) -> Vec<u64> {
+        // sqlint: allow(determinism) fixture: wall-clock stamp is metrics-only
+        let _t = std::time::Instant::now();
+        // order-insensitive consumer: no marker needed
+        let _n = self.reqs.keys().count();
+        // sorted immediately below: the lookahead exempts this
+        let mut ids: Vec<u64> = self.reqs.keys().copied().collect();
+        ids.sort_unstable();
+        // sqlint: allow(determinism) fixture: commutative fold over values
+        for (_k, _v) in &self.reqs {
+            let _ = _k;
+        }
+        ids
+    }
+}

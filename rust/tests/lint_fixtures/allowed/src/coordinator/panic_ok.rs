@@ -1,0 +1,16 @@
+//! Fixture: every panic positive suppressed by a justified marker
+//! (standalone and trailing forms). Must produce zero findings.
+
+use std::collections::HashMap;
+
+pub fn f(m: &HashMap<u64, u32>, o: Option<u32>) -> u32 {
+    // sqlint: allow(panic) fixture: a standalone marker covers the next line
+    let a = o.unwrap();
+    let b = o.expect("present"); // sqlint: allow(panic) fixture: trailing marker
+    if a > b {
+        // sqlint: allow(panic) fixture: justified macro
+        panic!("boom");
+    }
+    // sqlint: allow(panic) fixture: map index on a known-live key
+    m[&a]
+}

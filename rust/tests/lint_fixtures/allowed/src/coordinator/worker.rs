@@ -1,0 +1,16 @@
+//! Fixture: locks rule-B negative — the guard is dropped (block ends)
+//! before the channel send. Must produce zero findings.
+
+pub fn pump(
+    m: &std::sync::Mutex<u32>,
+    tx: &std::sync::mpsc::Sender<u32>,
+) {
+    let v = {
+        let g = match m.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        *g
+    };
+    tx.send(v).ok();
+}

@@ -1,0 +1,20 @@
+//! Fixture: wire-pass negative — every field reaches all three wire
+//! functions, one of them only as a string-literal substring. Must
+//! produce zero findings.
+
+pub struct RouterStats {
+    pub shed: usize,
+    pub alive: usize,
+}
+
+pub fn stats_json(s: &RouterStats) -> String {
+    format!("{{\"shed\":{},\"alive\":{}}}", s.shed, s.alive)
+}
+
+pub fn decode_stats(_line: &str) -> RouterStats {
+    RouterStats { shed: 0, alive: 0 }
+}
+
+pub fn metrics_text(_s: &RouterStats) -> String {
+    "sq_router_shed 0\nsq_router_alive 0\n".to_string()
+}

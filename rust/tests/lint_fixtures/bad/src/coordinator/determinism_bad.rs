@@ -1,0 +1,21 @@
+//! Fixture: determinism-pass positives. Scanned by
+//! `tests/lint_tool.rs`, never compiled.
+
+use std::collections::HashMap;
+
+pub struct S {
+    reqs: HashMap<u64, u32>,
+}
+
+impl S {
+    pub fn f(&self) -> Vec<u64> {
+        let _t = std::time::Instant::now();
+        let _s = std::time::SystemTime::now();
+        let _r = rand::thread_rng();
+        let out: Vec<u64> = self.reqs.keys().copied().collect();
+        for (_k, _v) in &self.reqs {
+            let _ = _k;
+        }
+        out
+    }
+}

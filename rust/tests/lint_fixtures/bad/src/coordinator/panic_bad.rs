@@ -1,0 +1,20 @@
+//! Fixture: panic-pass positives. Scanned by `tests/lint_tool.rs`,
+//! never compiled — the counts here are pinned by that test.
+
+use std::collections::HashMap;
+
+pub fn f(m: &HashMap<u64, u32>, o: Option<u32>) -> u32 {
+    let a = o.unwrap();
+    let b = o.expect("present");
+    if a > b {
+        panic!("boom");
+    }
+    match a {
+        0 => unreachable!(),
+        _ => {}
+    }
+    // a marker with no justification is itself a finding (and does not
+    // suppress the line it decorates)
+    let c = o.unwrap(); // sqlint: allow(panic)
+    m[&c]
+}

@@ -1,0 +1,15 @@
+//! Fixture: locks rule-B positive — a lock guard bound by `match` and
+//! still held across a channel `.send()`. Scanned by
+//! `tests/lint_tool.rs`, never compiled. Named `worker.rs` under
+//! `coordinator/` because rule B only fires there and in `server/`.
+
+pub fn pump(
+    m: &std::sync::Mutex<Vec<u32>>,
+    tx: &std::sync::mpsc::Sender<u32>,
+) {
+    let g = match m.lock() {
+        Ok(g) => g,
+        Err(p) => p.into_inner(),
+    };
+    tx.send(g[0]).ok();
+}

@@ -1,0 +1,13 @@
+//! Fixture: locks rule-A positives (`.lock().unwrap()` anywhere under
+//! `src/`). Scanned by `tests/lint_tool.rs`, never compiled. Lives
+//! under `runtime/` so the panic pass (coordinator/server scope) does
+//! not double-count the unwrap.
+
+pub fn f(m: &std::sync::Mutex<u32>) -> u32 {
+    let g = m.lock().unwrap();
+    *g
+}
+
+pub fn h(m: &std::sync::Mutex<u32>) -> u32 {
+    *m.lock().expect("poisoned")
+}

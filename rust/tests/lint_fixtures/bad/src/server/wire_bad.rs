@@ -1,0 +1,20 @@
+//! Fixture: wire-pass positives — `dropped_total` reaches
+//! `decode_stats` but not `stats_json` or `metrics_text`. Scanned by
+//! `tests/lint_tool.rs`, never compiled.
+
+pub struct CoreStats {
+    pub waiting: usize,
+    pub dropped_total: usize,
+}
+
+pub fn stats_json(s: &CoreStats) -> String {
+    format!("{{\"waiting\":{}}}", s.waiting)
+}
+
+pub fn decode_stats(_line: &str) -> CoreStats {
+    CoreStats { waiting: 0, dropped_total: 0 }
+}
+
+pub fn metrics_text(s: &CoreStats) -> String {
+    format!("sq_waiting {}\n", s.waiting)
+}

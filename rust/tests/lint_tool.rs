@@ -1,0 +1,136 @@
+//! `sqlint` fixture harness: proves every pass fires on the bad
+//! fixtures, stays quiet on the allowed ones, and that the CLI's exit
+//! codes and baseline workflow behave. The fixture trees under
+//! `tests/lint_fixtures/` are scanned, never compiled (the walker
+//! skips that directory on normal runs).
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::process::Command;
+
+use sqplus::lint;
+
+fn fixture(dir: &str) -> Vec<PathBuf> {
+    vec![PathBuf::from(format!("tests/lint_fixtures/{dir}"))]
+}
+
+fn by_pass(diags: &[lint::Diagnostic]) -> HashMap<&str, usize> {
+    let mut out: HashMap<&str, usize> = HashMap::new();
+    for d in diags {
+        *out.entry(d.pass.as_str()).or_insert(0) += 1;
+    }
+    out
+}
+
+#[test]
+fn bad_fixtures_trip_every_pass() {
+    let diags = lint::run_paths(&fixture("bad")).expect("fixtures readable");
+    let counts = by_pass(&diags);
+    assert_eq!(counts.get("panic"), Some(&6), "{diags:#?}");
+    assert_eq!(counts.get("determinism"), Some(&5), "{diags:#?}");
+    assert_eq!(counts.get("locks"), Some(&3), "{diags:#?}");
+    assert_eq!(counts.get("wire"), Some(&2), "{diags:#?}");
+    assert_eq!(counts.get("marker"), Some(&1), "{diags:#?}");
+    assert_eq!(diags.len(), 17, "{diags:#?}");
+    // output is sorted by (path, line, pass) so diffs are stable
+    let mut sorted = diags.clone();
+    sorted.sort_by(|a, b| {
+        (&a.path, a.line, &a.pass).cmp(&(&b.path, b.line, &b.pass))
+    });
+    assert_eq!(diags, sorted);
+}
+
+#[test]
+fn bad_fixture_lines_are_precise() {
+    let diags = lint::run_paths(&fixture("bad")).expect("fixtures readable");
+    let has = |pass: &str, file: &str, line: usize| {
+        diags.iter().any(|d| {
+            d.pass == pass && d.path.ends_with(file) && d.line == line
+        })
+    };
+    // one representative site per rule variant
+    assert!(has("panic", "panic_bad.rs", 7), "unwrap");
+    assert!(has("panic", "panic_bad.rs", 10), "panic! macro");
+    assert!(has("panic", "panic_bad.rs", 19), "map index [&..]");
+    assert!(has("marker", "panic_bad.rs", 18), "bare marker");
+    assert!(has("determinism", "determinism_bad.rs", 12), "Instant::now");
+    assert!(has("determinism", "determinism_bad.rs", 16), "for over map");
+    assert!(has("locks", "locks_bad.rs", 7), "lock().unwrap()");
+    assert!(has("locks", "worker.rs", 14), "send under guard");
+    assert!(has("wire", "wire_bad.rs", 7), "field off the wire");
+}
+
+#[test]
+fn allowed_fixtures_are_clean() {
+    let diags =
+        lint::run_paths(&fixture("allowed")).expect("fixtures readable");
+    assert!(diags.is_empty(), "{diags:#?}");
+}
+
+#[test]
+fn shipped_tree_lints_clean() {
+    // the same invariant `make lint` / CI enforces, minus the baseline
+    // (which ships empty)
+    let diags = lint::run_paths(&[PathBuf::from("src")])
+        .expect("src readable");
+    assert!(diags.is_empty(), "{diags:#?}");
+}
+
+fn sqlint_cmd() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_sqlint"))
+}
+
+#[test]
+fn cli_exit_codes() {
+    let bad = sqlint_cmd()
+        .arg("tests/lint_fixtures/bad")
+        .output()
+        .expect("spawn sqlint");
+    assert_eq!(bad.status.code(), Some(1));
+    let stdout = String::from_utf8_lossy(&bad.stdout);
+    assert!(stdout.contains("[panic]"), "{stdout}");
+    assert!(stdout.contains("[wire]"), "{stdout}");
+
+    let ok = sqlint_cmd()
+        .arg("tests/lint_fixtures/allowed")
+        .output()
+        .expect("spawn sqlint");
+    assert_eq!(ok.status.code(), Some(0));
+
+    let usage = sqlint_cmd().arg("--nope").output().expect("spawn sqlint");
+    assert_eq!(usage.status.code(), Some(2));
+
+    let missing = sqlint_cmd()
+        .args(["--baseline", "does-not-exist.txt", "src"])
+        .output()
+        .expect("spawn sqlint");
+    assert_eq!(missing.status.code(), Some(2));
+}
+
+#[test]
+fn baseline_suppresses_known_findings() {
+    let base = PathBuf::from(env!("CARGO_TARGET_TMPDIR"))
+        .join("sqlint-fixture-baseline.txt");
+    let wrote = sqlint_cmd()
+        .args(["--write-baseline"])
+        .arg(&base)
+        .arg("tests/lint_fixtures/bad")
+        .output()
+        .expect("spawn sqlint");
+    assert_eq!(wrote.status.code(), Some(0));
+    let filtered = sqlint_cmd()
+        .args(["--baseline"])
+        .arg(&base)
+        .arg("tests/lint_fixtures/bad")
+        .output()
+        .expect("spawn sqlint");
+    assert_eq!(filtered.status.code(), Some(0), "baselined run is clean");
+    // the baseline is keyed, not a blanket waiver: the allowed tree's
+    // keys are absent so a *new* finding would still fail
+    let keys = std::fs::read_to_string(&base).expect("baseline written");
+    assert_eq!(
+        keys.lines().filter(|l| !l.starts_with('#')).count(),
+        17,
+        "{keys}"
+    );
+}
