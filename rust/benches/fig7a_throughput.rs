@@ -208,6 +208,65 @@ fn run_kv_tier(
      eng.metrics.recompute_avoided_tokens, streams)
 }
 
+/// Cross-replica KV migration workload: a donor engine warms a shared
+/// prefix, then the same warm rehit is served three ways — on a cold
+/// receiver that imported the donor's stashed blocks in wire form, on
+/// the warm donor itself, and on a cold engine that recomputes.
+/// Returns (migrated tok/s, recompute tok/s, blocks shipped, wire
+/// bytes, receiver prefill executed, cold prefill executed, streams
+/// [migrated, warm, cold]).
+#[allow(clippy::type_complexity)]
+fn run_migration(
+    m: &sqplus::runtime::manifest::Manifest, s: &common::Setup,
+    deploy_store: &sqplus::model::store::WeightStore, mode: KvCacheMode,
+    prefix: usize, output: usize,
+) -> (f64, f64, usize, usize, usize, usize, [Vec<u32>; 3]) {
+    let mk = || {
+        let rt = ModelRuntime::load(m, &s.cfg.name, Precision::W4a16,
+                                    deploy_store)
+            .unwrap();
+        rt.warmup().unwrap();
+        Engine::new(
+            Deployment::single(rt, GpuProfile::a100_40g()),
+            EngineConfig {
+                block_size: 4,
+                kv_cache_mode: mode,
+                kv_pool_blocks: 16,
+                ..Default::default()
+            },
+        )
+    };
+    let (mut donor, mut recv, mut cold) = (mk(), mk(), mk());
+    let mut rng = sqplus::util::rng::Rng::new(61);
+    let shared = trace::prompt_tokens(&mut rng, prefix, s.cfg.vocab);
+    let mut donor_p = shared.clone();
+    donor_p.extend(trace::prompt_tokens(&mut rng, 2, s.cfg.vocab));
+    let mut rehit = shared.clone();
+    rehit.extend(trace::prompt_tokens(&mut rng, 3, s.cfg.vocab));
+    let gen = |eng: &mut Engine, p: &[u32]| {
+        eng.submit(p.to_vec(), SamplingParams {
+            max_new_tokens: output,
+            ..Default::default()
+        });
+        let t0 = std::time::Instant::now();
+        eng.run_to_completion(100_000).unwrap();
+        let dt = t0.elapsed().as_secs_f64();
+        let mut fin = eng.take_finished();
+        (fin.pop().unwrap().output, dt)
+    };
+    let _ = gen(&mut donor, &donor_p);
+    let blocks = donor.export_kv_blocks(&rehit);
+    let shipped = blocks.len();
+    let wire_bytes: usize = blocks.iter().map(|(_, w)| w.len()).sum();
+    recv.import_kv_blocks(&blocks).unwrap();
+    let (mig_out, mig_dt) = gen(&mut recv, &rehit);
+    let (warm_out, _) = gen(&mut donor, &rehit);
+    let (cold_out, cold_dt) = gen(&mut cold, &rehit);
+    (mig_out.len() as f64 / mig_dt, cold_out.len() as f64 / cold_dt,
+     shipped, wire_bytes, recv.metrics.prefill_tokens_executed,
+     cold.metrics.prefill_tokens_executed, [mig_out, warm_out, cold_out])
+}
+
 /// Multi-replica router workload: shared-prefix waves (the cache-aware
 /// policy's home turf) mixed with cold traffic, over `n_replicas`
 /// engines. Returns (tok/s, TTFT-in-steps p50 across all replicas,
@@ -629,6 +688,129 @@ fn main() {
                 1.0 - exec_tier("f32 tiered") as f64
                     / exec_tier("f32 untiered").max(1) as f64);
     if let Err(e) = rep4.write() {
+        eprintln!("warning: BENCH_serve.json not written: {e}");
+    }
+
+    // cross-replica KV migration: ship the donor's stashed prefix
+    // blocks to a cold replica in wire form instead of recomputing
+    // them. Migrated serving must match the warm donor bit-for-bit in
+    // every stash mode (both sides dequantize the same bytes); f32
+    // additionally matches cold recompute exactly.
+    let (prefix6, output6) = (32usize, 12usize);
+    let mut t7 = Table::new(
+        &format!(
+            "Figure 7a KV migration ({size}, SQ+ W4A16, prefix \
+             {prefix6}, output {output6})"
+        ),
+        &["kv mode", "migrated tok/s", "recompute tok/s",
+          "blocks shipped", "wire bytes", "prefill migrated/cold",
+          "matches warm"],
+    );
+    let mut rep5 = JsonReport::at("BENCH_serve.json", "fig7a_migration");
+    rep5.metric("prompt_prefix_tokens", prefix6 as f64);
+    rep5.metric("output_tokens", output6 as f64);
+    let mut wire_bpt = vec![];
+    for (label, mode) in [("f32", KvCacheMode::F32),
+                          ("q8", KvCacheMode::Q8),
+                          ("q4", KvCacheMode::Q4)] {
+        let (mig_tps, cold_tps, shipped, wire_bytes, mig_exec,
+             cold_exec, [mig, warm, cold_stream]) =
+            run_migration(&man, &s, sqp.deploy.as_ref().unwrap(), mode,
+                          prefix6, output6);
+        assert_eq!(mig, warm,
+                   "{label}: migrated stream diverged from the warm \
+                    donor");
+        if mode == KvCacheMode::F32 {
+            assert_eq!(mig, cold_stream,
+                       "f32 migration is not recompute-identical");
+        }
+        assert!(mig_exec < cold_exec,
+                "{label}: migration saved no prefill work");
+        assert!(shipped > 0 && wire_bytes > 0);
+        t7.row(&[label.into(), format!("{mig_tps:.1}"),
+                 format!("{cold_tps:.1}"), shipped.to_string(),
+                 wire_bytes.to_string(),
+                 format!("{mig_exec}/{cold_exec}"), "yes".into()]);
+        rep5.metric(&format!("{label}_migrated_tok_per_s"), mig_tps);
+        rep5.metric(&format!("{label}_recompute_tok_per_s"), cold_tps);
+        rep5.metric(&format!("{label}_blocks_shipped"), shipped as f64);
+        rep5.metric(&format!("{label}_wire_bytes"), wire_bytes as f64);
+        rep5.metric(&format!("{label}_prefill_tokens_migrated"),
+                    mig_exec as f64);
+        rep5.metric(&format!("{label}_prefill_tokens_recompute"),
+                    cold_exec as f64);
+        wire_bpt.push((label, wire_bytes as f64
+                           / (shipped * 4).max(1) as f64));
+    }
+    t7.print();
+    // router-level: the same warm-rehit shape through an N=2
+    // cache-aware router with migration on — a donor warms replica 0,
+    // a cold blocker loads it, and the rehit spills to replica 1 with
+    // the prefix shipped instead of recomputed. Happy path: the
+    // counters flow end-to-end and no fallback fires.
+    let mk_eng = || {
+        let rt = ModelRuntime::load(&man, &s.cfg.name, Precision::W4a16,
+                                    sqp.deploy.as_ref().unwrap())
+            .unwrap();
+        rt.warmup().unwrap();
+        Engine::new(
+            Deployment::single(rt, GpuProfile::a100_40g()),
+            EngineConfig { block_size: 4, kv_pool_blocks: 16,
+                           ..Default::default() },
+        )
+    };
+    let mut router = Router::new(vec![mk_eng(), mk_eng()], RouterConfig {
+        routing: RoutingPolicy::CacheAware,
+        // the blocker's backlog must outweigh the 32-token prefix so
+        // the rehit spills off the warm replica
+        load_penalty_tokens: 33,
+        kv_migrate: true,
+        ..Default::default()
+    });
+    let mut rng6 = sqplus::util::rng::Rng::new(67);
+    let shared6 = trace::prompt_tokens(&mut rng6, prefix6, s.cfg.vocab);
+    let mut donor6 = shared6.clone();
+    donor6.extend(trace::prompt_tokens(&mut rng6, 2, s.cfg.vocab));
+    let mut rehit6 = shared6;
+    rehit6.extend(trace::prompt_tokens(&mut rng6, 3, s.cfg.vocab));
+    let sp6 = |max: usize| SamplingParams { max_new_tokens: max,
+                                            ..Default::default() };
+    router.submit(donor6, sp6(2));
+    router.run_to_completion(100_000).unwrap();
+    router.submit(trace::prompt_tokens(&mut rng6, 20, s.cfg.vocab),
+                  sp6(8));
+    router.submit(rehit6, sp6(output6));
+    router.run_to_completion(100_000).unwrap();
+    let rows = router.stats();
+    let rs = router.router_stats();
+    let migrated_in: usize =
+        rows.iter().map(|r| r.core.kv_migrations_in).sum();
+    assert!(migrated_in > 0, "router migration never fired");
+    assert_eq!(rs.migration_fallbacks, 0,
+               "happy-path migration fell back");
+    rep5.metric("router_kv_migrations_in", migrated_in as f64);
+    rep5.metric("router_migration_fallbacks",
+                rs.migration_fallbacks as f64);
+    // analytic: the measured wire footprints scaled to Code
+    // Llama-34B on A100 — shipping the prefix must beat the
+    // recompute bandwidth floor, with the quantized stash widening
+    // the margin
+    let gpu_a = GpuProfile::a100_40g();
+    let m34_a = PaperModel::code_llama_34b();
+    let tiny_kv_bpt = s.cfg.kv_bytes_per_token() as f64;
+    let recompute_s =
+        perfmodel::recompute_prefix_s(&gpu_a, &m34_a,
+                                      Deploy::W4a16OneGpu);
+    rep5.metric("analytic_recompute_prefix_s", recompute_s);
+    for (label, bpt) in &wire_bpt {
+        let scaled = m34_a.kv_bytes_per_token * bpt / tiny_kv_bpt;
+        let mig_s = perfmodel::migrate_prefix_s(&gpu_a, 1024, scaled);
+        rep5.metric(&format!("{label}_analytic_migrate_1k_prefix_s"),
+                    mig_s);
+        assert!(mig_s < recompute_s,
+                "{label}: analytic migration slower than recompute");
+    }
+    if let Err(e) = rep5.write() {
         eprintln!("warning: BENCH_serve.json not written: {e}");
     }
 

@@ -17,7 +17,8 @@ use sqplus::lint;
 fn usage() -> &'static str {
     "usage: sqlint [--baseline FILE] [--write-baseline FILE] [PATH ...]\n\
      \n\
-     Runs the panic/determinism/locks/wire passes over the given roots\n\
+     Runs the panic/determinism/locks/wire/events passes over the given\n\
+     roots\n\
      (default: src tests). --baseline filters known findings;\n\
      --write-baseline records the current findings and exits 0."
 }

@@ -433,6 +433,23 @@ pub struct RouterConfig {
     /// in router steps; doubles per consecutive failure (deterministic
     /// exponential backoff). Clamped to at least 1.
     pub retry_backoff_steps: usize,
+    /// Cross-replica KV migration: when cache-aware placement lands a
+    /// request on a replica that holds *fewer* cached prefix tokens
+    /// than some other alive replica, fetch the donor's stashed KV
+    /// blocks in quantized wire form and import them on the receiver,
+    /// so only the suffix is recomputed. `false` (the default)
+    /// preserves the route-or-recompute behavior bit-for-bit.
+    pub kv_migrate: bool,
+    /// Cache-aware scoring: percentage of a *remote* replica's hit
+    /// tokens credited to a candidate when migration could ship the
+    /// blocks over (only with [`RouterConfig::kv_migrate`]). 100 treats
+    /// a migratable prefix as free; 0 restores hit-or-nothing scoring.
+    pub migrate_hit_discount: usize,
+    /// Cache-aware scoring: percentage a *pooled* (demoted host-side)
+    /// hit token is worth relative to a device-resident one. A pooled
+    /// hit still skips recompute but pays a dequantize+copy restore, so
+    /// it must score strictly below a device hit — keep this < 100.
+    pub pooled_hit_discount: usize,
 }
 
 impl Default for RouterConfig {
@@ -447,6 +464,9 @@ impl Default for RouterConfig {
             max_waiting: 0,
             max_step_retries: 2,
             retry_backoff_steps: 2,
+            kv_migrate: false,
+            migrate_hit_discount: 50,
+            pooled_hit_discount: 75,
         }
     }
 }
@@ -561,6 +581,11 @@ mod tests {
         assert_eq!(rc.replicas, 1);
         assert!(!rc.watermarks.enabled());
         assert!(CacheWatermarks::new(4, 2).enabled());
+        // migration ships off by default (route-or-recompute unchanged)
+        // and a pooled hit must score below a device-resident one
+        assert!(!rc.kv_migrate);
+        assert!(rc.pooled_hit_discount < 100);
+        assert!(rc.migrate_hit_discount <= 100);
     }
 
     #[test]

@@ -102,6 +102,20 @@ pub enum CacheEvent {
         /// Chained content hash of the evicted block.
         hash: u64,
     },
+    /// This content hash became serveable from the *pool tier* (a
+    /// device block demoted its rows host-side, or a migration import
+    /// adopted foreign rows into the pool). Still routable, but a hit
+    /// pays a restore — the router's directory scores it at a discount.
+    Demoted {
+        /// Chained content hash now resident in the tiered pool.
+        hash: u64,
+    },
+    /// A pooled hash was restored onto a device block at admission —
+    /// back to full-price device residency for the directory.
+    Restored {
+        /// Chained content hash restored to the device cache.
+        hash: u64,
+    },
 }
 
 /// Outcome of an allocation request.
@@ -499,9 +513,52 @@ impl BlockManager {
         self.pool.insert(h, self.tick);
         self.pool_lru.insert(self.tick, h);
         self.stats.demotions += 1;
+        if self.enable_cache_events {
+            self.cache_events.push(CacheEvent::Demoted { hash: h });
+        }
         while self.pool.len() > self.kv_pool_blocks {
             self.drop_pool_oldest();
         }
+    }
+
+    /// Device-cache lookup by content hash — read-only: no refcount,
+    /// LRU, or event side effects. This is the donor side of KV
+    /// migration peeking at what it could export.
+    pub fn lookup_hash(&self, h: u64) -> Option<usize> {
+        self.cache.get(&h).copied()
+    }
+
+    /// Is this content hash resident in the tiered pool? Read-only —
+    /// the pool LRU order is not refreshed.
+    pub fn pool_contains(&self, h: u64) -> bool {
+        self.pool.contains_key(&h)
+    }
+
+    /// Adopt a *foreign* content hash into the tiered pool — the
+    /// receiver side of KV migration. The engine must already hold (or
+    /// be about to store) the stashed rows for `h`. Refused (`false`)
+    /// when tiering is off or the hash is already serveable from either
+    /// tier; on success the adoption is announced as a
+    /// [`CacheEvent::Demoted`] (pool-tier residency) so the router's
+    /// directory learns the warmth moved, and the pool bound is
+    /// enforced oldest-first like any demotion.
+    pub fn adopt_pooled(&mut self, h: u64) -> bool {
+        if self.kv_pool_blocks == 0
+            || self.cache.contains_key(&h)
+            || self.pool.contains_key(&h)
+        {
+            return false;
+        }
+        self.tick += 1;
+        self.pool.insert(h, self.tick);
+        self.pool_lru.insert(self.tick, h);
+        if self.enable_cache_events {
+            self.cache_events.push(CacheEvent::Demoted { hash: h });
+        }
+        while self.pool.len() > self.kv_pool_blocks {
+            self.drop_pool_oldest();
+        }
+        true
     }
 
     /// Pop a content-free block, evicting the LRU cached block if the
@@ -661,6 +718,10 @@ impl BlockManager {
                     self.cache.insert(h, b);
                     self.stats.restores += 1;
                     self.restored.push((b, h));
+                    if self.enable_cache_events {
+                        self.cache_events
+                            .push(CacheEvent::Restored { hash: h });
+                    }
                     table.push(b);
                 }
             }
@@ -1296,11 +1357,18 @@ mod tests {
         let mut probe = a.clone();
         probe.push(999);
         assert_eq!(bm.cached_prefix_tokens(&probe), 4);
-        // and no Evicted event fired (only the registration is logged)
-        assert!(bm
-            .take_cache_events()
+        // no Evicted event fired — demotion announces pool residency
+        // (Demoted) so the directory can discount it, never a drop
+        let events = bm.take_cache_events();
+        assert!(events
             .iter()
-            .all(|e| matches!(e, CacheEvent::Registered { .. })));
+            .all(|e| matches!(e,
+                CacheEvent::Registered { .. }
+                | CacheEvent::Demoted { .. })));
+        assert_eq!(events
+            .iter()
+            .filter(|e| matches!(e, CacheEvent::Demoted { .. }))
+            .count(), 1);
         bm.release(2);
         // re-admit content starting with a: the pooled hash restores
         let r = bm.allocate(3, &probe);
@@ -1310,6 +1378,9 @@ mod tests {
         assert_eq!(restored[0].1, ev[0].1, "hash must round-trip");
         assert_eq!(bm.stats.restores, 1);
         assert_eq!(bm.kv_pool_len(), 0);
+        // the restore re-announced device residency
+        assert_eq!(bm.take_cache_events(),
+                   vec![CacheEvent::Restored { hash: ev[0].1 }]);
         assert!(bm.check_conservation());
         bm.release(3);
         assert!(bm.check_conservation());
@@ -1350,6 +1421,46 @@ mod tests {
             .collect();
         assert_eq!(evicted, vec![CacheEvent::Evicted { hash: dropped[0] }]);
         assert!(bm.check_conservation());
+    }
+
+    #[test]
+    fn adopt_pooled_registers_foreign_hash_for_restore() {
+        // the receiver side of KV migration: adopting a hash the
+        // replica never computed makes the walk serve it like any
+        // pooled hit, without touching refcounts or device blocks
+        let mut bm = BlockManager::new(4, 4);
+        bm.watermark_blocks = 0;
+        bm.set_kv_pool(2);
+        bm.enable_cache_events = true;
+        let p = toks(5, 9); // 2 full blocks + partial
+        let chain = chain_hashes(&p, 4);
+        assert_eq!(bm.cached_prefix_tokens(&p), 0);
+        for &h in &chain {
+            assert!(bm.adopt_pooled(h));
+            assert!(bm.pool_contains(h));
+            assert!(bm.lookup_hash(h).is_none(), "pool tier only");
+        }
+        // double-adoption is refused; tiering-off adoption is refused
+        assert!(!bm.adopt_pooled(chain[0]));
+        assert_eq!(bm.kv_pool_len(), 2);
+        // the adoption announced pool-tier residency per block
+        let demoted = bm
+            .take_cache_events()
+            .into_iter()
+            .filter(|e| matches!(e, CacheEvent::Demoted { .. }))
+            .count();
+        assert_eq!(demoted, 2);
+        // admission restores both adopted blocks instead of recomputing
+        assert_eq!(bm.cached_prefix_tokens(&p), 8);
+        assert_eq!(bm.allocate(1, &p),
+                   Alloc::Ok { hit_tokens: 8, filled: 9 });
+        assert_eq!(bm.take_restored().len(), 2);
+        assert_eq!(bm.kv_pool_len(), 0);
+        assert!(bm.check_conservation());
+        // adoption with tiering off is a no-op
+        let mut off = BlockManager::new(4, 4);
+        assert!(!off.adopt_pooled(chain[0]));
+        assert_eq!(off.kv_pool_len(), 0);
     }
 
     #[test]

@@ -73,7 +73,8 @@ use crate::runtime::kvq::KvStash;
 use crate::runtime::simtp::Deployment;
 use crate::util::rng::Rng;
 
-use super::block_manager::{BlockManager, CacheEvent, CacheStats};
+use super::block_manager::{chain_hashes, BlockManager, CacheEvent,
+                           CacheStats};
 use super::metrics::Metrics;
 use super::sampler;
 use super::scheduler::{PrefillChunk, Scheduler, StepPlan};
@@ -387,6 +388,87 @@ impl Engine {
         self.emitted.clear();
         out.sort_by_key(|s| s.id);
         out
+    }
+
+    /// Donor side of cross-replica KV migration: serialize the stashed
+    /// rows this engine holds for a contiguous prefix of `tokens`, as
+    /// `(block hash, wire bytes)` in chain order. Blocks come from the
+    /// device-resident stash (`cached_kv`) or the demotion pool — both
+    /// already hold the `KvStash` wire precision, so the export ships
+    /// quantized bytes without a re-quantization round trip. The walk
+    /// stops at the first hash held nowhere (the receiver needs a
+    /// contiguous prefix) and is capped one block short of the content
+    /// (the final token is always computed, matching the admission
+    /// walk). Read-only on the cache: refcounts, LRU order and the
+    /// pool index are untouched.
+    pub fn export_kv_blocks(&mut self, tokens: &[u32])
+        -> Vec<(u64, Vec<u8>)> {
+        let bs = self.sched.bm.block_size;
+        let cap = tokens.len().saturating_sub(1) / bs;
+        let mut out = vec![];
+        for h in chain_hashes(tokens, bs).into_iter().take(cap) {
+            let stash = match self.sched.bm.lookup_hash(h) {
+                Some(block_id) => self.cached_kv.get(&block_id),
+                None if self.sched.bm.pool_contains(h) => {
+                    self.kv_pool.get(&h)
+                }
+                None => None,
+            };
+            match stash {
+                Some(s) => {
+                    let wire = s.to_wire();
+                    self.metrics.kv_migrations_out += 1;
+                    self.metrics.migrated_bytes += wire.len();
+                    out.push((h, wire));
+                }
+                None => break,
+            }
+        }
+        out
+    }
+
+    /// Receiver side: adopt wire-form KV blocks into the local pool
+    /// tier, so the next admission of the matching prefix restores
+    /// them (dequantize + copy) instead of recomputing. All blocks are
+    /// decoded before any is adopted — a malformed payload rejects the
+    /// whole batch and the caller falls back to plain recompute.
+    /// Hashes already held (device or pool) are skipped, not errors.
+    /// Returns how many blocks were adopted.
+    pub fn import_kv_blocks(&mut self, blocks: &[(u64, Vec<u8>)])
+        -> Result<usize> {
+        let decoded: Vec<(u64, KvStash)> = blocks
+            .iter()
+            .map(|(h, wire)| Ok((*h, KvStash::from_wire(wire)?)))
+            .collect::<Result<_>>()?;
+        let mut adopted = 0;
+        for (h, stash) in decoded {
+            if self.sched.bm.adopt_pooled(h) {
+                let bytes = stash.bytes();
+                self.kv_pool.insert(h, stash);
+                self.metrics.kv_migrations_in += 1;
+                self.metrics.migrated_bytes += bytes;
+                adopted += 1;
+            }
+        }
+        // adoption may overflow-drop older pooled hashes; reconcile the
+        // byte map with the index before any admission walks it
+        for h in self.sched.bm.take_pool_dropped() {
+            self.kv_pool.remove(&h);
+        }
+        Ok(adopted)
+    }
+
+    /// Pool size for `--kv-pool auto`: the tiered pool lives in the 8%
+    /// device-memory headroom that [`Engine::with_memory_budget`]
+    /// leaves above the 92% it hands to device blocks — the same
+    /// `GpuProfile` memory math, so the two tiers are sized from one
+    /// budget instead of an unanchored count.
+    pub fn auto_kv_pool_blocks(dep: &Deployment, block_size: usize)
+        -> usize {
+        let headroom = dep.gpu.mem_bytes * dep.workers * 8 / 100;
+        let per_block =
+            block_size * dep.runtime.cfg.kv_bytes_per_token();
+        (headroom / per_block.max(1)).max(1)
     }
 
     /// Execute one scheduler step.

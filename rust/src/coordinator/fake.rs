@@ -24,8 +24,9 @@
 use std::collections::HashMap;
 
 use crate::config::{CacheWatermarks, EngineConfig};
+use crate::runtime::kvq::KvStash;
 
-use super::block_manager::{BlockManager, CacheEvent};
+use super::block_manager::{chain_hashes, BlockManager, CacheEvent};
 use super::engine::StepOutcome;
 use super::replica::{CoreStats, ReplicaCore, ReplicaError};
 use super::scheduler::Scheduler;
@@ -56,6 +57,9 @@ pub struct FakeCore {
     next_id: u64,
     prefill_tokens_executed: usize,
     cached_prefix_tokens: usize,
+    kv_migrations_in: usize,
+    kv_migrations_out: usize,
+    migrated_bytes: usize,
 }
 
 impl FakeCore {
@@ -71,6 +75,9 @@ impl FakeCore {
             next_id: 0,
             prefill_tokens_executed: 0,
             cached_prefix_tokens: 0,
+            kv_migrations_in: 0,
+            kv_migrations_out: 0,
+            migrated_bytes: 0,
         }
     }
 
@@ -201,6 +208,45 @@ impl ReplicaCore for FakeCore {
     fn set_cache_watermarks(&mut self, wm: CacheWatermarks) {
         self.sched.bm.set_cache_watermarks(wm.high, wm.low);
     }
+    fn export_blocks(&mut self, tokens: &[u32])
+        -> Result<Vec<(u64, Vec<u8>)>, ReplicaError> {
+        // the fake model builds no KV rows, so exports ship empty f32
+        // stashes: valid wire payloads whose whole value is the hash —
+        // exactly what the receiver's pool index (and the fake restore
+        // path) consumes. Same contiguity walk and one-block-short cap
+        // as the engine.
+        let bs = self.sched.bm.block_size;
+        let cap = tokens.len().saturating_sub(1) / bs;
+        let mut out = vec![];
+        for h in chain_hashes(tokens, bs).into_iter().take(cap) {
+            if self.sched.bm.lookup_hash(h).is_none()
+                && !self.sched.bm.pool_contains(h)
+            {
+                break;
+            }
+            let wire = KvStash::F32(vec![]).to_wire();
+            self.kv_migrations_out += 1;
+            self.migrated_bytes += wire.len();
+            out.push((h, wire));
+        }
+        Ok(out)
+    }
+    fn import_blocks(&mut self, blocks: &[(u64, Vec<u8>)])
+        -> Result<usize, ReplicaError> {
+        let mut adopted = 0;
+        for (h, wire) in blocks {
+            KvStash::from_wire(wire).map_err(|e| {
+                ReplicaError::Transient(format!("bad kv wire: {e:#}"))
+            })?;
+            if self.sched.bm.adopt_pooled(*h) {
+                self.kv_migrations_in += 1;
+                self.migrated_bytes += wire.len();
+                adopted += 1;
+            }
+        }
+        self.sched.bm.take_pool_dropped();
+        Ok(adopted)
+    }
     fn core_stats(&self) -> CoreStats {
         CoreStats {
             waiting: self.sched.waiting_len(),
@@ -213,6 +259,9 @@ impl ReplicaCore for FakeCore {
             pool_blocks: self.sched.bm.kv_pool_len(),
             recompute_avoided_tokens: self.sched.bm.stats.restores
                 * self.sched.bm.block_size,
+            kv_migrations_in: self.kv_migrations_in,
+            kv_migrations_out: self.kv_migrations_out,
+            migrated_bytes: self.migrated_bytes,
         }
     }
 }

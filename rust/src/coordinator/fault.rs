@@ -51,6 +51,14 @@ pub enum FaultSpec {
         /// Number of consecutive failing step calls.
         fails: usize,
     },
+    /// Every `export_blocks` call fails — the donor dies (or hiccups)
+    /// mid-migration. Transient exports make the router fall back to
+    /// plain recompute; permanent ones kill the donor replica. Steps
+    /// and submits keep succeeding either way.
+    FailOnExport {
+        /// Transient (fall back) vs permanent (donor dies).
+        transient: bool,
+    },
 }
 
 /// A [`ReplicaCore`] wrapper that injects failures per a
@@ -152,6 +160,23 @@ impl<C: ReplicaCore> ReplicaCore for FaultyCore<C> {
     fn set_cache_watermarks(&mut self, wm: CacheWatermarks) {
         self.inner.set_cache_watermarks(wm)
     }
+    fn export_blocks(&mut self, tokens: &[u32])
+        -> Result<Vec<(u64, Vec<u8>)>, ReplicaError> {
+        if let FaultSpec::FailOnExport { transient } = self.spec {
+            return Err(if transient {
+                ReplicaError::Transient("injected: export failed".into())
+            } else {
+                ReplicaError::Permanent(
+                    "injected: donor died exporting".into(),
+                )
+            });
+        }
+        self.inner.export_blocks(tokens)
+    }
+    fn import_blocks(&mut self, blocks: &[(u64, Vec<u8>)])
+        -> Result<usize, ReplicaError> {
+        self.inner.import_blocks(blocks)
+    }
     fn core_stats(&self) -> CoreStats {
         self.inner.core_stats()
     }
@@ -238,5 +263,21 @@ mod tests {
         assert!(c.submit(vec![1], SamplingParams::default()).is_ok());
         assert!(c.submit(vec![1], SamplingParams::default()).is_err());
         assert!(c.step().is_ok());
+    }
+
+    #[test]
+    fn fail_on_export_spares_steps_and_submits() {
+        let mut t = FaultyCore::new(
+            NullCore, FaultSpec::FailOnExport { transient: true },
+        );
+        assert!(t.export_blocks(&[1, 2, 3]).unwrap_err().is_transient());
+        assert!(t.step().is_ok());
+        assert!(t.submit(vec![1], SamplingParams::default()).is_ok());
+        let mut p = FaultyCore::new(
+            NullCore, FaultSpec::FailOnExport { transient: false },
+        );
+        assert!(!p.export_blocks(&[1]).unwrap_err().is_transient());
+        // imports pass through (the receiver is not the faulty party)
+        assert_eq!(p.import_blocks(&[]).unwrap(), 0);
     }
 }

@@ -61,6 +61,13 @@ pub struct Metrics {
     /// restore (`kv_restores * block_size` — the exact accounting the
     /// tiering tests pin).
     pub recompute_avoided_tokens: usize,
+    /// KV blocks adopted from donor replicas (migration, receiver
+    /// side).
+    pub kv_migrations_in: usize,
+    /// KV blocks exported to other replicas (migration, donor side).
+    pub kv_migrations_out: usize,
+    /// Wire bytes of migrated KV blocks (both directions summed).
+    pub migrated_bytes: usize,
     /// Time to first token, seconds (wall clock).
     pub ttft_s: Accum,
     /// Engine steps from submission to first token — a deterministic
@@ -149,6 +156,9 @@ impl Metrics {
             kv_demotions: self.kv_demotions,
             kv_restores: self.kv_restores,
             recompute_avoided_tokens: self.recompute_avoided_tokens,
+            kv_migrations_in: self.kv_migrations_in,
+            kv_migrations_out: self.kv_migrations_out,
+            migrated_bytes: self.migrated_bytes,
         }
     }
 }
@@ -196,6 +206,12 @@ pub struct MetricsReport {
     pub kv_restores: usize,
     /// Prefill tokens saved by tiered-pool restores.
     pub recompute_avoided_tokens: usize,
+    /// KV blocks adopted from donor replicas.
+    pub kv_migrations_in: usize,
+    /// KV blocks exported to other replicas.
+    pub kv_migrations_out: usize,
+    /// Wire bytes of migrated KV blocks, both directions.
+    pub migrated_bytes: usize,
 }
 
 impl MetricsReport {
@@ -229,6 +245,11 @@ impl MetricsReport {
              recompute_avoided_tokens={}",
             self.kv_demotions, self.kv_restores,
             self.recompute_avoided_tokens
+        );
+        println!(
+            "[{label}] kv migration: in={} out={} bytes={}",
+            self.kv_migrations_in, self.kv_migrations_out,
+            self.migrated_bytes
         );
     }
 }
@@ -268,6 +289,9 @@ mod tests {
         m.kv_demotions = 4;
         m.kv_restores = 2;
         m.recompute_avoided_tokens = 32;
+        m.kv_migrations_in = 3;
+        m.kv_migrations_out = 5;
+        m.migrated_bytes = 640;
         let r = m.report();
         assert_eq!(r.prefill_chunks, 5);
         assert_eq!(r.mixed_steps, 2);
@@ -277,5 +301,8 @@ mod tests {
         assert_eq!(r.kv_demotions, 4);
         assert_eq!(r.kv_restores, 2);
         assert_eq!(r.recompute_avoided_tokens, 32);
+        assert_eq!(r.kv_migrations_in, 3);
+        assert_eq!(r.kv_migrations_out, 5);
+        assert_eq!(r.migrated_bytes, 640);
     }
 }

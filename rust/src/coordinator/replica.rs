@@ -137,6 +137,13 @@ pub struct CoreStats {
     /// Prefill tokens whose recompute a tiered-pool restore avoided
     /// (`cache.restores * block_size` — exact by construction).
     pub recompute_avoided_tokens: usize,
+    /// KV blocks adopted from a donor replica (cross-replica
+    /// migration, receiver side).
+    pub kv_migrations_in: usize,
+    /// KV blocks exported to other replicas (donor side).
+    pub kv_migrations_out: usize,
+    /// Wire bytes of migrated KV blocks, both directions summed.
+    pub migrated_bytes: usize,
 }
 
 impl CoreStats {
@@ -201,6 +208,27 @@ pub trait ReplicaCore {
     fn take_cache_events(&mut self) -> Vec<CacheEvent>;
     /// Configure the sliding eviction window on the prefix cache.
     fn set_cache_watermarks(&mut self, wm: CacheWatermarks);
+    /// Donor side of cross-replica KV migration: serialize the stashed
+    /// blocks this core holds for a *contiguous* prefix of `tokens`
+    /// (device stash or demotion pool), as `(block hash, wire bytes)`
+    /// in chain order. Read-only — refcounts, LRU order and the pool
+    /// index are untouched. Cores without stashed KV (or with
+    /// migration unsupported) keep the default and export nothing.
+    fn export_blocks(&mut self, tokens: &[u32])
+        -> Result<Vec<(u64, Vec<u8>)>, ReplicaError> {
+        let _ = tokens;
+        Ok(vec![])
+    }
+    /// Receiver side: adopt wire-form KV blocks into the local pool
+    /// tier so the next admission restores them instead of
+    /// recomputing. Returns how many blocks were adopted (already-held
+    /// hashes are skipped, not errors). A decode failure is an error:
+    /// the router falls back to plain recompute.
+    fn import_blocks(&mut self, blocks: &[(u64, Vec<u8>)])
+        -> Result<usize, ReplicaError> {
+        let _ = blocks;
+        Ok(0)
+    }
     /// Snapshot the counters the stats endpoint and benches report.
     fn core_stats(&self) -> CoreStats;
 }
@@ -264,6 +292,22 @@ impl ReplicaCore for Engine {
     fn set_cache_watermarks(&mut self, wm: CacheWatermarks) {
         Engine::set_cache_watermarks(self, wm.high, wm.low)
     }
+    fn export_blocks(&mut self, tokens: &[u32])
+        -> Result<Vec<(u64, Vec<u8>)>, ReplicaError> {
+        catch_unwind(AssertUnwindSafe(|| Engine::export_kv_blocks(self,
+                                                                  tokens)))
+            .map_err(|p| ReplicaError::Permanent(panic_msg(p)))
+    }
+    fn import_blocks(&mut self, blocks: &[(u64, Vec<u8>)])
+        -> Result<usize, ReplicaError> {
+        match catch_unwind(AssertUnwindSafe(|| {
+            Engine::import_kv_blocks(self, blocks)
+        })) {
+            Ok(Ok(n)) => Ok(n),
+            Ok(Err(e)) => Err(ReplicaError::Transient(format!("{e:#}"))),
+            Err(p) => Err(ReplicaError::Permanent(panic_msg(p))),
+        }
+    }
     fn core_stats(&self) -> CoreStats {
         let (waiting, running) = self.queue_depths();
         CoreStats {
@@ -277,6 +321,9 @@ impl ReplicaCore for Engine {
             pool_blocks: self.kv_pool_len(),
             recompute_avoided_tokens:
                 self.metrics.recompute_avoided_tokens,
+            kv_migrations_in: self.metrics.kv_migrations_in,
+            kv_migrations_out: self.metrics.kv_migrations_out,
+            migrated_bytes: self.metrics.migrated_bytes,
         }
     }
 }

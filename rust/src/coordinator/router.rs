@@ -82,13 +82,42 @@ use super::block_manager::{chain_hashes, CacheEvent};
 use super::replica::{Replica, ReplicaCore, ReplicaHealth, ReplicaStats};
 use super::sequence::{FinishReason, SamplingParams, Sequence};
 
+/// Per-replica cached-prefix hit for one prompt, split by residency
+/// tier: `device` tokens restore for free at admission, `pooled`
+/// tokens need a dequantize+copy restore first — the cache-aware
+/// policy scores the latter at [`RouterConfig::pooled_hit_discount`].
+/// `device + pooled` is the contiguous hit length the directory walk
+/// found.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct HitTokens {
+    /// Tokens whose blocks are device-resident on the replica.
+    pub device: usize,
+    /// Tokens whose blocks sit in the replica's demotion pool.
+    pub pooled: usize,
+}
+
+impl HitTokens {
+    /// Contiguous hit length, tiers combined.
+    pub fn total(&self) -> usize {
+        self.device + self.pooled
+    }
+    /// Tier-weighted score: pooled tokens count at
+    /// `pooled_hit_discount`% of a device token.
+    pub fn discounted(&self, pooled_hit_discount: usize) -> usize {
+        self.device + self.pooled * pooled_hit_discount / 100
+    }
+}
+
 /// Read-only (to the router's policies) map from block content hash to
 /// the replicas whose prefix caches hold that block, maintained from
-/// replica [`CacheEvent`]s. See the module docs.
+/// replica [`CacheEvent`]s. Each entry also tracks the block's
+/// residency tier on that replica (`pooled`: demoted to the host pool
+/// vs device-resident), so routing can discount pooled hits. See the
+/// module docs.
 #[derive(Debug, Default)]
 pub struct CacheDirectory {
-    /// Content hash → sorted replica ids holding it.
-    map: HashMap<u64, Vec<usize>>,
+    /// Content hash → `(replica id, pooled)`, sorted by replica id.
+    map: HashMap<u64, Vec<(usize, bool)>>,
 }
 
 impl CacheDirectory {
@@ -106,19 +135,41 @@ impl CacheDirectory {
         self.map.is_empty()
     }
 
-    /// Record that `replica` registered a block of `hash`.
-    pub fn on_registered(&mut self, replica: usize, hash: u64) {
+    /// Upsert `replica`'s entry for `hash` with tier `pooled`.
+    fn set(&mut self, replica: usize, hash: u64, pooled: bool) {
         let ids = self.map.entry(hash).or_default();
-        if let Err(i) = ids.binary_search(&replica) {
-            ids.insert(i, replica);
+        match ids.binary_search_by_key(&replica, |e| e.0) {
+            Ok(i) => ids[i].1 = pooled,
+            Err(i) => ids.insert(i, (replica, pooled)),
         }
     }
 
-    /// Record that `replica` evicted its block of `hash`.
+    /// Record that `replica` registered a block of `hash`
+    /// (device-resident).
+    pub fn on_registered(&mut self, replica: usize, hash: u64) {
+        self.set(replica, hash, false);
+    }
+
+    /// Record that `replica`'s block of `hash` now lives in its
+    /// demotion pool (evict-demote, or a migration adoption) — still
+    /// serveable, at restore cost.
+    pub fn on_demoted(&mut self, replica: usize, hash: u64) {
+        self.set(replica, hash, true);
+    }
+
+    /// Record that `replica` restored its pooled block of `hash` back
+    /// onto the device.
+    pub fn on_restored(&mut self, replica: usize, hash: u64) {
+        self.set(replica, hash, false);
+    }
+
+    /// Record that `replica` stopped holding `hash` in any tier.
     pub fn on_evicted(&mut self, replica: usize, hash: u64) {
         let empty = match self.map.get_mut(&hash) {
             Some(ids) => {
-                if let Ok(i) = ids.binary_search(&replica) {
+                if let Ok(i) =
+                    ids.binary_search_by_key(&replica, |e| e.0)
+                {
                     ids.remove(i);
                 }
                 ids.is_empty()
@@ -134,7 +185,7 @@ impl CacheDirectory {
     /// never score a dead replica's cache again.
     pub fn purge_replica(&mut self, replica: usize) {
         self.map.retain(|_, ids| {
-            if let Ok(i) = ids.binary_search(&replica) {
+            if let Ok(i) = ids.binary_search_by_key(&replica, |e| e.0) {
                 ids.remove(i);
             }
             !ids.is_empty()
@@ -144,18 +195,22 @@ impl CacheDirectory {
     /// Does any hint still name `replica`? (Purge observability for
     /// the recovery-invariant tests.)
     pub fn mentions_replica(&self, replica: usize) -> bool {
-        self.map.values().any(|ids| ids.binary_search(&replica).is_ok())
+        self.map
+            .values()
+            .any(|ids| ids.binary_search_by_key(&replica, |e| e.0)
+                .is_ok())
     }
 
-    /// Per-replica cached-prefix length (tokens) for `tokens`, under
-    /// the same rules as
+    /// Per-replica cached-prefix hit (tokens, split by tier) for
+    /// `tokens`, under the same rules as
     /// [`super::block_manager::BlockManager`] lookups: full
     /// `block_size` blocks only, capped so at least one token is left
     /// to compute. One chain walk total — each replica's hit is the
-    /// longest prefix of blocks whose hint set contains it.
+    /// longest prefix of blocks whose hint set contains it, in either
+    /// tier.
     pub fn prefix_hits(&self, tokens: &[u32], block_size: usize,
-                       n_replicas: usize) -> Vec<usize> {
-        let mut hit = vec![0usize; n_replicas];
+                       n_replicas: usize) -> Vec<HitTokens> {
+        let mut hit = vec![HitTokens::default(); n_replicas];
         if tokens.len() <= 1 || self.map.is_empty() {
             return hit;
         }
@@ -163,16 +218,23 @@ impl CacheDirectory {
         let mut alive = vec![true; n_replicas];
         let hashes = chain_hashes(&tokens[..max_blocks * block_size],
                                   block_size);
-        for (k, h) in hashes.iter().enumerate() {
+        for h in hashes.iter() {
             let ids = self.map.get(h);
             let mut any = false;
             for r in 0..n_replicas {
                 if !alive[r] {
                     continue;
                 }
-                match ids {
-                    Some(ids) if ids.binary_search(&r).is_ok() => {
-                        hit[r] = (k + 1) * block_size;
+                match ids.map(|ids| {
+                    ids.binary_search_by_key(&r, |e| e.0)
+                        .map(|i| ids[i].1)
+                }) {
+                    Some(Ok(pooled)) => {
+                        if pooled {
+                            hit[r].pooled += block_size;
+                        } else {
+                            hit[r].device += block_size;
+                        }
                         any = true;
                     }
                     _ => alive[r] = false,
@@ -224,6 +286,10 @@ pub struct RouterStats {
     /// Degraded mode: more than one replica configured, exactly one
     /// still alive — the last line of service before total failure.
     pub degraded: bool,
+    /// KV migrations that aborted (donor died or erred mid-handshake,
+    /// import rejected) and degraded to plain recompute. The request
+    /// always still serves — this counts the lost optimization.
+    pub migration_fallbacks: usize,
 }
 
 /// Per-global-id bookkeeping for a request replayed across a replica
@@ -266,9 +332,19 @@ impl PickState {
 
 /// Pure placement decision shared by the synchronous [`Router`] and the
 /// threaded front-end: pick a replica from `cands` under `rcfg.routing`,
-/// given per-replica directory prefix hits (tokens) and load counts
-/// (queued + running). Deterministic: ties always break to the lowest
-/// replica id. `None` iff `cands` is empty.
+/// given per-replica directory prefix hits (tier-split tokens) and load
+/// counts (queued + running). Deterministic: ties always break to the
+/// lowest replica id. `None` iff `cands` is empty.
+///
+/// The cache-aware hit term is tier-weighted: device-resident tokens
+/// count in full, pooled tokens at
+/// [`RouterConfig::pooled_hit_discount`]% (restore beats recompute,
+/// but a free device hit beats both — so a device hit always wins a
+/// same-length tie). With [`RouterConfig::kv_migrate`] on, a replica's
+/// term is floored at [`RouterConfig::migrate_hit_discount`]% of the
+/// best term *anywhere*: warmth held by an excluded/loaded replica is
+/// reachable by shipping its blocks, so remote hit tokens count at a
+/// discount instead of zero.
 ///
 /// The cache-aware policy additionally honors
 /// [`RouterConfig::cache_spread_limit`]: once `st` records that many
@@ -277,7 +353,7 @@ impl PickState {
 /// skewed (single-hot-prefix) workload can starve the cold replicas.
 pub(crate) fn pick_replica(rcfg: &RouterConfig, st: &mut PickState,
                            cands: &[usize], n_replicas: usize,
-                           hits: &[usize], loads: &[usize])
+                           hits: &[HitTokens], loads: &[usize])
     -> Option<usize> {
     let r = match cands {
         [] => return None,
@@ -308,12 +384,26 @@ pub(crate) fn pick_replica(rcfg: &RouterConfig, st: &mut PickState,
                         }
                     }
                 }
+                // tier-weighted local terms; migration floors every
+                // candidate at a discount of the best term anywhere
+                // (dead replicas are purged from the directory, so
+                // their hits are already 0)
+                let raw: Vec<usize> = hits
+                    .iter()
+                    .map(|h| h.discounted(rcfg.pooled_hit_discount))
+                    .collect();
+                let floor = if rcfg.kv_migrate {
+                    raw.iter().copied().max().unwrap_or(0)
+                        * rcfg.migrate_hit_discount / 100
+                } else {
+                    0
+                };
                 let penalty = rcfg.load_penalty_tokens as i64;
                 let mut best = pool[0];
                 let mut best_score = i64::MIN;
                 for &i in &pool {
-                    let score =
-                        hits[i] as i64 - penalty * loads[i] as i64;
+                    let score = raw[i].max(floor) as i64
+                        - penalty * loads[i] as i64;
                     if score > best_score {
                         best = i;
                         best_score = score;
@@ -353,6 +443,7 @@ pub struct Router<C: ReplicaCore> {
     replayed: usize,
     retries: usize,
     replica_failed: usize,
+    migration_fallbacks: usize,
 }
 
 impl<C: ReplicaCore> Router<C> {
@@ -400,6 +491,7 @@ impl<C: ReplicaCore> Router<C> {
             replayed: 0,
             retries: 0,
             replica_failed: 0,
+            migration_fallbacks: 0,
         }
     }
 
@@ -474,7 +566,7 @@ impl<C: ReplicaCore> Router<C> {
             RoutingPolicy::CacheAware => {
                 self.directory.prefix_hits(prompt, self.block_size, n)
             }
-            _ => vec![0; n],
+            _ => vec![HitTokens::default(); n],
         };
         let loads: Vec<usize> =
             self.replicas.iter().map(|r| r.core().load()).collect();
@@ -536,6 +628,9 @@ impl<C: ReplicaCore> Router<C> {
                                      FinishReason::ReplicaFailed);
                 return;
             };
+            if tried.is_empty() {
+                self.maybe_migrate(r, &prompt);
+            }
             match self.replicas[r]
                 .core_mut()
                 .submit(prompt.clone(), params.clone())
@@ -556,6 +651,55 @@ impl<C: ReplicaCore> Router<C> {
                     }
                 }
             }
+        }
+    }
+
+    /// Inline donor→receiver KV migration for the synchronous router:
+    /// with [`RouterConfig::kv_migrate`] on and some *other* alive
+    /// replica holding a longer contiguous directory hit for `prompt`
+    /// than the chosen receiver `r`, export the donor's stashed blocks
+    /// (wire form, already quantized) and import them into `r`'s pool
+    /// tier before submitting — admission on `r` then restores them
+    /// and only the suffix runs through the model. Every failure
+    /// degrades to plain recompute (`migration_fallbacks` counts it);
+    /// a permanent donor failure additionally kills the donor, exactly
+    /// like a permanent submit failure would.
+    fn maybe_migrate(&mut self, r: usize, prompt: &[u32]) {
+        if !self.rcfg.kv_migrate
+            || self.rcfg.routing != RoutingPolicy::CacheAware
+        {
+            return;
+        }
+        let n = self.replicas.len();
+        let hits =
+            self.directory.prefix_hits(prompt, self.block_size, n);
+        let donor = (0..n)
+            .filter(|&i| i != r && self.replicas[i].health.is_alive()
+                && hits[i].total() > hits[r].total())
+            .max_by_key(|&i| (hits[i].total(), std::cmp::Reverse(i)));
+        let Some(d) = donor else { return };
+        let blocks =
+            match self.replicas[d].core_mut().export_blocks(prompt) {
+                Ok(b) => b,
+                Err(e) => {
+                    // a failed optimization must never wedge the
+                    // request: fall back to recompute, and treat a
+                    // permanent export error as the donor dying
+                    self.migration_fallbacks += 1;
+                    if !e.is_transient() {
+                        self.kill(d);
+                    }
+                    return;
+                }
+            };
+        if blocks.is_empty() {
+            // directory hinted warmth the donor no longer holds
+            self.migration_fallbacks += 1;
+            return;
+        }
+        if self.replicas[r].core_mut().import_blocks(&blocks).is_err()
+        {
+            self.migration_fallbacks += 1;
         }
     }
 
@@ -692,6 +836,12 @@ impl<C: ReplicaCore> Router<C> {
                     CacheEvent::Evicted { hash } => {
                         self.directory.on_evicted(i, hash)
                     }
+                    CacheEvent::Demoted { hash } => {
+                        self.directory.on_demoted(i, hash)
+                    }
+                    CacheEvent::Restored { hash } => {
+                        self.directory.on_restored(i, hash)
+                    }
                 }
             }
             // tokens before finishes: a sequence that finished this
@@ -783,6 +933,7 @@ impl<C: ReplicaCore> Router<C> {
             alive,
             dead: self.replicas.len() - alive,
             degraded: self.replicas.len() > 1 && alive == 1,
+            migration_fallbacks: self.migration_fallbacks,
         }
     }
 }
@@ -806,6 +957,11 @@ mod tests {
         d.on_evicted(0, 42); // idempotent on absent
     }
 
+    /// Device-only hit of `t` tokens.
+    fn dev(t: usize) -> HitTokens {
+        HitTokens { device: t, pooled: 0 }
+    }
+
     #[test]
     fn directory_prefix_hits_walks_the_chain() {
         // replica 0 caches blocks 0 and 1 of a 3-block prompt, replica
@@ -820,17 +976,100 @@ mod tests {
         d.on_registered(0, hashes[1]);
         d.on_registered(0, hashes[2]);
         d.on_registered(1, hashes[0]);
-        assert_eq!(d.prefix_hits(&prompt, bs, 3), vec![8, 4, 0]);
+        assert_eq!(d.prefix_hits(&prompt, bs, 3),
+                   vec![dev(8), dev(4), dev(0)]);
         // one token past the last block: all three blocks countable
         let mut longer = prompt.clone();
         longer.push(99);
-        assert_eq!(d.prefix_hits(&longer, bs, 2), vec![12, 4]);
+        assert_eq!(d.prefix_hits(&longer, bs, 2), vec![dev(12), dev(4)]);
         // a gap breaks the chain: drop block 1, block 2's hint is
         // unreachable
         d.on_evicted(0, hashes[1]);
-        assert_eq!(d.prefix_hits(&longer, bs, 2), vec![4, 4]);
+        assert_eq!(d.prefix_hits(&longer, bs, 2), vec![dev(4), dev(4)]);
         // short/empty prompts never hit
-        assert_eq!(d.prefix_hits(&prompt[..1], bs, 2), vec![0, 0]);
+        assert_eq!(d.prefix_hits(&prompt[..1], bs, 2),
+                   vec![dev(0), dev(0)]);
+    }
+
+    #[test]
+    fn directory_tracks_residency_tiers() {
+        // demote splits a hit across tiers without shrinking it;
+        // restore flips it back; evict from either tier removes it
+        let bs = 4;
+        let prompt: Vec<u32> = (0..9).collect();
+        let hashes = chain_hashes(&prompt, bs);
+        let mut d = CacheDirectory::new();
+        d.on_registered(0, hashes[0]);
+        d.on_registered(0, hashes[1]);
+        d.on_demoted(0, hashes[1]);
+        assert_eq!(d.prefix_hits(&prompt, bs, 1),
+                   vec![HitTokens { device: 4, pooled: 4 }]);
+        d.on_restored(0, hashes[1]);
+        assert_eq!(d.prefix_hits(&prompt, bs, 1), vec![dev(8)]);
+        // a block only ever seen as demoted (migration adoption) hints
+        // too
+        let mut d2 = CacheDirectory::new();
+        d2.on_demoted(1, hashes[0]);
+        assert_eq!(d2.prefix_hits(&prompt, bs, 2),
+                   vec![dev(0), HitTokens { device: 0, pooled: 4 }]);
+        d2.on_evicted(1, hashes[0]);
+        assert!(d2.is_empty());
+    }
+
+    #[test]
+    fn device_hit_wins_a_tie_against_pooled() {
+        // the pooled-discount property the ROADMAP asks for: equal hit
+        // *lengths*, one device-resident, one demoted — the device hit
+        // must win even though the pooled replica has the lower id
+        // (lowest-id tiebreak would otherwise take it)
+        let rcfg = RouterConfig {
+            routing: RoutingPolicy::CacheAware,
+            cache_spread_limit: 0,
+            ..Default::default()
+        };
+        assert!(rcfg.pooled_hit_discount < 100);
+        let hits = [HitTokens { device: 0, pooled: 8 }, dev(8)];
+        let mut st = PickState::default();
+        let r = pick_replica(&rcfg, &mut st, &[0, 1], 2, &hits,
+                             &[0, 0]);
+        assert_eq!(r, Some(1));
+        // at 100% the discount is a no-op and the tiebreak takes over
+        let flat = RouterConfig { pooled_hit_discount: 100, ..rcfg };
+        let mut st = PickState::default();
+        let r = pick_replica(&flat, &mut st, &[0, 1], 2, &hits,
+                             &[0, 0]);
+        assert_eq!(r, Some(0));
+    }
+
+    #[test]
+    fn migration_floor_reroutes_toward_less_loaded_cold_replicas() {
+        // replica 0 is the (excluded) warm donor; replica 1 has a small
+        // local hit but a queue, replica 2 is cold and idle. Without
+        // migration the local hit wins; with it, both candidates are
+        // floored at a discount of the donor's hit, so the load
+        // penalty hands the request to the idle replica — whose
+        // suffix-only prefill the migration then actually delivers.
+        let base = RouterConfig {
+            routing: RoutingPolicy::CacheAware,
+            load_penalty_tokens: 4,
+            cache_spread_limit: 0,
+            ..Default::default()
+        };
+        let hits = [dev(32), dev(6), dev(0)];
+        let loads = [0, 1, 0];
+        let mut st = PickState::default();
+        let off = pick_replica(&base, &mut st, &[1, 2], 3, &hits,
+                               &loads);
+        assert_eq!(off, Some(1));
+        let on = RouterConfig {
+            kv_migrate: true,
+            migrate_hit_discount: 50,
+            ..base
+        };
+        let mut st = PickState::default();
+        let got = pick_replica(&on, &mut st, &[1, 2], 3, &hits,
+                               &loads);
+        assert_eq!(got, Some(2));
     }
 
     #[test]

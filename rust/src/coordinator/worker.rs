@@ -62,7 +62,8 @@ use super::replica::{
     CoreStats, ReplicaCore, ReplicaError, ReplicaHealth, ReplicaStats,
 };
 use super::router::{
-    pick_replica, CacheDirectory, PickState, RoutedFinish, RouterStats,
+    pick_replica, CacheDirectory, HitTokens, PickState, RoutedFinish,
+    RouterStats,
 };
 use super::sequence::{FinishReason, SamplingParams, Sequence};
 
@@ -73,12 +74,21 @@ const MAX_BACKOFF_MS: u64 = 50;
 
 /// Front end → worker.
 enum WorkerCmd {
-    /// Place request `gid` on this worker's core.
+    /// Place request `gid` on this worker's core. A non-empty
+    /// `preload` carries migrated KV blocks (wire form) to import into
+    /// the core's pool tier first, so admission restores them instead
+    /// of recomputing; an import failure silently degrades to a cold
+    /// submit — the request must serve either way.
     Submit {
         gid: u64,
         prompt: Vec<u32>,
         params: SamplingParams,
+        preload: Vec<(u64, Vec<u8>)>,
     },
+    /// Donor side of a KV migration: export the stashed blocks this
+    /// core holds for a prefix of `tokens`, answered by
+    /// [`WorkerEvent::Exported`] for request `gid`.
+    Export { gid: u64, tokens: Vec<u32> },
     /// Drain everything in flight, then stop.
     Shutdown,
 }
@@ -97,6 +107,16 @@ enum WorkerEvent {
         cache: Vec<CacheEvent>,
         stats: CoreStats,
         err: Option<String>,
+    },
+    /// Answer to [`WorkerCmd::Export`]: the donor's stashed blocks for
+    /// request `gid`'s prefix, in chain order. `failed` marks a
+    /// transient export error (the front end falls back to plain
+    /// recompute); a *permanent* export error never sends this — the
+    /// worker dies and the `Dead` event resolves the handshake.
+    Exported {
+        gid: u64,
+        blocks: Vec<(u64, Vec<u8>)>,
+        failed: bool,
     },
     /// The core failed permanently (or exhausted retries): these
     /// in-flight sequences need replay; the worker thread is gone.
@@ -202,7 +222,13 @@ impl<C: ReplicaCore> Worker<C> {
     /// Apply one command; `false` means the worker died doing it.
     fn apply(&mut self, cmd: WorkerCmd) -> bool {
         match cmd {
-            WorkerCmd::Submit { gid, prompt, params } => {
+            WorkerCmd::Submit { gid, prompt, params, preload } => {
+                if !preload.is_empty() {
+                    // import errors degrade to a cold submit; the
+                    // request serves either way and the donor already
+                    // counted the export
+                    let _ = self.core.import_blocks(&preload);
+                }
                 match self.core.submit(prompt, params) {
                     Ok(local) => {
                         self.to_global.insert(local, gid);
@@ -220,6 +246,39 @@ impl<C: ReplicaCore> Worker<C> {
                             self.die(e);
                             false
                         }
+                    }
+                }
+            }
+            WorkerCmd::Export { gid, tokens } => {
+                match self.core.export_blocks(&tokens) {
+                    Ok(blocks) => {
+                        let _ = self.events.send((
+                            self.idx,
+                            WorkerEvent::Exported {
+                                gid,
+                                blocks,
+                                failed: false,
+                            },
+                        ));
+                        true
+                    }
+                    Err(e) if e.is_transient() => {
+                        let _ = self.events.send((
+                            self.idx,
+                            WorkerEvent::Exported {
+                                gid,
+                                blocks: vec![],
+                                failed: true,
+                            },
+                        ));
+                        true
+                    }
+                    Err(e) => {
+                        // donor dies mid-handshake: the Dead event
+                        // resolves this and every other pending
+                        // migration off this donor
+                        self.die(e);
+                        false
                     }
                 }
             }
@@ -332,6 +391,16 @@ struct ReqState {
     cur: Vec<u32>,
     /// Current placement.
     replica: Option<usize>,
+    /// A KV migration was already attempted for this request — never
+    /// initiate a second one (fallback re-placements must terminate).
+    mig_tried: bool,
+}
+
+/// One in-flight KV migration handshake: request `gid` is parked until
+/// the donor answers [`WorkerCmd::Export`] (or dies).
+struct PendingMig {
+    donor: usize,
+    target: usize,
 }
 
 /// An event the front end surfaces to the serving loop.
@@ -366,6 +435,11 @@ pub struct AsyncRouter {
     directory: CacheDirectory,
     block_size: usize,
     requests: HashMap<u64, ReqState>,
+    /// Request gid → in-flight migration handshake. Every entry is
+    /// resolved by exactly one of: the donor's `Exported` event, the
+    /// donor's `Dead` event, or `reap_lost` — placement can never hang
+    /// on a migration.
+    pending_mig: HashMap<u64, PendingMig>,
     next_id: u64,
     pick_state: PickState,
     out: Vec<RouterEvent>,
@@ -373,6 +447,7 @@ pub struct AsyncRouter {
     replayed: usize,
     retries: usize,
     replica_failed: usize,
+    migration_fallbacks: usize,
 }
 
 impl AsyncRouter {
@@ -437,6 +512,7 @@ impl AsyncRouter {
             directory: CacheDirectory::new(),
             block_size,
             requests: HashMap::new(),
+            pending_mig: HashMap::new(),
             next_id: 0,
             pick_state: PickState::default(),
             out: vec![],
@@ -444,6 +520,7 @@ impl AsyncRouter {
             replayed: 0,
             retries: 0,
             replica_failed: 0,
+            migration_fallbacks: 0,
         }
     }
 
@@ -479,6 +556,7 @@ impl AsyncRouter {
             prior: vec![],
             cur: vec![],
             replica: None,
+            mig_tried: false,
         });
         self.place(id, true, vec![]);
         id
@@ -530,6 +608,7 @@ impl AsyncRouter {
             alive,
             dead: self.workers.len() - alive,
             degraded: self.workers.len() > 1 && alive == 1,
+            migration_fallbacks: self.migration_fallbacks,
         }
     }
 
@@ -620,6 +699,12 @@ impl AsyncRouter {
                         CacheEvent::Evicted { hash } => {
                             self.directory.on_evicted(i, hash)
                         }
+                        CacheEvent::Demoted { hash } => {
+                            self.directory.on_demoted(i, hash)
+                        }
+                        CacheEvent::Restored { hash } => {
+                            self.directory.on_restored(i, hash)
+                        }
                     }
                 }
                 for (gid, tok) in tokens {
@@ -643,6 +728,50 @@ impl AsyncRouter {
                     self.workers[i].health = ReplicaHealth::Healthy;
                 }
             }
+            WorkerEvent::Exported { gid, blocks, failed } => {
+                let Some(pm) = self.pending_mig.remove(&gid) else {
+                    return; // already resolved (donor death raced)
+                };
+                if failed || blocks.is_empty() {
+                    // transient donor error, or the directory hinted
+                    // warmth the donor no longer holds: plain
+                    // recompute through the normal placement path
+                    self.migration_fallbacks += 1;
+                    self.place(gid, false, vec![]);
+                    return;
+                }
+                let Some((prompt, params)) = self.replay_shape(gid)
+                else {
+                    return;
+                };
+                let t = pm.target;
+                let alive = self.workers[t].health.is_alive();
+                if alive
+                    && self.workers[t]
+                        .cmd
+                        .send(WorkerCmd::Submit {
+                            gid,
+                            prompt,
+                            params,
+                            preload: blocks,
+                        })
+                        .is_ok()
+                {
+                    self.workers[t].requests_routed += 1;
+                    self.workers[t].outstanding += 1;
+                    if let Some(req) = self.requests.get_mut(&gid) {
+                        req.replica = Some(t);
+                    }
+                    return;
+                }
+                // the chosen receiver died during the handshake
+                self.migration_fallbacks += 1;
+                if alive {
+                    self.workers[t].health = ReplicaHealth::Dead;
+                    self.directory.purge_replica(t);
+                }
+                self.place(gid, false, vec![t]);
+            }
             WorkerEvent::Dead { error: _, inflight } => {
                 {
                     let w = &mut self.workers[i];
@@ -653,6 +782,7 @@ impl AsyncRouter {
                 }
                 self.replayed += inflight.len();
                 self.directory.purge_replica(i);
+                self.fail_donor_migrations(i);
                 for (gid, seq) in inflight {
                     if let Some(req) = self.requests.get_mut(&gid) {
                         // the drained output is authoritative (it
@@ -691,6 +821,7 @@ impl AsyncRouter {
             self.workers[i].dead_handled = true;
             self.workers[i].outstanding = 0;
             self.directory.purge_replica(i);
+            self.fail_donor_migrations(i);
             let mut gids: Vec<u64> = self
                 .requests
                 .iter()
@@ -796,18 +927,9 @@ impl AsyncRouter {
             return;
         }
         loop {
-            let (full_prompt, params) = {
-                let Some(req) = self.requests.get(&gid) else {
-                    return;
-                };
-                let mut p = req.prompt.clone();
-                p.extend_from_slice(&req.prior);
-                let mut params = req.params.clone();
-                // unfinished ⇒ prior < budget, so remainder ≥ 1
-                debug_assert!(req.prior.len() < req.max_new);
-                params.max_new_tokens =
-                    req.max_new.saturating_sub(req.prior.len()).max(1);
-                (p, params)
+            let Some((full_prompt, params)) = self.replay_shape(gid)
+            else {
+                return;
             };
             let n = self.workers.len();
             let cands = self.candidates(fresh, &tried);
@@ -815,7 +937,7 @@ impl AsyncRouter {
                 RoutingPolicy::CacheAware => self
                     .directory
                     .prefix_hits(&full_prompt, self.block_size, n),
-                _ => vec![0; n],
+                _ => vec![HitTokens::default(); n],
             };
             let loads: Vec<usize> =
                 self.workers.iter().map(|w| w.outstanding).collect();
@@ -827,10 +949,17 @@ impl AsyncRouter {
                 self.finish_unrouted(gid, FinishReason::ReplicaFailed);
                 return;
             };
+            if tried.is_empty()
+                && self.try_migrate(gid, r, &hits, &full_prompt)
+            {
+                // parked: the donor's Exported (or Dead) event places it
+                return;
+            }
             let cmd = WorkerCmd::Submit {
                 gid,
                 prompt: full_prompt,
                 params,
+                preload: vec![],
             };
             if self.workers[r].cmd.send(cmd).is_ok() {
                 self.workers[r].requests_routed += 1;
@@ -848,6 +977,87 @@ impl AsyncRouter {
                 self.directory.purge_replica(r);
             }
             tried.push(r);
+        }
+    }
+
+    /// The prompt and budget a placement of `gid` must carry (tokens
+    /// streamed by dead placements folded into the replay prompt) —
+    /// shared by `place` and the migration handshake's deferred
+    /// submit.
+    fn replay_shape(&self, gid: u64)
+        -> Option<(Vec<u32>, SamplingParams)> {
+        let req = self.requests.get(&gid)?;
+        let mut p = req.prompt.clone();
+        p.extend_from_slice(&req.prior);
+        let mut params = req.params.clone();
+        // unfinished ⇒ prior < budget, so remainder ≥ 1
+        debug_assert!(req.prior.len() < req.max_new);
+        params.max_new_tokens =
+            req.max_new.saturating_sub(req.prior.len()).max(1);
+        Some((p, params))
+    }
+
+    /// Try to start a KV migration for `gid` toward chosen receiver
+    /// `r`: if some other alive replica holds strictly more of the
+    /// prefix, ask it to export. `true` parks the request on the
+    /// handshake (the caller must not submit); `false` means no donor
+    /// — fall through to a plain submit.
+    fn try_migrate(&mut self, gid: u64, r: usize,
+                   hits: &[HitTokens], prompt: &[u32]) -> bool {
+        if !self.rcfg.kv_migrate
+            || !matches!(self.rcfg.routing, RoutingPolicy::CacheAware)
+            || self.pending_mig.contains_key(&gid)
+            || self.requests.get(&gid).map_or(true, |q| q.mig_tried)
+        {
+            return false;
+        }
+        let Some(d) = (0..self.workers.len())
+            .filter(|&d| {
+                d != r
+                    && self.workers[d].health.is_alive()
+                    && hits[d].total() > hits[r].total()
+            })
+            .max_by_key(|&d| (hits[d].total(), std::cmp::Reverse(d)))
+        else {
+            return false;
+        };
+        if let Some(req) = self.requests.get_mut(&gid) {
+            // one attempt per request: fallback re-placements and
+            // donor-death replays must terminate
+            req.mig_tried = true;
+        }
+        let cmd = WorkerCmd::Export { gid, tokens: prompt.to_vec() };
+        if self.workers[d].cmd.send(cmd).is_ok() {
+            self.pending_mig
+                .insert(gid, PendingMig { donor: d, target: r });
+            return true;
+        }
+        // the donor vanished before we could ask; recompute instead
+        self.migration_fallbacks += 1;
+        if self.workers[d].health.is_alive() {
+            self.workers[d].health = ReplicaHealth::Dead;
+            self.directory.purge_replica(d);
+        }
+        false
+    }
+
+    /// Resolve every pending migration whose donor is worker `donor`
+    /// (it died, or its thread was lost to a panic): each parked
+    /// request falls back to plain recompute placement that never
+    /// touches the dead donor.
+    fn fail_donor_migrations(&mut self, donor: usize) {
+        let mut gids: Vec<u64> = self
+            .pending_mig
+            .iter()
+            .filter(|(_, pm)| pm.donor == donor)
+            .map(|(&g, _)| g)
+            .collect();
+        // placement order must not leak HashMap iteration order
+        gids.sort_unstable();
+        for gid in gids {
+            self.pending_mig.remove(&gid);
+            self.migration_fallbacks += 1;
+            self.place(gid, false, vec![donor]);
         }
     }
 

@@ -1,0 +1,218 @@
+//! Pass `events`: exhaustive event handling.
+//!
+//! Scope: `src/coordinator/` and `src/server/`. Every `match` over an
+//! event enum — any enum whose name ends in `Event` (`WorkerEvent`,
+//! `RouterEvent`, `CacheEvent`) — must name every variant: no `_`
+//! wildcard and no catch-all binding arm. A wildcard keeps compiling
+//! when a new event variant is added, which is exactly the moment the
+//! handler most needs revisiting — a silently dropped `Dead` or
+//! `Demoted` corrupts the router's replica and directory mirrors. With
+//! no catch-all, rustc's exhaustiveness check turns "new variant" into
+//! a compile error at every handler.
+//!
+//! The pass is fileset-wide: event enums are collected from every file
+//! (the enum and its `match` sites live in different modules), then
+//! each in-scope file's `match` expressions are walked arm by arm. A
+//! `match` is an event match when any arm's pattern contains a
+//! collected enum name followed by `::`; within such a match an arm is
+//! a catch-all when its pattern (before any `if` guard) is a lone `_`
+//! or a lone lowercase binding.
+
+use super::source::{in_scope, SourceFile};
+use super::Diagnostic;
+use crate::lint::lexer::{TokKind, Token};
+use std::collections::HashSet;
+
+/// Collect the names of event enums defined in `sf`.
+fn collect_event_enums(sf: &SourceFile, out: &mut HashSet<String>) {
+    let t = &sf.toks;
+    for (i, tok) in t.iter().enumerate() {
+        if tok.kind == TokKind::Ident
+            && tok.text == "enum"
+            && i + 1 < t.len()
+            && t[i + 1].kind == TokKind::Ident
+            && t[i + 1].text.ends_with("Event")
+        {
+            out.insert(t[i + 1].text.clone());
+        }
+    }
+}
+
+/// Token-index ranges of each arm's pattern (including any `if` guard)
+/// in the `match` body opening at `t[open]`. Arm bodies are skipped:
+/// block bodies to their matching brace, expression bodies to the comma
+/// (or match close) at top level.
+fn match_arm_patterns(t: &[Token], open: usize) -> Vec<(usize, usize)> {
+    let mut arms = Vec::new();
+    let mut depth = 1usize;
+    let (mut par, mut brk) = (0usize, 0usize);
+    let mut k = open + 1;
+    let mut pat_start = k;
+    while k < t.len() && depth > 0 {
+        match t[k].text.as_str() {
+            "{" => depth += 1,
+            "}" => depth -= 1,
+            "(" => par += 1,
+            ")" => par = par.saturating_sub(1),
+            "[" => brk += 1,
+            "]" => brk = brk.saturating_sub(1),
+            "=" if depth == 1
+                && par == 0
+                && brk == 0
+                && k + 1 < t.len()
+                && t[k + 1].text == ">" =>
+            {
+                arms.push((pat_start, k));
+                // skip the arm body: block → matching brace, else →
+                // comma (or match close) at top level
+                k += 2;
+                if k < t.len() && t[k].text == "{" {
+                    let mut d = 1usize;
+                    k += 1;
+                    while k < t.len() && d > 0 {
+                        match t[k].text.as_str() {
+                            "{" => d += 1,
+                            "}" => d -= 1,
+                            _ => {}
+                        }
+                        k += 1;
+                    }
+                    if k < t.len() && t[k].text == "," {
+                        k += 1;
+                    }
+                } else {
+                    while k < t.len() {
+                        match t[k].text.as_str() {
+                            "{" => depth += 1,
+                            "}" => {
+                                if depth == 1 {
+                                    break; // match close ends last arm
+                                }
+                                depth -= 1;
+                            }
+                            "(" => par += 1,
+                            ")" => par = par.saturating_sub(1),
+                            "[" => brk += 1,
+                            "]" => brk = brk.saturating_sub(1),
+                            "," if depth == 1 && par == 0 && brk == 0 => {
+                                k += 1;
+                                break;
+                            }
+                            _ => {}
+                        }
+                        k += 1;
+                    }
+                }
+                pat_start = k;
+                continue;
+            }
+            _ => {}
+        }
+        k += 1;
+    }
+    arms
+}
+
+/// Does the pattern slice reference one of the event enums (`Name::`)?
+fn pattern_event_enum<'a>(
+    t: &[Token],
+    (s, e): (usize, usize),
+    enums: &'a HashSet<String>,
+) -> Option<&'a str> {
+    for i in s..e {
+        if t[i].kind == TokKind::Ident
+            && i + 2 < t.len()
+            && t[i + 1].text == ":"
+            && t[i + 2].text == ":"
+        {
+            if let Some(name) = enums.get(&t[i].text) {
+                return Some(name.as_str());
+            }
+        }
+    }
+    None
+}
+
+/// Is the pattern slice a catch-all — a lone `_` or a lone lowercase
+/// binding, optionally followed by an `if` guard?
+fn pattern_is_catchall(t: &[Token], (s, e): (usize, usize)) -> bool {
+    let mut end = e;
+    for i in s..e {
+        if t[i].kind == TokKind::Ident && t[i].text == "if" {
+            end = i;
+            break;
+        }
+    }
+    if end != s + 1 {
+        return false;
+    }
+    let x = &t[s];
+    x.kind == TokKind::Ident
+        && x.text
+            .chars()
+            .next()
+            .map_or(false, |c| c.is_ascii_lowercase() || c == '_')
+}
+
+/// Run the pass over the whole file set (the enum and its handlers
+/// live in different files).
+pub fn run(files: &[SourceFile], diags: &mut Vec<Diagnostic>) {
+    let mut enums: HashSet<String> = HashSet::new();
+    for sf in files {
+        collect_event_enums(sf, &mut enums);
+    }
+    if enums.is_empty() {
+        return;
+    }
+    for sf in files {
+        if !in_scope(&sf.rel, &["src/coordinator/", "src/server/"]) {
+            continue;
+        }
+        let t = &sf.toks;
+        for i in 0..t.len() {
+            if t[i].kind != TokKind::Ident || t[i].text != "match" {
+                continue;
+            }
+            // scrutinee runs to the body `{` at top bracket level
+            let mut j = i + 1;
+            let (mut par, mut brk) = (0usize, 0usize);
+            while j < t.len() {
+                match t[j].text.as_str() {
+                    "(" => par += 1,
+                    ")" => par = par.saturating_sub(1),
+                    "[" => brk += 1,
+                    "]" => brk = brk.saturating_sub(1),
+                    "{" if par == 0 && brk == 0 => break,
+                    ";" if par == 0 && brk == 0 => break, // not a match expr
+                    _ => {}
+                }
+                j += 1;
+            }
+            if j >= t.len() || t[j].text != "{" {
+                continue;
+            }
+            let arms = match_arm_patterns(t, j);
+            let Some(name) = arms
+                .iter()
+                .find_map(|a| pattern_event_enum(t, *a, &enums))
+            else {
+                continue;
+            };
+            for arm in &arms {
+                if pattern_is_catchall(t, *arm) {
+                    sf.emit(
+                        diags,
+                        "events",
+                        t[arm.0].line,
+                        format!(
+                            "catch-all arm in `match` over `{name}`; name \
+                             every variant so a new event fails the build \
+                             here"
+                        ),
+                        true,
+                    );
+                }
+            }
+        }
+    }
+}

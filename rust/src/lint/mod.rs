@@ -1,7 +1,7 @@
 //! `sqlint` — the project-invariant static-analysis passes.
 //!
 //! A dependency-free lint over the repo's own source (no `syn`, no
-//! network): a hand-rolled token [`lexer`] feeds four passes that pin
+//! network): a hand-rolled token [`lexer`] feeds five passes that pin
 //! the invariants this codebase's tests rely on but rustc cannot see:
 //!
 //! * **panic** — no `.unwrap()` / `.expect()` / panicking macros /
@@ -16,6 +16,10 @@
 //!   loop.
 //! * **wire** — every field of `CoreStats`/`RouterStats` must appear
 //!   in `stats_json`, `decode_stats`, and `metrics_text`.
+//! * **events** — no `_` wildcard or catch-all binding arm in a
+//!   `match` over an event enum (`WorkerEvent`, `RouterEvent`,
+//!   `CacheEvent`) in `coordinator/` and `server/`; a new variant must
+//!   fail the build at every handler, not be silently dropped.
 //!
 //! Findings are suppressed per line with
 //! `// sqlint: allow(<pass>) <justification>` (a standalone marker
@@ -33,6 +37,7 @@ pub mod lexer;
 pub mod source;
 
 mod determinism;
+mod events;
 mod locks;
 mod panic;
 mod wire;
@@ -47,7 +52,8 @@ use source::SourceFile;
 /// One finding: `path:line: [pass] message`.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Diagnostic {
-    /// Pass id: `panic`, `determinism`, `locks`, `wire`, or `marker`.
+    /// Pass id: `panic`, `determinism`, `locks`, `wire`, `events`, or
+    /// `marker`.
     pub pass: String,
     /// Path as given on the command line.
     pub path: String,
@@ -134,6 +140,7 @@ pub fn run_paths(roots: &[PathBuf]) -> io::Result<Vec<Diagnostic>> {
         files.push(sf);
     }
     wire::run(&files, &mut diags);
+    events::run(&files, &mut diags);
     diags.sort_by(|a, b| {
         (&a.path, a.line, &a.pass).cmp(&(&b.path, b.line, &b.pass))
     });

@@ -116,9 +116,10 @@ fn make_engine(args: &mut Args, out: &pipeline::QuantOutcome,
                               "KV stash precision: f32|q8|q4");
     let kv_cache_mode = KvCacheMode::parse(&kv_quant_s)
         .with_context(|| format!("unknown kv-quant mode {kv_quant_s}"))?;
-    let kv_pool_blocks = args.opt_usize(
-        "kv-pool", 0,
-        "tiered demotion pool bound (blocks, 0 = tiering off)");
+    let kv_pool_s = args.opt(
+        "kv-pool", "0",
+        "tiered demotion pool bound (blocks; 0 = tiering off, auto = \
+         size from the GPU profile's memory headroom)");
     let man = manifest::require_artifacts()?;
     let (precision, deploy) = match &out.deploy {
         Some(d) => (Precision::W4a16, d.clone()),
@@ -128,14 +129,22 @@ fn make_engine(args: &mut Args, out: &pipeline::QuantOutcome,
     let rt = ModelRuntime::load(&man, &size, precision, &deploy)?;
     eprintln!("[setup] runtime loaded ({} buckets)",
               rt.decode_batches().len() + rt.prefill_buckets().len());
-    Ok(Engine::new(
-        Deployment::single(rt, GpuProfile::sim_small(512)),
-        EngineConfig {
-            kv_cache_mode,
-            kv_pool_blocks,
-            ..Default::default()
-        },
-    ))
+    let dep = Deployment::single(rt, GpuProfile::sim_small(512));
+    let ecfg = EngineConfig { kv_cache_mode, ..Default::default() };
+    let kv_pool_blocks = match kv_pool_s.as_str() {
+        "auto" => {
+            let blocks =
+                Engine::auto_kv_pool_blocks(&dep, ecfg.block_size);
+            eprintln!("[setup] kv-pool auto = {blocks} blocks");
+            blocks
+        }
+        s => s.parse::<usize>().map_err(|_| {
+            anyhow::anyhow!(
+                "--kv-pool must be a block count or \"auto\" (got {s})"
+            )
+        })?,
+    };
+    Ok(Engine::new(dep, EngineConfig { kv_pool_blocks, ..ecfg }))
 }
 
 /// N replica engines + the router configuration (each replica loads
@@ -171,6 +180,23 @@ fn make_replicas(args: &mut Args, out: &pipeline::QuantOutcome,
         "cache-spread", defaults.cache_spread_limit,
         "consecutive cache-aware placements on one replica before the \
          pick spreads (0 = unbounded)");
+    let kv_migrate_s = args.opt(
+        "kv-migrate", "off",
+        "ship stashed KV blocks from warm to cold replicas instead of \
+         recomputing warm prefixes (on|off)");
+    let kv_migrate = match kv_migrate_s.as_str() {
+        "on" => true,
+        "off" => false,
+        other => bail!("--kv-migrate must be on|off (got {other})"),
+    };
+    let pooled_hit_discount = args.opt_usize(
+        "pooled-hit-discount", defaults.pooled_hit_discount,
+        "percent a pool-tier (demoted) hit token scores relative to a \
+         device-resident one in cache-aware placement");
+    let migrate_hit_discount = args.opt_usize(
+        "migrate-hit-discount", defaults.migrate_hit_discount,
+        "percent of the best remote prefix credited to every replica \
+         when --kv-migrate is on (the migration floor)");
     anyhow::ensure!(replicas >= 1, "--replicas must be at least 1");
     let mut cores = Vec::with_capacity(replicas);
     for i in 0..replicas {
@@ -186,6 +212,9 @@ fn make_replicas(args: &mut Args, out: &pipeline::QuantOutcome,
         max_step_retries,
         retry_backoff_steps,
         cache_spread_limit,
+        kv_migrate,
+        pooled_hit_discount,
+        migrate_hit_discount,
         ..Default::default()
     }))
 }

@@ -26,6 +26,8 @@
 //! the engine tests gate Q4/Q8 on task-level agreement, while
 //! [`KvCacheMode::F32`] keeps the exact rows and stays bit-identical.
 
+use anyhow::{bail, ensure, Result};
+
 use crate::config::KvCacheMode;
 use crate::quant::pack;
 use crate::quant::rtn::{int4_grid, NIBBLE_MAX};
@@ -225,6 +227,165 @@ impl KvStash {
             KvStash::Quant(q) => q.bytes(),
         }
     }
+
+    /// Exact serialized size of [`KvStash::to_wire`]'s output: the
+    /// payload is always [`KvStash::bytes`] — migration ships the
+    /// already-quantized codes verbatim, never a dequantized copy —
+    /// plus a fixed per-form header (mode tag + length prefixes).
+    pub fn wire_bytes(&self) -> usize {
+        match self {
+            KvStash::F32(_) => WIRE_F32_HEADER + self.bytes(),
+            KvStash::Quant(_) => WIRE_QUANT_HEADER + self.bytes(),
+        }
+    }
+
+    /// Serialize for cross-replica shipment: one mode-tag byte, then
+    /// length-prefixed little-endian sections. The quantized forms ship
+    /// their packed codes and grid tables as stored, so a migrated
+    /// block costs exactly its pool footprint on the wire (see
+    /// [`KvStash::wire_bytes`]).
+    pub fn to_wire(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.wire_bytes());
+        match self {
+            KvStash::F32(rows) => {
+                out.push(WIRE_TAG_F32);
+                out.extend((rows.len() as u32).to_le_bytes());
+                for v in rows {
+                    out.extend(v.to_le_bytes());
+                }
+            }
+            KvStash::Quant(q) => {
+                out.push(match q.mode {
+                    KvCacheMode::Q8 => WIRE_TAG_Q8,
+                    _ => WIRE_TAG_Q4,
+                });
+                out.extend((q.rows as u32).to_le_bytes());
+                out.extend((q.dim as u32).to_le_bytes());
+                out.extend((q.group as u32).to_le_bytes());
+                out.extend((q.scales.len() as u32).to_le_bytes());
+                for v in q.scales.iter().chain(&q.zeros) {
+                    out.extend(v.to_le_bytes());
+                }
+                out.extend((q.data.len() as u32).to_le_bytes());
+                out.extend_from_slice(&q.data);
+            }
+        }
+        out
+    }
+
+    /// Decode a [`KvStash::to_wire`] payload. Strict: an unknown tag, a
+    /// truncated section, trailing bytes, or grid-table/code lengths
+    /// that disagree with the declared shape are all errors — a
+    /// malformed migration grant must fall back to recompute, never
+    /// import garbage rows.
+    pub fn from_wire(bytes: &[u8]) -> Result<KvStash> {
+        let mut cur = WireCursor { bytes, at: 0 };
+        let tag = cur.u8()?;
+        let stash = match tag {
+            WIRE_TAG_F32 => {
+                let n = cur.u32()?;
+                // validate the prefix against the payload before
+                // trusting it for an allocation
+                ensure!(cur.at + 4 * n <= bytes.len(),
+                        "kv wire: f32 count {n} exceeds payload");
+                let mut rows = Vec::with_capacity(n);
+                for _ in 0..n {
+                    rows.push(cur.f32()?);
+                }
+                KvStash::F32(rows)
+            }
+            WIRE_TAG_Q8 | WIRE_TAG_Q4 => {
+                let mode = if tag == WIRE_TAG_Q8 {
+                    KvCacheMode::Q8
+                } else {
+                    KvCacheMode::Q4
+                };
+                let rows = cur.u32()?;
+                let dim = cur.u32()?;
+                let group = cur.u32()?;
+                ensure!(dim > 0 && group > 0,
+                        "kv wire: zero dim or group");
+                let ngroups = cur.u32()?;
+                ensure!(ngroups == rows * dim.div_ceil(group),
+                        "kv wire: grid table length {ngroups} does not \
+                         match {rows} rows of {dim}/{group}");
+                ensure!(cur.at + 8 * ngroups <= bytes.len(),
+                        "kv wire: grid tables exceed payload");
+                let mut scales = Vec::with_capacity(ngroups);
+                for _ in 0..ngroups {
+                    scales.push(cur.f32()?);
+                }
+                let mut zeros = Vec::with_capacity(ngroups);
+                for _ in 0..ngroups {
+                    zeros.push(cur.f32()?);
+                }
+                let ndata = cur.u32()?;
+                let row_bytes = match mode {
+                    KvCacheMode::Q4 => dim.div_ceil(2),
+                    _ => dim,
+                };
+                ensure!(ndata == rows * row_bytes,
+                        "kv wire: {ndata} code bytes for {rows} rows \
+                         of {row_bytes}");
+                let data = cur.take(ndata)?.to_vec();
+                KvStash::Quant(QuantKvBlock {
+                    mode,
+                    rows,
+                    dim,
+                    group,
+                    scales,
+                    zeros,
+                    data,
+                })
+            }
+            other => bail!("kv wire: unknown mode tag {other}"),
+        };
+        ensure!(cur.at == bytes.len(),
+                "kv wire: {} trailing bytes", bytes.len() - cur.at);
+        Ok(stash)
+    }
+}
+
+/// Wire mode tag: exact f32 rows follow.
+const WIRE_TAG_F32: u8 = 0;
+/// Wire mode tag: group-wise INT8 block follows.
+const WIRE_TAG_Q8: u8 = 1;
+/// Wire mode tag: group-wise nibble-packed INT4 block follows.
+const WIRE_TAG_Q4: u8 = 2;
+/// F32 wire header: tag + row-count prefix.
+const WIRE_F32_HEADER: usize = 1 + 4;
+/// Quant wire header: tag + rows/dim/group/ngroups/ndata prefixes.
+const WIRE_QUANT_HEADER: usize = 1 + 5 * 4;
+
+/// Bounds-checked little-endian reader over a wire payload.
+struct WireCursor<'a> {
+    bytes: &'a [u8],
+    at: usize,
+}
+
+impl WireCursor<'_> {
+    fn take(&mut self, n: usize) -> Result<&[u8]> {
+        ensure!(self.at + n <= self.bytes.len(),
+                "kv wire: truncated at byte {} (wanted {n} more)",
+                self.at);
+        let s = &self.bytes[self.at..self.at + n];
+        self.at += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<usize> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]) as usize)
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        let b = self.take(4)?;
+        Ok(f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
 }
 
 #[cfg(test)]
@@ -303,6 +464,60 @@ mod tests {
         // the stash wrapper agrees, and F32 is 4 bytes/value
         assert_eq!(KvStash::Quant(q8).bytes(), 45 + 120);
         assert_eq!(KvStash::F32(rows).bytes(), 4 * 45);
+    }
+
+    #[test]
+    fn wire_roundtrip_is_lossless_and_size_exact() {
+        // every mode: decode(encode(stash)) reproduces the stash
+        // field-for-field, and the payload length is bytes() plus the
+        // fixed header — migration ships the stored form verbatim
+        let mut rng = Rng::new(11);
+        let rows = rand_rows(&mut rng, 4, 9);
+        for mode in [KvCacheMode::F32, KvCacheMode::Q8, KvCacheMode::Q4] {
+            let s = KvStash::encode(rows.clone(), 9, mode);
+            let w = s.to_wire();
+            assert_eq!(w.len(), s.wire_bytes(), "{mode:?} size");
+            let hdr = match mode {
+                KvCacheMode::F32 => 5,
+                _ => 21,
+            };
+            assert_eq!(w.len(), s.bytes() + hdr, "{mode:?} parity");
+            let back = KvStash::from_wire(&w).unwrap();
+            match (&s, &back) {
+                (KvStash::F32(a), KvStash::F32(b)) => assert_eq!(a, b),
+                (KvStash::Quant(a), KvStash::Quant(b)) => {
+                    assert_eq!(a.mode, b.mode);
+                    assert_eq!(a.rows, b.rows);
+                    assert_eq!(a.dim, b.dim);
+                    assert_eq!(a.group, b.group);
+                    assert_eq!(a.scales, b.scales);
+                    assert_eq!(a.zeros, b.zeros);
+                    assert_eq!(a.data, b.data);
+                }
+                _ => panic!("{mode:?} changed form over the wire"),
+            }
+        }
+    }
+
+    #[test]
+    fn wire_decode_rejects_malformed_payloads() {
+        let s = KvStash::encode(vec![0.5; 2 * 8], 8, KvCacheMode::Q4);
+        let good = s.to_wire();
+        assert!(KvStash::from_wire(&[]).is_err(), "empty");
+        assert!(KvStash::from_wire(&[9]).is_err(), "unknown tag");
+        assert!(KvStash::from_wire(&good[..good.len() - 1]).is_err(),
+                "truncated");
+        let mut trailing = good.clone();
+        trailing.push(0);
+        assert!(KvStash::from_wire(&trailing).is_err(), "trailing");
+        // a lying code-length prefix must not import: 2 rows of dim 8
+        // pack to 8 Q4 code bytes, and the u32 prefix sits just before
+        // them at the end of the payload
+        let mut short = good.clone();
+        let ndata_at = good.len() - 8 - 4;
+        short[ndata_at..ndata_at + 4]
+            .copy_from_slice(&1u32.to_le_bytes());
+        assert!(KvStash::from_wire(&short).is_err(), "bad code length");
     }
 
     #[test]

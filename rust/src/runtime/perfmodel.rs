@@ -140,6 +140,31 @@ pub fn estimate(gpu: &GpuProfile, m: &PaperModel, d: Deploy, ctx: usize)
     }
 }
 
+/// Seconds to ship a warm KV prefix of `tokens` tokens donor→receiver
+/// at `wire_bytes_per_token` (mode-dependent: a q4 stash ships ~4x
+/// fewer bytes than the fp16 KV footprint, ~8x fewer than an f32
+/// stash). The blocks travel in one export grant, so the handshake's
+/// link latency is paid twice (request + grant), not per block; both
+/// device hops (the donor's d2h at export, the receiver's h2d at
+/// restore) charge the HBM term.
+pub fn migrate_prefix_s(gpu: &GpuProfile, tokens: usize,
+                        wire_bytes_per_token: f64) -> f64 {
+    let b = tokens as f64 * wire_bytes_per_token;
+    let hops = 2.0 * b / (gpu.hbm_gbps * 1e9);
+    let wire = b / (gpu.link_gbps * 1e9)
+        + 2.0 * gpu.link_latency_us * 1e-6;
+    hops + wire
+}
+
+/// Bandwidth floor for recomputing the same prefix on the cold
+/// replica instead: chunked prefill streams the deployment's weights
+/// through HBM at least once regardless of prefix length — the term a
+/// migration avoids entirely.
+pub fn recompute_prefix_s(gpu: &GpuProfile, m: &PaperModel, d: Deploy)
+    -> f64 {
+    weight_bytes(m, d) * kernel_factor(d) / (gpu.hbm_gbps * 1e9)
+}
+
 /// Per-token latency at a fixed (small) batch, the paper's Fig. 7(b)
 /// online-traffic regime.
 pub fn latency_per_token_s(gpu: &GpuProfile, m: &PaperModel, d: Deploy,
@@ -219,6 +244,32 @@ mod tests {
         let a = estimate(&gpu, &m, Deploy::W4a16OneGpu, 512).max_batch;
         let b = estimate(&gpu, &m, Deploy::W4a16OneGpu, 4096).max_batch;
         assert!(a > b && b > 0);
+    }
+
+    #[test]
+    fn migrating_quantized_kv_beats_the_recompute_floor() {
+        let (gpu, m) = setup();
+        let recompute =
+            recompute_prefix_s(&gpu, &m, Deploy::W4a16OneGpu);
+        let fp16 = m.kv_bytes_per_token;
+        // wire bytes/token by stash mode (group scales folded in ~6%)
+        let f32_s = migrate_prefix_s(&gpu, 1024, fp16 * 2.0);
+        let q8_s = migrate_prefix_s(&gpu, 1024, fp16 * 1.06);
+        let q4_s = migrate_prefix_s(&gpu, 1024, fp16 * 0.5 * 1.06);
+        assert!(q4_s < q8_s && q8_s < f32_s);
+        assert!(f32_s < recompute,
+                "f32 migration {f32_s} !< recompute {recompute}");
+        // the quantized stash keeps a wide margin even on PCIe
+        assert!(q4_s * 4.0 < recompute);
+    }
+
+    #[test]
+    fn migration_latency_floor_is_the_link_round_trip() {
+        // an empty grant still pays the request+grant handshake
+        let (gpu, _) = setup();
+        let empty = migrate_prefix_s(&gpu, 0, 1e9);
+        let rt = 2.0 * gpu.link_latency_us * 1e-6;
+        assert!((empty - rt).abs() < 1e-12, "{empty} != {rt}");
     }
 
     #[test]

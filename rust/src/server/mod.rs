@@ -25,9 +25,12 @@
 //!     "cache_hit_rate": 0.75, "evictions": 0,
 //!     "prefill_tokens_executed": 120, "cached_prefix_tokens": 48,
 //!     "ttft_p50_steps": 2.0, "pool_blocks": 1, "pool_demotions": 4,
-//!     "pool_restores": 2, "recompute_avoided_tokens": 32}],
+//!     "pool_restores": 2, "recompute_avoided_tokens": 32,
+//!     "kv_migrations_in": 0, "kv_migrations_out": 0,
+//!     "migrated_bytes": 0}],
 //!     "router": {"shed": 0, "replayed": 0, "retries": 0,
-//!     "replica_failed": 0, "alive": 1, "dead": 0, "degraded": false}}
+//!     "replica_failed": 0, "alive": 1, "dead": 0, "degraded": false,
+//!     "migration_fallbacks": 0}}
 //!
 //! -> {"cmd": "metrics"}
 //! <- # TYPE sqplus_replica_up gauge
@@ -306,6 +309,14 @@ pub fn stats_json(stats: &[ReplicaStats], router: &RouterStats)
                             ("recompute_avoided_tokens",
                              Value::num(s.core.recompute_avoided_tokens
                                  as f64)),
+                            ("kv_migrations_in",
+                             Value::num(s.core.kv_migrations_in
+                                 as f64)),
+                            ("kv_migrations_out",
+                             Value::num(s.core.kv_migrations_out
+                                 as f64)),
+                            ("migrated_bytes",
+                             Value::num(s.core.migrated_bytes as f64)),
                         ])
                     })
                     .collect(),
@@ -322,6 +333,8 @@ pub fn stats_json(stats: &[ReplicaStats], router: &RouterStats)
                 ("alive", Value::num(router.alive as f64)),
                 ("dead", Value::num(router.dead as f64)),
                 ("degraded", Value::Bool(router.degraded)),
+                ("migration_fallbacks",
+                 Value::num(router.migration_fallbacks as f64)),
             ]),
         ),
     ])
@@ -385,6 +398,10 @@ pub fn decode_stats(v: &Value)
             pool_blocks: req_usize(r, &path, "pool_blocks")?,
             recompute_avoided_tokens:
                 req_usize(r, &path, "recompute_avoided_tokens")?,
+            kv_migrations_in: req_usize(r, &path, "kv_migrations_in")?,
+            kv_migrations_out:
+                req_usize(r, &path, "kv_migrations_out")?,
+            migrated_bytes: req_usize(r, &path, "migrated_bytes")?,
             ..Default::default()
         };
         core.cache.hits = req_usize(r, &path, "cache_hits")?;
@@ -414,6 +431,8 @@ pub fn decode_stats(v: &Value)
         degraded: ro.get("degraded").as_bool().context(
             "router.degraded: missing or not a boolean",
         )?,
+        migration_fallbacks:
+            req_usize(ro, "router", "migration_fallbacks")?,
     };
     Ok((rows, router))
 }
@@ -493,6 +512,12 @@ pub fn metrics_text(stats: &[ReplicaStats], router: &RouterStats)
            per(&|s| s.core.cache.restores as f64));
     family("sqplus_replica_recompute_avoided_tokens", "counter",
            per(&|s| s.core.recompute_avoided_tokens as f64));
+    family("sqplus_replica_kv_migrations_in", "counter",
+           per(&|s| s.core.kv_migrations_in as f64));
+    family("sqplus_replica_kv_migrations_out", "counter",
+           per(&|s| s.core.kv_migrations_out as f64));
+    family("sqplus_replica_migrated_bytes", "counter",
+           per(&|s| s.core.migrated_bytes as f64));
     let single = |v: f64| vec![(String::new(), v)];
     family("sqplus_router_shed_total", "counter",
            single(router.shed as f64));
@@ -508,6 +533,8 @@ pub fn metrics_text(stats: &[ReplicaStats], router: &RouterStats)
            single(router.dead as f64));
     family("sqplus_router_degraded", "gauge",
            single(if router.degraded { 1.0 } else { 0.0 }));
+    family("sqplus_router_migration_fallbacks_total", "counter",
+           single(router.migration_fallbacks as f64));
     out.push_str("# EOF");
     out
 }
@@ -594,6 +621,14 @@ impl ReplicaCore for SendEngine {
     }
     fn set_cache_watermarks(&mut self, wm: CacheWatermarks) {
         ReplicaCore::set_cache_watermarks(&mut self.0, wm)
+    }
+    fn export_blocks(&mut self, tokens: &[u32])
+        -> Result<Vec<(u64, Vec<u8>)>, ReplicaError> {
+        ReplicaCore::export_blocks(&mut self.0, tokens)
+    }
+    fn import_blocks(&mut self, blocks: &[(u64, Vec<u8>)])
+        -> Result<usize, ReplicaError> {
+        ReplicaCore::import_blocks(&mut self.0, blocks)
     }
     fn core_stats(&self) -> CoreStats {
         ReplicaCore::core_stats(&self.0)
@@ -1321,6 +1356,9 @@ mod tests {
         core.cache.restores = 2;
         core.pool_blocks = 1;
         core.recompute_avoided_tokens = 32;
+        core.kv_migrations_in = 2;
+        core.kv_migrations_out = 3;
+        core.migrated_bytes = 640;
         let rows = vec![
             ReplicaStats {
                 id: 0,
@@ -1345,6 +1383,7 @@ mod tests {
             alive: 1,
             dead: 1,
             degraded: true,
+            migration_fallbacks: 2,
         };
         (rows, router)
     }
@@ -1377,6 +1416,9 @@ mod tests {
         assert_eq!(r0.get("pool_restores").as_usize(), Some(2));
         assert_eq!(r0.get("recompute_avoided_tokens").as_usize(),
                    Some(32));
+        assert_eq!(r0.get("kv_migrations_in").as_usize(), Some(2));
+        assert_eq!(r0.get("kv_migrations_out").as_usize(), Some(3));
+        assert_eq!(r0.get("migrated_bytes").as_usize(), Some(640));
         let r1 = &reps[1];
         assert_eq!(r1.get("id").as_usize(), Some(1));
         assert_eq!(r1.get("health").as_str(), Some("dead"));
@@ -1390,6 +1432,7 @@ mod tests {
         assert_eq!(ro.get("alive").as_usize(), Some(1));
         assert_eq!(ro.get("dead").as_usize(), Some(1));
         assert_eq!(ro.get("degraded").as_bool(), Some(true));
+        assert_eq!(ro.get("migration_fallbacks").as_usize(), Some(2));
     }
 
     #[test]
@@ -1421,6 +1464,11 @@ mod tests {
             assert_eq!(d.core.cache.restores, r.core.cache.restores);
             assert_eq!(d.core.recompute_avoided_tokens,
                        r.core.recompute_avoided_tokens);
+            assert_eq!(d.core.kv_migrations_in,
+                       r.core.kv_migrations_in);
+            assert_eq!(d.core.kv_migrations_out,
+                       r.core.kv_migrations_out);
+            assert_eq!(d.core.migrated_bytes, r.core.migrated_bytes);
         }
     }
 
@@ -1451,6 +1499,22 @@ mod tests {
         let e = decode_stats(&json::parse(&broken).unwrap())
             .unwrap_err();
         assert!(format!("{e:#}").contains("replicas[0].pool_restores"));
+        // drop a migration field
+        let broken = good.replacen(r#""kv_migrations_out":3,"#, "", 1);
+        let e = decode_stats(&json::parse(&broken).unwrap())
+            .unwrap_err();
+        assert!(format!("{e:#}")
+            .contains("replicas[0].kv_migrations_out"));
+        // mistype the router migration counter
+        let broken = good.replacen(
+            r#""migration_fallbacks":2"#,
+            r#""migration_fallbacks":null"#,
+            1,
+        );
+        let e = decode_stats(&json::parse(&broken).unwrap())
+            .unwrap_err();
+        assert!(format!("{e:#}")
+            .contains("router.migration_fallbacks"));
         // mistype a router field
         let broken = good.replacen(r#""shed":5"#, r#""shed":"5""#, 1);
         let e = decode_stats(&json::parse(&broken).unwrap())
@@ -1501,6 +1565,20 @@ mod tests {
         assert!(text.contains(
             "sqplus_replica_recompute_avoided_tokens{replica=\"0\"} 32\n"
         ));
+        assert!(text.contains(
+            "# TYPE sqplus_replica_kv_migrations_in counter\n"
+        ));
+        assert!(text.contains(
+            "sqplus_replica_kv_migrations_in{replica=\"0\"} 2\n"
+        ));
+        assert!(text.contains(
+            "sqplus_replica_kv_migrations_out{replica=\"0\"} 3\n"
+        ));
+        assert!(text.contains(
+            "sqplus_replica_migrated_bytes{replica=\"0\"} 640\n"
+        ));
+        assert!(text
+            .contains("sqplus_router_migration_fallbacks_total 2\n"));
         // framed for line-based clients
         assert!(text.ends_with("# EOF"));
         // every non-comment line is `name{labels} value`

@@ -19,7 +19,15 @@
 //!   retry/backoff clock without death or replay;
 //! * **admission control sheds deterministically**: back-to-back
 //!   submissions are judged against the front end's own outstanding
-//!   counts, which cannot change between submits.
+//!   counts, which cannot change between submits;
+//! * **KV migration over the Export/Exported handshake**: a warm
+//!   rehit forced onto a cold replica parks, the donor's worker ships
+//!   its stashed blocks, and the deferred preloaded submit serves the
+//!   suffix only — with identical streams to the migration-off
+//!   control and strictly fewer cold prefill tokens; a donor dying
+//!   mid-handshake, a transient export hiccup, or a receiver
+//!   rejecting the deferred submit each degrade to plain recompute
+//!   without hanging placement or perturbing any stream.
 
 use std::collections::HashMap;
 use std::time::Duration;
@@ -308,6 +316,219 @@ fn transient_brownout_recovers_on_worker_clock() {
     for s in &run.stats {
         assert!(s.health.is_alive());
     }
+}
+
+/// Donor/blocker/rehit migration trace for the threaded front end:
+/// warm replica 0 with a 32-token prefix, wait for the donor to
+/// finish (so the directory is provably warm), then load replica 0
+/// with a cold blocker and submit the warm rehit — the load penalty
+/// outweighs the prefix hit, so the rehit places on cold replica 1 in
+/// every arm. With `kv_migrate` the placement parks the rehit behind
+/// an Export/Exported handshake with the donor's worker; the deferred
+/// submit ships the blocks as `preload`.
+fn run_warm_rehit<C>(cores: Vec<C>, kv_migrate: bool) -> AsyncRun
+where
+    C: ReplicaCore + Send + 'static,
+{
+    let mut router = AsyncRouter::new(cores, RouterConfig {
+        routing: RoutingPolicy::CacheAware,
+        load_penalty_tokens: 33,
+        kv_migrate,
+        ..Default::default()
+    });
+    let prefix: Vec<u32> = (0..32).map(|t| 7000 + t).collect();
+    let mut donor = prefix.clone();
+    donor.extend([9001, 9002]);
+    router.submit(donor, sp(2));
+    let mut streams: HashMap<u64, Vec<u32>> = HashMap::new();
+    let mut fins: Vec<RoutedFinish> = vec![];
+    let mut polls = 0usize;
+    while fins.is_empty() {
+        polls += 1;
+        assert!(polls < 3_000, "donor request did not finish");
+        for ev in router.poll(Duration::from_millis(10)) {
+            apply(ev, &mut streams, &mut fins);
+        }
+    }
+    let blocker: Vec<u32> = (0..20).map(|t| 500 + t).collect();
+    router.submit(blocker, sp(6));
+    let mut warm = prefix;
+    warm.extend([8001, 8002, 8003]);
+    router.submit(warm, sp(3));
+    while fins.len() < 3 {
+        polls += 1;
+        assert!(polls < 3_000,
+                "migration run did not drain: {}/3 finished \
+                 (a wedged handshake would hang here)",
+                fins.len());
+        for ev in router.poll(Duration::from_millis(10)) {
+            apply(ev, &mut streams, &mut fins);
+        }
+    }
+    let stats = router.stats();
+    let rstats = router.router_stats();
+    let dir_mentions = (0..stats.len())
+        .map(|i| router.directory().mentions_replica(i))
+        .collect();
+    for ev in router.shutdown() {
+        apply(ev, &mut streams, &mut fins);
+    }
+    let mut outs: Outs = fins
+        .iter()
+        .map(|f| (f.id, f.seq.output.clone(), f.seq.finish))
+        .collect();
+    outs.sort_by_key(|(id, _, _)| *id);
+    AsyncRun { outs, fins, streams, stats, rstats, dir_mentions }
+}
+
+/// A pool-enabled fake core (adoption is refused with tiering off)
+/// wrapped to be type-compatible with faulty peers.
+fn pooled_stable(bs: usize) -> FaultyCore<FakeCore> {
+    FaultyCore::new(
+        FakeCore::new(
+            EngineConfig { kv_pool_blocks: 16, ..ecfg(bs) },
+            256,
+        ),
+        FaultSpec::FailOnStepK { k: usize::MAX },
+    )
+}
+
+fn pooled_faulty(bs: usize, spec: FaultSpec) -> FaultyCore<FakeCore> {
+    FaultyCore::new(
+        FakeCore::new(
+            EngineConfig { kv_pool_blocks: 16, ..ecfg(bs) },
+            256,
+        ),
+        spec,
+    )
+}
+
+#[test]
+fn async_kv_migration_ships_warmth_and_off_is_inert() {
+    // Tentpole e2e through the Export/Exported handshake: the rehit
+    // parks while the donor's worker answers, then the deferred submit
+    // preloads the receiver — identical streams to the migration-off
+    // control, strictly fewer cold prefill tokens, counters on both
+    // ends, no fallback.
+    let bs = 4;
+    let mig = run_warm_rehit(
+        vec![pooled_stable(bs), pooled_stable(bs)], true);
+    let ctl = run_warm_rehit(
+        vec![pooled_stable(bs), pooled_stable(bs)], false);
+    assert_eq!(mig.outs, ctl.outs, "migration changed a stream");
+    assert_streams_match(&mig);
+    assert_streams_match(&ctl);
+    // the rehit (global id 2) served on the cold replica in both runs
+    for run in [&mig, &ctl] {
+        let f2 = run.fins.iter().find(|f| f.id == 2).unwrap();
+        assert_eq!(f2.replica, Some(1),
+                   "rehit was not forced off the warm replica");
+        assert_eq!(f2.seq.output.len(), 3);
+    }
+    let exec = |r: &AsyncRun| -> usize {
+        r.stats.iter()
+            .map(|s| s.core.prefill_tokens_executed)
+            .sum()
+    };
+    assert!(exec(&mig) < exec(&ctl),
+            "migrated run executed {} !< control {}",
+            exec(&mig), exec(&ctl));
+    assert_eq!(mig.stats[0].core.kv_migrations_out, 8);
+    assert_eq!(mig.stats[1].core.kv_migrations_in, 8);
+    assert!(mig.stats[1].core.migrated_bytes > 0);
+    assert_eq!(mig.rstats.migration_fallbacks, 0);
+    assert_eq!(mig.rstats.dead, 0);
+    for s in &ctl.stats {
+        assert_eq!((s.core.kv_migrations_in, s.core.kv_migrations_out,
+                    s.core.migrated_bytes), (0, 0, 0));
+    }
+    assert_eq!(ctl.rstats.migration_fallbacks, 0);
+}
+
+#[test]
+fn async_migration_donor_death_midhandshake_falls_back() {
+    let bs = 4;
+    let ctl = run_warm_rehit(
+        vec![pooled_stable(bs), pooled_stable(bs)], false);
+    // transient export hiccup: Exported{failed} resolves the parked
+    // rehit into a plain cold placement — no death, no quarantine,
+    // identical streams, fallback counted exactly once (mig_tried
+    // bounds migration to one attempt per request)
+    let run = run_warm_rehit(
+        vec![
+            pooled_faulty(bs, FaultSpec::FailOnExport { transient: true }),
+            pooled_stable(bs),
+        ],
+        true,
+    );
+    assert_eq!(run.outs, ctl.outs,
+               "transient export fallback perturbed streams");
+    assert_streams_match(&run);
+    assert_eq!(run.rstats.migration_fallbacks, 1);
+    assert_eq!(run.rstats.dead, 0);
+    assert_eq!(run.rstats.replayed, 0);
+    assert_eq!(run.stats[1].core.kv_migrations_in, 0);
+    for s in &run.stats {
+        assert!(s.health.is_alive());
+    }
+    // donor dies answering the export: the Dead event resolves the
+    // parked rehit (fallback to the receiver, cold), replays the
+    // blocker that was in flight on the donor, and nothing hangs —
+    // every stream still bit-identical, no token lost or duplicated
+    let run = run_warm_rehit(
+        vec![
+            pooled_faulty(bs,
+                          FaultSpec::FailOnExport { transient: false }),
+            pooled_stable(bs),
+        ],
+        true,
+    );
+    assert_eq!(run.outs, ctl.outs,
+               "donor death mid-handshake corrupted a stream");
+    assert_streams_match(&run);
+    assert!(run.rstats.migration_fallbacks >= 1);
+    assert_eq!(run.rstats.dead, 1, "permanent export must kill donor");
+    // the blocker replays off the dead donor unless the worker raced
+    // through its whole budget before the Export command landed; the
+    // stream identity above already pins no-loss/no-duplication
+    assert!(run.rstats.replayed <= 1);
+    assert!(run.stats[0].health.is_dead());
+    assert!(!run.dir_mentions[0],
+            "dead donor still hinted in the directory");
+    // the parked rehit was resolved by the Dead event onto the
+    // survivor — a wedged handshake would have tripped the poll bound
+    let f2 = run.fins.iter().find(|f| f.id == 2).unwrap();
+    assert_eq!(f2.replica, Some(1));
+    assert_eq!(f2.seq.output.len(), 3);
+}
+
+#[test]
+fn async_migration_receiver_failure_reroutes_to_survivor() {
+    // The receiver rejects the deferred (preloaded) submit and dies;
+    // the rehit must reroute to the surviving donor — which holds the
+    // warm prefix anyway — rather than hang on the resolved handshake.
+    let bs = 4;
+    let ctl = run_warm_rehit(
+        vec![pooled_stable(bs), pooled_stable(bs)], false);
+    let run = run_warm_rehit(
+        vec![
+            pooled_stable(bs),
+            // replica 1's first core-level submit IS the deferred
+            // migration submit (the blocker went to replica 0)
+            pooled_faulty(bs, FaultSpec::FailOnSubmit { k: 1 }),
+        ],
+        true,
+    );
+    assert_eq!(run.outs, ctl.outs,
+               "receiver death during import corrupted a stream");
+    assert_streams_match(&run);
+    assert_eq!(run.rstats.dead, 1);
+    assert!(run.stats[1].health.is_dead());
+    assert!(!run.dir_mentions[1]);
+    let f2 = run.fins.iter().find(|f| f.id == 2).unwrap();
+    assert_eq!(f2.replica, Some(0),
+               "rehit did not reroute to the survivor");
+    assert_eq!(f2.seq.output.len(), 3);
 }
 
 #[test]

@@ -828,6 +828,187 @@ fn quantized_kv_tier_restores_with_bounded_token_drift() {
 }
 
 #[test]
+fn auto_kv_pool_blocks_follows_gpu_memory_headroom() {
+    let Some(m) = manifest() else { return };
+    let cfg = ModelConfig::tiny();
+    let w = init_weights(&cfg, &InitSpec::default());
+    let deploy = pipeline::fp16_deploy(&cfg, &w);
+    let rt = ModelRuntime::load(&m, "tiny", Precision::Fp16, &deploy)
+        .unwrap();
+    let dep = Deployment::single(rt, GpuProfile::sim_small(64));
+    let blocks = Engine::auto_kv_pool_blocks(&dep, 4);
+    // the 8% headroom the device-block budget (92%) leaves, over
+    // 4-token blocks of tiny's fp16 KV footprint
+    let expect = (64usize << 20) * 8 / 100
+        / (4 * ModelConfig::tiny().kv_bytes_per_token());
+    assert_eq!(blocks, expect);
+    // bigger blocks -> fewer pool slots; the bound never hits zero
+    assert!(Engine::auto_kv_pool_blocks(&dep, 64) < blocks);
+    assert_eq!(Engine::auto_kv_pool_blocks(&dep, 1 << 24), 1);
+}
+
+#[test]
+fn kv_migration_matches_warm_replica_across_stash_modes() {
+    // Engine-level migration acceptance. A donor engine serves a
+    // prefix; its stashed blocks are exported in wire form and
+    // imported by a cold receiver. The gate is mode-aware token
+    // agreement: the migrated stream must agree token-for-token with
+    // what the *warm replica itself* would serve for the same rehit —
+    // both sides rebuild KV by decoding the identical stash bytes, so
+    // this holds bit-for-bit in every `KvCacheMode`, while agreement
+    // with a full f32 recompute is only exact for F32 (quantized
+    // drift vs recompute is the tiered-restore acceptance's gate).
+    let Some(m) = manifest() else { return };
+    let prefix: Vec<u32> =
+        (0..16u32).map(|t| (t * 29 + 1) % 512).collect();
+    let mut donor_p = prefix.clone();
+    donor_p.extend([7, 8]);
+    let mut rehit = prefix.clone();
+    rehit.extend([9, 10, 11]);
+    let gen = |eng: &mut Engine, p: &Vec<u32>| {
+        let id = eng.submit(
+            p.clone(),
+            SamplingParams { max_new_tokens: 4, ..Default::default() },
+        );
+        eng.run_to_completion(1000).unwrap();
+        let fin = eng.take_finished();
+        let seq = fin.into_iter().find(|s| s.id == id).unwrap();
+        assert_eq!(seq.finish, Some(FinishReason::MaxTokens));
+        seq
+    };
+    let run = |mode: KvCacheMode| {
+        let ecfg = EngineConfig {
+            block_size: 4,
+            kv_cache_mode: mode,
+            kv_pool_blocks: 8,
+            ..Default::default()
+        };
+        let mut a = fp16_engine(&m, ecfg.clone()); // donor
+        let mut b = fp16_engine(&m, ecfg.clone()); // receiver
+        let mut c = fp16_engine(&m, ecfg); // cold control
+        gen(&mut a, &donor_p);
+        let blocks = a.export_kv_blocks(&rehit);
+        // the 4 full prefix blocks, already in wire precision
+        assert_eq!(blocks.len(), 4, "{mode:?}");
+        assert_eq!(a.metrics.kv_migrations_out, 4);
+        assert!(a.metrics.migrated_bytes > 0);
+        let adopted = b.import_kv_blocks(&blocks).unwrap();
+        assert_eq!(adopted, 4, "{mode:?}: adoption refused");
+        let mig = gen(&mut b, &rehit);
+        let warm = gen(&mut a, &rehit);
+        let cold = gen(&mut c, &rehit);
+        assert_eq!(mig.cached_prefix_len, 16,
+                   "{mode:?}: migrated blocks not hit at admission");
+        assert_eq!(b.metrics.kv_migrations_in, 4);
+        assert_eq!(b.metrics.recompute_avoided_tokens, 16);
+        assert!(b.metrics.prefill_tokens_executed
+                    < c.metrics.prefill_tokens_executed,
+                "{mode:?}: migration saved no prefill");
+        (mig.output, warm.output, cold.output)
+    };
+    for mode in [KvCacheMode::F32, KvCacheMode::Q8, KvCacheMode::Q4] {
+        let (mig, warm, cold) = run(mode);
+        assert_eq!(mig, warm,
+                   "{mode:?}: migrated stream != warm-replica stream");
+        assert_eq!(mig.len(), 4);
+        if mode == KvCacheMode::F32 {
+            // exact rows shipped: recompute parity is bit-level
+            assert_eq!(mig, cold, "F32 migration changed the stream");
+        } else {
+            assert_eq!(cold.len(), 4);
+        }
+    }
+}
+
+#[test]
+fn kv_migration_router_golden_f32() {
+    // The PR acceptance golden: an N=2 cache-aware router serves a
+    // warm-prefix request on the *cold* replica (the warm one is
+    // loaded). With --kv-migrate on, the donor's stashed blocks ship
+    // to the receiver and only the suffix is recomputed; the control
+    // run recomputes everything. Streams — ids, placements, tokens —
+    // must match bit-for-bit, while the migrated run executes
+    // strictly fewer cold prefill tokens and counts the migration.
+    let Some(m) = manifest() else { return };
+    let mut rng = sqplus::util::rng::Rng::new(91);
+    let prefix: Vec<u32> =
+        (0..32).map(|_| (1 + rng.below(511)) as u32).collect();
+    let mut donor = prefix.clone();
+    donor.extend([7, 8]);
+    let blocker: Vec<u32> =
+        (0..20u32).map(|t| (t * 17 + 3) % 512).collect();
+    let mut warm = prefix.clone();
+    warm.extend([9, 10, 11]);
+    let ecfg = EngineConfig {
+        block_size: 4,
+        kv_pool_blocks: 16,
+        ..Default::default()
+    };
+    let run = |kv_migrate: bool| {
+        let cores = vec![fp16_engine(&m, ecfg.clone()),
+                         fp16_engine(&m, ecfg.clone())];
+        let mut router = Router::new(cores, RouterConfig {
+            routing: RoutingPolicy::CacheAware,
+            // outweighs the 32-token prefix hit, so the warm request
+            // lands on the cold replica in BOTH runs — they differ
+            // only in how the receiver warms up
+            load_penalty_tokens: 33,
+            kv_migrate,
+            ..Default::default()
+        });
+        let mut fins = vec![];
+        router.submit(donor.clone(), SamplingParams {
+            max_new_tokens: 2, ..Default::default()
+        });
+        while router.has_work() {
+            router.step().unwrap();
+        }
+        fins.extend(router.take_finished());
+        // the blocker occupies replica 0 when the warm request places
+        router.submit(blocker.clone(), SamplingParams {
+            max_new_tokens: 8, ..Default::default()
+        });
+        router.submit(warm.clone(), SamplingParams {
+            max_new_tokens: 4, ..Default::default()
+        });
+        while router.has_work() {
+            router.step().unwrap();
+        }
+        fins.extend(router.take_finished());
+        let mut streams: Vec<(u64, Option<usize>, Vec<u32>)> = fins
+            .iter()
+            .map(|f| (f.id, f.replica, f.seq.output.clone()))
+            .collect();
+        streams.sort_by_key(|(id, _, _)| *id);
+        let exec: usize = router
+            .replicas()
+            .iter()
+            .map(|r| r.core().metrics.prefill_tokens_executed)
+            .sum();
+        (streams, exec, router.stats(), router.router_stats())
+    };
+    let (mig, mig_exec, mig_stats, mig_router) = run(true);
+    let (ctl, ctl_exec, ctl_stats, ctl_router) = run(false);
+    assert_eq!(mig, ctl, "migration changed a stream or a placement");
+    // the warm request was indeed forced off the warm replica
+    assert_eq!(mig[2].1, Some(1), "{mig:?}");
+    assert!(mig_exec < ctl_exec,
+            "migrated run executed {mig_exec} !< control {ctl_exec}");
+    assert!(mig_stats[1].core.kv_migrations_in > 0,
+            "receiver adopted nothing");
+    assert_eq!(mig_stats[1].core.kv_migrations_in,
+               mig_stats[0].core.kv_migrations_out);
+    assert!(mig_stats[0].core.migrated_bytes > 0);
+    assert_eq!(mig_router.migration_fallbacks, 0);
+    // with migration off, no counter may move
+    assert_eq!(ctl_router.migration_fallbacks, 0);
+    for s in &ctl_stats {
+        assert_eq!((s.core.kv_migrations_in, s.core.kv_migrations_out,
+                    s.core.migrated_bytes), (0, 0, 0));
+    }
+}
+
+#[test]
 fn decode_fills_registered_blocks_warm_later_requests() {
     // Third ROADMAP gap: blocks filled during *decode* seed the cache.
     // A long generation registers its output blocks; a second request

@@ -1,0 +1,22 @@
+//! Allowed fixture for the `events` pass: exhaustive handling needs no
+//! waiver; a deliberate catch-all carries a justified marker.
+
+pub enum PoolEvent {
+    Filled { blocks: usize },
+    Drained,
+}
+
+pub fn apply(ev: &PoolEvent) -> usize {
+    match ev {
+        PoolEvent::Filled { blocks } => *blocks,
+        PoolEvent::Drained => 0,
+    }
+}
+
+pub fn filled_blocks(ev: &PoolEvent) -> usize {
+    match ev {
+        PoolEvent::Filled { blocks } => *blocks,
+        // sqlint: allow(events) metrics-only tally; a dropped event here cannot corrupt router state
+        _ => 0,
+    }
+}

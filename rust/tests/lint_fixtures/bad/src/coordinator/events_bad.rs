@@ -1,0 +1,23 @@
+//! Bad fixture for the `events` pass: wildcard and catch-all binding
+//! arms in `match` expressions over an event enum.
+
+pub enum ReplicaEvent {
+    Started { id: usize },
+    Stepped { tokens: usize },
+    Dead,
+}
+
+pub fn tally(ev: &ReplicaEvent) -> usize {
+    match ev {
+        ReplicaEvent::Stepped { tokens } => *tokens,
+        _ => 0,
+    }
+}
+
+pub fn describe(ev: &ReplicaEvent) -> &'static str {
+    match ev {
+        ReplicaEvent::Started { .. } => "started",
+        other if matches!(other, ReplicaEvent::Dead) => "dead",
+        other => "ignored",
+    }
+}

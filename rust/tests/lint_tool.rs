@@ -30,8 +30,9 @@ fn bad_fixtures_trip_every_pass() {
     assert_eq!(counts.get("determinism"), Some(&5), "{diags:#?}");
     assert_eq!(counts.get("locks"), Some(&3), "{diags:#?}");
     assert_eq!(counts.get("wire"), Some(&2), "{diags:#?}");
+    assert_eq!(counts.get("events"), Some(&3), "{diags:#?}");
     assert_eq!(counts.get("marker"), Some(&1), "{diags:#?}");
-    assert_eq!(diags.len(), 17, "{diags:#?}");
+    assert_eq!(diags.len(), 20, "{diags:#?}");
     // output is sorted by (path, line, pass) so diffs are stable
     let mut sorted = diags.clone();
     sorted.sort_by(|a, b| {
@@ -58,6 +59,9 @@ fn bad_fixture_lines_are_precise() {
     assert!(has("locks", "locks_bad.rs", 7), "lock().unwrap()");
     assert!(has("locks", "worker.rs", 14), "send under guard");
     assert!(has("wire", "wire_bad.rs", 7), "field off the wire");
+    assert!(has("events", "events_bad.rs", 13), "wildcard event arm");
+    assert!(has("events", "events_bad.rs", 20), "guarded catch-all");
+    assert!(has("events", "events_bad.rs", 21), "binding catch-all");
 }
 
 #[test]
@@ -130,7 +134,7 @@ fn baseline_suppresses_known_findings() {
     let keys = std::fs::read_to_string(&base).expect("baseline written");
     assert_eq!(
         keys.lines().filter(|l| !l.starts_with('#')).count(),
-        17,
+        20,
         "{keys}"
     );
 }

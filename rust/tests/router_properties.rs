@@ -31,14 +31,23 @@
 //!   finish reason; and a randomized fault-injection sweep holds all
 //!   of the recovery invariants at once — with and without the tiered
 //!   KV demotion pool, where a killed replica's pool must come back
-//!   empty (its demoted blocks can never be restored).
+//!   empty (its demoted blocks can never be restored);
+//! * **cross-replica KV migration**: a warm prefix forced onto a cold
+//!   replica ships the donor's stashed blocks instead of recomputing
+//!   them (strictly fewer cold prefill tokens, bit-identical streams
+//!   and placements, counters on both ends), `--kv-migrate off` is
+//!   inert, and a donor failing mid-migration — transiently or
+//!   permanently — degrades to plain recompute without perturbing any
+//!   stream.
 
 use sqplus::config::{
     CacheWatermarks, EngineConfig, RouterConfig, RoutingPolicy,
 };
 use sqplus::coordinator::fake::FakeCore;
 use sqplus::coordinator::fault::{FaultSpec, FaultyCore};
-use sqplus::coordinator::replica::{ReplicaCore, ReplicaHealth};
+use sqplus::coordinator::replica::{
+    ReplicaCore, ReplicaHealth, ReplicaStats,
+};
 use sqplus::coordinator::router::{RoutedFinish, Router};
 use sqplus::coordinator::sequence::{FinishReason, SamplingParams};
 use sqplus::util::json;
@@ -845,6 +854,152 @@ fn sliding_window_bounds_every_replica_for_whole_run() {
                        "pool did not drain to free");
         }
     });
+}
+
+/// Donor/blocker/rehit migration trace shared by the migration tests.
+/// Replica 0 is warmed with a 32-token prefix, then loaded with a cold
+/// blocker; the load penalty outweighs the whole prefix hit, so the
+/// warm rehit places on cold replica 1 in *every* arm — migration on
+/// or off, donor faulty or not — and the arms differ only in how the
+/// receiver warms up. Streams are `(global id, replica, output)`.
+fn run_migration<C: ReplicaCore>(cores: Vec<C>, kv_migrate: bool)
+    -> (Vec<(u64, Option<usize>, Vec<u32>)>, Router<C>) {
+    let mut router = Router::new(cores, RouterConfig {
+        routing: RoutingPolicy::CacheAware,
+        load_penalty_tokens: 33,
+        kv_migrate,
+        ..Default::default()
+    });
+    let prefix: Vec<u32> = (0..32).map(|t| 7000 + t).collect();
+    let mut donor = prefix.clone();
+    donor.extend([9001, 9002]);
+    router.submit(donor, SamplingParams {
+        max_new_tokens: 2,
+        ..Default::default()
+    });
+    router.run_to_completion(1000).unwrap();
+    let mut fins = router.take_finished();
+    let blocker: Vec<u32> = (0..20).map(|t| 500 + t).collect();
+    router.submit(blocker, SamplingParams {
+        max_new_tokens: 6,
+        ..Default::default()
+    });
+    let mut warm = prefix;
+    warm.extend([8001, 8002, 8003]);
+    router.submit(warm, SamplingParams {
+        max_new_tokens: 3,
+        ..Default::default()
+    });
+    router.run_to_completion(1000).unwrap();
+    fins.extend(router.take_finished());
+    let mut streams: Vec<(u64, Option<usize>, Vec<u32>)> = fins
+        .into_iter()
+        .map(|f| (f.id, f.replica, f.seq.output))
+        .collect();
+    streams.sort_by_key(|(id, _, _)| *id);
+    (streams, router)
+}
+
+/// A [`FakeCore`] with the tiered pool on, so it can adopt migrated
+/// blocks (adoption is refused with tiering off).
+fn pooled(bs: usize) -> FakeCore {
+    FakeCore::new(EngineConfig { kv_pool_blocks: 16, ..ecfg(bs) }, 256)
+}
+
+#[test]
+fn kv_migration_ships_warmth_to_the_cold_replica() {
+    // Tentpole e2e over the fake core: the warm rehit is forced onto
+    // the cold replica; with `kv_migrate` the donor's 8 prefix blocks
+    // (32 tokens, bs=4) ship over and the receiver restores them at
+    // admission, so strictly fewer cold prefill tokens execute — with
+    // placements and token streams bit-identical to the control run.
+    let bs = 4;
+    let (mig, mrouter) =
+        run_migration(vec![pooled(bs), pooled(bs)], true);
+    let (ctl, crouter) =
+        run_migration(vec![pooled(bs), pooled(bs)], false);
+    assert_eq!(mig, ctl,
+               "migration changed a stream or a placement");
+    assert_eq!(mig[2].1, Some(1),
+               "rehit was not forced off the warm replica: {mig:?}");
+    let exec = |rows: &[ReplicaStats]| -> usize {
+        rows.iter().map(|s| s.core.prefill_tokens_executed).sum()
+    };
+    let (ms, cs) = (mrouter.stats(), crouter.stats());
+    assert!(exec(&ms) < exec(&cs),
+            "migrated run executed {} !< control {}",
+            exec(&ms), exec(&cs));
+    assert_eq!(ms[0].core.kv_migrations_out, 8);
+    assert_eq!(ms[1].core.kv_migrations_in, 8);
+    assert!(ms[1].core.migrated_bytes > 0);
+    assert!(ms[1].core.recompute_avoided_tokens >= 32,
+            "adopted blocks were not restored at admission");
+    assert_eq!(mrouter.router_stats().migration_fallbacks, 0);
+    // `--kv-migrate off` is inert: bit-identical behavior (asserted
+    // above) and no migration counter moves anywhere
+    for s in &cs {
+        assert_eq!((s.core.kv_migrations_in, s.core.kv_migrations_out,
+                    s.core.migrated_bytes), (0, 0, 0));
+    }
+    assert_eq!(crouter.router_stats().migration_fallbacks, 0);
+}
+
+#[test]
+fn migration_donor_failure_degrades_to_recompute() {
+    let bs = 4;
+    let (ctl, _) = run_migration(
+        vec![stable(pooled(bs)), stable(pooled(bs))], false);
+    // transient export hiccup: fall back to plain recompute. The donor
+    // is not punished — the optimization failed, not the replica — and
+    // streams and placements are untouched.
+    let (mig, router) = run_migration(
+        vec![
+            FaultyCore::new(pooled(bs),
+                            FaultSpec::FailOnExport { transient: true }),
+            stable(pooled(bs)),
+        ],
+        true,
+    );
+    assert_eq!(mig, ctl, "transient export fallback perturbed streams");
+    let rs = router.router_stats();
+    assert!(rs.migration_fallbacks >= 1, "fallback was not counted");
+    assert_eq!(rs.dead, 0);
+    assert!(router
+        .replicas()
+        .iter()
+        .all(|r| r.health == ReplicaHealth::Healthy),
+        "a failed optimization must not quarantine the donor");
+    for s in router.stats() {
+        assert_eq!(s.core.kv_migrations_in, 0);
+    }
+    // permanent export failure: the donor dies mid-migration. The
+    // rehit still completes by recompute on the receiver, the donor's
+    // in-flight blocker replays onto the survivor, and no token is
+    // lost or duplicated.
+    let (mig, router) = run_migration(
+        vec![
+            FaultyCore::new(pooled(bs),
+                            FaultSpec::FailOnExport { transient: false }),
+            stable(pooled(bs)),
+        ],
+        true,
+    );
+    // placements move (everything ends on the survivor), streams don't
+    let strip = |v: &[(u64, Option<usize>, Vec<u32>)]| {
+        v.iter().map(|(id, _, out)| (*id, out.clone()))
+            .collect::<Vec<_>>()
+    };
+    assert_eq!(strip(&mig), strip(&ctl),
+               "donor death mid-migration corrupted a stream");
+    assert!(mig.iter().all(|(_, r, _)| *r == Some(1)));
+    let rs = router.router_stats();
+    assert!(rs.migration_fallbacks >= 1);
+    assert_eq!(rs.dead, 1, "permanent export must kill the donor");
+    assert_eq!(rs.replayed, 1, "the blocker must replay off the donor");
+    assert!(router.replicas()[0].health.is_dead());
+    assert!(!router.directory().mentions_replica(0));
+    assert_eq!(rs.shed, 0);
+    assert_eq!(rs.replica_failed, 0);
 }
 
 #[test]
